@@ -1,0 +1,13 @@
+fn main() -> anyhow::Result<()> {
+    let path = std::env::args().nth(1)
+        .unwrap_or("artifacts/dec_small_lma.q.l0.flexround.wa.hlo.txt".into());
+    eprintln!("parsing {path}");
+    let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    eprintln!("parsed ok");
+    let comp = xla::XlaComputation::from_proto(&proto);
+    eprintln!("proto->comp ok");
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let _exe = client.compile(&comp).map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    eprintln!("compiled ok");
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Quickstart: quantize one model with FlexRound and compare against
+//! rounding-to-nearest and full precision.
+//!
+//! ```text
+//! make artifacts            # once (Python build path)
+//! cargo run --release --example quickstart
+//! ```
+
+use flexround::coordinator::{Plan, Session};
+use flexround::manifest::Manifest;
+use flexround::runtime::Runtime;
+use flexround::{eval, Result};
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let art = Path::new("artifacts");
+    let man = Manifest::load(art)?;
+    let rt = Runtime::new(art)?;
+    println!("PJRT platform: {}", rt.platform());
+
+    let model = "tinymobilenet";
+    let sess = Session::open(&rt, &man, model)?;
+    println!(
+        "model {model}: {} units, trained fp metric {:?}",
+        sess.model.units.len(),
+        sess.model.fp_metric
+    );
+
+    // full-precision baseline (runs the fp unit chain end to end)
+    let fp = eval::eval_cnn_fp(&sess)?;
+    println!("full-precision        top1/top5 = {:.4}/{:.4}", fp["top1"], fp["top5"]);
+
+    // rounding-to-nearest at 4-bit: no learning, just the init grids
+    let mut rtn = Plan::new(model, "rtn");
+    rtn.bits_w = 4;
+    let r = sess.quantize(&rtn)?;
+    let m = eval::eval_cnn(&sess, &r)?;
+    println!("RTN        (4-bit W)  top1/top5 = {:.4}/{:.4}", m["top1"], m["top5"]);
+
+    // FlexRound at 4-bit: learn s1, S2, s3, s4 by block-wise reconstruction
+    let mut fx = Plan::new(model, "flexround");
+    fx.bits_w = 4;
+    fx.iters = 300;
+    fx.verbose = false;
+    let r = sess.quantize(&fx)?;
+    println!("reconstruction losses per unit:");
+    for u in &r.units {
+        println!("  {:<8} {:.6} → {:.6}", u.unit, u.first_loss, u.final_loss);
+    }
+    let m = eval::eval_cnn(&sess, &r)?;
+    println!("FlexRound  (4-bit W)  top1/top5 = {:.4}/{:.4}", m["top1"], m["top5"]);
+    println!("runtime: {}", rt.stats.borrow().summary());
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Vision pipeline: a Table 2/3-style mini-study on one CNN — weight-only
+//! at several bit-widths, then W/A with the BRECQ and QDrop settings, then
+//! the Figure 3 grid-shift analysis of the first block.
+//!
+//! ```text
+//! cargo run --release --example vision_pipeline [model]
+//! ```
+
+use flexround::coordinator::{Plan, Session};
+use flexround::manifest::Manifest;
+use flexround::report::{Reporter, Table};
+use flexround::runtime::Runtime;
+use flexround::{eval, quant, Result};
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "tinyresnet_a".to_string());
+    let art = Path::new("artifacts");
+    let man = Manifest::load(art)?;
+    let rt = Runtime::new(art)?;
+    let sess = Session::open(&rt, &man, &model)?;
+    let rep = Reporter::new(Path::new("reports"), false)?;
+
+    let mut table = Table::new(
+        &format!("vision pipeline: {model}"),
+        &["Method", "# Bits (W/A)", "Setting", "Top-1", "Top-5"],
+    );
+    let fp = eval::eval_cnn_fp(&sess)?;
+    table.row(vec!["Full-precision".into(), "32/32".into(), "-".into(),
+                   format!("{:.4}", fp["top1"]), format!("{:.4}", fp["top5"])]);
+
+    // weight-only at 4/3/2 bits
+    for bits in [4u32, 3, 2] {
+        for method in ["adaround", "flexround"] {
+            let mut plan = Plan::new(&model, method);
+            plan.bits_w = bits;
+            plan.iters = 250;
+            let r = sess.quantize(&plan)?;
+            let m = eval::eval_cnn(&sess, &r)?;
+            table.row(vec![method.into(), format!("{bits}/32"), "B".into(),
+                           format!("{:.4}", m["top1"]), format!("{:.4}", m["top5"])]);
+            println!("W{bits} {method}: top1 {:.4}", m["top1"]);
+        }
+    }
+
+    // W/A 4/4 under both settings
+    for setting in ["B", "Q"] {
+        for method in ["adaround", "flexround"] {
+            let mut plan = Plan::new(&model, method);
+            plan.mode = "wa".into();
+            plan.bits_w = 4;
+            plan.abits = 4;
+            plan.iters = 250;
+            plan.drop_p = if setting == "Q" { 0.5 } else { 0.0 };
+            let r = sess.quantize(&plan)?;
+            let m = eval::eval_cnn(&sess, &r)?;
+            table.row(vec![method.into(), "4/4".into(), setting.into(),
+                           format!("{:.4}", m["top1"]), format!("{:.4}", m["top5"])]);
+            println!("W4A4 {setting}+{method}: top1 {:.4}", m["top1"]);
+        }
+    }
+    rep.table(&format!("example_vision_{model}"), &table)?;
+
+    // Figure 3-style analysis on the first quantized block
+    let mut plan = Plan::new(&model, "flexround");
+    plan.bits_w = 4;
+    plan.iters = 250;
+    let r = sess.quantize(&plan)?;
+    let unit = &sess.model.units[1];
+    let st = &r.units[1];
+    for gs in quant::grid_shifts(&sess, unit, st)? {
+        println!(
+            "grid shifts {}/{}: {:.2}% shifted, {:.2}% aggressive (|Δ|≥2), max {}",
+            unit.name, gs.layer, 100.0 * gs.shifted_frac, 100.0 * gs.aggressive_frac,
+            gs.max_shift
+        );
+    }
+    println!(
+        "large-|W| fraction of {model}: {:.3}%",
+        100.0 * quant::large_weight_fraction(&sess)
+    );
+    Ok(())
+}

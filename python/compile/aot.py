@@ -1,0 +1,454 @@
+"""AOT build: lower every Layer-2 graph to HLO text and export weights,
+datasets, and init packs for the Rust coordinator.
+
+This is the ONLY Python entry point of the system (`make artifacts`); after
+it finishes, the Rust binary is self-contained.  Interchange formats:
+
+  *.hlo.txt        — HLO text (NOT serialized protos: the image's
+                     xla_extension 0.5.1 rejects jax≥0.5's 64-bit ids; the
+                     text parser reassigns them — see /opt/xla-example).
+  *.fxt            — named tensors (compile/fxt.py ⇄ rust/src/ser/fxt.rs).
+  manifest.json    — the complete system description: models, units, layer
+                     shapes, artifact names + signatures, parameter-pack
+                     orderings, method/bit matrices, default hyperparams.
+
+Artifact families per model (see compile/graphs.py):
+  embed, fp_<unit>, recon_<unit>_<method>_<mode>, q_<unit>_<method>_<mode>,
+  qw_<unit>_<method>, head[_<task>], head_logits.
+
+Incremental: existing .hlo.txt files are kept unless --force; checkpoints
+cache under artifacts/ckpt/.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import cle as C
+from compile import data as D
+from compile import fxt
+from compile import graphs as G
+from compile import models as M
+from compile import quant as Q
+from compile import train as T
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+CAL_B = 32           # fixed batch of every unit-level executable
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# Model configuration matrix (which methods/modes/bits each model ships)
+# ---------------------------------------------------------------------------
+
+FULL_W = ["rtn", "adaround", "adaquant", "flexround",
+          "flexround_fixed_s1", "flexround_no_s34", "adaquant_flexround"]
+ALT_W = ["rtn", "adaround", "flexround"]
+RED_W = ["rtn", "adaround", "adaquant", "flexround"]
+WA2 = ["adaround", "flexround"]
+
+MODEL_CFG = {
+    # ImageNet analogs — linear symmetric per-tensor (paper §4.2)
+    "tinyresnet_a":      dict(kind="cnn", methods_w=FULL_W, methods_wa=WA2,
+                              bits_w=[2, 3, 4, 8], abits=[3, 4, 8],
+                              symmetric=True, per_channel=False, calib_n=1024),
+    "tinyresnet_b":      dict(kind="cnn", methods_w=RED_W, methods_wa=WA2,
+                              bits_w=[2, 3, 4, 8], abits=[3, 4, 8],
+                              symmetric=True, per_channel=False, calib_n=1024),
+    "tinymobilenet":     dict(kind="cnn", methods_w=FULL_W, methods_wa=WA2,
+                              bits_w=[2, 3, 4, 8], abits=[3, 4, 8],
+                              symmetric=True, per_channel=False, calib_n=1024),
+    # Tables 8/9: alternate checkpoints
+    "tinyresnet_a_alt":  dict(kind="cnn", methods_w=ALT_W, methods_wa=WA2,
+                              bits_w=[2, 3, 4, 8], abits=[3, 4, 8],
+                              symmetric=True, per_channel=False, calib_n=1024),
+    "tinymobilenet_alt": dict(kind="cnn", methods_w=ALT_W, methods_wa=WA2,
+                              bits_w=[2, 3, 4, 8], abits=[3, 4, 8],
+                              symmetric=True, per_channel=False, calib_n=1024),
+    # Table 10: CLE + AHB preprocessed MobileNets (weight-only)
+    "tinymobilenet_cle":     dict(kind="cnn", base="tinymobilenet", cle=True,
+                                  methods_w=WA2 + ["rtn"], methods_wa=[],
+                                  bits_w=[4, 8], abits=[8],
+                                  symmetric=True, per_channel=False, calib_n=1024),
+    # GLUE analogs — per-tensor asymmetric 8/8 (paper §4.3)
+    "enc_small":  dict(kind="encoder", methods_w=[], methods_wa=WA2 + ["rtn"],
+                       bits_w=[8], abits=[8], symmetric=False,
+                       per_channel=False, calib_n=256),
+    "enc_base":   dict(kind="encoder", methods_w=[], methods_wa=WA2 + ["rtn"],
+                       bits_w=[8], abits=[8], symmetric=False,
+                       per_channel=False, calib_n=256),
+    # NLG analogs — per-tensor asymmetric 8/8, 128 calib samples (App. I)
+    "dec_small_lma": dict(kind="decoder", methods_w=[], methods_wa=WA2 + ["rtn"],
+                          bits_w=[8], abits=[8], symmetric=False,
+                          per_channel=False, calib_n=128),
+    "dec_small_lmb": dict(kind="decoder", methods_w=[], methods_wa=WA2 + ["rtn"],
+                          bits_w=[8], abits=[8], symmetric=False,
+                          per_channel=False, calib_n=128),
+    "dec_med_lma":   dict(kind="decoder", methods_w=[], methods_wa=WA2 + ["rtn"],
+                          bits_w=[8], abits=[8], symmetric=False,
+                          per_channel=False, calib_n=128),
+    "dec_med_lmb":   dict(kind="decoder", methods_w=[], methods_wa=WA2 + ["rtn"],
+                          bits_w=[8], abits=[8], symmetric=False,
+                          per_channel=False, calib_n=128),
+    # Table 6: LoRA-merged GPT-2 analog
+    "dec_lora":   dict(kind="decoder", methods_w=[], methods_wa=WA2 + ["rtn"],
+                       bits_w=[8], abits=[8], symmetric=False,
+                       per_channel=False, calib_n=128),
+    # LLaMA analog — per-channel asymmetric weights, per-tensor activations
+    "llm_mini":   dict(kind="decoder", methods_w=WA2 + ["rtn"],
+                       methods_wa=WA2 + ["rtn"],
+                       bits_w=[3, 4, 8], abits=[8], symmetric=False,
+                       per_channel=True, calib_n=512),
+}
+
+# Reconstruction hyperparameter defaults (overridable from Rust configs);
+# per-method learning rates echo the paper's observation that AdaRound's
+# sigmoid-space V needs larger steps than FlexRound's scales.
+HYPER = {
+    "iters": {"cnn": 350, "encoder": 250, "decoder": 250},
+    "lr": {"adaround": 1e-2, "adaquant": 1e-3, "flexround": 2e-3,
+           "flexround_fixed_s1": 2e-3, "flexround_no_s34": 2e-3,
+           "adaquant_flexround": 1e-3},
+    "drop_p": 0.5,
+}
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(fn, specs, return_tuple: bool = True) -> str:
+    """Lower to HLO text.  `return_tuple=False` for single-output graphs so
+    the PJRT output buffer is the bare array — the Rust runtime then chains
+    unit executables on-device via execute_b without host round-trips."""
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    # CRITICAL: the default printer elides large constants as "{...}" — the
+    # baked weights would silently vanish and the 0.5.1 text parser accepts
+    # the placeholder. print_large_constants keeps them verbatim.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # modern metadata attrs (source_end_line, …) break the 0.5.1 text parser
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+class Emitter:
+    def __init__(self, outdir: str, force: bool):
+        self.outdir = outdir
+        self.force = force
+        self.count = 0
+        self.skipped = 0
+
+    def emit(self, name: str, fn, specs, return_tuple: bool = True) -> str:
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(self.outdir, fname)
+        if os.path.exists(path) and not self.force:
+            self.skipped += 1
+            return fname
+        text = to_hlo_text(fn, specs, return_tuple)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)  # atomic: the Rust runtime never sees partials
+        self.count += 1
+        if self.count % 25 == 0:
+            print(f"    …{self.count} artifacts lowered")
+        return fname
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+SCALARS_RECON = 8   # qmin_w qmax_w qmin_a qmax_a drop_p beta lr t (f32), then seed i32
+SCALARS_Q = 4       # qmin_w qmax_w qmin_a qmax_a
+
+
+# ---------------------------------------------------------------------------
+# Per-model build
+# ---------------------------------------------------------------------------
+
+def build_model(name: str, cfg: dict, em: Emitter, outdir: str):
+    t0 = time.time()
+    base = cfg.get("base", name)
+    model, params, info = T.load_or_train(base)
+    if cfg.get("cle"):
+        model.name = name
+        model, params = C.preprocess(model, params)
+        info = dict(info)
+        info["preprocessing"] = "relu6_to_relu+cle+ahb"
+    print(f"  [{name}] building artifacts (fp metric: {info.get('fp_metric')})")
+
+    entry = {
+        "kind": cfg["kind"], "task": info.get("task"),
+        "fp_metric": info.get("fp_metric"), "info": {
+            k: v for k, v in info.items() if k not in ("task", "fp_metric")},
+        "symmetric": cfg["symmetric"], "per_channel": cfg["per_channel"],
+        "bits_w": cfg["bits_w"], "abits": cfg["abits"],
+        "methods_w": cfg["methods_w"], "methods_wa": cfg["methods_wa"],
+        "calib_n": cfg["calib_n"], "calib_batch": CAL_B,
+        "hyper": {"iters": HYPER["iters"][cfg["kind"]], "lr": HYPER["lr"],
+                  "drop_p": HYPER["drop_p"]},
+    }
+    if cfg["kind"] != "cnn":
+        entry["seq"] = model.meta["seq"]
+        entry["vocab"] = model.meta["vocab"]
+
+    # ---- datasets -----------------------------------------------------
+    datasets = make_datasets(name, cfg, info)
+    data_file = f"{name}.data.fxt"
+    fxt.write(os.path.join(outdir, data_file), datasets)
+    entry["data_file"] = data_file
+    entry["datasets"] = {k: list(v.shape) for k, v in datasets.items()}
+
+    # ---- chain shapes + activation ranges -----------------------------
+    calib = jnp.asarray(datasets["calib_x"][:CAL_B])
+    if cfg["kind"] != "cnn":
+        emb = G.embed_fn(model, params)
+        x = emb(calib)
+        entry["embed_artifact"] = em.emit(
+            f"{name}.embed", lambda t: emb(t), [spec(calib.shape, I32)],
+            return_tuple=False)
+    else:
+        x = calib
+
+    units_meta = []
+    weights = {}
+    inits = {}
+    for u in model.units:
+        views = G.layer_views(model, params, u)
+        fp = G.fp_unit_fwd(model, params, u)
+        y = fp(x)
+        act_ranges = G.calibrate_act_ranges(model, params, u, x)
+        um = {
+            "name": u.name, "kind": u.kind,
+            "bits_override": u.bits_override,
+            "in_shape": list(x.shape[1:]), "out_shape": list(y.shape[1:]),
+            "act_sites": G.n_act_sites(u),
+            "layers": [{
+                "name": v.name, "kind": v.kind, "rows": v.rc[0], "cols": v.rc[1],
+                "conv_shape": list(v.conv_shape) if v.conv_shape else None,
+                "stride": v.stride,
+            } for v in views],
+            "artifacts": {}, "packs": {},
+        }
+
+        # weights + act ranges
+        for v in views:
+            weights[f"w/{u.name}/{v.name}"] = np.asarray(v.w2d)
+            weights[f"b/{u.name}/{v.name}"] = np.asarray(v.bias)
+        if u.kind == "txl":
+            for i, a in enumerate(params["units"][u.name]["aux"]):
+                weights[f"aux/{u.name}/{i}"] = np.asarray(a)
+        for i, (lo, hi) in enumerate(act_ranges):
+            inits[f"actrange/{u.name}/site{i}"] = np.array([lo, hi], np.float32)
+
+        # fp artifact
+        um["artifacts"]["fp"] = em.emit(
+            f"{name}.fp.{u.name}", lambda t, _fp=fp: _fp(t), [spec(x.shape)],
+            return_tuple=False)
+
+        # quantized-path artifacts per (method, mode)
+        combos = [(m, "w") for m in cfg["methods_w"]] + \
+                 [(m, "wa") for m in cfg["methods_wa"]]
+        for method, mode in combos:
+            pack = G.ParamPack.build(method, views, mode, G.n_act_sites(u),
+                                     cfg["per_channel"])
+            um["packs"][f"{method}.{mode}"] = [
+                {"name": e.name, "shape": list(e.shape), "learnable": e.learnable}
+                for e in pack.entries]
+            pspecs = [spec(e.shape) for e in pack.entries]
+            # forward-only executable → jnp oracle path (fast AOT); the recon
+            # executable below keeps the Pallas hot path.
+            fwd = G.quantized_unit_fwd(model, params, u, method, mode, pack,
+                                       views, impl="jnp", use_qdrop=False)
+
+            def q_fn(t, qmin_w, qmax_w, qmin_a, qmax_a, *flat, _fwd=fwd):
+                key = jax.random.PRNGKey(0)
+                return _fwd(list(flat), t, qmin_w, qmax_w, qmin_a, qmax_a,
+                            jnp.float32(0.0), key)
+
+            um["artifacts"][f"q.{method}.{mode}"] = em.emit(
+                f"{name}.q.{u.name}.{method}.{mode}", q_fn,
+                [spec(x.shape)] + [spec(()) for _ in range(SCALARS_Q)] + pspecs,
+                return_tuple=False)
+
+            if method != "rtn":
+                step = G.recon_step_fn(model, params, u, method, mode, pack, views)
+                um["artifacts"][f"recon.{method}.{mode}"] = em.emit(
+                    f"{name}.recon.{u.name}.{method}.{mode}", step,
+                    [spec(x.shape), spec(y.shape)]
+                    + [spec(()) for _ in range(SCALARS_RECON)]
+                    + [spec((), I32)] + pspecs * 3)
+
+            # init packs per bit-width (weight entries only; act init derives
+            # from actrange at runtime)
+            for bits in cfg["bits_w"]:
+                vals = pack.init_values(method, views, bits, cfg["symmetric"],
+                                        cfg["per_channel"],
+                                        act_init=act_ranges, abits=8)
+                for e, val in zip(pack.entries, vals):
+                    if e.name.startswith("act"):
+                        continue
+                    inits[f"init/{u.name}/{method}/b{bits}/{e.name}"] = val
+
+        # qw export per method (mode-independent; use the "w" pack)
+        for method in dict.fromkeys(cfg["methods_w"] + cfg["methods_wa"]):
+            pack = G.ParamPack.build(method, views, "w", 0, cfg["per_channel"])
+            exp = G.qw_export_fn(views, method, pack)
+            um["artifacts"][f"qw.{method}"] = em.emit(
+                f"{name}.qw.{u.name}.{method}", exp,
+                [spec(()), spec(())] + [spec(e.shape) for e in pack.entries])
+
+        units_meta.append(um)
+        x = y
+
+    entry["units"] = units_meta
+
+    # ---- heads ----------------------------------------------------------
+    if cfg["kind"] != "cnn":
+        entry["head_artifacts"] = {}
+        if model.meta["head"] == "lm":
+            hf = G.head_fn(model, params)
+            entry["head_artifacts"]["lm"] = em.emit(
+                f"{name}.head.lm", lambda h, t: hf(h, t),
+                [spec(x.shape), spec((CAL_B, model.meta["seq"]), I32)])
+            # logits head for greedy generation (BLEU / Table 6)
+            lng, lnb = params["head"]["ln_g"], params["head"]["ln_b"]
+            ow, ob = params["head"]["out_w"], params["head"]["out_b"]
+
+            def logits_fn(h):
+                hn = M.layernorm(h, lng, lnb)
+                return M.linear(hn, ow, ob)
+
+            entry["head_artifacts"]["logits"] = em.emit(
+                f"{name}.head.logits", logits_fn, [spec(x.shape)],
+                return_tuple=False)
+        else:
+            for task in list(D.NLU_TASKS):
+                hf = G.head_fn(model, params, task)
+                entry["head_artifacts"][task] = em.emit(
+                    f"{name}.head.{task}", lambda h, _hf=hf: _hf(h),
+                    [spec(x.shape)], return_tuple=False)
+            hf = G.head_fn(model, params, "span")
+            entry["head_artifacts"]["span"] = em.emit(
+                f"{name}.head.span", lambda h, _hf=hf: _hf(h), [spec(x.shape)])
+
+    # ---- weight + init files -------------------------------------------
+    if cfg["kind"] != "cnn":
+        weights["pre/tok"] = np.asarray(params["pre"]["tok"])
+        weights["pre/pos"] = np.asarray(params["pre"]["pos"])
+    for k, v in params["head"].items():
+        weights[f"head/{k}"] = np.asarray(v)
+    wf = f"{name}.weights.fxt"
+    fxt.write(os.path.join(outdir, wf), weights)
+    entry["weights_file"] = wf
+    inf = f"{name}.init.fxt"
+    fxt.write(os.path.join(outdir, inf), inits)
+    entry["init_file"] = inf
+
+    print(f"  [{name}] done in {time.time()-t0:.1f}s")
+    return entry
+
+
+# ---------------------------------------------------------------------------
+# Dataset assembly (fixed multiples of CAL_B)
+# ---------------------------------------------------------------------------
+
+def make_datasets(name: str, cfg: dict, info: dict):
+    out = {}
+    if cfg["kind"] == "cnn":
+        seed = info.get("eval_seed", 1000)
+        xs, ys = D.gen_images(seed=seed, n=6000)
+        (xtr, _), (xev, yev) = D.train_eval_split(xs, ys, 1024)
+        out["calib_x"] = xtr[: cfg["calib_n"]].astype(np.float32)
+        out["eval_x"] = xev.astype(np.float32)
+        out["eval_y"] = yev
+        return out
+    if cfg["kind"] == "encoder":
+        calib = []
+        for task in D.NLU_TASKS:
+            toks, ys, _ = D.gen_nlu(task, D.NLU_SEEDS[task], 5000)
+            (xtr, _), (xev, yev) = D.train_eval_split(toks, ys, 1024)
+            calib.append(xtr[: cfg["calib_n"] // 4])
+            out[f"eval_{task}_x"] = xev[:512]
+            out[f"eval_{task}_y"] = yev[:512]
+        sp_toks, sp_s, sp_e = D.gen_span(D.NLU_SEEDS["entail"] + 500, 5000)
+        (xtr, _), (xev, lab) = D.train_eval_split(
+            sp_toks, np.stack([sp_s, sp_e], 1), 1024)
+        calib.append(xtr[: cfg["calib_n"] // 4])
+        out["eval_span_x"] = xev[:512]
+        out["eval_span_y"] = lab[:512]
+        out["calib_x"] = np.concatenate(calib)[: cfg["calib_n"]]
+        return out
+    # decoders
+    if name == "dec_lora":
+        seen = [c for c in range(D.D2T_NKEYS) if c not in D.D2T_UNSEEN]
+        toks, _ = D.gen_d2t(5050, 3000, categories=seen)
+        out["calib_x"] = toks[: cfg["calib_n"]]
+        ev_seen, st_seen = D.gen_d2t(7070, 192, categories=seen)
+        ev_uns, st_uns = D.gen_d2t(7171, 192, categories=list(D.D2T_UNSEEN))
+        out["eval_seen_x"], out["eval_seen_start"] = ev_seen, st_seen
+        out["eval_unseen_x"], out["eval_unseen_start"] = ev_uns, st_uns
+        return out
+    corpus = info.get("corpus", "lm-a")
+    toks, _ = D.gen_corpus(corpus, 4096)
+    out["calib_x"] = toks[: cfg["calib_n"]]
+    out["eval_x"] = toks[-512:]
+    if name == "llm_mini":
+        for task in D.MC_TASKS:
+            ch, ans = D.gen_mc(task, D.MC_SEEDS[task], 256)
+            out[f"mc_{task}_x"] = ch.reshape(-1, ch.shape[-1])
+            out[f"mc_{task}_y"] = ans
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=ART)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--models", nargs="*", default=None)
+    args = ap.parse_args()
+    outdir = os.path.abspath(args.out)
+    os.makedirs(outdir, exist_ok=True)
+    em = Emitter(outdir, args.force)
+
+    names = args.models or list(MODEL_CFG)
+    manifest = {"version": 1, "calib_batch": CAL_B,
+                "scalars_recon": ["qmin_w", "qmax_w", "qmin_a", "qmax_a",
+                                  "drop_p", "beta", "lr", "t", "seed"],
+                "scalars_q": ["qmin_w", "qmax_w", "qmin_a", "qmax_a"],
+                "models": {}}
+    mpath = os.path.join(outdir, "manifest.json")
+    if os.path.exists(mpath) and not args.force:
+        with open(mpath) as f:
+            manifest = json.load(f)
+
+    t0 = time.time()
+    for name in names:
+        manifest["models"][name] = build_model(name, MODEL_CFG[name], em, outdir)
+        with open(mpath, "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"AOT complete: {em.count} lowered, {em.skipped} cached, "
+          f"{time.time()-t0:.0f}s → {outdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Cross-layer equalization (CLE) and absorbing-high-biases (AHB)
+preprocessing — Nagel et al. (2019), used by the paper's Table 10 ablation.
+
+CLE rescales channel i shared between two consecutive layers so their
+per-channel weight ranges match:  s_i = √(r1_i / r2_i); layer-1 output
+channel i is divided by s_i (bias too), layer-2 input channel i multiplied
+by s_i.  With a *positively homogeneous* activation between them (ReLU, not
+ReLU6) the network function is preserved exactly — which is why the paper
+replaces every ReLU6 by ReLU before applying CLE to MobileNetV2.
+
+AHB then absorbs large biases of layer 1 into layer 2's bias:
+c_i = max(0, b_i − 3σ_i)  (σ from the folded BN; we use |b| directly since
+BN is already folded) — b1_i −= c_i,  b2 += W2[:, i] · c_i.
+
+These run at AOT time (they rewrite the pre-trained weights before the
+quantization graphs bake them); the Rust suite re-verifies the invariants
+on the exported tensors.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import models as M
+
+
+def _pairs(unit: M.QUnit) -> List[Tuple[str, str]]:
+    """Consecutive (producer, consumer) layer pairs within a unit that share
+    a channel dimension through an activation."""
+    k = unit.kind
+    if k == "invres_block":
+        return [("expand", "dw"), ("dw", "project")]
+    if k == "res_block":
+        return [("conv1", "conv2")]
+    if k == "bottleneck_block":
+        return [("conv1", "conv2"), ("conv2", "conv3")]
+    return []
+
+
+def _range_out(w, dw: bool):
+    """Per-output-channel |w| range.  HWIO layout → out axis = 3."""
+    return jnp.max(jnp.abs(w), axis=(0, 1, 2))
+
+
+def _range_in(w, dw: bool):
+    """Per-input-channel |w| range.  Depthwise convs consume channel i via
+    their *output* axis (I dimension is 1), so the in-range is over axis 3."""
+    if dw:
+        return jnp.max(jnp.abs(w), axis=(0, 1, 2))
+    return jnp.max(jnp.abs(w), axis=(0, 1, 3))
+
+
+def equalize_pair(w1, b1, w2, dw1: bool, dw2: bool):
+    """One CLE step.  Returns (w1', b1', w2', s)."""
+    r1 = _range_out(w1, dw1)
+    r2 = _range_in(w2, dw2)
+    s = jnp.sqrt(jnp.maximum(r1, 1e-8) / jnp.maximum(r2, 1e-8))
+    s = jnp.clip(s, 1e-4, 1e4)
+    w1p = w1 / s[None, None, None, :]
+    b1p = b1 / s
+    if dw2:
+        w2p = w2 * s[None, None, None, :]
+    else:
+        w2p = w2 * s[None, None, :, None]
+    return w1p, b1p, w2p, s
+
+
+def replace_relu6(model: M.QModel) -> M.QModel:
+    """ReLU6 → ReLU in-place on the spec (the paper's precondition for CLE)."""
+    for u in model.units:
+        for l in u.layers:
+            l.relu6 = False
+    return model
+
+
+def apply_cle(model: M.QModel, params, iters: int = 2):
+    """Iterated pairwise equalization over every unit's chains."""
+    out = jax.tree_util.tree_map(lambda a: a, params)
+    for _ in range(iters):
+        for u in model.units:
+            for a, b in _pairs(u):
+                la = next(l for l in u.layers if l.name == a)
+                lb = next(l for l in u.layers if l.name == b)
+                pa = out["units"][u.name]["layers"][a]
+                pb = out["units"][u.name]["layers"][b]
+                w1, b1, w2, _ = equalize_pair(
+                    pa["w"], pa["b"], pb["w"],
+                    la.kind == "dwconv", lb.kind == "dwconv")
+                pa["w"], pa["b"] = w1, b1
+                pb["w"] = w2
+    return out
+
+
+def apply_ahb(model: M.QModel, params, thresh: float = 3.0):
+    """Absorb high biases: for each producer/consumer pair, move the part of
+    the producer bias above `thresh`·std(b) into the consumer's bias."""
+    out = jax.tree_util.tree_map(lambda a: a, params)
+    for u in model.units:
+        for a, b in _pairs(u):
+            lb = next(l for l in u.layers if l.name == b)
+            pa = out["units"][u.name]["layers"][a]
+            pb = out["units"][u.name]["layers"][b]
+            b1 = pa["b"]
+            sd = jnp.std(b1) + 1e-8
+            c = jnp.maximum(b1 - thresh * sd, 0.0)
+            pa["b"] = b1 - c
+            w2 = pb["w"]
+            if lb.kind == "dwconv":
+                # channel-preserving: absorbed constant flows through the
+                # center tap of the depthwise kernel
+                kh, kw = w2.shape[0], w2.shape[1]
+                pb["b"] = pb["b"] + w2[kh // 2, kw // 2, 0, :] * c
+            else:
+                pb["b"] = pb["b"] + jnp.einsum("hwio,i->o", w2, c) / (
+                    w2.shape[0] * w2.shape[1]) * (w2.shape[0] * w2.shape[1])
+    return out
+
+
+def preprocess(model: M.QModel, params):
+    """ReLU6→ReLU + CLE + AHB — the full Table 10 preprocessing pipeline."""
+    model = replace_relu6(model)
+    params = apply_cle(model, params)
+    params = apply_ahb(model, params)
+    return model, params

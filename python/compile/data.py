@@ -1,0 +1,344 @@
+"""Synthetic dataset generators — the offline substitutes for the paper's
+ImageNet / GLUE / WikiText2 / PTB / WebNLG / common-sense-reasoning suites.
+
+Every generator is a pure function of an integer seed, so the Python build
+path and the Rust test suite can regenerate bit-identical data.  See
+DESIGN.md "Substitutions" for the mapping to the paper's datasets and the
+argument for why each analog preserves the behaviour PTQ cares about.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# synth-image — ImageNet analog (10-class procedural textures)
+# ---------------------------------------------------------------------------
+
+IMG_SIZE = 12
+IMG_CLASSES = 10
+
+
+def gen_images(seed: int, n: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Class-conditional Gabor-ish textures + colored blobs + noise.
+
+    Returns (x: (n, H, W, 3) f32 in [0,1]-ish standardized, y: (n,) i32).
+    Classes differ in orientation/frequency/color so a small CNN separates
+    them well above chance but not trivially (noise floor keeps it <100%).
+    """
+    rng = np.random.default_rng(seed)
+    ys = rng.integers(0, IMG_CLASSES, size=n).astype(np.int32)
+    xs = np.empty((n, IMG_SIZE, IMG_SIZE, 3), np.float32)
+    yy, xx = np.mgrid[0:IMG_SIZE, 0:IMG_SIZE].astype(np.float32) / IMG_SIZE
+    for i in range(n):
+        c = int(ys[i])
+        theta = np.pi * c / IMG_CLASSES
+        freq = 2.0 + (c % 5)
+        phase = rng.uniform(0, 2 * np.pi)
+        grating = np.sin(2 * np.pi * freq * (np.cos(theta) * xx + np.sin(theta) * yy) + phase)
+        # class-coloured blob
+        cx, cy = rng.uniform(0.2, 0.8, size=2)
+        blob = np.exp(-(((xx - cx) ** 2 + (yy - cy) ** 2) / 0.02))
+        color = np.array([
+            0.5 + 0.5 * np.cos(2 * np.pi * c / IMG_CLASSES),
+            0.5 + 0.5 * np.sin(2 * np.pi * c / IMG_CLASSES),
+            (c % 3) / 2.0,
+        ], np.float32)
+        img = 0.5 * grating[..., None] * color + 0.8 * blob[..., None] * color[::-1]
+        img += rng.normal(0, 0.55, size=img.shape)
+        xs[i] = img.astype(np.float32)
+    xs -= xs.mean(axis=(1, 2, 3), keepdims=True)
+    xs /= xs.std(axis=(1, 2, 3), keepdims=True) + 1e-6
+    return xs, ys
+
+
+# ---------------------------------------------------------------------------
+# synth-lm — WikiText2 / PTB analogs (order-2 Markov grammars)
+# ---------------------------------------------------------------------------
+
+LM_VOCAB = 64
+LM_SEQ = 32
+BOS = 1
+PAD = 0
+
+
+def _markov_tables(seed: int, vocab: int, branch: int, temperature: float):
+    """Sparse order-2 transition tables: each (prev2, prev1) context allows
+    `branch` successors with Dirichlet weights sharpened by `temperature`."""
+    rng = np.random.default_rng(seed)
+    succ = rng.integers(2, vocab, size=(vocab, vocab, branch)).astype(np.int32)
+    logits = rng.normal(size=(vocab, vocab, branch)) / temperature
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    return succ, probs.astype(np.float64)
+
+
+@dataclass
+class LmCorpus:
+    name: str
+    vocab: int
+    seq: int
+    entropy_bits: float  # analytic per-token entropy of the grammar
+
+
+def gen_lm(seed: int, n: int, branch: int = 6, temperature: float = 1.0,
+           vocab: int = LM_VOCAB, seq: int = LM_SEQ) -> Tuple[np.ndarray, float]:
+    """Sample `n` sequences from the order-2 grammar.  Returns (tokens
+    (n, seq) i32 with BOS prefix, analytic entropy rate in nats) — trained
+    models converge to PPL ≈ exp(entropy), so perplexity is meaningful."""
+    succ, probs = _markov_tables(seed, vocab, branch, temperature)
+    rng = np.random.default_rng(seed + 1)
+    toks = np.empty((n, seq), np.int32)
+    toks[:, 0] = BOS
+    prev2 = np.full(n, BOS, np.int32)
+    prev1 = rng.integers(2, vocab, size=n).astype(np.int32)
+    toks[:, 1] = prev1
+    for t in range(2, seq):
+        u = rng.random(n)
+        p = probs[prev2, prev1]                      # (n, branch)
+        idx = (u[:, None] > np.cumsum(p, -1)).sum(-1).clip(0, p.shape[-1] - 1)
+        nxt = succ[prev2, prev1, idx]
+        toks[:, t] = nxt
+        prev2, prev1 = prev1, nxt
+    ent = float(-(probs * np.log(probs)).mean(axis=(0, 1)).sum())
+    return toks, ent
+
+
+# corpus-a (WikiText2 analog): broad branch, soft — higher entropy
+# corpus-b (PTB analog): narrow branch, sharp — lower entropy
+CORPUS_CFG = {
+    "lm-a": dict(seed=101, branch=8, temperature=1.2),
+    "lm-b": dict(seed=202, branch=4, temperature=0.6),
+}
+
+
+def gen_corpus(name: str, n: int):
+    cfg = CORPUS_CFG[name]
+    return gen_lm(cfg["seed"], n, branch=cfg["branch"], temperature=cfg["temperature"])
+
+
+# ---------------------------------------------------------------------------
+# synth-nlu — GLUE analogs (3 sequence-classification tasks)
+# ---------------------------------------------------------------------------
+
+NLU_VOCAB = 96
+NLU_SEQ = 24
+SEP = 2
+NLU_CONTENT_LO = 8  # tokens ≥ this are "content"; below: control tokens
+
+
+def gen_nlu(task: str, seed: int, n: int) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Three GLUE-shaped tasks over a shared vocabulary.
+
+    entail : [prem SEP hyp]   — label 1 iff every content token of hyp ∈ prem
+             (MNLI analog: pair task, asymmetric relation)
+    para   : [s1 SEP s2]      — label 1 iff s2 is a permutation of s1 with k
+             tokens swapped through a fixed 'synonym' involution (QQP/MRPC)
+    accept : [s]              — label 1 iff s respects an even/odd alternation
+             grammar (CoLA analog: single-sentence acceptability)
+
+    Returns (tokens (n, NLU_SEQ), labels (n,), num_classes).
+    """
+    rng = np.random.default_rng(seed)
+    toks = np.full((n, NLU_SEQ), PAD, np.int32)
+    toks[:, 0] = BOS
+    ys = rng.integers(0, 2, size=n).astype(np.int32)
+    syn = _synonym_involution(seed)
+    for i in range(n):
+        if task == "entail":
+            plen = rng.integers(6, 10)
+            prem = rng.integers(NLU_CONTENT_LO, NLU_VOCAB, size=plen)
+            hlen = rng.integers(3, 6)
+            if ys[i] == 1:
+                hyp = rng.choice(prem, size=hlen, replace=True)
+            else:
+                hyp = prem[rng.integers(0, plen, size=hlen)].copy()
+                # corrupt at least one token to something outside the premise
+                bad = rng.integers(0, hlen)
+                cand = rng.integers(NLU_CONTENT_LO, NLU_VOCAB)
+                while cand in prem:
+                    cand = rng.integers(NLU_CONTENT_LO, NLU_VOCAB)
+                hyp[bad] = cand
+            seqn = np.concatenate([prem, [SEP], hyp])
+        elif task == "para":
+            slen = rng.integers(5, 9)
+            s1 = rng.integers(NLU_CONTENT_LO, NLU_VOCAB, size=slen)
+            if ys[i] == 1:
+                s2 = rng.permutation(s1)
+                k = rng.integers(0, 3)
+                pos = rng.choice(slen, size=min(k, slen), replace=False)
+                s2[pos] = syn[s2[pos]]
+            else:
+                s2 = rng.integers(NLU_CONTENT_LO, NLU_VOCAB, size=slen)
+            seqn = np.concatenate([s1, [SEP], s2])
+        elif task == "accept":
+            slen = rng.integers(8, 16)
+            if ys[i] == 1:
+                # even/odd parity alternation grammar
+                s = np.empty(slen, np.int64)
+                par = rng.integers(0, 2)
+                for t in range(slen):
+                    s[t] = rng.integers(NLU_CONTENT_LO // 2, NLU_VOCAB // 2) * 2 + ((t + par) % 2)
+                seqn = s
+            else:
+                seqn = rng.integers(NLU_CONTENT_LO, NLU_VOCAB, size=slen)
+        else:
+            raise ValueError(task)
+        seqn = seqn[: NLU_SEQ - 1]
+        toks[i, 1 : 1 + len(seqn)] = seqn
+    return toks, ys, 2
+
+
+NLU_TASKS = ("entail", "para", "accept")
+NLU_SEEDS = {"entail": 311, "para": 322, "accept": 333}
+
+
+# ---------------------------------------------------------------------------
+# synth-d2t — WebNLG analog (data-to-text with seen/unseen categories)
+# ---------------------------------------------------------------------------
+
+D2T_VOCAB = 64
+D2T_SEQ = 32
+D2T_NKEYS = 8
+D2T_UNSEEN = (6, 7)  # key categories held out of LoRA fine-tuning
+KEY_BASE = 4          # keys are tokens [KEY_BASE, KEY_BASE + D2T_NKEYS)
+VAL_BASE = KEY_BASE + D2T_NKEYS
+SEP_D2T = 3
+
+
+def _d2t_template(seed: int):
+    """Fixed per-key verbalization templates: key k, value v →
+    [open_k, f1(v), f2(v)] where f are deterministic token maps."""
+    rng = np.random.default_rng(seed)
+    openers = rng.integers(VAL_BASE, D2T_VOCAB, size=D2T_NKEYS).astype(np.int32)
+    mix = rng.integers(1, 7, size=(D2T_NKEYS, 2)).astype(np.int32)
+    return openers, mix
+
+
+def gen_d2t(seed: int, n: int, categories=None) -> Tuple[np.ndarray, np.ndarray]:
+    """Records → text.  Input: [BOS, k1, v1, k2, v2, SEP]; target completion:
+    template expansion of each (k, v).  Returns (full sequences (n, D2T_SEQ),
+    completion-start indices (n,)).  BLEU is computed over the completion."""
+    rng = np.random.default_rng(seed)
+    openers, mix = _d2t_template(9000)
+    cats = list(categories) if categories is not None else list(range(D2T_NKEYS))
+    toks = np.full((n, D2T_SEQ), PAD, np.int32)
+    starts = np.empty(n, np.int32)
+    for i in range(n):
+        nk = min(int(rng.integers(2, 4)), len(cats))
+        keys = rng.choice(cats, size=nk, replace=False)
+        vals = rng.integers(0, D2T_VOCAB - VAL_BASE, size=nk)
+        seqn = [BOS]
+        for k, v in zip(keys, vals):
+            seqn += [KEY_BASE + int(k), VAL_BASE + int(v)]
+        seqn.append(SEP_D2T)
+        starts[i] = len(seqn)
+        for k, v in zip(keys, vals):
+            o = int(openers[k])
+            seqn += [o,
+                     VAL_BASE + int((v * mix[k, 0]) % (D2T_VOCAB - VAL_BASE)),
+                     VAL_BASE + int((v * mix[k, 1] + k) % (D2T_VOCAB - VAL_BASE))]
+        seqn = seqn[:D2T_SEQ]
+        toks[i, : len(seqn)] = seqn
+    return toks, starts
+
+
+# ---------------------------------------------------------------------------
+# synth-mc — common-sense-reasoning analogs (zero-shot multiple choice)
+# ---------------------------------------------------------------------------
+
+MC_CHOICES = 4
+
+
+def gen_mc(task: str, seed: int, n: int, vocab: int = LM_VOCAB,
+           seq: int = LM_SEQ) -> Tuple[np.ndarray, np.ndarray]:
+    """Multiple-choice tasks scored by length-normalized log-likelihood under
+    the pre-trained grammar LM (the LLaMA-analog protocol):
+
+    grammar : 1 continuation drawn from the true grammar, 3 uniform-random
+    copy    : prefix contains a marker token pair; the right choice repeats
+              the marked token (HellaSwag-ish surface pattern)
+    parity  : right choice continues the even/odd token-parity alternation
+
+    Returns (choices (n, MC_CHOICES, seq), answers (n,)).
+    """
+    rng = np.random.default_rng(seed)
+    out = np.empty((n, MC_CHOICES, seq), np.int32)
+    ans = rng.integers(0, MC_CHOICES, size=n).astype(np.int32)
+    cfg = CORPUS_CFG["lm-a"]
+    succ, probs = _markov_tables(cfg["seed"], vocab, cfg["branch"], cfg["temperature"])
+    for i in range(n):
+        prefix_len = seq // 2
+        toks, _ = gen_lm(int(rng.integers(1 << 30)), 1, branch=cfg["branch"],
+                         temperature=cfg["temperature"], vocab=vocab, seq=seq)
+        base = toks[0]
+        for ch in range(MC_CHOICES):
+            s = base.copy()
+            if ch == ans[i]:
+                if task == "copy":
+                    s[prefix_len:] = s[prefix_len - 1]
+                elif task == "parity":
+                    for t in range(prefix_len, seq):
+                        s[t] = (s[t - 1] // 2) * 2 + (1 - (s[t - 1] % 2))
+                # task == "grammar": the true continuation is already grammatical
+            else:
+                s[prefix_len:] = rng.integers(2, vocab, size=seq - prefix_len)
+            out[i, ch] = s
+    return out, ans
+
+
+MC_TASKS = ("grammar", "copy", "parity")
+MC_SEEDS = {"grammar": 811, "copy": 822, "parity": 833}
+
+
+# ---------------------------------------------------------------------------
+# synth-span — SQuAD analog (span extraction)
+# ---------------------------------------------------------------------------
+
+def gen_span(seed: int, n: int, vocab: int = NLU_VOCAB,
+             seq: int = NLU_SEQ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Context + query → answer span.  The query is a single token that
+    appears exactly once in the context followed by an answer span of 2
+    tokens; the model predicts (start, end).  Returns (tokens, starts, ends).
+    Layout: [BOS, ctx…, SEP, qtok]."""
+    rng = np.random.default_rng(seed)
+    toks = np.full((n, seq), PAD, np.int32)
+    starts = np.empty(n, np.int32)
+    ends = np.empty(n, np.int32)
+    clen = seq - 3
+    for i in range(n):
+        ctx = rng.integers(NLU_CONTENT_LO, vocab, size=clen)
+        q = int(rng.integers(NLU_CONTENT_LO, vocab))
+        ctx[ctx == q] = (q + 1 - NLU_CONTENT_LO) % (vocab - NLU_CONTENT_LO) + NLU_CONTENT_LO
+        pos = int(rng.integers(0, clen - 2))
+        ctx[pos] = q
+        toks[i, 0] = BOS
+        toks[i, 1 : 1 + clen] = ctx
+        toks[i, 1 + clen] = SEP
+        toks[i, 2 + clen] = q
+        starts[i] = 1 + pos + 1   # answer = the 2 tokens after the marker
+        ends[i] = starts[i] + 1
+    return toks, starts, ends
+
+
+def _synonym_involution(seed: int) -> np.ndarray:
+    """A fixed involution over content tokens acting as 'synonyms'."""
+    rng = np.random.default_rng(seed + 77)
+    ids = np.arange(NLU_VOCAB)
+    content = ids[NLU_CONTENT_LO:]
+    perm = rng.permutation(content)
+    syn = ids.copy()
+    half = len(content) // 2
+    a, b = perm[:half], perm[half : 2 * half]
+    syn[a], syn[b] = b, a
+    return syn
+
+
+# ---------------------------------------------------------------------------
+# Split helpers
+# ---------------------------------------------------------------------------
+
+def train_eval_split(x, y, n_eval: int):
+    return (x[:-n_eval], y[:-n_eval]), (x[-n_eval:], y[-n_eval:])

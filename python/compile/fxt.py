@@ -1,0 +1,67 @@
+"""FXT — the tiny named-tensor container shared by Python (writer) and Rust
+(reader + writer).  Little-endian throughout.
+
+Layout:
+    magic   : 4 bytes  b"FXT1"
+    count   : u32      number of tensors
+    per tensor:
+        name_len : u32
+        name     : utf-8 bytes
+        dtype    : u8   (0 = f32, 1 = i32)
+        ndim     : u8
+        dims     : u32 × ndim
+        data     : raw little-endian values (prod(dims) elements)
+
+The Rust side lives in `rust/src/ser/fxt.rs`; `python/tests/test_fxt.py` and
+`rust/tests/` both round-trip the same reference buffers.
+"""
+from __future__ import annotations
+
+import struct
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"FXT1"
+DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+DTYPES_INV = {0: np.float32, 1: np.int32}
+
+
+def write(path: str, tensors: Dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in DTYPES:
+                if np.issubdtype(arr.dtype, np.floating):
+                    arr = arr.astype(np.float32)
+                elif np.issubdtype(arr.dtype, np.integer):
+                    arr = arr.astype(np.int32)
+                else:
+                    raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", DTYPES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype(arr.dtype.newbyteorder("<")).tobytes())
+
+
+def read(path: str) -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            dt, nd = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{nd}I", f.read(4 * nd)) if nd else ()
+            dtype = np.dtype(DTYPES_INV[dt]).newbyteorder("<")
+            n = int(np.prod(dims)) if dims else 1
+            data = np.frombuffer(f.read(n * 4), dtype=dtype, count=n)
+            out[name] = data.astype(DTYPES_INV[dt]).reshape(dims)
+    return out

@@ -1,0 +1,467 @@
+"""Layer-2 computation graphs lowered to HLO for the Rust coordinator.
+
+Every graph here becomes one `artifacts/*.hlo.txt` executable with a flat,
+manifest-documented input/output signature (the Rust runtime matches buffers
+by position).  Graph families, per model:
+
+  embed_{m}                    tokens → h₀                         (fp)
+  fp_{m}_{u}                   x → y  (fp unit, weights baked)     (fp)
+  recon_{m}_{u}_{meth}_{mode}  one reconstruction Adam step        (PTQ)
+  q_{m}_{u}_{meth}_{mode}      x̃ → ỹ through the quantized unit    (PTQ)
+  qw_{m}_{u}_{meth}            learned params → (Ŵ, integer codes) (export)
+  head_{m}                     h → logits / per-seq NLL            (fp)
+
+`mode` ∈ {"w", "wa"}: weight-only versus weight+activation quantization
+(LSQ steps learned jointly, QDrop dropout via an in-graph bernoulli mask).
+
+Bit-widths are **runtime inputs** (qmin/qmax scalars), so one graph serves
+every row of the paper's tables; per-channel vs per-tensor s1 is a static
+property chosen per model (only the LLaMA analog uses per-channel weights).
+
+Parameter packing: `ParamPack` fixes the flat ordering of every learnable
+tensor (layer params in `QUnit.layers` order with canonically-ordered keys,
+then activation steps per site).  The same ordering is used for the Adam
+moment buffers, the init data shipped to Rust, and the manifest signature.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import models as M
+from compile import quant as Q
+from compile.kernels import ref
+
+PARAM_KEY_ORDER = ("s1", "zp", "s2", "s3", "s4", "v")
+
+
+# ---------------------------------------------------------------------------
+# Canonical 2D views of unit layers
+# ---------------------------------------------------------------------------
+
+@dataclass
+class LayerView:
+    """A quantizable layer in its canonical 2D view."""
+    name: str
+    kind: str                      # conv | dwconv | linear
+    w2d: jnp.ndarray               # (r, c)
+    bias: jnp.ndarray
+    conv_shape: Optional[Tuple[int, int, int, int]]  # HWIO, None for linear
+    stride: int
+
+    @property
+    def rc(self):
+        return self.w2d.shape
+
+
+def layer_views(model: M.QModel, params, unit: M.QUnit) -> List[LayerView]:
+    views = []
+    if unit.kind == "head_fc":
+        w = params["head"]["fc_w"]
+        b = params["head"]["fc_b"]
+        (l0,) = unit.layers
+        views.append(LayerView(l0.name, "linear", w, b, None, 1))
+        return views
+    up = params["units"][unit.name]
+    for l in unit.layers:
+        p = up["layers"][l.name]
+        if l.kind == "linear":
+            views.append(LayerView(l.name, l.kind, p["w"], p["b"], None, l.stride))
+        else:
+            w2d = Q.conv_to_2d(p["w"])
+            views.append(LayerView(l.name, l.kind, w2d, p["b"], tuple(p["w"].shape), l.stride))
+    return views
+
+
+def w2d_to_native(view: LayerView, w2d):
+    if view.conv_shape is None:
+        return w2d
+    return Q.conv_from_2d(w2d, view.conv_shape)
+
+
+# ---------------------------------------------------------------------------
+# Parameter packing
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PackEntry:
+    name: str          # "<layer>.<key>" or "act<i>.step" / "act<i>.zp"
+    shape: Tuple[int, ...]
+    learnable: bool
+
+
+class ParamPack:
+    """Deterministic flat ordering of a unit's learnable parameters."""
+
+    def __init__(self, entries: List[PackEntry]):
+        self.entries = entries
+
+    @staticmethod
+    def build(method: str, views: List[LayerView], mode: str,
+              n_act_sites: int, per_channel: bool) -> "ParamPack":
+        entries: List[PackEntry] = []
+        lkeys = set(Q.learnable_keys(method))
+        for v in views:
+            r, c = v.rc
+            p_shapes = {
+                "s1": (r, 1) if per_channel else (1, 1),
+                "zp": (r, 1) if per_channel else (1, 1),
+            }
+            if method in ("flexround", "flexround_fixed_s1", "flexround_no_s34",
+                          "adaquant_flexround"):
+                p_shapes.update({"s2": (r, c), "s3": (r, 1), "s4": (1, c)})
+            if method in ("adaround", "adaquant", "adaquant_flexround"):
+                p_shapes["v"] = (r, c)
+            for k in PARAM_KEY_ORDER:
+                if k in p_shapes:
+                    entries.append(PackEntry(f"{v.name}.{k}", p_shapes[k], k in lkeys))
+        if mode == "wa":
+            for i in range(n_act_sites):
+                entries.append(PackEntry(f"act{i}.step", (1, 1), True))
+                entries.append(PackEntry(f"act{i}.zp", (1, 1), False))
+        self_ = ParamPack(entries)
+        return self_
+
+    def unflatten(self, flat: List) -> Tuple[List[Dict], Dict[int, Dict]]:
+        """flat arrays → (per-layer param dicts, act-site dicts)."""
+        per_layer: List[Dict] = []
+        acts: Dict[int, Dict] = {}
+        cur: Dict[str, jnp.ndarray] = {}
+        cur_layer = None
+        i = 0
+        for e in self.entries:
+            owner, key = e.name.split(".")
+            if owner.startswith("act"):
+                acts.setdefault(int(owner[3:]), {})[key] = flat[i]
+            else:
+                if owner != cur_layer:
+                    if cur_layer is not None:
+                        per_layer.append(cur)
+                    cur, cur_layer = {}, owner
+                cur[key] = flat[i]
+            i += 1
+        if cur_layer is not None:
+            per_layer.append(cur)
+        return per_layer, acts
+
+    def init_values(self, method: str, views: List[LayerView], bits: int,
+                    symmetric: bool, per_channel: bool,
+                    act_init: Optional[List[Tuple[float, float]]] = None,
+                    abits: int = 8) -> List[np.ndarray]:
+        """Initial values in pack order (the data Rust feeds to step 0)."""
+        by_layer = {}
+        for v in views:
+            kh_kw = 1 if v.conv_shape is None else v.conv_shape[0] * v.conv_shape[1]
+            cin = v.rc[1] // kh_kw
+            by_layer[v.name] = Q.init_params(
+                method, v.w2d, bits, symmetric, per_channel,
+                conv_cin=cin, ksize=kh_kw)
+        out = []
+        for e in self.entries:
+            owner, key = e.name.split(".")
+            if owner.startswith("act"):
+                lo, hi = act_init[int(owner[3:])]
+                qmin_a, qmax_a = ref.qrange(abits, False)
+                step = max((hi - lo) / (qmax_a - qmin_a), 1e-6)
+                zp = min(max(round(-lo / step), qmin_a), qmax_a)
+                val = np.full((1, 1), step if key == "step" else zp, np.float32)
+            else:
+                val = np.asarray(by_layer[owner][key], np.float32).reshape(e.shape)
+            out.append(val)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Quantized unit forward
+# ---------------------------------------------------------------------------
+
+def n_act_sites(unit: M.QUnit) -> int:
+    return len(unit.layers) if unit.kind != "head_fc" else 1
+
+
+def quantized_unit_fwd(model: M.QModel, params, unit: M.QUnit, method: str,
+                       mode: str, pack: ParamPack, views: List[LayerView],
+                       impl: str = "pallas", use_qdrop: bool = True):
+    """Returns f(flat_params, x, qmin_w, qmax_w, qmin_a, qmax_a, drop_p, key) → y.
+
+    Weights (full-precision) are baked as constants; quantization parameters
+    arrive flat.  In "wa" mode every layer input passes through LSQ
+    fake-quant, optionally QDrop-mixed with its full-precision value."""
+    aux = None
+    if unit.kind == "txl":
+        aux = params["units"][unit.name]["aux"]
+
+    def fwd(flat, x, qmin_w, qmax_w, qmin_a, qmax_a, drop_p, key):
+        per_layer, acts = pack.unflatten(flat)
+        what_native = []
+        for v, p in zip(views, per_layer):
+            w_hat2d = Q.fake_quant(method, v.w2d, p, qmin_w, qmax_w, impl=impl)
+            what_native.append(w2d_to_native(v, w_hat2d))
+
+        def actq(t, i):
+            if mode != "wa":
+                return t
+            a = acts[i]
+            if impl == "jnp":
+                tq = ref.lsq_act(t, a["step"].reshape(()), qmin_a, qmax_a,
+                                 a["zp"].reshape(()))
+            else:
+                tq = Q.quant_act(t, a["step"], jax.lax.stop_gradient(a["zp"]),
+                                 qmin_a, qmax_a)
+            if not use_qdrop:
+                # q/eval executables run with drop_p = 0: the mixing is the
+                # identity, and keeping the constant-key threefry ops in the
+                # graph crashes the xla_extension 0.5.1 CPU compiler.
+                return tq
+            k = jax.random.fold_in(key, i)
+            keep = jax.random.bernoulli(k, 1.0 - drop_p, shape=t.shape)
+            return jnp.where(keep, tq, t)
+
+        if unit.kind == "head_fc":
+            pooled = x.mean(axis=(1, 2)) if x.ndim == 4 else x
+            return M.linear(actq(pooled, 0), what_native[0], views[0].bias)
+        bs = [v.bias for v in views]
+        return M.apply_unit(unit, what_native, bs, aux, x, actq=actq)
+
+    return fwd
+
+
+def fp_unit_fwd(model: M.QModel, params, unit: M.QUnit):
+    views = layer_views(model, params, unit)
+    aux = params["units"][unit.name]["aux"] if unit.kind == "txl" else None
+
+    def fwd(x):
+        if unit.kind == "head_fc":
+            pooled = x.mean(axis=(1, 2)) if x.ndim == 4 else x
+            return M.linear(pooled, views[0].w2d, views[0].bias)
+        ws = [w2d_to_native(v, v.w2d) for v in views]
+        bs = [v.bias for v in views]
+        return M.apply_unit(unit, ws, bs, aux, x)
+
+    return fwd
+
+
+# ---------------------------------------------------------------------------
+# Reconstruction step (fwd + bwd + Adam, one executable)
+# ---------------------------------------------------------------------------
+
+def recon_step_fn(model: M.QModel, params, unit: M.QUnit, method: str,
+                  mode: str, pack: ParamPack, views: List[LayerView]):
+    """One PTQ iteration:  L = ‖Ŷ − Y‖²  (+ β·f_reg for AdaRound),
+    grads via the custom-VJP STE ops, in-graph Adam, positivity clamp.
+
+    Signature (flat):
+      inputs : x̃, y, qmin_w, qmax_w, qmin_a, qmax_a, drop_p, beta, lr, t,
+               seed, *params, *m, *v
+      outputs: loss, *params', *m', *v'
+    """
+    fwd = quantized_unit_fwd(model, params, unit, method, mode, pack, views)
+    learn_mask = [e.learnable for e in pack.entries]
+
+    def loss_fn(flat, x, y, qmin_w, qmax_w, qmin_a, qmax_a, drop_p, beta, key):
+        yhat = fwd(flat, x, qmin_w, qmax_w, qmin_a, qmax_a, drop_p, key)
+        loss = jnp.mean((yhat - y) ** 2)
+        if method == "adaround":
+            per_layer, _ = pack.unflatten(flat)
+            reg = sum(ref.adaround_reg(p["v"], beta) for p in per_layer)
+            loss = loss + 0.01 * reg / sum(v.w2d.size for v in views)
+        return loss
+
+    def step(x, y, qmin_w, qmax_w, qmin_a, qmax_a, drop_p, beta, lr, t, seed,
+             *state):
+        n = len(pack.entries)
+        flat = list(state[:n])
+        m = list(state[n : 2 * n])
+        v = list(state[2 * n :])
+        key = jax.random.PRNGKey(seed)
+        loss, grads = jax.value_and_grad(loss_fn)(
+            flat, x, y, qmin_w, qmax_w, qmin_a, qmax_a, drop_p, beta, key)
+        new_flat, new_m, new_v = [], [], []
+        b1t = 1.0 - Q.ADAM_B1 ** t
+        b2t = 1.0 - Q.ADAM_B2 ** t
+        for p, g, mm, vv, lm, e in zip(flat, grads, m, v, learn_mask, pack.entries):
+            if not lm:
+                new_flat.append(p)
+                new_m.append(mm)
+                new_v.append(vv)
+                continue
+            m2 = Q.ADAM_B1 * mm + (1 - Q.ADAM_B1) * g
+            v2 = Q.ADAM_B2 * vv + (1 - Q.ADAM_B2) * g * g
+            p2 = p - lr * (m2 / b1t) / (jnp.sqrt(v2 / b2t) + Q.ADAM_EPS)
+            base = e.name.split(".")[1]
+            if base in ("s1", "s2", "s3", "s4") or base == "step":
+                p2 = jnp.maximum(p2, 1e-6)
+            new_flat.append(p2)
+            new_m.append(m2)
+            new_v.append(v2)
+        return (loss, *new_flat, *new_m, *new_v)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Quantized-weight export graph (Ŵ + integer codes, for figures/analysis)
+# ---------------------------------------------------------------------------
+
+def qw_export_fn(views: List[LayerView], method: str, pack: ParamPack,
+                 impl: str = "jnp"):
+    def export(qmin_w, qmax_w, *flat):
+        per_layer, _ = pack.unflatten(list(flat))
+        outs = []
+        for v, p in zip(views, per_layer):
+            outs.append(Q.fake_quant(method, v.w2d, p, qmin_w, qmax_w, impl=impl))
+            outs.append(Q.quant_int_codes(method, v.w2d, p, qmin_w, qmax_w, impl=impl))
+        return tuple(outs)
+
+    return export
+
+
+# ---------------------------------------------------------------------------
+# Model-level fp graphs: embedding and heads
+# ---------------------------------------------------------------------------
+
+def embed_fn(model: M.QModel, params):
+    tok = params["pre"]["tok"]
+    pos = params["pre"]["pos"]
+
+    def f(tokens):
+        return tok[tokens] + pos[None, : tokens.shape[1]]
+
+    return f
+
+
+def head_fn(model: M.QModel, params, task: Optional[str] = None):
+    """Final (full-precision) head.
+
+      lm        : (h, tokens) → (nll_sum_per_seq, tok_count_per_seq)
+      cls       : (h,)        → logits
+      span      : (h,)        → (start_logits, end_logits)
+      multi     : per-task head selected by `task` ("span" → span head)
+      cnn heads are units (head_fc), not handled here.
+    """
+    hd = model.meta["head"]
+    if hd == "multi":
+        hd = "span" if task == "span" else "cls_multi"
+    ln_g, ln_b = params["head"]["ln_g"], params["head"]["ln_b"]
+
+    if hd == "lm":
+        ow, ob = params["head"]["out_w"], params["head"]["out_b"]
+
+        def f(h, tokens):
+            hn = M.layernorm(h, ln_g, ln_b)
+            logits = M.linear(hn, ow, ob)
+            tgt = tokens[:, 1:]
+            lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+            nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+            mask = (tgt != 0).astype(jnp.float32)
+            return (nll * mask).sum(axis=1), mask.sum(axis=1)
+
+        return f
+
+    if hd == "cls":
+        ow, ob = params["head"]["out_w"], params["head"]["out_b"]
+
+        def f(h):
+            hn = M.layernorm(h, ln_g, ln_b)
+            return M.linear(hn.mean(axis=1), ow, ob)
+
+        return f
+
+    if hd == "cls_multi":
+        ow = params["head"][f"{task}_w"]
+        ob = params["head"][f"{task}_b"]
+
+        def f(h):
+            hn = M.layernorm(h, ln_g, ln_b)
+            return M.linear(hn.mean(axis=1), ow, ob)
+
+        return f
+
+    if hd == "span":
+        key = "span_" if model.meta["head"] == "multi" else ""
+        sw = params["head"][f"{key}start_w"]
+        ew = params["head"][f"{key}end_w"]
+
+        def f(h):
+            hn = M.layernorm(h, ln_g, ln_b)
+            return (hn @ sw.T)[..., 0], (hn @ ew.T)[..., 0]
+
+        return f
+
+    raise ValueError(hd)
+
+
+# ---------------------------------------------------------------------------
+# Activation-range calibration (runs at AOT time, full precision)
+# ---------------------------------------------------------------------------
+
+def calibrate_act_ranges(model: M.QModel, params, unit: M.QUnit, x) -> List[Tuple[float, float]]:
+    """(lo, hi) per act site from the fp forward on calibration data; used to
+    initialize the LSQ step (asymmetric per-tensor, as in the paper)."""
+    views = layer_views(model, params, unit)
+    ranges: List[Tuple[float, float]] = [(0.0, 0.0)] * n_act_sites(unit)
+
+    def probe(t, i):
+        lo = float(jnp.min(t))
+        hi = float(jnp.max(t))
+        plo, phi = ranges[i]
+        ranges[i] = (min(plo, lo), max(phi, hi))
+        return t
+
+    aux = params["units"][unit.name]["aux"] if unit.kind == "txl" else None
+    if unit.kind == "head_fc":
+        pooled = x.mean(axis=(1, 2)) if x.ndim == 4 else x
+        probe(pooled, 0)
+    else:
+        ws = [w2d_to_native(v, v.w2d) for v in views]
+        bs = [v.bias for v in views]
+        M.apply_unit(unit, ws, bs, aux, x, actq=probe)
+    return ranges
+
+
+# ---------------------------------------------------------------------------
+# In-python PTQ driver (used by tests + as the oracle for the Rust engine)
+# ---------------------------------------------------------------------------
+
+def python_recon_unit(model, params, unit, method, mode, x_tilde, y_target,
+                      bits_w, iters, lr, per_channel=False, symmetric=True,
+                      abits=8, drop_p=0.0, seed=0,
+                      act_init=None):
+    """Pure-python reference of the Rust reconstruction loop (same graphs,
+    jit-executed in-process).  Returns (final loss, learned flat params)."""
+    views = layer_views(model, params, unit)
+    pack = ParamPack.build(method, views, mode, n_act_sites(unit), per_channel)
+    if act_init is None and mode == "wa":
+        act_init = calibrate_act_ranges(model, params, unit, x_tilde)
+    flat = [jnp.asarray(a) for a in pack.init_values(
+        method, views, bits_w, symmetric, per_channel, act_init, abits)]
+    m = [jnp.zeros_like(a) for a in flat]
+    v = [jnp.zeros_like(a) for a in flat]
+    step = jax.jit(recon_step_fn(model, params, unit, method, mode, pack, views))
+    qmin_w, qmax_w = ref.qrange(bits_w, symmetric)
+    qmin_a, qmax_a = ref.qrange(abits, False)
+    loss = None
+    for t in range(1, iters + 1):
+        out = step(x_tilde, y_target,
+                   float(qmin_w), float(qmax_w), float(qmin_a), float(qmax_a),
+                   float(drop_p), _beta(t, iters), lr, float(t),
+                   np.int32(seed * 100003 + t), *flat, *m, *v)
+        loss = out[0]
+        n = len(flat)
+        flat = list(out[1 : 1 + n])
+        m = list(out[1 + n : 1 + 2 * n])
+        v = list(out[1 + 2 * n :])
+    return float(loss), flat, pack
+
+
+def _beta(t, iters, beta_hi=20.0, beta_lo=2.0, warmup=0.2):
+    """AdaRound β annealing: constant during warmup, then cosine hi→lo."""
+    if t < warmup * iters:
+        return beta_hi
+    frac = (t - warmup * iters) / max(1.0, (1 - warmup) * iters)
+    return beta_lo + 0.5 * (beta_hi - beta_lo) * (1 + np.cos(np.pi * min(frac, 1.0)))

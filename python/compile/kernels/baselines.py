@@ -1,0 +1,318 @@
+"""Layer-1 Pallas kernels for the baseline rounding schemes.
+
+The paper compares FlexRound against the element-wise-*addition* family:
+
+* RTN       — rounding-to-nearest, the zero-parameter baseline.
+* AdaRound  — Ŵ = s1·(clip(⌊W/s1⌋ + h(V) + z) − z), learnable V, fixed s1.
+* AdaQuant  — Ŵ = s1·(clip(round((W+V)/s1) + z) − z), learnable V and s1.
+* LSQ       — activation fake-quant with a learned step size.
+
+Same canonical 2D layout and tiling discipline as `flexround.py`; per-row
+scales are (r, 1), zero-points (r, 1), and everything runs `interpret=True`
+so the lowered HLO executes on the CPU PJRT client loaded from Rust.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.flexround import (
+    BLOCK_R,
+    _blocks,
+    _col_spec,
+    _q_spec,
+    _row_spec,
+    _scalar11,
+    _tile_spec,
+)
+
+ADAROUND_GAMMA = -0.1
+ADAROUND_ZETA = 1.2
+
+
+# ---------------------------------------------------------------------------
+# RTN
+# ---------------------------------------------------------------------------
+
+def _rtn_kernel(w_ref, s1_ref, zp_ref, qmin_ref, qmax_ref, o_ref):
+    qmin = qmin_ref[0, 0]
+    qmax = qmax_ref[0, 0]
+    w = w_ref[...]
+    s1 = s1_ref[...]
+    zp = zp_ref[...]
+    n = jnp.clip(jnp.round(w / s1) + zp, qmin, qmax)
+    o_ref[...] = s1 * (n - zp)
+
+
+def rtn(w, s1, zp, qmin, qmax):
+    r, c = w.shape
+    br, bc, gr, gc = _blocks(r, c)
+    return pl.pallas_call(
+        _rtn_kernel,
+        out_shape=jax.ShapeDtypeStruct((r, c), w.dtype),
+        grid=(gr, gc),
+        in_specs=[_tile_spec(br, bc), _row_spec(br), _row_spec(br),
+                  _q_spec(), _q_spec()],
+        out_specs=_tile_spec(br, bc),
+        interpret=True,
+    )(w, s1, zp, _scalar11(qmin), _scalar11(qmax))
+
+
+# ---------------------------------------------------------------------------
+# AdaRound
+# ---------------------------------------------------------------------------
+
+def _adaround_kernel(w_ref, s1_ref, v_ref, zp_ref, qmin_ref, qmax_ref, o_ref, *, hard):
+    qmin = qmin_ref[0, 0]
+    qmax = qmax_ref[0, 0]
+    w = w_ref[...]
+    s1 = s1_ref[...]
+    zp = zp_ref[...]
+    sig = 1.0 / (1.0 + jnp.exp(-v_ref[...]))
+    h = jnp.clip(sig * (ADAROUND_ZETA - ADAROUND_GAMMA) + ADAROUND_GAMMA, 0.0, 1.0)
+    if hard:
+        h = (h >= 0.5).astype(w.dtype)
+    n = jnp.clip(jnp.floor(w / s1) + h + zp, qmin, qmax)
+    o_ref[...] = s1 * (n - zp)
+
+
+def adaround(w, s1, v, zp, qmin, qmax, hard=False):
+    r, c = w.shape
+    br, bc, gr, gc = _blocks(r, c)
+    return pl.pallas_call(
+        functools.partial(_adaround_kernel, hard=hard),
+        out_shape=jax.ShapeDtypeStruct((r, c), w.dtype),
+        grid=(gr, gc),
+        in_specs=[_tile_spec(br, bc), _row_spec(br), _tile_spec(br, bc),
+                  _row_spec(br), _q_spec(), _q_spec()],
+        out_specs=_tile_spec(br, bc),
+        interpret=True,
+    )(w, s1, v, zp, _scalar11(qmin), _scalar11(qmax))
+
+
+def _adaround_bwd_kernel(w_ref, s1_ref, v_ref, zp_ref, g_ref, qmin_ref, qmax_ref, dv_ref):
+    qmin = qmin_ref[0, 0]
+    qmax = qmax_ref[0, 0]
+    w = w_ref[...]
+    s1 = s1_ref[...]
+    zp = zp_ref[...]
+    sig = 1.0 / (1.0 + jnp.exp(-v_ref[...]))
+    h_raw = sig * (ADAROUND_ZETA - ADAROUND_GAMMA) + ADAROUND_GAMMA
+    mask_h = ((h_raw > 0.0) & (h_raw < 1.0)).astype(w.dtype)
+    dh = sig * (1.0 - sig) * (ADAROUND_ZETA - ADAROUND_GAMMA) * mask_h
+    h = jnp.clip(h_raw, 0.0, 1.0)
+    n = jnp.floor(w / s1) + h + zp
+    inside = ((n >= qmin) & (n <= qmax)).astype(w.dtype)
+    dv_ref[...] = g_ref[...] * s1 * inside * dh
+
+
+def adaround_bwd(w, s1, v, zp, g, qmin, qmax):
+    r, c = w.shape
+    br, bc, gr, gc = _blocks(r, c)
+    return pl.pallas_call(
+        _adaround_bwd_kernel,
+        out_shape=jax.ShapeDtypeStruct((r, c), w.dtype),
+        grid=(gr, gc),
+        in_specs=[
+            _tile_spec(br, bc),
+            _row_spec(br),
+            _tile_spec(br, bc),
+            _row_spec(br),
+            _tile_spec(br, bc),
+            _q_spec(),
+            _q_spec(),
+        ],
+        out_specs=_tile_spec(br, bc),
+        interpret=True,
+    )(w, s1, v, zp, g, _scalar11(qmin), _scalar11(qmax))
+
+
+# ---------------------------------------------------------------------------
+# AdaQuant
+# ---------------------------------------------------------------------------
+
+def _adaquant_kernel(w_ref, s1_ref, v_ref, zp_ref, qmin_ref, qmax_ref, o_ref):
+    qmin = qmin_ref[0, 0]
+    qmax = qmax_ref[0, 0]
+    w = w_ref[...]
+    s1 = s1_ref[...]
+    zp = zp_ref[...]
+    n = jnp.clip(jnp.round((w + v_ref[...]) / s1) + zp, qmin, qmax)
+    o_ref[...] = s1 * (n - zp)
+
+
+def adaquant(w, s1, v, zp, qmin, qmax):
+    r, c = w.shape
+    br, bc, gr, gc = _blocks(r, c)
+    return pl.pallas_call(
+        _adaquant_kernel,
+        out_shape=jax.ShapeDtypeStruct((r, c), w.dtype),
+        grid=(gr, gc),
+        in_specs=[_tile_spec(br, bc), _row_spec(br), _tile_spec(br, bc),
+                  _row_spec(br), _q_spec(), _q_spec()],
+        out_specs=_tile_spec(br, bc),
+        interpret=True,
+    )(w, s1, v, zp, _scalar11(qmin), _scalar11(qmax))
+
+
+def _adaquant_bwd_kernel(
+    w_ref, s1_ref, v_ref, zp_ref, g_ref, qmin_ref, qmax_ref, dv_ref, ds1f_ref
+):
+    qmin = qmin_ref[0, 0]
+    qmax = qmax_ref[0, 0]
+    w = w_ref[...]
+    s1 = s1_ref[...]
+    zp = zp_ref[...]
+    g = g_ref[...]
+    r_ = (w + v_ref[...]) / s1
+    n = jnp.round(r_) + zp
+    inside = ((n >= qmin) & (n <= qmax)).astype(w.dtype)
+    n_c = jnp.clip(n, qmin, qmax)
+    dv_ref[...] = g * inside
+    ds1f_ref[...] = g * ((n_c - zp) - inside * r_)
+
+
+def adaquant_bwd(w, s1, v, zp, g, qmin, qmax):
+    """Returns (dV, ds1_full); callers reduce ds1_full to s1's shape."""
+    r, c = w.shape
+    br, bc, gr, gc = _blocks(r, c)
+    return pl.pallas_call(
+        _adaquant_bwd_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((r, c), w.dtype),
+            jax.ShapeDtypeStruct((r, c), w.dtype),
+        ),
+        grid=(gr, gc),
+        in_specs=[
+            _tile_spec(br, bc),
+            _row_spec(br),
+            _tile_spec(br, bc),
+            _row_spec(br),
+            _tile_spec(br, bc),
+            _q_spec(),
+            _q_spec(),
+        ],
+        out_specs=(_tile_spec(br, bc), _tile_spec(br, bc)),
+        interpret=True,
+    )(w, s1, v, zp, g, _scalar11(qmin), _scalar11(qmax))
+
+
+# ---------------------------------------------------------------------------
+# AdaQuant ⊕ FlexRound (Appendix F)
+# ---------------------------------------------------------------------------
+
+def _aqfr_kernel(w_ref, s1_ref, v_ref, s2_ref, s3_ref, s4_ref, zp_ref, qmin_ref, qmax_ref, o_ref):
+    qmin = qmin_ref[0, 0]
+    qmax = qmax_ref[0, 0]
+    w = w_ref[...]
+    s1 = s1_ref[...]
+    zp = zp_ref[...]
+    div = s1 * s2_ref[...] * s3_ref[...] * s4_ref[...]
+    n = jnp.clip(jnp.round((w + v_ref[...]) / div) + zp, qmin, qmax)
+    o_ref[...] = s1 * (n - zp)
+
+
+def adaquant_flexround(w, s1, v, s2, s3, s4, zp, qmin, qmax):
+    r, c = w.shape
+    br, bc, gr, gc = _blocks(r, c)
+    return pl.pallas_call(
+        _aqfr_kernel,
+        out_shape=jax.ShapeDtypeStruct((r, c), w.dtype),
+        grid=(gr, gc),
+        in_specs=[
+            _tile_spec(br, bc),
+            _row_spec(br),
+            _tile_spec(br, bc),
+            _tile_spec(br, bc),
+            _row_spec(br),
+            _col_spec(bc),
+            _row_spec(br),
+            _q_spec(),
+            _q_spec(),
+        ],
+        out_specs=_tile_spec(br, bc),
+        interpret=True,
+    )(w, s1, v, s2, s3, s4, zp, _scalar11(qmin), _scalar11(qmax))
+
+
+# ---------------------------------------------------------------------------
+# LSQ activation fake-quant — operates on flattened (n, d) activations.
+# ---------------------------------------------------------------------------
+
+def _lsq_kernel(x_ref, step_ref, zp_ref, qmin_ref, qmax_ref, o_ref):
+    qmin = qmin_ref[0, 0]
+    qmax = qmax_ref[0, 0]
+    x = x_ref[...]
+    step = step_ref[...]
+    zp = zp_ref[...]
+    n = jnp.clip(jnp.round(x / step) + zp, qmin, qmax)
+    o_ref[...] = step * (n - zp)
+
+
+def lsq_act(x2d, step, zp, qmin, qmax):
+    """x2d: (n, d); step/zp: (1, 1) scalars (per-tensor activation quant)."""
+    n_, d = x2d.shape
+    bn = min(BLOCK_R, n_)
+    bd = min(BLOCK_R, d)
+    grid = (pl.cdiv(n_, bn), pl.cdiv(d, bd))
+    return pl.pallas_call(
+        _lsq_kernel,
+        out_shape=jax.ShapeDtypeStruct((n_, d), x2d.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            _q_spec(),
+            _q_spec(),
+        ],
+        out_specs=pl.BlockSpec((bn, bd), lambda i, j: (i, j)),
+        interpret=True,
+    )(x2d, step, zp, _scalar11(qmin), _scalar11(qmax))
+
+
+def _lsq_bwd_kernel(x_ref, step_ref, zp_ref, g_ref, qmin_ref, qmax_ref, dx_ref, dsf_ref):
+    qmin = qmin_ref[0, 0]
+    qmax = qmax_ref[0, 0]
+    x = x_ref[...]
+    step = step_ref[...]
+    zp = zp_ref[...]
+    g = g_ref[...]
+    r_ = x / step
+    n = jnp.round(r_) + zp
+    inside = ((n >= qmin) & (n <= qmax)).astype(x.dtype)
+    n_c = jnp.clip(n, qmin, qmax)
+    dx_ref[...] = g * inside
+    dsf_ref[...] = g * ((n_c - zp) - inside * r_)
+
+
+def lsq_act_bwd(x2d, step, zp, g, qmin, qmax):
+    """Returns (dx, dstep_full); caller sums dstep_full × LSQ grad scale."""
+    n_, d = x2d.shape
+    bn = min(BLOCK_R, n_)
+    bd = min(BLOCK_R, d)
+    grid = (pl.cdiv(n_, bn), pl.cdiv(d, bd))
+    return pl.pallas_call(
+        _lsq_bwd_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n_, d), x2d.dtype),
+            jax.ShapeDtypeStruct((n_, d), x2d.dtype),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((bn, bd), lambda i, j: (i, j)),
+            _q_spec(),
+            _q_spec(),
+        ],
+        out_specs=(
+            pl.BlockSpec((bn, bd), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, bd), lambda i, j: (i, j)),
+        ),
+        interpret=True,
+    )(x2d, step, zp, g, _scalar11(qmin), _scalar11(qmax))

@@ -1,0 +1,251 @@
+"""Layer-1 Pallas kernels for FlexRound fake quantization.
+
+Three kernels make up the PTQ hot path:
+
+* `flexround_fq`       — fused element-wise division → round → clamp → rescale
+                         (Eq. 2 of the paper) producing the fake-quantized Ŵ.
+* `flexround_fq_bwd`   — the STE backward pass: one fused pass produces the
+                         element-wise factors of every cotangent (Proposition
+                         3.1's reciprocal rule); the cheap row/col reductions
+                         happen in the surrounding jnp graph.
+* `flexround_matmul`   — fused fake-quant + contraction  Ŷ = X̃ · Ŵᵀ: the
+                         reconstruction loss ‖WX − ŴX̃‖²_F evaluates this every
+                         iteration, so Ŵ never round-trips to HBM per block.
+
+TPU adaptation (see DESIGN.md §Hardware-Adaptation): blocks are shaped
+`(BLOCK_R, BLOCK_C)` so a (W, S2) tile pair plus the per-row scales fit VMEM;
+the per-row factors (s1, s3, zero-point) broadcast along the lane dimension
+as sublane splats.  `interpret=True` everywhere — the CPU PJRT client cannot
+execute Mosaic custom-calls, and the lowered HLO is what the Rust runtime
+loads.
+
+All kernels take the canonical 2D layout described in `ref.py`; the per-row
+scales always arrive as `(r, 1)` arrays (callers broadcast scalars), and the
+unused factors arrive as ones so a single kernel serves every FlexRound
+variant (full, fixed-s1, no-s3s4 ablations).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes: the TPU VPU lane width is 128; eight sublanes of f32 per
+# register row.  (128, 128) f32 tiles are 64 KiB each — W, S2, the integer
+# tile and the output co-resident are ~256 KiB, far under the ~16 MiB VMEM
+# budget, leaving room for double-buffered HBM prefetch of the next tile.
+BLOCK_R = 128
+BLOCK_C = 128
+
+
+def _blocks(r: int, c: int):
+    br = min(BLOCK_R, r)
+    bc = min(BLOCK_C, c)
+    return br, bc, pl.cdiv(r, br), pl.cdiv(c, bc)
+
+
+# ---------------------------------------------------------------------------
+# Forward fake-quant
+# ---------------------------------------------------------------------------
+
+def _fq_kernel(w_ref, s1_ref, s2_ref, s3_ref, s4_ref, zp_ref, qmin_ref, qmax_ref, o_ref):
+    qmin = qmin_ref[0, 0]
+    qmax = qmax_ref[0, 0]
+    w = w_ref[...]
+    s1 = s1_ref[...]          # (br, 1) — sublane splat along lanes
+    s2 = s2_ref[...]
+    s3 = s3_ref[...]
+    s4 = s4_ref[...]          # (1, bc)
+    zp = zp_ref[...]
+    div = s1 * s2 * s3 * s4
+    n = jnp.round(w / div) + zp
+    n = jnp.clip(n, qmin, qmax)
+    o_ref[...] = s1 * (n - zp)
+
+
+def _fq_int_kernel(w_ref, s1_ref, s2_ref, s3_ref, s4_ref, zp_ref, qmin_ref, qmax_ref, o_ref):
+    qmin = qmin_ref[0, 0]
+    qmax = qmax_ref[0, 0]
+    w = w_ref[...]
+    div = s1_ref[...] * s2_ref[...] * s3_ref[...] * s4_ref[...]
+    n = jnp.round(w / div) + zp_ref[...]
+    o_ref[...] = jnp.clip(n, qmin, qmax)
+
+
+def _row_spec(br):
+    return pl.BlockSpec((br, 1), lambda i, j: (i, 0))
+
+
+def _col_spec(bc):
+    return pl.BlockSpec((1, bc), lambda i, j: (0, j))
+
+
+def _tile_spec(br, bc):
+    return pl.BlockSpec((br, bc), lambda i, j: (i, j))
+
+
+def _scalar11(x, dtype=None):
+    """Normalize a python/0-d scalar to the (1,1) array the kernels expect."""
+    import jax.numpy as _jnp
+    a = _jnp.asarray(x, dtype or _jnp.float32)
+    return a.reshape(1, 1)
+
+
+def _q_spec():
+    return pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+
+
+def _fq_call(kernel, w, s1, s2, s3, s4, zp, qmin, qmax):
+    r, c = w.shape
+    br, bc, gr, gc = _blocks(r, c)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((r, c), w.dtype),
+        grid=(gr, gc),
+        in_specs=[
+            _tile_spec(br, bc),   # W
+            _row_spec(br),        # s1
+            _tile_spec(br, bc),   # S2
+            _row_spec(br),        # s3
+            _col_spec(bc),        # s4
+            _row_spec(br),        # zero point
+            _q_spec(),            # qmin
+            _q_spec(),            # qmax
+        ],
+        out_specs=_tile_spec(br, bc),
+        interpret=True,
+    )(w, s1, s2, s3, s4, zp, _scalar11(qmin), _scalar11(qmax))
+
+
+def flexround_fq(w, s1, s2, s3, s4, zp, qmin, qmax):
+    """Fused FlexRound fake-quant.  s1/s3/zp: (r,1); s4: (1,c); S2: (r,c)."""
+    return _fq_call(_fq_kernel, w, s1, s2, s3, s4, zp, qmin, qmax)
+
+
+def flexround_fq_int(w, s1, s2, s3, s4, zp, qmin, qmax):
+    """Integer grid indices (for export / grid-shift analysis)."""
+    return _fq_call(_fq_int_kernel, w, s1, s2, s3, s4, zp, qmin, qmax)
+
+
+# ---------------------------------------------------------------------------
+# Backward (STE) — element-wise factors in one fused pass
+# ---------------------------------------------------------------------------
+
+def _fq_bwd_kernel(
+    w_ref, s1_ref, s2_ref, s3_ref, s4_ref, zp_ref, g_ref, qmin_ref, qmax_ref,
+    ds1f_ref, common_ref
+):
+    """Produces the two element-wise fields every cotangent reduces from:
+
+       ds1_full = g · ((n_c − z) − inside·r)         (LSQ-style grid-size grad)
+       common   = g · s1 · inside · (−r)             (Prop. 3.1 numerator)
+
+    with  dS2 = common/S2,  ds3 = rowsum(common)/s3,  ds4 = colsum(common)/s4.
+    The divisions/reductions are O(r+c) work left to XLA fusion outside.
+    """
+    qmin = qmin_ref[0, 0]
+    qmax = qmax_ref[0, 0]
+    w = w_ref[...]
+    s1 = s1_ref[...]
+    div = s1 * s2_ref[...] * s3_ref[...] * s4_ref[...]
+    zp = zp_ref[...]
+    g = g_ref[...]
+    r_ = w / div
+    n = jnp.round(r_) + zp
+    inside = ((n >= qmin) & (n <= qmax)).astype(w.dtype)
+    n_c = jnp.clip(n, qmin, qmax)
+    ds1f_ref[...] = g * ((n_c - zp) - inside * r_)
+    common_ref[...] = g * s1 * inside * (-r_)
+
+
+def flexround_fq_bwd(w, s1, s2, s3, s4, zp, g, qmin, qmax):
+    """Fused element-wise backward; returns (ds1_full, common)."""
+    r, c = w.shape
+    br, bc, gr, gc = _blocks(r, c)
+    return pl.pallas_call(
+        _fq_bwd_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((r, c), w.dtype),
+            jax.ShapeDtypeStruct((r, c), w.dtype),
+        ),
+        grid=(gr, gc),
+        in_specs=[
+            _tile_spec(br, bc),
+            _row_spec(br),
+            _tile_spec(br, bc),
+            _row_spec(br),
+            _col_spec(bc),
+            _row_spec(br),
+            _tile_spec(br, bc),
+            _q_spec(),
+            _q_spec(),
+        ],
+        out_specs=(_tile_spec(br, bc), _tile_spec(br, bc)),
+        interpret=True,
+    )(w, s1, s2, s3, s4, zp, g, _scalar11(qmin), _scalar11(qmax))
+
+
+# ---------------------------------------------------------------------------
+# Fused fake-quant + matmul:  Ŷ = X̃ · Ŵᵀ
+# ---------------------------------------------------------------------------
+
+def _fq_matmul_kernel(
+    x_ref, w_ref, s1_ref, s2_ref, s3_ref, s4_ref, zp_ref, qmin_ref, qmax_ref, o_ref
+):
+    """One (batch-tile × row-tile) output block.  The Ŵ tile is produced
+    in-register and fed straight into the MXU-shaped contraction — it never
+    leaves VMEM.  K is kept whole per block (our layer widths fit VMEM); a
+    K-loop with an accumulator is the extension point for wider layers."""
+    qmin = qmin_ref[0, 0]
+    qmax = qmax_ref[0, 0]
+    w = w_ref[...]
+    s1 = s1_ref[...]
+    div = s1 * s2_ref[...] * s3_ref[...] * s4_ref[...]
+    zp = zp_ref[...]
+    n = jnp.clip(jnp.round(w / div) + zp, qmin, qmax)
+    w_hat = s1 * (n - zp)
+    o_ref[...] = jnp.dot(x_ref[...], w_hat.T, preferred_element_type=jnp.float32)
+
+
+def flexround_matmul(x, w, s1, s2, s3, s4, zp, qmin, qmax):
+    """x: (b, c) activations, w: (r, c) weights → (b, r)."""
+    b, c = x.shape
+    r, c2 = w.shape
+    assert c == c2, f"contraction mismatch {x.shape} vs {w.shape}"
+    bb = min(BLOCK_R, b)
+    br = min(BLOCK_R, r)
+    grid = (pl.cdiv(b, bb), pl.cdiv(r, br))
+    return pl.pallas_call(
+        _fq_matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, r), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, c), lambda i, j: (i, 0)),   # X̃ batch tile
+            pl.BlockSpec((br, c), lambda i, j: (j, 0)),   # W row tile
+            pl.BlockSpec((br, 1), lambda i, j: (j, 0)),   # s1
+            pl.BlockSpec((br, c), lambda i, j: (j, 0)),   # S2
+            pl.BlockSpec((br, 1), lambda i, j: (j, 0)),   # s3
+            pl.BlockSpec((1, c), lambda i, j: (0, 0)),    # s4
+            pl.BlockSpec((br, 1), lambda i, j: (j, 0)),   # zp
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),    # qmin
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),    # qmax
+        ],
+        out_specs=pl.BlockSpec((bb, br), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, w, s1, s2, s3, s4, zp, _scalar11(qmin), _scalar11(qmax))
+
+
+def vmem_bytes_estimate(r: int, c: int, batch: int = 0) -> int:
+    """Static VMEM footprint estimate for one grid step of the fused matmul
+    (or fake-quant when batch == 0).  Used by DESIGN/EXPERIMENTS §Perf and by
+    `aot.py` to refuse block shapes that would not fit a real TPU core."""
+    br = min(BLOCK_R, r)
+    bc = min(BLOCK_C, c)
+    tiles = 3  # W, S2, Ŵ/int tile
+    n = tiles * br * bc + 3 * br + bc
+    if batch:
+        bb = min(BLOCK_R, batch)
+        n += bb * bc + bb * br  # X̃ tile + output tile
+    return 4 * n

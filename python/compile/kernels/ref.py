@@ -1,0 +1,273 @@
+"""Pure-jnp oracles for every quantization kernel in this package.
+
+These are the *correctness ground truth* for the Pallas kernels: the pytest
+suite asserts `kernels.* ≈ ref.*` across shape / bit-width / scale sweeps,
+and the custom-VJP backward rules are checked against both finite
+differences of these oracles and the closed forms of Proposition 3.1 in the
+FlexRound paper (Lee et al., ICML 2023).
+
+Notation follows the paper (§3):
+
+    Ŵ = s1 · clip( round( W / (s1 ⊙ S2 ⊙ s3 [⊙ s4]) ), qmin, qmax )
+
+with `s1` a common (per-tensor scalar or per-channel row vector) grid size,
+`S2` an elementwise scale of W's shape, `s3` a per-output-channel scale and
+`s4` a per-input-channel scale (2D convolutions only).  All kernels here
+operate on the canonical 2D layout `(rows, cols) = (C_out, C_in·Kh·Kw)`;
+reshaping to/from conv layouts happens in `compile.quant`.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Rounding-to-nearest (RTN) — the no-learning baseline every method starts at.
+# ---------------------------------------------------------------------------
+
+def rtn(w, s1, qmin, qmax, zero_point=0.0):
+    """Symmetric/asymmetric rounding-to-nearest.
+
+    w        : (r, c) weights
+    s1       : scalar or (r, 1) grid size
+    zero_point: scalar or (r, 1) integer zero point (0 → symmetric)
+    """
+    n = jnp.round(w / s1) + zero_point
+    n = jnp.clip(n, qmin, qmax)
+    return s1 * (n - zero_point)
+
+
+def rtn_int(w, s1, qmin, qmax, zero_point=0.0):
+    """Integer grid indices produced by RTN (used by grid-shift analysis)."""
+    return jnp.clip(jnp.round(w / s1) + zero_point, qmin, qmax)
+
+
+# ---------------------------------------------------------------------------
+# FlexRound (Eq. 2 of the paper)
+# ---------------------------------------------------------------------------
+
+def flexround_divisor(s1, s2, s3=None, s4=None):
+    """S = s1 ⊙ S2 ⊙ s3 ⊙ s4 with broadcasting; `None` drops a factor."""
+    s = s1 * s2
+    if s3 is not None:
+        s = s * s3
+    if s4 is not None:
+        s = s * s4
+    return s
+
+
+def flexround(w, s1, s2, s3=None, s4=None, qmin=-8, qmax=7, zero_point=0.0):
+    """Forward fake-quant of FlexRound.
+
+    w  : (r, c)
+    s1 : scalar or (r, 1)      — learnable grid size
+    s2 : (r, c)                — learnable elementwise divisor
+    s3 : (r, 1) or None        — learnable per-output-channel scale
+    s4 : (1, c) or None        — learnable per-input-channel scale (convs;
+                                 already expanded to the flattened column
+                                 layout by the caller)
+    zero_point: 0 for the symmetric scheme; fixed asymmetric offset otherwise.
+    """
+    div = flexround_divisor(s1, s2, s3, s4)
+    n = jnp.round(w / div) + zero_point
+    n = jnp.clip(n, qmin, qmax)
+    return s1 * (n - zero_point)
+
+
+def flexround_int(w, s1, s2, s3=None, s4=None, qmin=-8, qmax=7, zero_point=0.0):
+    div = flexround_divisor(s1, s2, s3, s4)
+    return jnp.clip(jnp.round(w / div) + zero_point, qmin, qmax)
+
+
+def flexround_bwd(w, s1, s2, s3, s4, qmin, qmax, zero_point, g):
+    """Closed-form STE cotangents (Proposition 3.1 + the s1 chain rule).
+
+    Returns (ds1, dS2, ds3, ds4) matching the parameter shapes.  The
+    straight-through estimator treats round(·) as identity inside the clip
+    range; outside the range the rounding path contributes nothing but the
+    `s1 · (n_c − z)` product-rule term survives.
+    """
+    div = flexround_divisor(s1, s2, s3, s4)
+    r = w / div
+    n = jnp.round(r) + zero_point
+    inside = ((n >= qmin) & (n <= qmax)).astype(w.dtype)
+    n_c = jnp.clip(n, qmin, qmax)
+
+    # dŴ/ds1 = (n_c − z) + s1 · mask · ∂r/∂s1,  ∂r/∂s1 = −r/s1
+    ds1_full = g * ((n_c - zero_point) - inside * r)
+    if jnp.ndim(s1) == 0:
+        ds1 = jnp.sum(ds1_full)
+    else:
+        ds1 = jnp.sum(ds1_full, axis=1, keepdims=True)
+
+    # dŴ/dS2 = s1 · mask · (−r / S2)  — Proposition 3.1: ∝ −W/S'² · ∂L/∂Ŵ
+    common = g * s1 * inside * (-r)
+    ds2 = common / s2
+
+    ds3 = None
+    if s3 is not None:
+        ds3 = jnp.sum(common / s3, axis=1, keepdims=True)
+    ds4 = None
+    if s4 is not None:
+        ds4 = jnp.sum(common / s4, axis=0, keepdims=True)
+    return ds1, ds2, ds3, ds4
+
+
+# ---------------------------------------------------------------------------
+# AdaRound (Nagel et al., 2020) — element-wise addition baseline.
+# ---------------------------------------------------------------------------
+
+ADAROUND_GAMMA = -0.1
+ADAROUND_ZETA = 1.2
+
+
+def sigmoid(v):
+    return 1.0 / (1.0 + jnp.exp(-v))
+
+
+def adaround_h(v):
+    """Rectified sigmoid h(V) = clip(σ(V)·(ζ−γ) + γ, 0, 1)."""
+    return jnp.clip(sigmoid(v) * (ADAROUND_ZETA - ADAROUND_GAMMA) + ADAROUND_GAMMA, 0.0, 1.0)
+
+
+def adaround_init_v(w, s1):
+    """Initialize V so that h(V) equals the fractional part of W/s1 — i.e.
+    AdaRound's soft quantizer starts at the rounding-to-nearest solution."""
+    frac = w / s1 - jnp.floor(w / s1)
+    frac = jnp.clip(frac, 1e-4, 1.0 - 1e-4)
+    p = (frac - ADAROUND_GAMMA) / (ADAROUND_ZETA - ADAROUND_GAMMA)
+    return -jnp.log(1.0 / p - 1.0)
+
+
+def adaround(w, s1, v, qmin, qmax, zero_point=0.0, hard=False):
+    """Ŵ = s1 · (clip(floor(W/s1) + h(V) + z, qmin, qmax) − z).
+
+    `hard=True` snaps h(V) to {0,1} — the deployment-time rounding."""
+    h = adaround_h(v)
+    if hard:
+        h = (h >= 0.5).astype(w.dtype)
+    n = jnp.floor(w / s1) + h + zero_point
+    n = jnp.clip(n, qmin, qmax)
+    return s1 * (n - zero_point)
+
+
+def adaround_reg(v, beta):
+    """f_reg(V) = Σ 1 − |2h(V) − 1|^β  (annealed β; pulls h to {0,1})."""
+    h = adaround_h(v)
+    return jnp.sum(1.0 - jnp.abs(2.0 * h - 1.0) ** beta)
+
+
+def adaround_bwd(w, s1, v, qmin, qmax, zero_point, g):
+    """STE cotangent for V (s1 is fixed in AdaRound)."""
+    h_raw = sigmoid(v) * (ADAROUND_ZETA - ADAROUND_GAMMA) + ADAROUND_GAMMA
+    mask_h = ((h_raw > 0.0) & (h_raw < 1.0)).astype(w.dtype)
+    dh = sigmoid(v) * (1.0 - sigmoid(v)) * (ADAROUND_ZETA - ADAROUND_GAMMA) * mask_h
+    n = jnp.floor(w / s1) + adaround_h(v) + zero_point
+    inside = ((n >= qmin) & (n <= qmax)).astype(w.dtype)
+    return g * s1 * inside * dh
+
+
+# ---------------------------------------------------------------------------
+# AdaQuant (Hubara et al., 2021) — learn s1 and an additive perturbation V.
+# ---------------------------------------------------------------------------
+
+def adaquant(w, s1, v, qmin, qmax, zero_point=0.0):
+    n = jnp.round((w + v) / s1) + zero_point
+    n = jnp.clip(n, qmin, qmax)
+    return s1 * (n - zero_point)
+
+
+def adaquant_bwd(w, s1, v, qmin, qmax, zero_point, g):
+    r = (w + v) / s1
+    n = jnp.round(r) + zero_point
+    inside = ((n >= qmin) & (n <= qmax)).astype(w.dtype)
+    n_c = jnp.clip(n, qmin, qmax)
+    dv = g * inside
+    ds1_full = g * ((n_c - zero_point) - inside * r)
+    ds1 = jnp.sum(ds1_full) if jnp.ndim(s1) == 0 else jnp.sum(ds1_full, axis=1, keepdims=True)
+    return ds1, dv
+
+
+# ---------------------------------------------------------------------------
+# AdaQuant + FlexRound combination (Appendix F)
+# ---------------------------------------------------------------------------
+
+def adaquant_flexround(w, s1, v, s2, s3=None, s4=None, qmin=-8, qmax=7, zero_point=0.0):
+    """Ŵ = s1·(clip(round((W+V)/(s1⊙S2⊙s3⊙s4)) + z, qmin, qmax) − z) — the
+    naive union of an additive perturbation with the divisive scales."""
+    div = flexround_divisor(s1, s2, s3, s4)
+    n = jnp.round((w + v) / div) + zero_point
+    n = jnp.clip(n, qmin, qmax)
+    return s1 * (n - zero_point)
+
+
+# ---------------------------------------------------------------------------
+# LSQ activation fake-quant (Esser et al., 2020), the "A" in W/A bits.
+# ---------------------------------------------------------------------------
+
+def lsq_act(x, step, qmin, qmax, zero_point=0.0):
+    n = jnp.round(x / step) + zero_point
+    n = jnp.clip(n, qmin, qmax)
+    return step * (n - zero_point)
+
+
+def lsq_grad_scale(x, qmax):
+    """LSQ gradient scale 1/√(N·qmax)."""
+    return 1.0 / jnp.sqrt(x.size * jnp.maximum(jnp.asarray(qmax, jnp.float32), 1.0))
+
+
+def lsq_act_bwd(x, step, qmin, qmax, zero_point, g):
+    r = x / step
+    n = jnp.round(r) + zero_point
+    inside = ((n >= qmin) & (n <= qmax)).astype(x.dtype)
+    n_c = jnp.clip(n, qmin, qmax)
+    dx = g * inside
+    gscale = lsq_grad_scale(x, qmax)
+    dstep = jnp.sum(g * ((n_c - zero_point) - inside * r)) * gscale
+    return dx, dstep
+
+
+# ---------------------------------------------------------------------------
+# Fused fake-quant + matmul — the reconstruction hot path  Ŷ = X̃ · Ŵᵀ
+# ---------------------------------------------------------------------------
+
+def flexround_matmul(w, s1, s2, s3, s4, qmin, qmax, zero_point, x):
+    """Reference for the fused kernel: fake-quant W then contract with X̃.
+
+    x : (batch, c) activations; returns (batch, r)."""
+    w_hat = flexround(w, s1, s2, s3, s4, qmin, qmax, zero_point)
+    return x @ w_hat.T
+
+
+# ---------------------------------------------------------------------------
+# Quantization grid helpers
+# ---------------------------------------------------------------------------
+
+def qrange(bits: int, symmetric: bool):
+    """Integer grid limits for a bit-width.  Symmetric grids are the signed
+    two's-complement range; asymmetric grids are unsigned [0, 2^b − 1]."""
+    if symmetric:
+        return -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    return 0, 2**bits - 1
+
+
+def minmax_scale(w, bits: int, symmetric: bool, per_channel: bool = False):
+    """Min/max calibration of (s1, zero_point) — the init every learnable
+    method starts from.  Returns (s1, zero_point) with shapes () / (r,1)."""
+    qmin, qmax = qrange(bits, symmetric)
+    axis = 1 if per_channel else None
+    if symmetric:
+        amax = jnp.max(jnp.abs(w), axis=axis, keepdims=per_channel)
+        s1 = jnp.maximum(amax / qmax, 1e-8)
+        zp = jnp.zeros_like(s1)
+    else:
+        wmax = jnp.max(w, axis=axis, keepdims=per_channel)
+        wmin = jnp.min(w, axis=axis, keepdims=per_channel)
+        s1 = jnp.maximum((wmax - wmin) / (qmax - qmin), 1e-8)
+        # zp maps wmin → qmin; deliberately NOT clamped to the grid so
+        # one-sided data keeps its full range under fake quantization.
+        zp = qmin - jnp.round(wmin / s1)
+    if not per_channel:
+        s1 = jnp.reshape(s1, ())
+        zp = jnp.reshape(zp, ())
+    return s1, zp

@@ -1,0 +1,621 @@
+"""Model zoo — the pre-trained networks that get post-training-quantized.
+
+The zoo mirrors the paper's experimental matrix at laptop scale (see
+DESIGN.md "Substitutions"):
+
+  CNNs (ImageNet analogs)         : tinyresnet_a (ResNet-18), tinyresnet_b
+                                    (ResNet-50 bottlenecks), tinymobilenet
+                                    (MobileNetV2 inverted residuals, ReLU6)
+  Encoders (BERT/GPT-Neo on GLUE) : enc_small, enc_base (+ span head variant)
+  Decoders (GPT-Neo/OPT/GPT-2)    : dec_small, dec_med, dec_lora (LoRA-merged)
+  LLM analog (LLaMA)              : llm_mini
+
+Everything is expressed as a normalized **QModel**: an ordered list of
+reconstruction units (`QUnit`), each holding its quantizable layers
+(`QLayer`) plus full-precision auxiliaries (LayerNorm/BN-folded biases).
+`compile.graphs` builds the fp/quantized unit functions from this structure,
+`compile.train` trains into it, and `compile.aot` serializes it for the Rust
+coordinator.
+
+Layout conventions: images NHWC, conv weights HWIO, linear weights (out, in),
+token activations (batch, seq, d).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data as D
+
+# ---------------------------------------------------------------------------
+# Normalized quantization-facing model structure
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class QLayer:
+    name: str
+    kind: str                  # "conv" | "dwconv" | "linear"
+    wshape: Tuple[int, ...]    # conv HWIO / linear (out, in)
+    stride: int = 1
+    relu6: bool = False        # activation following this layer inside the unit
+
+
+@dataclass
+class QUnit:
+    name: str
+    kind: str                  # stem_conv | res_block | bottleneck_block |
+                               # invres_block | head_conv | txl
+    layers: List[QLayer]
+    meta: Dict = field(default_factory=dict)
+    bits_override: Optional[int] = None   # CNN first/last units pin 8-bit
+
+
+@dataclass
+class QModel:
+    name: str
+    kind: str                  # "cnn" | "encoder" | "decoder"
+    units: List[QUnit]
+    meta: Dict = field(default_factory=dict)
+
+    def unit(self, name: str) -> QUnit:
+        for u in self.units:
+            if u.name == name:
+                return u
+        raise KeyError(name)
+
+
+# ---------------------------------------------------------------------------
+# Primitive ops
+# ---------------------------------------------------------------------------
+
+def conv2d(x, w, b, stride=1, groups=1):
+    """NHWC x, HWIO w, SAME padding."""
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+    return y + b
+
+
+def linear(x, w, b):
+    """x (..., in) · w(out, in)ᵀ + b."""
+    return x @ w.T + b
+
+
+def layernorm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def attention(q, k, v, causal: bool, nheads: int):
+    """q/k/v: (B, T, D) → (B, T, D), multi-head with D = nheads·dh."""
+    b, t, dmodel = q.shape
+    dh = dmodel // nheads
+
+    def split(x):
+        return x.reshape(b, t, nheads, dh).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = split(q), split(k), split(v)
+    att = (qh @ kh.transpose(0, 1, 3, 2)) / jnp.sqrt(dh).astype(q.dtype)
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        att = jnp.where(mask, att, jnp.float32(-1e9))
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ vh).transpose(0, 2, 1, 3).reshape(b, t, dmodel)
+    return out
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def relu6(x):
+    return jnp.clip(x, 0.0, 6.0)
+
+
+def gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608 * (x + 0.044715 * x**3)))
+
+
+# ---------------------------------------------------------------------------
+# Unit topologies — one forward function per unit kind.
+#
+# `ws`/`bs` are the (possibly fake-quantized) layer weights in QUnit.layers
+# order; `aux` carries full-precision constants (LN params); `actq` is a
+# callable applied to the *input of every quantizable layer* (identity when
+# activations are kept fp, LSQ fake-quant + optional QDrop during W/A PTQ).
+# ---------------------------------------------------------------------------
+
+def _act(x, layer: QLayer):
+    return relu6(x) if layer.relu6 else relu(x)
+
+
+def apply_unit(unit: QUnit, ws, bs, aux, x, actq=None):
+    actq = actq or (lambda t, i: t)
+    k = unit.kind
+    if k == "stem_conv":
+        (l0,) = unit.layers
+        return _act(conv2d(actq(x, 0), ws[0], bs[0], l0.stride), l0)
+    if k == "res_block":
+        # conv1 → relu → conv2 (+ projection shortcut when shapes change)
+        y = relu(conv2d(actq(x, 0), ws[0], bs[0], unit.layers[0].stride))
+        y = conv2d(actq(y, 1), ws[1], bs[1], unit.layers[1].stride)
+        if len(unit.layers) == 3:
+            sc = conv2d(actq(x, 2), ws[2], bs[2], unit.layers[2].stride)
+        else:
+            sc = x
+        return relu(y + sc)
+    if k == "bottleneck_block":
+        y = relu(conv2d(actq(x, 0), ws[0], bs[0], 1))
+        y = relu(conv2d(actq(y, 1), ws[1], bs[1], unit.layers[1].stride))
+        y = conv2d(actq(y, 2), ws[2], bs[2], 1)
+        if len(unit.layers) == 4:
+            sc = conv2d(actq(x, 3), ws[3], bs[3], unit.layers[3].stride)
+        else:
+            sc = x
+        return relu(y + sc)
+    if k == "invres_block":
+        # 1×1 expand → act → depthwise 3×3 → act → 1×1 project (+skip);
+        # the activation follows each layer's relu6 flag so the CLE
+        # preprocessing (ReLU6 → ReLU) changes the executed topology too.
+        y = _act(conv2d(actq(x, 0), ws[0], bs[0], 1), unit.layers[0])
+        y = _act(conv2d(actq(y, 1), ws[1], bs[1], unit.layers[1].stride,
+                        groups=y.shape[-1]), unit.layers[1])
+        y = conv2d(actq(y, 2), ws[2], bs[2], 1)
+        if unit.meta.get("skip", False):
+            y = y + x
+        return y
+    if k == "head_conv":
+        (l0,) = unit.layers
+        return _act(conv2d(actq(x, 0), ws[0], bs[0], 1), l0)
+    if k == "txl":
+        # pre-LN transformer layer; aux = (ln1_g, ln1_b, ln2_g, ln2_b)
+        ln1g, ln1b, ln2g, ln2b = aux
+        h = layernorm(x, ln1g, ln1b)
+        q = linear(actq(h, 0), ws[0], bs[0])
+        kk = linear(actq(h, 1), ws[1], bs[1])
+        v = linear(actq(h, 2), ws[2], bs[2])
+        a = attention(q, kk, v, unit.meta["causal"], unit.meta["nheads"])
+        x = x + linear(actq(a, 3), ws[3], bs[3])
+        h2 = layernorm(x, ln2g, ln2b)
+        f = gelu(linear(actq(h2, 4), ws[4], bs[4]))
+        return x + linear(actq(f, 5), ws[5], bs[5])
+    raise ValueError(f"unknown unit kind {k!r}")
+
+
+# ---------------------------------------------------------------------------
+# CNN model specs
+# ---------------------------------------------------------------------------
+
+def _conv_layer(name, kh, cin, cout, stride=1, relu6_=False, dw=False):
+    if dw:
+        return QLayer(name, "dwconv", (kh, kh, 1, cout), stride, relu6_)
+    return QLayer(name, "conv", (kh, kh, cin, cout), stride, relu6_)
+
+
+def tinyresnet_a() -> QModel:
+    """ResNet-18 analog: basic residual blocks, 2 stages, |W| < 1 regime."""
+    units = [
+        QUnit("stem", "stem_conv", [_conv_layer("conv", 3, 3, 16)], bits_override=8),
+        QUnit("s1b1", "res_block",
+              [_conv_layer("conv1", 3, 16, 16), _conv_layer("conv2", 3, 16, 16)]),
+        QUnit("s1b2", "res_block",
+              [_conv_layer("conv1", 3, 16, 16), _conv_layer("conv2", 3, 16, 16)]),
+        QUnit("s2b1", "res_block",
+              [_conv_layer("conv1", 3, 16, 32, stride=2),
+               _conv_layer("conv2", 3, 32, 32),
+               _conv_layer("proj", 1, 16, 32, stride=2)]),
+        QUnit("s2b2", "res_block",
+              [_conv_layer("conv1", 3, 32, 32), _conv_layer("conv2", 3, 32, 32)]),
+    ]
+    head = QUnit("head", "head_fc", [QLayer("fc", "linear", (D.IMG_CLASSES, 32))],
+                 bits_override=8)
+    units.append(head)
+    return QModel("tinyresnet_a", "cnn", units,
+                  meta={"input": "image", "classes": D.IMG_CLASSES})
+
+
+def tinyresnet_b() -> QModel:
+    """ResNet-50 analog: bottleneck blocks (1×1 → 3×3 → 1×1)."""
+    def bottleneck(name, cin, cmid, cout, stride=1, proj=False):
+        layers = [
+            _conv_layer("conv1", 1, cin, cmid),
+            _conv_layer("conv2", 3, cmid, cmid, stride=stride),
+            _conv_layer("conv3", 1, cmid, cout),
+        ]
+        if proj:
+            layers.append(_conv_layer("proj", 1, cin, cout, stride=stride))
+        return QUnit(name, "bottleneck_block", layers)
+
+    units = [
+        QUnit("stem", "stem_conv", [_conv_layer("conv", 3, 3, 16)], bits_override=8),
+        bottleneck("s1b1", 16, 8, 32, proj=True),
+        bottleneck("s1b2", 32, 8, 32),
+        bottleneck("s2b1", 32, 16, 64, stride=2, proj=True),
+        bottleneck("s2b2", 64, 16, 64),
+        QUnit("head", "head_fc", [QLayer("fc", "linear", (D.IMG_CLASSES, 64))],
+              bits_override=8),
+    ]
+    return QModel("tinyresnet_b", "cnn", units,
+                  meta={"input": "image", "classes": D.IMG_CLASSES})
+
+
+def tinymobilenet() -> QModel:
+    """MobileNetV2 analog: inverted residuals, depthwise convs, ReLU6 —
+    the architecture whose large-magnitude weights exercise FlexRound's
+    flexibility claim (paper Fig. 3a)."""
+    def invres(name, cin, cout, stride=1, exp=4):
+        cmid = cin * exp
+        return QUnit(name, "invres_block", [
+            _conv_layer("expand", 1, cin, cmid, relu6_=True),
+            _conv_layer("dw", 3, cmid, cmid, stride=stride, relu6_=True, dw=True),
+            _conv_layer("project", 1, cmid, cout),
+        ], meta={"skip": cin == cout and stride == 1})
+
+    units = [
+        QUnit("stem", "stem_conv", [_conv_layer("conv", 3, 3, 8, relu6_=True)],
+              bits_override=8),
+        invres("b1", 8, 16),
+        invres("b2", 16, 16),
+        invres("b3", 16, 32, stride=2),
+        invres("b4", 32, 32),
+        QUnit("hconv", "head_conv", [_conv_layer("conv", 1, 32, 64, relu6_=True)]),
+        QUnit("head", "head_fc", [QLayer("fc", "linear", (D.IMG_CLASSES, 64))],
+              bits_override=8),
+    ]
+    return QModel("tinymobilenet", "cnn", units,
+                  meta={"input": "image", "classes": D.IMG_CLASSES})
+
+
+# ---------------------------------------------------------------------------
+# Transformer model specs
+# ---------------------------------------------------------------------------
+
+def _txl_unit(name, d, nheads, causal, dff=None) -> QUnit:
+    dff = dff or 4 * d
+    return QUnit(name, "txl", [
+        QLayer("wq", "linear", (d, d)),
+        QLayer("wk", "linear", (d, d)),
+        QLayer("wv", "linear", (d, d)),
+        QLayer("wo", "linear", (d, d)),
+        QLayer("fc1", "linear", (dff, d)),
+        QLayer("fc2", "linear", (d, dff)),
+    ], meta={"causal": causal, "nheads": nheads, "d": d, "dff": dff})
+
+
+def transformer(name: str, kind: str, vocab: int, seq: int, d: int,
+                nlayers: int, nheads: int, head: str, nclasses: int = 2) -> QModel:
+    causal = kind == "decoder"
+    units = [_txl_unit(f"l{i}", d, nheads, causal) for i in range(nlayers)]
+    return QModel(name, kind, units, meta={
+        "input": "tokens", "vocab": vocab, "seq": seq, "d": d,
+        "nheads": nheads, "head": head, "nclasses": nclasses,
+    })
+
+
+def enc_small():
+    """BERT-base analog: multi-task NLU encoder (all GLUE-analog heads)."""
+    return transformer("enc_small", "encoder", D.NLU_VOCAB, D.NLU_SEQ,
+                       48, 2, 2, "multi")
+
+
+def enc_base():
+    """BERT-large / GPT-Neo analog: the bigger NLU encoder."""
+    return transformer("enc_base", "encoder", D.NLU_VOCAB, D.NLU_SEQ,
+                       96, 3, 4, "multi")
+
+
+def dec_small(corpus="lm-a"):
+    return transformer(f"dec_small_{corpus.replace('-', '')}", "decoder",
+                       D.LM_VOCAB, D.LM_SEQ, 48, 2, 2, "lm")
+
+
+def dec_med(corpus="lm-a"):
+    return transformer(f"dec_med_{corpus.replace('-', '')}", "decoder",
+                       D.LM_VOCAB, D.LM_SEQ, 96, 3, 4, "lm")
+
+
+def dec_lora():
+    return transformer("dec_lora", "decoder", D.D2T_VOCAB, D.D2T_SEQ, 48, 2, 2, "lm")
+
+
+def llm_mini():
+    return transformer("llm_mini", "decoder", D.LM_VOCAB, D.LM_SEQ, 128, 4, 4, "lm")
+
+
+def _alt(builder, name):
+    """Alternate-checkpoint variants (Tables 8/9: the 'official PyTorch'
+    pre-trained models) — same architecture, different training seed."""
+    def build():
+        m = builder()
+        m.name = name
+        return m
+    return build
+
+
+MODEL_BUILDERS = {
+    "tinyresnet_a": tinyresnet_a,
+    "tinyresnet_b": tinyresnet_b,
+    "tinymobilenet": tinymobilenet,
+    "tinyresnet_a_alt": _alt(tinyresnet_a, "tinyresnet_a_alt"),
+    "tinyresnet_b_alt": _alt(tinyresnet_b, "tinyresnet_b_alt"),
+    "tinymobilenet_alt": _alt(tinymobilenet, "tinymobilenet_alt"),
+    "enc_small": enc_small,
+    "enc_base": enc_base,
+    "dec_small_lma": lambda: dec_small("lm-a"),
+    "dec_small_lmb": lambda: dec_small("lm-b"),
+    "dec_med_lma": lambda: dec_med("lm-a"),
+    "dec_med_lmb": lambda: dec_med("lm-b"),
+    "dec_lora": dec_lora,
+    "llm_mini": llm_mini,
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter init / forward pass over the whole model
+#
+# Params pytree:
+#   {"units": {uname: {"layers": {lname: {"w","b"}}, "aux": [...], "bn": {...}}},
+#    "pre": {...embedding...}, "head": {...}}
+# BN is train-time only; `fold_bn` bakes it into (w, b) at export.
+# ---------------------------------------------------------------------------
+
+def init_model(model: QModel, seed: int, init_gain: float = 1.0):
+    rng = np.random.default_rng(seed)
+    params = {"units": {}, "pre": {}, "head": {}}
+    for u in model.units:
+        if u.kind == "head_fc":
+            (l0,) = u.layers
+            fan_in = l0.wshape[1]
+            params["head"]["fc_w"] = _he(rng, l0.wshape, fan_in)
+            params["head"]["fc_b"] = np.zeros(l0.wshape[0], np.float32)
+            continue
+        up = {"layers": {}, "aux": [], "bn": {}}
+        for l in u.layers:
+            if l.kind == "linear":
+                fan_in = l.wshape[1]
+            elif l.kind == "dwconv":
+                fan_in = l.wshape[0] * l.wshape[1]
+            else:
+                fan_in = l.wshape[0] * l.wshape[1] * l.wshape[2]
+            gain = init_gain if l.kind == "dwconv" else 1.0
+            up["layers"][l.name] = {
+                "w": _he(rng, l.wshape, fan_in, gain),
+                "b": np.zeros(_cout(l), np.float32),
+            }
+            if model.kind == "cnn":
+                up["bn"][l.name] = _bn_init(_cout(l))
+        if u.kind == "txl":
+            d = u.meta["d"]
+            up["aux"] = [np.ones(d, np.float32), np.zeros(d, np.float32),
+                         np.ones(d, np.float32), np.zeros(d, np.float32)]
+        params["units"][u.name] = up
+    if model.meta.get("input") == "tokens":
+        v, s, d = model.meta["vocab"], model.meta["seq"], model.meta["d"]
+        params["pre"]["tok"] = (rng.normal(0, 0.02, (v, d))).astype(np.float32)
+        params["pre"]["pos"] = (rng.normal(0, 0.02, (s, d))).astype(np.float32)
+        params["head"]["ln_g"] = np.ones(d, np.float32)
+        params["head"]["ln_b"] = np.zeros(d, np.float32)
+        hd = model.meta["head"]
+        if hd == "lm":
+            params["head"]["out_w"] = (rng.normal(0, 0.02, (v, d))).astype(np.float32)
+            params["head"]["out_b"] = np.zeros(v, np.float32)
+        elif hd == "cls":
+            nc = model.meta["nclasses"]
+            params["head"]["out_w"] = (rng.normal(0, 0.05, (nc, d))).astype(np.float32)
+            params["head"]["out_b"] = np.zeros(nc, np.float32)
+        elif hd == "span":
+            params["head"]["start_w"] = (rng.normal(0, 0.05, (1, d))).astype(np.float32)
+            params["head"]["end_w"] = (rng.normal(0, 0.05, (1, d))).astype(np.float32)
+        elif hd == "multi":
+            # multi-task encoder: one classification head per NLU task plus a
+            # span-extraction head (SQuAD analog); the backbone is shared and
+            # quantized once, as in the paper's per-task fine-tuned BERTs.
+            for task in D.NLU_TASKS:
+                params["head"][f"{task}_w"] = (rng.normal(0, 0.05, (2, d))).astype(np.float32)
+                params["head"][f"{task}_b"] = np.zeros(2, np.float32)
+            params["head"]["span_start_w"] = (rng.normal(0, 0.05, (1, d))).astype(np.float32)
+            params["head"]["span_end_w"] = (rng.normal(0, 0.05, (1, d))).astype(np.float32)
+    return jax.tree_util.tree_map(jnp.asarray, params)
+
+
+def _he(rng, shape, fan_in, gain=1.0):
+    return (rng.normal(0, gain * np.sqrt(2.0 / fan_in), shape)).astype(np.float32)
+
+
+def _cout(l: QLayer):
+    return l.wshape[0] if l.kind == "linear" else l.wshape[3]
+
+
+def _bn_init(c):
+    return {"g": np.ones(c, np.float32), "b": np.zeros(c, np.float32),
+            "mean": np.zeros(c, np.float32), "var": np.ones(c, np.float32)}
+
+
+# --- training-time forward (with BN batch stats for CNNs) -------------------
+
+def _bn_apply(y, bn, train: bool, eps=1e-5):
+    if train:
+        mu = y.mean(axis=(0, 1, 2))
+        var = y.var(axis=(0, 1, 2))
+    else:
+        mu, var = bn["mean"], bn["var"]
+    yn = (y - mu) / jnp.sqrt(var + eps)
+    return yn * bn["g"] + bn["b"], (mu, var)
+
+
+def forward_train(model: QModel, params, x, train: bool = True, task: str = None):
+    """Full forward pass for pre-training.  CNNs run conv→BN→act inside each
+    unit (BN folded away at export); transformers run the QModel topology
+    directly.  Returns (output, batch_stats) where batch_stats maps
+    unit/layer → (mean, var) for EMA tracking."""
+    stats = {}
+    if model.kind == "cnn":
+        h = x
+        for u in model.units:
+            if u.kind == "head_fc":
+                continue
+            up = params["units"][u.name]
+            h = _apply_cnn_unit_train(u, up, h, train, stats)
+        h = h.mean(axis=(1, 2))
+        logits = linear(h, params["head"]["fc_w"], params["head"]["fc_b"])
+        return logits, stats
+    # transformers
+    emb = params["pre"]["tok"][x] + params["pre"]["pos"][None, : x.shape[1]]
+    h = emb
+    for u in model.units:
+        up = params["units"][u.name]
+        ws = [up["layers"][l.name]["w"] for l in u.layers]
+        bs = [up["layers"][l.name]["b"] for l in u.layers]
+        h = apply_unit(u, ws, bs, up["aux"], h)
+    h = layernorm(h, params["head"]["ln_g"], params["head"]["ln_b"])
+    hd = model.meta["head"]
+    if hd == "lm":
+        return linear(h, params["head"]["out_w"], params["head"]["out_b"]), stats
+    if hd == "cls":
+        pooled = h.mean(axis=1)
+        return linear(pooled, params["head"]["out_w"], params["head"]["out_b"]), stats
+    if hd == "span":
+        s_log = (h @ params["head"]["start_w"].T)[..., 0]
+        e_log = (h @ params["head"]["end_w"].T)[..., 0]
+        return (s_log, e_log), stats
+    if hd == "multi":
+        if task == "span":
+            s_log = (h @ params["head"]["span_start_w"].T)[..., 0]
+            e_log = (h @ params["head"]["span_end_w"].T)[..., 0]
+            return (s_log, e_log), stats
+        pooled = h.mean(axis=1)
+        return linear(pooled, params["head"][f"{task}_w"],
+                      params["head"][f"{task}_b"]), stats
+    raise ValueError(hd)
+
+
+def _apply_cnn_unit_train(u: QUnit, up, x, train, stats):
+    """Train-time CNN unit: conv → BN → activation per layer, following the
+    same topology `apply_unit` uses post-folding."""
+    def cb(name, xin, stride=1, groups=1, act=None):
+        l = next(l for l in u.layers if l.name == name)
+        p = up["layers"][name]
+        y = conv2d(xin, p["w"], p["b"], stride, groups)
+        y, ms = _bn_apply(y, up["bn"][name], train)
+        stats[(u.name, name)] = ms
+        if act == "relu":
+            y = relu(y)
+        elif act == "relu6":
+            y = relu6(y)
+        return y
+
+    if u.kind == "stem_conv":
+        l0 = u.layers[0]
+        return cb("conv", x, l0.stride, act="relu6" if l0.relu6 else "relu")
+    if u.kind == "res_block":
+        y = cb("conv1", x, u.layers[0].stride, act="relu")
+        y = cb("conv2", y)
+        sc = cb("proj", x, u.layers[2].stride) if len(u.layers) == 3 else x
+        return relu(y + sc)
+    if u.kind == "bottleneck_block":
+        y = cb("conv1", x, act="relu")
+        y = cb("conv2", y, u.layers[1].stride, act="relu")
+        y = cb("conv3", y)
+        sc = cb("proj", x, u.layers[3].stride) if len(u.layers) == 4 else x
+        return relu(y + sc)
+    if u.kind == "invres_block":
+        y = cb("expand", x, act="relu6")
+        y = cb("dw", y, u.layers[1].stride, groups=y.shape[-1], act="relu6")
+        y = cb("project", y)
+        return y + x if u.meta.get("skip") else y
+    if u.kind == "head_conv":
+        return cb("conv", x, act="relu6")
+    raise ValueError(u.kind)
+
+
+def fold_bn(model: QModel, params):
+    """Fold BN into conv weights/biases: w' = w·γ/√(σ²+ε), b' = (b−μ)·γ/√(σ²+ε)+β.
+    Returns a new params pytree with bn removed — the exported QModel weights."""
+    if model.kind != "cnn":
+        return params
+    out = jax.tree_util.tree_map(lambda a: a, params)
+    eps = 1e-5
+    for u in model.units:
+        if u.kind == "head_fc":
+            continue
+        up = out["units"][u.name]
+        for l in u.layers:
+            p = up["layers"][l.name]
+            bn = up["bn"][l.name]
+            scale = bn["g"] / jnp.sqrt(bn["var"] + eps)
+            p["w"] = p["w"] * scale[None, None, None, :]
+            p["b"] = (p["b"] - bn["mean"]) * scale + bn["b"]
+        up["bn"] = {}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# LoRA (Hu et al., 2022) — low-rank adapters merged into the base weights
+# before PTQ, matching the paper's GPT-2 + LoRA pipeline (Table 6).
+# ---------------------------------------------------------------------------
+
+LORA_RANK = 4
+LORA_ALPHA = 8.0
+LORA_TARGETS = ("wq", "wv")   # paper Appendix L: query and value projections
+
+
+def lora_init(model: QModel, seed: int):
+    rng = np.random.default_rng(seed)
+    adapters = {}
+    for u in model.units:
+        if u.kind != "txl":
+            continue
+        for l in u.layers:
+            if l.name in LORA_TARGETS:
+                dout, din = l.wshape
+                adapters[(u.name, l.name)] = {
+                    "a": jnp.asarray(rng.normal(0, 0.02, (LORA_RANK, din)).astype(np.float32)),
+                    "b": jnp.zeros((dout, LORA_RANK), np.float32),
+                }
+    return adapters
+
+
+def lora_apply_w(w, ad):
+    """Effective weight with the adapter: W + (α/r)·B·A."""
+    return w + (LORA_ALPHA / LORA_RANK) * (ad["b"] @ ad["a"])
+
+
+def lora_merge(model: QModel, params, adapters):
+    """Merge adapters into the base weights (the checkpoint PTQ sees)."""
+    out = jax.tree_util.tree_map(lambda a: a, params)
+    for (uname, lname), ad in adapters.items():
+        p = out["units"][uname]["layers"][lname]
+        p["w"] = lora_apply_w(p["w"], ad)
+    return out
+
+
+def forward_lora(model: QModel, params, adapters, x):
+    """Training-time forward with unmerged adapters (only adapters get grads)."""
+    emb = params["pre"]["tok"][x] + params["pre"]["pos"][None, : x.shape[1]]
+    h = emb
+    for u in model.units:
+        up = params["units"][u.name]
+        ws = []
+        for l in u.layers:
+            w = up["layers"][l.name]["w"]
+            ad = adapters.get((u.name, l.name))
+            if ad is not None:
+                w = lora_apply_w(jax.lax.stop_gradient(w), ad)
+            else:
+                w = jax.lax.stop_gradient(w)
+            ws.append(w)
+        bs = [jax.lax.stop_gradient(up["layers"][l.name]["b"]) for l in u.layers]
+        aux = [jax.lax.stop_gradient(a) for a in up["aux"]]
+        h = apply_unit(u, ws, bs, aux, h)
+    h = layernorm(h, jax.lax.stop_gradient(params["head"]["ln_g"]),
+                  jax.lax.stop_gradient(params["head"]["ln_b"]))
+    return linear(h, jax.lax.stop_gradient(params["head"]["out_w"]),
+                  jax.lax.stop_gradient(params["head"]["out_b"]))

@@ -1,0 +1,431 @@
+"""Layer-2 quantization ops: custom-VJP fake-quant built on the Pallas kernels.
+
+This module is the bridge between the L1 kernels (`compile.kernels.*`) and
+the reconstruction graphs (`compile.graphs`).  Every fake-quant op is a
+`jax.custom_vjp` whose forward is the fused Pallas kernel and whose backward
+implements the straight-through estimator with the closed-form cotangents of
+Proposition 3.1 — the element-wise heavy lifting also runs through a Pallas
+kernel, and only the O(r+c) reductions are left to XLA.
+
+Canonical parameter layout (2D view, rows = C_out):
+
+    w  : (r, c)     s1 : (r, 1)     S2 : (r, c)
+    s3 : (r, 1)     s4 : (1, c)     zp : (r, 1)
+
+Per-*tensor* s1 is represented by a scalar in the parameter pytree and
+broadcast to (r, 1) before the op; JAX's broadcast transpose then reduces the
+(r, 1) cotangent back to the scalar automatically.  Ablations (fixed s1 /
+missing s3, s4) pass `stop_gradient`-wrapped or constant-one factors.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import baselines as kb
+from compile.kernels import flexround as kf
+from compile.kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# FlexRound fake-quant op
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def fq_flexround(w, s1, s2, s3, s4, zp, qmin, qmax):
+    """Ŵ = s1 · (clip(round(W/(s1⊙S2⊙s3⊙s4)) + z, qmin, qmax) − z)."""
+    return kf.flexround_fq(w, s1, s2, s3, s4, zp, qmin, qmax)
+
+
+def _fq_flexround_fwd(w, s1, s2, s3, s4, zp, qmin, qmax):
+    out = kf.flexround_fq(w, s1, s2, s3, s4, zp, qmin, qmax)
+    return out, (w, s1, s2, s3, s4, zp, qmin, qmax)
+
+
+def _fq_flexround_bwd(res, g):
+    w, s1, s2, s3, s4, zp, qmin, qmax = res
+    ds1_full, common = kf.flexround_fq_bwd(w, s1, s2, s3, s4, zp, g, qmin, qmax)
+    ds1 = jnp.sum(ds1_full, axis=1, keepdims=True)
+    ds2 = common / s2
+    ds3 = jnp.sum(common / s3, axis=1, keepdims=True)
+    ds4 = jnp.sum(common / s4, axis=0, keepdims=True)
+    # dŴ/dW through STE: g · inside / (S2⊙s3⊙s4).  `common` already carries
+    # g·s1·inside·(−W/(s1⊙S')), so inside·g = −common·S'/W is ill-posed at
+    # W=0; recompute the mask directly instead (cheap, fuses).
+    div = s1 * s2 * s3 * s4
+    n = jnp.round(w / div) + zp
+    inside = ((n >= qmin) & (n <= qmax)).astype(w.dtype)
+    dw = g * inside / (s2 * s3 * s4)
+    dzp = jnp.sum(g * (s1 * inside - s1), axis=1, keepdims=True)
+    zs = jnp.zeros((), w.dtype)
+    return dw, ds1, ds2, ds3, ds4, dzp, zs, zs
+
+
+fq_flexround.defvjp(_fq_flexround_fwd, _fq_flexround_bwd)
+
+
+# ---------------------------------------------------------------------------
+# AdaRound fake-quant op (fixed s1, learnable V)
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def fq_adaround(w, s1, v, zp, qmin, qmax):
+    return kb.adaround(w, s1, v, zp, qmin, qmax)
+
+
+def _fq_adaround_fwd(w, s1, v, zp, qmin, qmax):
+    return kb.adaround(w, s1, v, zp, qmin, qmax), (w, s1, v, zp, qmin, qmax)
+
+
+def _fq_adaround_bwd(res, g):
+    w, s1, v, zp, qmin, qmax = res
+    dv = kb.adaround_bwd(w, s1, v, zp, g, qmin, qmax)
+    zero = jnp.zeros_like
+    zs = jnp.zeros((), w.dtype)
+    return zero(w), zero(s1), dv, zero(zp), zs, zs
+
+
+fq_adaround.defvjp(_fq_adaround_fwd, _fq_adaround_bwd)
+
+
+# ---------------------------------------------------------------------------
+# AdaQuant fake-quant op (learnable s1 and V)
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def fq_adaquant(w, s1, v, zp, qmin, qmax):
+    return kb.adaquant(w, s1, v, zp, qmin, qmax)
+
+
+def _fq_adaquant_fwd(w, s1, v, zp, qmin, qmax):
+    return kb.adaquant(w, s1, v, zp, qmin, qmax), (w, s1, v, zp, qmin, qmax)
+
+
+def _fq_adaquant_bwd(res, g):
+    w, s1, v, zp, qmin, qmax = res
+    dv, ds1_full = kb.adaquant_bwd(w, s1, v, zp, g, qmin, qmax)
+    ds1 = jnp.sum(ds1_full, axis=1, keepdims=True)
+    zs = jnp.zeros((), w.dtype)
+    return jnp.zeros_like(w), ds1, dv, jnp.zeros_like(zp), zs, zs
+
+
+fq_adaquant.defvjp(_fq_adaquant_fwd, _fq_adaquant_bwd)
+
+
+# ---------------------------------------------------------------------------
+# AdaQuant ⊕ FlexRound (Appendix F) — jnp backward (appendix-only path)
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def fq_adaquant_flexround(w, s1, v, s2, s3, s4, zp, qmin, qmax):
+    return kb.adaquant_flexround(w, s1, v, s2, s3, s4, zp, qmin, qmax)
+
+
+def _fq_aqfr_fwd(w, s1, v, s2, s3, s4, zp, qmin, qmax):
+    out = kb.adaquant_flexround(w, s1, v, s2, s3, s4, zp, qmin, qmax)
+    return out, (w, s1, v, s2, s3, s4, zp, qmin, qmax)
+
+
+def _fq_aqfr_bwd(res, g):
+    w, s1, v, s2, s3, s4, zp, qmin, qmax = res
+    wv = w + v
+    div = s1 * s2 * s3 * s4
+    r_ = wv / div
+    n = jnp.round(r_) + zp
+    inside = ((n >= qmin) & (n <= qmax)).astype(w.dtype)
+    n_c = jnp.clip(n, qmin, qmax)
+    common = g * s1 * inside * (-r_)
+    ds1 = jnp.sum(g * ((n_c - zp) - inside * r_), axis=1, keepdims=True)
+    dv = g * inside / (s2 * s3 * s4)
+    ds2 = common / s2
+    ds3 = jnp.sum(common / s3, axis=1, keepdims=True)
+    ds4 = jnp.sum(common / s4, axis=0, keepdims=True)
+    zs = jnp.zeros((), w.dtype)
+    return jnp.zeros_like(w), ds1, dv, ds2, ds3, ds4, jnp.zeros_like(zp), zs, zs
+
+
+fq_adaquant_flexround.defvjp(_fq_aqfr_fwd, _fq_aqfr_bwd)
+
+
+# ---------------------------------------------------------------------------
+# LSQ activation fake-quant op
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def fq_lsq_act(x2d, step, zp, qmin, qmax):
+    """Per-tensor activation fake-quant; step/zp are (1,1)."""
+    return kb.lsq_act(x2d, step, zp, qmin, qmax)
+
+
+def _fq_lsq_fwd(x2d, step, zp, qmin, qmax):
+    return kb.lsq_act(x2d, step, zp, qmin, qmax), (x2d, step, zp, qmin, qmax)
+
+
+def _fq_lsq_bwd(res, g):
+    x2d, step, zp, qmin, qmax = res
+    dx, dstep_full = kb.lsq_act_bwd(x2d, step, zp, g, qmin, qmax)
+    gscale = ref.lsq_grad_scale(x2d, qmax)
+    dstep = jnp.sum(dstep_full).reshape(1, 1) * gscale
+    zs = jnp.zeros((), x2d.dtype)
+    return dx, dstep, jnp.zeros_like(zp), zs, zs
+
+
+fq_lsq_act.defvjp(_fq_lsq_fwd, _fq_lsq_bwd)
+
+
+def quant_act(x, step, zp, qmin, qmax):
+    """Fake-quant an activation tensor of any rank (flatten → kernel → restore)."""
+    shp = x.shape
+    x2d = x.reshape(-1, shp[-1])
+    out = fq_lsq_act(x2d, step, zp, qmin, qmax)
+    return out.reshape(shp)
+
+
+def qdrop(x_fp, x_q, key, p: float):
+    """QDrop: keep the *quantized* activation with prob (1−p); replace by the
+    full-precision value with prob p (paper uses p = 0.5)."""
+    keep = jax.random.bernoulli(key, 1.0 - p, shape=x_q.shape)
+    return jnp.where(keep, x_q, x_fp)
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization per method
+# ---------------------------------------------------------------------------
+
+METHODS = (
+    "rtn",
+    "adaround",
+    "adaquant",
+    "flexround",
+    "flexround_fixed_s1",   # Ablation Study 1 (Table 1)
+    "flexround_no_s34",     # Ablation Study 2 (Table 1)
+    "adaquant_flexround",   # Appendix F combo (Table 11)
+)
+
+LEARNABLE_METHODS = tuple(m for m in METHODS if m != "rtn")
+
+
+def conv_to_2d(w):
+    """(Kh, Kw, Cin, Cout) HWIO conv weight → canonical (Cout, Kh·Kw·Cin)."""
+    kh, kw, cin, cout = w.shape
+    return jnp.transpose(w, (3, 0, 1, 2)).reshape(cout, kh * kw * cin)
+
+
+def conv_from_2d(w2d, conv_shape):
+    kh, kw, cin, cout = conv_shape
+    return jnp.transpose(w2d.reshape(cout, kh, kw, cin), (1, 2, 3, 0))
+
+
+def conv_s4_cols(s4_cin, kh, kw):
+    """Expand a per-input-channel (1, Cin) scale to the flattened column
+    layout (1, Kh·Kw·Cin) of `conv_to_2d` (channel index is fastest)."""
+    return jnp.tile(s4_cin, (1, kh * kw))
+
+
+def init_params(method: str, w2d, bits: int, symmetric: bool,
+                per_channel: bool, conv_cin: Optional[int] = None,
+                ksize: int = 1) -> Dict[str, jnp.ndarray]:
+    """Initial learnable-parameter pytree for `method` on weights `w2d`.
+
+    `conv_cin`/`ksize` describe the conv column structure for s4 (ksize =
+    Kh·Kw); linear layers leave them None/1 so s4 degenerates to ones(1, c).
+    Every method starts exactly at rounding-to-nearest (S2 = s3 = s4 = 1,
+    V s.t. h(V) = frac, additive V = 0) — the paper's §3.2 init.
+    """
+    r, c = w2d.shape
+    s1, zp = ref.minmax_scale(w2d, bits, symmetric, per_channel)
+    s1b = jnp.broadcast_to(jnp.reshape(s1, (-1, 1)), (r, 1)).astype(w2d.dtype)
+    zpb = jnp.broadcast_to(jnp.reshape(zp, (-1, 1)), (r, 1)).astype(w2d.dtype)
+    p: Dict[str, jnp.ndarray] = {"zp": zpb}
+    if per_channel:
+        p["s1"] = s1b
+    else:
+        p["s1"] = jnp.reshape(s1, (1, 1)).astype(w2d.dtype)
+        p["zp"] = jnp.reshape(zp, (1, 1)).astype(w2d.dtype)
+
+    if method in ("flexround", "flexround_fixed_s1", "flexround_no_s34",
+                  "adaquant_flexround"):
+        p["s2"] = jnp.ones((r, c), w2d.dtype)
+        p["s3"] = jnp.ones((r, 1), w2d.dtype)
+        p["s4"] = jnp.ones((1, c), w2d.dtype)
+    if method in ("adaround",):
+        p["v"] = ref.adaround_init_v(w2d, _bcast_rows(p["s1"], r)).astype(w2d.dtype)
+    if method in ("adaquant", "adaquant_flexround"):
+        p["v"] = jnp.zeros((r, c), w2d.dtype)
+    return p
+
+
+def _bcast_rows(x, r):
+    """(1,1) or (r,1) → (r,1)."""
+    return jnp.broadcast_to(x, (r, 1))
+
+
+def learnable_keys(method: str):
+    """Which parameter-pytree entries receive gradient updates."""
+    return {
+        "rtn": (),
+        "adaround": ("v",),
+        "adaquant": ("s1", "v"),
+        "flexround": ("s1", "s2", "s3", "s4"),
+        "flexround_fixed_s1": ("s2", "s3", "s4"),
+        "flexround_no_s34": ("s1", "s2"),
+        "adaquant_flexround": ("s1", "v", "s2", "s3", "s4"),
+    }[method]
+
+
+def fake_quant(method: str, w2d, p: Dict[str, jnp.ndarray], qmin: int, qmax: int,
+               impl: str = "pallas"):
+    """Dispatch: fake-quantize `w2d` with `method`'s parameters `p`.
+
+    Gradient flow is shaped here: ablation variants stop the gradient on the
+    frozen factors rather than using separate kernels.
+
+    `impl="jnp"` routes through the pure-jnp oracles instead of the Pallas
+    kernels — numerically identical (pinned by pytest), used for the
+    *forward-only* q/qw artifacts where tracing the Pallas interpreter buys
+    nothing and costs AOT build time.  Reconstruction always uses Pallas.
+    """
+    if impl == "jnp":
+        return _fake_quant_ref(method, w2d, p, qmin, qmax)
+    r, c = w2d.shape
+    qmin = jnp.asarray(qmin, w2d.dtype)
+    qmax = jnp.asarray(qmax, w2d.dtype)
+    s1 = _bcast_rows(p["s1"], r)
+    zp = _bcast_rows(p["zp"], r)
+    zp = jax.lax.stop_gradient(zp)
+    if method == "rtn":
+        return kb.rtn(w2d, jax.lax.stop_gradient(s1), zp, qmin, qmax)
+    if method == "adaround":
+        return fq_adaround(w2d, jax.lax.stop_gradient(s1), p["v"], zp, qmin, qmax)
+    if method == "adaquant":
+        return fq_adaquant(w2d, s1, p["v"], zp, qmin, qmax)
+    if method == "flexround":
+        return fq_flexround(w2d, s1, p["s2"], p["s3"], p["s4"], zp, qmin, qmax)
+    if method == "flexround_fixed_s1":
+        return fq_flexround(
+            w2d, jax.lax.stop_gradient(s1), p["s2"], p["s3"], p["s4"], zp, qmin, qmax
+        )
+    if method == "flexround_no_s34":
+        ones_r = jax.lax.stop_gradient(jnp.ones((r, 1), w2d.dtype))
+        ones_c = jax.lax.stop_gradient(jnp.ones((1, c), w2d.dtype))
+        return fq_flexround(w2d, s1, p["s2"], ones_r, ones_c, zp, qmin, qmax)
+    if method == "adaquant_flexround":
+        return fq_adaquant_flexround(
+            w2d, s1, p["v"], p["s2"], p["s3"], p["s4"], zp, qmin, qmax
+        )
+    raise ValueError(f"unknown method {method!r}")
+
+
+def _fake_quant_ref(method: str, w2d, p: Dict[str, jnp.ndarray], qmin, qmax):
+    """Pure-jnp forward dispatch (oracle path; no custom VJP, no Pallas)."""
+    r, c = w2d.shape
+    s1 = _bcast_rows(p["s1"], r)
+    zp = _bcast_rows(p["zp"], r)
+    if method == "rtn":
+        return ref.rtn(w2d, s1, qmin, qmax, zp)
+    if method == "adaround":
+        return ref.adaround(w2d, s1, p["v"], qmin, qmax, zp)
+    if method == "adaquant":
+        return ref.adaquant(w2d, s1, p["v"], qmin, qmax, zp)
+    if method in ("flexround", "flexround_fixed_s1"):
+        return ref.flexround(w2d, s1, p["s2"], p["s3"], p["s4"], qmin, qmax, zp)
+    if method == "flexround_no_s34":
+        return ref.flexround(w2d, s1, p["s2"], None, None, qmin, qmax, zp)
+    if method == "adaquant_flexround":
+        return ref.adaquant_flexround(w2d, s1, p["v"], p["s2"], p["s3"], p["s4"],
+                                      qmin, qmax, zp)
+    raise ValueError(f"unknown method {method!r}")
+
+
+def fake_quant_matmul(method: str, x, w2d, p, qmin: int, qmax: int):
+    """Fused Ŷ = X̃·Ŵᵀ when the method supports the fused kernel (FlexRound
+    forward path); falls back to fake_quant + matmul otherwise.  Backward
+    still flows through the custom-VJP op (the fused kernel is a forward
+    optimization; gradients only exist during reconstruction where we use
+    the unfused op so parameter cotangents are exact)."""
+    if method == "flexround":
+        r, _ = w2d.shape
+        s1 = _bcast_rows(p["s1"], r)
+        zp = _bcast_rows(p["zp"], r)
+        return kf.flexround_matmul(x, w2d, s1, p["s2"], p["s3"], p["s4"], zp, qmin, qmax)
+    return x @ fake_quant(method, w2d, p, qmin, qmax).T
+
+
+def quant_int_codes(method: str, w2d, p, qmin: int, qmax: int, impl: str = "jnp"):
+    """Integer grid codes after learning — consumed by the Rust grid-shift
+    analysis (Figures 3–6)."""
+    r, c = w2d.shape
+    s1 = _bcast_rows(p["s1"], r)
+    zp = _bcast_rows(p["zp"], r)
+    if method == "rtn":
+        return ref.rtn_int(w2d, s1, qmin, qmax, zp)
+    if method == "adaround":
+        h = ref.adaround_h(p["v"])
+        h = (h >= 0.5).astype(w2d.dtype)
+        return jnp.clip(jnp.floor(w2d / s1) + h + zp, qmin, qmax)
+    if method == "adaquant":
+        return jnp.clip(jnp.round((w2d + p["v"]) / s1) + zp, qmin, qmax)
+    if method in ("flexround", "flexround_fixed_s1"):
+        if impl == "jnp":
+            return ref.flexround_int(w2d, s1, p["s2"], p["s3"], p["s4"], qmin, qmax, zp)
+        return kf.flexround_fq_int(w2d, s1, p["s2"], p["s3"], p["s4"], zp, qmin, qmax)
+    if method == "flexround_no_s34":
+        if impl == "jnp":
+            return ref.flexround_int(w2d, s1, p["s2"], None, None, qmin, qmax, zp)
+        ones_r = jnp.ones((r, 1), w2d.dtype)
+        ones_c = jnp.ones((1, w2d.shape[1]), w2d.dtype)
+        return kf.flexround_fq_int(w2d, s1, p["s2"], ones_r, ones_c, zp, qmin, qmax)
+    if method == "adaquant_flexround":
+        div = p["s1"] * p["s2"] * p["s3"] * p["s4"]
+        return jnp.clip(jnp.round((w2d + p["v"]) / div) + zp, qmin, qmax)
+    raise ValueError(f"unknown method {method!r}")
+
+
+# ---------------------------------------------------------------------------
+# In-graph Adam — optimizer state round-trips through PJRT buffers so the
+# whole reconstruction step is one executable.
+# ---------------------------------------------------------------------------
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params)}
+
+
+def adam_update(params, grads, state, t, lr):
+    """One Adam step; `t` is the 1-based iteration count as an f32 scalar."""
+    b1t = 1.0 - ADAM_B1**t
+    b2t = 1.0 - ADAM_B2**t
+
+    def upd(p, g, m, v):
+        m2 = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+        v2 = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+        mhat = m2 / b1t
+        vhat = v2 / b2t
+        return p - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS), m2, v2
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state["m"])
+    flat_v = jax.tree_util.tree_leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v}
+
+
+def clamp_positive(params, keys=("s1", "s2", "s3", "s4")):
+    """Enforce the paper's positivity constraint after each update."""
+    out = dict(params)
+    for k in keys:
+        if k in out:
+            out[k] = jnp.maximum(out[k], 1e-6)
+    return out

@@ -1,0 +1,337 @@
+"""Build-time pre-training / fine-tuning of the model zoo.
+
+This is the substitute for "download a pre-trained checkpoint": every model
+the paper quantizes is trained here, once, on the synthetic analog datasets,
+and cached under `artifacts/ckpt/`.  Python-only, never on the request path.
+
+Training budgets are sized for a single CPU core (each model trains in well
+under a minute at these scales); the point is a *converged, non-trivial*
+model whose accuracy/perplexity degrades measurably under quantization —
+absolute SOTA is irrelevant to reproducing the paper's method ordering.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data as D
+from compile import models as M
+
+CKPT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "ckpt")
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+BN_MOMENTUM = 0.9
+
+
+def _adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return z, jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def _adam_step(params, grads, m, v, t, lr):
+    m = jax.tree_util.tree_map(lambda a, g: ADAM_B1 * a + (1 - ADAM_B1) * g, m, grads)
+    v = jax.tree_util.tree_map(lambda a, g: ADAM_B2 * a + (1 - ADAM_B2) * g * g, v, grads)
+    b1t = 1 - ADAM_B1 ** t
+    b2t = 1 - ADAM_B2 ** t
+    params = jax.tree_util.tree_map(
+        lambda p, mm, vv: p - lr * (mm / b1t) / (jnp.sqrt(vv / b2t) + ADAM_EPS),
+        params, m, v)
+    return params, m, v
+
+
+def _xent(logits, y):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, y[..., None], axis=-1).mean()
+
+
+def _lm_loss(logits, toks):
+    """Next-token cross entropy over positions 0..T−2 → targets 1..T−1,
+    ignoring PAD targets."""
+    tgt = toks[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    mask = (tgt != D.PAD).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Generic trainer
+# ---------------------------------------------------------------------------
+
+def train_model(model: M.QModel, xs, ys, steps: int, lr: float, batch: int,
+                seed: int, loss_kind: str, init_gain: float = 1.0,
+                log_every: int = 0) -> Dict:
+    params = M.init_model(model, seed, init_gain)
+    m, v = _adam_init(params)
+    rng = np.random.default_rng(seed + 5)
+    is_cnn = model.kind == "cnn"
+
+    def loss_fn(p, xb, yb):
+        out, stats = M.forward_train(model, p, xb, train=True)
+        if loss_kind == "cls":
+            loss = _xent(out, yb)
+        elif loss_kind == "lm":
+            loss = _lm_loss(out, xb)
+        elif loss_kind == "span":
+            s_log, e_log = out
+            loss = _xent(s_log, yb[:, 0]) + _xent(e_log, yb[:, 1])
+        else:
+            raise ValueError(loss_kind)
+        return loss, stats
+
+    @jax.jit
+    def step_fn(p, m, v, t, xb, yb):
+        (loss, stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, xb, yb)
+        p, m, v = _adam_step(p, grads, m, v, t, lr)
+        return p, m, v, loss, stats
+
+    n = len(xs)
+    for t in range(1, steps + 1):
+        idx = rng.integers(0, n, size=batch)
+        xb = jnp.asarray(xs[idx])
+        yb = jnp.asarray(ys[idx]) if ys is not None else jnp.zeros(batch, jnp.int32)
+        params, m, v, loss, stats = step_fn(params, m, v, float(t), xb, yb)
+        if is_cnn and stats:
+            params = _bn_ema(model, params, stats)
+        if log_every and t % log_every == 0:
+            print(f"    [{model.name}] step {t}/{steps} loss {float(loss):.4f}")
+    return params
+
+
+def _bn_ema(model, params, stats):
+    for (uname, lname), (mu, var) in stats.items():
+        bn = params["units"][uname]["bn"][lname]
+        bn["mean"] = BN_MOMENTUM * bn["mean"] + (1 - BN_MOMENTUM) * mu
+        bn["var"] = BN_MOMENTUM * bn["var"] + (1 - BN_MOMENTUM) * var
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Eval helpers (used for reporting full-precision baselines at build time)
+# ---------------------------------------------------------------------------
+
+def eval_cls(model, params, xs, ys, batch=64):
+    correct = 0
+    for i in range(0, len(xs), batch):
+        logits, _ = M.forward_train(model, params, jnp.asarray(xs[i : i + batch]),
+                                    train=False)
+        correct += int((jnp.argmax(logits, -1) == jnp.asarray(ys[i : i + batch])).sum())
+    return correct / len(xs)
+
+
+def eval_ppl(model, params, toks, batch=64):
+    tot, cnt = 0.0, 0.0
+    for i in range(0, len(toks), batch):
+        xb = jnp.asarray(toks[i : i + batch])
+        logits, _ = M.forward_train(model, params, xb, train=False)
+        tgt = xb[:, 1:]
+        lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+        mask = (tgt != D.PAD).astype(jnp.float32)
+        tot += float((nll * mask).sum())
+        cnt += float(mask.sum())
+    return float(np.exp(tot / max(cnt, 1.0)))
+
+
+# ---------------------------------------------------------------------------
+# Multi-task NLU encoder (GLUE-analog + span head), round-robin over tasks
+# ---------------------------------------------------------------------------
+
+def train_encoder_multi(model: M.QModel, steps: int, lr: float, batch: int,
+                        seed: int):
+    params = M.init_model(model, seed)
+    m, v = _adam_init(params)
+    rng = np.random.default_rng(seed + 5)
+
+    datasets = {}
+    for task in D.NLU_TASKS:
+        toks, ys, _ = D.gen_nlu(task, D.NLU_SEEDS[task], 5000)
+        datasets[task] = D.train_eval_split(toks, ys, 1024)
+    sp_toks, sp_s, sp_e = D.gen_span(D.NLU_SEEDS["entail"] + 500, 5000)
+    sp_lab = np.stack([sp_s, sp_e], axis=1)
+    datasets["span"] = D.train_eval_split(sp_toks, sp_lab, 1024)
+
+    def loss_fn(p, xb, yb, task):
+        out, _ = M.forward_train(model, p, xb, train=True, task=task)
+        if task == "span":
+            s_log, e_log = out
+            return _xent(s_log, yb[:, 0]) + _xent(e_log, yb[:, 1])
+        return _xent(out, yb)
+
+    step_fns = {
+        task: jax.jit(
+            lambda p, m, v, t, xb, yb, _task=task: _multi_step(
+                loss_fn, p, m, v, t, xb, yb, _task, lr))
+        for task in list(D.NLU_TASKS) + ["span"]
+    }
+
+    tasks = list(D.NLU_TASKS) + ["span"]
+    for t in range(1, steps + 1):
+        task = tasks[t % len(tasks)]
+        (xtr, ytr), _ = datasets[task]
+        idx = rng.integers(0, len(xtr), size=batch)
+        params, m, v, _ = step_fns[task](params, m, v, float(t),
+                                         jnp.asarray(xtr[idx]), jnp.asarray(ytr[idx]))
+
+    accs = {}
+    for task in D.NLU_TASKS:
+        _, (xev, yev) = datasets[task]
+        accs[task] = round(eval_cls_task(model, params, xev, yev, task), 4)
+    _, (xev, yev) = datasets["span"]
+    accs["span_em"] = round(eval_span(model, params, xev, yev), 4)
+    return params, accs
+
+
+def _multi_step(loss_fn, p, m, v, t, xb, yb, task, lr):
+    loss, grads = jax.value_and_grad(loss_fn)(p, xb, yb, task)
+    p, m, v = _adam_step(p, grads, m, v, t, lr)
+    return p, m, v, loss
+
+
+def eval_cls_task(model, params, xs, ys, task, batch=64):
+    correct = 0
+    for i in range(0, len(xs), batch):
+        logits, _ = M.forward_train(model, params, jnp.asarray(xs[i : i + batch]),
+                                    train=False, task=task)
+        correct += int((jnp.argmax(logits, -1) == jnp.asarray(ys[i : i + batch])).sum())
+    return correct / len(xs)
+
+
+def eval_span(model, params, xs, labs, batch=64):
+    """Exact-match over (start, end) — the F1/EM analog for Table 12."""
+    em = 0
+    for i in range(0, len(xs), batch):
+        (s_log, e_log), _ = M.forward_train(
+            model, params, jnp.asarray(xs[i : i + batch]), train=False, task="span")
+        ps = jnp.argmax(s_log, -1)
+        pe = jnp.argmax(e_log, -1)
+        yb = labs[i : i + batch]
+        em += int(((ps == jnp.asarray(yb[:, 0])) & (pe == jnp.asarray(yb[:, 1]))).sum())
+    return em / len(xs)
+
+
+# ---------------------------------------------------------------------------
+# LoRA fine-tuning (dec_lora on synth-d2t, Table 6 pipeline)
+# ---------------------------------------------------------------------------
+
+def train_lora(model: M.QModel, params, toks, steps: int, lr: float,
+               batch: int, seed: int):
+    adapters = M.lora_init(model, seed)
+    m, v = _adam_init(adapters)
+    rng = np.random.default_rng(seed + 9)
+
+    def loss_fn(ad, xb):
+        logits = M.forward_lora(model, params, ad, xb)
+        return _lm_loss(logits, xb)
+
+    @jax.jit
+    def step_fn(ad, m, v, t, xb):
+        loss, grads = jax.value_and_grad(loss_fn)(ad, xb)
+        ad, m, v = _adam_step(ad, grads, m, v, t, lr)
+        return ad, m, v, loss
+
+    for t in range(1, steps + 1):
+        idx = rng.integers(0, len(toks), size=batch)
+        adapters, m, v, loss = step_fn(adapters, m, v, float(t), jnp.asarray(toks[idx]))
+    return adapters
+
+
+# ---------------------------------------------------------------------------
+# Zoo recipes — dataset + budget per model, with checkpoint caching
+# ---------------------------------------------------------------------------
+
+def _ckpt_path(name: str, seed: int) -> str:
+    return os.path.join(CKPT_DIR, f"{name}_seed{seed}.pkl")
+
+
+def load_or_train(name: str, seed: int = 0, force: bool = False):
+    """Returns (model, folded_params, info).  `info` carries the eval data
+    and fp metrics for this checkpoint (consumed by aot.py's manifest)."""
+    os.makedirs(CKPT_DIR, exist_ok=True)
+    path = _ckpt_path(name, seed)
+    if not force and os.path.exists(path):
+        with open(path, "rb") as f:
+            blob = pickle.load(f)
+        model = M.MODEL_BUILDERS[name]()
+        return model, jax.tree_util.tree_map(jnp.asarray, blob["params"]), blob["info"]
+
+    t0 = time.time()
+    model, params, info = _train_recipe(name, seed)
+    info["train_seconds"] = round(time.time() - t0, 1)
+    blob = {"params": jax.tree_util.tree_map(np.asarray, params), "info": info}
+    with open(path, "wb") as f:
+        pickle.dump(blob, f)
+    print(f"  trained {name} (seed {seed}) in {info['train_seconds']}s: {info.get('fp_metric')}")
+    return model, params, info
+
+
+def _train_recipe(name: str, seed: int):
+    base = name.replace("_alt", "")
+    if name.endswith("_alt"):
+        seed = seed + 17   # "different checkpoint" — Tables 8/9
+
+    if base in ("tinyresnet_a", "tinyresnet_b", "tinymobilenet"):
+        model = M.MODEL_BUILDERS[name]()
+        xs, ys = D.gen_images(seed=1000 + seed, n=6000)
+        (xtr, ytr), (xev, yev) = D.train_eval_split(xs, ys, 1024)
+        gain = 2.5 if base == "tinymobilenet" else 1.0
+        params = train_model(model, xtr, ytr, steps=900, lr=2e-3, batch=64,
+                             seed=seed, loss_kind="cls", init_gain=gain)
+        acc = eval_cls(model, params, xev, yev)
+        params = M.fold_bn(model, params)
+        info = {"task": "image", "fp_metric": {"top1": round(acc, 4)},
+                "eval_seed": 1000 + seed}
+        return model, params, info
+
+    if name.startswith(("dec_small", "dec_med")) or name == "llm_mini":
+        model = M.MODEL_BUILDERS[name]()
+        corpus = "lm-b" if name.endswith("lmb") else "lm-a"
+        toks, ent = D.gen_corpus(corpus, 4096)
+        steps = 2600 if name == "llm_mini" else (2000 if "small" in name else 2200)
+        params = train_model(model, toks[:-512], None, steps=steps, lr=3e-3,
+                             batch=48, seed=seed, loss_kind="lm")
+        ppl = eval_ppl(model, params, toks[-512:])
+        info = {"task": "lm", "corpus": corpus, "fp_metric": {"ppl": round(ppl, 3)},
+                "grammar_entropy": round(ent, 3)}
+        return model, params, info
+
+    if name in ("enc_small", "enc_base"):
+        model = M.MODEL_BUILDERS[name]()
+        steps = 1800 if name == "enc_small" else 2000
+        params, accs = train_encoder_multi(model, steps=steps, lr=1e-3,
+                                           batch=32, seed=seed)
+        info = {"task": "nlu", "fp_metric": accs}
+        return model, params, info
+
+    if name == "dec_lora":
+        model = M.MODEL_BUILDERS[name]()
+        # base pre-training on generic d2t-vocab sequences
+        base, _ = D.gen_lm(4040, 3000, branch=6, temperature=1.0,
+                           vocab=D.D2T_VOCAB, seq=D.D2T_SEQ)
+        params = train_model(model, base, None, steps=500, lr=2e-3, batch=32,
+                             seed=seed, loss_kind="lm")
+        # LoRA fine-tune on *seen* categories only (unseen held out, Table 6)
+        seen = [c for c in range(D.D2T_NKEYS) if c not in D.D2T_UNSEEN]
+        toks, _ = D.gen_d2t(5050, 3000, categories=seen)
+        adapters = train_lora(model, params, toks, steps=600, lr=5e-3,
+                              batch=32, seed=seed)
+        params = M.lora_merge(model, params, adapters)
+        ppl = eval_ppl(model, params, toks[-256:])
+        info = {"task": "d2t", "fp_metric": {"ft_ppl": round(ppl, 3)},
+                "seen_categories": seen}
+        return model, params, info
+
+    raise ValueError(name)
+
+
+if __name__ == "__main__":
+    import sys
+    names = sys.argv[1:] or list(M.MODEL_BUILDERS)
+    for n in names:
+        load_or_train(n)

@@ -1,0 +1,294 @@
+"""L2 correctness: reconstruction graphs reduce loss, packs round-trip,
+models have the advertised shapes, CLE/AHB preserve function, data
+generators are deterministic, FXT round-trips."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import cle as C
+from compile import data as D
+from compile import fxt
+from compile import graphs as G
+from compile import models as M
+from compile import quant as Q
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def mobilenet():
+    model = M.tinymobilenet()
+    params = M.fold_bn(model, M.init_model(model, 0, init_gain=2.0))
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def decoder():
+    model = M.dec_small()
+    return model, M.init_model(model, 0)
+
+
+def test_recon_reduces_loss(mobilenet):
+    model, params = mobilenet
+    unit = model.units[1]
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(16, 12, 12, 8)).astype(np.float32))
+    y = G.fp_unit_fwd(model, params, unit)(x)
+    views = G.layer_views(model, params, unit)
+    pack = G.ParamPack.build("flexround", views, "w", 0, False)
+    flat0 = pack.init_values("flexround", views, 4, True, False)
+    # initial loss = RTN loss
+    qmin, qmax = ref.qrange(4, True)
+    fwd = G.quantized_unit_fwd(model, params, unit, "flexround", "w", pack, views)
+    y0 = fwd([jnp.asarray(a) for a in flat0], x, float(qmin), float(qmax),
+             0.0, 255.0, jnp.float32(0), jax.random.PRNGKey(0))
+    loss0 = float(jnp.mean((y0 - y) ** 2))
+    final, _, _ = G.python_recon_unit(model, params, unit, "flexround", "w",
+                                      x, y, bits_w=4, iters=60, lr=2e-3)
+    assert final < loss0 * 0.9, f"loss {loss0} → {final}: not reduced"
+
+
+@pytest.mark.parametrize("method", ["adaround", "adaquant", "flexround",
+                                    "flexround_fixed_s1", "flexround_no_s34",
+                                    "adaquant_flexround"])
+def test_all_methods_run_and_reduce(mobilenet, method):
+    model, params = mobilenet
+    unit = model.units[1]
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(8, 12, 12, 8)).astype(np.float32))
+    y = G.fp_unit_fwd(model, params, unit)(x)
+    lr = 1e-2 if method == "adaround" else 2e-3
+    final, flat, pack = G.python_recon_unit(model, params, unit, method, "w",
+                                            x, y, bits_w=4, iters=25, lr=lr)
+    assert np.isfinite(final)
+    # positivity invariant on the divisive scales
+    for e, p in zip(pack.entries, flat):
+        key = e.name.split(".")[1]
+        if key in ("s1", "s2", "s3", "s4"):
+            assert float(jnp.min(p)) > 0.0, f"{e.name} went non-positive"
+
+
+def test_wa_mode_learns_act_steps(decoder):
+    model, params = decoder
+    unit = model.units[0]
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(8, D.LM_SEQ, 48)).astype(np.float32))
+    y = G.fp_unit_fwd(model, params, unit)(x)
+    final, flat, pack = G.python_recon_unit(
+        model, params, unit, "flexround", "wa", x, y, bits_w=8, iters=20,
+        lr=2e-3, symmetric=False, drop_p=0.5, seed=3)
+    assert np.isfinite(final)
+    # act steps present and positive
+    act_entries = [i for i, e in enumerate(pack.entries) if e.name.startswith("act")]
+    assert len(act_entries) == 12  # 6 sites × (step, zp)
+    for i in act_entries:
+        assert float(jnp.min(flat[i])) > 0 or pack.entries[i].name.endswith("zp")
+
+
+def test_pack_roundtrip(decoder):
+    model, params = decoder
+    unit = model.units[0]
+    views = G.layer_views(model, params, unit)
+    pack = G.ParamPack.build("flexround", views, "wa", G.n_act_sites(unit), False)
+    flat = [jnp.full(e.shape, float(i + 1)) for i, e in enumerate(pack.entries)]
+    per_layer, acts = pack.unflatten(flat)
+    assert len(per_layer) == 6          # wq wk wv wo fc1 fc2
+    assert set(per_layer[0].keys()) == {"s1", "zp", "s2", "s3", "s4"}
+    assert len(acts) == 6
+    # w-mode pack is a strict prefix of wa-mode pack
+    pack_w = G.ParamPack.build("flexround", views, "w", 0, False)
+    assert [e.name for e in pack_w.entries] == [
+        e.name for e in pack.entries[: len(pack_w.entries)]]
+
+
+def test_per_channel_pack_shapes():
+    model = M.llm_mini()
+    params = M.init_model(model, 0)
+    unit = model.units[0]
+    views = G.layer_views(model, params, unit)
+    pack = G.ParamPack.build("flexround", views, "w", 0, per_channel=True)
+    by_name = {e.name: e.shape for e in pack.entries}
+    assert by_name["wq.s1"] == (128, 1)
+    assert by_name["wq.zp"] == (128, 1)
+    pack_pt = G.ParamPack.build("flexround", views, "w", 0, per_channel=False)
+    assert {e.name: e.shape for e in pack_pt.entries}["wq.s1"] == (1, 1)
+
+
+# ---------------------------------------------------------------------------
+# Models
+# ---------------------------------------------------------------------------
+
+def test_model_shapes_all():
+    for name, build in M.MODEL_BUILDERS.items():
+        model = build()
+        params = M.init_model(model, 0)
+        if model.kind == "cnn":
+            x = jnp.zeros((2, D.IMG_SIZE, D.IMG_SIZE, 3), jnp.float32)
+            logits, _ = M.forward_train(model, params, x, train=False)
+            assert logits.shape == (2, D.IMG_CLASSES), name
+        elif model.kind == "decoder":
+            seq, vocab = model.meta["seq"], model.meta["vocab"]
+            toks = jnp.zeros((2, seq), jnp.int32)
+            logits, _ = M.forward_train(model, params, toks, train=False)
+            assert logits.shape == (2, seq, vocab), name
+        else:
+            toks = jnp.zeros((2, D.NLU_SEQ), jnp.int32)
+            out, _ = M.forward_train(model, params, toks, train=False, task="entail")
+            assert out.shape == (2, 2), name
+            s, e = M.forward_train(model, params, toks, train=False, task="span")[0]
+            assert s.shape == (2, D.NLU_SEQ), name
+
+
+def test_bn_fold_preserves_eval_forward():
+    model = M.tinyresnet_a()
+    params = M.init_model(model, 3)
+    # give BN non-trivial stats
+    for u in model.units:
+        if u.kind == "head_fc":
+            continue
+        for l in u.layers:
+            bn = params["units"][u.name]["bn"][l.name]
+            rng = np.random.default_rng(hash(l.name) % 1000)
+            bn["mean"] = jnp.asarray(rng.normal(size=bn["mean"].shape).astype(np.float32) * 0.1)
+            bn["var"] = jnp.asarray((0.5 + rng.random(bn["var"].shape)).astype(np.float32))
+            bn["g"] = jnp.asarray((0.8 + 0.4 * rng.random(bn["g"].shape)).astype(np.float32))
+    x = jnp.asarray(np.random.default_rng(5).normal(
+        size=(4, D.IMG_SIZE, D.IMG_SIZE, 3)).astype(np.float32))
+    y_bn, _ = M.forward_train(model, params, x, train=False)
+    folded = M.fold_bn(model, params)
+    # run through the QModel topology (no BN)
+    h = x
+    for u in model.units:
+        if u.kind == "head_fc":
+            continue
+        views = G.layer_views(model, folded, u)
+        ws = [G.w2d_to_native(v, v.w2d) for v in views]
+        bs = [v.bias for v in views]
+        h = M.apply_unit(u, ws, bs, None, h)
+    logits = M.linear(h.mean(axis=(1, 2)), folded["head"]["fc_w"], folded["head"]["fc_b"])
+    np.testing.assert_allclose(logits, y_bn, rtol=1e-3, atol=1e-4)
+
+
+def test_lora_merge_equals_adapter_forward():
+    model = M.dec_lora()
+    params = M.init_model(model, 0)
+    adapters = M.lora_init(model, 1)
+    # randomize B so the adapter is non-zero
+    for k in adapters:
+        adapters[k]["b"] = jnp.asarray(
+            np.random.default_rng(2).normal(size=adapters[k]["b"].shape).astype(np.float32) * 0.1)
+    toks = jnp.asarray(np.random.default_rng(3).integers(
+        1, D.D2T_VOCAB, size=(2, D.D2T_SEQ)).astype(np.int32))
+    y_adapter = M.forward_lora(model, params, adapters, toks)
+    merged = M.lora_merge(model, params, adapters)
+    y_merged, _ = M.forward_train(model, merged, toks, train=False)
+    np.testing.assert_allclose(y_adapter, y_merged, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# CLE / AHB
+# ---------------------------------------------------------------------------
+
+def test_cle_preserves_function_with_relu(mobilenet):
+    model_b = M.tinymobilenet()
+    params = M.fold_bn(model_b, M.init_model(model_b, 7, init_gain=2.0))
+    model_b = C.replace_relu6(model_b)
+    x = jnp.asarray(np.random.default_rng(8).normal(
+        size=(4, D.IMG_SIZE, D.IMG_SIZE, 3)).astype(np.float32))
+
+    def fwd(p):
+        h = x
+        for u in model_b.units:
+            if u.kind == "head_fc":
+                continue
+            views = G.layer_views(model_b, p, u)
+            ws = [G.w2d_to_native(v, v.w2d) for v in views]
+            bs = [v.bias for v in views]
+            h = M.apply_unit(u, ws, bs, None, h)
+        return h
+
+    y0 = fwd(params)
+    y1 = fwd(C.apply_cle(model_b, params))
+    np.testing.assert_allclose(y1, y0, rtol=2e-3, atol=2e-3)
+
+
+def test_cle_narrows_range_ratio(mobilenet):
+    model_b = M.tinymobilenet()
+    params = M.fold_bn(model_b, M.init_model(model_b, 9, init_gain=3.0))
+    model_b = C.replace_relu6(model_b)
+
+    def ratio(p):
+        u = model_b.units[1]
+        w1 = p["units"][u.name]["layers"]["expand"]["w"]
+        w2 = p["units"][u.name]["layers"]["dw"]["w"]
+        r1 = jnp.max(jnp.abs(w1), axis=(0, 1, 2))
+        r2 = jnp.max(jnp.abs(w2), axis=(0, 1, 2))
+        return float(jnp.mean(jnp.abs(jnp.log(r1 / r2))))
+
+    before = ratio(params)
+    after = ratio(C.apply_cle(model_b, params))
+    # iterated pairwise CLE over a 3-layer chain doesn't reach the exact
+    # fixed point in 2 sweeps, but it must strictly equalize the pair ranges
+    assert after < before * 0.6, f"CLE should narrow range ratios: {before} → {after}"
+
+
+# ---------------------------------------------------------------------------
+# Data + FXT
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic():
+    a1, y1 = D.gen_images(1, 16)
+    a2, y2 = D.gen_images(1, 16)
+    np.testing.assert_array_equal(a1, a2)
+    np.testing.assert_array_equal(y1, y2)
+    t1, e1 = D.gen_corpus("lm-a", 8)
+    t2, e2 = D.gen_corpus("lm-a", 8)
+    np.testing.assert_array_equal(t1, t2)
+    assert e1 == e2
+
+
+def test_nlu_tasks_learnable_labels():
+    for task in D.NLU_TASKS:
+        toks, ys, nc = D.gen_nlu(task, 5, 400)
+        assert toks.shape == (400, D.NLU_SEQ)
+        assert nc == 2
+        frac = ys.mean()
+        assert 0.3 < frac < 0.7, f"{task} label balance {frac}"
+
+
+def test_mc_answer_distribution():
+    ch, ans = D.gen_mc("copy", 3, 64)
+    assert ch.shape == (64, D.MC_CHOICES, D.LM_SEQ)
+    assert set(np.unique(ans)).issubset({0, 1, 2, 3})
+
+
+def test_span_answers_in_context():
+    toks, s, e = D.gen_span(1, 64)
+    assert np.all(e == s + 1)
+    assert np.all(s >= 1)
+    assert np.all(e < D.NLU_SEQ)
+
+
+def test_fxt_roundtrip():
+    tensors = {
+        "a/w": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b": np.asarray([-1, 2, 7], np.int32),
+        "scalar": np.float32(3.25).reshape(()),
+    }
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.fxt")
+        fxt.write(path, tensors)
+        back = fxt.read(path)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype == tensors[k].dtype
+
+
+def test_beta_schedule_matches_rust_contract():
+    # fixed points the Rust side asserts too
+    assert G._beta(1, 100) == 20.0
+    assert G._beta(100, 100) < 2.5

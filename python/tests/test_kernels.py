@@ -1,0 +1,240 @@
+"""L1 correctness: every Pallas kernel against the pure-jnp oracle, swept
+over shapes/bit-widths/schemes with hypothesis; custom-VJP gradients against
+finite differences and the closed forms of Proposition 3.1."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile import quant as Q
+from compile.kernels import baselines as kb
+from compile.kernels import flexround as kf
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "ci", max_examples=25, deadline=None, derandomize=True)
+hypothesis.settings.load_profile("ci")
+
+
+def _w(seed, r, c, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.normal(size=(r, c)) * scale).astype(np.float32))
+
+
+def _flex_params(seed, r, c, jitter=True):
+    rng = np.random.default_rng(seed + 1)
+    def pos(shape):
+        if jitter:
+            return jnp.asarray((0.5 + rng.random(shape)).astype(np.float32))
+        return jnp.ones(shape, jnp.float32)
+    return pos((r, 1)), pos((r, c)), pos((r, 1)), pos((1, c))
+
+
+shape_st = st.tuples(st.integers(1, 40), st.integers(1, 50))
+bits_st = st.integers(2, 8)
+
+
+@given(shape_st, bits_st, st.booleans(), st.integers(0, 5))
+def test_flexround_fwd_matches_ref(shape, bits, symmetric, seed):
+    r, c = shape
+    w = _w(seed, r, c, scale=1.5)
+    s1, s2, s3, s4 = _flex_params(seed, r, c)
+    qmin, qmax = ref.qrange(bits, symmetric)
+    s1v, zpv = ref.minmax_scale(w, bits, symmetric)
+    s1 = jnp.broadcast_to(jnp.reshape(s1v, (1, 1)), (r, 1))
+    zp = jnp.broadcast_to(jnp.reshape(zpv, (1, 1)), (r, 1))
+    out = kf.flexround_fq(w, s1, s2, s3, s4, zp, float(qmin), float(qmax))
+    exp = ref.flexround(w, s1, s2, s3, s4, qmin, qmax, zp)
+    np.testing.assert_allclose(out, exp, rtol=1e-6, atol=1e-6)
+    codes = kf.flexround_fq_int(w, s1, s2, s3, s4, zp, float(qmin), float(qmax))
+    exp_codes = ref.flexround_int(w, s1, s2, s3, s4, qmin, qmax, zp)
+    np.testing.assert_allclose(codes, exp_codes, atol=0)
+
+
+@given(shape_st, st.integers(0, 5))
+def test_flexround_with_unit_scales_is_rtn(shape, seed):
+    r, c = shape
+    w = _w(seed, r, c)
+    qmin, qmax = ref.qrange(4, True)
+    s1v, _ = ref.minmax_scale(w, 4, True)
+    s1 = jnp.full((r, 1), s1v)
+    ones_rc = jnp.ones((r, c), jnp.float32)
+    ones_r = jnp.ones((r, 1), jnp.float32)
+    ones_c = jnp.ones((1, c), jnp.float32)
+    zp = jnp.zeros((r, 1), jnp.float32)
+    out = kf.flexround_fq(w, s1, ones_rc, ones_r, ones_c, zp, float(qmin), float(qmax))
+    exp = ref.rtn(w, s1, qmin, qmax)
+    np.testing.assert_allclose(out, exp, rtol=1e-6, atol=1e-6)
+
+
+@given(shape_st, bits_st, st.integers(0, 4))
+def test_rtn_adaround_adaquant_match_ref(shape, bits, seed):
+    r, c = shape
+    w = _w(seed, r, c)
+    qmin, qmax = ref.qrange(bits, False)
+    s1v, zpv = ref.minmax_scale(w, bits, False)
+    s1 = jnp.full((r, 1), float(s1v))
+    zp = jnp.full((r, 1), float(zpv))
+    np.testing.assert_allclose(
+        kb.rtn(w, s1, zp, float(qmin), float(qmax)),
+        ref.rtn(w, s1, qmin, qmax, zp), rtol=1e-6, atol=1e-6)
+    v = ref.adaround_init_v(w, s1)
+    np.testing.assert_allclose(
+        kb.adaround(w, s1, v, zp, float(qmin), float(qmax)),
+        ref.adaround(w, s1, v, qmin, qmax, zp), rtol=1e-5, atol=1e-5)
+    vq = _w(seed + 7, r, c, scale=0.01)
+    np.testing.assert_allclose(
+        kb.adaquant(w, s1, vq, zp, float(qmin), float(qmax)),
+        ref.adaquant(w, s1, vq, qmin, qmax, zp), rtol=1e-6, atol=1e-6)
+
+
+@given(st.tuples(st.integers(1, 60), st.integers(1, 30)), st.integers(0, 4))
+def test_lsq_act_matches_ref(shape, seed):
+    n, d = shape
+    x = _w(seed, n, d, scale=2.0)
+    step = jnp.full((1, 1), 0.07)
+    zp = jnp.full((1, 1), 3.0)
+    qmin, qmax = ref.qrange(8, False)
+    np.testing.assert_allclose(
+        kb.lsq_act(x, step, zp, float(qmin), float(qmax)),
+        ref.lsq_act(x, step.reshape(()), qmin, qmax, zp.reshape(())),
+        rtol=1e-6, atol=1e-6)
+
+
+@given(st.tuples(st.integers(2, 24), st.integers(2, 24)),
+       st.tuples(st.integers(1, 16), st.integers(2, 8)), st.integers(0, 3))
+def test_fused_matmul_matches_unfused(shape, bdims, seed):
+    r, c = shape
+    b, bits = bdims
+    w = _w(seed, r, c)
+    x = _w(seed + 3, b, c)
+    s1, s2, s3, s4 = _flex_params(seed, r, c)
+    zp = jnp.zeros((r, 1), jnp.float32)
+    qmin, qmax = ref.qrange(bits, True)
+    out = kf.flexround_matmul(x, w, s1, s2, s3, s4, zp, float(qmin), float(qmax))
+    exp = ref.flexround_matmul(w, s1, s2, s3, s4, qmin, qmax, zp, x)
+    np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Gradients
+# ---------------------------------------------------------------------------
+
+def test_flexround_grad_matches_prop31_closed_form():
+    """∂L/∂S2 must equal −W/S'²·s1·mask·∂L/∂Ŵ — Proposition 3.1."""
+    r, c = 6, 9
+    w = _w(11, r, c)
+    s1, s2, s3, s4 = _flex_params(11, r, c)
+    zp = jnp.zeros((r, 1), jnp.float32)
+    qmin, qmax = -8.0, 7.0
+    g = _w(12, r, c)
+
+    def loss(s1_, s2_, s3_, s4_):
+        out = Q.fq_flexround(w, s1_, s2_, s3_, s4_, zp, jnp.float32(qmin), jnp.float32(qmax))
+        return jnp.sum(out * g)
+
+    ds1, ds2, ds3, ds4 = jax.grad(loss, argnums=(0, 1, 2, 3))(s1, s2, s3, s4)
+    es1, es2, es3, es4 = ref.flexround_bwd(w, s1, s2, s3, s4, qmin, qmax, 0.0, g)
+    np.testing.assert_allclose(ds1, es1.reshape(r, 1) if es1.ndim == 2 else es1, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(ds2, es2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(ds3, es3, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(ds4, es4, rtol=1e-5, atol=1e-5)
+    # Prop 3.1: dS2 ∝ −W (elementwise, for in-range weights)
+    div = s1 * s2 * s3 * s4
+    n = jnp.round(w / div)
+    inside = (n >= qmin) & (n <= qmax)
+    expected_sign = -jnp.sign(w) * jnp.sign(g)
+    actual_sign = jnp.sign(ds2)
+    mask = inside & (jnp.abs(w) > 1e-3) & (jnp.abs(g) > 1e-3)
+    assert bool(jnp.all(jnp.where(mask, actual_sign == expected_sign, True)))
+
+
+def test_flexround_grad_matches_finite_difference_smoothed():
+    """STE grads track finite differences of the *unrounded* surrogate."""
+    r, c = 4, 5
+    w = _w(21, r, c)
+    s1, s2, s3, s4 = _flex_params(21, r, c)
+    zp = jnp.zeros((r, 1), jnp.float32)
+    g = jnp.ones((r, c), jnp.float32)
+
+    # smooth surrogate: replace round() by identity — STE's model of the op
+    def smooth(s2_):
+        div = s1 * s2_ * s3 * s4
+        return jnp.sum(s1 * jnp.clip(w / div, -8.0, 7.0) * g)
+
+    def hard(s2_):
+        return jnp.sum(
+            Q.fq_flexround(w, s1, s2_, s3, s4, zp, jnp.float32(-8), jnp.float32(7)) * g)
+
+    gs = jax.grad(smooth)(s2)
+    gh = jax.grad(hard)(s2)
+    np.testing.assert_allclose(gh, gs, rtol=1e-4, atol=1e-4)
+
+
+def test_adaround_grad_zero_at_saturated_h():
+    r, c = 3, 4
+    w = _w(31, r, c)
+    s1 = jnp.full((r, 1), 0.1)
+    zp = jnp.zeros((r, 1), jnp.float32)
+    v = jnp.full((r, c), 30.0)  # h(V) saturated at 1 → zero gradient
+
+    def loss(v_):
+        return jnp.sum(Q.fq_adaround(w, s1, v_, zp, jnp.float32(-8), jnp.float32(7)))
+
+    g = jax.grad(loss)(v)
+    np.testing.assert_allclose(g, jnp.zeros_like(g), atol=1e-7)
+
+
+def test_adaquant_grads():
+    r, c = 5, 7
+    w = _w(41, r, c)
+    s1 = jnp.full((r, 1), 0.09)
+    zp = jnp.zeros((r, 1), jnp.float32)
+    v = _w(42, r, c, scale=0.01)
+    gcot = _w(43, r, c)
+
+    def loss(s1_, v_):
+        return jnp.sum(Q.fq_adaquant(w, s1_, v_, zp, jnp.float32(-8), jnp.float32(7)) * gcot)
+
+    ds1, dv = jax.grad(loss, argnums=(0, 1))(s1, v)
+    es1, ev = ref.adaquant_bwd(w, s1, v, -8.0, 7.0, 0.0, gcot)
+    np.testing.assert_allclose(ds1, es1, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(dv, ev, rtol=1e-5, atol=1e-5)
+
+
+def test_lsq_grad_scale_applied():
+    n, d = 8, 6
+    x = _w(51, n, d)
+    step = jnp.full((1, 1), 0.05)
+    zp = jnp.zeros((1, 1), jnp.float32)
+
+    def loss(step_):
+        return jnp.sum(Q.fq_lsq_act(x, step_, zp, jnp.float32(0), jnp.float32(255)))
+
+    ds = jax.grad(loss)(step)
+    _, es = ref.lsq_act_bwd(x, step.reshape(()), 0.0, 255.0, 0.0, jnp.ones_like(x))
+    np.testing.assert_allclose(ds.reshape(()), es, rtol=1e-5, atol=1e-6)
+
+
+def test_positivity_clamp():
+    p = {"s1": jnp.asarray([[-1.0]]), "s2": jnp.asarray([[0.5, -2.0]])}
+    out = Q.clamp_positive(p)
+    assert float(out["s1"][0, 0]) == pytest.approx(1e-6)
+    assert float(out["s2"][0, 1]) == pytest.approx(1e-6)
+
+
+def test_conv_2d_roundtrip():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(3, 3, 4, 8)).astype(np.float32))
+    w2d = Q.conv_to_2d(w)
+    assert w2d.shape == (8, 36)
+    back = Q.conv_from_2d(w2d, (3, 3, 4, 8))
+    np.testing.assert_allclose(back, w, atol=0)
+
+
+def test_vmem_estimate_within_budget():
+    # any block of the default tiling must fit a 16 MiB VMEM core
+    assert kf.vmem_bytes_estimate(4096, 4096, batch=512) < 16 * 1024 * 1024

@@ -1,0 +1,130 @@
+//! `cargo bench --bench hot_path` — microbenchmarks of the PTQ hot paths
+//! (the §Perf harness; criterion is not vendored, `util::stats::bench` is
+//! the timer).
+//!
+//! Measured:
+//!   * recon_step       — one reconstruction Adam step per unit class
+//!   * q_advance        — quantized unit forward (literal path)
+//!   * fp_advance       — fp unit forward
+//!   * calib_gather     — host-side minibatch assembly (pure Rust)
+//!   * compile          — PJRT compile latency per artifact class
+//!   * substrate micro  — JSON parse, FXT read, RNG, tensor ops
+
+use flexround::coordinator::{Plan, Session};
+use flexround::manifest::Manifest;
+use flexround::runtime::Runtime;
+use flexround::tensor::Tensor;
+use flexround::util::rng::Pcg32;
+use flexround::util::stats::bench;
+use std::path::Path;
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_millis(
+        std::env::var("FLEXROUND_BENCH_MS").ok().and_then(|s| s.parse().ok()).unwrap_or(1500),
+    );
+
+    // ---- substrate micro-benches (no artifacts needed) -----------------
+    println!("== substrates ==");
+    let json_doc = std::fs::read_to_string("artifacts/manifest.json").unwrap_or_else(|_| {
+        r#"{"calib_batch":32,"models":{}}"#.repeat(1)
+    });
+    println!("{}", bench("json::parse(manifest)", budget, 2_000, || {
+        let _ = flexround::ser::json::parse(&json_doc);
+    }).report());
+
+    let mut rng = Pcg32::seeded(1);
+    let big = Tensor::from_f32((0..1 << 16).map(|i| (i % 97) as f32).collect(), &[256, 256]).unwrap();
+    println!("{}", bench("tensor::gather_rows(32 of 256)", budget, 50_000, || {
+        let idx = rng.sample_indices(256, 32);
+        let _ = big.gather_rows(&idx);
+    }).report());
+    println!("{}", bench("rng::sample_indices(32 of 1024)", budget, 200_000, || {
+        let _ = rng.sample_indices(1024, 32);
+    }).report());
+    let w: Vec<f32> = (0..4096).map(|i| ((i * 37) % 101) as f32 / 50.0 - 1.0).collect();
+    println!("{}", bench("quant::rtn(4096)", budget, 200_000, || {
+        let _ = flexround::tensor::rtn(&w, 0.1, 0.0, -8.0, 7.0);
+    }).report());
+
+    // ---- artifact-backed benches ---------------------------------------
+    let art = Path::new("artifacts");
+    let man = match Manifest::load(art) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("hot_path: artifact benches skipped ({e})");
+            return;
+        }
+    };
+    let rt = Runtime::new(art).expect("PJRT client");
+
+    for model in ["tinymobilenet", "dec_small_lma", "llm_mini"] {
+        if !man.models.contains_key(model) {
+            continue;
+        }
+        println!("== {model} ==");
+        if let Err(e) = bench_model(&man, &rt, model, budget) {
+            println!("  {model}: skipped ({e:#})");
+        }
+    }
+    println!("runtime: {}", rt.stats.borrow().summary());
+}
+
+fn bench_model(
+    man: &Manifest,
+    rt: &Runtime,
+    model: &str,
+    budget: Duration,
+) -> anyhow::Result<()> {
+    {
+        let sess = Session::open(rt, man, model)?;
+        let calib = sess.dataset("calib_x")?.clone();
+        let b = sess.model.calib_batch;
+        let x0 = calib.slice_rows(0, b)?;
+        let chunks = sess.first_unit_inputs(&x0)?;
+
+        // fp advance on the first unit (its input is the chain input)
+        let unit = &sess.model.units[0];
+        sess.advance_fp(unit, &chunks)?; // fail fast before timing
+        println!("{}", bench(&format!("fp_advance[{}]", unit.name), budget, 10_000, || {
+            let _ = sess.advance_fp(unit, &chunks);
+        }).report());
+
+        // one-unit recon step throughput via a 1-iteration quantize on a
+        // truncated calibration set
+        let method = if sess.model.methods_w.iter().any(|m| m == "flexround")
+            || sess.model.methods_wa.iter().any(|m| m == "flexround") {
+            "flexround"
+        } else {
+            "adaround"
+        };
+        let mode = if sess.model.methods_w.iter().any(|m| m == method) { "w" } else { "wa" };
+        let mut plan = Plan::new(model, method);
+        plan.mode = mode.into();
+        plan.bits_w = *sess.model.bits_w.iter().max().unwrap();
+        plan.iters = 8;
+        plan.calib_n = b;
+        let t0 = std::time::Instant::now();
+        let r = sess.quantize(&plan)?;
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "recon_step[{model}:{method}:{mode}]      {:>7} steps  {:>10.3}ms/step  ({} units)",
+            r.recon_steps,
+            1e3 * r.recon_seconds / r.recon_steps.max(1) as f64,
+            r.units.len()
+        );
+        println!(
+            "quantize_total[{model}]                  wall {dt:.2}s  recon {:.2}s  overhead {:.1}%",
+            r.recon_seconds,
+            100.0 * (dt - r.recon_seconds).max(0.0) / dt
+        );
+
+        // q advance with learned params
+        let st = &r.units[sess.model.units.iter().position(|u| u.name == unit.name).unwrap()];
+        sess.advance_q(unit, st, mode, &chunks)?; // fail fast before timing
+        println!("{}", bench(&format!("q_advance[{}:{}]", unit.name, method), budget, 10_000, || {
+            let _ = sess.advance_q(unit, st, mode, &chunks);
+        }).report());
+    }
+    Ok(())
+}

@@ -1,0 +1,119 @@
+//! `cargo bench --bench paper_figures` — regenerate the data series behind
+//! the paper's figures:
+//!
+//!   Fig 3  — weight-update histograms + grid-shift scatter, first block of
+//!            TinyMobileNet and TinyResNet-A (W4)
+//!   Fig 4  — grid shifts in a deeper TinyMobileNet block (W4)
+//!   Fig 5  — grid shifts in the encoder's first query projection (W8 A8)
+//!   Fig 6  — AdaRound vs AdaQuant vs FlexRound shift scatter comparison
+//!   Fig 7  — handled by the f7_sample_size sweep (paper_tables / configs)
+//!
+//! CSV series land in reports/fig_*.csv.
+
+use flexround::coordinator::{Plan, Session};
+use flexround::manifest::Manifest;
+use flexround::report::Reporter;
+use flexround::runtime::Runtime;
+use flexround::{quant, Result};
+use std::path::Path;
+use std::time::Instant;
+
+fn shifts_for(
+    sess: &Session,
+    rep: &Reporter,
+    fig: &str,
+    unit_name: &str,
+    method: &str,
+    bits: u32,
+    mode: &str,
+    iters: usize,
+) -> Result<()> {
+    let mut plan = Plan::new(&sess.model.name, method);
+    plan.bits_w = bits;
+    plan.mode = mode.into();
+    plan.drop_p = if mode == "wa" { 0.5 } else { 0.0 };
+    plan.iters = iters;
+    let r = sess.quantize(&plan)?;
+    let (unit, st) = sess
+        .model
+        .units
+        .iter()
+        .zip(&r.units)
+        .find(|(u, _)| u.name == unit_name)
+        .ok_or_else(|| anyhow::anyhow!("no unit {unit_name}"))?;
+    for gs in quant::grid_shifts(sess, unit, st)? {
+        let id = format!("{fig}_{}_{}_{}_{}", sess.model.name, unit_name, gs.layer, method);
+        let rows: Vec<String> = gs.points.iter().map(|(w, d)| format!("{w},{d}")).collect();
+        rep.series(&id, "weight,grid_shift", &rows)?;
+        println!(
+            "  {fig} {}/{}/{} [{method} W{bits}]: shifted {:.2}% aggressive {:.2}% max |Δ| {}",
+            sess.model.name, unit_name, gs.layer,
+            100.0 * gs.shifted_frac, 100.0 * gs.aggressive_frac, gs.max_shift
+        );
+    }
+    let h = quant::delta_hist(sess, unit, st, 41)?;
+    let id = format!("{fig}_hist_{}_{}_{}", sess.model.name, unit_name, method);
+    let rows: Vec<String> = (0..h.small_counts.len())
+        .map(|i| format!("{},{},{}", h.edges[i], h.small_counts[i], h.large_counts[i]))
+        .collect();
+    rep.series(&id, "delta_edge,count_small_w,count_large_w", &rows)?;
+    Ok(())
+}
+
+fn main() {
+    let iters: usize = std::env::var("FLEXROUND_BENCH_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150);
+    let art = Path::new("artifacts");
+    let man = match Manifest::load(art) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("paper_figures: skipping ({e}); run `make artifacts` first");
+            return;
+        }
+    };
+    let rt = Runtime::new(art).expect("PJRT client");
+    let rep = Reporter::new(Path::new("reports"), true).expect("reports");
+    let t0 = Instant::now();
+
+    // Figure 3: first block, MobileNet (large |W|) vs ResNet (small |W|)
+    for model in ["tinymobilenet", "tinyresnet_a"] {
+        let sess = Session::open(&rt, &man, model).expect("session");
+        println!(
+            "fig3 {model}: large-|W| fraction {:.3}%",
+            100.0 * quant::large_weight_fraction(&sess)
+        );
+        let unit = sess.model.units[1].name.clone();
+        shifts_for(&sess, &rep, "fig3", &unit, "flexround", 4, "w", iters).expect("fig3");
+    }
+
+    // Figure 4: a deeper MobileNet block
+    {
+        let sess = Session::open(&rt, &man, "tinymobilenet").expect("session");
+        let deep = sess.model.units[4].name.clone();
+        shifts_for(&sess, &rep, "fig4", &deep, "flexround", 4, "w", iters).expect("fig4");
+    }
+
+    // Figure 5: encoder first layer (query projection), 8-bit W/A
+    {
+        let sess = Session::open(&rt, &man, "enc_small").expect("session");
+        let first = sess.model.units[0].name.clone();
+        shifts_for(&sess, &rep, "fig5", &first, "flexround", 8, "wa", iters).expect("fig5");
+    }
+
+    // Figure 6: method comparison on the same first block
+    {
+        let sess = Session::open(&rt, &man, "tinymobilenet").expect("session");
+        let unit = sess.model.units[1].name.clone();
+        for method in ["adaround", "adaquant", "flexround"] {
+            shifts_for(&sess, &rep, "fig6", &unit, method, 4, "w", iters).expect("fig6");
+        }
+    }
+
+    println!(
+        "== figures done in {:.1}s; {} ==",
+        t0.elapsed().as_secs_f64(),
+        rt.stats.borrow().summary()
+    );
+}

@@ -1,0 +1,88 @@
+//! `cargo bench --bench paper_tables` — regenerate every table of the
+//! paper's evaluation (analog workloads; see DESIGN.md per-experiment index)
+//! and time each sweep.
+//!
+//! Environment knobs:
+//!   FLEXROUND_BENCH_ITERS   recon iterations per unit   (default 120)
+//!   FLEXROUND_BENCH_CALIB   calibration samples         (default 256)
+//!   FLEXROUND_BENCH_ONLY    comma-separated sweep ids to run
+//!
+//! Full-fidelity runs go through `flexround sweep --config configs/<id>.toml`
+//! without the overrides.
+
+use flexround::config::Config;
+use flexround::manifest::Manifest;
+use flexround::report::Reporter;
+use flexround::runtime::Runtime;
+use std::path::Path;
+use std::time::Instant;
+
+const SWEEPS: &[&str] = &[
+    "t1_ablation",
+    "t2_weight_only",
+    "t3_weight_act",
+    "t4_nlu",
+    "t5_nlg",
+    "t6_lora",
+    "t7_llm",
+    "t8_alt_pretrained",
+    "t9_alt_wa",
+    "t10_cle_ahb",
+    "t11_combo",
+    "t12_span",
+    "t21_llm_weight_only",
+];
+
+fn main() {
+    let iters: usize = std::env::var("FLEXROUND_BENCH_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(120);
+    let calib: usize = std::env::var("FLEXROUND_BENCH_CALIB")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256);
+    let only: Option<Vec<String>> = std::env::var("FLEXROUND_BENCH_ONLY")
+        .ok()
+        .map(|s| s.split(',').map(|t| t.trim().to_string()).collect());
+
+    let art = Path::new("artifacts");
+    let man = match Manifest::load(art) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("paper_tables: skipping ({e}); run `make artifacts` first");
+            return;
+        }
+    };
+    let rt = Runtime::new(art).expect("PJRT client");
+    let rep = Reporter::new(Path::new("reports"), true).expect("reports dir");
+
+    println!("== paper tables (iters={iters}, calib={calib}) ==");
+    let mut total = 0.0;
+    for id in SWEEPS {
+        if let Some(only) = &only {
+            if !only.iter().any(|o| o == id) {
+                continue;
+            }
+        }
+        let cfg_path = format!("configs/{id}.toml");
+        if !Path::new(&cfg_path).exists() {
+            eprintln!("  {id}: missing config, skipped");
+            continue;
+        }
+        let mut cfg = Config::new();
+        cfg.load_file(Path::new(&cfg_path)).expect("config");
+        cfg.set_override(&format!("sweep.iters={iters}")).unwrap();
+        cfg.set_override(&format!("sweep.calib_n={calib}")).unwrap();
+        let t0 = Instant::now();
+        match flexround::sweep::run_sweep(&cfg, &man, &rt, &rep) {
+            Ok(()) => {
+                let dt = t0.elapsed().as_secs_f64();
+                total += dt;
+                println!("  {id:<22} {dt:>8.1}s  → reports/{id}.md");
+            }
+            Err(e) => println!("  {id:<22} FAILED: {e:#}"),
+        }
+    }
+    println!("== total {total:.1}s; runtime {} ==", rt.stats.borrow().summary());
+}

@@ -1,0 +1,142 @@
+//! Hand-rolled CLI parser (clap is not vendored): subcommands, long flags
+//! with values, boolean switches, repeated `--set` overrides, and generated
+//! help text.
+
+use crate::Result;
+use anyhow::bail;
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, Vec<String>>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`.  Grammar: `prog <command> [--flag [value]] [pos…]`;
+    /// `--flag=value` and repeated flags are supported; a flag followed by
+    /// another flag (or end) is treated as boolean `"true"`.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut a = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                a.command = it.next().unwrap().clone();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare -- is not supported");
+                }
+                if let Some(eq) = name.find('=') {
+                    let (k, v) = name.split_at(eq);
+                    a.flags.entry(k.to_string()).or_default().push(v[1..].to_string());
+                } else {
+                    let takes_value = it.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
+                    let v = if takes_value {
+                        it.next().unwrap().clone()
+                    } else {
+                        "true".to_string()
+                    };
+                    a.flags.entry(name.to_string()).or_default().push(v);
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    pub fn flag_all(&self, name: &str) -> Vec<&str> {
+        self.flags.get(name).map(|v| v.iter().map(String::as_str).collect()).unwrap_or_default()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> usize {
+        self.flag(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_flag(&self, name: &str, default: f64) -> f64 {
+        self.flag(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+/// Help text for the `flexround` binary.
+pub const USAGE: &str = "\
+flexround — post-training quantization via learnable element-wise division
+(reproduction of Lee et al., ICML 2023; see DESIGN.md)
+
+USAGE:
+  flexround <command> [flags]
+
+COMMANDS:
+  quantize   Run PTQ reconstruction on one model
+             --model <name> --method <m> --bits <b> [--mode w|wa]
+             [--abits <b>] [--iters <n>] [--lr <f>] [--drop-p <f>]
+             [--setting brecq|qdrop] [--calib-n <n>] [--seed <n>] [--eval]
+  eval       Evaluate a model (fp or after quantize with --load)
+             --model <name> [--method…/--bits… as quantize]
+  sweep      Run a whole experiment table from a config file
+             --config configs/<exp>.toml [--set k=v …]
+  figure     Emit grid-shift / histogram data for the paper's figures
+             --model <name> --unit <u> --method <m> --bits <b> [--out csv]
+  inspect    Print manifest facts (models, units, artifacts)
+             [--model <name>]
+  selftest   Load + execute a smoke subset of artifacts and verify numerics
+
+GLOBAL FLAGS:
+  --artifacts <dir>   artifact directory (default: artifacts/)
+  --report <dir>      report output directory (default: reports/)
+  --set k=v           config override (repeatable)
+  --quiet             suppress progress logging
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn basic_parse() {
+        let a = Args::parse(&sv(&["quantize", "--model", "m1", "--bits", "4", "--eval"])).unwrap();
+        assert_eq!(a.command, "quantize");
+        assert_eq!(a.flag("model"), Some("m1"));
+        assert_eq!(a.usize_flag("bits", 0), 4);
+        assert!(a.has("eval"));
+        assert_eq!(a.flag("eval"), Some("true"));
+    }
+
+    #[test]
+    fn eq_form_and_repeats() {
+        let a = Args::parse(&sv(&["sweep", "--set", "a=1", "--set=b=2", "pos1"])).unwrap();
+        assert_eq!(a.flag_all("set"), vec!["a=1", "b=2"]);
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_bool() {
+        let a = Args::parse(&sv(&["eval", "--quiet", "--model", "m"])).unwrap();
+        assert_eq!(a.flag("quiet"), Some("true"));
+        assert_eq!(a.flag("model"), Some("m"));
+    }
+
+    #[test]
+    fn no_command() {
+        let a = Args::parse(&sv(&["--help"])).unwrap();
+        assert_eq!(a.command, "");
+        assert!(a.has("help"));
+    }
+}

@@ -1,0 +1,289 @@
+//! Layered configuration: TOML-subset files + CLI `--set key=value`
+//! overrides + typed accessors with defaults.
+//!
+//! The supported TOML subset covers what experiment configs need:
+//! `[section]` headers (one level), `key = value` with strings, numbers,
+//! booleans, and homogeneous inline arrays, plus `#` comments.  Keys are
+//! addressed as `"section.key"`.
+
+use crate::Result;
+use anyhow::{anyhow, bail};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    List(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+/// Layered key-value config; later layers override earlier ones.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    map: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse and merge a TOML-subset file.
+    pub fn load_file(&mut self, path: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        self.load_str(&text)
+            .map_err(|e| anyhow!("{}: {e}", path.display()))
+    }
+
+    pub fn load_str(&mut self, text: &str) -> Result<()> {
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: malformed section header", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            self.map.insert(full, val);
+        }
+        Ok(())
+    }
+
+    /// Apply a `key=value` CLI override (value parsed like a TOML value;
+    /// bare words become strings).
+    pub fn set_override(&mut self, kv: &str) -> Result<()> {
+        let eq = kv.find('=').ok_or_else(|| anyhow!("override must be key=value: {kv:?}"))?;
+        let key = kv[..eq].trim().to_string();
+        let raw = kv[eq + 1..].trim();
+        let val = parse_value(raw).unwrap_or_else(|_| Value::Str(raw.to_string()));
+        self.map.insert(key, val);
+        Ok(())
+    }
+
+    pub fn set(&mut self, key: &str, val: Value) {
+        self.map.insert(key.to_string(), val);
+    }
+
+    // ---- typed getters ---------------------------------------------------
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.map
+            .get(key)
+            .and_then(|v| v.as_str().ok().map(str::to_string))
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.map.get(key).and_then(|v| v.as_f64().ok()).unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.f64(key, default as f64) as usize
+    }
+
+    pub fn boolean(&self, key: &str, default: bool) -> bool {
+        self.map.get(key).and_then(|v| v.as_bool().ok()).unwrap_or(default)
+    }
+
+    pub fn list_str(&self, key: &str) -> Option<Vec<String>> {
+        match self.map.get(key)? {
+            Value::List(v) => v.iter().map(|x| x.as_str().ok().map(str::to_string)).collect(),
+            Value::Str(s) => Some(s.split(',').map(|t| t.trim().to_string()).collect()),
+            _ => None,
+        }
+    }
+
+    pub fn list_usize(&self, key: &str) -> Option<Vec<usize>> {
+        match self.map.get(key)? {
+            Value::List(v) => v.iter().map(|x| x.as_f64().ok().map(|n| n as usize)).collect(),
+            Value::Num(n) => Some(vec![*n as usize]),
+            Value::Str(s) => s.split(',').map(|t| t.trim().parse::<usize>().ok()).collect(),
+            _ => None,
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s.starts_with('[') && s.ends_with(']') {
+        let inner = &s[1..s.len() - 1];
+        if inner.trim().is_empty() {
+            return Ok(Value::List(vec![]));
+        }
+        let items: Result<Vec<Value>> = split_top(inner).iter().map(|t| parse_value(t.trim())).collect();
+        return Ok(Value::List(items?));
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| anyhow!("cannot parse value {s:?}"))
+}
+
+fn split_top(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if depth == 0 && !in_str => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let mut c = Config::new();
+        c.load_str(
+            r#"
+# experiment config
+name = "t2"            # inline comment
+[quant]
+bits = [2, 3, 4]
+lr = 2e-3
+qdrop = true
+model = "tinymobilenet"
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.str("name", ""), "t2");
+        assert_eq!(c.list_usize("quant.bits").unwrap(), vec![2, 3, 4]);
+        assert!((c.f64("quant.lr", 0.0) - 2e-3).abs() < 1e-12);
+        assert!(c.boolean("quant.qdrop", false));
+        assert_eq!(c.str("quant.model", ""), "tinymobilenet");
+        assert_eq!(c.usize("quant.iters", 100), 100); // default
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut c = Config::new();
+        c.load_str("[a]\nx = 1\n").unwrap();
+        c.set_override("a.x=5").unwrap();
+        assert_eq!(c.usize("a.x", 0), 5);
+        c.set_override("a.name=hello").unwrap();
+        assert_eq!(c.str("a.name", ""), "hello");
+        assert!(c.set_override("garbage").is_err());
+    }
+
+    #[test]
+    fn comment_inside_string() {
+        let mut c = Config::new();
+        c.load_str("k = \"a#b\"\n").unwrap();
+        assert_eq!(c.str("k", ""), "a#b");
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        let mut c = Config::new();
+        assert!(c.load_str("[bad\n").is_err());
+        assert!(c.load_str("novalue\n").is_err());
+        assert!(c.load_str("k = @@\n").is_err());
+    }
+
+    #[test]
+    fn list_of_strings() {
+        let mut c = Config::new();
+        c.load_str("methods = [\"rtn\", \"flexround\"]\n").unwrap();
+        assert_eq!(c.list_str("methods").unwrap(), vec!["rtn", "flexround"]);
+    }
+}

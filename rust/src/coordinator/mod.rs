@@ -1,0 +1,116 @@
+//! The PTQ coordinator — the paper's experimental engine as a Rust system.
+//!
+//! Given a [`Plan`] (model × method × bits × mode × setting), a [`Session`]:
+//!
+//! 1. loads the model's weights / init packs / datasets (FXT),
+//! 2. propagates the calibration set through the *full-precision* unit chain
+//!    (targets `Y = unit_fp(X)`),
+//! 3. for each unit in topological order, runs the AOT-compiled
+//!    reconstruction executable for `iters` Adam steps on random calibration
+//!    minibatches — learning the method's parameters (FlexRound's s1/S2/s3/s4,
+//!    AdaRound's V, …) and, in "wa" mode, the LSQ activation steps with
+//!    QDrop mixing (`drop_p` = 0 reproduces the BRECQ setting, 0.5 QDrop),
+//! 4. advances the *quantized-path* calibration activations X̃ through the
+//!    learned unit (the paper's §3.1 X vs X̃ distinction),
+//! 5. evaluates the fully quantized model (accuracy / perplexity / BLEU /
+//!    zero-shot multiple choice) via [`crate::eval`].
+//!
+//! β annealing for AdaRound's rounding regularizer and the iteration seeds
+//! for QDrop masks are generated here and passed as executable inputs.
+
+pub mod session;
+
+pub use session::*;
+
+/// What to quantize and how — one row of one paper table.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub model: String,
+    pub method: String,
+    /// "w" (weight-only) or "wa" (weights + activations)
+    pub mode: String,
+    pub bits_w: u32,
+    pub abits: u32,
+    pub iters: usize,
+    pub lr: f64,
+    /// QDrop probability: 0.0 → BRECQ setting ("B + X"), 0.5 → QDrop ("Q + X")
+    pub drop_p: f64,
+    /// Number of calibration samples to use (≤ exported calib_n)
+    pub calib_n: usize,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Plan {
+    pub fn new(model: &str, method: &str) -> Plan {
+        Plan {
+            model: model.to_string(),
+            method: method.to_string(),
+            mode: "w".to_string(),
+            bits_w: 4,
+            abits: 8,
+            iters: 0, // 0 → manifest default
+            lr: 0.0,  // 0 → manifest default for the method
+            drop_p: 0.0,
+            calib_n: 0, // 0 → all exported
+            seed: 7,
+            verbose: false,
+        }
+    }
+
+    pub fn setting_label(&self) -> &'static str {
+        if self.mode == "w" {
+            "B"
+        } else if self.drop_p > 0.0 {
+            "Q"
+        } else {
+            "B"
+        }
+    }
+}
+
+/// AdaRound β annealing (matches `python/compile/graphs.py::_beta`).
+pub fn beta_schedule(t: usize, iters: usize) -> f64 {
+    let (beta_hi, beta_lo, warmup) = (20.0f64, 2.0f64, 0.2f64);
+    let tf = t as f64;
+    let nf = iters as f64;
+    if tf < warmup * nf {
+        beta_hi
+    } else {
+        let frac = ((tf - warmup * nf) / ((1.0 - warmup) * nf).max(1.0)).min(1.0);
+        beta_lo + 0.5 * (beta_hi - beta_lo) * (1.0 + (std::f64::consts::PI * frac).cos())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beta_anneals_hi_to_lo() {
+        let n = 100;
+        assert_eq!(beta_schedule(1, n), 20.0);
+        assert_eq!(beta_schedule(19, n), 20.0);
+        let mid = beta_schedule(60, n);
+        assert!(mid < 20.0 && mid > 2.0);
+        let end = beta_schedule(100, n);
+        assert!(end < 2.5, "end beta {end}");
+        // monotone non-increasing after warmup
+        let mut prev = f64::INFINITY;
+        for t in 20..=100 {
+            let b = beta_schedule(t, n);
+            assert!(b <= prev + 1e-9);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn plan_setting_labels() {
+        let mut p = Plan::new("m", "flexround");
+        assert_eq!(p.setting_label(), "B");
+        p.mode = "wa".into();
+        assert_eq!(p.setting_label(), "B");
+        p.drop_p = 0.5;
+        assert_eq!(p.setting_label(), "Q");
+    }
+}

@@ -1,0 +1,389 @@
+//! The reconstruction session: state + the per-unit PTQ loop.
+
+use super::{beta_schedule, Plan};
+use crate::manifest::{Manifest, ModelInfo, PackEntry, UnitInfo};
+use crate::runtime::{Exec, Runtime};
+use crate::tensor::{qrange, Tensor};
+use crate::util::rng::Pcg32;
+use crate::Result;
+use anyhow::{anyhow, bail};
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Learned state of one unit after reconstruction.
+#[derive(Clone)]
+pub struct UnitState {
+    pub unit: String,
+    pub method: String,
+    /// flat parameter values, in pack order
+    pub params: Vec<Tensor>,
+    pub entries: Vec<PackEntry>,
+    pub first_loss: f64,
+    pub final_loss: f64,
+    pub bits_w: u32,
+    pub abits: u32,
+}
+
+/// Outcome of a full PTQ run.
+pub struct QuantResult {
+    pub plan: Plan,
+    pub units: Vec<UnitState>,
+    pub recon_seconds: f64,
+    pub recon_steps: u64,
+}
+
+/// A loaded model: weights + inits + datasets + artifact handles.
+pub struct Session<'rt> {
+    pub rt: &'rt Runtime,
+    pub man: &'rt Manifest,
+    pub model: &'rt ModelInfo,
+    pub weights: BTreeMap<String, Tensor>,
+    pub inits: BTreeMap<String, Tensor>,
+    pub data: BTreeMap<String, Tensor>,
+}
+
+impl<'rt> Session<'rt> {
+    pub fn open(rt: &'rt Runtime, man: &'rt Manifest, model: &str) -> Result<Session<'rt>> {
+        let mi = man.model(model)?;
+        let weights = crate::ser::fxt::read(&man.artifact_path(&mi.weights_file))?;
+        let inits = crate::ser::fxt::read(&man.artifact_path(&mi.init_file))?;
+        let data = crate::ser::fxt::read(&man.artifact_path(&mi.data_file))?;
+        Ok(Session { rt, man, model: mi, weights, inits, data })
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<&Tensor> {
+        self.data
+            .get(name)
+            .ok_or_else(|| anyhow!("model {} has no dataset {name:?}", self.model.name))
+    }
+
+    // ------------------------------------------------------------------
+    // Input pipeline
+    // ------------------------------------------------------------------
+
+    /// Calibration inputs to the first unit: images directly, or the
+    /// embedding output for token models (chunked by calib_batch).
+    pub fn first_unit_inputs(&self, xs: &Tensor) -> Result<Vec<Tensor>> {
+        let b = self.model.calib_batch;
+        let n = xs.shape()[0];
+        if n % b != 0 {
+            bail!("dataset rows {n} not a multiple of batch {b}");
+        }
+        let mut chunks = Vec::with_capacity(n / b);
+        if let Some(embed) = &self.model.embed_artifact {
+            let exe = self.rt.load(embed)?;
+            for i in (0..n).step_by(b) {
+                let chunk = xs.slice_rows(i, i + b)?;
+                let out = exe.run(self.rt, &[chunk], false)?;
+                chunks.push(out.into_iter().next().unwrap());
+            }
+        } else {
+            for i in (0..n).step_by(b) {
+                chunks.push(xs.slice_rows(i, i + b)?);
+            }
+        }
+        Ok(chunks)
+    }
+
+    /// Advance activations one unit through the *full-precision* chain.
+    pub fn advance_fp(&self, unit: &UnitInfo, chunks: &[Tensor]) -> Result<Vec<Tensor>> {
+        let exe = self.rt.load(unit.artifact("fp")?)?;
+        chunks
+            .iter()
+            .map(|c| Ok(exe.run(self.rt, std::slice::from_ref(c), false)?.into_iter().next().unwrap()))
+            .collect()
+    }
+
+    /// Advance activations one unit through the *quantized* chain with the
+    /// learned parameters.
+    ///
+    /// Input-liveness note: `jax.jit` prunes arguments that are dead in the
+    /// lowered graph, so weight-only ("w") executables do not take the
+    /// activation-quant scalars — the assembly below mirrors exactly what
+    /// the AOT build kept (PJRT rejects any arity mismatch loudly).
+    pub fn advance_q(&self, unit: &UnitInfo, st: &UnitState, mode: &str,
+                     chunks: &[Tensor]) -> Result<Vec<Tensor>> {
+        let exe = self.rt.load(unit.artifact(&format!("q.{}.{}", st.method, mode))?)?;
+        let scal = self.q_scalars(st, mode);
+        let live = live_params(&st.method, &st.entries, &st.params);
+        chunks
+            .iter()
+            .map(|c| {
+                let mut inputs = vec![c.clone()];
+                inputs.extend(scal.iter().cloned());
+                inputs.extend(live.iter().cloned());
+                Ok(exe.run(self.rt, &inputs, false)?.into_iter().next().unwrap())
+            })
+            .collect()
+    }
+
+    fn q_scalars(&self, st: &UnitState, mode: &str) -> Vec<Tensor> {
+        let (qmin_w, qmax_w) = qrange(st.bits_w, self.model.symmetric);
+        let mut v = vec![Tensor::scalar(qmin_w), Tensor::scalar(qmax_w)];
+        if mode == "wa" {
+            let (qmin_a, qmax_a) = qrange(st.abits, false);
+            v.push(Tensor::scalar(qmin_a));
+            v.push(Tensor::scalar(qmax_a));
+        }
+        v
+    }
+
+    // ------------------------------------------------------------------
+    // Parameter initialization from the exported init packs
+    // ------------------------------------------------------------------
+
+    /// Initial flat parameter values for (unit, method, mode, bits).
+    pub fn init_params(&self, unit: &UnitInfo, method: &str, mode: &str,
+                       bits_w: u32, abits: u32) -> Result<(Vec<Tensor>, Vec<PackEntry>)> {
+        let entries = unit.pack(method, mode)?.to_vec();
+        let mut out = Vec::with_capacity(entries.len());
+        for e in &entries {
+            if let Some(site) = e.name.strip_prefix("act") {
+                let (site_i, key) = site
+                    .split_once('.')
+                    .ok_or_else(|| anyhow!("bad act entry {:?}", e.name))?;
+                let range = self
+                    .inits
+                    .get(&format!("actrange/{}/site{}", unit.name, site_i))
+                    .ok_or_else(|| anyhow!("missing actrange for {}/{}", unit.name, site_i))?;
+                let lo = range.as_f32()?[0];
+                let hi = range.as_f32()?[1];
+                let (qmin_a, qmax_a) = qrange(abits, false);
+                let step = ((hi - lo) / (qmax_a - qmin_a)).max(1e-6);
+                let zp = (-lo / step).round().clamp(qmin_a, qmax_a);
+                let v = if key == "step" { step } else { zp };
+                out.push(Tensor::from_f32(vec![v], &[1, 1])?);
+            } else {
+                let key = format!("init/{}/{}/b{}/{}", unit.name, method, bits_w, e.name);
+                let t = self
+                    .inits
+                    .get(&key)
+                    .ok_or_else(|| anyhow!("missing init tensor {key:?}"))?;
+                out.push(t.clone());
+            }
+        }
+        Ok((out, entries))
+    }
+
+    // ------------------------------------------------------------------
+    // The PTQ reconstruction loop
+    // ------------------------------------------------------------------
+
+    /// Run the full per-unit reconstruction pipeline for `plan`.
+    pub fn quantize(&self, plan: &Plan) -> Result<QuantResult> {
+        let mi = self.model;
+        let iters = if plan.iters == 0 { mi.iters_default } else { plan.iters };
+        let lr = if plan.lr == 0.0 { mi.lr_for(&plan.method) } else { plan.lr };
+        let calib_full = self.dataset("calib_x")?;
+        let calib_n = if plan.calib_n == 0 {
+            calib_full.shape()[0]
+        } else {
+            plan.calib_n.min(calib_full.shape()[0])
+        };
+        // round down to a chunk multiple ≥ one batch
+        let b = mi.calib_batch;
+        let calib_n = (calib_n / b).max(1) * b;
+        let calib = calib_full.slice_rows(0, calib_n)?;
+
+        let mut rng = Pcg32::seeded(plan.seed);
+        let mut x_fp = self.first_unit_inputs(&calib)?;
+        let mut x_q = x_fp.clone();
+
+        let mut states = Vec::new();
+        let mut recon_seconds = 0.0;
+        let mut recon_steps = 0u64;
+
+        for unit in &mi.units {
+            let bits_w = unit.bits_override.unwrap_or(plan.bits_w);
+            let abits = if unit.bits_override == Some(8) { 8 } else { plan.abits };
+            let y_fp = self.advance_fp(unit, &x_fp)?; // targets = fp outputs
+
+            let (mut params, entries) =
+                self.init_params(unit, &plan.method, &plan.mode, bits_w, abits)?;
+            let mut st = UnitState {
+                unit: unit.name.clone(),
+                method: plan.method.clone(),
+                // params/entries placeholders replaced after recon
+                params: params.clone(),
+                entries: entries.clone(),
+                first_loss: f64::NAN,
+                final_loss: f64::NAN,
+                bits_w,
+                abits,
+            };
+
+            if plan.method != "rtn" && iters > 0 {
+                let t0 = Instant::now();
+                let exe = self.rt.load(
+                    unit.artifact(&format!("recon.{}.{}", plan.method, plan.mode))?)?;
+                let (qmin_w, qmax_w) = qrange(bits_w, mi.symmetric);
+                let (qmin_a, qmax_a) = qrange(abits, false);
+                let wa = plan.mode == "wa";
+                let has_beta = plan.method == "adaround";
+                // Adam state starts at zero
+                let mut m: Vec<Tensor> =
+                    params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+                let mut v = m.clone();
+                let x_all = Tensor::concat_rows(&x_q)?;
+                let y_all = Tensor::concat_rows(&y_fp)?;
+                let n = x_all.shape()[0];
+
+                for t in 1..=iters {
+                    let idx = rng.sample_indices(n, b);
+                    let xb = x_all.gather_rows(&idx)?;
+                    let yb = y_all.gather_rows(&idx)?;
+                    let beta = beta_schedule(t, iters);
+                    let seed = (rng.next_u32() & 0x7FFF_FFFF) as i32;
+                    // same liveness rule as advance_q: jit pruned the scalars
+                    // that are dead in this (method, mode) — qmin_a/qmax_a/
+                    // drop_p/seed in "w" mode, beta for non-AdaRound methods.
+                    let mut inputs = vec![
+                        xb,
+                        yb,
+                        Tensor::scalar(qmin_w),
+                        Tensor::scalar(qmax_w),
+                    ];
+                    if wa {
+                        inputs.push(Tensor::scalar(qmin_a));
+                        inputs.push(Tensor::scalar(qmax_a));
+                        inputs.push(Tensor::scalar(plan.drop_p as f32));
+                    }
+                    if has_beta {
+                        inputs.push(Tensor::scalar(beta as f32));
+                    }
+                    inputs.push(Tensor::scalar(lr as f32));
+                    inputs.push(Tensor::scalar(t as f32));
+                    if wa {
+                        inputs.push(Tensor::scalar_i32(seed));
+                    }
+                    inputs.extend(params.iter().cloned());
+                    inputs.extend(m.iter().cloned());
+                    inputs.extend(v.iter().cloned());
+                    let out = exe.run(self.rt, &inputs, true)?;
+                    let np = params.len();
+                    if out.len() != 1 + 3 * np {
+                        bail!(
+                            "recon {}: expected {} outputs, got {}",
+                            unit.name, 1 + 3 * np, out.len()
+                        );
+                    }
+                    let loss = out[0].item()? as f64;
+                    if t == 1 {
+                        st.first_loss = loss;
+                    }
+                    st.final_loss = loss;
+                    let mut it = out.into_iter();
+                    let _ = it.next();
+                    params = it.by_ref().take(np).collect();
+                    m = it.by_ref().take(np).collect();
+                    v = it.by_ref().take(np).collect();
+                    recon_steps += 1;
+                    if plan.verbose && (t == 1 || t % 100 == 0 || t == iters) {
+                        eprintln!(
+                            "    [{}/{}] iter {t}/{iters} loss {loss:.6}",
+                            self.model.name, unit.name
+                        );
+                    }
+                }
+                st.params = params.clone();
+                recon_seconds += t0.elapsed().as_secs_f64();
+            }
+
+            // advance both chains
+            x_q = self.advance_q(unit, &st, &plan.mode, &x_q)?;
+            x_fp = y_fp;
+            states.push(st);
+        }
+
+        Ok(QuantResult {
+            plan: plan.clone(),
+            units: states,
+            recon_seconds,
+            recon_steps,
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // Quantized / fp forward over an arbitrary dataset (for eval)
+    // ------------------------------------------------------------------
+
+    /// Run `xs` through the fully quantized chain; returns final outputs
+    /// per chunk (logits for CNNs, hidden states for transformers).
+    pub fn forward_q(&self, result: &QuantResult, xs: &Tensor) -> Result<Vec<Tensor>> {
+        let mut chunks = self.first_unit_inputs(xs)?;
+        for (unit, st) in self.model.units.iter().zip(&result.units) {
+            chunks = self.advance_q(unit, st, &result.plan.mode, &chunks)?;
+        }
+        Ok(chunks)
+    }
+
+    /// Full-precision forward (baseline metrics).
+    pub fn forward_fp(&self, xs: &Tensor) -> Result<Vec<Tensor>> {
+        let mut chunks = self.first_unit_inputs(xs)?;
+        for unit in &self.model.units {
+            chunks = self.advance_fp(unit, &chunks)?;
+        }
+        Ok(chunks)
+    }
+
+    /// Load a head executable by key ("lm", "logits", task names, "span").
+    pub fn head(&self, key: &str) -> Result<Rc<Exec>> {
+        let f = self
+            .model
+            .head_artifacts
+            .get(key)
+            .ok_or_else(|| anyhow!("model {} has no head {key:?}", self.model.name))?;
+        self.rt.load(f)
+    }
+
+    /// Export fake-quantized weights + integer codes for each layer of a
+    /// unit (the Figure 3–6 data): returns [(Ŵ, codes)] in layer order.
+    pub fn export_qw(&self, unit: &UnitInfo, st: &UnitState) -> Result<Vec<(Tensor, Tensor)>> {
+        let exe = self.rt.load(unit.artifact(&format!("qw.{}", st.method))?)?;
+        let (qmin_w, qmax_w) = qrange(st.bits_w, self.model.symmetric);
+        // qw artifacts were lowered against the "w" pack (no act entries);
+        // derive its length from the state's own pack so wa-only models
+        // (whose manifest records no "w" pack) still export correctly —
+        // the weight entries are a strict prefix of the wa pack.
+        let n_w = st.entries.iter().filter(|e| !e.name.starts_with("act")).count();
+        let mut inputs = vec![Tensor::scalar(qmin_w), Tensor::scalar(qmax_w)];
+        inputs.extend(live_params(
+            &st.method, &st.entries[..n_w], &st.params[..n_w]).into_iter());
+        let out = exe.run(self.rt, &inputs, true)?;
+        if out.len() != 2 * unit.layers.len() {
+            bail!("qw {}: expected {} outputs, got {}", unit.name, 2 * unit.layers.len(), out.len());
+        }
+        let mut res = Vec::new();
+        let mut it = out.into_iter();
+        while let (Some(w), Some(c)) = (it.next(), it.next()) {
+            res.push((w, c));
+        }
+        Ok(res)
+    }
+}
+
+// UnitState carries its method for advance_q
+impl UnitState {
+    pub fn rtn_like(&self) -> bool {
+        self.method == "rtn"
+    }
+}
+
+/// Parameters that are *live* in a forward-only (q/qw) executable.
+///
+/// The ablation `flexround_no_s34` replaces s3/s4 with constant ones in the
+/// forward, so `jax.jit` pruned those slots out of the compiled signature —
+/// mirror that here (recon executables still take them: they round-trip
+/// through the Adam state outputs).
+fn live_params(method: &str, entries: &[PackEntry], params: &[Tensor]) -> Vec<Tensor> {
+    entries
+        .iter()
+        .zip(params)
+        .filter(|(e, _)| {
+            !(method == "flexround_no_s34"
+                && (e.name.ends_with(".s3") || e.name.ends_with(".s4")))
+        })
+        .map(|(_, p)| p.clone())
+        .collect()
+}

@@ -1,0 +1,102 @@
+//! BLEU-4 (sentence level, with +1 smoothing) over integer token sequences —
+//! the Table 6 WebNLG metric.
+
+use std::collections::HashMap;
+
+/// n-gram counts of a sequence.
+fn ngrams(seq: &[i32], n: usize) -> HashMap<&[i32], usize> {
+    let mut m: HashMap<&[i32], usize> = HashMap::new();
+    if seq.len() >= n {
+        for i in 0..=seq.len() - n {
+            *m.entry(&seq[i..i + n]).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// Modified n-gram precision with add-one smoothing (Lin & Och 2004).
+fn precision(hyp: &[i32], rf: &[i32], n: usize) -> f64 {
+    let h = ngrams(hyp, n);
+    let r = ngrams(rf, n);
+    let total: usize = h.values().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let mut clipped = 0usize;
+    for (g, &c) in &h {
+        clipped += c.min(r.get(g).copied().unwrap_or(0));
+    }
+    (clipped as f64 + 1.0) / (total as f64 + 1.0)
+}
+
+/// Sentence BLEU-4 with brevity penalty; returns a value in [0, ~1].
+pub fn bleu4(hyp: &[i32], rf: &[i32]) -> f64 {
+    if hyp.is_empty() || rf.is_empty() {
+        return if hyp.is_empty() && rf.is_empty() { 1.0 } else { 0.0 };
+    }
+    let mut logsum = 0.0;
+    for n in 1..=4 {
+        let p = precision(hyp, rf, n);
+        if p <= 0.0 {
+            return 0.0;
+        }
+        logsum += p.ln() / 4.0;
+    }
+    let bp = if hyp.len() >= rf.len() {
+        1.0
+    } else {
+        (1.0 - rf.len() as f64 / hyp.len() as f64).exp()
+    };
+    bp * logsum.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_is_near_one() {
+        let s = [5, 6, 7, 8, 9, 10];
+        let b = bleu4(&s, &s);
+        assert!(b > 0.8, "{b}");
+    }
+
+    #[test]
+    fn disjoint_is_low() {
+        let a = [1, 2, 3, 4, 5, 1, 2, 3, 4, 5];
+        let b = [10, 11, 12, 13, 14, 15, 16, 17, 18, 19];
+        // +1 smoothing keeps this non-zero but it must stay far below overlap
+        assert!(bleu4(&a, &b) < 0.3, "{}", bleu4(&a, &b));
+        assert!(bleu4(&a, &b) < bleu4(&b, &b));
+    }
+
+    #[test]
+    fn partial_overlap_ordered() {
+        let r = [5, 6, 7, 8, 9, 10];
+        let h_good = [5, 6, 7, 8, 20, 21];
+        let h_bad = [5, 20, 7, 21, 9, 22];
+        assert!(bleu4(&h_good, &r) > bleu4(&h_bad, &r));
+    }
+
+    #[test]
+    fn brevity_penalty() {
+        let r = [5, 6, 7, 8, 9, 10, 11, 12];
+        let short = [5, 6];
+        let full: Vec<i32> = r.to_vec();
+        assert!(bleu4(&short, &r) < bleu4(&full, &r));
+    }
+
+    #[test]
+    fn range_is_sane() {
+        // randomized: always within [0, 1]
+        let mut rng = crate::util::rng::Pcg32::seeded(2);
+        for _ in 0..200 {
+            let n1 = 1 + rng.below(12) as usize;
+            let n2 = 1 + rng.below(12) as usize;
+            let h: Vec<i32> = (0..n1).map(|_| rng.below(10) as i32).collect();
+            let r: Vec<i32> = (0..n2).map(|_| rng.below(10) as i32).collect();
+            let b = bleu4(&h, &r);
+            assert!((0.0..=1.0 + 1e-9).contains(&b), "bleu {b}");
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! Evaluation of quantized (and full-precision) models: the metrics behind
+//! every table of the paper — top-1/top-5 accuracy, perplexity, GLUE-style
+//! task accuracy, span exact-match, BLEU over greedy generations, and
+//! zero-shot multiple-choice scoring by length-normalized log-likelihood.
+
+pub mod bleu;
+
+use crate::coordinator::{QuantResult, Session};
+use crate::tensor::Tensor;
+use crate::Result;
+use anyhow::bail;
+use std::collections::BTreeMap;
+
+/// A bundle of named metrics.
+pub type Metrics = BTreeMap<String, f64>;
+
+// ---------------------------------------------------------------------------
+// Classification (CNNs — Tables 1/2/3/8/9/10/11, Figure 7)
+// ---------------------------------------------------------------------------
+
+/// Top-1/top-5 over logits chunks vs labels.
+pub fn topk_accuracy(logits_chunks: &[Tensor], labels: &Tensor) -> Result<Metrics> {
+    let labels = labels.as_i32()?;
+    let mut n = 0usize;
+    let mut top1 = 0usize;
+    let mut top5 = 0usize;
+    for chunk in logits_chunks {
+        let preds = chunk.topk_rows(5)?;
+        for row in preds {
+            let y = labels[n] as usize;
+            if row[0] == y {
+                top1 += 1;
+            }
+            if row.contains(&y) {
+                top5 += 1;
+            }
+            n += 1;
+        }
+    }
+    if n != labels.len() {
+        bail!("label count {} != logit rows {n}", labels.len());
+    }
+    let mut m = Metrics::new();
+    m.insert("top1".into(), top1 as f64 / n as f64);
+    m.insert("top5".into(), top5 as f64 / n as f64);
+    Ok(m)
+}
+
+/// CNN evaluation: quantized chain ends at head_fc → logits.
+pub fn eval_cnn(sess: &Session, result: &QuantResult) -> Result<Metrics> {
+    let xs = sess.dataset("eval_x")?;
+    let logits = sess.forward_q(result, xs)?;
+    topk_accuracy(&logits, sess.dataset("eval_y")?)
+}
+
+pub fn eval_cnn_fp(sess: &Session) -> Result<Metrics> {
+    let xs = sess.dataset("eval_x")?;
+    let logits = sess.forward_fp(xs)?;
+    topk_accuracy(&logits, sess.dataset("eval_y")?)
+}
+
+// ---------------------------------------------------------------------------
+// NLU (encoders — Tables 4/12/15)
+// ---------------------------------------------------------------------------
+
+pub const NLU_TASKS: [&str; 3] = ["entail", "para", "accept"];
+
+/// Accuracy per classification task + span exact-match.
+pub fn eval_encoder(sess: &Session, result: Option<&QuantResult>) -> Result<Metrics> {
+    let mut m = Metrics::new();
+    for task in NLU_TASKS {
+        let xs = sess.dataset(&format!("eval_{task}_x"))?;
+        let h = match result {
+            Some(r) => sess.forward_q(r, xs)?,
+            None => sess.forward_fp(xs)?,
+        };
+        let head = sess.head(task)?;
+        let ys = sess.dataset(&format!("eval_{task}_y"))?.as_i32()?;
+        let mut correct = 0usize;
+        let mut n = 0usize;
+        for chunk in &h {
+            let logits = head.run(sess.rt, std::slice::from_ref(chunk), false)?;
+            for p in logits[0].argmax_rows()? {
+                if p == ys[n] as usize {
+                    correct += 1;
+                }
+                n += 1;
+            }
+        }
+        m.insert(task.to_string(), correct as f64 / n as f64);
+    }
+    // span task (SQuAD analog): exact match on (start, end)
+    let xs = sess.dataset("eval_span_x")?;
+    let h = match result {
+        Some(r) => sess.forward_q(r, xs)?,
+        None => sess.forward_fp(xs)?,
+    };
+    let head = sess.head("span")?;
+    let lab = sess.dataset("eval_span_y")?;
+    let labs = lab.as_i32()?;
+    let mut em = 0usize;
+    let mut n = 0usize;
+    for chunk in &h {
+        let out = head.run(sess.rt, std::slice::from_ref(chunk), true)?;
+        let s_pred = out[0].argmax_rows()?;
+        let e_pred = out[1].argmax_rows()?;
+        for (ps, pe) in s_pred.into_iter().zip(e_pred) {
+            if ps == labs[2 * n] as usize && pe == labs[2 * n + 1] as usize {
+                em += 1;
+            }
+            n += 1;
+        }
+    }
+    m.insert("span_em".into(), em as f64 / n as f64);
+    Ok(m)
+}
+
+// ---------------------------------------------------------------------------
+// Language modeling (decoders — Tables 5/7/19/23/24)
+// ---------------------------------------------------------------------------
+
+/// Perplexity over a token dataset through the lm head.
+pub fn eval_ppl(sess: &Session, result: Option<&QuantResult>, dataset: &str) -> Result<f64> {
+    let xs = sess.dataset(dataset)?;
+    let h = match result {
+        Some(r) => sess.forward_q(r, xs)?,
+        None => sess.forward_fp(xs)?,
+    };
+    let head = sess.head("lm")?;
+    let b = sess.model.calib_batch;
+    let mut nll = 0.0f64;
+    let mut cnt = 0.0f64;
+    for (i, chunk) in h.iter().enumerate() {
+        let toks = xs.slice_rows(i * b, (i + 1) * b)?;
+        let out = head.run(sess.rt, &[chunk.clone(), toks], true)?;
+        nll += out[0].sum() as f64;
+        cnt += out[1].sum() as f64;
+    }
+    Ok((nll / cnt.max(1.0)).exp())
+}
+
+/// Per-sequence mean NLL (length-normalized) — the multiple-choice scorer.
+pub fn seq_scores(sess: &Session, result: Option<&QuantResult>, xs: &Tensor) -> Result<Vec<f64>> {
+    let h = match result {
+        Some(r) => sess.forward_q(r, xs)?,
+        None => sess.forward_fp(xs)?,
+    };
+    let head = sess.head("lm")?;
+    let b = sess.model.calib_batch;
+    let mut scores = Vec::with_capacity(xs.shape()[0]);
+    for (i, chunk) in h.iter().enumerate() {
+        let toks = xs.slice_rows(i * b, (i + 1) * b)?;
+        let out = head.run(sess.rt, &[chunk.clone(), toks], true)?;
+        let nll = out[0].as_f32()?;
+        let cnt = out[1].as_f32()?;
+        for (s, c) in nll.iter().zip(cnt) {
+            scores.push(-(*s as f64) / (*c as f64).max(1.0)); // higher = better
+        }
+    }
+    Ok(scores)
+}
+
+pub const MC_TASKS: [&str; 3] = ["grammar", "copy", "parity"];
+pub const MC_CHOICES: usize = 4;
+
+/// Zero-shot multiple choice: pick the candidate with the best
+/// length-normalized log-likelihood (the LLaMA protocol).
+pub fn eval_mc(sess: &Session, result: Option<&QuantResult>, task: &str) -> Result<f64> {
+    let xs = sess.dataset(&format!("mc_{task}_x"))?;
+    let ans = sess.dataset(&format!("mc_{task}_y"))?.as_i32()?;
+    let scores = seq_scores(sess, result, xs)?;
+    if scores.len() != ans.len() * MC_CHOICES {
+        bail!("mc {task}: {} scores vs {} answers", scores.len(), ans.len());
+    }
+    let mut correct = 0usize;
+    for (i, &a) in ans.iter().enumerate() {
+        let s = &scores[i * MC_CHOICES..(i + 1) * MC_CHOICES];
+        let pick = s
+            .iter()
+            .enumerate()
+            .max_by(|x, y| x.1.partial_cmp(y.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(j, _)| j)
+            .unwrap_or(0);
+        if pick == a as usize {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / ans.len() as f64)
+}
+
+// ---------------------------------------------------------------------------
+// Data-to-text generation (dec_lora — Table 6): greedy decode + BLEU
+// ---------------------------------------------------------------------------
+
+/// Greedy-decode completions from `start` positions and BLEU them against
+/// the references (the suffix of each eval sequence).
+pub fn eval_d2t_bleu(sess: &Session, result: Option<&QuantResult>, split: &str) -> Result<f64> {
+    let xs = sess.dataset(&format!("eval_{split}_x"))?;
+    let starts = sess.dataset(&format!("eval_{split}_start"))?.as_i32()?;
+    let n = xs.shape()[0];
+    let seq = xs.shape()[1];
+    let b = sess.model.calib_batch;
+    let head = sess.head("logits")?;
+
+    // working copy: prompts with completions zeroed
+    let mut work: Vec<i32> = xs.as_i32()?.to_vec();
+    for i in 0..n {
+        for t in starts[i] as usize..seq {
+            work[i * seq + t] = 0;
+        }
+    }
+    let max_start = starts.iter().copied().min().unwrap_or(0) as usize;
+    // iterative greedy fill from the earliest completion position
+    for pos in max_start.saturating_sub(1)..seq - 1 {
+        let cur = Tensor::from_i32(work.clone(), &[n, seq])?;
+        let h = match result {
+            Some(r) => sess.forward_q(r, &cur)?,
+            None => sess.forward_fp(&cur)?,
+        };
+        for (ci, chunk) in h.iter().enumerate() {
+            let logits = head.run(sess.rt, std::slice::from_ref(chunk), false)?;
+            let l = &logits[0]; // (b, seq, vocab)
+            let vs = l.shape()[2];
+            let lv = l.as_f32()?;
+            for r in 0..b {
+                let i = ci * b + r;
+                if i >= n {
+                    break;
+                }
+                // only fill positions that are part of the completion
+                if pos + 1 >= starts[i] as usize && pos + 1 < seq {
+                    let row = &lv[(r * seq + pos) * vs..(r * seq + pos + 1) * vs];
+                    let mut best = 0usize;
+                    for (j, &v) in row.iter().enumerate() {
+                        if v > row[best] {
+                            best = j;
+                        }
+                    }
+                    work[i * seq + pos + 1] = best as i32;
+                }
+            }
+        }
+    }
+
+    // BLEU of generated completions vs references
+    let refs = xs.as_i32()?;
+    let mut bleu_sum = 0.0;
+    for i in 0..n {
+        let s = starts[i] as usize;
+        let hyp: Vec<i32> = work[i * seq + s..(i + 1) * seq].iter().copied()
+            .take_while(|&t| t != 0).collect();
+        let rf: Vec<i32> = refs[i * seq + s..(i + 1) * seq].iter().copied()
+            .take_while(|&t| t != 0).collect();
+        bleu_sum += bleu::bleu4(&hyp, &rf);
+    }
+    Ok(100.0 * bleu_sum / n as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_counts() {
+        let logits = Tensor::from_f32(
+            vec![
+                0.9, 0.1, 0.0, 0.0, 0.0, 0.0, // pred 0
+                0.0, 0.8, 0.1, 0.0, 0.0, 0.0, // pred 1
+                0.3, 0.2, 0.1, 0.05, 0.0, 0.9, // pred 5
+            ],
+            &[3, 6],
+        )
+        .unwrap();
+        let labels = Tensor::from_i32(vec![0, 1, 0], &[3]).unwrap();
+        let m = topk_accuracy(&[logits], &labels).unwrap();
+        assert!((m["top1"] - 2.0 / 3.0).abs() < 1e-9);
+        assert!((m["top5"] - 1.0).abs() < 1e-9); // label 0 is in top-5 of row 3
+    }
+
+    #[test]
+    fn topk_rejects_mismatch() {
+        let logits = Tensor::from_f32(vec![0.1, 0.9], &[1, 2]).unwrap();
+        let labels = Tensor::from_i32(vec![0, 1], &[2]).unwrap();
+        assert!(topk_accuracy(&[logits], &labels).is_err());
+    }
+}

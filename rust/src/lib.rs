@@ -1,0 +1,40 @@
+//! # flexround — post-training quantization by learnable element-wise division
+//!
+//! A Rust + JAX + Pallas reproduction of *FlexRound: Learnable Rounding based
+//! on Element-wise Division for Post-Training Quantization* (Lee et al.,
+//! ICML 2023).
+//!
+//! Architecture (see `DESIGN.md`):
+//!
+//! * **Layer 1/2 (build-time Python)** — Pallas fake-quant kernels inside JAX
+//!   reconstruction graphs, AOT-lowered to HLO text under `artifacts/`.
+//! * **Layer 3 (this crate)** — the PTQ coordinator: loads the artifacts via
+//!   the PJRT C API (`xla` crate), owns calibration data, schedules per-unit
+//!   reconstruction, evaluates quantized models, and regenerates every table
+//!   and figure of the paper.
+//!
+//! Python never runs at PTQ time; after `make artifacts` the binary is
+//! self-contained.
+//!
+//! The build image vendors only the `xla` crate's dependency closure, so the
+//! substrates usually pulled from crates.io are implemented here from
+//! scratch: [`tensor`] (n-d arrays), [`ser`] (JSON + the FXT tensor
+//! container), [`config`] (layered TOML-subset), [`cli`], [`util`] (PCG RNG,
+//! stats, thread pool, property-test harness), [`report`] (markdown/CSV
+//! emitters).
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod manifest;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod ser;
+pub mod sweep;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type (anyhow-backed, the only vendored error helper).
+pub type Result<T> = anyhow::Result<T>;

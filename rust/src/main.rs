@@ -1,0 +1,292 @@
+//! `flexround` CLI — the Layer-3 entry point.
+//!
+//! See `cli::USAGE` and the README quickstart.  Typical flows:
+//!
+//! ```text
+//! flexround quantize --model tinymobilenet --method flexround --bits 4 --eval
+//! flexround sweep    --config configs/t2_weight_only.toml
+//! flexround figure   --model tinymobilenet --unit b1 --method flexround --bits 4
+//! flexround inspect  --model llm_mini
+//! flexround selftest
+//! ```
+
+use anyhow::{anyhow, bail};
+use flexround::cli::{Args, USAGE};
+use flexround::config::Config;
+use flexround::coordinator::{Plan, Session};
+use flexround::manifest::Manifest;
+use flexround::report::Reporter;
+use flexround::runtime::Runtime;
+use flexround::{eval, quant, Result};
+use std::path::PathBuf;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    if args.command.is_empty() || args.has("help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let art_dir = PathBuf::from(args.flag("artifacts").unwrap_or("artifacts"));
+    let rep_dir = PathBuf::from(args.flag("report").unwrap_or("reports"));
+    let quiet = args.has("quiet");
+
+    match args.command.as_str() {
+        "inspect" => cmd_inspect(&args, &art_dir),
+        "selftest" => cmd_selftest(&art_dir),
+        "quantize" | "eval" => cmd_quantize(&args, &art_dir, &rep_dir, quiet),
+        "figure" => cmd_figure(&args, &art_dir, &rep_dir, quiet),
+        "sweep" => cmd_sweep(&args, &art_dir, &rep_dir, quiet),
+        other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}
+
+fn plan_from_args(args: &Args, man: &Manifest) -> Result<Plan> {
+    let model = args
+        .flag("model")
+        .ok_or_else(|| anyhow!("--model is required"))?;
+    let mi = man.model(model)?;
+    let mut plan = Plan::new(model, args.flag("method").unwrap_or("flexround"));
+    plan.mode = args
+        .flag("mode")
+        .map(str::to_string)
+        .unwrap_or_else(|| if mi.methods_wa.iter().any(|m| m == &plan.method) && mi.methods_w.is_empty() {
+            "wa".into()
+        } else {
+            "w".into()
+        });
+    plan.bits_w = args.usize_flag("bits", 4) as u32;
+    plan.abits = args.usize_flag("abits", 8) as u32;
+    plan.iters = args.usize_flag("iters", 0);
+    plan.lr = args.f64_flag("lr", 0.0);
+    plan.drop_p = match args.flag("setting") {
+        Some("qdrop") | Some("Q") => 0.5,
+        Some("brecq") | Some("B") => 0.0,
+        _ => args.f64_flag("drop-p", if plan.mode == "wa" { 0.5 } else { 0.0 }),
+    };
+    plan.calib_n = args.usize_flag("calib-n", 0);
+    plan.seed = args.usize_flag("seed", 7) as u64;
+    plan.verbose = !args.has("quiet");
+    Ok(plan)
+}
+
+fn eval_model(sess: &Session, result: Option<&flexround::coordinator::QuantResult>)
+              -> Result<std::collections::BTreeMap<String, f64>> {
+    let mut m = std::collections::BTreeMap::new();
+    match sess.model.kind.as_str() {
+        "cnn" => {
+            let mm = match result {
+                Some(r) => eval::eval_cnn(sess, r)?,
+                None => eval::eval_cnn_fp(sess)?,
+            };
+            m.extend(mm);
+        }
+        "encoder" => {
+            m.extend(eval::eval_encoder(sess, result)?);
+        }
+        "decoder" => {
+            if sess.model.name == "dec_lora" {
+                m.insert("bleu_seen".into(), eval::eval_d2t_bleu(sess, result, "seen")?);
+                m.insert("bleu_unseen".into(), eval::eval_d2t_bleu(sess, result, "unseen")?);
+            } else {
+                m.insert("ppl".into(), eval::eval_ppl(sess, result, "eval_x")?);
+                if sess.model.name == "llm_mini" {
+                    for task in eval::MC_TASKS {
+                        m.insert(format!("mc_{task}"), eval::eval_mc(sess, result, task)?);
+                    }
+                }
+            }
+        }
+        k => bail!("unknown model kind {k:?}"),
+    }
+    Ok(m)
+}
+
+fn cmd_quantize(args: &Args, art: &PathBuf, rep: &PathBuf, quiet: bool) -> Result<()> {
+    let man = Manifest::load(art)?;
+    let rt = Runtime::new(art)?;
+    let plan = plan_from_args(args, &man)?;
+    let sess = Session::open(&rt, &man, &plan.model)?;
+    let reporter = Reporter::new(rep, quiet)?;
+
+    if args.command == "eval" && args.flag("method").is_none() {
+        // full-precision evaluation only
+        let m = eval_model(&sess, None)?;
+        println!("fp {} → {m:?}", plan.model);
+        reporter.metrics(&format!("eval_fp_{}", plan.model), &m)?;
+        return Ok(());
+    }
+
+    if !quiet {
+        println!(
+            "quantizing {} with {} ({}-bit W, mode {}, {} setting)…",
+            plan.model, plan.method, plan.bits_w, plan.mode, plan.setting_label()
+        );
+    }
+    let result = sess.quantize(&plan)?;
+    if !quiet {
+        for u in &result.units {
+            println!(
+                "  unit {:<8} loss {:.6} → {:.6}  (W{} A{})",
+                u.unit, u.first_loss, u.final_loss, u.bits_w, u.abits
+            );
+        }
+        println!(
+            "  recon: {} steps in {:.2}s; runtime: {}",
+            result.recon_steps,
+            result.recon_seconds,
+            rt.stats.borrow().summary()
+        );
+    }
+    if args.has("eval") || args.command == "eval" {
+        let m = eval_model(&sess, Some(&result))?;
+        let id = format!(
+            "quantize_{}_{}_w{}_{}", plan.model, plan.method, plan.bits_w, plan.mode
+        );
+        println!("metrics: {m:?}");
+        reporter.metrics(&id, &m)?;
+    }
+    Ok(())
+}
+
+fn cmd_figure(args: &Args, art: &PathBuf, rep: &PathBuf, quiet: bool) -> Result<()> {
+    let man = Manifest::load(art)?;
+    let rt = Runtime::new(art)?;
+    let plan = plan_from_args(args, &man)?;
+    let sess = Session::open(&rt, &man, &plan.model)?;
+    let reporter = Reporter::new(rep, quiet)?;
+    let unit_name = args.flag("unit").ok_or_else(|| anyhow!("--unit is required"))?;
+
+    let result = sess.quantize(&plan)?;
+    let (unit, st) = sess
+        .model
+        .units
+        .iter()
+        .zip(&result.units)
+        .find(|(u, _)| u.name == unit_name)
+        .ok_or_else(|| anyhow!("no unit {unit_name}"))?;
+
+    for gs in quant::grid_shifts(&sess, unit, st)? {
+        let id = format!("fig_shift_{}_{}_{}_{}_w{}", plan.model, unit_name, gs.layer,
+                         plan.method, plan.bits_w);
+        let rows: Vec<String> = gs.points.iter().map(|(w, d)| format!("{w},{d}")).collect();
+        reporter.series(&id, "weight,grid_shift", &rows)?;
+        println!(
+            "{}/{}: shifted {:.2}% aggressive {:.2}% max |Δ| {}",
+            unit_name, gs.layer, 100.0 * gs.shifted_frac, 100.0 * gs.aggressive_frac,
+            gs.max_shift
+        );
+    }
+    let h = quant::delta_hist(&sess, unit, st, 41)?;
+    let id = format!("fig_hist_{}_{}_{}_w{}", plan.model, unit_name, plan.method, plan.bits_w);
+    let rows: Vec<String> = (0..h.small_counts.len())
+        .map(|i| format!("{},{},{}", h.edges[i], h.small_counts[i], h.large_counts[i]))
+        .collect();
+    reporter.series(&id, "delta_edge,count_small_w,count_large_w", &rows)?;
+    println!(
+        "ΔW histogram: {} small-|W| points, {} large-|W| points; model large-weight frac {:.3}%",
+        h.n_small, h.n_large, 100.0 * quant::large_weight_fraction(&sess)
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args, art: &PathBuf, rep: &PathBuf, quiet: bool) -> Result<()> {
+    let cfg_path = args
+        .flag("config")
+        .ok_or_else(|| anyhow!("--config is required for sweep"))?;
+    let mut cfg = Config::new();
+    cfg.load_file(&PathBuf::from(cfg_path))?;
+    for ov in args.flag_all("set") {
+        cfg.set_override(ov)?;
+    }
+    let man = Manifest::load(art)?;
+    let rt = Runtime::new(art)?;
+    let reporter = Reporter::new(rep, quiet)?;
+    flexround::sweep::run_sweep(&cfg, &man, &rt, &reporter)
+}
+
+fn cmd_inspect(args: &Args, art: &PathBuf) -> Result<()> {
+    let man = Manifest::load(art)?;
+    match args.flag("model") {
+        None => {
+            println!("{} models in {}:", man.models.len(), art.display());
+            for (name, m) in &man.models {
+                println!(
+                    "  {:<22} {:<8} task={:<6} units={} bits_w={:?} fp={:?}",
+                    name, m.kind, m.task, m.units.len(), m.bits_w, m.fp_metric
+                );
+            }
+        }
+        Some(name) => {
+            let m = man.model(name)?;
+            println!("model {name} ({}, task {})", m.kind, m.task);
+            println!("  fp metric: {:?}", m.fp_metric);
+            println!("  scheme: symmetric={} per_channel={} bits_w={:?} abits={:?}",
+                     m.symmetric, m.per_channel, m.bits_w, m.abits);
+            println!("  methods: w={:?} wa={:?}", m.methods_w, m.methods_wa);
+            for u in &m.units {
+                println!(
+                    "  unit {:<8} {:<16} in{:?} out{:?} layers={} acts={} bits_override={:?}",
+                    u.name, u.kind, u.in_shape, u.out_shape, u.layers.len(), u.act_sites,
+                    u.bits_override
+                );
+            }
+            println!("  datasets: {:?}", m.datasets.keys().collect::<Vec<_>>());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_selftest(art: &PathBuf) -> Result<()> {
+    let man = Manifest::load(art)?;
+    let rt = Runtime::new(art)?;
+    println!("platform: {}", rt.platform());
+    let mut checked = 0;
+    for (name, _) in man.models.iter().take(2) {
+        let sess = Session::open(&rt, &man, name)?;
+        let calib = sess.dataset("calib_x")?;
+        let b = sess.model.calib_batch;
+        let x0 = calib.slice_rows(0, b)?;
+        let chunks = sess.first_unit_inputs(&x0)?;
+        let u0 = &sess.model.units[0];
+        let y = sess.advance_fp(u0, &chunks)?;
+        println!(
+            "  {name}: fp unit {:?} {:?} → {:?} ok",
+            u0.name,
+            chunks[0].shape(),
+            y[0].shape()
+        );
+        // one recon step with the first learnable method available
+        let method = sess
+            .model
+            .methods_w
+            .iter()
+            .chain(sess.model.methods_wa.iter())
+            .find(|m| *m != "rtn")
+            .cloned();
+        if let Some(method) = method {
+            let mode = if sess.model.methods_w.iter().any(|m| m == &method) { "w" } else { "wa" };
+            let mut plan = Plan::new(name, &method);
+            plan.mode = mode.into();
+            plan.bits_w = *sess.model.bits_w.iter().max().unwrap_or(&8);
+            plan.iters = 2;
+            plan.calib_n = b;
+            plan.verbose = false;
+            let r = sess.quantize(&plan)?;
+            println!(
+                "  {name}: 2-step {} recon ok (loss {:.5} → {:.5})",
+                method, r.units[0].first_loss, r.units[0].final_loss
+            );
+        }
+        checked += 1;
+    }
+    println!("selftest OK ({checked} models); {}", rt.stats.borrow().summary());
+    Ok(())
+}

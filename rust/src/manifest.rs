@@ -1,0 +1,280 @@
+//! Typed view over `artifacts/manifest.json` — the system description the
+//! AOT build (`python/compile/aot.py`) writes for the coordinator.
+
+use crate::ser::json::{self, Json};
+use crate::Result;
+use anyhow::anyhow;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One quantizable layer of a unit (canonical 2D view).
+#[derive(Clone, Debug)]
+pub struct LayerInfo {
+    pub name: String,
+    pub kind: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub conv_shape: Option<Vec<usize>>,
+    pub stride: usize,
+}
+
+/// One pack entry: a flat parameter slot of a (unit, method, mode).
+#[derive(Clone, Debug)]
+pub struct PackEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub learnable: bool,
+}
+
+/// One reconstruction unit.
+#[derive(Clone, Debug)]
+pub struct UnitInfo {
+    pub name: String,
+    pub kind: String,
+    pub bits_override: Option<u32>,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub act_sites: usize,
+    pub layers: Vec<LayerInfo>,
+    /// artifact key (e.g. "recon.flexround.w") → file name
+    pub artifacts: BTreeMap<String, String>,
+    /// "method.mode" → flat parameter ordering
+    pub packs: BTreeMap<String, Vec<PackEntry>>,
+}
+
+impl UnitInfo {
+    pub fn artifact(&self, key: &str) -> Result<&str> {
+        self.artifacts
+            .get(key)
+            .map(String::as_str)
+            .ok_or_else(|| anyhow!("unit {:?} has no artifact {key:?}", self.name))
+    }
+
+    pub fn pack(&self, method: &str, mode: &str) -> Result<&[PackEntry]> {
+        self.packs
+            .get(&format!("{method}.{mode}"))
+            .map(Vec::as_slice)
+            .ok_or_else(|| anyhow!("unit {:?} has no pack {method}.{mode}", self.name))
+    }
+}
+
+/// One model entry.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub kind: String,
+    pub task: String,
+    pub fp_metric: BTreeMap<String, f64>,
+    pub symmetric: bool,
+    pub per_channel: bool,
+    pub bits_w: Vec<u32>,
+    pub abits: Vec<u32>,
+    pub methods_w: Vec<String>,
+    pub methods_wa: Vec<String>,
+    pub calib_n: usize,
+    pub calib_batch: usize,
+    pub seq: Option<usize>,
+    pub units: Vec<UnitInfo>,
+    pub embed_artifact: Option<String>,
+    pub head_artifacts: BTreeMap<String, String>,
+    pub weights_file: String,
+    pub init_file: String,
+    pub data_file: String,
+    pub datasets: BTreeMap<String, Vec<usize>>,
+    pub iters_default: usize,
+    pub lr_default: BTreeMap<String, f64>,
+    pub drop_p_default: f64,
+}
+
+impl ModelInfo {
+    pub fn unit(&self, name: &str) -> Result<&UnitInfo> {
+        self.units
+            .iter()
+            .find(|u| u.name == name)
+            .ok_or_else(|| anyhow!("model {:?} has no unit {name:?}", self.name))
+    }
+
+    pub fn lr_for(&self, method: &str) -> f64 {
+        self.lr_default.get(method).copied().unwrap_or(1e-3)
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub calib_batch: usize,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow!("reading {} (run `make artifacts` first): {e}", path.display()))?;
+        let v = json::parse(&text)?;
+        let mut models = BTreeMap::new();
+        for (name, mv) in v.get("models")?.obj()? {
+            models.insert(name.clone(), parse_model(name, mv)
+                .map_err(|e| anyhow!("model {name}: {e}"))?);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            calib_batch: v.get("calib_batch")?.usize()?,
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("no model {name:?} in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn artifact_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+fn parse_model(name: &str, v: &Json) -> Result<ModelInfo> {
+    let mut fp_metric = BTreeMap::new();
+    if let Some(m) = v.opt("fp_metric") {
+        for (k, x) in m.obj()? {
+            if let Json::Num(n) = x {
+                fp_metric.insert(k.clone(), *n);
+            }
+        }
+    }
+    let hyper = v.get("hyper")?;
+    let mut lr_default = BTreeMap::new();
+    for (k, x) in hyper.get("lr")?.obj()? {
+        lr_default.insert(k.clone(), x.num()?);
+    }
+    let mut units = Vec::new();
+    for uv in v.get("units")?.arr()? {
+        units.push(parse_unit(uv)?);
+    }
+    let mut head_artifacts = BTreeMap::new();
+    if let Some(h) = v.opt("head_artifacts") {
+        for (k, x) in h.obj()? {
+            head_artifacts.insert(k.clone(), x.str()?.to_string());
+        }
+    }
+    let mut datasets = BTreeMap::new();
+    for (k, x) in v.get("datasets")?.obj()? {
+        datasets.insert(k.clone(), x.usize_vec()?);
+    }
+    Ok(ModelInfo {
+        name: name.to_string(),
+        kind: v.get("kind")?.str()?.to_string(),
+        task: v.opt("task").and_then(|t| t.str().ok()).unwrap_or("").to_string(),
+        fp_metric,
+        symmetric: v.get("symmetric")?.boolean()?,
+        per_channel: v.get("per_channel")?.boolean()?,
+        bits_w: v.get("bits_w")?.usize_vec()?.iter().map(|&b| b as u32).collect(),
+        abits: v.get("abits")?.usize_vec()?.iter().map(|&b| b as u32).collect(),
+        methods_w: v.get("methods_w")?.str_vec()?,
+        methods_wa: v.get("methods_wa")?.str_vec()?,
+        calib_n: v.get("calib_n")?.usize()?,
+        calib_batch: v.get("calib_batch")?.usize()?,
+        seq: v.opt("seq").and_then(|s| s.usize().ok()),
+        units,
+        embed_artifact: v.opt("embed_artifact").and_then(|s| s.str().ok()).map(str::to_string),
+        head_artifacts,
+        weights_file: v.get("weights_file")?.str()?.to_string(),
+        init_file: v.get("init_file")?.str()?.to_string(),
+        data_file: v.get("data_file")?.str()?.to_string(),
+        datasets,
+        iters_default: hyper.get("iters")?.usize()?,
+        lr_default,
+        drop_p_default: hyper.get("drop_p")?.num()?,
+    })
+}
+
+fn parse_unit(v: &Json) -> Result<UnitInfo> {
+    let mut layers = Vec::new();
+    for lv in v.get("layers")?.arr()? {
+        layers.push(LayerInfo {
+            name: lv.get("name")?.str()?.to_string(),
+            kind: lv.get("kind")?.str()?.to_string(),
+            rows: lv.get("rows")?.usize()?,
+            cols: lv.get("cols")?.usize()?,
+            conv_shape: lv.opt("conv_shape").map(|c| c.usize_vec()).transpose()?,
+            stride: lv.get("stride")?.usize()?,
+        });
+    }
+    let mut artifacts = BTreeMap::new();
+    for (k, x) in v.get("artifacts")?.obj()? {
+        artifacts.insert(k.clone(), x.str()?.to_string());
+    }
+    let mut packs = BTreeMap::new();
+    for (k, x) in v.get("packs")?.obj()? {
+        let mut entries = Vec::new();
+        for ev in x.arr()? {
+            entries.push(PackEntry {
+                name: ev.get("name")?.str()?.to_string(),
+                shape: ev.get("shape")?.usize_vec()?,
+                learnable: ev.get("learnable")?.boolean()?,
+            });
+        }
+        packs.insert(k.clone(), entries);
+    }
+    Ok(UnitInfo {
+        name: v.get("name")?.str()?.to_string(),
+        kind: v.get("kind")?.str()?.to_string(),
+        bits_override: v.opt("bits_override").and_then(|b| b.usize().ok()).map(|b| b as u32),
+        in_shape: v.get("in_shape")?.usize_vec()?,
+        out_shape: v.get("out_shape")?.usize_vec()?,
+        act_sites: v.get("act_sites")?.usize()?,
+        layers,
+        artifacts,
+        packs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal_manifest() {
+        let text = r#"{
+          "calib_batch": 32,
+          "models": {
+            "m": {
+              "kind": "cnn", "task": "image", "fp_metric": {"top1": 0.9},
+              "symmetric": true, "per_channel": false,
+              "bits_w": [4], "abits": [8],
+              "methods_w": ["rtn"], "methods_wa": [],
+              "calib_n": 64, "calib_batch": 32,
+              "hyper": {"iters": 10, "lr": {"flexround": 0.002}, "drop_p": 0.5},
+              "datasets": {"calib_x": [64, 12, 12, 3]},
+              "weights_file": "m.weights.fxt", "init_file": "m.init.fxt",
+              "data_file": "m.data.fxt",
+              "units": [{
+                "name": "stem", "kind": "stem_conv", "bits_override": 8,
+                "in_shape": [12,12,3], "out_shape": [12,12,16], "act_sites": 1,
+                "layers": [{"name":"conv","kind":"conv","rows":16,"cols":27,
+                            "conv_shape":[3,3,3,16],"stride":1}],
+                "artifacts": {"fp": "m.fp.stem.hlo.txt"},
+                "packs": {"rtn.w": [{"name":"conv.s1","shape":[1,1],"learnable":false}]}
+              }]
+            }
+          }
+        }"#;
+        let dir = std::env::temp_dir().join("fx_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let mi = m.model("m").unwrap();
+        assert_eq!(mi.units.len(), 1);
+        assert_eq!(mi.units[0].bits_override, Some(8));
+        assert_eq!(mi.units[0].layers[0].conv_shape.as_deref(), Some(&[3, 3, 3, 16][..]));
+        assert_eq!(mi.unit("stem").unwrap().artifact("fp").unwrap(), "m.fp.stem.hlo.txt");
+        assert!(mi.unit("nope").is_err());
+        assert_eq!(mi.lr_for("flexround"), 0.002);
+        assert_eq!(mi.lr_for("unknown"), 1e-3);
+        assert_eq!(mi.fp_metric["top1"], 0.9);
+    }
+}

@@ -1,0 +1,204 @@
+//! Rust-side quantization analysis: grid-shift statistics for the paper's
+//! Figures 3–6, weight-update histograms, and invariant checks over the
+//! CLE/AHB-preprocessed exports (Table 10).
+//!
+//! The *learning* happens in the AOT executables; this module consumes the
+//! exported integer codes (`qw.*` artifacts) plus the raw weights/init
+//! scales from the FXT files and reproduces the figures' data series.
+
+use crate::coordinator::{Session, UnitState};
+use crate::manifest::UnitInfo;
+use crate::tensor::{qrange, rtn_codes_rows, Tensor};
+use crate::Result;
+use anyhow::anyhow;
+
+/// Grid-shift analysis of one layer: how far the learned integer codes
+/// moved from the rounding-to-nearest grid (Figures 3 right, 4, 5, 6).
+#[derive(Clone, Debug)]
+pub struct GridShift {
+    pub layer: String,
+    /// per-weight: (w, Δcode)  where Δcode = learned − RTN
+    pub points: Vec<(f32, f32)>,
+    /// fraction of weights whose |Δcode| ≥ 2 ("aggressively rounded";
+    /// the paper reports 12.8% for MobileNetV2's first block conv)
+    pub aggressive_frac: f64,
+    /// fraction with |Δcode| ≥ 1 (any deviation from RTN)
+    pub shifted_frac: f64,
+    pub max_shift: f32,
+}
+
+/// Weight-update histogram split by |W| (Figure 3 left/center).
+#[derive(Clone, Debug)]
+pub struct DeltaHist {
+    pub edges: Vec<f32>,
+    pub small_counts: Vec<usize>, // |W| < 1
+    pub large_counts: Vec<usize>, // |W| ≥ 1
+    pub n_small: usize,
+    pub n_large: usize,
+}
+
+/// Compute grid shifts for every layer of a unit after reconstruction.
+pub fn grid_shifts(sess: &Session, unit: &UnitInfo, st: &UnitState) -> Result<Vec<GridShift>> {
+    let exported = sess.export_qw(unit, st)?;
+    let (qmin, qmax) = qrange(st.bits_w, sess.model.symmetric);
+    let mut out = Vec::new();
+    for (li, layer) in unit.layers.iter().enumerate() {
+        let w = sess
+            .weights
+            .get(&format!("w/{}/{}", unit.name, layer.name))
+            .ok_or_else(|| anyhow!("missing weights for {}/{}", unit.name, layer.name))?;
+        let (rows, cols) = (layer.rows, layer.cols);
+        // RTN codes from the same init scale the method started from
+        let (s1, zp) = init_scale(sess, unit, st, &layer.name)?;
+        let rtn = rtn_codes_rows(w.as_f32()?, rows, cols, &s1, &zp, qmin, qmax);
+        let learned = exported[li].1.to_f32_vec();
+        let wv = w.as_f32()?;
+        let mut points = Vec::with_capacity(wv.len());
+        let mut agg = 0usize;
+        let mut shifted = 0usize;
+        let mut max_shift = 0.0f32;
+        for i in 0..wv.len() {
+            let d = learned[i] - rtn[i];
+            points.push((wv[i], d));
+            if d.abs() >= 2.0 {
+                agg += 1;
+            }
+            if d.abs() >= 1.0 {
+                shifted += 1;
+            }
+            max_shift = max_shift.max(d.abs());
+        }
+        out.push(GridShift {
+            layer: layer.name.clone(),
+            aggressive_frac: agg as f64 / wv.len() as f64,
+            shifted_frac: shifted as f64 / wv.len() as f64,
+            max_shift,
+            points,
+        });
+    }
+    Ok(out)
+}
+
+/// The init (s1, zp) per row for a layer, broadcasting per-tensor scales.
+fn init_scale(sess: &Session, unit: &UnitInfo, st: &UnitState, layer: &str)
+              -> Result<(Vec<f32>, Vec<f32>)> {
+    let rows = unit
+        .layers
+        .iter()
+        .find(|l| l.name == layer)
+        .map(|l| l.rows)
+        .ok_or_else(|| anyhow!("no layer {layer}"))?;
+    let s1 = sess
+        .inits
+        .get(&format!("init/{}/{}/b{}/{}.s1", unit.name, st.method, st.bits_w, layer))
+        .ok_or_else(|| anyhow!("missing init s1 for {layer}"))?;
+    let zp = sess
+        .inits
+        .get(&format!("init/{}/{}/b{}/{}.zp", unit.name, st.method, st.bits_w, layer))
+        .ok_or_else(|| anyhow!("missing init zp for {layer}"))?;
+    let bc = |t: &Tensor| -> Result<Vec<f32>> {
+        let v = t.as_f32()?;
+        Ok(if v.len() == 1 { vec![v[0]; rows] } else { v.to_vec() })
+    };
+    Ok((bc(s1)?, bc(zp)?))
+}
+
+/// Histogram of ΔW = Ŵ − W_rtn split by weight magnitude (Figure 3).
+pub fn delta_hist(sess: &Session, unit: &UnitInfo, st: &UnitState, bins: usize)
+                  -> Result<DeltaHist> {
+    let exported = sess.export_qw(unit, st)?;
+    let (qmin, qmax) = qrange(st.bits_w, sess.model.symmetric);
+    let mut deltas_small = Vec::new();
+    let mut deltas_large = Vec::new();
+    for (li, layer) in unit.layers.iter().enumerate() {
+        let w = sess
+            .weights
+            .get(&format!("w/{}/{}", unit.name, layer.name))
+            .ok_or_else(|| anyhow!("missing weights"))?;
+        let (s1, zp) = init_scale(sess, unit, st, &layer.name)?;
+        let wv = w.as_f32()?;
+        let what = exported[li].0.as_f32()?;
+        for i in 0..wv.len() {
+            let row = i / layer.cols;
+            let n = ((wv[i] / s1[row]).round() + zp[row]).clamp(qmin, qmax);
+            let w_rtn = s1[row] * (n - zp[row]);
+            let d = what[i] - w_rtn;
+            if wv[i].abs() < 1.0 {
+                deltas_small.push(d);
+            } else {
+                deltas_large.push(d);
+            }
+        }
+    }
+    let all: Vec<f32> = deltas_small.iter().chain(&deltas_large).copied().collect();
+    let lo = all.iter().copied().fold(0.0f32, f32::min);
+    let hi = all.iter().copied().fold(0.0f32, f32::max).max(lo + 1e-6);
+    let mut edges = Vec::with_capacity(bins + 1);
+    for i in 0..=bins {
+        edges.push(lo + (hi - lo) * i as f32 / bins as f32);
+    }
+    let hist = |d: &[f32]| {
+        let mut c = vec![0usize; bins];
+        for &x in d {
+            let mut b = ((x - lo) / (hi - lo) * bins as f32) as usize;
+            if b >= bins {
+                b = bins - 1;
+            }
+            c[b] += 1;
+        }
+        c
+    };
+    Ok(DeltaHist {
+        edges,
+        small_counts: hist(&deltas_small),
+        large_counts: hist(&deltas_large),
+        n_small: deltas_small.len(),
+        n_large: deltas_large.len(),
+    })
+}
+
+/// Fraction of pre-trained weights with |W| ≥ 1 in a model — the
+/// MobileNet-vs-ResNet regime check backing Figure 3's narrative.
+pub fn large_weight_fraction(sess: &Session) -> f64 {
+    let mut n = 0usize;
+    let mut large = 0usize;
+    for (k, t) in &sess.weights {
+        if !k.starts_with("w/") {
+            continue;
+        }
+        if let Ok(v) = t.as_f32() {
+            n += v.len();
+            large += v.iter().filter(|x| x.abs() >= 1.0).count();
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        large as f64 / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::tensor::{qrange, rtn_codes_rows};
+    use crate::util::prop::{gen_weights, Prop};
+
+    #[test]
+    fn rtn_codes_in_grid() {
+        Prop::new("rtn codes within qrange").cases(100).check(|rng| {
+            let rows = 1 + rng.below(6) as usize;
+            let cols = 1 + rng.below(20) as usize;
+            let w = gen_weights(rng, rows * cols);
+            let bits = 2 + rng.below(7);
+            let (qmin, qmax) = qrange(bits, true);
+            let s1: Vec<f32> = (0..rows).map(|_| 0.01 + rng.next_f32()).collect();
+            let zp = vec![0.0; rows];
+            for c in rtn_codes_rows(&w, rows, cols, &s1, &zp, qmin, qmax) {
+                if c < qmin || c > qmax || (c - c.round()).abs() > 1e-5 {
+                    return Err(format!("code {c} outside [{qmin},{qmax}] grid"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

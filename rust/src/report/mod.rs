@@ -1,0 +1,151 @@
+//! Report emission: paper-layout markdown tables, CSV series for figures,
+//! and machine-readable JSON — everything lands under `reports/`.
+
+use crate::ser::json::{self, Json};
+use crate::Result;
+use anyhow::anyhow;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// A markdown/CSV table builder with the paper's row/column layout.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "table row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn markdown(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "### {}\n", self.title);
+        let _ = writeln!(s, "| {} |", self.columns.join(" | "));
+        let _ = writeln!(s, "|{}|", self.columns.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for r in &self.rows {
+            let _ = writeln!(s, "| {} |", r.join(" | "));
+        }
+        s
+    }
+
+    pub fn csv(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{}", self.columns.join(","));
+        for r in &self.rows {
+            let esc: Vec<String> = r
+                .iter()
+                .map(|c| {
+                    if c.contains(',') || c.contains('"') {
+                        format!("\"{}\"", c.replace('"', "\"\""))
+                    } else {
+                        c.clone()
+                    }
+                })
+                .collect();
+            let _ = writeln!(s, "{}", esc.join(","));
+        }
+        s
+    }
+}
+
+/// Report sink rooted at a directory.
+pub struct Reporter {
+    pub dir: PathBuf,
+    pub quiet: bool,
+}
+
+impl Reporter {
+    pub fn new(dir: &Path, quiet: bool) -> Result<Reporter> {
+        std::fs::create_dir_all(dir).map_err(|e| anyhow!("mkdir {}: {e}", dir.display()))?;
+        Ok(Reporter { dir: dir.to_path_buf(), quiet })
+    }
+
+    /// Print + persist a table as markdown and CSV.
+    pub fn table(&self, id: &str, t: &Table) -> Result<()> {
+        if !self.quiet {
+            println!("{}", t.markdown());
+        }
+        std::fs::write(self.dir.join(format!("{id}.md")), t.markdown())?;
+        std::fs::write(self.dir.join(format!("{id}.csv")), t.csv())?;
+        Ok(())
+    }
+
+    /// Persist raw CSV series data (figure points).
+    pub fn series(&self, id: &str, header: &str, rows: &[String]) -> Result<()> {
+        let mut s = String::with_capacity(rows.len() * 16 + header.len() + 1);
+        let _ = writeln!(s, "{header}");
+        for r in rows {
+            let _ = writeln!(s, "{r}");
+        }
+        std::fs::write(self.dir.join(format!("{id}.csv")), s)?;
+        if !self.quiet {
+            println!("  wrote {} ({} points)", self.dir.join(format!("{id}.csv")).display(), rows.len());
+        }
+        Ok(())
+    }
+
+    /// Persist a metrics map as JSON.
+    pub fn metrics(&self, id: &str, metrics: &BTreeMap<String, f64>) -> Result<()> {
+        let obj = Json::Obj(
+            metrics
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                .collect(),
+        );
+        std::fs::write(self.dir.join(format!("{id}.json")), json::to_string(&obj, 1))?;
+        Ok(())
+    }
+}
+
+/// Format a metric with the paper's precision (acc in %, ppl with 2dp).
+pub fn fmt_metric(key: &str, v: f64) -> String {
+    if key.contains("ppl") {
+        format!("{v:.2}")
+    } else if key.contains("bleu") {
+        format!("{v:.2}")
+    } else {
+        format!("{:.2}", v * 100.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_markdown_and_csv() {
+        let mut t = Table::new("Table 2 analog", &["Method", "Bits", "Top-1/Top-5"]);
+        t.row(vec!["B + FlexRound".into(), "4/32".into(), "70.28/89.44".into()]);
+        let md = t.markdown();
+        assert!(md.contains("| Method | Bits | Top-1/Top-5 |"));
+        assert!(md.contains("B + FlexRound"));
+        let csv = t.csv();
+        assert!(csv.starts_with("Method,Bits,"));
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["v,with\"quote".into()]);
+        assert!(t.csv().contains("\"v,with\"\"quote\""));
+    }
+
+    #[test]
+    fn fmt() {
+        assert_eq!(fmt_metric("top1", 0.7028), "70.28");
+        assert_eq!(fmt_metric("ppl", 12.345), "12.35");
+    }
+}

@@ -1,0 +1,166 @@
+//! FXT named-tensor container — the binary interchange format between the
+//! Python build path and this coordinator.  Format spec lives in
+//! `python/compile/fxt.py`; both sides round-trip the same reference files.
+
+use crate::tensor::Tensor;
+use crate::Result;
+use anyhow::{anyhow, bail};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"FXT1";
+
+/// Read every tensor in an FXT file.
+pub fn read(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+    read_bytes(&bytes).map_err(|e| anyhow!("{}: {e}", path.display()))
+}
+
+pub fn read_bytes(bytes: &[u8]) -> Result<BTreeMap<String, Tensor>> {
+    let mut r = Cursor { b: bytes, i: 0 };
+    if r.take(4)? != MAGIC {
+        bail!("bad magic");
+    }
+    let count = r.u32()?;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let nlen = r.u32()? as usize;
+        let name = String::from_utf8(r.take(nlen)?.to_vec())
+            .map_err(|_| anyhow!("tensor name is not utf-8"))?;
+        let dt = r.u8()?;
+        let nd = r.u8()? as usize;
+        let mut dims = Vec::with_capacity(nd);
+        for _ in 0..nd {
+            dims.push(r.u32()? as usize);
+        }
+        let n: usize = if nd == 0 { 1 } else { dims.iter().product() };
+        let raw = r.take(n * 4)?;
+        let t = match dt {
+            0 => {
+                let mut v = Vec::with_capacity(n);
+                for c in raw.chunks_exact(4) {
+                    v.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+                }
+                Tensor::from_f32(v, &dims)?
+            }
+            1 => {
+                let mut v = Vec::with_capacity(n);
+                for c in raw.chunks_exact(4) {
+                    v.push(i32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+                }
+                Tensor::from_i32(v, &dims)?
+            }
+            _ => bail!("unknown dtype tag {dt}"),
+        };
+        out.insert(name, t);
+    }
+    if r.i != bytes.len() {
+        bail!("trailing bytes after last tensor");
+    }
+    Ok(out)
+}
+
+/// Write tensors to an FXT file (used by reports and tests).
+pub fn write(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .map_err(|e| anyhow!("creating {}: {e}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u32).to_le_bytes())?;
+        f.write_all(nb)?;
+        let (tag, raw): (u8, Vec<u8>) = match t.dtype() {
+            crate::tensor::DType::F32 => (
+                0,
+                t.as_f32()?.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            ),
+            crate::tensor::DType::I32 => (
+                1,
+                t.as_i32()?.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            ),
+        };
+        f.write_all(&[tag, t.shape().len() as u8])?;
+        for &d in t.shape() {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        f.write_all(&raw)?;
+    }
+    Ok(())
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated file (want {n} bytes at offset {})", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+}
+
+/// Read a `Read`er fully then parse (for streams / tests).
+pub fn read_from(mut r: impl Read) -> Result<BTreeMap<String, Tensor>> {
+    let mut buf = Vec::new();
+    r.read_to_end(&mut buf)?;
+    read_bytes(&buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BTreeMap<String, Tensor> {
+        let mut m = BTreeMap::new();
+        m.insert("a/w".into(), Tensor::from_f32(vec![1.5, -2.0, 0.25, 9.0], &[2, 2]).unwrap());
+        m.insert("b/idx".into(), Tensor::from_i32(vec![3, -7, 11], &[3]).unwrap());
+        m.insert("scalar".into(), Tensor::scalar(42.0));
+        m
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("fxt_test_rt.fxt");
+        let m = sample();
+        write(&dir, &m).unwrap();
+        let back = read(&dir).unwrap();
+        assert_eq!(m, back);
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read_bytes(b"NOPE").is_err());
+        assert!(read_bytes(b"FXT1\x01\x00\x00\x00").is_err()); // count=1 but truncated
+        // trailing bytes
+        let dir = std::env::temp_dir().join("fxt_test_trail.fxt");
+        write(&dir, &sample()).unwrap();
+        let mut bytes = std::fs::read(&dir).unwrap();
+        bytes.push(0);
+        assert!(read_bytes(&bytes).is_err());
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn empty_container() {
+        let bytes = b"FXT1\x00\x00\x00\x00";
+        assert!(read_bytes(bytes).unwrap().is_empty());
+    }
+}

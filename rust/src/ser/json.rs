@@ -1,0 +1,449 @@
+//! A from-scratch RFC-8259 JSON parser and writer.
+//!
+//! serde is not in the vendored crate set, and the coordinator needs JSON in
+//! two places: reading `artifacts/manifest.json` (written by `aot.py`) and
+//! emitting machine-readable experiment reports.  The parser is a straight
+//! recursive-descent over bytes with proper string escapes, number parsing,
+//! and depth limiting; the writer is deterministic (sorted object keys)
+//! so report files diff cleanly.
+
+use crate::Result;
+use anyhow::{anyhow, bail};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A parsed JSON value.  Objects use a BTreeMap so iteration is ordered.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    // ---- typed accessors (ergonomic unwrapping for manifest walking) ----
+
+    pub fn get(&self, key: &str) -> Result<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key {key:?}")),
+            _ => bail!("get({key:?}) on non-object"),
+        }
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key).filter(|v| !matches!(v, Json::Null)),
+            _ => None,
+        }
+    }
+
+    pub fn str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn num(&self) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn usize(&self) -> Result<usize> {
+        Ok(self.num()? as usize)
+    }
+
+    pub fn boolean(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+
+    pub fn arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            _ => bail!("expected array, got {self:?}"),
+        }
+    }
+
+    pub fn obj(&self) -> Result<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Ok(m),
+            _ => bail!("expected object, got {self:?}"),
+        }
+    }
+
+    pub fn usize_vec(&self) -> Result<Vec<usize>> {
+        self.arr()?.iter().map(|v| v.usize()).collect()
+    }
+
+    pub fn str_vec(&self) -> Result<Vec<String>> {
+        self.arr()?.iter().map(|v| Ok(v.str()?.to_string())).collect()
+    }
+
+    // ---- construction helpers for report emission ----
+
+    pub fn object(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn from_f64(v: f64) -> Json {
+        Json::Num(v)
+    }
+
+    pub fn from_str_val(v: &str) -> Json {
+        Json::Str(v.to_string())
+    }
+}
+
+const MAX_DEPTH: usize = 128;
+
+/// Parse a JSON document.
+pub fn parse(input: &str) -> Result<Json> {
+    let bytes = input.as_bytes();
+    let mut p = Parser { b: bytes, i: 0 };
+    p.ws();
+    let v = p.value(0)?;
+    p.ws();
+    if p.i != bytes.len() {
+        bail!("trailing garbage at byte {}", p.i);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b.get(self.i).copied().ok_or_else(|| anyhow!("unexpected end of input"))
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!("expected {:?} at byte {}, found {:?}", c as char, self.i, self.peek()? as char);
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json> {
+        if depth > MAX_DEPTH {
+            bail!("nesting depth > {MAX_DEPTH}");
+        }
+        self.ws();
+        match self.peek()? {
+            b'{' => self.object(depth),
+            b'[' => self.array(depth),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => bail!("unexpected byte {:?} at {}", c as char, self.i),
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at byte {}", self.i)
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut m = BTreeMap::new();
+        self.ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            let v = self.value(depth + 1)?;
+            m.insert(k, v);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                c => bail!("expected ',' or '}}' at byte {}, found {:?}", self.i, c as char),
+            }
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut v = Vec::new();
+        self.ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            v.push(self.value(depth + 1)?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(v));
+                }
+                c => bail!("expected ',' or ']' at byte {}, found {:?}", self.i, c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'u' => {
+                            let cp = self.hex4()?;
+                            if (0xD800..0xDC00).contains(&cp) {
+                                // surrogate pair
+                                self.eat(b'\\')?;
+                                self.eat(b'u')?;
+                                let lo = self.hex4()?;
+                                let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                s.push(char::from_u32(c).ok_or_else(|| anyhow!("bad surrogate"))?);
+                            } else {
+                                s.push(char::from_u32(cp).ok_or_else(|| anyhow!("bad codepoint"))?);
+                            }
+                        }
+                        _ => bail!("bad escape \\{:?}", e as char),
+                    }
+                }
+                _ => {
+                    // collect the full utf-8 sequence
+                    let start = self.i - 1;
+                    let len = utf8_len(c);
+                    self.i = start + len;
+                    if self.i > self.b.len() {
+                        bail!("truncated utf-8");
+                    }
+                    s.push_str(
+                        std::str::from_utf8(&self.b[start..self.i])
+                            .map_err(|_| anyhow!("invalid utf-8 in string"))?,
+                    );
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let c = self.peek()?;
+            self.i += 1;
+            v = v * 16
+                + match c {
+                    b'0'..=b'9' => (c - b'0') as u32,
+                    b'a'..=b'f' => (c - b'a' + 10) as u32,
+                    b'A'..=b'F' => (c - b'A' + 10) as u32,
+                    _ => bail!("bad hex digit"),
+                };
+        }
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        if self.peek()? == b'-' {
+            self.i += 1;
+        }
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        s.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| anyhow!("bad number {s:?} at byte {start}"))
+    }
+}
+
+fn utf8_len(b: u8) -> usize {
+    match b {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+/// Serialize with sorted keys; `indent = 0` → compact.
+pub fn to_string(v: &Json, indent: usize) -> String {
+    let mut s = String::new();
+    write_val(&mut s, v, indent, 0);
+    s
+}
+
+fn write_val(out: &mut String, v: &Json, indent: usize, level: usize) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Json::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 1e15 {
+                let _ = write!(out, "{}", *n as i64);
+            } else {
+                let _ = write!(out, "{n}");
+            }
+        }
+        Json::Str(s) => write_str(out, s),
+        Json::Arr(a) => {
+            out.push('[');
+            for (i, x) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                nl(out, indent, level + 1);
+                write_val(out, x, indent, level + 1);
+            }
+            if !a.is_empty() {
+                nl(out, indent, level);
+            }
+            out.push(']');
+        }
+        Json::Obj(m) => {
+            out.push('{');
+            for (i, (k, x)) in m.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                nl(out, indent, level + 1);
+                write_str(out, k);
+                out.push(':');
+                if indent > 0 {
+                    out.push(' ');
+                }
+                write_val(out, x, indent, level + 1);
+            }
+            if !m.is_empty() {
+                nl(out, indent, level);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn nl(out: &mut String, indent: usize, level: usize) {
+    if indent > 0 {
+        out.push('\n');
+        for _ in 0..indent * level {
+            out.push(' ');
+        }
+    }
+}
+
+fn write_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(parse("null").unwrap(), Json::Null);
+        assert_eq!(parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(parse(" -12.5e2 ").unwrap(), Json::Num(-1250.0));
+        assert_eq!(parse("\"a\\nb\"").unwrap(), Json::Str("a\nb".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let v = parse(r#"{"a": [1, 2, {"b": "x"}], "c": null}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().arr().unwrap().len(), 3);
+        assert_eq!(v.get("a").unwrap().arr().unwrap()[2].get("b").unwrap().str().unwrap(), "x");
+        assert!(v.opt("c").is_none());
+        assert!(v.opt("d").is_none());
+    }
+
+    #[test]
+    fn parse_unicode_escapes() {
+        assert_eq!(parse(r#""é""#).unwrap(), Json::Str("é".into()));
+        assert_eq!(parse(r#""😀""#).unwrap(), Json::Str("😀".into()));
+        assert_eq!(parse("\"héllo\"").unwrap(), Json::Str("héllo".into()));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("12 34").is_err());
+        assert!(parse("\"unterminated").is_err());
+        let deep = "[".repeat(300) + &"]".repeat(300);
+        assert!(parse(&deep).is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let src = r#"{"models":{"m1":{"bits":[2,3,4],"acc":0.75,"sym":true}},"v":1}"#;
+        let v = parse(src).unwrap();
+        let s = to_string(&v, 0);
+        assert_eq!(parse(&s).unwrap(), v);
+        let pretty = to_string(&v, 2);
+        assert_eq!(parse(&pretty).unwrap(), v);
+    }
+
+    #[test]
+    fn int_formatting() {
+        assert_eq!(to_string(&Json::Num(3.0), 0), "3");
+        assert_eq!(to_string(&Json::Num(3.25), 0), "3.25");
+    }
+}

@@ -1,0 +1,6 @@
+//! Serialization substrates: a from-scratch JSON parser/writer ([`json`])
+//! and the FXT named-tensor container ([`fxt`]) shared with the Python
+//! build path (`python/compile/fxt.py`).
+
+pub mod fxt;
+pub mod json;

@@ -1,0 +1,174 @@
+//! Experiment sweeps: drive a whole paper table (or figure series) from a
+//! TOML config — the `flexround sweep --config configs/<exp>.toml` path.
+//!
+//! A sweep is a grid over (models × methods × bits × settings [× sample
+//! sizes]); each cell is one PTQ run + evaluation.  The emitted table uses
+//! the paper's layout: one row per (setting, method, bits), one column per
+//! model, cells formatted like the paper ("top1/top5", PPL, BLEU, …).
+
+use crate::config::Config;
+use crate::coordinator::{Plan, Session};
+use crate::eval;
+use crate::manifest::Manifest;
+use crate::report::{fmt_metric, Reporter, Table};
+use crate::runtime::Runtime;
+use crate::Result;
+use anyhow::anyhow;
+use std::collections::BTreeMap;
+
+/// Run one sweep config; returns the table for further use in benches.
+pub fn run_sweep(cfg: &Config, man: &Manifest, rt: &Runtime, rep: &Reporter) -> Result<()> {
+    let id = cfg.str("sweep.id", "sweep");
+    let title = cfg.str("sweep.title", &id);
+    let models = cfg
+        .list_str("sweep.models")
+        .ok_or_else(|| anyhow!("sweep.models missing"))?;
+    let methods = cfg
+        .list_str("sweep.methods")
+        .ok_or_else(|| anyhow!("sweep.methods missing"))?;
+    let bits = cfg.list_usize("sweep.bits").unwrap_or_else(|| vec![4]);
+    let settings = cfg.list_str("sweep.settings").unwrap_or_else(|| vec!["B".into()]);
+    let mode = cfg.str("sweep.mode", "w");
+    let abits = cfg.usize("sweep.abits", 8);
+    let match_abits = cfg.boolean("sweep.match_abits", false);
+    let metric_keys = cfg.list_str("sweep.metric_keys");
+    let iters = cfg.usize("sweep.iters", 0);
+    let calib_n = cfg.usize("sweep.calib_n", 0);
+    let seed = cfg.usize("sweep.seed", 7) as u64;
+    let samples = cfg.list_usize("sweep.samples"); // Figure 7 axis
+    let verbose = cfg.boolean("sweep.verbose", false);
+
+    let mut columns: Vec<&str> = vec!["Method", "# Bits (W/A)"];
+    if samples.is_some() {
+        columns.push("Samples");
+    }
+    let model_cols: Vec<String> = models.clone();
+    let mut all_cols = columns.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+    all_cols.extend(model_cols.iter().cloned());
+    let mut table = Table::new(&title, &all_cols.iter().map(String::as_str).collect::<Vec<_>>());
+
+    // sessions once per model
+    let mut sessions = BTreeMap::new();
+    for m in &models {
+        sessions.insert(m.clone(), Session::open(rt, man, m)?);
+    }
+
+    // full-precision row
+    {
+        let mut cells = vec!["Full-precision".to_string(), "32/32".to_string()];
+        if samples.is_some() {
+            cells.push("-".into());
+        }
+        for m in &models {
+            let sess = &sessions[m];
+            let met = eval_for(sess, None)?;
+            cells.push(fmt_cell(&filter_metrics(met, &metric_keys)));
+        }
+        table.row(cells);
+    }
+
+    let sample_axis = samples.unwrap_or_else(|| vec![0]);
+    for &b in &bits {
+        for setting in &settings {
+            for method in &methods {
+                for &n in &sample_axis {
+                    let a = if match_abits { b } else { abits };
+                    let mut cells = vec![
+                        format!("{setting} + {}", pretty_method(method)),
+                        if mode == "w" { format!("{b}/32") } else { format!("{b}/{a}") },
+                    ];
+                    if sample_axis.len() > 1 || n > 0 {
+                        if sample_axis != [0] {
+                            cells.push(format!("{n}"));
+                        }
+                    }
+                    for m in &models {
+                        let sess = &sessions[m];
+                        let mut plan = Plan::new(m, method);
+                        plan.mode = mode.clone();
+                        plan.bits_w = b as u32;
+                        plan.abits = a as u32;
+                        plan.iters = iters;
+                        plan.drop_p = if setting == "Q" { 0.5 } else { 0.0 };
+                        plan.calib_n = if n > 0 { n } else { calib_n };
+                        plan.seed = seed;
+                        plan.verbose = verbose;
+                        let r = sess.quantize(&plan)?;
+                        let met = eval_for(sess, Some(&r))?;
+                        if verbose {
+                            eprintln!("  [{id}] {m} {setting}+{method} W{b}: {met:?}");
+                        }
+                        cells.push(fmt_cell(&filter_metrics(met, &metric_keys)));
+                    }
+                    table.row(cells);
+                }
+            }
+        }
+    }
+
+    rep.table(&id, &table)?;
+    println!("sweep {id}: {} rows → reports/{id}.md", table.rows.len());
+    Ok(())
+}
+
+fn filter_metrics(m: BTreeMap<String, f64>, keys: &Option<Vec<String>>)
+                  -> BTreeMap<String, f64> {
+    match keys {
+        None => m,
+        Some(ks) => m.into_iter().filter(|(k, _)| ks.iter().any(|x| x == k)).collect(),
+    }
+}
+
+fn eval_for(sess: &Session, r: Option<&crate::coordinator::QuantResult>)
+            -> Result<BTreeMap<String, f64>> {
+    let mut m = BTreeMap::new();
+    match sess.model.kind.as_str() {
+        "cnn" => m.extend(match r {
+            Some(r) => eval::eval_cnn(sess, r)?,
+            None => eval::eval_cnn_fp(sess)?,
+        }),
+        "encoder" => m.extend(eval::eval_encoder(sess, r)?),
+        "decoder" => {
+            if sess.model.name == "dec_lora" {
+                m.insert("bleu_seen".into(), eval::eval_d2t_bleu(sess, r, "seen")?);
+                m.insert("bleu_unseen".into(), eval::eval_d2t_bleu(sess, r, "unseen")?);
+            } else {
+                m.insert("ppl".into(), eval::eval_ppl(sess, r, "eval_x")?);
+                if sess.model.name == "llm_mini" {
+                    for task in eval::MC_TASKS {
+                        m.insert(format!("mc_{task}"), eval::eval_mc(sess, r, task)?);
+                    }
+                }
+            }
+        }
+        k => anyhow::bail!("unknown kind {k}"),
+    }
+    Ok(m)
+}
+
+/// Cell format mirrors the paper: "top1/top5" for CNNs, "PPL", task accs.
+fn fmt_cell(m: &BTreeMap<String, f64>) -> String {
+    if m.contains_key("top1") {
+        format!("{}/{}", fmt_metric("top1", m["top1"]), fmt_metric("top5", m["top5"]))
+    } else if m.contains_key("ppl") && m.len() == 1 {
+        fmt_metric("ppl", m["ppl"])
+    } else {
+        m.iter()
+            .map(|(k, v)| format!("{k}={}", fmt_metric(k, *v)))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+fn pretty_method(m: &str) -> &str {
+    match m {
+        "rtn" => "RTN",
+        "adaround" => "AdaRound",
+        "adaquant" => "AdaQuant",
+        "flexround" => "FlexRound (Ours)",
+        "flexround_fixed_s1" => "FlexRound, fixed s1 (Abl. 1)",
+        "flexround_no_s34" => "FlexRound, no s3/s4 (Abl. 2)",
+        "adaquant_flexround" => "AdaQuant + FlexRound",
+        other => other,
+    }
+}

@@ -1,0 +1,264 @@
+//! Minimal n-dimensional f32/i32 tensor library.
+//!
+//! This is the coordinator-side substrate for everything that is *not* the
+//! numeric hot path (which runs inside AOT-compiled HLO): calibration-set
+//! slicing, metric computation, grid-shift analysis, CLE/AHB verification,
+//! and report assembly.  Row-major (C) contiguous storage only — views are
+//! materialized, which is fine at coordinator scale.
+
+mod ops;
+
+pub use ops::*;
+
+use crate::Result;
+use anyhow::{anyhow, bail};
+
+/// Element type tag, mirroring the FXT container and PJRT literals.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// A dense row-major tensor of f32 or i32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Data,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    // ---- constructors ---------------------------------------------------
+
+    pub fn from_f32(data: Vec<f32>, shape: &[usize]) -> Result<Self> {
+        if data.len() != shape.iter().product::<usize>() {
+            bail!("shape {:?} wants {} elems, got {}", shape, shape.iter().product::<usize>(), data.len());
+        }
+        Ok(Self { shape: shape.to_vec(), data: Data::F32(data) })
+    }
+
+    pub fn from_i32(data: Vec<i32>, shape: &[usize]) -> Result<Self> {
+        if data.len() != shape.iter().product::<usize>() {
+            bail!("shape {:?} wants {} elems, got {}", shape, shape.iter().product::<usize>(), data.len());
+        }
+        Ok(Self { shape: shape.to_vec(), data: Data::I32(data) })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: Data::F32(vec![0.0; shape.iter().product()]) }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Self { shape: shape.to_vec(), data: Data::F32(vec![v; shape.iter().product()]) }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: Data::F32(vec![v]) }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Self { shape: vec![], data: Data::I32(vec![v]) }
+    }
+
+    // ---- accessors ------------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => Err(anyhow!("tensor is i32, expected f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            Data::F32(_) => Err(anyhow!("tensor is f32, expected i32")),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => Err(anyhow!("tensor is i32, expected f32")),
+        }
+    }
+
+    /// f32 view regardless of storage (i32 is converted).
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        match &self.data {
+            Data::F32(v) => v.clone(),
+            Data::I32(v) => v.iter().map(|&x| x as f32).collect(),
+        }
+    }
+
+    pub fn item(&self) -> Result<f32> {
+        if self.len() != 1 {
+            bail!("item() on tensor of {} elements", self.len());
+        }
+        Ok(self.to_f32_vec()[0])
+    }
+
+    // ---- shape manipulation ----------------------------------------------
+
+    pub fn reshape(&self, shape: &[usize]) -> Result<Self> {
+        if shape.iter().product::<usize>() != self.len() {
+            bail!("cannot reshape {:?} -> {:?}", self.shape, shape);
+        }
+        let mut t = self.clone();
+        t.shape = shape.to_vec();
+        Ok(t)
+    }
+
+    /// Rows `lo..hi` along axis 0 (materialized slice).
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Result<Self> {
+        if self.shape.is_empty() || hi > self.shape[0] || lo > hi {
+            bail!("slice_rows({lo},{hi}) on shape {:?}", self.shape);
+        }
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        let t = match &self.data {
+            Data::F32(v) => Data::F32(v[lo * row..hi * row].to_vec()),
+            Data::I32(v) => Data::I32(v[lo * row..hi * row].to_vec()),
+        };
+        Ok(Self { shape, data: t })
+    }
+
+    /// Gather rows by index along axis 0.
+    pub fn gather_rows(&self, idx: &[usize]) -> Result<Self> {
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = idx.len();
+        let t = match &self.data {
+            Data::F32(v) => {
+                let mut out = Vec::with_capacity(idx.len() * row);
+                for &i in idx {
+                    if i >= self.shape[0] {
+                        bail!("gather index {i} out of bounds {}", self.shape[0]);
+                    }
+                    out.extend_from_slice(&v[i * row..(i + 1) * row]);
+                }
+                Data::F32(out)
+            }
+            Data::I32(v) => {
+                let mut out = Vec::with_capacity(idx.len() * row);
+                for &i in idx {
+                    if i >= self.shape[0] {
+                        bail!("gather index {i} out of bounds {}", self.shape[0]);
+                    }
+                    out.extend_from_slice(&v[i * row..(i + 1) * row]);
+                }
+                Data::I32(out)
+            }
+        };
+        Ok(Self { shape, data: t })
+    }
+
+    /// Concatenate along axis 0.
+    pub fn concat_rows(parts: &[Tensor]) -> Result<Tensor> {
+        let first = parts.first().ok_or_else(|| anyhow!("concat of nothing"))?;
+        let mut shape = first.shape.clone();
+        let mut n0 = 0;
+        for p in parts {
+            if p.shape[1..] != first.shape[1..] {
+                bail!("concat shape mismatch {:?} vs {:?}", p.shape, first.shape);
+            }
+            n0 += p.shape[0];
+        }
+        shape[0] = n0;
+        match first.dtype() {
+            DType::F32 => {
+                let mut data = Vec::new();
+                for p in parts {
+                    data.extend_from_slice(p.as_f32()?);
+                }
+                Tensor::from_f32(data, &shape)
+            }
+            DType::I32 => {
+                let mut data = Vec::new();
+                for p in parts {
+                    data.extend_from_slice(p.as_i32()?);
+                }
+                Tensor::from_i32(data, &shape)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_shape() {
+        let t = Tensor::from_f32(vec![1., 2., 3., 4., 5., 6.], &[2, 3]).unwrap();
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+        assert!(Tensor::from_f32(vec![1.0], &[2]).is_err());
+    }
+
+    #[test]
+    fn reshape_roundtrip() {
+        let t = Tensor::from_f32((0..24).map(|i| i as f32).collect(), &[2, 3, 4]).unwrap();
+        let r = t.reshape(&[6, 4]).unwrap();
+        assert_eq!(r.shape(), &[6, 4]);
+        assert_eq!(r.as_f32().unwrap()[5], 5.0);
+        assert!(t.reshape(&[5, 5]).is_err());
+    }
+
+    #[test]
+    fn slice_and_gather() {
+        let t = Tensor::from_f32((0..12).map(|i| i as f32).collect(), &[4, 3]).unwrap();
+        let s = t.slice_rows(1, 3).unwrap();
+        assert_eq!(s.shape(), &[2, 3]);
+        assert_eq!(s.as_f32().unwrap(), &[3., 4., 5., 6., 7., 8.]);
+        let g = t.gather_rows(&[3, 0]).unwrap();
+        assert_eq!(g.as_f32().unwrap(), &[9., 10., 11., 0., 1., 2.]);
+        assert!(t.gather_rows(&[4]).is_err());
+    }
+
+    #[test]
+    fn concat() {
+        let a = Tensor::from_f32(vec![1., 2.], &[1, 2]).unwrap();
+        let b = Tensor::from_f32(vec![3., 4., 5., 6.], &[2, 2]).unwrap();
+        let c = Tensor::concat_rows(&[a, b]).unwrap();
+        assert_eq!(c.shape(), &[3, 2]);
+        assert_eq!(c.as_f32().unwrap()[4], 5.0);
+    }
+
+    #[test]
+    fn scalars() {
+        assert_eq!(Tensor::scalar(3.5).item().unwrap(), 3.5);
+        assert_eq!(Tensor::scalar_i32(7).to_f32_vec(), vec![7.0]);
+    }
+}

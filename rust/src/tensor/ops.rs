@@ -1,0 +1,239 @@
+//! Element-wise and reduction operations over [`Tensor`], plus the Rust-side
+//! reference quantizers used by tests and the grid-shift analysis.
+
+use super::{DType, Tensor};
+use crate::Result;
+use anyhow::bail;
+
+impl Tensor {
+    /// Element-wise map over f32 values (i32 tensors are converted).
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        let data: Vec<f32> = self.to_f32_vec().into_iter().map(f).collect();
+        Tensor::from_f32(data, self.shape()).expect("same shape")
+    }
+
+    /// Element-wise binary op; shapes must match exactly.
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor> {
+        if self.shape() != other.shape() {
+            bail!("zip shape mismatch {:?} vs {:?}", self.shape(), other.shape());
+        }
+        let a = self.to_f32_vec();
+        let b = other.to_f32_vec();
+        let data: Vec<f32> = a.iter().zip(&b).map(|(&x, &y)| f(x, y)).collect();
+        Tensor::from_f32(data, self.shape())
+    }
+
+    pub fn sum(&self) -> f32 {
+        self.to_f32_vec().iter().sum()
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        self.sum() / self.len() as f32
+    }
+
+    pub fn min(&self) -> f32 {
+        self.to_f32_vec().iter().copied().fold(f32::INFINITY, f32::min)
+    }
+
+    pub fn max(&self) -> f32 {
+        self.to_f32_vec().iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.to_f32_vec().iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Mean squared difference — the reconstruction-loss metric.
+    pub fn mse(&self, other: &Tensor) -> Result<f32> {
+        if self.shape() != other.shape() {
+            bail!("mse shape mismatch {:?} vs {:?}", self.shape(), other.shape());
+        }
+        let a = self.to_f32_vec();
+        let b = other.to_f32_vec();
+        let s: f32 = a.iter().zip(&b).map(|(&x, &y)| (x - y) * (x - y)).sum();
+        Ok(s / a.len().max(1) as f32)
+    }
+
+    /// Row-wise argmax over a 2-D tensor (logits → predictions).
+    pub fn argmax_rows(&self) -> Result<Vec<usize>> {
+        if self.ndim() != 2 {
+            bail!("argmax_rows on {:?}", self.shape());
+        }
+        let (n, c) = (self.shape()[0], self.shape()[1]);
+        let v = self.to_f32_vec();
+        Ok((0..n)
+            .map(|i| {
+                let row = &v[i * c..(i + 1) * c];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(j, _)| j)
+                    .unwrap_or(0)
+            })
+            .collect())
+    }
+
+    /// Top-k indices per row (descending) — for top-5 accuracy.
+    pub fn topk_rows(&self, k: usize) -> Result<Vec<Vec<usize>>> {
+        if self.ndim() != 2 {
+            bail!("topk_rows on {:?}", self.shape());
+        }
+        let (n, c) = (self.shape()[0], self.shape()[1]);
+        let v = self.to_f32_vec();
+        Ok((0..n)
+            .map(|i| {
+                let row = &v[i * c..(i + 1) * c];
+                let mut idx: Vec<usize> = (0..c).collect();
+                idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap_or(std::cmp::Ordering::Equal));
+                idx.truncate(k);
+                idx
+            })
+            .collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference quantization math (mirrors python/compile/kernels/ref.py; the
+// pytest/cargo cross-check pins these against the Pallas kernels).
+// ---------------------------------------------------------------------------
+
+/// Integer grid range for a bit-width (symmetric = signed two's complement).
+pub fn qrange(bits: u32, symmetric: bool) -> (f32, f32) {
+    if symmetric {
+        (-(2f32.powi(bits as i32 - 1)), 2f32.powi(bits as i32 - 1) - 1.0)
+    } else {
+        (0.0, 2f32.powi(bits as i32) - 1.0)
+    }
+}
+
+/// Min/max calibration of (s1, zero_point) for per-tensor quantization.
+pub fn minmax_scale(w: &[f32], bits: u32, symmetric: bool) -> (f32, f32) {
+    let (qmin, qmax) = qrange(bits, symmetric);
+    if symmetric {
+        let amax = w.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        ((amax / qmax).max(1e-8), 0.0)
+    } else {
+        let wmax = w.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let wmin = w.iter().copied().fold(f32::INFINITY, f32::min);
+        let s1 = ((wmax - wmin) / (qmax - qmin)).max(1e-8);
+        // zp maps wmin → qmin; NOT clamped to the grid — fake-quant keeps
+        // full range for one-sided data (integer kernels would clamp).
+        let zp = qmin - (wmin / s1).round();
+        (s1, zp)
+    }
+}
+
+/// Rounding-to-nearest fake-quant (the Rust oracle).
+pub fn rtn(w: &[f32], s1: f32, zp: f32, qmin: f32, qmax: f32) -> Vec<f32> {
+    w.iter()
+        .map(|&x| {
+            let n = ((x / s1).round() + zp).clamp(qmin, qmax);
+            s1 * (n - zp)
+        })
+        .collect()
+}
+
+/// RTN integer grid codes.
+pub fn rtn_codes(w: &[f32], s1: f32, zp: f32, qmin: f32, qmax: f32) -> Vec<f32> {
+    w.iter()
+        .map(|&x| ((x / s1).round() + zp).clamp(qmin, qmax))
+        .collect()
+}
+
+/// Per-channel RTN codes: `s1`/`zp` indexed by row, `w` is (rows, cols).
+pub fn rtn_codes_rows(w: &[f32], rows: usize, cols: usize, s1: &[f32], zp: &[f32],
+                      qmin: f32, qmax: f32) -> Vec<f32> {
+    let mut out = Vec::with_capacity(w.len());
+    for r in 0..rows {
+        for c in 0..cols {
+            let x = w[r * cols + c];
+            out.push(((x / s1[r]).round() + zp[r]).clamp(qmin, qmax));
+        }
+    }
+    out
+}
+
+impl Tensor {
+    /// Cast helper for analysis code.
+    pub fn cast_f32(&self) -> Tensor {
+        match self.dtype() {
+            DType::F32 => self.clone(),
+            DType::I32 => Tensor::from_f32(self.to_f32_vec(), self.shape()).unwrap(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_zip_reduce() {
+        let a = Tensor::from_f32(vec![1., -2., 3.], &[3]).unwrap();
+        let b = a.map(|x| x * 2.0);
+        assert_eq!(b.as_f32().unwrap(), &[2., -4., 6.]);
+        let c = a.zip(&b, |x, y| x + y).unwrap();
+        assert_eq!(c.sum(), 3.0 + -6.0 + 9.0);
+        assert_eq!(a.abs_max(), 3.0);
+        assert_eq!(a.min(), -2.0);
+    }
+
+    #[test]
+    fn mse_basic() {
+        let a = Tensor::from_f32(vec![0., 0.], &[2]).unwrap();
+        let b = Tensor::from_f32(vec![3., 4.], &[2]).unwrap();
+        assert!((a.mse(&b).unwrap() - 12.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn argmax_topk() {
+        let t = Tensor::from_f32(vec![0.1, 0.9, 0.3, 0.7, 0.2, 0.1], &[2, 3]).unwrap();
+        assert_eq!(t.argmax_rows().unwrap(), vec![1, 0]);
+        let tk = t.topk_rows(2).unwrap();
+        assert_eq!(tk[0], vec![1, 2]);
+        assert_eq!(tk[1], vec![0, 1]);
+    }
+
+    #[test]
+    fn qrange_matches_paper() {
+        assert_eq!(qrange(4, true), (-8.0, 7.0));
+        assert_eq!(qrange(8, false), (0.0, 255.0));
+        assert_eq!(qrange(2, true), (-2.0, 1.0));
+    }
+
+    #[test]
+    fn rtn_idempotent() {
+        // quantizing an already-quantized tensor is the identity
+        let w = vec![0.3, -0.7, 1.2, 0.05];
+        let (s1, zp) = minmax_scale(&w, 4, true);
+        let q1 = rtn(&w, s1, zp, -8.0, 7.0);
+        let q2 = rtn(&q1, s1, zp, -8.0, 7.0);
+        assert_eq!(q1, q2);
+    }
+
+    #[test]
+    fn rtn_grid_membership() {
+        let w = vec![0.33, -0.21, 0.9, -1.4];
+        let (s1, zp) = minmax_scale(&w, 3, true);
+        for q in rtn(&w, s1, zp, -4.0, 3.0) {
+            let n = q / s1;
+            assert!((n - n.round()).abs() < 1e-5);
+            assert!(n >= -4.0 && n <= 3.0);
+        }
+    }
+
+    #[test]
+    fn asymmetric_zero_point() {
+        // all-positive data: the unclamped zp preserves the full range
+        let w = vec![0.1, 0.5, 0.9];
+        let (s1, zp) = minmax_scale(&w, 8, false);
+        assert!(zp < 0.0, "one-sided positive data needs negative zp, got {zp}");
+        let q = rtn(&w, s1, zp, 0.0, 255.0);
+        for (a, b) in w.iter().zip(&q) {
+            assert!((a - b).abs() <= s1, "err {} > step {s1}", (a - b).abs());
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Coordinator utilities built from scratch (the vendored crate set has no
+//! rand / rayon / proptest): a PCG32 RNG, streaming statistics, a worker
+//! thread pool, and a randomized property-test harness.
+
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

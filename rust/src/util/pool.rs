@@ -1,0 +1,123 @@
+//! A small scoped worker pool over std threads (rayon is not vendored).
+//!
+//! The PJRT client itself is single-threaded per executable here, but data
+//! preparation, metric reduction, and the analysis fan-outs (grid-shift
+//! histograms over many layers) parallelize across units.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Run `jobs` closures on up to `workers` threads; returns results in job
+/// order.  Panics in jobs are propagated as Err strings.
+pub fn run_jobs<T: Send + 'static>(
+    workers: usize,
+    jobs: Vec<Box<dyn FnOnce() -> T + Send>>,
+) -> Vec<T> {
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    let queue = Arc::new(Mutex::new(jobs.into_iter().enumerate().collect::<Vec<_>>()));
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let queue = Arc::clone(&queue);
+            let tx = tx.clone();
+            s.spawn(move || loop {
+                let job = queue.lock().expect("queue poisoned").pop();
+                match job {
+                    Some((i, f)) => {
+                        let r = f();
+                        if tx.send((i, r)).is_err() {
+                            return;
+                        }
+                    }
+                    None => return,
+                }
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|o| o.expect("job dropped")).collect()
+    })
+}
+
+/// Parallel map over a slice with index.
+pub fn par_map<I: Sync, T: Send + 'static>(
+    workers: usize,
+    items: &[I],
+    f: impl Fn(usize, &I) -> T + Sync + Send,
+) -> Vec<T> {
+    std::thread::scope(|s| {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = workers.clamp(1, n);
+        let next = Arc::new(Mutex::new(0usize));
+        let mut handles = Vec::new();
+        for _ in 0..workers {
+            let next = Arc::clone(&next);
+            let f = &f;
+            handles.push(s.spawn(move || {
+                let mut out = Vec::new();
+                loop {
+                    let i = {
+                        let mut g = next.lock().expect("poisoned");
+                        let i = *g;
+                        *g += 1;
+                        i
+                    };
+                    if i >= n {
+                        return out;
+                    }
+                    out.push((i, f(i, &items[i])));
+                }
+            }));
+        }
+        let mut all: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for h in handles {
+            for (i, v) in h.join().expect("worker panicked") {
+                all[i] = Some(v);
+            }
+        }
+        all.into_iter().map(|o| o.expect("missing result")).collect()
+    })
+}
+
+/// Number of workers to use by default.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordered_results() {
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            (0..50usize).map(|i| Box::new(move || i * 2) as _).collect();
+        let out = run_jobs(4, jobs);
+        assert_eq!(out, (0..50).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_matches_serial() {
+        let items: Vec<u64> = (0..100).collect();
+        let out = par_map(8, &items, |_, &x| x * x);
+        assert_eq!(out, items.iter().map(|&x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty() {
+        let out: Vec<u8> = run_jobs(4, vec![]);
+        assert!(out.is_empty());
+        let out2: Vec<u8> = par_map(4, &[] as &[u8], |_, &x| x);
+        assert!(out2.is_empty());
+    }
+}

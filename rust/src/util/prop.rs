@@ -1,0 +1,93 @@
+//! Randomized property-test harness (proptest is not vendored).
+//!
+//! No shrinking — failures print the seed and case index so any run can be
+//! reproduced exactly (`Pcg32` is platform-deterministic).  Used by the unit
+//! tests to check quantizer invariants over thousands of random tensors.
+
+use super::rng::Pcg32;
+
+/// Configuration for a property run.
+pub struct Prop {
+    pub cases: usize,
+    pub seed: u64,
+    pub name: &'static str,
+}
+
+impl Prop {
+    pub fn new(name: &'static str) -> Self {
+        Self { cases: 256, seed: 0xF1E2_D3C4, name }
+    }
+
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Run `f` on `cases` independent generators; panic with a reproducible
+    /// tag on the first failure.
+    pub fn check(self, f: impl Fn(&mut Pcg32) -> Result<(), String>) {
+        for case in 0..self.cases {
+            let mut rng = Pcg32::new(self.seed ^ case as u64, 99);
+            if let Err(msg) = f(&mut rng) {
+                panic!(
+                    "property {:?} failed at case {case} (seed {:#x}): {msg}",
+                    self.name, self.seed
+                );
+            }
+        }
+    }
+}
+
+/// Random weight-like vector: mixture of scales so quantizers see both
+/// sub-unit and multi-unit magnitudes (the MobileNet-vs-ResNet regimes).
+pub fn gen_weights(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    let scale = match rng.below(4) {
+        0 => 0.05,
+        1 => 0.3,
+        2 => 1.0,
+        _ => 3.0,
+    };
+    (0..n).map(|_| rng.next_normal() * scale).collect()
+}
+
+/// Random (rows, cols) within a bound.
+pub fn gen_dims(rng: &mut Pcg32, max: usize) -> (usize, usize) {
+    (1 + rng.below(max as u32) as usize, 1 + rng.below(max as u32) as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harness_passes_trivial() {
+        Prop::new("trivial").cases(32).check(|rng| {
+            let x = rng.next_f32();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn harness_reports_failure() {
+        Prop::new("fails").cases(8).check(|_| Err("boom".into()));
+    }
+
+    #[test]
+    fn generators_sane() {
+        let mut rng = Pcg32::seeded(1);
+        let w = gen_weights(&mut rng, 100);
+        assert_eq!(w.len(), 100);
+        let (r, c) = gen_dims(&mut rng, 16);
+        assert!(r >= 1 && r <= 16 && c >= 1 && c <= 16);
+    }
+}

@@ -1,0 +1,162 @@
+//! Streaming statistics + the micro-benchmark harness (criterion is not in
+//! the vendored crate set, so `cargo bench` targets use this instead).
+
+use std::time::{Duration, Instant};
+
+/// Welford online mean/variance plus extrema.
+#[derive(Clone, Debug, Default)]
+pub struct Stream {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Stream {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Percentile over a sample (nearest-rank, ceil convention).
+pub fn percentile(samples: &mut [f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let rank = ((p / 100.0) * samples.len() as f64).ceil() as usize;
+    samples[rank.saturating_sub(1).min(samples.len() - 1)]
+}
+
+/// Benchmark result (all times in seconds).
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>7} iters  mean {:>10}  p50 {:>10}  p95 {:>10}  min {:>10}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean),
+            fmt_time(self.p50),
+            fmt_time(self.p95),
+            fmt_time(self.min),
+        )
+    }
+}
+
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else {
+        format!("{:.1}µs", secs * 1e6)
+    }
+}
+
+/// Time `f` adaptively: warm up, then run until `budget` is spent or
+/// `max_iters` reached; reports robust percentiles.
+pub fn bench(name: &str, budget: Duration, max_iters: u64, mut f: impl FnMut()) -> BenchResult {
+    // warmup
+    let w0 = Instant::now();
+    f();
+    let warm = w0.elapsed();
+    let mut times = Vec::new();
+    let start = Instant::now();
+    let mut iters = 0;
+    while iters < max_iters && (start.elapsed() < budget || iters < 3) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+        iters += 1;
+    }
+    let _ = warm;
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().copied().fold(f64::INFINITY, f64::min);
+    let p50 = percentile(&mut times.clone(), 50.0);
+    let p95 = percentile(&mut times, 95.0);
+    BenchResult { name: name.to_string(), iters, mean, p50, p95, min }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford() {
+        let mut s = Stream::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.var() - 32.0 / 7.0).abs() < 1e-9);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+        assert_eq!(s.count(), 8);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&mut v, 50.0), 50.0);
+        assert_eq!(percentile(&mut v.clone(), 0.0), 1.0);
+        assert_eq!(percentile(&mut v, 100.0), 100.0);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let r = bench("noop", Duration::from_millis(5), 1000, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean >= 0.0);
+        assert!(!r.report().is_empty());
+    }
+}

@@ -1,0 +1,260 @@
+//! Integration tests over the real AOT artifacts (runtime + coordinator +
+//! eval).  Each test self-skips when `make artifacts` has not produced the
+//! model it needs, so `cargo test` is green at any build stage; CI/full runs
+//! exercise everything.
+
+use flexround::coordinator::{Plan, Session};
+use flexround::manifest::Manifest;
+use flexround::runtime::Runtime;
+use flexround::tensor::Tensor;
+use flexround::{eval, quant};
+use std::path::Path;
+
+fn load(model: &str) -> Option<(Manifest, Runtime)> {
+    let art = Path::new("artifacts");
+    let man = Manifest::load(art).ok()?;
+    if !man.models.contains_key(model) {
+        eprintln!("skip: model {model} not in manifest yet");
+        return None;
+    }
+    // all artifacts present?
+    let mi = &man.models[model];
+    for u in &mi.units {
+        for f in u.artifacts.values() {
+            if !man.artifact_path(f).exists() {
+                eprintln!("skip: artifact {f} missing");
+                return None;
+            }
+        }
+    }
+    let rt = Runtime::new(art).ok()?;
+    Some((man, rt))
+}
+
+#[test]
+fn fp_chain_is_deterministic() {
+    let Some((man, rt)) = load("tinymobilenet") else { return };
+    let sess = Session::open(&rt, &man, "tinymobilenet").unwrap();
+    let calib = sess.dataset("calib_x").unwrap();
+    let x = calib.slice_rows(0, sess.model.calib_batch).unwrap();
+    let a = sess.forward_fp(&x).unwrap();
+    let b = sess.forward_fp(&x).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (p, q) in a.iter().zip(&b) {
+        assert_eq!(p.as_f32().unwrap(), q.as_f32().unwrap());
+    }
+    // CNN chain ends at logits
+    assert_eq!(a[0].shape()[1], 10);
+}
+
+#[test]
+fn rtn_8bit_close_to_fp() {
+    let Some((man, rt)) = load("tinymobilenet") else { return };
+    let sess = Session::open(&rt, &man, "tinymobilenet").unwrap();
+    let mut plan = Plan::new("tinymobilenet", "rtn");
+    plan.bits_w = 8;
+    plan.calib_n = 64;
+    let r = sess.quantize(&plan).unwrap();
+    let q = eval::eval_cnn(&sess, &r).unwrap();
+    let fp = eval::eval_cnn_fp(&sess).unwrap();
+    assert!(
+        (fp["top1"] - q["top1"]).abs() < 0.03,
+        "8-bit RTN should be near-lossless: fp {} vs q {}",
+        fp["top1"],
+        q["top1"]
+    );
+}
+
+#[test]
+fn flexround_reduces_reconstruction_loss() {
+    let Some((man, rt)) = load("tinymobilenet") else { return };
+    let sess = Session::open(&rt, &man, "tinymobilenet").unwrap();
+    let mut plan = Plan::new("tinymobilenet", "flexround");
+    plan.bits_w = 3;
+    plan.iters = 60;
+    plan.calib_n = 128;
+    let r = sess.quantize(&plan).unwrap();
+    let mut improved = 0;
+    for u in &r.units {
+        assert!(u.final_loss.is_finite(), "unit {} loss not finite", u.unit);
+        if u.final_loss < u.first_loss {
+            improved += 1;
+        }
+    }
+    assert!(
+        improved * 2 >= r.units.len(),
+        "reconstruction should reduce loss on most units ({improved}/{})",
+        r.units.len()
+    );
+}
+
+#[test]
+fn flexround_beats_rtn_at_low_bits() {
+    let Some((man, rt)) = load("tinymobilenet") else { return };
+    let sess = Session::open(&rt, &man, "tinymobilenet").unwrap();
+    let mut rtn_plan = Plan::new("tinymobilenet", "rtn");
+    rtn_plan.bits_w = 3;
+    rtn_plan.calib_n = 64;
+    let rtn_m = eval::eval_cnn(&sess, &sess.quantize(&rtn_plan).unwrap()).unwrap();
+    let mut fx = Plan::new("tinymobilenet", "flexround");
+    fx.bits_w = 3;
+    fx.iters = 150;
+    fx.calib_n = 256;
+    let fx_m = eval::eval_cnn(&sess, &sess.quantize(&fx).unwrap()).unwrap();
+    assert!(
+        fx_m["top1"] >= rtn_m["top1"] - 1e-9,
+        "FlexRound {} should beat RTN {} at 3-bit",
+        fx_m["top1"],
+        rtn_m["top1"]
+    );
+}
+
+#[test]
+fn quantize_is_seed_deterministic() {
+    let Some((man, rt)) = load("tinymobilenet") else { return };
+    let sess = Session::open(&rt, &man, "tinymobilenet").unwrap();
+    let mut plan = Plan::new("tinymobilenet", "flexround");
+    plan.bits_w = 4;
+    plan.iters = 10;
+    plan.calib_n = 64;
+    let a = sess.quantize(&plan).unwrap();
+    let b = sess.quantize(&plan).unwrap();
+    for (ua, ub) in a.units.iter().zip(&b.units) {
+        assert_eq!(ua.final_loss, ub.final_loss, "unit {} not deterministic", ua.unit);
+        for (pa, pb) in ua.params.iter().zip(&ub.params) {
+            assert_eq!(pa.as_f32().unwrap(), pb.as_f32().unwrap());
+        }
+    }
+}
+
+#[test]
+fn qw_export_codes_lie_on_grid() {
+    let Some((man, rt)) = load("tinymobilenet") else { return };
+    let sess = Session::open(&rt, &man, "tinymobilenet").unwrap();
+    let mut plan = Plan::new("tinymobilenet", "flexround");
+    plan.bits_w = 4;
+    plan.iters = 20;
+    plan.calib_n = 64;
+    let r = sess.quantize(&plan).unwrap();
+    let unit = &sess.model.units[1];
+    let st = &r.units[1];
+    for (what, codes) in sess.export_qw(unit, st).unwrap() {
+        let c = codes.to_f32_vec();
+        for &x in &c {
+            assert!((-8.0..=7.0).contains(&x), "code {x} outside 4-bit grid");
+            assert!((x - x.round()).abs() < 1e-4, "code {x} not integral");
+        }
+        assert_eq!(what.len(), codes.len());
+    }
+    // grid-shift analysis runs and reports sane fractions
+    for gs in quant::grid_shifts(&sess, unit, st).unwrap() {
+        assert!(gs.aggressive_frac <= gs.shifted_frac);
+        assert!(gs.shifted_frac <= 1.0);
+    }
+}
+
+#[test]
+fn wa_mode_runs_with_qdrop_and_brecq_settings() {
+    let Some((man, rt)) = load("tinyresnet_a") else { return };
+    let sess = Session::open(&rt, &man, "tinyresnet_a").unwrap();
+    for drop_p in [0.0, 0.5] {
+        let mut plan = Plan::new("tinyresnet_a", "flexround");
+        plan.mode = "wa".into();
+        plan.bits_w = 4;
+        plan.abits = 4;
+        plan.drop_p = drop_p;
+        plan.iters = 15;
+        plan.calib_n = 64;
+        let r = sess.quantize(&plan).unwrap();
+        let m = eval::eval_cnn(&sess, &r).unwrap();
+        assert!(m["top1"] > 0.05, "W4A4 drop_p={drop_p} collapsed: {}", m["top1"]);
+    }
+}
+
+#[test]
+fn decoder_ppl_pipeline() {
+    let Some((man, rt)) = load("dec_small_lma") else { return };
+    let sess = Session::open(&rt, &man, "dec_small_lma").unwrap();
+    let fp = eval::eval_ppl(&sess, None, "eval_x").unwrap();
+    assert!(fp > 1.0 && fp < 100.0, "fp ppl {fp}");
+    let mut plan = Plan::new("dec_small_lma", "flexround");
+    plan.mode = "wa".into();
+    plan.bits_w = 8;
+    plan.drop_p = 0.5;
+    plan.iters = 40;
+    let r = sess.quantize(&plan).unwrap();
+    let q = eval::eval_ppl(&sess, Some(&r), "eval_x").unwrap();
+    assert!(q < fp * 1.5, "8-bit PTQ ppl {q} should stay near fp {fp}");
+}
+
+#[test]
+fn encoder_eval_pipeline() {
+    let Some((man, rt)) = load("enc_small") else { return };
+    let sess = Session::open(&rt, &man, "enc_small").unwrap();
+    let fp = eval::eval_encoder(&sess, None).unwrap();
+    // enc_small is deliberately tiny (d=48, 2 layers, multi-task): individual
+    // tasks land between ~0.53 (entail) and ~0.62 (para).  The pipeline check
+    // is above-chance on every task and clearly-learned on the best one —
+    // method *orderings* (the paper's claim) are asserted by the sweeps.
+    let mut best = 0.0f64;
+    for task in eval::NLU_TASKS {
+        assert!(fp[task] > 0.5, "fp {task} acc {} at/below chance", fp[task]);
+        best = best.max(fp[task]);
+    }
+    assert!(best > 0.58, "no NLU task clearly learned (best {best})");
+    assert!(fp.contains_key("span_em"));
+}
+
+#[test]
+fn llm_mc_scoring_shapes() {
+    let Some((man, rt)) = load("llm_mini") else { return };
+    let sess = Session::open(&rt, &man, "llm_mini").unwrap();
+    let acc = eval::eval_mc(&sess, None, "copy").unwrap();
+    assert!(acc > 0.3, "fp copy-task accuracy {acc} should beat 25% chance");
+}
+
+#[test]
+fn per_channel_init_shapes() {
+    let Some((man, rt)) = load("llm_mini") else { return };
+    let sess = Session::open(&rt, &man, "llm_mini").unwrap();
+    let unit = &sess.model.units[0];
+    let (params, entries) = sess.init_params(unit, "flexround", "w", 8, 8).unwrap();
+    let s1 = entries.iter().position(|e| e.name == "wq.s1").unwrap();
+    assert_eq!(params[s1].shape(), &[128, 1]);
+    // per-channel zero-points differ across rows for asymmetric weights
+    let zp = entries.iter().position(|e| e.name == "wq.zp").unwrap();
+    let zpv = params[zp].as_f32().unwrap();
+    assert!(zpv.iter().any(|&z| z != zpv[0]), "per-channel zp should vary");
+}
+
+#[test]
+fn calib_n_rounds_to_batch_multiple() {
+    let Some((man, rt)) = load("tinymobilenet") else { return };
+    let sess = Session::open(&rt, &man, "tinymobilenet").unwrap();
+    let mut plan = Plan::new("tinymobilenet", "rtn");
+    plan.bits_w = 8;
+    plan.calib_n = 33; // not a multiple of 32 → rounds down to 32
+    let r = sess.quantize(&plan).unwrap();
+    assert_eq!(r.units.len(), sess.model.units.len());
+}
+
+#[test]
+fn missing_artifact_is_clean_error() {
+    let art = Path::new("artifacts");
+    let Ok(_man) = Manifest::load(art) else { return };
+    let rt = Runtime::new(art).unwrap();
+    let err = rt.load("definitely_missing.hlo.txt");
+    assert!(err.is_err());
+    let msg = format!("{:#}", err.err().unwrap());
+    assert!(msg.contains("definitely_missing"));
+}
+
+#[test]
+fn dataset_tensors_match_manifest_shapes() {
+    let Some((man, rt)) = load("tinymobilenet") else { return };
+    let sess = Session::open(&rt, &man, "tinymobilenet").unwrap();
+    for (name, shape) in &sess.model.datasets {
+        let t: &Tensor = sess.dataset(name).unwrap();
+        assert_eq!(t.shape(), &shape[..], "dataset {name}");
+    }
+}

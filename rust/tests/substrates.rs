@@ -1,0 +1,211 @@
+//! Cross-module substrate tests + randomized property tests that need no
+//! artifacts (run everywhere, including before `make artifacts`).
+
+use flexround::config::Config;
+use flexround::ser::json::{self, Json};
+use flexround::tensor::{minmax_scale, qrange, rtn, rtn_codes, Tensor};
+use flexround::util::prop::{gen_weights, Prop};
+use flexround::util::rng::Pcg32;
+
+// ---------------------------------------------------------------------------
+// Quantizer invariants (mirror the hypothesis suite on the Python side)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_rtn_error_bounded_by_half_step() {
+    Prop::new("rtn error ≤ s1/2 inside range").cases(300).check(|rng| {
+        let n = 1 + rng.below(200) as usize;
+        let w = gen_weights(rng, n);
+        let bits = 2 + rng.below(7);
+        let (qmin, qmax) = qrange(bits, true);
+        let (s1, zp) = minmax_scale(&w, bits, true);
+        let q = rtn(&w, s1, zp, qmin, qmax);
+        for (x, y) in w.iter().zip(&q) {
+            // symmetric minmax clips at most the single extreme negative value
+            let n_ideal = x / s1;
+            if n_ideal >= qmin && n_ideal <= qmax {
+                if (x - y).abs() > s1 / 2.0 + 1e-5 {
+                    return Err(format!("|{x} - {y}| > {}/2", s1));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rtn_asymmetric_covers_range() {
+    Prop::new("asym rtn error ≤ s1").cases(300).check(|rng| {
+        let n = 2 + rng.below(100) as usize;
+        let w = gen_weights(rng, n);
+        let bits = 4 + rng.below(5);
+        let (qmin, qmax) = qrange(bits, false);
+        let (s1, zp) = minmax_scale(&w, bits, false);
+        let q = rtn(&w, s1, zp, qmin, qmax);
+        for (x, y) in w.iter().zip(&q) {
+            if (x - y).abs() > s1 + 1e-4 {
+                return Err(format!("asym err |{x}-{y}| > step {s1}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_codes_monotone_in_weights() {
+    Prop::new("rtn codes monotone").cases(200).check(|rng| {
+        let n = 2 + rng.below(50) as usize;
+        let mut w = gen_weights(rng, n);
+        w.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let (s1, zp) = minmax_scale(&w, 4, true);
+        let codes = rtn_codes(&w, s1, zp, -8.0, 7.0);
+        for i in 1..codes.len() {
+            if codes[i] < codes[i - 1] {
+                return Err("codes not monotone".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_docs() {
+    Prop::new("json roundtrip").cases(200).check(|rng| {
+        let doc = random_json(rng, 0);
+        let text = json::to_string(&doc, if rng.below(2) == 0 { 0 } else { 2 });
+        let back = json::parse(&text).map_err(|e| e.to_string())?;
+        if !json_eq(&doc, &back) {
+            return Err(format!("roundtrip mismatch: {text}"));
+        }
+        Ok(())
+    });
+}
+
+fn random_json(rng: &mut Pcg32, depth: usize) -> Json {
+    match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => Json::Num((rng.next_f32() * 2000.0 - 1000.0) as f64),
+        3 => Json::Str(random_string(rng)),
+        4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth + 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.below(5))
+                .map(|i| (format!("k{i}_{}", random_string(rng)), random_json(rng, depth + 1)))
+                .collect(),
+        ),
+    }
+}
+
+fn random_string(rng: &mut Pcg32) -> String {
+    let chars = ["a", "β", "\"", "\\", "\n", "x", "0", "é", "~", "\t"];
+    (0..rng.below(8)).map(|_| chars[rng.below(chars.len() as u32) as usize]).collect()
+}
+
+fn json_eq(a: &Json, b: &Json) -> bool {
+    match (a, b) {
+        (Json::Num(x), Json::Num(y)) => (x - y).abs() <= 1e-9 * x.abs().max(1.0),
+        (Json::Arr(x), Json::Arr(y)) => {
+            x.len() == y.len() && x.iter().zip(y).all(|(p, q)| json_eq(p, q))
+        }
+        (Json::Obj(x), Json::Obj(y)) => {
+            x.len() == y.len()
+                && x.iter().zip(y).all(|((k1, v1), (k2, v2))| k1 == k2 && json_eq(v1, v2))
+        }
+        _ => a == b,
+    }
+}
+
+#[test]
+fn prop_fxt_roundtrip_random_tensors() {
+    use std::collections::BTreeMap;
+    Prop::new("fxt roundtrip").cases(60).check(|rng| {
+        let mut m = BTreeMap::new();
+        for i in 0..1 + rng.below(6) {
+            let ndim = rng.below(4) as usize;
+            let shape: Vec<usize> = (0..ndim).map(|_| 1 + rng.below(5) as usize).collect();
+            let n: usize = shape.iter().product::<usize>().max(1);
+            let t = if rng.below(2) == 0 {
+                Tensor::from_f32((0..n).map(|_| rng.next_normal()).collect(), &shape).unwrap()
+            } else {
+                Tensor::from_i32((0..n).map(|_| rng.next_u32() as i32).collect(), &shape).unwrap()
+            };
+            m.insert(format!("t{i}/{}", random_string(rng)), t);
+        }
+        let path = std::env::temp_dir().join(format!("fxt_prop_{}.fxt", rng.next_u32()));
+        flexround::ser::fxt::write(&path, &m).map_err(|e| e.to_string())?;
+        let back = flexround::ser::fxt::read(&path).map_err(|e| e.to_string())?;
+        std::fs::remove_file(&path).ok();
+        if back != m {
+            return Err("fxt mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_config_overrides_take_precedence() {
+    Prop::new("config layering").cases(100).check(|rng| {
+        let base = rng.below(1000);
+        let over = rng.below(1000);
+        let mut c = Config::new();
+        c.load_str(&format!("[s]\nk = {base}\n")).map_err(|e| e.to_string())?;
+        c.set_override(&format!("s.k={over}")).map_err(|e| e.to_string())?;
+        if c.usize("s.k", 0) != over as usize {
+            return Err("override lost".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn bleu_identity_dominates() {
+    use flexround::eval::bleu::bleu4;
+    Prop::new("bleu(x,x) ≥ bleu(y,x)").cases(150).check(|rng| {
+        let n = 5 + rng.below(10) as usize;
+        let x: Vec<i32> = (0..n).map(|_| rng.below(20) as i32).collect();
+        let mut y = x.clone();
+        let k = rng.below(n as u32) as usize;
+        y[k] = (y[k] + 1 + rng.below(5) as i32) % 20;
+        if bleu4(&x, &x) + 1e-9 < bleu4(&y, &x) {
+            return Err("identity not maximal".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pool_matches_serial_reference() {
+    use flexround::util::pool::par_map;
+    let items: Vec<Vec<f32>> = (0..40)
+        .map(|i| {
+            let mut r = Pcg32::seeded(i);
+            gen_weights(&mut r, 64)
+        })
+        .collect();
+    let par = par_map(4, &items, |_, w| {
+        let (s1, zp) = minmax_scale(w, 4, true);
+        rtn(w, s1, zp, -8.0, 7.0)
+    });
+    for (i, w) in items.iter().enumerate() {
+        let (s1, zp) = minmax_scale(w, 4, true);
+        assert_eq!(par[i], rtn(w, s1, zp, -8.0, 7.0));
+    }
+}
+
+#[test]
+fn tensor_slice_gather_consistency() {
+    Prop::new("gather(i..j) == slice(i,j)").cases(100).check(|rng| {
+        let rows = 2 + rng.below(20) as usize;
+        let cols = 1 + rng.below(8) as usize;
+        let t = Tensor::from_f32(gen_weights(rng, rows * cols), &[rows, cols]).unwrap();
+        let lo = rng.below(rows as u32) as usize;
+        let hi = lo + rng.below((rows - lo + 1) as u32) as usize;
+        let idx: Vec<usize> = (lo..hi).collect();
+        let a = t.slice_rows(lo, hi).map_err(|e| e.to_string())?;
+        let b = t.gather_rows(&idx).map_err(|e| e.to_string())?;
+        if a != b {
+            return Err("slice != gather".into());
+        }
+        Ok(())
+    });
+}
