@@ -1,0 +1,139 @@
+"""Generate golden fixtures for the native Rust FlexRound backend.
+
+Writes ``rust/tests/fixtures/flexround_golden.json`` — small (W, s1, S2, s3,
+s4, zp) instances together with the expected fake-quantized weights Ŵ,
+integer codes, and fused-matmul outputs Ŷ = X·Ŵᵀ.
+
+The expected values are computed here in pure-Python double precision using
+*exactly* the formulas of ``python/compile/kernels/ref.py`` (Eq. 2 of the
+paper, banker's rounding like ``jnp.round``); the pytest suite pins the
+Pallas kernels against ``ref.py``, so agreement with this file is (by
+transitivity) agreement with the reference kernels — and this script needs
+no JAX, so the fixture can be regenerated in any environment:
+
+    python3 python/tests/gen_flexround_golden.py
+
+Weights are nudged away from rounding-boundary halves (|frac − 0.5| > 1e-3)
+so the f32 arithmetic on the Rust side cannot round differently.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+
+# -- tiny deterministic PRNG (no numpy in the minimal image) ----------------
+
+class Lcg:
+    def __init__(self, seed: int):
+        self.s = seed & 0xFFFFFFFFFFFFFFFF
+
+    def next_u32(self) -> int:
+        self.s = (self.s * 6364136223846793005 + 1442695040888963407) & 0xFFFFFFFFFFFFFFFF
+        return (self.s >> 33) & 0xFFFFFFFF
+
+    def uniform(self, lo: float, hi: float) -> float:
+        return lo + (hi - lo) * (self.next_u32() / 2**32)
+
+    def normal(self) -> float:
+        # Irwin–Hall(12) approximation — plenty for fixture data.
+        return sum(self.uniform(0.0, 1.0) for _ in range(12)) - 6.0
+
+
+# -- ref.py math in pure python ---------------------------------------------
+
+def round_half_even(x: float) -> float:
+    f = float(int(x // 1))  # floor
+    d = x - f
+    if d == 0.5:
+        return f if (f % 2.0) == 0.0 else f + 1.0
+    return float(round(x))  # python round() is banker's, matches jnp.round
+
+
+def flexround(w, r, c, s1, s2, s3, s4, zp, qmin, qmax):
+    what, codes = [], []
+    for i in range(r):
+        for j in range(c):
+            k = i * c + j
+            div = s1[i] * s2[k] * s3[i] * s4[j]
+            n = round_half_even(w[k] / div) + zp[i]
+            n_c = min(max(n, qmin), qmax)
+            codes.append(n_c)
+            what.append(s1[i] * (n_c - zp[i]))
+    return what, codes
+
+
+def matmul_nt(x, b, k, what, r):
+    out = []
+    for bi in range(b):
+        for ri in range(r):
+            out.append(sum(x[bi * k + t] * what[ri * k + t] for t in range(k)))
+    return out
+
+
+def nudge_off_boundaries(w, r, c, s1, s2, s3, s4):
+    """Shift any weight whose division ratio sits within 1e-3 of a rounding
+    half-boundary, so f32/f64 cannot disagree on the rounded integer."""
+    for i in range(r):
+        for j in range(c):
+            k = i * c + j
+            div = s1[i] * s2[k] * s3[i] * s4[j]
+            for _ in range(100):
+                frac = (w[k] / div) % 1.0
+                if abs(frac - 0.5) > 1e-3:
+                    break
+                w[k] += 3e-3 * div
+    return w
+
+
+def make_case(name, rng, r, c, batch, qmin, qmax, symmetric):
+    w = [rng.normal() * 0.5 for _ in range(r * c)]
+    s2 = [rng.uniform(0.9, 1.1) for _ in range(r * c)]
+    s3 = [rng.uniform(0.95, 1.05) for _ in range(r)]
+    s4 = [rng.uniform(0.95, 1.05) for _ in range(c)]
+    s1, zp = [], []
+    for i in range(r):
+        row = w[i * c:(i + 1) * c]
+        if symmetric:
+            amax = max(abs(v) for v in row)
+            s1.append(max(amax / qmax, 1e-8))
+            zp.append(0.0)
+        else:
+            wmax, wmin = max(row), min(row)
+            s = max((wmax - wmin) / (qmax - qmin), 1e-8)
+            s1.append(s)
+            zp.append(qmin - round_half_even(wmin / s))
+    if name.endswith("clip"):
+        # shrink the first row's grid so its extremes saturate (clamp path)
+        s1[0] *= 0.25
+    w = nudge_off_boundaries(w, r, c, s1, s2, s3, s4)
+    what, codes = flexround(w, r, c, s1, s2, s3, s4, zp, qmin, qmax)
+    x = [rng.normal() for _ in range(batch * c)]
+    y = matmul_nt(x, batch, c, what, r)
+    return {
+        "name": name, "rows": r, "cols": c, "batch": batch,
+        "qmin": qmin, "qmax": qmax,
+        "w": w, "s1": s1, "s2": s2, "s3": s3, "s4": s4, "zp": zp,
+        "what": what, "codes": codes, "x": x, "y": y,
+    }
+
+
+def main():
+    rng = Lcg(0x5EED_F00D)
+    cases = [
+        make_case("per_row_sym_4bit", rng, 4, 6, 3, -8.0, 7.0, True),
+        make_case("per_row_sym_3bit", rng, 5, 4, 4, -4.0, 3.0, True),
+        make_case("asym_8bit_clip", rng, 3, 5, 4, 0.0, 255.0, False),
+    ]
+    out = os.path.join(os.path.dirname(__file__), "..", "..",
+                       "rust", "tests", "fixtures", "flexround_golden.json")
+    out = os.path.normpath(out)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump({"cases": cases}, f, indent=1)
+        f.write("\n")
+    print(f"wrote {out} ({len(cases)} cases)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""The checked-in golden fixture must be exactly what the generator emits
+(determinism + no hand edits), and internally consistent with the ref.py
+formulas.  Pure stdlib — runs in images without JAX."""
+import json
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.normpath(os.path.join(HERE, "..", ".."))
+FIXTURE = os.path.join(REPO, "rust", "tests", "fixtures", "flexround_golden.json")
+
+
+def test_fixture_matches_generator(tmp_path):
+    with open(FIXTURE) as f:
+        committed = f.read()
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, os.path.join(HERE, "gen_flexround_golden.py")],
+        check=True, env=env, cwd=str(tmp_path),
+    )
+    with open(FIXTURE) as f:
+        regenerated = f.read()
+    assert committed == regenerated, "fixture drifted from its generator"
+
+
+def test_fixture_internal_consistency():
+    with open(FIXTURE) as f:
+        doc = json.load(f)
+    assert doc["cases"], "fixture has no cases"
+    for case in doc["cases"]:
+        r, c = case["rows"], case["cols"]
+        qmin, qmax = case["qmin"], case["qmax"]
+        assert len(case["w"]) == r * c == len(case["what"]) == len(case["codes"])
+        for i in range(r):
+            for j in range(c):
+                k = i * c + j
+                n = case["codes"][k]
+                assert qmin <= n <= qmax and n == int(n)
+                # Ŵ = s1 · (n − z) must hold exactly as written
+                expect = case["s1"][i] * (n - case["zp"][i])
+                assert abs(case["what"][k] - expect) < 1e-9

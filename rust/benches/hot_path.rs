@@ -12,7 +12,7 @@
 
 use flexround::coordinator::{Plan, Session};
 use flexround::manifest::Manifest;
-use flexround::runtime::Runtime;
+use flexround::runtime::Pjrt;
 use flexround::tensor::Tensor;
 use flexround::util::rng::Pcg32;
 use flexround::util::stats::bench;
@@ -56,7 +56,13 @@ fn main() {
             return;
         }
     };
-    let rt = Runtime::new(art).expect("PJRT client");
+    let rt = match Pjrt::new(art) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("hot_path: no PJRT client ({e:#}); artifact benches skipped");
+            return;
+        }
+    };
 
     for model in ["tinymobilenet", "dec_small_lma", "llm_mini"] {
         if !man.models.contains_key(model) {
@@ -72,7 +78,7 @@ fn main() {
 
 fn bench_model(
     man: &Manifest,
-    rt: &Runtime,
+    rt: &Pjrt,
     model: &str,
     budget: Duration,
 ) -> anyhow::Result<()> {

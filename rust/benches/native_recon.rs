@@ -1,0 +1,167 @@
+//! `cargo bench --bench native_recon` — the native reconstruction engine's
+//! perf harness (EXPERIMENTS.md §Perf: native vs PJRT per-unit
+//! reconstruction time).
+//!
+//! Needs no artifacts: synthetic units are generated in-process.  When real
+//! artifacts *are* present and the build carries working PJRT bindings, a
+//! comparison row times the AOT reconstruction step on the same hardware.
+//!
+//! Environment knobs:
+//!   FLEXROUND_BENCH_MS      per-measurement budget in ms (default 1500)
+//!   FLEXROUND_BENCH_WORKERS worker threads for the pool rows (default all)
+
+use flexround::recon::{self, LayerDef};
+use flexround::util::pool;
+use flexround::util::rng::Pcg32;
+use flexround::util::stats::bench;
+use std::time::Duration;
+
+/// (rows, cols, calib rows, batch) — sized like the repo's unit classes:
+/// a CNN block row, a transformer projection, and an MLP-scale layer.
+const SIZES: [(usize, usize, usize, usize); 3] =
+    [(32, 64, 256, 32), (128, 128, 256, 32), (256, 512, 512, 64)];
+
+fn main() {
+    let budget = Duration::from_millis(
+        std::env::var("FLEXROUND_BENCH_MS").ok().and_then(|s| s.parse().ok()).unwrap_or(1500),
+    );
+    let workers: usize = std::env::var("FLEXROUND_BENCH_WORKERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(pool::default_workers);
+
+    println!("== native reconstruction (workers={workers}) ==");
+    for &(r, c, n, b) in &SIZES {
+        let p = recon::synthetic_problem(r, c, n, 4, 7);
+        let slots = recon::synthetic_slots();
+        let layers = [LayerDef { name: "fc", w: &p.w, bias: None, relu_after: false }];
+        let mut rng = Pcg32::seeded(7);
+
+        // one full Adam step: minibatch gather + fwd + bwd + update
+        let mut params = p.params.clone();
+        let mut opt = flexround::recon::Adam::new(&params);
+        let mut t = 0usize;
+        println!("{}", bench(
+            &format!("native recon_step[{r}x{c}, batch {b}]"),
+            budget,
+            10_000,
+            || {
+                t += 1;
+                let idx = rng.sample_indices(n, b);
+                let xb = p.x.gather_rows(&idx).expect("gather");
+                let yb = p.y.gather_rows(&idx).expect("gather");
+                let (_, grads) = recon::loss_and_grads(
+                    &layers, &slots, &params, &xb, &yb, p.qmin, p.qmax, workers,
+                ).expect("step");
+                opt.step(t, 3e-3, &p.entries, &mut params, &grads).expect("adam");
+            },
+        ).report());
+
+        // quantized forward over the full calibration set
+        println!("{}", bench(
+            &format!("native q_forward[{r}x{c}, {n} rows]"),
+            budget,
+            10_000,
+            || {
+                let _ = recon::unit_forward_q(
+                    &layers, &slots, &p.params, p.qmin, p.qmax, &p.x, workers,
+                ).expect("fwd");
+            },
+        ).report());
+
+        // fake-quant kernel alone (the Ŵ materialization)
+        println!("{}", bench(
+            &format!("native fq[{r}x{c}]"),
+            budget,
+            50_000,
+            || {
+                let _ = recon::fq_forward(
+                    &p.w, &p.params[0], Some(&p.params[1]), Some(&p.params[2]),
+                    Some(&p.params[3]), &p.params[4], p.qmin, p.qmax,
+                ).expect("fq");
+            },
+        ).report());
+    }
+
+    // end-to-end: the selftest problem, timed once per worker count
+    for w in [1, workers] {
+        let t0 = std::time::Instant::now();
+        let p = recon::synthetic_problem(64, 128, 256, 3, 7);
+        let slots = recon::synthetic_slots();
+        let layers = [LayerDef { name: "fc", w: &p.w, bias: None, relu_after: false }];
+        let cfg = recon::ReconSettings {
+            iters: 100,
+            lr: 4e-3,
+            batch: 32,
+            qmin: p.qmin,
+            qmax: p.qmax,
+            workers: w,
+            verbose: false,
+            tag: "bench".to_string(),
+        };
+        let mut rng = Pcg32::seeded(7);
+        let res = recon::reconstruct_unit(
+            &layers, &slots, &p.entries, &p.params, &p.x, &p.y, &cfg, &mut rng,
+        ).expect("recon");
+        println!(
+            "native reconstruct_unit[64x128, 100 iters, workers={w}]  {:>8.1}ms  \
+             (loss {:.5} → {:.5})",
+            1e3 * t0.elapsed().as_secs_f64(),
+            res.first_loss,
+            res.final_loss,
+        );
+    }
+
+    pjrt_comparison(budget);
+}
+
+/// PJRT per-unit recon-step timing on the same machine, when artifacts and
+/// real bindings exist (EXPERIMENTS.md §Perf, native-vs-PJRT table).
+#[cfg(feature = "pjrt")]
+fn pjrt_comparison(_budget: Duration) {
+    use flexround::coordinator::{Plan, Session};
+    use flexround::manifest::Manifest;
+    use flexround::runtime::Pjrt;
+    use std::path::Path;
+
+    let art = Path::new("artifacts");
+    let Ok(man) = Manifest::load(art) else {
+        println!("pjrt comparison: no artifacts (native-only run)");
+        return;
+    };
+    let Ok(rt) = Pjrt::new(art) else {
+        println!("pjrt comparison: no PJRT client (stub build; native-only run)");
+        return;
+    };
+    for model in ["tinymobilenet", "dec_small_lma"] {
+        if !man.models.contains_key(model) {
+            continue;
+        }
+        let run = || -> flexround::Result<()> {
+            let sess = Session::open(&rt, &man, model)?;
+            let b = sess.model.calib_batch;
+            let mut plan = Plan::new(model, "flexround");
+            if !sess.model.methods_w.iter().any(|m| m == "flexround") {
+                plan.mode = "wa".into();
+            }
+            plan.bits_w = *sess.model.bits_w.iter().max().unwrap_or(&8);
+            plan.iters = 8;
+            plan.calib_n = b;
+            let r = sess.quantize(&plan)?;
+            println!(
+                "pjrt recon_step[{model}]  {:>10.3}ms/step  ({} units)",
+                1e3 * r.recon_seconds / r.recon_steps.max(1) as f64,
+                r.units.len()
+            );
+            Ok(())
+        };
+        if let Err(e) = run() {
+            println!("pjrt recon_step[{model}]: skipped ({e:#})");
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_comparison(_budget: Duration) {
+    println!("pjrt comparison: built without the `pjrt` feature (native-only run)");
+}

@@ -13,7 +13,7 @@
 use flexround::coordinator::{Plan, Session};
 use flexround::manifest::Manifest;
 use flexround::report::Reporter;
-use flexround::runtime::Runtime;
+use flexround::runtime::Pjrt;
 use flexround::{quant, Result};
 use std::path::Path;
 use std::time::Instant;
@@ -73,7 +73,13 @@ fn main() {
             return;
         }
     };
-    let rt = Runtime::new(art).expect("PJRT client");
+    let rt = match Pjrt::new(art) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("paper_figures: no PJRT client ({e:#}); skipped");
+            return;
+        }
+    };
     let rep = Reporter::new(Path::new("reports"), true).expect("reports");
     let t0 = Instant::now();
 

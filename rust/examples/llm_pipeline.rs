@@ -16,7 +16,7 @@
 use flexround::coordinator::{Plan, Session};
 use flexround::manifest::Manifest;
 use flexround::report::{Reporter, Table};
-use flexround::runtime::Runtime;
+use flexround::runtime::Pjrt;
 use flexround::{eval, Result};
 use std::path::Path;
 use std::time::Instant;
@@ -24,7 +24,7 @@ use std::time::Instant;
 fn main() -> Result<()> {
     let art = Path::new("artifacts");
     let man = Manifest::load(art)?;
-    let rt = Runtime::new(art)?;
+    let rt = Pjrt::new(art)?;
     let sess = Session::open(&rt, &man, "llm_mini")?;
     let rep = Reporter::new(Path::new("reports"), false)?;
 

@@ -8,14 +8,14 @@
 
 use flexround::coordinator::{Plan, Session};
 use flexround::manifest::Manifest;
-use flexround::runtime::Runtime;
+use flexround::runtime::Pjrt;
 use flexround::{eval, Result};
 use std::path::Path;
 
 fn main() -> Result<()> {
     let art = Path::new("artifacts");
     let man = Manifest::load(art)?;
-    let rt = Runtime::new(art)?;
+    let rt = Pjrt::new(art)?;
     println!("PJRT platform: {}", rt.platform());
 
     let model = "tinymobilenet";

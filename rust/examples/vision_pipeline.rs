@@ -9,7 +9,7 @@
 use flexround::coordinator::{Plan, Session};
 use flexround::manifest::Manifest;
 use flexround::report::{Reporter, Table};
-use flexround::runtime::Runtime;
+use flexround::runtime::Pjrt;
 use flexround::{eval, quant, Result};
 use std::path::Path;
 
@@ -17,7 +17,7 @@ fn main() -> Result<()> {
     let model = std::env::args().nth(1).unwrap_or_else(|| "tinyresnet_a".to_string());
     let art = Path::new("artifacts");
     let man = Manifest::load(art)?;
-    let rt = Runtime::new(art)?;
+    let rt = Pjrt::new(art)?;
     let sess = Session::open(&rt, &man, &model)?;
     let rep = Reporter::new(Path::new("reports"), false)?;
 

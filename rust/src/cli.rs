@@ -84,6 +84,9 @@ COMMANDS:
              --model <name> --method <m> --bits <b> [--mode w|wa]
              [--abits <b>] [--iters <n>] [--lr <f>] [--drop-p <f>]
              [--setting brecq|qdrop] [--calib-n <n>] [--seed <n>] [--eval]
+             [--parallel-units]   reconstruct units against FP inputs,
+                                  concurrently (native backend fans them
+                                  out over the worker pool)
   eval       Evaluate a model (fp or after quantize with --load)
              --model <name> [--method…/--bits… as quantize]
   sweep      Run a whole experiment table from a config file
@@ -92,11 +95,14 @@ COMMANDS:
              --model <name> --unit <u> --method <m> --bits <b> [--out csv]
   inspect    Print manifest facts (models, units, artifacts)
              [--model <name>]
-  selftest   Load + execute a smoke subset of artifacts and verify numerics
+  selftest   PJRT: load + execute a smoke subset of artifacts and verify
+             numerics.  Native: reconstruct a synthetic unit from nothing.
 
 GLOBAL FLAGS:
   --artifacts <dir>   artifact directory (default: artifacts/)
   --report <dir>      report output directory (default: reports/)
+  --backend <b>       execution engine: native | pjrt | auto (default auto;
+                      see DESIGN.md §Backends)
   --set k=v           config override (repeatable)
   --quiet             suppress progress logging
 ";

@@ -5,13 +5,17 @@
 //! 1. loads the model's weights / init packs / datasets (FXT),
 //! 2. propagates the calibration set through the *full-precision* unit chain
 //!    (targets `Y = unit_fp(X)`),
-//! 3. for each unit in topological order, runs the AOT-compiled
-//!    reconstruction executable for `iters` Adam steps on random calibration
-//!    minibatches — learning the method's parameters (FlexRound's s1/S2/s3/s4,
-//!    AdaRound's V, …) and, in "wa" mode, the LSQ activation steps with
-//!    QDrop mixing (`drop_p` = 0 reproduces the BRECQ setting, 0.5 QDrop),
+//! 3. for each unit in topological order, asks the selected
+//!    [`Backend`](crate::runtime::Backend) to reconstruct it — `iters` Adam
+//!    steps on random calibration minibatches, learning the method's
+//!    parameters (FlexRound's s1/S2/s3/s4, AdaRound's V, …) and, in "wa"
+//!    mode, the LSQ activation steps with QDrop mixing (`drop_p` = 0
+//!    reproduces the BRECQ setting, 0.5 QDrop).  The PJRT engine executes
+//!    the AOT recon graphs; the native engine runs [`crate::recon`],
 //! 4. advances the *quantized-path* calibration activations X̃ through the
-//!    learned unit (the paper's §3.1 X vs X̃ distinction),
+//!    learned unit (the paper's §3.1 X vs X̃ distinction) — or, with
+//!    [`Plan::parallel_units`], reconstructs every unit against FP inputs
+//!    concurrently,
 //! 5. evaluates the fully quantized model (accuracy / perplexity / BLEU /
 //!    zero-shot multiple choice) via [`crate::eval`].
 //!
@@ -21,6 +25,9 @@
 pub mod session;
 
 pub use session::*;
+
+use crate::manifest::PackEntry;
+use crate::tensor::Tensor;
 
 /// What to quantize and how — one row of one paper table.
 #[derive(Clone, Debug)]
@@ -39,6 +46,10 @@ pub struct Plan {
     pub calib_n: usize,
     pub seed: u64,
     pub verbose: bool,
+    /// Reconstruct units against full-precision inputs so they become
+    /// independent and fan out across the worker pool (`--parallel-units`).
+    /// The default `false` keeps the paper's sequential X̃ protocol.
+    pub parallel_units: bool,
 }
 
 impl Plan {
@@ -55,6 +66,7 @@ impl Plan {
             calib_n: 0, // 0 → all exported
             seed: 7,
             verbose: false,
+            parallel_units: false,
         }
     }
 
@@ -66,6 +78,27 @@ impl Plan {
         } else {
             "B"
         }
+    }
+}
+
+/// Learned state of one unit after reconstruction.
+#[derive(Clone)]
+pub struct UnitState {
+    pub unit: String,
+    pub method: String,
+    /// flat parameter values, in pack order
+    pub params: Vec<Tensor>,
+    pub entries: Vec<PackEntry>,
+    pub first_loss: f64,
+    pub final_loss: f64,
+    pub bits_w: u32,
+    pub abits: u32,
+}
+
+// UnitState carries its method for advance_q
+impl UnitState {
+    pub fn rtn_like(&self) -> bool {
+        self.method == "rtn"
     }
 }
 

@@ -1,29 +1,18 @@
 //! The reconstruction session: state + the per-unit PTQ loop.
+//!
+//! A [`Session`] owns the host-side model state (weights / init packs /
+//! calibration data, all FXT) and drives whichever
+//! [`Backend`](crate::runtime::Backend) it was opened with — the PJRT
+//! artifact engine or the native pure-Rust engine (DESIGN.md §Backends).
 
-use super::{beta_schedule, Plan};
+use super::{Plan, UnitState};
 use crate::manifest::{Manifest, ModelInfo, PackEntry, UnitInfo};
-use crate::runtime::{Exec, Runtime};
+use crate::runtime::{Backend, QView, ReconTask, UnitCtx};
 use crate::tensor::{qrange, Tensor};
 use crate::util::rng::Pcg32;
 use crate::Result;
 use anyhow::{anyhow, bail};
 use std::collections::BTreeMap;
-use std::rc::Rc;
-use std::time::Instant;
-
-/// Learned state of one unit after reconstruction.
-#[derive(Clone)]
-pub struct UnitState {
-    pub unit: String,
-    pub method: String,
-    /// flat parameter values, in pack order
-    pub params: Vec<Tensor>,
-    pub entries: Vec<PackEntry>,
-    pub first_loss: f64,
-    pub final_loss: f64,
-    pub bits_w: u32,
-    pub abits: u32,
-}
 
 /// Outcome of a full PTQ run.
 pub struct QuantResult {
@@ -33,9 +22,9 @@ pub struct QuantResult {
     pub recon_steps: u64,
 }
 
-/// A loaded model: weights + inits + datasets + artifact handles.
+/// A loaded model: weights + inits + datasets + the engine handle.
 pub struct Session<'rt> {
-    pub rt: &'rt Runtime,
+    pub backend: &'rt dyn Backend,
     pub man: &'rt Manifest,
     pub model: &'rt ModelInfo,
     pub weights: BTreeMap<String, Tensor>,
@@ -44,18 +33,57 @@ pub struct Session<'rt> {
 }
 
 impl<'rt> Session<'rt> {
-    pub fn open(rt: &'rt Runtime, man: &'rt Manifest, model: &str) -> Result<Session<'rt>> {
+    pub fn open(backend: &'rt dyn Backend, man: &'rt Manifest, model: &str) -> Result<Session<'rt>> {
         let mi = man.model(model)?;
         let weights = crate::ser::fxt::read(&man.artifact_path(&mi.weights_file))?;
         let inits = crate::ser::fxt::read(&man.artifact_path(&mi.init_file))?;
         let data = crate::ser::fxt::read(&man.artifact_path(&mi.data_file))?;
-        Ok(Session { rt, man, model: mi, weights, inits, data })
+        Ok(Session { backend, man, model: mi, weights, inits, data })
     }
 
     pub fn dataset(&self, name: &str) -> Result<&Tensor> {
         self.data
             .get(name)
             .ok_or_else(|| anyhow!("model {} has no dataset {name:?}", self.model.name))
+    }
+
+    /// The PJRT runtime behind the engine, when there is one (heads, embeds
+    /// and raw artifact execution have no native equivalent).
+    #[cfg(feature = "pjrt")]
+    pub fn runtime(&self) -> Result<&crate::runtime::Runtime> {
+        self.backend.as_pjrt().ok_or_else(|| {
+            anyhow!(
+                "this operation executes HLO artifacts and needs the PJRT backend \
+                 (current backend: {}); rerun with --backend pjrt",
+                self.backend.name()
+            )
+        })
+    }
+
+    /// Engine view of one unit: manifest entry + host weight/bias tensors.
+    pub fn unit_ctx<'s>(&'s self, unit: &'s UnitInfo) -> UnitCtx<'s> {
+        let weights = unit
+            .layers
+            .iter()
+            .map(|l| self.weights.get(&format!("w/{}/{}", unit.name, l.name)))
+            .collect();
+        let biases = unit
+            .layers
+            .iter()
+            .map(|l| self.weights.get(&format!("b/{}/{}", unit.name, l.name)))
+            .collect();
+        UnitCtx { model: self.model, unit, weights, biases }
+    }
+
+    fn qview<'s>(st: &'s UnitState, mode: &'s str) -> QView<'s> {
+        QView {
+            method: &st.method,
+            mode,
+            bits_w: st.bits_w,
+            abits: st.abits,
+            params: &st.params,
+            entries: &st.entries,
+        }
     }
 
     // ------------------------------------------------------------------
@@ -70,63 +98,46 @@ impl<'rt> Session<'rt> {
         if n % b != 0 {
             bail!("dataset rows {n} not a multiple of batch {b}");
         }
-        let mut chunks = Vec::with_capacity(n / b);
         if let Some(embed) = &self.model.embed_artifact {
-            let exe = self.rt.load(embed)?;
-            for i in (0..n).step_by(b) {
-                let chunk = xs.slice_rows(i, i + b)?;
-                let out = exe.run(self.rt, &[chunk], false)?;
-                chunks.push(out.into_iter().next().unwrap());
+            #[cfg(feature = "pjrt")]
+            if let Some(rt) = self.backend.as_pjrt() {
+                let exe = rt.load(embed)?;
+                let mut chunks = Vec::with_capacity(n / b);
+                for i in (0..n).step_by(b) {
+                    let chunk = xs.slice_rows(i, i + b)?;
+                    let out = exe.run(rt, &[chunk], false)?;
+                    chunks.push(out.into_iter().next().unwrap());
+                }
+                return Ok(chunks);
             }
-        } else {
-            for i in (0..n).step_by(b) {
-                chunks.push(xs.slice_rows(i, i + b)?);
-            }
+            bail!(
+                "model {} embeds tokens via artifact {embed:?}; this needs the PJRT backend",
+                self.model.name
+            );
+        }
+        let mut chunks = Vec::with_capacity(n / b);
+        for i in (0..n).step_by(b) {
+            chunks.push(xs.slice_rows(i, i + b)?);
         }
         Ok(chunks)
     }
 
     /// Advance activations one unit through the *full-precision* chain.
     pub fn advance_fp(&self, unit: &UnitInfo, chunks: &[Tensor]) -> Result<Vec<Tensor>> {
-        let exe = self.rt.load(unit.artifact("fp")?)?;
-        chunks
-            .iter()
-            .map(|c| Ok(exe.run(self.rt, std::slice::from_ref(c), false)?.into_iter().next().unwrap()))
-            .collect()
+        self.backend.unit_forward_fp(&self.unit_ctx(unit), chunks)
     }
 
     /// Advance activations one unit through the *quantized* chain with the
     /// learned parameters.
-    ///
-    /// Input-liveness note: `jax.jit` prunes arguments that are dead in the
-    /// lowered graph, so weight-only ("w") executables do not take the
-    /// activation-quant scalars — the assembly below mirrors exactly what
-    /// the AOT build kept (PJRT rejects any arity mismatch loudly).
-    pub fn advance_q(&self, unit: &UnitInfo, st: &UnitState, mode: &str,
-                     chunks: &[Tensor]) -> Result<Vec<Tensor>> {
-        let exe = self.rt.load(unit.artifact(&format!("q.{}.{}", st.method, mode))?)?;
-        let scal = self.q_scalars(st, mode);
-        let live = live_params(&st.method, &st.entries, &st.params);
-        chunks
-            .iter()
-            .map(|c| {
-                let mut inputs = vec![c.clone()];
-                inputs.extend(scal.iter().cloned());
-                inputs.extend(live.iter().cloned());
-                Ok(exe.run(self.rt, &inputs, false)?.into_iter().next().unwrap())
-            })
-            .collect()
-    }
-
-    fn q_scalars(&self, st: &UnitState, mode: &str) -> Vec<Tensor> {
-        let (qmin_w, qmax_w) = qrange(st.bits_w, self.model.symmetric);
-        let mut v = vec![Tensor::scalar(qmin_w), Tensor::scalar(qmax_w)];
-        if mode == "wa" {
-            let (qmin_a, qmax_a) = qrange(st.abits, false);
-            v.push(Tensor::scalar(qmin_a));
-            v.push(Tensor::scalar(qmax_a));
-        }
-        v
+    pub fn advance_q(
+        &self,
+        unit: &UnitInfo,
+        st: &UnitState,
+        mode: &str,
+        chunks: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        self.backend
+            .unit_forward_q(&self.unit_ctx(unit), &Self::qview(st, mode), chunks)
     }
 
     // ------------------------------------------------------------------
@@ -170,7 +181,48 @@ impl<'rt> Session<'rt> {
     // The PTQ reconstruction loop
     // ------------------------------------------------------------------
 
+    fn recon_task<'s>(
+        &'s self,
+        plan: &Plan,
+        unit: &'s UnitInfo,
+        st: &UnitState,
+        iters: usize,
+        lr: f64,
+        batch: usize,
+        x: Vec<Tensor>,
+        y: Vec<Tensor>,
+        rng: Pcg32,
+    ) -> ReconTask<'s> {
+        ReconTask {
+            cx: self.unit_ctx(unit),
+            method: plan.method.clone(),
+            mode: plan.mode.clone(),
+            bits_w: st.bits_w,
+            abits: st.abits,
+            iters,
+            lr,
+            drop_p: plan.drop_p,
+            batch,
+            verbose: plan.verbose,
+            entries: st.entries.clone(),
+            params: st.params.clone(),
+            x,
+            y,
+            rng,
+        }
+    }
+
     /// Run the full per-unit reconstruction pipeline for `plan`.
+    ///
+    /// Two schedules:
+    ///
+    /// * sequential (default) — the paper's §3.1 protocol: each unit sees
+    ///   the *quantized-path* activations X̃ of its predecessors, so units
+    ///   must reconstruct in topological order;
+    /// * `plan.parallel_units` — every unit reconstructs against
+    ///   full-precision inputs (AdaQuant-style layer-parallel PTQ), which
+    ///   makes units independent; the engine fans them out over the worker
+    ///   pool via [`Backend::reconstruct_many`].
     pub fn quantize(&self, plan: &Plan) -> Result<QuantResult> {
         let mi = self.model;
         let iters = if plan.iters == 0 { mi.iters_default } else { plan.iters };
@@ -193,107 +245,71 @@ impl<'rt> Session<'rt> {
         let mut states = Vec::new();
         let mut recon_seconds = 0.0;
         let mut recon_steps = 0u64;
+        let learns = plan.method != "rtn" && iters > 0;
 
-        for unit in &mi.units {
+        let new_state = |unit: &UnitInfo| -> Result<UnitState> {
             let bits_w = unit.bits_override.unwrap_or(plan.bits_w);
             let abits = if unit.bits_override == Some(8) { 8 } else { plan.abits };
-            let y_fp = self.advance_fp(unit, &x_fp)?; // targets = fp outputs
-
-            let (mut params, entries) =
-                self.init_params(unit, &plan.method, &plan.mode, bits_w, abits)?;
-            let mut st = UnitState {
+            let (params, entries) = self.init_params(unit, &plan.method, &plan.mode, bits_w, abits)?;
+            Ok(UnitState {
                 unit: unit.name.clone(),
                 method: plan.method.clone(),
-                // params/entries placeholders replaced after recon
-                params: params.clone(),
-                entries: entries.clone(),
+                params,
+                entries,
                 first_loss: f64::NAN,
                 final_loss: f64::NAN,
                 bits_w,
                 abits,
-            };
+            })
+        };
 
-            if plan.method != "rtn" && iters > 0 {
-                let t0 = Instant::now();
-                let exe = self.rt.load(
-                    unit.artifact(&format!("recon.{}.{}", plan.method, plan.mode))?)?;
-                let (qmin_w, qmax_w) = qrange(bits_w, mi.symmetric);
-                let (qmin_a, qmax_a) = qrange(abits, false);
-                let wa = plan.mode == "wa";
-                let has_beta = plan.method == "adaround";
-                // Adam state starts at zero
-                let mut m: Vec<Tensor> =
-                    params.iter().map(|p| Tensor::zeros(p.shape())).collect();
-                let mut v = m.clone();
-                let x_all = Tensor::concat_rows(&x_q)?;
-                let y_all = Tensor::concat_rows(&y_fp)?;
-                let n = x_all.shape()[0];
-
-                for t in 1..=iters {
-                    let idx = rng.sample_indices(n, b);
-                    let xb = x_all.gather_rows(&idx)?;
-                    let yb = y_all.gather_rows(&idx)?;
-                    let beta = beta_schedule(t, iters);
-                    let seed = (rng.next_u32() & 0x7FFF_FFFF) as i32;
-                    // same liveness rule as advance_q: jit pruned the scalars
-                    // that are dead in this (method, mode) — qmin_a/qmax_a/
-                    // drop_p/seed in "w" mode, beta for non-AdaRound methods.
-                    let mut inputs = vec![
-                        xb,
-                        yb,
-                        Tensor::scalar(qmin_w),
-                        Tensor::scalar(qmax_w),
-                    ];
-                    if wa {
-                        inputs.push(Tensor::scalar(qmin_a));
-                        inputs.push(Tensor::scalar(qmax_a));
-                        inputs.push(Tensor::scalar(plan.drop_p as f32));
-                    }
-                    if has_beta {
-                        inputs.push(Tensor::scalar(beta as f32));
-                    }
-                    inputs.push(Tensor::scalar(lr as f32));
-                    inputs.push(Tensor::scalar(t as f32));
-                    if wa {
-                        inputs.push(Tensor::scalar_i32(seed));
-                    }
-                    inputs.extend(params.iter().cloned());
-                    inputs.extend(m.iter().cloned());
-                    inputs.extend(v.iter().cloned());
-                    let out = exe.run(self.rt, &inputs, true)?;
-                    let np = params.len();
-                    if out.len() != 1 + 3 * np {
-                        bail!(
-                            "recon {}: expected {} outputs, got {}",
-                            unit.name, 1 + 3 * np, out.len()
-                        );
-                    }
-                    let loss = out[0].item()? as f64;
-                    if t == 1 {
-                        st.first_loss = loss;
-                    }
-                    st.final_loss = loss;
-                    let mut it = out.into_iter();
-                    let _ = it.next();
-                    params = it.by_ref().take(np).collect();
-                    m = it.by_ref().take(np).collect();
-                    v = it.by_ref().take(np).collect();
-                    recon_steps += 1;
-                    if plan.verbose && (t == 1 || t % 100 == 0 || t == iters) {
-                        eprintln!(
-                            "    [{}/{}] iter {t}/{iters} loss {loss:.6}",
-                            self.model.name, unit.name
-                        );
-                    }
+        if plan.parallel_units {
+            let mut tasks = Vec::new();
+            let mut task_unit = Vec::new();
+            for (ui, unit) in mi.units.iter().enumerate() {
+                let y_fp = self.advance_fp(unit, &x_fp)?;
+                let st = new_state(unit)?;
+                if learns {
+                    tasks.push(self.recon_task(
+                        plan, unit, &st, iters, lr, b,
+                        x_fp.clone(), y_fp.clone(), rng.fork(ui as u64),
+                    ));
+                    task_unit.push(ui);
                 }
-                st.params = params.clone();
-                recon_seconds += t0.elapsed().as_secs_f64();
+                states.push(st);
+                x_fp = y_fp;
             }
-
-            // advance both chains
-            x_q = self.advance_q(unit, &st, &plan.mode, &x_q)?;
-            x_fp = y_fp;
-            states.push(st);
+            let outcomes = self.backend.reconstruct_many(&tasks)?;
+            drop(tasks);
+            for (o, &ui) in outcomes.into_iter().zip(&task_unit) {
+                let st = &mut states[ui];
+                st.params = o.params;
+                st.first_loss = o.first_loss;
+                st.final_loss = o.final_loss;
+                recon_steps += o.steps;
+                recon_seconds += o.seconds;
+            }
+        } else {
+            for (ui, unit) in mi.units.iter().enumerate() {
+                let y_fp = self.advance_fp(unit, &x_fp)?; // targets = fp outputs
+                let mut st = new_state(unit)?;
+                if learns {
+                    let task = self.recon_task(
+                        plan, unit, &st, iters, lr, b,
+                        x_q.clone(), y_fp.clone(), rng.fork(ui as u64),
+                    );
+                    let o = self.backend.reconstruct(&task)?;
+                    st.params = o.params;
+                    st.first_loss = o.first_loss;
+                    st.final_loss = o.final_loss;
+                    recon_steps += o.steps;
+                    recon_seconds += o.seconds;
+                }
+                // advance both chains
+                x_q = self.advance_q(unit, &st, &plan.mode, &x_q)?;
+                x_fp = y_fp;
+                states.push(st);
+            }
         }
 
         Ok(QuantResult {
@@ -328,62 +344,21 @@ impl<'rt> Session<'rt> {
     }
 
     /// Load a head executable by key ("lm", "logits", task names, "span").
-    pub fn head(&self, key: &str) -> Result<Rc<Exec>> {
+    /// PJRT only — heads exist solely as AOT artifacts.
+    #[cfg(feature = "pjrt")]
+    pub fn head(&self, key: &str) -> Result<std::rc::Rc<crate::runtime::Exec>> {
         let f = self
             .model
             .head_artifacts
             .get(key)
             .ok_or_else(|| anyhow!("model {} has no head {key:?}", self.model.name))?;
-        self.rt.load(f)
+        self.runtime()?.load(f)
     }
 
     /// Export fake-quantized weights + integer codes for each layer of a
     /// unit (the Figure 3–6 data): returns [(Ŵ, codes)] in layer order.
     pub fn export_qw(&self, unit: &UnitInfo, st: &UnitState) -> Result<Vec<(Tensor, Tensor)>> {
-        let exe = self.rt.load(unit.artifact(&format!("qw.{}", st.method))?)?;
-        let (qmin_w, qmax_w) = qrange(st.bits_w, self.model.symmetric);
-        // qw artifacts were lowered against the "w" pack (no act entries);
-        // derive its length from the state's own pack so wa-only models
-        // (whose manifest records no "w" pack) still export correctly —
-        // the weight entries are a strict prefix of the wa pack.
-        let n_w = st.entries.iter().filter(|e| !e.name.starts_with("act")).count();
-        let mut inputs = vec![Tensor::scalar(qmin_w), Tensor::scalar(qmax_w)];
-        inputs.extend(live_params(
-            &st.method, &st.entries[..n_w], &st.params[..n_w]).into_iter());
-        let out = exe.run(self.rt, &inputs, true)?;
-        if out.len() != 2 * unit.layers.len() {
-            bail!("qw {}: expected {} outputs, got {}", unit.name, 2 * unit.layers.len(), out.len());
-        }
-        let mut res = Vec::new();
-        let mut it = out.into_iter();
-        while let (Some(w), Some(c)) = (it.next(), it.next()) {
-            res.push((w, c));
-        }
-        Ok(res)
+        self.backend
+            .export_qw(&self.unit_ctx(unit), &Self::qview(st, "w"))
     }
-}
-
-// UnitState carries its method for advance_q
-impl UnitState {
-    pub fn rtn_like(&self) -> bool {
-        self.method == "rtn"
-    }
-}
-
-/// Parameters that are *live* in a forward-only (q/qw) executable.
-///
-/// The ablation `flexround_no_s34` replaces s3/s4 with constant ones in the
-/// forward, so `jax.jit` pruned those slots out of the compiled signature —
-/// mirror that here (recon executables still take them: they round-trip
-/// through the Adam state outputs).
-fn live_params(method: &str, entries: &[PackEntry], params: &[Tensor]) -> Vec<Tensor> {
-    entries
-        .iter()
-        .zip(params)
-        .filter(|(e, _)| {
-            !(method == "flexround_no_s34"
-                && (e.name.ends_with(".s3") || e.name.ends_with(".s4")))
-        })
-        .map(|(_, p)| p.clone())
-        .collect()
 }

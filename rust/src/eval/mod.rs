@@ -2,6 +2,10 @@
 //! every table of the paper — top-1/top-5 accuracy, perplexity, GLUE-style
 //! task accuracy, span exact-match, BLEU over greedy generations, and
 //! zero-shot multiple-choice scoring by length-normalized log-likelihood.
+//!
+//! CNN metrics are backend-agnostic (the unit chain ends at logits).
+//! Encoder/decoder metrics run *head* artifacts and therefore require the
+//! PJRT backend — those functions are gated on the `pjrt` feature.
 
 pub mod bleu;
 
@@ -66,7 +70,9 @@ pub fn eval_cnn_fp(sess: &Session) -> Result<Metrics> {
 pub const NLU_TASKS: [&str; 3] = ["entail", "para", "accept"];
 
 /// Accuracy per classification task + span exact-match.
+#[cfg(feature = "pjrt")]
 pub fn eval_encoder(sess: &Session, result: Option<&QuantResult>) -> Result<Metrics> {
+    let rt = sess.runtime()?;
     let mut m = Metrics::new();
     for task in NLU_TASKS {
         let xs = sess.dataset(&format!("eval_{task}_x"))?;
@@ -79,7 +85,7 @@ pub fn eval_encoder(sess: &Session, result: Option<&QuantResult>) -> Result<Metr
         let mut correct = 0usize;
         let mut n = 0usize;
         for chunk in &h {
-            let logits = head.run(sess.rt, std::slice::from_ref(chunk), false)?;
+            let logits = head.run(rt, std::slice::from_ref(chunk), false)?;
             for p in logits[0].argmax_rows()? {
                 if p == ys[n] as usize {
                     correct += 1;
@@ -101,7 +107,7 @@ pub fn eval_encoder(sess: &Session, result: Option<&QuantResult>) -> Result<Metr
     let mut em = 0usize;
     let mut n = 0usize;
     for chunk in &h {
-        let out = head.run(sess.rt, std::slice::from_ref(chunk), true)?;
+        let out = head.run(rt, std::slice::from_ref(chunk), true)?;
         let s_pred = out[0].argmax_rows()?;
         let e_pred = out[1].argmax_rows()?;
         for (ps, pe) in s_pred.into_iter().zip(e_pred) {
@@ -120,7 +126,9 @@ pub fn eval_encoder(sess: &Session, result: Option<&QuantResult>) -> Result<Metr
 // ---------------------------------------------------------------------------
 
 /// Perplexity over a token dataset through the lm head.
+#[cfg(feature = "pjrt")]
 pub fn eval_ppl(sess: &Session, result: Option<&QuantResult>, dataset: &str) -> Result<f64> {
+    let rt = sess.runtime()?;
     let xs = sess.dataset(dataset)?;
     let h = match result {
         Some(r) => sess.forward_q(r, xs)?,
@@ -132,7 +140,7 @@ pub fn eval_ppl(sess: &Session, result: Option<&QuantResult>, dataset: &str) -> 
     let mut cnt = 0.0f64;
     for (i, chunk) in h.iter().enumerate() {
         let toks = xs.slice_rows(i * b, (i + 1) * b)?;
-        let out = head.run(sess.rt, &[chunk.clone(), toks], true)?;
+        let out = head.run(rt, &[chunk.clone(), toks], true)?;
         nll += out[0].sum() as f64;
         cnt += out[1].sum() as f64;
     }
@@ -140,7 +148,9 @@ pub fn eval_ppl(sess: &Session, result: Option<&QuantResult>, dataset: &str) -> 
 }
 
 /// Per-sequence mean NLL (length-normalized) — the multiple-choice scorer.
+#[cfg(feature = "pjrt")]
 pub fn seq_scores(sess: &Session, result: Option<&QuantResult>, xs: &Tensor) -> Result<Vec<f64>> {
+    let rt = sess.runtime()?;
     let h = match result {
         Some(r) => sess.forward_q(r, xs)?,
         None => sess.forward_fp(xs)?,
@@ -150,7 +160,7 @@ pub fn seq_scores(sess: &Session, result: Option<&QuantResult>, xs: &Tensor) -> 
     let mut scores = Vec::with_capacity(xs.shape()[0]);
     for (i, chunk) in h.iter().enumerate() {
         let toks = xs.slice_rows(i * b, (i + 1) * b)?;
-        let out = head.run(sess.rt, &[chunk.clone(), toks], true)?;
+        let out = head.run(rt, &[chunk.clone(), toks], true)?;
         let nll = out[0].as_f32()?;
         let cnt = out[1].as_f32()?;
         for (s, c) in nll.iter().zip(cnt) {
@@ -165,6 +175,7 @@ pub const MC_CHOICES: usize = 4;
 
 /// Zero-shot multiple choice: pick the candidate with the best
 /// length-normalized log-likelihood (the LLaMA protocol).
+#[cfg(feature = "pjrt")]
 pub fn eval_mc(sess: &Session, result: Option<&QuantResult>, task: &str) -> Result<f64> {
     let xs = sess.dataset(&format!("mc_{task}_x"))?;
     let ans = sess.dataset(&format!("mc_{task}_y"))?.as_i32()?;
@@ -194,7 +205,9 @@ pub fn eval_mc(sess: &Session, result: Option<&QuantResult>, task: &str) -> Resu
 
 /// Greedy-decode completions from `start` positions and BLEU them against
 /// the references (the suffix of each eval sequence).
+#[cfg(feature = "pjrt")]
 pub fn eval_d2t_bleu(sess: &Session, result: Option<&QuantResult>, split: &str) -> Result<f64> {
+    let rt = sess.runtime()?;
     let xs = sess.dataset(&format!("eval_{split}_x"))?;
     let starts = sess.dataset(&format!("eval_{split}_start"))?.as_i32()?;
     let n = xs.shape()[0];
@@ -218,7 +231,7 @@ pub fn eval_d2t_bleu(sess: &Session, result: Option<&QuantResult>, split: &str) 
             None => sess.forward_fp(&cur)?,
         };
         for (ci, chunk) in h.iter().enumerate() {
-            let logits = head.run(sess.rt, std::slice::from_ref(chunk), false)?;
+            let logits = head.run(rt, std::slice::from_ref(chunk), false)?;
             let l = &logits[0]; // (b, seq, vocab)
             let vs = l.shape()[2];
             let lv = l.as_f32()?;

@@ -8,20 +8,29 @@
 //!
 //! * **Layer 1/2 (build-time Python)** — Pallas fake-quant kernels inside JAX
 //!   reconstruction graphs, AOT-lowered to HLO text under `artifacts/`.
-//! * **Layer 3 (this crate)** — the PTQ coordinator: loads the artifacts via
-//!   the PJRT C API (`xla` crate), owns calibration data, schedules per-unit
-//!   reconstruction, evaluates quantized models, and regenerates every table
-//!   and figure of the paper.
+//! * **Layer 3 (this crate)** — the PTQ coordinator: owns calibration data,
+//!   schedules per-unit reconstruction, evaluates quantized models, and
+//!   regenerates every table and figure of the paper.  Execution goes
+//!   through the [`runtime::Backend`] trait with two engines:
+//!   * [`runtime::Native`] — the pure-Rust reconstruction engine
+//!     ([`recon`]): fake-quant by element-wise division, closed-form STE
+//!     backward (Proposition 3.1's reciprocal rule), Adam.  No artifacts
+//!     required — the crate learns `(s1, S2, s3, s4)` entirely on its own.
+//!   * `runtime::Pjrt` (feature `pjrt`, default) — loads the AOT artifacts
+//!     via the PJRT C API (`xla` crate) and executes the fused
+//!     kernels-in-graphs built by the Python path.
 //!
-//! Python never runs at PTQ time; after `make artifacts` the binary is
-//! self-contained.
+//! Python never runs at PTQ time; with the native backend nothing but this
+//! binary is needed, and after `make artifacts` the PJRT path is
+//! self-contained too.
 //!
-//! The build image vendors only the `xla` crate's dependency closure, so the
-//! substrates usually pulled from crates.io are implemented here from
-//! scratch: [`tensor`] (n-d arrays), [`ser`] (JSON + the FXT tensor
-//! container), [`config`] (layered TOML-subset), [`cli`], [`util`] (PCG RNG,
-//! stats, thread pool, property-test harness), [`report`] (markdown/CSV
-//! emitters).
+//! The build image vendors only in-tree crates (no crates.io access), so the
+//! substrates usually pulled from the registry are implemented here from
+//! scratch: [`tensor`] (n-d arrays + matmuls), [`ser`] (JSON + the FXT
+//! tensor container), [`config`] (layered TOML-subset), [`cli`], [`util`]
+//! (PCG RNG, stats, thread pool, property-test harness), [`report`]
+//! (markdown/CSV emitters), plus a minimal vendored `anyhow` and a
+//! compile-only `xla` stub (`rust/vendor/`).
 
 pub mod cli;
 pub mod config;
@@ -29,6 +38,7 @@ pub mod coordinator;
 pub mod eval;
 pub mod manifest;
 pub mod quant;
+pub mod recon;
 pub mod report;
 pub mod runtime;
 pub mod ser;

@@ -3,22 +3,27 @@
 //! See `cli::USAGE` and the README quickstart.  Typical flows:
 //!
 //! ```text
+//! flexround selftest --backend native                  # no artifacts needed
 //! flexround quantize --model tinymobilenet --method flexround --bits 4 --eval
+//! flexround quantize --model mlp_units --backend native --parallel-units
 //! flexround sweep    --config configs/t2_weight_only.toml
 //! flexround figure   --model tinymobilenet --unit b1 --method flexround --bits 4
 //! flexround inspect  --model llm_mini
-//! flexround selftest
 //! ```
+//!
+//! `--backend auto` (the default) uses PJRT when the build carries it and
+//! the artifact directory is usable, otherwise the native engine.
 
 use anyhow::{anyhow, bail};
 use flexround::cli::{Args, USAGE};
 use flexround::config::Config;
 use flexround::coordinator::{Plan, Session};
 use flexround::manifest::Manifest;
+use flexround::recon;
 use flexround::report::Reporter;
-use flexround::runtime::Runtime;
+use flexround::runtime::{Backend, Native};
 use flexround::{eval, quant, Result};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -40,11 +45,42 @@ fn run(argv: &[String]) -> Result<()> {
 
     match args.command.as_str() {
         "inspect" => cmd_inspect(&args, &art_dir),
-        "selftest" => cmd_selftest(&art_dir),
+        "selftest" => cmd_selftest(&args, &art_dir),
         "quantize" | "eval" => cmd_quantize(&args, &art_dir, &rep_dir, quiet),
         "figure" => cmd_figure(&args, &art_dir, &rep_dir, quiet),
         "sweep" => cmd_sweep(&args, &art_dir, &rep_dir, quiet),
         other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_backend(art: &Path) -> Result<Box<dyn Backend>> {
+    Ok(Box::new(flexround::runtime::Pjrt::new(art)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend(_art: &Path) -> Result<Box<dyn Backend>> {
+    bail!(
+        "this binary was built without the `pjrt` feature; \
+         use --backend native or rebuild with --features pjrt"
+    )
+}
+
+/// `--backend native|pjrt|auto` → engine.  `auto` prefers PJRT when it is
+/// compiled in, the artifact dir is usable (a manifest exists), and a
+/// client can be created — else the native engine.
+fn make_backend(args: &Args, art: &Path) -> Result<Box<dyn Backend>> {
+    match args.flag("backend").unwrap_or("auto") {
+        "native" => Ok(Box::new(Native::new())),
+        "pjrt" => pjrt_backend(art),
+        "auto" => {
+            if art.join("manifest.json").exists() {
+                Ok(pjrt_backend(art).unwrap_or_else(|_| Box::new(Native::new())))
+            } else {
+                Ok(Box::new(Native::new()))
+            }
+        }
+        other => bail!("unknown --backend {other:?} (expected native, pjrt, or auto)"),
     }
 }
 
@@ -74,6 +110,7 @@ fn plan_from_args(args: &Args, man: &Manifest) -> Result<Plan> {
     plan.calib_n = args.usize_flag("calib-n", 0);
     plan.seed = args.usize_flag("seed", 7) as u64;
     plan.verbose = !args.has("quiet");
+    plan.parallel_units = args.has("parallel-units");
     Ok(plan)
 }
 
@@ -88,9 +125,11 @@ fn eval_model(sess: &Session, result: Option<&flexround::coordinator::QuantResul
             };
             m.extend(mm);
         }
+        #[cfg(feature = "pjrt")]
         "encoder" => {
             m.extend(eval::eval_encoder(sess, result)?);
         }
+        #[cfg(feature = "pjrt")]
         "decoder" => {
             if sess.model.name == "dec_lora" {
                 m.insert("bleu_seen".into(), eval::eval_d2t_bleu(sess, result, "seen")?);
@@ -104,16 +143,16 @@ fn eval_model(sess: &Session, result: Option<&flexround::coordinator::QuantResul
                 }
             }
         }
-        k => bail!("unknown model kind {k:?}"),
+        k => bail!("cannot evaluate model kind {k:?} with this build/backend"),
     }
     Ok(m)
 }
 
 fn cmd_quantize(args: &Args, art: &PathBuf, rep: &PathBuf, quiet: bool) -> Result<()> {
     let man = Manifest::load(art)?;
-    let rt = Runtime::new(art)?;
+    let backend = make_backend(args, art)?;
     let plan = plan_from_args(args, &man)?;
-    let sess = Session::open(&rt, &man, &plan.model)?;
+    let sess = Session::open(backend.as_ref(), &man, &plan.model)?;
     let reporter = Reporter::new(rep, quiet)?;
 
     if args.command == "eval" && args.flag("method").is_none() {
@@ -126,8 +165,9 @@ fn cmd_quantize(args: &Args, art: &PathBuf, rep: &PathBuf, quiet: bool) -> Resul
 
     if !quiet {
         println!(
-            "quantizing {} with {} ({}-bit W, mode {}, {} setting)…",
-            plan.model, plan.method, plan.bits_w, plan.mode, plan.setting_label()
+            "quantizing {} with {} ({}-bit W, mode {}, {} setting, {} backend)…",
+            plan.model, plan.method, plan.bits_w, plan.mode, plan.setting_label(),
+            backend.name()
         );
     }
     let result = sess.quantize(&plan)?;
@@ -139,10 +179,10 @@ fn cmd_quantize(args: &Args, art: &PathBuf, rep: &PathBuf, quiet: bool) -> Resul
             );
         }
         println!(
-            "  recon: {} steps in {:.2}s; runtime: {}",
+            "  recon: {} steps in {:.2}s; engine: {}",
             result.recon_steps,
             result.recon_seconds,
-            rt.stats.borrow().summary()
+            backend.summary()
         );
     }
     if args.has("eval") || args.command == "eval" {
@@ -158,9 +198,9 @@ fn cmd_quantize(args: &Args, art: &PathBuf, rep: &PathBuf, quiet: bool) -> Resul
 
 fn cmd_figure(args: &Args, art: &PathBuf, rep: &PathBuf, quiet: bool) -> Result<()> {
     let man = Manifest::load(art)?;
-    let rt = Runtime::new(art)?;
+    let backend = make_backend(args, art)?;
     let plan = plan_from_args(args, &man)?;
-    let sess = Session::open(&rt, &man, &plan.model)?;
+    let sess = Session::open(backend.as_ref(), &man, &plan.model)?;
     let reporter = Reporter::new(rep, quiet)?;
     let unit_name = args.flag("unit").ok_or_else(|| anyhow!("--unit is required"))?;
 
@@ -207,9 +247,9 @@ fn cmd_sweep(args: &Args, art: &PathBuf, rep: &PathBuf, quiet: bool) -> Result<(
         cfg.set_override(ov)?;
     }
     let man = Manifest::load(art)?;
-    let rt = Runtime::new(art)?;
+    let backend = make_backend(args, art)?;
     let reporter = Reporter::new(rep, quiet)?;
-    flexround::sweep::run_sweep(&cfg, &man, &rt, &reporter)
+    flexround::sweep::run_sweep(&cfg, &man, backend.as_ref(), &reporter)
 }
 
 fn cmd_inspect(args: &Args, art: &PathBuf) -> Result<()> {
@@ -244,13 +284,26 @@ fn cmd_inspect(args: &Args, art: &PathBuf) -> Result<()> {
     Ok(())
 }
 
-fn cmd_selftest(art: &PathBuf) -> Result<()> {
+fn cmd_selftest(args: &Args, art: &PathBuf) -> Result<()> {
+    let backend = make_backend(args, art)?;
+    if backend.name() == "native" {
+        // Artifact-free: reconstruct a synthetic 3-bit unit end to end.
+        println!("backend: native (no artifacts needed)");
+        let (before, after) = recon::native_selftest(!args.has("quiet"))?;
+        println!(
+            "  synthetic 16×32 unit @ 3-bit: output MSE {before:.6} → {after:.6} \
+             ({:.1}% of the RTN init)",
+            100.0 * after / before.max(1e-12)
+        );
+        println!("selftest OK; {}", backend.summary());
+        return Ok(());
+    }
+    // PJRT: load + execute a smoke subset of artifacts and verify numerics.
     let man = Manifest::load(art)?;
-    let rt = Runtime::new(art)?;
-    println!("platform: {}", rt.platform());
+    println!("backend: {}", backend.name());
     let mut checked = 0;
     for (name, _) in man.models.iter().take(2) {
-        let sess = Session::open(&rt, &man, name)?;
+        let sess = Session::open(backend.as_ref(), &man, name)?;
         let calib = sess.dataset("calib_x")?;
         let b = sess.model.calib_batch;
         let x0 = calib.slice_rows(0, b)?;
@@ -287,6 +340,6 @@ fn cmd_selftest(art: &PathBuf) -> Result<()> {
         }
         checked += 1;
     }
-    println!("selftest OK ({checked} models); {}", rt.stats.borrow().summary());
+    println!("selftest OK ({checked} models); {}", backend.summary());
     Ok(())
 }

@@ -2,9 +2,11 @@
 //! Figures 3–6, weight-update histograms, and invariant checks over the
 //! CLE/AHB-preprocessed exports (Table 10).
 //!
-//! The *learning* happens in the AOT executables; this module consumes the
-//! exported integer codes (`qw.*` artifacts) plus the raw weights/init
-//! scales from the FXT files and reproduces the figures' data series.
+//! The *learning* happens in whichever engine the session drives — the AOT
+//! executables (PJRT backend) or the in-crate [`crate::recon`] loop (native
+//! backend).  This module consumes the exported integer codes (the `qw.*`
+//! artifacts or their native equivalent) plus the raw weights/init scales
+//! from the FXT files and reproduces the figures' data series.
 
 use crate::coordinator::{Session, UnitState};
 use crate::manifest::UnitInfo;

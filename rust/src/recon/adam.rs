@@ -1,0 +1,142 @@
+//! Adam optimizer for the native reconstruction loop.
+//!
+//! Mirrors the in-graph optimizer of the AOT build path
+//! (`python/compile/quant.py::adam_update` / `graphs.py::recon_step_fn`)
+//! exactly: β₁ = 0.9, β₂ = 0.999, ε = 1e-8, bias-corrected moments, and the
+//! positivity clamp `max(p, 1e-6)` on every divisor-like parameter
+//! (`s1`/`s2`/`s3`/`s4`/`step`) so the element-wise division of Eq. 2 never
+//! crosses zero during learning.
+
+use crate::manifest::PackEntry;
+use crate::tensor::Tensor;
+use crate::Result;
+use anyhow::bail;
+
+pub const ADAM_B1: f32 = 0.9;
+pub const ADAM_B2: f32 = 0.999;
+pub const ADAM_EPS: f32 = 1e-8;
+
+/// Parameters whose pack-entry key must stay strictly positive (they sit in
+/// the denominator of `W / (s1 ⊙ S2 ⊙ s3 ⊙ s4)` or are an LSQ step size).
+pub fn positive_key(entry_name: &str) -> bool {
+    matches!(
+        entry_name.rsplit('.').next().unwrap_or(""),
+        "s1" | "s2" | "s3" | "s4" | "step"
+    )
+}
+
+/// First/second-moment state, one slot per pack entry.
+pub struct Adam {
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+}
+
+impl Adam {
+    pub fn new(params: &[Tensor]) -> Adam {
+        Adam {
+            m: params.iter().map(|p| Tensor::zeros(p.shape())).collect(),
+            v: params.iter().map(|p| Tensor::zeros(p.shape())).collect(),
+        }
+    }
+
+    /// One update at (1-based) step `t`.  `grads[i] = None` leaves slot `i`
+    /// untouched (frozen factors, non-learnable entries).
+    pub fn step(
+        &mut self,
+        t: usize,
+        lr: f32,
+        entries: &[PackEntry],
+        params: &mut [Tensor],
+        grads: &[Option<Tensor>],
+    ) -> Result<()> {
+        if params.len() != grads.len() || params.len() != entries.len() {
+            bail!(
+                "adam: {} params vs {} grads vs {} entries",
+                params.len(),
+                grads.len(),
+                entries.len()
+            );
+        }
+        let b1t = 1.0 - ADAM_B1.powi(t as i32);
+        let b2t = 1.0 - ADAM_B2.powi(t as i32);
+        for i in 0..params.len() {
+            let g = match (&grads[i], entries[i].learnable) {
+                (Some(g), true) => g,
+                _ => continue,
+            };
+            if g.shape() != params[i].shape() {
+                bail!(
+                    "adam: grad shape {:?} vs param shape {:?} for {:?}",
+                    g.shape(),
+                    params[i].shape(),
+                    entries[i].name
+                );
+            }
+            let clamp = positive_key(&entries[i].name);
+            let gv = g.as_f32()?;
+            let mv = self.m[i].as_f32_mut()?;
+            let vv = self.v[i].as_f32_mut()?;
+            let pv = params[i].as_f32_mut()?;
+            for j in 0..pv.len() {
+                let m2 = ADAM_B1 * mv[j] + (1.0 - ADAM_B1) * gv[j];
+                let v2 = ADAM_B2 * vv[j] + (1.0 - ADAM_B2) * gv[j] * gv[j];
+                mv[j] = m2;
+                vv[j] = v2;
+                let mut p2 = pv[j] - lr * (m2 / b1t) / ((v2 / b2t).sqrt() + ADAM_EPS);
+                if clamp {
+                    p2 = p2.max(1e-6);
+                }
+                pv[j] = p2;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(name: &str, shape: &[usize], learnable: bool) -> PackEntry {
+        PackEntry { name: name.to_string(), shape: shape.to_vec(), learnable }
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimize (p - 3)² from p = 0
+        let entries = vec![entry("fc.v", &[1, 1], true)];
+        let mut params = vec![Tensor::zeros(&[1, 1])];
+        let mut opt = Adam::new(&params);
+        for t in 1..=2000 {
+            let p = params[0].as_f32().unwrap()[0];
+            let g = Tensor::from_f32(vec![2.0 * (p - 3.0)], &[1, 1]).unwrap();
+            opt.step(t, 0.05, &entries, &mut params, &[Some(g)]).unwrap();
+        }
+        let p = params[0].as_f32().unwrap()[0];
+        assert!((p - 3.0).abs() < 1e-2, "adam did not converge: {p}");
+    }
+
+    #[test]
+    fn frozen_and_positive_slots() {
+        let entries = vec![
+            entry("fc.s2", &[1, 1], true),
+            entry("fc.zp", &[1, 1], false),
+        ];
+        let mut params = vec![Tensor::full(&[1, 1], 1e-6), Tensor::full(&[1, 1], 2.0)];
+        let mut opt = Adam::new(&params);
+        let g = Tensor::full(&[1, 1], 100.0);
+        opt.step(1, 1.0, &entries, &mut params, &[Some(g.clone()), Some(g)]).unwrap();
+        // s2 was pushed hard negative but clamps at the positivity floor
+        assert!(params[0].as_f32().unwrap()[0] >= 1e-6);
+        // zp is not learnable — untouched
+        assert_eq!(params[1].as_f32().unwrap()[0], 2.0);
+    }
+
+    #[test]
+    fn positive_key_detection() {
+        assert!(positive_key("conv.s1"));
+        assert!(positive_key("act0.step"));
+        assert!(!positive_key("conv.zp"));
+        assert!(!positive_key("conv.v"));
+    }
+}

@@ -1,0 +1,1136 @@
+//! Native FlexRound reconstruction — learnable rounding with **no PJRT/XLA
+//! dependency** (DESIGN.md §Native-Backend).
+//!
+//! This module is the pure-Rust twin of the AOT reconstruction executables:
+//! it learns the FlexRound parameters `(s1, S2, s3, s4)` of Eq. 2,
+//!
+//! ```text
+//!   Ŵ = s1 · ( clip( ⌊ W / (s1 ⊙ S2 ⊙ s3 ⊙ s4) ⌉ + z, qmin, qmax ) − z )
+//! ```
+//!
+//! by minimizing the per-unit output MSE `‖X·Ŵᵀ − X·Wᵀ‖²/N` over calibration
+//! minibatches with Adam ([`adam`]), exactly as AdaRound (Nagel et al.,
+//! 2020) and EPTQ frame per-block reconstruction.  The backward pass is the
+//! closed-form straight-through estimator of Proposition 3.1 — mirrored
+//! line-for-line from `python/compile/kernels/ref.py::flexround_bwd`,
+//! including the reciprocal-rule gradient `∂Ŵ/∂S2 ∝ −W/(S2²·…)` that lets
+//! FlexRound exploit weight magnitudes:
+//!
+//! ```text
+//!   r        = W / (s1 ⊙ S2 ⊙ s3 ⊙ s4)
+//!   inside   = 1[qmin ≤ ⌊r⌉ + z ≤ qmax]
+//!   ∂Ŵ/∂s1   = (n_c − z) − inside · r          (grid-size chain rule)
+//!   common   = s1 · inside · (−r)
+//!   ∂Ŵ/∂S2   = common / S2                      (reciprocal rule)
+//!   ∂Ŵ/∂s3   = Σ_cols common / s3
+//!   ∂Ŵ/∂s4   = Σ_rows common / s4
+//! ```
+//!
+//! Rounding uses round-half-to-even to match `jnp.round` (the PJRT path and
+//! the Python reference both round ties to even; `f32::round` in the rest of
+//! the crate rounds ties away from zero, which only differs on exact
+//! halves).
+//!
+//! Supported natively: weight-only mode on units whose layers are plain
+//! contractions (`y = x · Ŵᵀ [+ b]`), optionally ReLU-separated
+//! (`mlp_relu`), for methods `rtn`, `flexround`, `flexround_fixed_s1`, and
+//! `flexround_no_s34`.  Anything needing convolutions, activation
+//! quantization, or AdaRound's soft rounding still runs through the PJRT
+//! backend — see `runtime::Backend`.
+
+pub mod adam;
+
+pub use adam::Adam;
+
+use crate::manifest::{PackEntry, UnitInfo};
+use crate::tensor::Tensor;
+use crate::util::pool;
+use crate::util::rng::Pcg32;
+use crate::Result;
+use anyhow::{anyhow, bail};
+
+/// Round half to even (banker's rounding), matching `jnp.round` and the XLA
+/// `round-nearest-even` op bit-for-bit away from f32 precision limits.
+pub fn round_ties_even(x: f32) -> f32 {
+    let f = x.floor();
+    if x - f == 0.5 {
+        if f.rem_euclid(2.0) == 0.0 {
+            f
+        } else {
+            f + 1.0
+        }
+    } else {
+        x.round()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parameter pack layout
+// ---------------------------------------------------------------------------
+
+/// Where one layer's FlexRound factors live inside a flat parameter pack.
+/// `None` slots mean "constant one" (e.g. `rtn` has no S2 at all, the
+/// `flexround_no_s34` ablation freezes s3/s4 to ones).
+#[derive(Clone, Debug)]
+pub struct LayerSlots {
+    /// index into `UnitInfo::layers`
+    pub layer: usize,
+    pub s1: usize,
+    pub zp: usize,
+    pub s2: Option<usize>,
+    pub s3: Option<usize>,
+    pub s4: Option<usize>,
+}
+
+/// Map a pack-entry list onto per-layer slots for `method`.
+///
+/// Entry names follow the build-path convention `"{layer}.{key}"`; `act*`
+/// entries (LSQ activation steps) mean the pack was built for "wa" mode,
+/// which the native backend does not execute.
+pub fn map_pack(unit: &UnitInfo, method: &str, entries: &[PackEntry]) -> Result<Vec<LayerSlots>> {
+    match method {
+        "rtn" | "flexround" | "flexround_fixed_s1" | "flexround_no_s34" => {}
+        other => bail!(
+            "native backend does not implement method {other:?} \
+             (supported: rtn, flexround, flexround_fixed_s1, flexround_no_s34); \
+             use --backend pjrt"
+        ),
+    }
+    let drop_s34 = method == "flexround_no_s34";
+    let mut out = Vec::with_capacity(unit.layers.len());
+    for (li, layer) in unit.layers.iter().enumerate() {
+        let find = |key: &str| -> Option<usize> {
+            let want = format!("{}.{key}", layer.name);
+            entries.iter().position(|e| e.name == want)
+        };
+        let s1 = find("s1")
+            .ok_or_else(|| anyhow!("pack has no {}.s1 entry", layer.name))?;
+        let zp = find("zp")
+            .ok_or_else(|| anyhow!("pack has no {}.zp entry", layer.name))?;
+        out.push(LayerSlots {
+            layer: li,
+            s1,
+            zp,
+            s2: find("s2"),
+            s3: if drop_s34 { None } else { find("s3") },
+            s4: if drop_s34 { None } else { find("s4") },
+        });
+    }
+    for e in entries {
+        if e.name.starts_with("act") {
+            bail!(
+                "pack entry {:?}: activation quantization (\"wa\" mode) is not \
+                 supported by the native backend; use --backend pjrt",
+                e.name
+            );
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Fake-quant forward / codes / backward
+// ---------------------------------------------------------------------------
+
+fn row_scale<'a>(t: &'a Tensor, rows: usize, what: &str) -> Result<RowView<'a>> {
+    let v = t.as_f32()?;
+    if v.len() != 1 && v.len() != rows {
+        bail!("{what}: expected 1 or {rows} values, got {}", v.len());
+    }
+    Ok(RowView { v, broadcast: v.len() == 1 })
+}
+
+struct RowView<'a> {
+    v: &'a [f32],
+    broadcast: bool,
+}
+
+impl RowView<'_> {
+    #[inline]
+    fn at(&self, row: usize) -> f32 {
+        if self.broadcast {
+            self.v[0]
+        } else {
+            self.v[row]
+        }
+    }
+}
+
+fn opt_full<'a>(t: Option<&'a Tensor>, n: usize, what: &str) -> Result<Option<&'a [f32]>> {
+    match t {
+        None => Ok(None),
+        Some(t) => {
+            let v = t.as_f32()?;
+            if v.len() != n {
+                bail!("{what}: expected {n} values, got {}", v.len());
+            }
+            Ok(Some(v))
+        }
+    }
+}
+
+/// FlexRound fake-quant forward: `Ŵ` with `w: (r, c)`, `s1`/`zp`: per-tensor
+/// or per-row, `s2: (r, c)`, `s3: (r, 1)`, `s4: (1, c)`; `None` factors are
+/// ones (so all-None reproduces RTN).
+pub fn fq_forward(
+    w: &Tensor,
+    s1: &Tensor,
+    s2: Option<&Tensor>,
+    s3: Option<&Tensor>,
+    s4: Option<&Tensor>,
+    zp: &Tensor,
+    qmin: f32,
+    qmax: f32,
+) -> Result<Tensor> {
+    fq_kernel(w, s1, s2, s3, s4, zp, qmin, qmax, false)
+}
+
+/// Integer grid codes after learning (the grid-shift analysis input).
+pub fn fq_codes(
+    w: &Tensor,
+    s1: &Tensor,
+    s2: Option<&Tensor>,
+    s3: Option<&Tensor>,
+    s4: Option<&Tensor>,
+    zp: &Tensor,
+    qmin: f32,
+    qmax: f32,
+) -> Result<Tensor> {
+    fq_kernel(w, s1, s2, s3, s4, zp, qmin, qmax, true)
+}
+
+fn fq_kernel(
+    w: &Tensor,
+    s1: &Tensor,
+    s2: Option<&Tensor>,
+    s3: Option<&Tensor>,
+    s4: Option<&Tensor>,
+    zp: &Tensor,
+    qmin: f32,
+    qmax: f32,
+    codes: bool,
+) -> Result<Tensor> {
+    if w.ndim() != 2 {
+        bail!("fq: weights must be 2-D, got {:?}", w.shape());
+    }
+    let (r, c) = (w.shape()[0], w.shape()[1]);
+    let wv = w.as_f32()?;
+    let s1v = row_scale(s1, r, "s1")?;
+    let zpv = row_scale(zp, r, "zp")?;
+    let s2v = opt_full(s2, r * c, "s2")?;
+    let s3t = s3.map(|t| row_scale(t, r, "s3")).transpose()?;
+    let s4v = opt_full(s4, c, "s4")?;
+    let mut out = vec![0.0f32; r * c];
+    for i in 0..r {
+        let s1i = s1v.at(i);
+        let zpi = zpv.at(i);
+        let s3i = s3t.as_ref().map(|t| t.at(i)).unwrap_or(1.0);
+        for j in 0..c {
+            let k = i * c + j;
+            let div = s1i
+                * s2v.map(|v| v[k]).unwrap_or(1.0)
+                * s3i
+                * s4v.map(|v| v[j]).unwrap_or(1.0);
+            let n = round_ties_even(wv[k] / div) + zpi;
+            let n_c = n.clamp(qmin, qmax);
+            out[k] = if codes { n_c } else { s1i * (n_c - zpi) };
+        }
+    }
+    Tensor::from_f32(out, &[r, c])
+}
+
+/// STE cotangents for the learnable factors, given the output cotangent `g`
+/// (shape of `w`).  Shapes mirror the parameters; `ds1` collapses to the
+/// parameter's own shape (per-tensor `(1,1)` or per-row `(r,1)`).
+pub struct FqGrads {
+    pub ds1: Tensor,
+    pub ds2: Option<Tensor>,
+    pub ds3: Option<Tensor>,
+    pub ds4: Option<Tensor>,
+}
+
+pub fn fq_backward(
+    w: &Tensor,
+    s1: &Tensor,
+    s2: Option<&Tensor>,
+    s3: Option<&Tensor>,
+    s4: Option<&Tensor>,
+    zp: &Tensor,
+    g: &Tensor,
+    qmin: f32,
+    qmax: f32,
+) -> Result<FqGrads> {
+    if w.shape() != g.shape() || w.ndim() != 2 {
+        bail!("fq_backward: w {:?} vs g {:?}", w.shape(), g.shape());
+    }
+    let (r, c) = (w.shape()[0], w.shape()[1]);
+    let wv = w.as_f32()?;
+    let gv = g.as_f32()?;
+    let s1v = row_scale(s1, r, "s1")?;
+    let zpv = row_scale(zp, r, "zp")?;
+    let s2v = opt_full(s2, r * c, "s2")?;
+    let s3t = s3.map(|t| row_scale(t, r, "s3")).transpose()?;
+    let s4v = opt_full(s4, c, "s4")?;
+
+    let mut ds1_rows = vec![0.0f32; r];
+    let mut ds2 = s2v.map(|_| vec![0.0f32; r * c]);
+    let mut ds3_rows = s3t.as_ref().map(|_| vec![0.0f32; r]);
+    let mut ds4_cols = s4v.map(|_| vec![0.0f32; c]);
+
+    for i in 0..r {
+        let s1i = s1v.at(i);
+        let zpi = zpv.at(i);
+        let s3i = s3t.as_ref().map(|t| t.at(i)).unwrap_or(1.0);
+        for j in 0..c {
+            let k = i * c + j;
+            let s2k = s2v.map(|v| v[k]).unwrap_or(1.0);
+            let s4j = s4v.map(|v| v[j]).unwrap_or(1.0);
+            let div = s1i * s2k * s3i * s4j;
+            let ratio = wv[k] / div;
+            let n = round_ties_even(ratio) + zpi;
+            let inside = if n >= qmin && n <= qmax { 1.0f32 } else { 0.0 };
+            let n_c = n.clamp(qmin, qmax);
+            ds1_rows[i] += gv[k] * ((n_c - zpi) - inside * ratio);
+            let common = gv[k] * s1i * inside * (-ratio);
+            if let Some(d) = ds2.as_mut() {
+                d[k] = common / s2k;
+            }
+            if let Some(d) = ds3_rows.as_mut() {
+                d[i] += common / s3i;
+            }
+            if let Some(d) = ds4_cols.as_mut() {
+                d[j] += common / s4j;
+            }
+        }
+    }
+
+    let ds1 = if s1.len() == 1 {
+        Tensor::from_f32(vec![ds1_rows.iter().sum()], s1.shape())?
+    } else {
+        Tensor::from_f32(ds1_rows, s1.shape())?
+    };
+    Ok(FqGrads {
+        ds1,
+        ds2: match (ds2, s2) {
+            (Some(d), Some(t)) => Some(Tensor::from_f32(d, t.shape())?),
+            _ => None,
+        },
+        ds3: match (ds3_rows, s3) {
+            (Some(d), Some(t)) => Some(Tensor::from_f32(d, t.shape())?),
+            _ => None,
+        },
+        ds4: match (ds4_cols, s4) {
+            (Some(d), Some(t)) => Some(Tensor::from_f32(d, t.shape())?),
+            _ => None,
+        },
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Unit forward (fp + quantized) over contraction layers
+// ---------------------------------------------------------------------------
+
+/// One native-executable layer: a plain contraction `y = x · Wᵀ [+ b]`,
+/// optionally followed by ReLU (for `mlp_relu` units, every layer but the
+/// last).
+pub struct LayerDef<'a> {
+    pub name: &'a str,
+    pub w: &'a Tensor,
+    pub bias: Option<&'a Tensor>,
+    pub relu_after: bool,
+}
+
+fn add_bias_relu(mut y: Tensor, bias: Option<&Tensor>, relu: bool) -> Result<Tensor> {
+    let (n, r) = (y.shape()[0], y.shape()[1]);
+    let yv = y.as_f32_mut()?;
+    if let Some(b) = bias {
+        let bv = b.as_f32()?;
+        if bv.len() != r {
+            bail!("bias of {} values on output width {r}", bv.len());
+        }
+        for i in 0..n {
+            for j in 0..r {
+                yv[i * r + j] += bv[j];
+            }
+        }
+    }
+    if relu {
+        for v in yv.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+    Ok(y)
+}
+
+/// `A · Bᵀ`, fanned out over the existing [`crate::util::pool`] worker threads when
+/// the output is big enough to amortize the spawn (row-sliced; exact same
+/// result as the serial kernel).
+pub fn matmul_nt_par(a: &Tensor, b: &Tensor, workers: usize) -> Result<Tensor> {
+    let m = a.shape().first().copied().unwrap_or(0);
+    if workers <= 1
+        || a.ndim() != 2
+        || b.ndim() != 2
+        || m < 2 * workers
+        || m * b.shape()[0] < (1 << 14)
+    {
+        return a.matmul_nt(b);
+    }
+    let chunk = (m + workers - 1) / workers;
+    let ranges: Vec<(usize, usize)> =
+        (0..workers).map(|i| (i * chunk, ((i + 1) * chunk).min(m))).filter(|(lo, hi)| lo < hi).collect();
+    let parts = pool::par_map(workers, &ranges, |_, &(lo, hi)| {
+        a.slice_rows(lo, hi).and_then(|s| s.matmul_nt(b))
+    });
+    let ok: Vec<Tensor> = parts.into_iter().collect::<Result<_>>()?;
+    Tensor::concat_rows(&ok)
+}
+
+/// Full-precision unit forward: `x` through every layer's raw weights.
+pub fn unit_forward_fp(layers: &[LayerDef], x: &Tensor, workers: usize) -> Result<Tensor> {
+    let mut h = x.clone();
+    for l in layers {
+        h = add_bias_relu(matmul_nt_par(&h, l.w, workers)?, l.bias, l.relu_after)?;
+    }
+    Ok(h)
+}
+
+/// Materialize every layer's fake-quantized Ŵ once (callers forwarding many
+/// activation chunks reuse these instead of re-running the fq kernel per
+/// chunk).
+pub fn unit_whats(
+    layers: &[LayerDef],
+    slots: &[LayerSlots],
+    params: &[Tensor],
+    qmin: f32,
+    qmax: f32,
+) -> Result<Vec<Tensor>> {
+    if layers.len() != slots.len() {
+        bail!("{} layers vs {} slot groups", layers.len(), slots.len());
+    }
+    layers
+        .iter()
+        .zip(slots)
+        .map(|(l, s)| {
+            fq_forward(
+                l.w,
+                &params[s.s1],
+                s.s2.map(|i| &params[i]),
+                s.s3.map(|i| &params[i]),
+                s.s4.map(|i| &params[i]),
+                &params[s.zp],
+                qmin,
+                qmax,
+            )
+        })
+        .collect()
+}
+
+/// Forward `x` through pre-materialized fake-quantized weights.
+pub fn unit_forward_what(
+    layers: &[LayerDef],
+    whats: &[Tensor],
+    x: &Tensor,
+    workers: usize,
+) -> Result<Tensor> {
+    let mut h = x.clone();
+    for (l, what) in layers.iter().zip(whats) {
+        h = add_bias_relu(matmul_nt_par(&h, what, workers)?, l.bias, l.relu_after)?;
+    }
+    Ok(h)
+}
+
+/// Quantized unit forward with the current parameter pack.
+pub fn unit_forward_q(
+    layers: &[LayerDef],
+    slots: &[LayerSlots],
+    params: &[Tensor],
+    qmin: f32,
+    qmax: f32,
+    x: &Tensor,
+    workers: usize,
+) -> Result<Tensor> {
+    let whats = unit_whats(layers, slots, params, qmin, qmax)?;
+    unit_forward_what(layers, &whats, x, workers)
+}
+
+/// Fake-quantized weights + integer codes for every layer (native analog of
+/// the `qw.*` export artifacts, feeding `quant::grid_shifts`).
+pub fn export_qw(
+    layers: &[LayerDef],
+    slots: &[LayerSlots],
+    params: &[Tensor],
+    qmin: f32,
+    qmax: f32,
+) -> Result<Vec<(Tensor, Tensor)>> {
+    layers
+        .iter()
+        .zip(slots)
+        .map(|(l, s)| {
+            let args = (
+                s.s2.map(|i| &params[i]),
+                s.s3.map(|i| &params[i]),
+                s.s4.map(|i| &params[i]),
+            );
+            let what = fq_forward(l.w, &params[s.s1], args.0, args.1, args.2, &params[s.zp], qmin, qmax)?;
+            let codes = fq_codes(l.w, &params[s.s1], args.0, args.1, args.2, &params[s.zp], qmin, qmax)?;
+            Ok((what, codes))
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Loss + gradients for one minibatch
+// ---------------------------------------------------------------------------
+
+/// Forward the minibatch, compute `L = mean((ŷ − y)²)`, and backpropagate
+/// through the contraction stack into per-entry parameter gradients.
+pub fn loss_and_grads(
+    layers: &[LayerDef],
+    slots: &[LayerSlots],
+    params: &[Tensor],
+    xb: &Tensor,
+    yb: &Tensor,
+    qmin: f32,
+    qmax: f32,
+    workers: usize,
+) -> Result<(f64, Vec<Option<Tensor>>)> {
+    // Forward, caching per-layer inputs, pre-activations, and Ŵ.
+    let mut acts: Vec<Tensor> = vec![xb.clone()]; // acts[i] = input to layer i
+    let mut pres: Vec<Tensor> = Vec::with_capacity(layers.len());
+    let mut whats: Vec<Tensor> = Vec::with_capacity(layers.len());
+    for (l, s) in layers.iter().zip(slots) {
+        let what = fq_forward(
+            l.w,
+            &params[s.s1],
+            s.s2.map(|i| &params[i]),
+            s.s3.map(|i| &params[i]),
+            s.s4.map(|i| &params[i]),
+            &params[s.zp],
+            qmin,
+            qmax,
+        )?;
+        let pre = add_bias_relu(
+            matmul_nt_par(acts.last().unwrap(), &what, workers)?,
+            l.bias,
+            false,
+        )?;
+        let out = if l.relu_after { pre.map(|v| v.max(0.0)) } else { pre.clone() };
+        pres.push(pre);
+        whats.push(what);
+        acts.push(out);
+    }
+    let yhat = acts.last().unwrap();
+    let loss = yhat.mse(yb)? as f64;
+
+    // ∂L/∂ŷ = 2(ŷ − y)/N
+    let n_inv = 2.0 / yhat.len() as f32;
+    let mut g = yhat.zip(yb, move |a, b| n_inv * (a - b))?;
+
+    let mut grads: Vec<Option<Tensor>> = params.iter().map(|_| None).collect();
+    for li in (0..layers.len()).rev() {
+        let l = &layers[li];
+        let s = &slots[li];
+        if l.relu_after {
+            g = g.zip(&pres[li], |gi, pre| if pre > 0.0 { gi } else { 0.0 })?;
+        }
+        // ∂L/∂Ŵ = Gᵀ · X  (r, c)
+        let dwhat = g.matmul_tn(&acts[li])?;
+        let fg = fq_backward(
+            l.w,
+            &params[s.s1],
+            s.s2.map(|i| &params[i]),
+            s.s3.map(|i| &params[i]),
+            s.s4.map(|i| &params[i]),
+            &params[s.zp],
+            &dwhat,
+            qmin,
+            qmax,
+        )?;
+        grads[s.s1] = Some(fg.ds1);
+        if let (Some(i), Some(d)) = (s.s2, fg.ds2) {
+            grads[i] = Some(d);
+        }
+        if let (Some(i), Some(d)) = (s.s3, fg.ds3) {
+            grads[i] = Some(d);
+        }
+        if let (Some(i), Some(d)) = (s.s4, fg.ds4) {
+            grads[i] = Some(d);
+        }
+        if li > 0 {
+            // ∂L/∂X = G · Ŵ  (n, c) feeds the next layer down.
+            g = g.matmul_nn(&whats[li])?;
+        }
+    }
+    Ok((loss, grads))
+}
+
+// ---------------------------------------------------------------------------
+// The per-unit reconstruction loop
+// ---------------------------------------------------------------------------
+
+pub struct ReconSettings {
+    pub iters: usize,
+    pub lr: f32,
+    pub batch: usize,
+    pub qmin: f32,
+    pub qmax: f32,
+    pub workers: usize,
+    pub verbose: bool,
+    /// label for progress lines, e.g. "model/unit"
+    pub tag: String,
+}
+
+pub struct ReconResult {
+    pub params: Vec<Tensor>,
+    pub first_loss: f64,
+    pub final_loss: f64,
+    pub steps: u64,
+}
+
+/// Learn the pack parameters for one unit: Adam over random calibration
+/// minibatches, loss/step bookkeeping identical to the PJRT loop.
+pub fn reconstruct_unit(
+    layers: &[LayerDef],
+    slots: &[LayerSlots],
+    entries: &[PackEntry],
+    params0: &[Tensor],
+    x: &Tensor,
+    y: &Tensor,
+    cfg: &ReconSettings,
+    rng: &mut Pcg32,
+) -> Result<ReconResult> {
+    if x.shape()[0] != y.shape()[0] {
+        bail!("calibration rows {} vs target rows {}", x.shape()[0], y.shape()[0]);
+    }
+    let n = x.shape()[0];
+    let batch = cfg.batch.clamp(1, n);
+    let mut params: Vec<Tensor> = params0.to_vec();
+    let mut opt = Adam::new(&params);
+    let mut first_loss = f64::NAN;
+    let mut final_loss = f64::NAN;
+    for t in 1..=cfg.iters {
+        let idx = rng.sample_indices(n, batch);
+        let xb = x.gather_rows(&idx)?;
+        let yb = y.gather_rows(&idx)?;
+        let (loss, grads) =
+            loss_and_grads(layers, slots, &params, &xb, &yb, cfg.qmin, cfg.qmax, cfg.workers)?;
+        if t == 1 {
+            first_loss = loss;
+        }
+        final_loss = loss;
+        opt.step(t, cfg.lr, entries, &mut params, &grads)?;
+        if cfg.verbose && (t == 1 || t % 100 == 0 || t == cfg.iters) {
+            eprintln!("    [{}] iter {t}/{} loss {loss:.6}", cfg.tag, cfg.iters);
+        }
+    }
+    Ok(ReconResult { params, first_loss, final_loss, steps: cfg.iters as u64 })
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic problems (selftest, benches, tests)
+// ---------------------------------------------------------------------------
+
+/// A self-contained single-layer reconstruction problem: weights, a
+/// calibration set, FP targets, and a FlexRound pack initialized at the RTN
+/// solution (per-row min/max s1, S2 = s3 = s4 = 1).
+pub struct Synthetic {
+    pub w: Tensor,
+    pub x: Tensor,
+    pub y: Tensor,
+    pub entries: Vec<PackEntry>,
+    pub params: Vec<Tensor>,
+    pub qmin: f32,
+    pub qmax: f32,
+}
+
+pub fn synthetic_problem(rows: usize, cols: usize, batch: usize, bits: u32, seed: u64) -> Synthetic {
+    use crate::tensor::{minmax_scale, qrange};
+    let mut rng = Pcg32::seeded(seed);
+    let wv: Vec<f32> = (0..rows * cols).map(|_| rng.next_normal() * 0.4).collect();
+    let xv: Vec<f32> = (0..batch * cols).map(|_| rng.next_normal()).collect();
+    let w = Tensor::from_f32(wv, &[rows, cols]).expect("w shape");
+    let x = Tensor::from_f32(xv, &[batch, cols]).expect("x shape");
+    let y = x.matmul_nt(&w).expect("targets");
+    let (qmin, qmax) = qrange(bits, true);
+    let mut s1 = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let row = &w.as_f32().expect("f32")[r * cols..(r + 1) * cols];
+        s1.push(minmax_scale(row, bits, true).0);
+    }
+    let entry = |name: &str, shape: &[usize], learnable: bool| PackEntry {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        learnable,
+    };
+    let entries = vec![
+        entry("fc.s1", &[rows, 1], true),
+        entry("fc.s2", &[rows, cols], true),
+        entry("fc.s3", &[rows, 1], true),
+        entry("fc.s4", &[1, cols], true),
+        entry("fc.zp", &[rows, 1], false),
+    ];
+    let params = vec![
+        Tensor::from_f32(s1, &[rows, 1]).expect("s1"),
+        Tensor::full(&[rows, cols], 1.0),
+        Tensor::full(&[rows, 1], 1.0),
+        Tensor::full(&[1, cols], 1.0),
+        Tensor::zeros(&[rows, 1]),
+    ];
+    Synthetic { w, x, y, entries, params, qmin, qmax }
+}
+
+/// Slot layout matching [`synthetic_problem`]'s pack order.
+pub fn synthetic_slots() -> Vec<LayerSlots> {
+    vec![LayerSlots { layer: 0, s1: 0, zp: 4, s2: Some(1), s3: Some(2), s4: Some(3) }]
+}
+
+/// Artifact-free smoke test of the native engine: reconstruct one synthetic
+/// unit and report the RTN-init vs learned full-batch MSE.  Returns
+/// `(mse_rtn, mse_learned)`; errors if learning failed to improve.
+pub fn native_selftest(verbose: bool) -> Result<(f64, f64)> {
+    let p = synthetic_problem(16, 32, 256, 3, 7);
+    let slots = synthetic_slots();
+    let layers =
+        [LayerDef { name: "fc", w: &p.w, bias: None, relu_after: false }];
+    let workers = pool::default_workers();
+    let before = unit_forward_q(&layers, &slots, &p.params, p.qmin, p.qmax, &p.x, workers)?
+        .mse(&p.y)? as f64;
+    let cfg = ReconSettings {
+        iters: 300,
+        lr: 4e-3,
+        batch: 32,
+        qmin: p.qmin,
+        qmax: p.qmax,
+        workers,
+        verbose,
+        tag: "selftest/fc".to_string(),
+    };
+    let mut rng = Pcg32::seeded(7);
+    let r = reconstruct_unit(&layers, &slots, &p.entries, &p.params, &p.x, &p.y, &cfg, &mut rng)?;
+    let after = unit_forward_q(&layers, &slots, &r.params, p.qmin, p.qmax, &p.x, workers)?
+        .mse(&p.y)? as f64;
+    if !(after < before) {
+        bail!("native selftest: reconstruction did not improve MSE ({before:.6} → {after:.6})");
+    }
+    Ok((before, after))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn ties_round_to_even() {
+        assert_eq!(round_ties_even(0.5), 0.0);
+        assert_eq!(round_ties_even(1.5), 2.0);
+        assert_eq!(round_ties_even(2.5), 2.0);
+        assert_eq!(round_ties_even(-0.5), 0.0);
+        assert_eq!(round_ties_even(-1.5), -2.0);
+        assert_eq!(round_ties_even(-2.5), -2.0);
+        assert_eq!(round_ties_even(1.2), 1.0);
+        assert_eq!(round_ties_even(-1.7), -2.0);
+    }
+
+    #[test]
+    fn fq_all_ones_is_rtn() {
+        // With S2 = s3 = s4 = 1 the forward is plain RTN (ties aside).
+        let w = Tensor::from_f32(vec![0.31, -0.62, 0.08, 1.2, -0.9, 0.44], &[2, 3]).unwrap();
+        let s1 = Tensor::from_f32(vec![0.1, 0.2], &[2, 1]).unwrap();
+        let zp = Tensor::zeros(&[2, 1]);
+        let what = fq_forward(&w, &s1, None, None, None, &zp, -8.0, 7.0).unwrap();
+        let expect_r0 = crate::tensor::rtn(&w.as_f32().unwrap()[..3], 0.1, 0.0, -8.0, 7.0);
+        let expect_r1 = crate::tensor::rtn(&w.as_f32().unwrap()[3..], 0.2, 0.0, -8.0, 7.0);
+        let got = what.as_f32().unwrap();
+        for (a, b) in got[..3].iter().zip(&expect_r0) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        for (a, b) in got[3..].iter().zip(&expect_r1) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn codes_on_grid_and_scaled_consistent() {
+        Prop::new("fq codes integral and Ŵ = s1·(codes − zp)").cases(60).check(|rng| {
+            let r = 1 + rng.below(5) as usize;
+            let c = 1 + rng.below(8) as usize;
+            let w = Tensor::from_f32(
+                (0..r * c).map(|_| rng.next_normal()).collect(),
+                &[r, c],
+            )
+            .map_err(|e| e.to_string())?;
+            let s1 = Tensor::from_f32(
+                (0..r).map(|_| 0.02 + rng.next_f32() * 0.3).collect(),
+                &[r, 1],
+            )
+            .map_err(|e| e.to_string())?;
+            let s2 = Tensor::from_f32(
+                (0..r * c).map(|_| 0.8 + 0.4 * rng.next_f32()).collect(),
+                &[r, c],
+            )
+            .map_err(|e| e.to_string())?;
+            let zp = Tensor::from_f32(
+                (0..r).map(|_| rng.below(5) as f32 - 2.0).collect(),
+                &[r, 1],
+            )
+            .map_err(|e| e.to_string())?;
+            let (qmin, qmax) = (-8.0, 7.0);
+            let codes =
+                fq_codes(&w, &s1, Some(&s2), None, None, &zp, qmin, qmax).map_err(|e| e.to_string())?;
+            let what =
+                fq_forward(&w, &s1, Some(&s2), None, None, &zp, qmin, qmax).map_err(|e| e.to_string())?;
+            let cv = codes.as_f32().map_err(|e| e.to_string())?;
+            let wv = what.as_f32().map_err(|e| e.to_string())?;
+            let s1v = s1.as_f32().map_err(|e| e.to_string())?;
+            let zv = zp.as_f32().map_err(|e| e.to_string())?;
+            for i in 0..r {
+                for j in 0..c {
+                    let k = i * c + j;
+                    let code = cv[k];
+                    if !(qmin..=qmax).contains(&code) || (code - code.round()).abs() > 1e-5 {
+                        return Err(format!("code {code} off-grid"));
+                    }
+                    let expect = s1v[i] * (code - zv[i]);
+                    if (wv[k] - expect).abs() > 1e-5 {
+                        return Err(format!("Ŵ {} vs s1·(n−z) {expect}", wv[k]));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// STE surrogate in f64: round(·) replaced by identity + the frozen
+    /// offset `c0 = round(r₀) − r₀`, which makes the surrogate smooth,
+    /// equal in value to the real forward at the base point, and equal in
+    /// derivative to the straight-through estimator everywhere off the clip
+    /// boundary.  Finite differences of this must match `fq_backward`.
+    #[allow(clippy::too_many_arguments)]
+    fn ste_surrogate(
+        w: &[f64],
+        r: usize,
+        c: usize,
+        s1: &[f64],
+        s2: &[f64],
+        s3: &[f64],
+        s4: &[f64],
+        zp: &[f64],
+        c0: &[f64],
+        g: &[f64],
+        qmin: f64,
+        qmax: f64,
+    ) -> f64 {
+        let mut acc = 0.0;
+        for i in 0..r {
+            for j in 0..c {
+                let k = i * c + j;
+                let div = s1[i] * s2[k] * s3[i] * s4[j];
+                let n = w[k] / div + c0[k] + zp[i];
+                let n_c = n.clamp(qmin, qmax);
+                acc += g[k] * s1[i] * (n_c - zp[i]);
+            }
+        }
+        acc
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        Prop::new("STE grads vs finite differences").cases(25).check(|rng| {
+            let (r, c) = (2 + rng.below(3) as usize, 2 + rng.below(4) as usize);
+            let wv: Vec<f32> = (0..r * c).map(|_| rng.next_normal() * 0.5).collect();
+            let s1v: Vec<f32> = (0..r).map(|_| 0.05 + 0.2 * rng.next_f32()).collect();
+            let s2v: Vec<f32> = (0..r * c).map(|_| 0.85 + 0.3 * rng.next_f32()).collect();
+            let s3v: Vec<f32> = (0..r).map(|_| 0.9 + 0.2 * rng.next_f32()).collect();
+            let s4v: Vec<f32> = (0..c).map(|_| 0.9 + 0.2 * rng.next_f32()).collect();
+            let zpv: Vec<f32> = vec![0.0; r];
+            let gv: Vec<f32> = (0..r * c).map(|_| rng.next_normal()).collect();
+            // 5-bit grid: some elements clip, most don't.
+            let (qmin, qmax) = (-16.0f32, 15.0f32);
+
+            let w = Tensor::from_f32(wv.clone(), &[r, c]).unwrap();
+            let s1 = Tensor::from_f32(s1v.clone(), &[r, 1]).unwrap();
+            let s2 = Tensor::from_f32(s2v.clone(), &[r, c]).unwrap();
+            let s3 = Tensor::from_f32(s3v.clone(), &[r, 1]).unwrap();
+            let s4 = Tensor::from_f32(s4v.clone(), &[1, c]).unwrap();
+            let zp = Tensor::from_f32(zpv.clone(), &[r, 1]).unwrap();
+            let g = Tensor::from_f32(gv.clone(), &[r, c]).unwrap();
+            let fg = fq_backward(&w, &s1, Some(&s2), Some(&s3), Some(&s4), &zp, &g, qmin, qmax)
+                .map_err(|e| e.to_string())?;
+
+            // f64 copies + frozen rounding offsets at the base point.
+            let f64v = |v: &[f32]| v.iter().map(|&x| x as f64).collect::<Vec<f64>>();
+            let (wd, s1d, s2d, s3d, s4d, zpd, gd) = (
+                f64v(&wv), f64v(&s1v), f64v(&s2v), f64v(&s3v), f64v(&s4v), f64v(&zpv), f64v(&gv),
+            );
+            let mut c0 = vec![0.0f64; r * c];
+            let mut boundary = false;
+            for i in 0..r {
+                for j in 0..c {
+                    let k = i * c + j;
+                    let ratio = wd[k] / (s1d[i] * s2d[k] * s3d[i] * s4d[j]);
+                    c0[k] = (round_ties_even(ratio as f32) as f64) - ratio;
+                    let n = ratio + c0[k] + zpd[i];
+                    // skip cases razor-close to the clip boundary (the STE
+                    // mask flips there and finite differences straddle it)
+                    if (n - qmin as f64).abs() < 2e-2 || (n - qmax as f64).abs() < 2e-2 {
+                        boundary = true;
+                    }
+                }
+            }
+            if boundary {
+                return Ok(());
+            }
+
+            let eval = |s1x: &[f64], s2x: &[f64], s3x: &[f64], s4x: &[f64]| {
+                ste_surrogate(&wd, r, c, s1x, s2x, s3x, s4x, &zpd, &c0, &gd,
+                              qmin as f64, qmax as f64)
+            };
+            let check = |analytic: f32, numeric: f64, what: &str| -> std::result::Result<(), String> {
+                let tol = 2e-3 * numeric.abs().max(analytic.abs() as f64).max(1.0);
+                if ((analytic as f64) - numeric).abs() > tol {
+                    return Err(format!("{what}: analytic {analytic} vs numeric {numeric}"));
+                }
+                Ok(())
+            };
+
+            let ds1 = fg.ds1.as_f32().unwrap();
+            for i in 0..r {
+                let mut hi = s1d.clone();
+                let mut lo = s1d.clone();
+                let eps = (1e-4f64).max(1e-4 * s1d[i].abs());
+                hi[i] += eps;
+                lo[i] -= eps;
+                let num = (eval(&hi, &s2d, &s3d, &s4d) - eval(&lo, &s2d, &s3d, &s4d)) / (2.0 * eps);
+                check(ds1[i], num, "ds1")?;
+            }
+            let ds2 = fg.ds2.as_ref().unwrap().as_f32().unwrap();
+            for k in 0..r * c {
+                let mut hi = s2d.clone();
+                let mut lo = s2d.clone();
+                let eps = 1e-4;
+                hi[k] += eps;
+                lo[k] -= eps;
+                let num = (eval(&s1d, &hi, &s3d, &s4d) - eval(&s1d, &lo, &s3d, &s4d)) / (2.0 * eps);
+                check(ds2[k], num, "ds2 (reciprocal rule)")?;
+            }
+            let ds3 = fg.ds3.as_ref().unwrap().as_f32().unwrap();
+            for i in 0..r {
+                let mut hi = s3d.clone();
+                let mut lo = s3d.clone();
+                let eps = 1e-4;
+                hi[i] += eps;
+                lo[i] -= eps;
+                let num = (eval(&s1d, &s2d, &hi, &s4d) - eval(&s1d, &s2d, &lo, &s4d)) / (2.0 * eps);
+                check(ds3[i], num, "ds3")?;
+            }
+            let ds4 = fg.ds4.as_ref().unwrap().as_f32().unwrap();
+            for j in 0..c {
+                let mut hi = s4d.clone();
+                let mut lo = s4d.clone();
+                let eps = 1e-4;
+                hi[j] += eps;
+                lo[j] -= eps;
+                let num = (eval(&s1d, &s2d, &s3d, &hi) - eval(&s1d, &s2d, &s3d, &lo)) / (2.0 * eps);
+                check(ds4[j], num, "ds4")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn clipped_elements_zero_reciprocal_grad() {
+        // A weight far outside the 2-bit grid saturates: the divisor path is
+        // dead (inside = 0) so dS2 = 0, while ds1 keeps the (n_c − z) term.
+        let w = Tensor::from_f32(vec![50.0], &[1, 1]).unwrap();
+        let s1 = Tensor::from_f32(vec![1.0], &[1, 1]).unwrap();
+        let s2 = Tensor::from_f32(vec![1.0], &[1, 1]).unwrap();
+        let zp = Tensor::zeros(&[1, 1]);
+        let g = Tensor::from_f32(vec![1.0], &[1, 1]).unwrap();
+        let fg = fq_backward(&w, &s1, Some(&s2), None, None, &zp, &g, -2.0, 1.0).unwrap();
+        assert_eq!(fg.ds2.unwrap().as_f32().unwrap()[0], 0.0);
+        assert_eq!(fg.ds1.as_f32().unwrap()[0], 1.0); // n_c − z = qmax = 1
+    }
+
+    #[test]
+    fn map_pack_layouts() {
+        use crate::manifest::{LayerInfo, UnitInfo};
+        use std::collections::BTreeMap;
+        let unit = UnitInfo {
+            name: "u0".into(),
+            kind: "linear".into(),
+            bits_override: None,
+            in_shape: vec![4],
+            out_shape: vec![2],
+            act_sites: 0,
+            layers: vec![LayerInfo {
+                name: "fc".into(),
+                kind: "linear".into(),
+                rows: 2,
+                cols: 4,
+                conv_shape: None,
+                stride: 1,
+            }],
+            artifacts: BTreeMap::new(),
+            packs: BTreeMap::new(),
+        };
+        let e = |n: &str| PackEntry { name: n.into(), shape: vec![1], learnable: true };
+        let entries =
+            vec![e("fc.s1"), e("fc.s2"), e("fc.s3"), e("fc.s4"), e("fc.zp")];
+        let s = map_pack(&unit, "flexround", &entries).unwrap();
+        assert_eq!(s[0].s1, 0);
+        assert_eq!(s[0].s2, Some(1));
+        assert_eq!(s[0].s4, Some(3));
+        assert_eq!(s[0].zp, 4);
+        // the no-s34 ablation freezes those factors to ones
+        let s = map_pack(&unit, "flexround_no_s34", &entries).unwrap();
+        assert_eq!(s[0].s3, None);
+        assert_eq!(s[0].s4, None);
+        // rtn needs only s1/zp
+        let entries_rtn = vec![e("fc.s1"), e("fc.zp")];
+        let s = map_pack(&unit, "rtn", &entries_rtn).unwrap();
+        assert_eq!(s[0].s2, None);
+        assert!(map_pack(&unit, "adaround", &entries).is_err());
+        let mut with_act = entries.clone();
+        with_act.push(e("act0.step"));
+        assert!(map_pack(&unit, "flexround", &with_act).is_err());
+    }
+
+    #[test]
+    fn parallel_matmul_matches_serial() {
+        let mut rng = Pcg32::seeded(3);
+        let a = Tensor::from_f32((0..64 * 48).map(|_| rng.next_normal()).collect(), &[64, 48])
+            .unwrap();
+        let b = Tensor::from_f32((0..96 * 48).map(|_| rng.next_normal()).collect(), &[96, 48])
+            .unwrap();
+        let serial = a.matmul_nt(&b).unwrap();
+        let par = matmul_nt_par(&a, &b, 4).unwrap();
+        assert_eq!(serial.shape(), par.shape());
+        for (x, y) in serial.as_f32().unwrap().iter().zip(par.as_f32().unwrap()) {
+            assert_eq!(x, y, "row-sliced parallel matmul must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn selftest_improves_mse() {
+        let (before, after) = native_selftest(false).unwrap();
+        assert!(after < before * 0.9, "expected ≥10% MSE reduction: {before} → {after}");
+    }
+
+    #[test]
+    fn reconstruction_is_deterministic() {
+        let p = synthetic_problem(8, 12, 64, 4, 11);
+        let slots = synthetic_slots();
+        let layers = [LayerDef { name: "fc", w: &p.w, bias: None, relu_after: false }];
+        let cfg = ReconSettings {
+            iters: 25,
+            lr: 3e-3,
+            batch: 16,
+            qmin: p.qmin,
+            qmax: p.qmax,
+            workers: 4,
+            verbose: false,
+            tag: "det".into(),
+        };
+        let run = || {
+            let mut rng = Pcg32::seeded(5);
+            reconstruct_unit(&layers, &slots, &p.entries, &p.params, &p.x, &p.y, &cfg, &mut rng)
+                .unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.final_loss, b.final_loss);
+        for (pa, pb) in a.params.iter().zip(&b.params) {
+            assert_eq!(pa.as_f32().unwrap(), pb.as_f32().unwrap());
+        }
+    }
+
+    #[test]
+    fn mlp_relu_backprop_improves() {
+        // Two-layer ReLU stack: checks the activation cotangent path.
+        let mut rng = Pcg32::seeded(23);
+        let w1 = Tensor::from_f32((0..12 * 8).map(|_| rng.next_normal() * 0.5).collect(), &[12, 8])
+            .unwrap();
+        let w2 = Tensor::from_f32((0..6 * 12).map(|_| rng.next_normal() * 0.5).collect(), &[6, 12])
+            .unwrap();
+        let x = Tensor::from_f32((0..96 * 8).map(|_| rng.next_normal()).collect(), &[96, 8])
+            .unwrap();
+        let layers = [
+            LayerDef { name: "up", w: &w1, bias: None, relu_after: true },
+            LayerDef { name: "down", w: &w2, bias: None, relu_after: false },
+        ];
+        let y = unit_forward_fp(&layers, &x, 1).unwrap();
+        let p1 = synthetic_pack_for(&w1, "up", 3);
+        let p2 = synthetic_pack_for(&w2, "down", 3);
+        let mut entries = p1.0;
+        let base = entries.len();
+        entries.extend(p2.0);
+        let mut params = p1.1;
+        params.extend(p2.1);
+        let slots = vec![
+            LayerSlots { layer: 0, s1: 0, zp: 4, s2: Some(1), s3: Some(2), s4: Some(3) },
+            LayerSlots {
+                layer: 1,
+                s1: base,
+                zp: base + 4,
+                s2: Some(base + 1),
+                s3: Some(base + 2),
+                s4: Some(base + 3),
+            },
+        ];
+        let cfg = ReconSettings {
+            iters: 200,
+            lr: 4e-3,
+            batch: 32,
+            qmin: -4.0,
+            qmax: 3.0,
+            workers: 1,
+            verbose: false,
+            tag: "mlp".into(),
+        };
+        let before = unit_forward_q(&layers, &slots, &params, -4.0, 3.0, &x, 1)
+            .unwrap()
+            .mse(&y)
+            .unwrap();
+        let mut r = Pcg32::seeded(2);
+        let res =
+            reconstruct_unit(&layers, &slots, &entries, &params, &x, &y, &cfg, &mut r).unwrap();
+        let after = unit_forward_q(&layers, &slots, &res.params, -4.0, 3.0, &x, 1)
+            .unwrap()
+            .mse(&y)
+            .unwrap();
+        assert!(after < before, "mlp recon should improve: {before} → {after}");
+    }
+
+    /// FlexRound pack (entries, params) for one weight tensor at RTN init.
+    fn synthetic_pack_for(w: &Tensor, layer: &str, bits: u32) -> (Vec<PackEntry>, Vec<Tensor>) {
+        use crate::tensor::minmax_scale;
+        let (rows, cols) = (w.shape()[0], w.shape()[1]);
+        let wv = w.as_f32().unwrap();
+        let s1: Vec<f32> = (0..rows)
+            .map(|r| minmax_scale(&wv[r * cols..(r + 1) * cols], bits, true).0)
+            .collect();
+        let entry = |k: &str, shape: &[usize], learn: bool| PackEntry {
+            name: format!("{layer}.{k}"),
+            shape: shape.to_vec(),
+            learnable: learn,
+        };
+        (
+            vec![
+                entry("s1", &[rows, 1], true),
+                entry("s2", &[rows, cols], true),
+                entry("s3", &[rows, 1], true),
+                entry("s4", &[1, cols], true),
+                entry("zp", &[rows, 1], false),
+            ],
+            vec![
+                Tensor::from_f32(s1, &[rows, 1]).unwrap(),
+                Tensor::full(&[rows, cols], 1.0),
+                Tensor::full(&[rows, 1], 1.0),
+                Tensor::full(&[1, cols], 1.0),
+                Tensor::zeros(&[rows, 1]),
+            ],
+        )
+    }
+}

@@ -1,258 +1,128 @@
-//! PJRT runtime: load `artifacts/*.hlo.txt`, compile once, execute many.
+//! Execution engines behind the PTQ coordinator (DESIGN.md §Backends).
 //!
-//! Wraps the `xla` crate (PJRT C API, CPU client).  Two execution paths:
+//! The coordinator drives everything through the [`Backend`] trait; two
+//! engines implement it:
 //!
-//! * [`Exec::run`] — host literals in, host tensors out.  Multi-output
-//!   graphs (lowered with `return_tuple=True`) come back as one tuple
-//!   literal which is decomposed here.
-//! * [`Exec::run_b`] / [`DeviceBuf`] — device-buffer chaining for the unit
-//!   pipeline: single-output graphs (`return_tuple=False`) produce a bare
-//!   array buffer that feeds the next executable without a host round-trip.
-//!   This is the L3 hot-path optimization (see EXPERIMENTS.md §Perf).
+//! * [`Native`] — pure-Rust reconstruction via [`crate::recon`]: forward
+//!   fake-quant by element-wise division, closed-form STE backward, Adam.
+//!   No artifacts, no PJRT — the crate is self-contained.  Independent
+//!   units fan out over the [`crate::util::pool`] worker threads (the
+//!   `--parallel-units` FP-input scenario).
+//! * [`Pjrt`] (feature `pjrt`) — wraps the original [`Runtime`], which
+//!   loads `artifacts/*.hlo.txt`, compiles them once through the PJRT C
+//!   API, and executes the AOT reconstruction/forward graphs.  Device-buffer
+//!   chaining ([`pjrt::Exec::run_b`]) keeps the unit pipeline off the host —
+//!   the L3 hot-path optimization benchmarked in EXPERIMENTS.md §Perf,
+//!   alongside native-vs-PJRT per-unit reconstruction timings.
 //!
-//! Executables are cached by file name (compile once per process).
+//! `flexround --backend {auto|native|pjrt}` selects the engine; `auto`
+//! prefers PJRT when compiled in and the artifact dir is usable, else falls
+//! back to native.
 
-use crate::tensor::{DType, Tensor};
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use native::Native;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{from_literal, to_literal, DeviceBuf, Exec, Pjrt, RtStats, Runtime};
+
+use crate::manifest::{ModelInfo, PackEntry, UnitInfo};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
 use crate::Result;
-use anyhow::{anyhow, bail};
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
-use std::time::Instant;
 
-/// A device-resident buffer (output of a single-output executable).
-pub struct DeviceBuf(pub xla::PjRtBuffer);
-
-/// Shared PJRT CPU client + executable cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    cache: RefCell<HashMap<String, Rc<Exec>>>,
-    pub stats: RefCell<RtStats>,
+/// Everything an engine needs to know about one unit: the manifest entry
+/// plus the host-side weight/bias tensors (`None` where the weights FXT has
+/// no entry for a layer — the PJRT engine does not need them, the native
+/// engine errors if they are missing).
+pub struct UnitCtx<'a> {
+    pub model: &'a ModelInfo,
+    pub unit: &'a UnitInfo,
+    /// per-layer `w/{unit}/{layer}` tensors, in layer order
+    pub weights: Vec<Option<&'a Tensor>>,
+    /// per-layer `b/{unit}/{layer}` tensors, in layer order
+    pub biases: Vec<Option<&'a Tensor>>,
 }
 
-/// Runtime counters for the perf report.
-#[derive(Default, Debug, Clone)]
-pub struct RtStats {
-    pub compiles: u64,
-    pub compile_secs: f64,
-    pub executions: u64,
-    pub execute_secs: f64,
-    pub cache_hits: u64,
+/// A view of one unit's learned quantization state, enough to run the
+/// quantized forward or the weight export.
+pub struct QView<'a> {
+    pub method: &'a str,
+    pub mode: &'a str,
+    pub bits_w: u32,
+    pub abits: u32,
+    pub params: &'a [Tensor],
+    pub entries: &'a [PackEntry],
 }
 
-/// One compiled executable.
-pub struct Exec {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
+/// One unit's reconstruction job: calibration chunks, FP targets, the
+/// initial parameter pack, and the hyperparameters already resolved by the
+/// coordinator (manifest defaults applied).
+pub struct ReconTask<'a> {
+    pub cx: UnitCtx<'a>,
+    pub method: String,
+    pub mode: String,
+    pub bits_w: u32,
+    pub abits: u32,
+    pub iters: usize,
+    pub lr: f64,
+    pub drop_p: f64,
+    /// minibatch rows per Adam step
+    pub batch: usize,
+    pub verbose: bool,
+    pub entries: Vec<PackEntry>,
+    pub params: Vec<Tensor>,
+    /// quantized-path input chunks X̃ (or FP inputs in `--parallel-units`)
+    pub x: Vec<Tensor>,
+    /// full-precision target chunks Y
+    pub y: Vec<Tensor>,
+    /// per-unit random stream (minibatch sampling, QDrop seeds)
+    pub rng: Pcg32,
 }
 
-impl Runtime {
-    /// Create a CPU PJRT client rooted at the artifact directory.
-    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Runtime {
-            client,
-            dir: artifact_dir.to_path_buf(),
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(RtStats::default()),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an artifact (cached by file name).
-    pub fn load(&self, file: &str) -> Result<Rc<Exec>> {
-        if let Some(e) = self.cache.borrow().get(file) {
-            self.stats.borrow_mut().cache_hits += 1;
-            return Ok(Rc::clone(e));
-        }
-        let path = self.dir.join(file);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
-        {
-            let mut s = self.stats.borrow_mut();
-            s.compiles += 1;
-            s.compile_secs += t0.elapsed().as_secs_f64();
-        }
-        let rc = Rc::new(Exec { exe, name: file.to_string() });
-        self.cache.borrow_mut().insert(file.to_string(), Rc::clone(&rc));
-        Ok(rc)
-    }
-
-    /// Upload a host tensor to the device (for buffer-path chaining).
-    pub fn upload(&self, t: &Tensor) -> Result<DeviceBuf> {
-        let lit = to_literal(t)?;
-        let buf = self
-            .client
-            .buffer_from_host_literal(None, &lit)
-            .map_err(|e| anyhow!("upload: {e:?}"))?;
-        Ok(DeviceBuf(buf))
-    }
-
-    fn note_exec(&self, t0: Instant) {
-        let mut s = self.stats.borrow_mut();
-        s.executions += 1;
-        s.execute_secs += t0.elapsed().as_secs_f64();
-    }
+/// What a reconstruction returned.
+pub struct ReconOutcome {
+    pub params: Vec<Tensor>,
+    pub first_loss: f64,
+    pub final_loss: f64,
+    pub steps: u64,
+    pub seconds: f64,
 }
 
-impl Exec {
-    /// Literal path: host tensors in → host tensors out.  `tuple_out` must
-    /// match how the artifact was lowered (recon/qw/lm-head → true).
-    pub fn run(&self, rt: &Runtime, inputs: &[Tensor], tuple_out: bool) -> Result<Vec<Tensor>> {
-        let lits: Vec<xla::Literal> = inputs.iter().map(to_literal).collect::<Result<_>>()?;
-        let t0 = Instant::now();
-        let res = self
-            .exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
-        rt.note_exec(t0);
-        collect_outputs(res, tuple_out, &self.name)
+/// An execution engine for per-unit reconstruction and unit forwards.
+///
+/// Object-safe: the coordinator holds `&dyn Backend` and never knows which
+/// engine it drives.  [`Backend::reconstruct_many`] exists so engines with
+/// thread-safe state (native) can fan independent units out over the worker
+/// pool; the default implementation is sequential.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// Human-readable perf counters (compile/execute or step/second totals).
+    fn summary(&self) -> String;
+
+    /// Full-precision forward of `unit` over activation chunks.
+    fn unit_forward_fp(&self, cx: &UnitCtx, chunks: &[Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Quantized forward with learned parameters.
+    fn unit_forward_q(&self, cx: &UnitCtx, q: &QView, chunks: &[Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Learn one unit's parameters by output-MSE reconstruction.
+    fn reconstruct(&self, task: &ReconTask) -> Result<ReconOutcome>;
+
+    /// Reconstruct several *independent* units (the FP-input scenario).
+    fn reconstruct_many(&self, tasks: &[ReconTask]) -> Result<Vec<ReconOutcome>> {
+        tasks.iter().map(|t| self.reconstruct(t)).collect()
     }
 
-    /// Buffer path: device buffers in → device buffers out (no host copy).
-    pub fn run_b(&self, rt: &Runtime, inputs: &[&DeviceBuf]) -> Result<Vec<DeviceBuf>> {
-        let bufs: Vec<&xla::PjRtBuffer> = inputs.iter().map(|b| &b.0).collect();
-        let t0 = Instant::now();
-        let res = self
-            .exe
-            .execute_b::<&xla::PjRtBuffer>(&bufs)
-            .map_err(|e| anyhow!("execute_b {}: {e:?}", self.name))?;
-        rt.note_exec(t0);
-        let mut replica = res
-            .into_iter()
-            .next()
-            .ok_or_else(|| anyhow!("{}: no replica output", self.name))?;
-        Ok(replica.drain(..).map(DeviceBuf).collect())
-    }
+    /// Export `(Ŵ, integer codes)` per layer for figures/analysis.
+    fn export_qw(&self, cx: &UnitCtx, q: &QView) -> Result<Vec<(Tensor, Tensor)>>;
 
-    /// Mixed path: host inputs, device outputs (for starting a chain).
-    pub fn run_to_device(&self, rt: &Runtime, inputs: &[Tensor]) -> Result<Vec<DeviceBuf>> {
-        let lits: Vec<xla::Literal> = inputs.iter().map(to_literal).collect::<Result<_>>()?;
-        let t0 = Instant::now();
-        let res = self
-            .exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
-        rt.note_exec(t0);
-        let mut replica = res
-            .into_iter()
-            .next()
-            .ok_or_else(|| anyhow!("{}: no replica output", self.name))?;
-        Ok(replica.drain(..).map(DeviceBuf).collect())
-    }
-}
-
-impl DeviceBuf {
-    /// Copy to host.
-    pub fn fetch(&self) -> Result<Tensor> {
-        let lit = self
-            .0
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        from_literal(&lit)
-    }
-}
-
-fn collect_outputs(
-    res: Vec<Vec<xla::PjRtBuffer>>,
-    tuple_out: bool,
-    name: &str,
-) -> Result<Vec<Tensor>> {
-    let replica = res
-        .into_iter()
-        .next()
-        .ok_or_else(|| anyhow!("{name}: no replica output"))?;
-    let mut out = Vec::new();
-    for buf in replica {
-        let lit = buf
-            .to_literal_sync()
-            .map_err(|e| anyhow!("{name}: to_literal: {e:?}"))?;
-        if tuple_out {
-            for el in lit.to_tuple().map_err(|e| anyhow!("{name}: to_tuple: {e:?}"))? {
-                out.push(from_literal(&el)?);
-            }
-        } else {
-            out.push(from_literal(&lit)?);
-        }
-    }
-    Ok(out)
-}
-
-/// Tensor → xla Literal.
-pub fn to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
-    let lit = match t.dtype() {
-        DType::F32 => {
-            let v = t.as_f32()?;
-            if dims.is_empty() {
-                xla::Literal::scalar(v[0])
-            } else {
-                xla::Literal::vec1(v)
-                    .reshape(&dims)
-                    .map_err(|e| anyhow!("reshape literal: {e:?}"))?
-            }
-        }
-        DType::I32 => {
-            let v = t.as_i32()?;
-            if dims.is_empty() {
-                xla::Literal::scalar(v[0])
-            } else {
-                xla::Literal::vec1(v)
-                    .reshape(&dims)
-                    .map_err(|e| anyhow!("reshape literal: {e:?}"))?
-            }
-        }
-    };
-    Ok(lit)
-}
-
-/// xla Literal → Tensor.
-pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
-    let shape = lit
-        .array_shape()
-        .map_err(|e| anyhow!("literal shape: {e:?}"))?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    match shape.ty() {
-        xla::ElementType::F32 => {
-            let v = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
-            Tensor::from_f32(v, &dims)
-        }
-        xla::ElementType::S32 => {
-            let v = lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))?;
-            Tensor::from_i32(v, &dims)
-        }
-        xla::ElementType::Pred => {
-            let conv = lit
-                .convert(xla::PrimitiveType::S32)
-                .map_err(|e| anyhow!("convert pred: {e:?}"))?;
-            let v = conv.to_vec::<i32>().map_err(|e| anyhow!("to_vec pred: {e:?}"))?;
-            Tensor::from_i32(v, &dims)
-        }
-        other => bail!("unsupported literal element type {other:?}"),
-    }
-}
-
-impl RtStats {
-    pub fn summary(&self) -> String {
-        format!(
-            "compiles={} ({:.2}s) cache_hits={} executions={} ({:.2}s, {:.3}ms avg)",
-            self.compiles,
-            self.compile_secs,
-            self.cache_hits,
-            self.executions,
-            self.execute_secs,
-            if self.executions > 0 { self.execute_secs * 1e3 / self.executions as f64 } else { 0.0 },
-        )
+    /// Downcast hook: the PJRT runtime, when this engine wraps one (heads,
+    /// embeds, and raw artifact execution still need it).
+    #[cfg(feature = "pjrt")]
+    fn as_pjrt(&self) -> Option<&Runtime> {
+        None
     }
 }

@@ -1,0 +1,215 @@
+//! Native engine: pure-Rust FlexRound reconstruction (no artifacts, no
+//! PJRT).  A thin [`Backend`] shell over [`crate::recon`]; see DESIGN.md
+//! §Native-Backend for the execution model and its limits (weight-only
+//! mode, contraction-shaped units).
+
+use super::{Backend, QView, ReconOutcome, ReconTask, UnitCtx};
+use crate::recon::{self, LayerDef};
+use crate::tensor::{qrange, Tensor};
+use crate::util::pool;
+use crate::Result;
+use anyhow::{anyhow, bail};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Unit kinds the native engine can execute: plain contraction stacks,
+/// optionally ReLU-separated.
+const NATIVE_KINDS: [&str; 2] = ["linear", "mlp_relu"];
+
+#[derive(Default, Clone, Debug)]
+pub struct NativeStats {
+    pub units: u64,
+    pub steps: u64,
+    pub recon_secs: f64,
+    pub forwards: u64,
+}
+
+/// The artifact-free engine.  `Sync` by construction (counters behind a
+/// mutex), so [`Backend::reconstruct_many`] can fan independent units out
+/// over the [`pool`] worker threads.
+pub struct Native {
+    pub workers: usize,
+    stats: Mutex<NativeStats>,
+}
+
+impl Default for Native {
+    fn default() -> Self {
+        Native::new()
+    }
+}
+
+impl Native {
+    pub fn new() -> Native {
+        Native::with_workers(pool::default_workers())
+    }
+
+    pub fn with_workers(workers: usize) -> Native {
+        Native { workers: workers.max(1), stats: Mutex::new(NativeStats::default()) }
+    }
+
+    pub fn stats(&self) -> NativeStats {
+        self.stats.lock().expect("stats lock").clone()
+    }
+
+    /// Per-layer weight/bias views, without any executability check (enough
+    /// for weight export).
+    fn layer_weights<'a>(&self, cx: &UnitCtx<'a>) -> Result<Vec<LayerDef<'a>>> {
+        let relu_between = cx.unit.kind == "mlp_relu";
+        let n = cx.unit.layers.len();
+        let mut out = Vec::with_capacity(n);
+        for (i, layer) in cx.unit.layers.iter().enumerate() {
+            let w = cx
+                .weights
+                .get(i)
+                .copied()
+                .flatten()
+                .ok_or_else(|| {
+                    anyhow!(
+                        "native backend: missing weights w/{}/{} in the model's FXT export",
+                        cx.unit.name,
+                        layer.name
+                    )
+                })?;
+            if w.shape() != &[layer.rows, layer.cols][..] {
+                bail!(
+                    "native backend: weights for {}/{} have shape {:?}, expected the \
+                     canonical 2-D layout [{}, {}]",
+                    cx.unit.name,
+                    layer.name,
+                    w.shape(),
+                    layer.rows,
+                    layer.cols
+                );
+            }
+            out.push(LayerDef {
+                name: &layer.name,
+                w,
+                bias: cx.biases.get(i).copied().flatten(),
+                relu_after: relu_between && i + 1 < n,
+            });
+        }
+        Ok(out)
+    }
+
+    /// Layer views for *execution*: additionally requires a supported unit
+    /// topology.
+    fn layer_defs<'a>(&self, cx: &UnitCtx<'a>) -> Result<Vec<LayerDef<'a>>> {
+        if !NATIVE_KINDS.contains(&cx.unit.kind.as_str()) {
+            bail!(
+                "native backend cannot execute unit {:?} of kind {:?} (supported kinds: \
+                 {NATIVE_KINDS:?}); use --backend pjrt with AOT artifacts",
+                cx.unit.name,
+                cx.unit.kind
+            );
+        }
+        self.layer_weights(cx)
+    }
+
+    fn reconstruct_with(&self, task: &ReconTask, workers: usize) -> Result<ReconOutcome> {
+        if task.mode != "w" {
+            bail!(
+                "native backend supports weight-only mode; \"{}\" (activation \
+                 quantization) needs --backend pjrt",
+                task.mode
+            );
+        }
+        let cx = &task.cx;
+        let layers = self.layer_defs(cx)?;
+        let slots = recon::map_pack(cx.unit, &task.method, &task.entries)?;
+        let (qmin, qmax) = qrange(task.bits_w, cx.model.symmetric);
+        let x_all = Tensor::concat_rows(&task.x)?;
+        let y_all = Tensor::concat_rows(&task.y)?;
+        let cfg = recon::ReconSettings {
+            iters: task.iters,
+            lr: task.lr as f32,
+            batch: task.batch,
+            qmin,
+            qmax,
+            workers,
+            verbose: task.verbose,
+            tag: format!("{}/{}", cx.model.name, cx.unit.name),
+        };
+        let mut rng = task.rng.clone();
+        let t0 = Instant::now();
+        let r = recon::reconstruct_unit(
+            &layers, &slots, &task.entries, &task.params, &x_all, &y_all, &cfg, &mut rng,
+        )?;
+        let seconds = t0.elapsed().as_secs_f64();
+        {
+            let mut s = self.stats.lock().expect("stats lock");
+            s.units += 1;
+            s.steps += r.steps;
+            s.recon_secs += seconds;
+        }
+        Ok(ReconOutcome {
+            params: r.params,
+            first_loss: r.first_loss,
+            final_loss: r.final_loss,
+            steps: r.steps,
+            seconds,
+        })
+    }
+}
+
+impl Backend for Native {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn summary(&self) -> String {
+        let s = self.stats();
+        let ms = if s.steps > 0 { s.recon_secs * 1e3 / s.steps as f64 } else { 0.0 };
+        format!(
+            "native: units={} steps={} ({:.2}s, {ms:.3}ms/step) forwards={} workers={}",
+            s.units, s.steps, s.recon_secs, s.forwards, self.workers
+        )
+    }
+
+    fn unit_forward_fp(&self, cx: &UnitCtx, chunks: &[Tensor]) -> Result<Vec<Tensor>> {
+        let layers = self.layer_defs(cx)?;
+        self.stats.lock().expect("stats lock").forwards += chunks.len() as u64;
+        chunks
+            .iter()
+            .map(|c| recon::unit_forward_fp(&layers, c, self.workers))
+            .collect()
+    }
+
+    fn unit_forward_q(&self, cx: &UnitCtx, q: &QView, chunks: &[Tensor]) -> Result<Vec<Tensor>> {
+        if q.mode != "w" {
+            bail!("native backend supports weight-only mode; use --backend pjrt for \"wa\"");
+        }
+        let layers = self.layer_defs(cx)?;
+        let slots = recon::map_pack(cx.unit, q.method, q.entries)?;
+        let (qmin, qmax) = qrange(q.bits_w, cx.model.symmetric);
+        self.stats.lock().expect("stats lock").forwards += chunks.len() as u64;
+        // Ŵ once per layer; only the contractions repeat per chunk.
+        let whats = recon::unit_whats(&layers, &slots, q.params, qmin, qmax)?;
+        chunks
+            .iter()
+            .map(|c| recon::unit_forward_what(&layers, &whats, c, self.workers))
+            .collect()
+    }
+
+    fn reconstruct(&self, task: &ReconTask) -> Result<ReconOutcome> {
+        self.reconstruct_with(task, self.workers)
+    }
+
+    /// Independent units fan out across the pool; each unit then runs its
+    /// inner loops serially (no nested parallelism).
+    fn reconstruct_many(&self, tasks: &[ReconTask]) -> Result<Vec<ReconOutcome>> {
+        if tasks.len() <= 1 || self.workers <= 1 {
+            return tasks.iter().map(|t| self.reconstruct(t)).collect();
+        }
+        let results = pool::par_map(self.workers.min(tasks.len()), tasks, |_, t| {
+            self.reconstruct_with(t, 1)
+        });
+        results.into_iter().collect()
+    }
+
+    fn export_qw(&self, cx: &UnitCtx, q: &QView) -> Result<Vec<(Tensor, Tensor)>> {
+        let layers = self.layer_weights(cx)?;
+        let slots = recon::map_pack(cx.unit, q.method, q.entries)?;
+        let (qmin, qmax) = qrange(q.bits_w, cx.model.symmetric);
+        recon::export_qw(&layers, &slots, q.params, qmin, qmax)
+    }
+}

@@ -1,0 +1,483 @@
+//! PJRT engine: load `artifacts/*.hlo.txt`, compile once, execute many.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU client).  Two execution paths:
+//!
+//! * [`Exec::run`] — host literals in, host tensors out.  Multi-output
+//!   graphs (lowered with `return_tuple=True`) come back as one tuple
+//!   literal which is decomposed here.
+//! * [`Exec::run_b`] / [`DeviceBuf`] — device-buffer chaining for the unit
+//!   pipeline: single-output graphs (`return_tuple=False`) produce a bare
+//!   array buffer that feeds the next executable without a host round-trip.
+//!   This is the L3 hot-path optimization (see EXPERIMENTS.md §Perf).
+//!
+//! Executables are cached by file name (compile once per process).
+//! [`Pjrt`] wraps the raw [`Runtime`] and implements
+//! [`Backend`](super::Backend): unit forwards load the `fp`/`q.*`
+//! artifacts, reconstruction drives the AOT `recon.*` executables (fwd +
+//! STE bwd + in-graph Adam fused into one graph).
+
+use super::{Backend, QView, ReconOutcome, ReconTask, UnitCtx};
+use crate::coordinator::beta_schedule;
+use crate::manifest::PackEntry;
+use crate::tensor::{qrange, DType, Tensor};
+use crate::Result;
+use anyhow::{anyhow, bail};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+/// A device-resident buffer (output of a single-output executable).
+pub struct DeviceBuf(pub xla::PjRtBuffer);
+
+/// Shared PJRT CPU client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Exec>>>,
+    pub stats: RefCell<RtStats>,
+}
+
+/// Runtime counters for the perf report.
+#[derive(Default, Debug, Clone)]
+pub struct RtStats {
+    pub compiles: u64,
+    pub compile_secs: f64,
+    pub executions: u64,
+    pub execute_secs: f64,
+    pub cache_hits: u64,
+}
+
+/// One compiled executable.
+pub struct Exec {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at the artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir: artifact_dir.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RtStats::default()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached by file name).
+    pub fn load(&self, file: &str) -> Result<Rc<Exec>> {
+        if let Some(e) = self.cache.borrow().get(file) {
+            self.stats.borrow_mut().cache_hits += 1;
+            return Ok(Rc::clone(e));
+        }
+        let path = self.dir.join(file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.compiles += 1;
+            s.compile_secs += t0.elapsed().as_secs_f64();
+        }
+        let rc = Rc::new(Exec { exe, name: file.to_string() });
+        self.cache.borrow_mut().insert(file.to_string(), Rc::clone(&rc));
+        Ok(rc)
+    }
+
+    /// Upload a host tensor to the device (for buffer-path chaining).
+    pub fn upload(&self, t: &Tensor) -> Result<DeviceBuf> {
+        let lit = to_literal(t)?;
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, &lit)
+            .map_err(|e| anyhow!("upload: {e:?}"))?;
+        Ok(DeviceBuf(buf))
+    }
+
+    fn note_exec(&self, t0: Instant) {
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.execute_secs += t0.elapsed().as_secs_f64();
+    }
+}
+
+impl Exec {
+    /// Literal path: host tensors in → host tensors out.  `tuple_out` must
+    /// match how the artifact was lowered (recon/qw/lm-head → true).
+    pub fn run(&self, rt: &Runtime, inputs: &[Tensor], tuple_out: bool) -> Result<Vec<Tensor>> {
+        let lits: Vec<xla::Literal> = inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let res = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        rt.note_exec(t0);
+        collect_outputs(res, tuple_out, &self.name)
+    }
+
+    /// Buffer path: device buffers in → device buffers out (no host copy).
+    pub fn run_b(&self, rt: &Runtime, inputs: &[&DeviceBuf]) -> Result<Vec<DeviceBuf>> {
+        let bufs: Vec<&xla::PjRtBuffer> = inputs.iter().map(|b| &b.0).collect();
+        let t0 = Instant::now();
+        let res = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&bufs)
+            .map_err(|e| anyhow!("execute_b {}: {e:?}", self.name))?;
+        rt.note_exec(t0);
+        let mut replica = res
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{}: no replica output", self.name))?;
+        Ok(replica.drain(..).map(DeviceBuf).collect())
+    }
+
+    /// Mixed path: host inputs, device outputs (for starting a chain).
+    pub fn run_to_device(&self, rt: &Runtime, inputs: &[Tensor]) -> Result<Vec<DeviceBuf>> {
+        let lits: Vec<xla::Literal> = inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let res = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        rt.note_exec(t0);
+        let mut replica = res
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{}: no replica output", self.name))?;
+        Ok(replica.drain(..).map(DeviceBuf).collect())
+    }
+}
+
+impl DeviceBuf {
+    /// Copy to host.
+    pub fn fetch(&self) -> Result<Tensor> {
+        let lit = self
+            .0
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        from_literal(&lit)
+    }
+}
+
+fn collect_outputs(
+    res: Vec<Vec<xla::PjRtBuffer>>,
+    tuple_out: bool,
+    name: &str,
+) -> Result<Vec<Tensor>> {
+    let replica = res
+        .into_iter()
+        .next()
+        .ok_or_else(|| anyhow!("{name}: no replica output"))?;
+    let mut out = Vec::new();
+    for buf in replica {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{name}: to_literal: {e:?}"))?;
+        if tuple_out {
+            for el in lit.to_tuple().map_err(|e| anyhow!("{name}: to_tuple: {e:?}"))? {
+                out.push(from_literal(&el)?);
+            }
+        } else {
+            out.push(from_literal(&lit)?);
+        }
+    }
+    Ok(out)
+}
+
+/// Tensor → xla Literal.
+pub fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    let lit = match t.dtype() {
+        DType::F32 => {
+            let v = t.as_f32()?;
+            if dims.is_empty() {
+                xla::Literal::scalar(v[0])
+            } else {
+                xla::Literal::vec1(v)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape literal: {e:?}"))?
+            }
+        }
+        DType::I32 => {
+            let v = t.as_i32()?;
+            if dims.is_empty() {
+                xla::Literal::scalar(v[0])
+            } else {
+                xla::Literal::vec1(v)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape literal: {e:?}"))?
+            }
+        }
+    };
+    Ok(lit)
+}
+
+/// xla Literal → Tensor.
+pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            let v = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
+            Tensor::from_f32(v, &dims)
+        }
+        xla::ElementType::S32 => {
+            let v = lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))?;
+            Tensor::from_i32(v, &dims)
+        }
+        xla::ElementType::Pred => {
+            let conv = lit
+                .convert(xla::PrimitiveType::S32)
+                .map_err(|e| anyhow!("convert pred: {e:?}"))?;
+            let v = conv.to_vec::<i32>().map_err(|e| anyhow!("to_vec pred: {e:?}"))?;
+            Tensor::from_i32(v, &dims)
+        }
+        other => bail!("unsupported literal element type {other:?}"),
+    }
+}
+
+impl RtStats {
+    pub fn summary(&self) -> String {
+        format!(
+            "compiles={} ({:.2}s) cache_hits={} executions={} ({:.2}s, {:.3}ms avg)",
+            self.compiles,
+            self.compile_secs,
+            self.cache_hits,
+            self.executions,
+            self.execute_secs,
+            if self.executions > 0 { self.execute_secs * 1e3 / self.executions as f64 } else { 0.0 },
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The Backend implementation
+// ---------------------------------------------------------------------------
+
+/// The artifact-executing engine: a thin [`Backend`] shell around
+/// [`Runtime`].  Derefs to it so perf counters and raw artifact loading
+/// (`rt.load(..)`, `rt.stats`) stay reachable.
+pub struct Pjrt {
+    rt: Runtime,
+}
+
+impl Pjrt {
+    pub fn new(artifact_dir: &Path) -> Result<Pjrt> {
+        Ok(Pjrt { rt: Runtime::new(artifact_dir)? })
+    }
+}
+
+impl std::ops::Deref for Pjrt {
+    type Target = Runtime;
+
+    fn deref(&self) -> &Runtime {
+        &self.rt
+    }
+}
+
+/// Parameters that are *live* in a forward-only (q/qw) executable.
+///
+/// The ablation `flexround_no_s34` replaces s3/s4 with constant ones in the
+/// forward, so `jax.jit` pruned those slots out of the compiled signature —
+/// mirror that here (recon executables still take them: they round-trip
+/// through the Adam state outputs).
+fn live_params(method: &str, entries: &[PackEntry], params: &[Tensor]) -> Vec<Tensor> {
+    entries
+        .iter()
+        .zip(params)
+        .filter(|(e, _)| {
+            !(method == "flexround_no_s34"
+                && (e.name.ends_with(".s3") || e.name.ends_with(".s4")))
+        })
+        .map(|(_, p)| p.clone())
+        .collect()
+}
+
+fn q_scalars(symmetric: bool, q: &QView) -> Vec<Tensor> {
+    let (qmin_w, qmax_w) = qrange(q.bits_w, symmetric);
+    let mut v = vec![Tensor::scalar(qmin_w), Tensor::scalar(qmax_w)];
+    if q.mode == "wa" {
+        let (qmin_a, qmax_a) = qrange(q.abits, false);
+        v.push(Tensor::scalar(qmin_a));
+        v.push(Tensor::scalar(qmax_a));
+    }
+    v
+}
+
+impl Backend for Pjrt {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn summary(&self) -> String {
+        format!("platform={} {}", self.rt.platform(), self.rt.stats.borrow().summary())
+    }
+
+    fn unit_forward_fp(&self, cx: &UnitCtx, chunks: &[Tensor]) -> Result<Vec<Tensor>> {
+        let exe = self.rt.load(cx.unit.artifact("fp")?)?;
+        chunks
+            .iter()
+            .map(|c| {
+                Ok(exe
+                    .run(&self.rt, std::slice::from_ref(c), false)?
+                    .into_iter()
+                    .next()
+                    .unwrap())
+            })
+            .collect()
+    }
+
+    /// Input-liveness note: `jax.jit` prunes arguments that are dead in the
+    /// lowered graph, so weight-only ("w") executables do not take the
+    /// activation-quant scalars — the assembly below mirrors exactly what
+    /// the AOT build kept (PJRT rejects any arity mismatch loudly).
+    fn unit_forward_q(&self, cx: &UnitCtx, q: &QView, chunks: &[Tensor]) -> Result<Vec<Tensor>> {
+        let exe = self
+            .rt
+            .load(cx.unit.artifact(&format!("q.{}.{}", q.method, q.mode))?)?;
+        let scal = q_scalars(cx.model.symmetric, q);
+        let live = live_params(q.method, q.entries, q.params);
+        chunks
+            .iter()
+            .map(|c| {
+                let mut inputs = vec![c.clone()];
+                inputs.extend(scal.iter().cloned());
+                inputs.extend(live.iter().cloned());
+                Ok(exe.run(&self.rt, &inputs, false)?.into_iter().next().unwrap())
+            })
+            .collect()
+    }
+
+    fn reconstruct(&self, task: &ReconTask) -> Result<ReconOutcome> {
+        let cx = &task.cx;
+        let t0 = Instant::now();
+        let exe = self
+            .rt
+            .load(cx.unit.artifact(&format!("recon.{}.{}", task.method, task.mode))?)?;
+        let (qmin_w, qmax_w) = qrange(task.bits_w, cx.model.symmetric);
+        let (qmin_a, qmax_a) = qrange(task.abits, false);
+        let wa = task.mode == "wa";
+        let has_beta = task.method == "adaround";
+        let mut params = task.params.clone();
+        // Adam state starts at zero
+        let mut m: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+        let mut v = m.clone();
+        let x_all = Tensor::concat_rows(&task.x)?;
+        let y_all = Tensor::concat_rows(&task.y)?;
+        let n = x_all.shape()[0];
+        let mut rng = task.rng.clone();
+        let mut first_loss = f64::NAN;
+        let mut final_loss = f64::NAN;
+
+        for t in 1..=task.iters {
+            let idx = rng.sample_indices(n, task.batch);
+            let xb = x_all.gather_rows(&idx)?;
+            let yb = y_all.gather_rows(&idx)?;
+            let beta = beta_schedule(t, task.iters);
+            let seed = (rng.next_u32() & 0x7FFF_FFFF) as i32;
+            // same liveness rule as unit_forward_q: jit pruned the scalars
+            // that are dead in this (method, mode) — qmin_a/qmax_a/
+            // drop_p/seed in "w" mode, beta for non-AdaRound methods.
+            let mut inputs = vec![
+                xb,
+                yb,
+                Tensor::scalar(qmin_w),
+                Tensor::scalar(qmax_w),
+            ];
+            if wa {
+                inputs.push(Tensor::scalar(qmin_a));
+                inputs.push(Tensor::scalar(qmax_a));
+                inputs.push(Tensor::scalar(task.drop_p as f32));
+            }
+            if has_beta {
+                inputs.push(Tensor::scalar(beta as f32));
+            }
+            inputs.push(Tensor::scalar(task.lr as f32));
+            inputs.push(Tensor::scalar(t as f32));
+            if wa {
+                inputs.push(Tensor::scalar_i32(seed));
+            }
+            inputs.extend(params.iter().cloned());
+            inputs.extend(m.iter().cloned());
+            inputs.extend(v.iter().cloned());
+            let out = exe.run(&self.rt, &inputs, true)?;
+            let np = params.len();
+            if out.len() != 1 + 3 * np {
+                bail!(
+                    "recon {}: expected {} outputs, got {}",
+                    cx.unit.name,
+                    1 + 3 * np,
+                    out.len()
+                );
+            }
+            let loss = out[0].item()? as f64;
+            if t == 1 {
+                first_loss = loss;
+            }
+            final_loss = loss;
+            let mut it = out.into_iter();
+            let _ = it.next();
+            params = it.by_ref().take(np).collect();
+            m = it.by_ref().take(np).collect();
+            v = it.by_ref().take(np).collect();
+            if task.verbose && (t == 1 || t % 100 == 0 || t == task.iters) {
+                eprintln!(
+                    "    [{}/{}] iter {t}/{} loss {loss:.6}",
+                    cx.model.name, cx.unit.name, task.iters
+                );
+            }
+        }
+        Ok(ReconOutcome {
+            params,
+            first_loss,
+            final_loss,
+            steps: task.iters as u64,
+            seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    fn export_qw(&self, cx: &UnitCtx, q: &QView) -> Result<Vec<(Tensor, Tensor)>> {
+        let exe = self.rt.load(cx.unit.artifact(&format!("qw.{}", q.method))?)?;
+        let (qmin_w, qmax_w) = qrange(q.bits_w, cx.model.symmetric);
+        // qw artifacts were lowered against the "w" pack (no act entries);
+        // derive its length from the state's own pack so wa-only models
+        // (whose manifest records no "w" pack) still export correctly —
+        // the weight entries are a strict prefix of the wa pack.
+        let n_w = q.entries.iter().filter(|e| !e.name.starts_with("act")).count();
+        let mut inputs = vec![Tensor::scalar(qmin_w), Tensor::scalar(qmax_w)];
+        inputs.extend(live_params(q.method, &q.entries[..n_w], &q.params[..n_w]));
+        let out = exe.run(&self.rt, &inputs, true)?;
+        if out.len() != 2 * cx.unit.layers.len() {
+            bail!(
+                "qw {}: expected {} outputs, got {}",
+                cx.unit.name,
+                2 * cx.unit.layers.len(),
+                out.len()
+            );
+        }
+        let mut res = Vec::new();
+        let mut it = out.into_iter();
+        while let (Some(w), Some(c)) = (it.next(), it.next()) {
+            res.push((w, c));
+        }
+        Ok(res)
+    }
+
+    fn as_pjrt(&self) -> Option<&Runtime> {
+        Some(&self.rt)
+    }
+}

@@ -11,13 +11,13 @@ use crate::coordinator::{Plan, Session};
 use crate::eval;
 use crate::manifest::Manifest;
 use crate::report::{fmt_metric, Reporter, Table};
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::Result;
 use anyhow::anyhow;
 use std::collections::BTreeMap;
 
-/// Run one sweep config; returns the table for further use in benches.
-pub fn run_sweep(cfg: &Config, man: &Manifest, rt: &Runtime, rep: &Reporter) -> Result<()> {
+/// Run one sweep config on the selected engine; emits one report table.
+pub fn run_sweep(cfg: &Config, man: &Manifest, rt: &dyn Backend, rep: &Reporter) -> Result<()> {
     let id = cfg.str("sweep.id", "sweep");
     let title = cfg.str("sweep.title", &id);
     let models = cfg
@@ -37,6 +37,7 @@ pub fn run_sweep(cfg: &Config, man: &Manifest, rt: &Runtime, rep: &Reporter) -> 
     let seed = cfg.usize("sweep.seed", 7) as u64;
     let samples = cfg.list_usize("sweep.samples"); // Figure 7 axis
     let verbose = cfg.boolean("sweep.verbose", false);
+    let parallel_units = cfg.boolean("sweep.parallel_units", false);
 
     let mut columns: Vec<&str> = vec!["Method", "# Bits (W/A)"];
     if samples.is_some() {
@@ -93,6 +94,7 @@ pub fn run_sweep(cfg: &Config, man: &Manifest, rt: &Runtime, rep: &Reporter) -> 
                         plan.calib_n = if n > 0 { n } else { calib_n };
                         plan.seed = seed;
                         plan.verbose = verbose;
+                        plan.parallel_units = parallel_units;
                         let r = sess.quantize(&plan)?;
                         let met = eval_for(sess, Some(&r))?;
                         if verbose {
@@ -127,7 +129,9 @@ fn eval_for(sess: &Session, r: Option<&crate::coordinator::QuantResult>)
             Some(r) => eval::eval_cnn(sess, r)?,
             None => eval::eval_cnn_fp(sess)?,
         }),
+        #[cfg(feature = "pjrt")]
         "encoder" => m.extend(eval::eval_encoder(sess, r)?),
+        #[cfg(feature = "pjrt")]
         "decoder" => {
             if sess.model.name == "dec_lora" {
                 m.insert("bleu_seen".into(), eval::eval_d2t_bleu(sess, r, "seen")?);
@@ -141,7 +145,7 @@ fn eval_for(sess: &Session, r: Option<&crate::coordinator::QuantResult>)
                 }
             }
         }
-        k => anyhow::bail!("unknown kind {k}"),
+        k => anyhow::bail!("cannot evaluate model kind {k:?} with this build/backend"),
     }
     Ok(m)
 }

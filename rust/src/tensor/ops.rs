@@ -76,6 +76,115 @@ impl Tensor {
             .collect())
     }
 
+    /// `A · Bᵀ` for `A: (m, k)`, `B: (r, k)` → `(m, r)`.  The native
+    /// reconstruction hot path (`Ŷ = X̃ · Ŵᵀ`) — both operands are read
+    /// row-contiguously, so the naive triple loop is cache-friendly.
+    pub fn matmul_nt(&self, b: &Tensor) -> Result<Tensor> {
+        if self.ndim() != 2 || b.ndim() != 2 || self.shape()[1] != b.shape()[1] {
+            bail!("matmul_nt shape mismatch {:?} vs {:?}", self.shape(), b.shape());
+        }
+        let (m, k) = (self.shape()[0], self.shape()[1]);
+        let r = b.shape()[0];
+        let av = self.as_f32()?;
+        let bv = b.as_f32()?;
+        let mut out = vec![0.0f32; m * r];
+        for i in 0..m {
+            let arow = &av[i * k..(i + 1) * k];
+            for j in 0..r {
+                let brow = &bv[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for t in 0..k {
+                    acc += arow[t] * brow[t];
+                }
+                out[i * r + j] = acc;
+            }
+        }
+        Tensor::from_f32(out, &[m, r])
+    }
+
+    /// `A · B` for `A: (m, k)`, `B: (k, c)` → `(m, c)`  (activation
+    /// cotangent: `∂L/∂X = G · Ŵ`).  Inner loops run saxpy-style over
+    /// contiguous rows of B.
+    pub fn matmul_nn(&self, b: &Tensor) -> Result<Tensor> {
+        if self.ndim() != 2 || b.ndim() != 2 || self.shape()[1] != b.shape()[0] {
+            bail!("matmul_nn shape mismatch {:?} vs {:?}", self.shape(), b.shape());
+        }
+        let (m, k) = (self.shape()[0], self.shape()[1]);
+        let c = b.shape()[1];
+        let av = self.as_f32()?;
+        let bv = b.as_f32()?;
+        let mut out = vec![0.0f32; m * c];
+        for i in 0..m {
+            let orow = &mut out[i * c..(i + 1) * c];
+            for t in 0..k {
+                let a = av[i * k + t];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &bv[t * c..(t + 1) * c];
+                for j in 0..c {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Tensor::from_f32(out, &[m, c])
+    }
+
+    /// `Aᵀ · B` for `A: (n, m)`, `B: (n, c)` → `(m, c)`  (weight cotangent:
+    /// `∂L/∂Ŵ = Gᵀ · X`).
+    pub fn matmul_tn(&self, b: &Tensor) -> Result<Tensor> {
+        if self.ndim() != 2 || b.ndim() != 2 || self.shape()[0] != b.shape()[0] {
+            bail!("matmul_tn shape mismatch {:?} vs {:?}", self.shape(), b.shape());
+        }
+        let (n, m) = (self.shape()[0], self.shape()[1]);
+        let c = b.shape()[1];
+        let av = self.as_f32()?;
+        let bv = b.as_f32()?;
+        let mut out = vec![0.0f32; m * c];
+        for t in 0..n {
+            let arow = &av[t * m..(t + 1) * m];
+            let brow = &bv[t * c..(t + 1) * c];
+            for i in 0..m {
+                let a = arow[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[i * c..(i + 1) * c];
+                for j in 0..c {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Tensor::from_f32(out, &[m, c])
+    }
+
+    /// Row sums of a 2-D tensor → `(r, 1)`.
+    pub fn row_sum(&self) -> Result<Tensor> {
+        if self.ndim() != 2 {
+            bail!("row_sum on {:?}", self.shape());
+        }
+        let (r, c) = (self.shape()[0], self.shape()[1]);
+        let v = self.as_f32()?;
+        let out: Vec<f32> = (0..r).map(|i| v[i * c..(i + 1) * c].iter().sum()).collect();
+        Tensor::from_f32(out, &[r, 1])
+    }
+
+    /// Column sums of a 2-D tensor → `(1, c)`.
+    pub fn col_sum(&self) -> Result<Tensor> {
+        if self.ndim() != 2 {
+            bail!("col_sum on {:?}", self.shape());
+        }
+        let (r, c) = (self.shape()[0], self.shape()[1]);
+        let v = self.as_f32()?;
+        let mut out = vec![0.0f32; c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j] += v[i * c + j];
+            }
+        }
+        Tensor::from_f32(out, &[1, c])
+    }
+
     /// Top-k indices per row (descending) — for top-5 accuracy.
     pub fn topk_rows(&self, k: usize) -> Result<Vec<Vec<usize>>> {
         if self.ndim() != 2 {
@@ -195,6 +304,46 @@ mod tests {
         let tk = t.topk_rows(2).unwrap();
         assert_eq!(tk[0], vec![1, 2]);
         assert_eq!(tk[1], vec![0, 1]);
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        // A: (2,3), B: (4,3) — NT against hand-computed values.
+        let a = Tensor::from_f32(vec![1., 2., 3., 4., 5., 6.], &[2, 3]).unwrap();
+        let b = Tensor::from_f32(
+            vec![1., 0., 0., 0., 1., 0., 0., 0., 1., 1., 1., 1.],
+            &[4, 3],
+        )
+        .unwrap();
+        let nt = a.matmul_nt(&b).unwrap();
+        assert_eq!(nt.shape(), &[2, 4]);
+        assert_eq!(nt.as_f32().unwrap(), &[1., 2., 3., 6., 4., 5., 6., 15.]);
+        // NN with B transposed manually must match NT.
+        let bt = Tensor::from_f32(
+            vec![1., 0., 0., 1., 0., 1., 0., 1., 0., 0., 1., 1.],
+            &[3, 4],
+        )
+        .unwrap();
+        let nn = a.matmul_nn(&bt).unwrap();
+        assert_eq!(nn.as_f32().unwrap(), nt.as_f32().unwrap());
+        // TN: Aᵀ·A is symmetric with known diagonal.
+        let tn = a.matmul_tn(&a).unwrap();
+        assert_eq!(tn.shape(), &[3, 3]);
+        let v = tn.as_f32().unwrap();
+        assert_eq!(v[0], 17.0); // 1² + 4²
+        assert_eq!(v[4], 29.0); // 2² + 5²
+        assert_eq!(v[1], v[3]);
+        assert!(a.matmul_nt(&bt).is_err());
+        assert!(a.matmul_nn(&b).is_err());
+    }
+
+    #[test]
+    fn row_col_sums() {
+        let t = Tensor::from_f32(vec![1., 2., 3., 4., 5., 6.], &[2, 3]).unwrap();
+        assert_eq!(t.row_sum().unwrap().as_f32().unwrap(), &[6.0, 15.0]);
+        assert_eq!(t.row_sum().unwrap().shape(), &[2, 1]);
+        assert_eq!(t.col_sum().unwrap().as_f32().unwrap(), &[5.0, 7.0, 9.0]);
+        assert_eq!(t.col_sum().unwrap().shape(), &[1, 3]);
     }
 
     #[test]

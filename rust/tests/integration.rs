@@ -1,16 +1,18 @@
 //! Integration tests over the real AOT artifacts (runtime + coordinator +
 //! eval).  Each test self-skips when `make artifacts` has not produced the
-//! model it needs, so `cargo test` is green at any build stage; CI/full runs
-//! exercise everything.
+//! model it needs (or when the vendored `xla` stub cannot create a PJRT
+//! client), so `cargo test` is green at any build stage; CI/full runs with
+//! real bindings exercise everything.
+#![cfg(feature = "pjrt")]
 
 use flexround::coordinator::{Plan, Session};
 use flexround::manifest::Manifest;
-use flexround::runtime::Runtime;
+use flexround::runtime::Pjrt;
 use flexround::tensor::Tensor;
 use flexround::{eval, quant};
 use std::path::Path;
 
-fn load(model: &str) -> Option<(Manifest, Runtime)> {
+fn load(model: &str) -> Option<(Manifest, Pjrt)> {
     let art = Path::new("artifacts");
     let man = Manifest::load(art).ok()?;
     if !man.models.contains_key(model) {
@@ -27,7 +29,7 @@ fn load(model: &str) -> Option<(Manifest, Runtime)> {
             }
         }
     }
-    let rt = Runtime::new(art).ok()?;
+    let rt = Pjrt::new(art).ok()?;
     Some((man, rt))
 }
 
@@ -242,7 +244,7 @@ fn calib_n_rounds_to_batch_multiple() {
 fn missing_artifact_is_clean_error() {
     let art = Path::new("artifacts");
     let Ok(_man) = Manifest::load(art) else { return };
-    let rt = Runtime::new(art).unwrap();
+    let Ok(rt) = Pjrt::new(art) else { return }; // stub xla: no client
     let err = rt.load("definitely_missing.hlo.txt");
     assert!(err.is_err());
     let msg = format!("{:#}", err.err().unwrap());

@@ -1,0 +1,345 @@
+//! Native-backend integration tests — run everywhere, no artifacts and no
+//! PJRT needed (the acceptance gate for the artifact-free scenario):
+//!
+//! * golden-fixture parity against the Python reference kernel math
+//!   (`python/tests/gen_flexround_golden.py` mirrors `ref.py`; tolerance
+//!   1e-5 on Ŵ),
+//! * a full `Session::quantize` run over a synthetic manifest on the
+//!   [`Native`] backend: MSE reduction vs the RTN init, determinism,
+//!   grid-valid exports, and sequential-vs-parallel-unit agreement.
+
+use flexround::coordinator::{Plan, Session};
+use flexround::manifest::{LayerInfo, Manifest, ModelInfo, PackEntry, UnitInfo};
+use flexround::recon;
+use flexround::runtime::Native;
+use flexround::ser::json::{self, Json};
+use flexround::tensor::{minmax_scale, Tensor};
+use flexround::util::rng::Pcg32;
+use std::collections::BTreeMap;
+
+// ---------------------------------------------------------------------------
+// Golden parity vs the Python reference kernel
+// ---------------------------------------------------------------------------
+
+fn f32s(v: &Json) -> Vec<f32> {
+    v.arr()
+        .expect("array")
+        .iter()
+        .map(|x| x.num().expect("number") as f32)
+        .collect()
+}
+
+#[test]
+fn golden_parity_with_python_reference() {
+    let text = std::fs::read_to_string("tests/fixtures/flexround_golden.json")
+        .expect("golden fixture (regenerate with python3 python/tests/gen_flexround_golden.py)");
+    let doc = json::parse(&text).expect("fixture json");
+    let cases = doc.get("cases").unwrap().arr().unwrap();
+    assert!(!cases.is_empty());
+    for case in cases {
+        let name = case.get("name").unwrap().str().unwrap();
+        let r = case.get("rows").unwrap().usize().unwrap();
+        let c = case.get("cols").unwrap().usize().unwrap();
+        let b = case.get("batch").unwrap().usize().unwrap();
+        let qmin = case.get("qmin").unwrap().num().unwrap() as f32;
+        let qmax = case.get("qmax").unwrap().num().unwrap() as f32;
+        let w = Tensor::from_f32(f32s(case.get("w").unwrap()), &[r, c]).unwrap();
+        let s1 = Tensor::from_f32(f32s(case.get("s1").unwrap()), &[r, 1]).unwrap();
+        let s2 = Tensor::from_f32(f32s(case.get("s2").unwrap()), &[r, c]).unwrap();
+        let s3 = Tensor::from_f32(f32s(case.get("s3").unwrap()), &[r, 1]).unwrap();
+        let s4 = Tensor::from_f32(f32s(case.get("s4").unwrap()), &[1, c]).unwrap();
+        let zp = Tensor::from_f32(f32s(case.get("zp").unwrap()), &[r, 1]).unwrap();
+
+        let what = recon::fq_forward(&w, &s1, Some(&s2), Some(&s3), Some(&s4), &zp, qmin, qmax)
+            .unwrap();
+        let codes = recon::fq_codes(&w, &s1, Some(&s2), Some(&s3), Some(&s4), &zp, qmin, qmax)
+            .unwrap();
+        let want_what = f32s(case.get("what").unwrap());
+        let want_codes = f32s(case.get("codes").unwrap());
+        for (i, (got, want)) in what.as_f32().unwrap().iter().zip(&want_what).enumerate() {
+            assert!(
+                (got - want).abs() <= 1e-5,
+                "{name}: Ŵ[{i}] = {got} vs reference {want}"
+            );
+        }
+        for (i, (got, want)) in codes.as_f32().unwrap().iter().zip(&want_codes).enumerate() {
+            assert!(
+                (got - want).abs() <= 1e-5,
+                "{name}: code[{i}] = {got} vs reference {want}"
+            );
+        }
+
+        // fused path: Ŷ = X · Ŵᵀ
+        let x = Tensor::from_f32(f32s(case.get("x").unwrap()), &[b, c]).unwrap();
+        let y = x.matmul_nt(&what).unwrap();
+        let want_y = f32s(case.get("y").unwrap());
+        for (i, (got, want)) in y.as_f32().unwrap().iter().zip(&want_y).enumerate() {
+            assert!(
+                (got - want).abs() <= 1e-4 * want.abs().max(1.0),
+                "{name}: Ŷ[{i}] = {got} vs reference {want}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic manifest + session over the Native backend
+// ---------------------------------------------------------------------------
+
+const BITS: u32 = 4;
+
+fn entry(name: &str, shape: &[usize], learnable: bool) -> PackEntry {
+    PackEntry { name: name.to_string(), shape: shape.to_vec(), learnable }
+}
+
+fn linear_unit(name: &str, layer: &str, rows: usize, cols: usize) -> UnitInfo {
+    let mut packs = BTreeMap::new();
+    packs.insert(
+        "flexround.w".to_string(),
+        vec![
+            entry(&format!("{layer}.s1"), &[rows, 1], true),
+            entry(&format!("{layer}.s2"), &[rows, cols], true),
+            entry(&format!("{layer}.s3"), &[rows, 1], true),
+            entry(&format!("{layer}.s4"), &[1, cols], true),
+            entry(&format!("{layer}.zp"), &[rows, 1], false),
+        ],
+    );
+    packs.insert(
+        "rtn.w".to_string(),
+        vec![
+            entry(&format!("{layer}.s1"), &[rows, 1], false),
+            entry(&format!("{layer}.zp"), &[rows, 1], false),
+        ],
+    );
+    UnitInfo {
+        name: name.to_string(),
+        kind: "linear".to_string(),
+        bits_override: None,
+        in_shape: vec![cols],
+        out_shape: vec![rows],
+        act_sites: 0,
+        layers: vec![LayerInfo {
+            name: layer.to_string(),
+            kind: "linear".to_string(),
+            rows,
+            cols,
+            conv_shape: None,
+            stride: 1,
+        }],
+        artifacts: BTreeMap::new(),
+        packs,
+    }
+}
+
+struct Fixture {
+    man: Manifest,
+    weights: BTreeMap<String, Tensor>,
+    inits: BTreeMap<String, Tensor>,
+    data: BTreeMap<String, Tensor>,
+}
+
+/// Two chained linear units (12 → 8 → 6) with FXT-style maps, FlexRound +
+/// RTN packs, and per-row min/max inits — everything `Session` needs, built
+/// in memory (no files, no artifacts).
+fn synthetic_fixture() -> Fixture {
+    let mut rng = Pcg32::seeded(1234);
+    let dims = [(8usize, 12usize), (6usize, 8usize)];
+    let mut weights = BTreeMap::new();
+    let mut inits = BTreeMap::new();
+    let mut units = Vec::new();
+    for (ui, &(rows, cols)) in dims.iter().enumerate() {
+        let uname = format!("u{ui}");
+        let wv: Vec<f32> = (0..rows * cols).map(|_| rng.next_normal() * 0.5).collect();
+        let w = Tensor::from_f32(wv.clone(), &[rows, cols]).unwrap();
+        weights.insert(format!("w/{uname}/fc"), w);
+        let s1: Vec<f32> = (0..rows)
+            .map(|r| minmax_scale(&wv[r * cols..(r + 1) * cols], BITS, true).0)
+            .collect();
+        for method in ["flexround", "rtn"] {
+            let pfx = format!("init/{uname}/{method}/b{BITS}");
+            inits.insert(
+                format!("{pfx}/fc.s1"),
+                Tensor::from_f32(s1.clone(), &[rows, 1]).unwrap(),
+            );
+            inits.insert(format!("{pfx}/fc.zp"), Tensor::zeros(&[rows, 1]));
+        }
+        let pfx = format!("init/{uname}/flexround/b{BITS}");
+        inits.insert(format!("{pfx}/fc.s2"), Tensor::full(&[rows, cols], 1.0));
+        inits.insert(format!("{pfx}/fc.s3"), Tensor::full(&[rows, 1], 1.0));
+        inits.insert(format!("{pfx}/fc.s4"), Tensor::full(&[1, cols], 1.0));
+        units.push(linear_unit(&uname, "fc", rows, cols));
+    }
+
+    let calib_n = 64;
+    let calib = Tensor::from_f32(
+        (0..calib_n * dims[0].1).map(|_| rng.next_normal()).collect(),
+        &[calib_n, dims[0].1],
+    )
+    .unwrap();
+    let mut data = BTreeMap::new();
+    let mut datasets = BTreeMap::new();
+    datasets.insert("calib_x".to_string(), vec![calib_n, dims[0].1]);
+    data.insert("calib_x".to_string(), calib);
+
+    let mut lr_default = BTreeMap::new();
+    lr_default.insert("flexround".to_string(), 4e-3);
+    let model = ModelInfo {
+        name: "m".to_string(),
+        kind: "cnn".to_string(),
+        task: "synthetic".to_string(),
+        fp_metric: BTreeMap::new(),
+        symmetric: true,
+        per_channel: true,
+        bits_w: vec![BITS],
+        abits: vec![8],
+        methods_w: vec!["rtn".to_string(), "flexround".to_string()],
+        methods_wa: vec![],
+        calib_n,
+        calib_batch: 16,
+        seq: None,
+        units,
+        embed_artifact: None,
+        head_artifacts: BTreeMap::new(),
+        weights_file: "unused.fxt".to_string(),
+        init_file: "unused.fxt".to_string(),
+        data_file: "unused.fxt".to_string(),
+        datasets,
+        iters_default: 0, // plan.iters == 0 → no learning (RTN-at-init runs)
+        lr_default,
+        drop_p_default: 0.0,
+    };
+    let mut models = BTreeMap::new();
+    models.insert("m".to_string(), model);
+    let man = Manifest {
+        dir: std::env::temp_dir(),
+        calib_batch: 16,
+        models,
+    };
+    Fixture { man, weights, inits, data }
+}
+
+fn open<'a>(fx: &'a Fixture, backend: &'a Native) -> Session<'a> {
+    Session {
+        backend,
+        man: &fx.man,
+        model: fx.man.model("m").unwrap(),
+        weights: fx.weights.clone(),
+        inits: fx.inits.clone(),
+        data: fx.data.clone(),
+    }
+}
+
+fn full_batch_mse(sess: &Session, r: &flexround::coordinator::QuantResult) -> f64 {
+    let calib = sess.dataset("calib_x").unwrap();
+    let q = sess.forward_q(r, calib).unwrap();
+    let fp = sess.forward_fp(calib).unwrap();
+    let mut acc = 0.0f64;
+    let mut n = 0usize;
+    for (a, b) in q.iter().zip(&fp) {
+        acc += a.mse(b).unwrap() as f64 * a.len() as f64;
+        n += a.len();
+    }
+    acc / n as f64
+}
+
+#[test]
+fn native_session_reduces_mse_vs_rtn_init() {
+    let fx = synthetic_fixture();
+    let backend = Native::with_workers(2);
+    let sess = open(&fx, &backend);
+
+    // RTN-at-init baseline: zero learning iterations (iters_default = 0).
+    let base_plan = Plan::new("m", "flexround");
+    let base = sess.quantize(&base_plan).unwrap();
+    let mse_rtn = full_batch_mse(&sess, &base);
+
+    let mut plan = Plan::new("m", "flexround");
+    plan.iters = 150;
+    let r = sess.quantize(&plan).unwrap();
+    for u in &r.units {
+        assert!(u.first_loss.is_finite() && u.final_loss.is_finite(), "unit {}", u.unit);
+    }
+    assert_eq!(r.recon_steps, 300, "150 iters × 2 units");
+    let mse_learned = full_batch_mse(&sess, &r);
+    assert!(
+        mse_learned < mse_rtn,
+        "native reconstruction should beat the RTN init: {mse_rtn:.6} → {mse_learned:.6}"
+    );
+}
+
+#[test]
+fn native_session_is_deterministic() {
+    let fx = synthetic_fixture();
+    let backend = Native::with_workers(2);
+    let sess = open(&fx, &backend);
+    let mut plan = Plan::new("m", "flexround");
+    plan.iters = 20;
+    let a = sess.quantize(&plan).unwrap();
+    let b = sess.quantize(&plan).unwrap();
+    for (ua, ub) in a.units.iter().zip(&b.units) {
+        assert_eq!(ua.final_loss, ub.final_loss, "unit {} not deterministic", ua.unit);
+        for (pa, pb) in ua.params.iter().zip(&ub.params) {
+            assert_eq!(pa.as_f32().unwrap(), pb.as_f32().unwrap());
+        }
+    }
+}
+
+#[test]
+fn native_export_codes_lie_on_grid() {
+    let fx = synthetic_fixture();
+    let backend = Native::new();
+    let sess = open(&fx, &backend);
+    let mut plan = Plan::new("m", "flexround");
+    plan.iters = 30;
+    let r = sess.quantize(&plan).unwrap();
+    for (unit, st) in sess.model.units.iter().zip(&r.units) {
+        for (what, codes) in sess.export_qw(unit, st).unwrap() {
+            assert_eq!(what.len(), codes.len());
+            for &x in codes.as_f32().unwrap() {
+                assert!((-8.0..=7.0).contains(&x), "code {x} outside 4-bit grid");
+                assert!((x - x.round()).abs() < 1e-4, "code {x} not integral");
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_units_agree_with_sequential_on_first_unit() {
+    // The first unit sees identical inputs (X̃ = X) under both schedules and
+    // the same forked rng stream, so its learned parameters must match
+    // bit-for-bit; later units differ (FP vs quantized inputs) by design.
+    let fx = synthetic_fixture();
+    let backend = Native::with_workers(4);
+    let sess = open(&fx, &backend);
+    let mut plan = Plan::new("m", "flexround");
+    plan.iters = 25;
+    let seq = sess.quantize(&plan).unwrap();
+    plan.parallel_units = true;
+    let par = sess.quantize(&plan).unwrap();
+    assert_eq!(seq.units.len(), par.units.len());
+    assert_eq!(seq.units[0].final_loss, par.units[0].final_loss);
+    for (a, b) in seq.units[0].params.iter().zip(&par.units[0].params) {
+        assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+    }
+    for u in &par.units {
+        assert!(u.final_loss.is_finite());
+    }
+}
+
+#[test]
+fn rtn_runs_without_learning() {
+    let fx = synthetic_fixture();
+    let backend = Native::new();
+    let sess = open(&fx, &backend);
+    let plan = Plan::new("m", "rtn");
+    let r = sess.quantize(&plan).unwrap();
+    assert_eq!(r.recon_steps, 0);
+    for u in &r.units {
+        assert!(u.rtn_like());
+        assert!(u.first_loss.is_nan(), "rtn has no reconstruction loss");
+    }
+    // the quantized forward still runs end to end
+    let out = sess.forward_q(&r, sess.dataset("calib_x").unwrap()).unwrap();
+    assert_eq!(out.len(), 4); // 64 rows / batch 16
+    assert_eq!(out[0].shape(), &[16, 6]);
+}

@@ -1,0 +1,110 @@
+//! Vendored, dependency-free subset of the `anyhow` API.
+//!
+//! The build image has no crates.io access, so the substrate crates are
+//! vendored in-tree (see the workspace `Cargo.toml`).  This shim provides
+//! exactly the surface the `flexround` crate uses: [`Error`], [`Result`],
+//! and the [`anyhow!`] / [`bail!`] / [`ensure!`] macros.  Any type
+//! implementing `std::error::Error` converts into [`Error`] via `?`.
+
+use std::fmt;
+
+/// A string-backed error value (the shim keeps no backtrace or cause chain).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend context, mirroring `anyhow::Error::context` semantics.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that is
+// what makes the blanket conversion below coherent (same trick as upstream).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>` — the crate-wide fallible return type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Format-string error constructor.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Assert-or-error.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/at/all")?;
+        Ok(())
+    }
+
+    #[test]
+    fn conversions_and_macros() {
+        let e = anyhow!("bad {} ({})", "thing", 3);
+        assert_eq!(e.to_string(), "bad thing (3)");
+        assert_eq!(format!("{e:#}"), "bad thing (3)");
+        assert!(io_fail().is_err());
+        let c = anyhow!("inner").context("outer");
+        assert_eq!(c.to_string(), "outer: inner");
+    }
+
+    fn bails(x: i32) -> Result<i32> {
+        ensure!(x >= 0, "negative {x}");
+        if x == 0 {
+            bail!("zero");
+        }
+        Ok(x)
+    }
+
+    #[test]
+    fn bail_ensure() {
+        assert!(bails(-1).is_err());
+        assert!(bails(0).is_err());
+        assert_eq!(bails(2).unwrap(), 2);
+    }
+}
