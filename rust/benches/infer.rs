@@ -1,0 +1,155 @@
+//! `cargo bench --bench infer` — perf harness for the quantized inference
+//! engine (DESIGN.md §Inference-and-Serving):
+//!
+//! * fused dequant-GEMM vs the dequantize-then-matmul baseline (and the
+//!   scalar reference kernel) on a 1024×1024 unit at W4/W8, micro-batch
+//!   sizes 1 and 8;
+//! * micro-batched vs unbatched serve throughput on a 2-unit 512×512 model.
+//!
+//! Emits machine-readable results to `BENCH_infer.json` at the repo root
+//! (the infer bench trajectory), alongside the human-readable stdout table.
+//!
+//! Environment knobs:
+//!   FLEXROUND_BENCH_MS       per-measurement budget in ms (default 800)
+//!   FLEXROUND_BENCH_WORKERS  worker threads for the fused kernel (default all)
+
+use flexround::infer::{drive, kernels, synthetic_model, BatchPolicy, Engine, PackedMatrix};
+use flexround::ser::json::{self, Json};
+use flexround::tensor::Tensor;
+use flexround::util::pool;
+use flexround::util::rng::Pcg32;
+use flexround::util::stats::{bench, BenchResult};
+use std::time::Duration;
+
+const GEMM_DIM: usize = 1024;
+
+fn gemm_json(r: &BenchResult, bits: u32, batch: usize) -> Json {
+    Json::object(vec![
+        ("name", Json::from_str_val(&r.name)),
+        ("bits", Json::from_f64(bits as f64)),
+        ("batch", Json::from_f64(batch as f64)),
+        ("rows", Json::from_f64(GEMM_DIM as f64)),
+        ("cols", Json::from_f64(GEMM_DIM as f64)),
+        ("iters", Json::from_f64(r.iters as f64)),
+        ("mean_ms", Json::from_f64(r.mean * 1e3)),
+        ("p50_ms", Json::from_f64(r.p50 * 1e3)),
+        ("p95_ms", Json::from_f64(r.p95 * 1e3)),
+        ("min_ms", Json::from_f64(r.min * 1e3)),
+    ])
+}
+
+fn bench_matrix(bits: u32, seed: u64) -> PackedMatrix {
+    let model = synthetic_model(1, GEMM_DIM, bits, seed).expect("synthetic model");
+    model.units[0].layers[0].mat.clone()
+}
+
+fn main() {
+    let budget = Duration::from_millis(
+        std::env::var("FLEXROUND_BENCH_MS").ok().and_then(|s| s.parse().ok()).unwrap_or(800),
+    );
+    let workers: usize = std::env::var("FLEXROUND_BENCH_WORKERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(pool::default_workers);
+
+    let mut gemm_rows: Vec<Json> = Vec::new();
+    let mut speedups: Vec<(String, Json)> = Vec::new();
+
+    println!("== fused dequant-GEMM vs dequantize-then-matmul ({GEMM_DIM}×{GEMM_DIM}, workers={workers}) ==");
+    let mut rng = Pcg32::seeded(7);
+    for bits in [4u32, 8] {
+        let m = bench_matrix(bits, 7);
+        for batch in [1usize, 8] {
+            let x = Tensor::from_f32(
+                (0..batch * GEMM_DIM).map(|_| rng.next_normal()).collect(),
+                &[batch, GEMM_DIM],
+            )
+            .expect("activations");
+            let fused = bench(
+                &format!("fused_w{bits}_b{batch}"),
+                budget,
+                10_000,
+                || {
+                    let _ = kernels::gemm_fused(&x, &m, workers).expect("fused gemm");
+                },
+            );
+            println!("{}", fused.report());
+            let dequant = bench(
+                &format!("dequant_matmul_w{bits}_b{batch}"),
+                budget,
+                10_000,
+                || {
+                    let _ = kernels::dequant_matmul(&x, &m).expect("dequant gemm");
+                },
+            );
+            println!("{}", dequant.report());
+            let s = dequant.p50 / fused.p50.max(1e-12);
+            println!("  → fused is {s:.2}× the dequantize-then-matmul baseline");
+            speedups.push((
+                format!("w{bits}_b{batch}_{GEMM_DIM}x{GEMM_DIM}"),
+                Json::from_f64(s),
+            ));
+            gemm_rows.push(gemm_json(&fused, bits, batch));
+            gemm_rows.push(gemm_json(&dequant, bits, batch));
+        }
+    }
+
+    // ---- serve throughput: micro-batched vs unbatched ----
+    let serve_units = 2usize;
+    let serve_width = 512usize;
+    let requests = 1024usize;
+    let clients = 8usize;
+    println!("== serve throughput ({serve_units}× {serve_width}×{serve_width} W4, {requests} requests, {clients} clients) ==");
+    let mut rng = Pcg32::seeded(11);
+    let rows: Vec<Vec<f32>> = (0..requests)
+        .map(|_| (0..serve_width).map(|_| rng.next_normal()).collect())
+        .collect();
+    let mk_engine = || {
+        Engine::new(
+            synthetic_model(serve_units, serve_width, 4, 11).expect("serve model"),
+            workers,
+        )
+    };
+    let batched_policy = BatchPolicy { max_batch: 32, deadline: Duration::from_millis(1) };
+    let (b_secs, b_stats) =
+        drive(mk_engine(), batched_policy, rows.clone(), clients).expect("batched drive");
+    let unbatched_policy = BatchPolicy { max_batch: 1, deadline: Duration::ZERO };
+    let (u_secs, u_stats) =
+        drive(mk_engine(), unbatched_policy, rows, clients).expect("unbatched drive");
+    let b_rps = b_stats.requests as f64 / b_secs.max(1e-9);
+    let u_rps = u_stats.requests as f64 / u_secs.max(1e-9);
+    println!(
+        "batched   {b_rps:>10.0} rows/s  ({} batches, mean {:.1} rows/batch)",
+        b_stats.batches,
+        b_stats.mean_batch()
+    );
+    println!("unbatched {u_rps:>10.0} rows/s  ({} batches)", u_stats.batches);
+    println!("  → micro-batching speedup {:.2}×", b_rps / u_rps.max(1e-9));
+
+    // ---- BENCH_infer.json at the repo root ----
+    let doc = Json::object(vec![
+        ("bench", Json::from_str_val("infer")),
+        ("workers", Json::from_f64(workers as f64)),
+        ("gemm", Json::Arr(gemm_rows)),
+        ("fused_vs_dequant_speedup", Json::Obj(speedups.into_iter().collect())),
+        (
+            "serve",
+            Json::object(vec![
+                ("units", Json::from_f64(serve_units as f64)),
+                ("width", Json::from_f64(serve_width as f64)),
+                ("bits", Json::from_f64(4.0)),
+                ("requests", Json::from_f64(requests as f64)),
+                ("clients", Json::from_f64(clients as f64)),
+                ("batched_rows_per_s", Json::from_f64(b_rps)),
+                ("batched_mean_batch", Json::from_f64(b_stats.mean_batch())),
+                ("unbatched_rows_per_s", Json::from_f64(u_rps)),
+                ("speedup", Json::from_f64(b_rps / u_rps.max(1e-9))),
+            ]),
+        ),
+    ]);
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_infer.json");
+    match std::fs::write(out, json::to_string(&doc, 2) + "\n") {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

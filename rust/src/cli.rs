@@ -89,6 +89,19 @@ COMMANDS:
                                   out over the worker pool)
   eval       Evaluate a model (fp or after quantize with --load)
              --model <name> [--method…/--bits… as quantize]
+  pack       Quantize, then export a bit-packed low-bit artifact (codes +
+             per-row grids + biases; no FP weights inside)
+             --model <name> --method <m> --bits <b> [--out <file.fxt>]
+             [other quantize flags]
+  infer      Run the fused dequant-GEMM forward over a packed artifact
+             --packed <file.fxt> | --synthetic [--units <n>] [--width <w>]
+             [--bits <b>]
+             [--rows <n>] [--seed <n>] [--workers <n>] [--out <file.fxt>]
+  serve      Micro-batched serving loadgen over a packed artifact: coalesce
+             single-row requests up to a deadline, one fused GEMM per batch
+             --packed <file.fxt> | --synthetic [--units/--width/--bits]
+             [--requests <n>] [--clients <n>] [--max-batch <n>]
+             [--deadline-ms <f>] [--workers <n>] [--compare]
   sweep      Run a whole experiment table from a config file
              --config configs/<exp>.toml [--set k=v …]
   figure     Emit grid-shift / histogram data for the paper's figures
@@ -102,7 +115,8 @@ GLOBAL FLAGS:
   --artifacts <dir>   artifact directory (default: artifacts/)
   --report <dir>      report output directory (default: reports/)
   --backend <b>       execution engine: native | pjrt | auto (default auto;
-                      see DESIGN.md §Backends)
+                      auto reports which engine it picked, and why, on
+                      stderr — see DESIGN.md §Backends)
   --set k=v           config override (repeatable)
   --quiet             suppress progress logging
 ";

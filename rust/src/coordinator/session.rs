@@ -6,6 +6,7 @@
 //! artifact engine or the native pure-Rust engine (DESIGN.md §Backends).
 
 use super::{Plan, UnitState};
+use crate::infer::{Engine, PackedLayer, PackedMatrix, PackedModel, PackedUnit};
 use crate::manifest::{Manifest, ModelInfo, PackEntry, UnitInfo};
 use crate::runtime::{Backend, QView, ReconTask, UnitCtx};
 use crate::tensor::{qrange, Tensor};
@@ -326,12 +327,119 @@ impl<'rt> Session<'rt> {
 
     /// Run `xs` through the fully quantized chain; returns final outputs
     /// per chunk (logits for CNNs, hidden states for transformers).
+    ///
+    /// Fast path: weight-only results over contraction units lower to a
+    /// bit-packed [`Engine`] (one fused dequant-GEMM per layer instead of
+    /// materializing every Ŵ); anything the packed engine cannot express
+    /// (wa mode, conv units, odd bit-widths) is detected by a cheap
+    /// pre-check — no export work — and falls back to the generic per-unit
+    /// [`Session::advance_q`] chain.  Callers forwarding many datasets
+    /// against one result can hoist [`Session::packed_engine`] out of the
+    /// loop to pay the export/pack once.
     pub fn forward_q(&self, result: &QuantResult, xs: &Tensor) -> Result<Vec<Tensor>> {
+        if self.check_packable(result).is_ok() {
+            if let Ok(engine) = self.packed_engine(result) {
+                let chunks = self.first_unit_inputs(xs)?;
+                return chunks.iter().map(|c| engine.forward(c)).collect();
+            }
+        }
         let mut chunks = self.first_unit_inputs(xs)?;
         for (unit, st) in self.model.units.iter().zip(&result.units) {
             chunks = self.advance_q(unit, st, &result.plan.mode, &chunks)?;
         }
         Ok(chunks)
+    }
+
+    /// Cheap packed-engine eligibility check — the single source of truth
+    /// for what [`Session::packed_model`] can express (mode, unit kinds,
+    /// bit-widths).  Costs nothing beyond a scan of the unit list.
+    fn check_packable(&self, result: &QuantResult) -> Result<()> {
+        if result.plan.mode != "w" {
+            bail!(
+                "packed export is weight-only; mode {:?} quantizes activations too",
+                result.plan.mode
+            );
+        }
+        for (unit, st) in self.model.units.iter().zip(&result.units) {
+            if unit.kind != "linear" && unit.kind != "mlp_relu" {
+                bail!(
+                    "packed engine supports contraction units (linear, mlp_relu); \
+                     unit {:?} is {:?}",
+                    unit.name,
+                    unit.kind
+                );
+            }
+            if !crate::infer::packed::SUPPORTED_BITS.contains(&st.bits_w) {
+                bail!(
+                    "packed store supports bits in {:?}; unit {:?} is {}-bit",
+                    crate::infer::packed::SUPPORTED_BITS,
+                    unit.name,
+                    st.bits_w
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Lower a weight-only quantization result to a bit-packed model: per
+    /// layer, the exported integer codes packed at `bits_w` plus the per-row
+    /// `(s1, zp)` grid and the FP bias.  This is everything inference needs —
+    /// `PackedModel::save` writes it as a self-contained `.fxt` artifact
+    /// that reloads with no FP weights at all (`flexround pack` / `infer`).
+    pub fn packed_model(&self, result: &QuantResult) -> Result<PackedModel> {
+        // validate the whole model before exporting anything, so ineligible
+        // models fail fast with no wasted fake-quant work
+        self.check_packable(result)?;
+        let mut units = Vec::with_capacity(self.model.units.len());
+        for (unit, st) in self.model.units.iter().zip(&result.units) {
+            let (qmin, _) = qrange(st.bits_w, self.model.symmetric);
+            let slots = crate::recon::map_pack(unit, &st.method, &st.entries).map_err(|e| {
+                anyhow!(
+                    "packed export supports the native method family \
+                     (rtn, flexround*); unit {:?}: {e:#}",
+                    unit.name
+                )
+            })?;
+            let codes = self
+                .backend
+                .export_codes(&self.unit_ctx(unit), &Self::qview(st, "w"))?;
+            let n = unit.layers.len();
+            if codes.len() != n {
+                bail!(
+                    "unit {:?}: export returned {} code tensors for {n} layers",
+                    unit.name,
+                    codes.len()
+                );
+            }
+            let mut layers = Vec::with_capacity(n);
+            for (li, layer) in unit.layers.iter().enumerate() {
+                let mat = PackedMatrix::from_tensors(
+                    &codes[li],
+                    &st.params[slots[li].s1],
+                    &st.params[slots[li].zp],
+                    st.bits_w,
+                    qmin as i32,
+                )?;
+                let bias = self
+                    .weights
+                    .get(&format!("b/{}/{}", unit.name, layer.name))
+                    .map(|t| t.as_f32().map(|v| v.to_vec()))
+                    .transpose()?;
+                layers.push(PackedLayer {
+                    name: layer.name.clone(),
+                    mat,
+                    bias,
+                    relu_after: unit.kind == "mlp_relu" && li + 1 < n,
+                });
+            }
+            units.push(PackedUnit { name: unit.name.clone(), layers });
+        }
+        Ok(PackedModel { units })
+    }
+
+    /// [`Session::packed_model`] wrapped in a ready-to-run [`Engine`].
+    pub fn packed_engine(&self, result: &QuantResult) -> Result<Engine> {
+        Ok(Engine::new(self.packed_model(result)?, crate::util::pool::default_workers()))
     }
 
     /// Full-precision forward (baseline metrics).

@@ -1,0 +1,29 @@
+//! Quantized inference engine — the first real consumer of reconstruction
+//! output (DESIGN.md §Inference-and-Serving).
+//!
+//! `recon` learns `(s1, S2, s3, s4)`; what deployment actually needs is far
+//! smaller: the integer grid codes and the per-row dequantization grid
+//! `(s1, zp)`.  This module takes a finished `Session::quantize` result the
+//! rest of the way to serving:
+//!
+//! * [`packed`] — storage: codes bit-packed into `u32` words at 2/3/4/8 bits
+//!   with per-row scales, plus the `.fxt` packed-model artifact
+//!   ([`PackedModel`]) that reloads with **no FP weights on disk**;
+//! * [`kernels`] — compute: fused dequant-GEMM ([`kernels::gemm_fused`])
+//!   that decodes words on the fly and applies the per-channel scale in
+//!   register, with a scalar reference kernel and the
+//!   dequantize-then-matmul baseline it is benchmarked against;
+//! * [`engine`] — the [`Engine`] forward API over a packed model
+//!   (`Session::forward_q`'s fast path);
+//! * [`serve`] — a micro-batched request queue ([`Server`]) that coalesces
+//!   single-row requests up to a batch deadline, runs one fused GEMM per
+//!   batch, and fans results back out (`flexround serve`).
+
+pub mod engine;
+pub mod kernels;
+pub mod packed;
+pub mod serve;
+
+pub use engine::{synthetic_model, Engine};
+pub use packed::{PackedLayer, PackedMatrix, PackedModel, PackedUnit};
+pub use serve::{drive, BatchPolicy, Client, Server, ServeStats};

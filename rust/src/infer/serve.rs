@@ -1,0 +1,318 @@
+//! Micro-batched serving front end over the [`Engine`].
+//!
+//! Single-row requests are the worst case for a packed GEMM: every request
+//! pays the full packed-word stream for one dot-product row.  The server
+//! amortizes it by coalescing: the batcher thread blocks on an empty queue,
+//! and once a request arrives it keeps collecting until either
+//! [`BatchPolicy::max_batch`] rows are queued or [`BatchPolicy::deadline`]
+//! has elapsed since the batch opened — then runs **one** batched fused GEMM
+//! and fans the result rows back to their callers.  Latency is bounded by
+//! the deadline; throughput approaches the batched-GEMM rate as load rises.
+//!
+//! The pieces:
+//!
+//! * [`Server::start`] — spawns the batcher thread owning the [`Engine`];
+//! * [`Client`] — cheap cloneable handle; [`Client::call`] blocks for the
+//!   result, [`Client::submit`] returns the response channel for pipelined
+//!   callers;
+//! * [`drive`] — a synchronous load generator (CLI `serve` subcommand and
+//!   `benches/infer.rs`): N client threads × M rows, returns wall time and
+//!   the server-side [`ServeStats`].
+
+use super::engine::Engine;
+use crate::tensor::Tensor;
+use crate::Result;
+use anyhow::anyhow;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+/// When to close a micro-batch.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// close as soon as this many rows are queued
+    pub max_batch: usize,
+    /// …or this long after the first row of the batch arrived
+    pub deadline: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 32, deadline: Duration::from_millis(2) }
+    }
+}
+
+/// Server-side counters, returned by [`Server::shutdown`].
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    /// rows answered
+    pub requests: u64,
+    /// batched GEMM launches
+    pub batches: u64,
+    /// largest batch coalesced
+    pub max_batch: usize,
+    /// seconds spent inside the engine forward
+    pub gemm_secs: f64,
+}
+
+impl ServeStats {
+    /// Mean rows per batched launch.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+struct Request {
+    row: Vec<f32>,
+    resp: Sender<Result<Vec<f32>>>,
+}
+
+/// Queue messages.  `Shutdown` exists because dropping the server's own
+/// `Sender` does not disconnect the channel while [`Client`] clones are
+/// alive — [`Server::shutdown`] must not block on stragglers.
+enum Msg {
+    Req(Request),
+    Shutdown,
+}
+
+/// Handle for submitting rows to a running [`Server`].
+#[derive(Clone)]
+pub struct Client {
+    tx: Sender<Msg>,
+    width: usize,
+}
+
+impl Client {
+    /// Enqueue one activation row; the returned channel yields its output
+    /// row once the batch it lands in has run.
+    pub fn submit(&self, row: Vec<f32>) -> Result<Receiver<Result<Vec<f32>>>> {
+        if row.len() != self.width {
+            return Err(anyhow!(
+                "request row has {} values, the served model takes {}",
+                row.len(),
+                self.width
+            ));
+        }
+        let (tx, rx) = channel();
+        self.tx
+            .send(Msg::Req(Request { row, resp: tx }))
+            .map_err(|_| anyhow!("server is shut down"))?;
+        Ok(rx)
+    }
+
+    /// Submit and block for the result.
+    pub fn call(&self, row: Vec<f32>) -> Result<Vec<f32>> {
+        self.submit(row)?
+            .recv()
+            .map_err(|_| anyhow!("server dropped the request (shutting down?)"))?
+    }
+}
+
+/// A running micro-batch server (one batcher thread owning the engine).
+pub struct Server {
+    tx: Sender<Msg>,
+    width: usize,
+    handle: std::thread::JoinHandle<ServeStats>,
+}
+
+impl Server {
+    /// Spawn the batcher thread.  Fails on an empty model (no input width).
+    pub fn start(engine: Engine, policy: BatchPolicy) -> Result<Server> {
+        let width = engine.in_width()?;
+        let max_batch = policy.max_batch.max(1);
+        let (tx, rx) = channel::<Msg>();
+        let handle = std::thread::spawn(move || run_batcher(engine, rx, max_batch, policy.deadline));
+        Ok(Server { tx, width, handle })
+    }
+
+    pub fn client(&self) -> Client {
+        Client { tx: self.tx.clone(), width: self.width }
+    }
+
+    /// Stop the batcher and join it.  Requests already queued ahead of the
+    /// stop marker are answered first; rows arriving after it (racing
+    /// clients) get a "server dropped the request" error on their response
+    /// channel, and later submits fail with "server is shut down".  Never
+    /// blocks on straggler [`Client`] clones.
+    pub fn shutdown(self) -> Result<ServeStats> {
+        let Server { tx, width: _, handle } = self;
+        let _ = tx.send(Msg::Shutdown);
+        drop(tx);
+        handle.join().map_err(|_| anyhow!("serve batcher thread panicked"))
+    }
+}
+
+fn run_batcher(
+    engine: Engine,
+    rx: Receiver<Msg>,
+    max_batch: usize,
+    deadline: Duration,
+) -> ServeStats {
+    let mut stats = ServeStats::default();
+    let mut open = true;
+    while open {
+        // block until a batch opens
+        let first = match rx.recv() {
+            Ok(Msg::Req(r)) => r,
+            Ok(Msg::Shutdown) | Err(_) => break,
+        };
+        let opened = Instant::now();
+        let mut batch = vec![first];
+        while batch.len() < max_batch {
+            let Some(left) = deadline.checked_sub(opened.elapsed()) else { break };
+            match rx.recv_timeout(left) {
+                Ok(Msg::Req(r)) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Ok(Msg::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+        let n = batch.len();
+        let width = batch[0].row.len();
+        let mut flat = Vec::with_capacity(n * width);
+        for r in &batch {
+            flat.extend_from_slice(&r.row);
+        }
+        let t0 = Instant::now();
+        let result = Tensor::from_f32(flat, &[n, width]).and_then(|x| engine.forward(&x));
+        stats.gemm_secs += t0.elapsed().as_secs_f64();
+        stats.batches += 1;
+        stats.requests += n as u64;
+        stats.max_batch = stats.max_batch.max(n);
+        match result {
+            Ok(y) => {
+                let out_w = y.shape()[1];
+                let yv = y.as_f32().expect("engine output is f32");
+                for (i, r) in batch.into_iter().enumerate() {
+                    let _ = r.resp.send(Ok(yv[i * out_w..(i + 1) * out_w].to_vec()));
+                }
+            }
+            Err(e) => {
+                for r in batch {
+                    let _ = r.resp.send(Err(anyhow!("batched forward failed: {e:#}")));
+                }
+            }
+        }
+    }
+    stats
+}
+
+/// Synchronous load generator: split `rows` across `clients` threads, each
+/// blocking on [`Client::call`] per row.  Returns `(wall_seconds, stats)`;
+/// errors if any request failed.
+pub fn drive(
+    engine: Engine,
+    policy: BatchPolicy,
+    rows: Vec<Vec<f32>>,
+    clients: usize,
+) -> Result<(f64, ServeStats)> {
+    let n = rows.len();
+    if n == 0 {
+        return Err(anyhow!("drive: no request rows"));
+    }
+    let server = Server::start(engine, policy)?;
+    let clients = clients.clamp(1, n);
+    let chunk = (n + clients - 1) / clients;
+    let t0 = Instant::now();
+    let failures: usize = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for slice in rows.chunks(chunk) {
+            let client = server.client();
+            handles.push(s.spawn(move || {
+                slice.iter().filter(|r| client.call((*r).clone()).is_err()).count()
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("client thread panicked")).sum()
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown()?;
+    if failures > 0 {
+        return Err(anyhow!("drive: {failures}/{n} requests failed"));
+    }
+    Ok((secs, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::engine::synthetic_model;
+    use crate::util::rng::Pcg32;
+
+    fn engine() -> Engine {
+        Engine::new(synthetic_model(2, 16, 4, 3).unwrap(), 1)
+    }
+
+    fn rows(n: usize, width: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n).map(|_| (0..width).map(|_| rng.next_normal()).collect()).collect()
+    }
+
+    #[test]
+    fn responses_match_direct_forward() {
+        let reference = engine();
+        let server = Server::start(engine(), BatchPolicy::default()).unwrap();
+        let client = server.client();
+        for row in rows(6, 16, 1) {
+            let got = client.call(row.clone()).unwrap();
+            let want = reference.forward_row(&row).unwrap();
+            assert_eq!(got, want, "served row must equal the direct forward");
+        }
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.requests, 6);
+        assert!(stats.batches <= 6 && stats.batches >= 1);
+    }
+
+    #[test]
+    fn queued_requests_coalesce_into_one_batch() {
+        // All 8 rows are submitted (non-blocking) before any response is
+        // read; the generous deadline means the batcher sees them all within
+        // one window and runs a single GEMM.
+        let server = Server::start(
+            engine(),
+            BatchPolicy { max_batch: 8, deadline: Duration::from_secs(5) },
+        )
+        .unwrap();
+        let client = server.client();
+        let pending: Vec<_> =
+            rows(8, 16, 2).into_iter().map(|r| client.submit(r).unwrap()).collect();
+        for rx in pending {
+            assert_eq!(rx.recv().unwrap().unwrap().len(), 16);
+        }
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.requests, 8);
+        assert_eq!(stats.batches, 1, "pre-queued rows must coalesce");
+        assert_eq!(stats.max_batch, 8);
+    }
+
+    #[test]
+    fn unbatched_policy_runs_one_gemm_per_request() {
+        let policy = BatchPolicy { max_batch: 1, deadline: Duration::from_millis(1) };
+        let (_, stats) = drive(engine(), policy, rows(10, 16, 4), 2).unwrap();
+        assert_eq!(stats.requests, 10);
+        assert_eq!(stats.batches, 10);
+        assert_eq!(stats.max_batch, 1);
+    }
+
+    #[test]
+    fn wrong_width_is_rejected_before_queueing() {
+        let server = Server::start(engine(), BatchPolicy::default()).unwrap();
+        let client = server.client();
+        assert!(client.call(vec![0.0; 3]).is_err());
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.requests, 0);
+    }
+
+    #[test]
+    fn drive_reports_throughput() {
+        let policy = BatchPolicy { max_batch: 16, deadline: Duration::from_millis(1) };
+        let (secs, stats) = drive(engine(), policy, rows(64, 16, 5), 4).unwrap();
+        assert!(secs > 0.0);
+        assert_eq!(stats.requests, 64);
+        assert!(stats.mean_batch() >= 1.0);
+    }
+}

@@ -36,6 +36,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod eval;
+pub mod infer;
 pub mod manifest;
 pub mod quant;
 pub mod recon;

@@ -6,13 +6,18 @@
 //! flexround selftest --backend native                  # no artifacts needed
 //! flexround quantize --model tinymobilenet --method flexround --bits 4 --eval
 //! flexround quantize --model mlp_units --backend native --parallel-units
+//! flexround pack     --model mlp_units --method flexround --bits 4 --out m.fxt
+//! flexround infer    --packed m.fxt --rows 32          # no FP weights needed
+//! flexround serve    --synthetic --requests 512 --compare
 //! flexround sweep    --config configs/t2_weight_only.toml
 //! flexround figure   --model tinymobilenet --unit b1 --method flexround --bits 4
 //! flexround inspect  --model llm_mini
 //! ```
 //!
 //! `--backend auto` (the default) uses PJRT when the build carries it and
-//! the artifact directory is usable, otherwise the native engine.
+//! the artifact directory is usable, otherwise the native engine; the
+//! selected engine (and why) is reported on stderr so logs stay
+//! attributable.
 
 use anyhow::{anyhow, bail};
 use flexround::cli::{Args, USAGE};
@@ -47,6 +52,9 @@ fn run(argv: &[String]) -> Result<()> {
         "inspect" => cmd_inspect(&args, &art_dir),
         "selftest" => cmd_selftest(&args, &art_dir),
         "quantize" | "eval" => cmd_quantize(&args, &art_dir, &rep_dir, quiet),
+        "pack" => cmd_pack(&args, &art_dir, quiet),
+        "infer" => cmd_infer(&args),
+        "serve" => cmd_serve(&args),
         "figure" => cmd_figure(&args, &art_dir, &rep_dir, quiet),
         "sweep" => cmd_sweep(&args, &art_dir, &rep_dir, quiet),
         other => bail!("unknown command {other:?}\n\n{USAGE}"),
@@ -68,17 +76,33 @@ fn pjrt_backend(_art: &Path) -> Result<Box<dyn Backend>> {
 
 /// `--backend native|pjrt|auto` → engine.  `auto` prefers PJRT when it is
 /// compiled in, the artifact dir is usable (a manifest exists), and a
-/// client can be created — else the native engine.
+/// client can be created — else the native engine.  The choice (and the
+/// reason) goes to stderr so quantize/serve logs are attributable even in
+/// builds without the `pjrt` feature.
 fn make_backend(args: &Args, art: &Path) -> Result<Box<dyn Backend>> {
     match args.flag("backend").unwrap_or("auto") {
         "native" => Ok(Box::new(Native::new())),
         "pjrt" => pjrt_backend(art),
         "auto" => {
-            if art.join("manifest.json").exists() {
-                Ok(pjrt_backend(art).unwrap_or_else(|_| Box::new(Native::new())))
-            } else {
-                Ok(Box::new(Native::new()))
+            let (backend, why): (Box<dyn Backend>, String) =
+                if art.join("manifest.json").exists() {
+                    match pjrt_backend(art) {
+                        Ok(b) => (b, "artifact manifest found and PJRT client created".into()),
+                        Err(e) => (
+                            Box::new(Native::new()),
+                            format!("manifest found but PJRT unavailable: {e:#}"),
+                        ),
+                    }
+                } else {
+                    (
+                        Box::new(Native::new()),
+                        format!("no manifest.json under {}", art.display()),
+                    )
+                };
+            if !args.has("quiet") {
+                eprintln!("backend auto: selected {} ({why})", backend.name());
             }
+            Ok(backend)
         }
         other => bail!("unknown --backend {other:?} (expected native, pjrt, or auto)"),
     }
@@ -192,6 +216,135 @@ fn cmd_quantize(args: &Args, art: &PathBuf, rep: &PathBuf, quiet: bool) -> Resul
         );
         println!("metrics: {m:?}");
         reporter.metrics(&id, &m)?;
+    }
+    Ok(())
+}
+
+fn cmd_pack(args: &Args, art: &PathBuf, quiet: bool) -> Result<()> {
+    let man = Manifest::load(art)?;
+    let backend = make_backend(args, art)?;
+    let plan = plan_from_args(args, &man)?;
+    let sess = Session::open(backend.as_ref(), &man, &plan.model)?;
+    if !quiet {
+        println!(
+            "quantizing {} with {} ({}-bit W, {} backend) for packed export…",
+            plan.model,
+            plan.method,
+            plan.bits_w,
+            backend.name()
+        );
+    }
+    let result = sess.quantize(&plan)?;
+    let pm = sess.packed_model(&result)?;
+    let out = args.flag("out").map(PathBuf::from).unwrap_or_else(|| {
+        PathBuf::from(format!("packed_{}_{}_w{}.fxt", plan.model, plan.method, plan.bits_w))
+    });
+    pm.save(&out)?;
+    let (pb, fb) = (pm.packed_bytes(), pm.fp32_bytes());
+    println!(
+        "packed {} units → {} ({pb} bytes vs {fb} as dense f32, {:.2}× smaller; \
+         artifact carries no FP weights)",
+        pm.units.len(),
+        out.display(),
+        fb as f64 / pb.max(1) as f64
+    );
+    Ok(())
+}
+
+/// `--packed <file.fxt>` loads a pack artifact; `--synthetic` builds a
+/// random square model in memory (demo / loadgen without any files).
+fn load_engine(args: &Args) -> Result<flexround::infer::Engine> {
+    use flexround::infer::{synthetic_model, Engine, PackedModel};
+    let workers = args.usize_flag("workers", flexround::util::pool::default_workers());
+    let model = if let Some(p) = args.flag("packed") {
+        PackedModel::load(Path::new(p))?
+    } else if args.has("synthetic") {
+        synthetic_model(
+            args.usize_flag("units", 2),
+            args.usize_flag("width", 512),
+            args.usize_flag("bits", 4) as u32,
+            args.usize_flag("seed", 7) as u64,
+        )?
+    } else {
+        bail!("infer/serve need --packed <model.fxt> or --synthetic");
+    };
+    Ok(Engine::new(model, workers))
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let engine = load_engine(args)?;
+    let rows = args.usize_flag("rows", 8).max(1);
+    let width = engine.in_width()?;
+    let mut rng =
+        flexround::util::rng::Pcg32::seeded(args.usize_flag("seed", 7) as u64);
+    let x = flexround::tensor::Tensor::from_f32(
+        (0..rows * width).map(|_| rng.next_normal()).collect(),
+        &[rows, width],
+    )?;
+    let t0 = std::time::Instant::now();
+    let y = engine.forward(&x)?;
+    let fused_s = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let y_ref = engine.forward_unfused(&x)?;
+    let ref_s = t1.elapsed().as_secs_f64();
+    println!(
+        "infer: {rows}×{width} → {:?} in {:.3}ms fused ({:.3}ms dequant+matmul, \
+         max|Δ| {:.2e}); {:.0} rows/s",
+        y.shape(),
+        1e3 * fused_s,
+        1e3 * ref_s,
+        y.max_abs_diff(&y_ref)?,
+        rows as f64 / fused_s.max(1e-9)
+    );
+    if let Some(out) = args.flag("out") {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("y".to_string(), y);
+        flexround::ser::fxt::write(Path::new(out), &m)?;
+        println!("wrote outputs to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use flexround::infer::{drive, BatchPolicy};
+    let requests = args.usize_flag("requests", 256).max(1);
+    let clients = args.usize_flag("clients", 4).max(1);
+    let policy = BatchPolicy {
+        max_batch: args.usize_flag("max-batch", 32).max(1),
+        deadline: std::time::Duration::from_secs_f64(
+            args.f64_flag("deadline-ms", 2.0).max(0.0) / 1e3,
+        ),
+    };
+    let engine = load_engine(args)?;
+    let width = engine.in_width()?;
+    let mut rng =
+        flexround::util::rng::Pcg32::seeded(args.usize_flag("seed", 7) as u64);
+    let rows: Vec<Vec<f32>> = (0..requests)
+        .map(|_| (0..width).map(|_| rng.next_normal()).collect())
+        .collect();
+    let (secs, stats) = drive(engine, policy, rows.clone(), clients)?;
+    let rps = stats.requests as f64 / secs.max(1e-9);
+    println!(
+        "serve: {} requests / {clients} clients in {secs:.3}s → {rps:.0} rows/s \
+         ({} batches, mean {:.1} / max {} rows per batch, {:.1}% of wall in GEMM)",
+        stats.requests,
+        stats.batches,
+        stats.mean_batch(),
+        stats.max_batch,
+        100.0 * stats.gemm_secs / secs.max(1e-9)
+    );
+    if args.has("compare") {
+        let engine = load_engine(args)?;
+        let unbatched =
+            BatchPolicy { max_batch: 1, deadline: std::time::Duration::ZERO };
+        let (s_u, st_u) = drive(engine, unbatched, rows, clients)?;
+        let rps_u = st_u.requests as f64 / s_u.max(1e-9);
+        println!(
+            "serve: unbatched baseline {rps_u:.0} rows/s ({} batches) → \
+             micro-batching speedup {:.2}×",
+            st_u.batches,
+            rps / rps_u.max(1e-9)
+        );
     }
     Ok(())
 }

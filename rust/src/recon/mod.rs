@@ -185,7 +185,9 @@ pub fn fq_forward(
     fq_kernel(w, s1, s2, s3, s4, zp, qmin, qmax, false)
 }
 
-/// Integer grid codes after learning (the grid-shift analysis input).
+/// Integer grid codes after learning, as an **i32 tensor** — the packed
+/// export path (`infer::packed` bit-packs these directly) and the
+/// grid-shift analysis input (which reads them via `to_f32_vec`).
 pub fn fq_codes(
     w: &Tensor,
     s1: &Tensor,
@@ -196,7 +198,9 @@ pub fn fq_codes(
     qmin: f32,
     qmax: f32,
 ) -> Result<Tensor> {
-    fq_kernel(w, s1, s2, s3, s4, zp, qmin, qmax, true)
+    let t = fq_kernel(w, s1, s2, s3, s4, zp, qmin, qmax, true)?;
+    let v: Vec<i32> = t.as_f32()?.iter().map(|&x| x.round() as i32).collect();
+    Tensor::from_i32(v, t.shape())
 }
 
 fn fq_kernel(
@@ -341,26 +345,8 @@ pub struct LayerDef<'a> {
 }
 
 fn add_bias_relu(mut y: Tensor, bias: Option<&Tensor>, relu: bool) -> Result<Tensor> {
-    let (n, r) = (y.shape()[0], y.shape()[1]);
-    let yv = y.as_f32_mut()?;
-    if let Some(b) = bias {
-        let bv = b.as_f32()?;
-        if bv.len() != r {
-            bail!("bias of {} values on output width {r}", bv.len());
-        }
-        for i in 0..n {
-            for j in 0..r {
-                yv[i * r + j] += bv[j];
-            }
-        }
-    }
-    if relu {
-        for v in yv.iter_mut() {
-            if *v < 0.0 {
-                *v = 0.0;
-            }
-        }
-    }
+    let b = bias.map(|t| t.as_f32()).transpose()?;
+    y.bias_relu_inplace(b, relu)?;
     Ok(y)
 }
 
@@ -455,8 +441,36 @@ pub fn unit_forward_q(
     unit_forward_what(layers, &whats, x, workers)
 }
 
-/// Fake-quantized weights + integer codes for every layer (native analog of
-/// the `qw.*` export artifacts, feeding `quant::grid_shifts`).
+/// Integer codes (i32) only, per layer — the packed-export hot path
+/// (`Session::packed_model`): skips materializing Ŵ entirely.
+pub fn export_codes(
+    layers: &[LayerDef],
+    slots: &[LayerSlots],
+    params: &[Tensor],
+    qmin: f32,
+    qmax: f32,
+) -> Result<Vec<Tensor>> {
+    layers
+        .iter()
+        .zip(slots)
+        .map(|(l, s)| {
+            fq_codes(
+                l.w,
+                &params[s.s1],
+                s.s2.map(|i| &params[i]),
+                s.s3.map(|i| &params[i]),
+                s.s4.map(|i| &params[i]),
+                &params[s.zp],
+                qmin,
+                qmax,
+            )
+        })
+        .collect()
+}
+
+/// Fake-quantized weights + integer codes (i32) for every layer — native
+/// analog of the `qw.*` export artifacts, feeding `quant::grid_shifts` and
+/// the packed-weight export (`Session::packed_model`).
 pub fn export_qw(
     layers: &[LayerDef],
     slots: &[LayerSlots],
@@ -782,7 +796,7 @@ mod tests {
                 fq_codes(&w, &s1, Some(&s2), None, None, &zp, qmin, qmax).map_err(|e| e.to_string())?;
             let what =
                 fq_forward(&w, &s1, Some(&s2), None, None, &zp, qmin, qmax).map_err(|e| e.to_string())?;
-            let cv = codes.as_f32().map_err(|e| e.to_string())?;
+            let cv = codes.to_f32_vec(); // codes export as i32 (packable)
             let wv = what.as_f32().map_err(|e| e.to_string())?;
             let s1v = s1.as_f32().map_err(|e| e.to_string())?;
             let zv = zp.as_f32().map_err(|e| e.to_string())?;

@@ -116,8 +116,19 @@ pub trait Backend {
         tasks.iter().map(|t| self.reconstruct(t)).collect()
     }
 
-    /// Export `(Ŵ, integer codes)` per layer for figures/analysis.
+    /// Export `(Ŵ, integer codes)` per layer for figures/analysis and the
+    /// packed-weight export.  The native engine emits i32 code tensors
+    /// (bit-packable as-is); PJRT artifacts emit f32 — consumers read codes
+    /// through `to_f32_vec` / `infer::PackedMatrix::from_tensors`, which
+    /// accept both.
     fn export_qw(&self, cx: &UnitCtx, q: &QView) -> Result<Vec<(Tensor, Tensor)>>;
+
+    /// Integer codes only — the packed-export path.  The default lowers to
+    /// [`Backend::export_qw`] and drops Ŵ; engines that can skip the Ŵ
+    /// materialization entirely (native) override it.
+    fn export_codes(&self, cx: &UnitCtx, q: &QView) -> Result<Vec<Tensor>> {
+        Ok(self.export_qw(cx, q)?.into_iter().map(|(_, codes)| codes).collect())
+    }
 
     /// Downcast hook: the PJRT runtime, when this engine wraps one (heads,
     /// embeds, and raw artifact execution still need it).

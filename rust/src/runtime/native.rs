@@ -212,4 +212,12 @@ impl Backend for Native {
         let (qmin, qmax) = qrange(q.bits_w, cx.model.symmetric);
         recon::export_qw(&layers, &slots, q.params, qmin, qmax)
     }
+
+    /// Codes without the Ŵ materialization (half the export work).
+    fn export_codes(&self, cx: &UnitCtx, q: &QView) -> Result<Vec<Tensor>> {
+        let layers = self.layer_weights(cx)?;
+        let slots = recon::map_pack(cx.unit, q.method, q.entries)?;
+        let (qmin, qmax) = qrange(q.bits_w, cx.model.symmetric);
+        recon::export_codes(&layers, &slots, q.params, qmin, qmax)
+    }
 }

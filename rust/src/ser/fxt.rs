@@ -62,16 +62,16 @@ pub fn read_bytes(bytes: &[u8]) -> Result<BTreeMap<String, Tensor>> {
     Ok(out)
 }
 
-/// Write tensors to an FXT file (used by reports and tests).
-pub fn write(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
-    let mut f = std::fs::File::create(path)
-        .map_err(|e| anyhow!("creating {}: {e}", path.display()))?;
-    f.write_all(MAGIC)?;
-    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+/// Serialize tensors to FXT bytes (the file format, in memory — packed-model
+/// round-trip tests and streaming writers use this directly).
+pub fn write_bytes(tensors: &BTreeMap<String, Tensor>) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
     for (name, t) in tensors {
         let nb = name.as_bytes();
-        f.write_all(&(nb.len() as u32).to_le_bytes())?;
-        f.write_all(nb)?;
+        out.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+        out.extend_from_slice(nb);
         let (tag, raw): (u8, Vec<u8>) = match t.dtype() {
             crate::tensor::DType::F32 => (
                 0,
@@ -82,12 +82,22 @@ pub fn write(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
                 t.as_i32()?.iter().flat_map(|v| v.to_le_bytes()).collect(),
             ),
         };
-        f.write_all(&[tag, t.shape().len() as u8])?;
+        out.push(tag);
+        out.push(t.shape().len() as u8);
         for &d in t.shape() {
-            f.write_all(&(d as u32).to_le_bytes())?;
+            out.extend_from_slice(&(d as u32).to_le_bytes());
         }
-        f.write_all(&raw)?;
+        out.extend_from_slice(&raw);
     }
+    Ok(out)
+}
+
+/// Write tensors to an FXT file (reports, tests, packed-model artifacts).
+pub fn write(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
+    let bytes = write_bytes(tensors)?;
+    let mut f = std::fs::File::create(path)
+        .map_err(|e| anyhow!("creating {}: {e}", path.display()))?;
+    f.write_all(&bytes)?;
     Ok(())
 }
 
@@ -162,5 +172,12 @@ mod tests {
     fn empty_container() {
         let bytes = b"FXT1\x00\x00\x00\x00";
         assert!(read_bytes(bytes).unwrap().is_empty());
+    }
+
+    #[test]
+    fn in_memory_roundtrip() {
+        let m = sample();
+        let bytes = write_bytes(&m).unwrap();
+        assert_eq!(read_bytes(&bytes).unwrap(), m);
     }
 }

@@ -46,6 +46,46 @@ impl Tensor {
         self.to_f32_vec().iter().fold(0.0f32, |m, &x| m.max(x.abs()))
     }
 
+    /// In-place row-broadcast bias add + optional ReLU on a 2-D tensor —
+    /// the shared contraction epilogue (recon unit forwards and the packed
+    /// inference engine).
+    pub fn bias_relu_inplace(&mut self, bias: Option<&[f32]>, relu: bool) -> Result<()> {
+        if self.ndim() != 2 {
+            bail!("bias_relu_inplace on {:?}", self.shape());
+        }
+        let (n, r) = (self.shape()[0], self.shape()[1]);
+        let yv = self.as_f32_mut()?;
+        if let Some(b) = bias {
+            if b.len() != r {
+                bail!("bias of {} values on output width {r}", b.len());
+            }
+            for i in 0..n {
+                for (v, bj) in yv[i * r..(i + 1) * r].iter_mut().zip(b) {
+                    *v += bj;
+                }
+            }
+        }
+        if relu {
+            for v in yv.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Largest absolute element-wise difference — the parity metric between
+    /// kernel implementations (fused packed GEMM vs the f32 paths).
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        if self.shape() != other.shape() {
+            bail!("max_abs_diff shape mismatch {:?} vs {:?}", self.shape(), other.shape());
+        }
+        let a = self.to_f32_vec();
+        let b = other.to_f32_vec();
+        Ok(a.iter().zip(&b).fold(0.0f32, |m, (&x, &y)| m.max((x - y).abs())))
+    }
+
     /// Mean squared difference — the reconstruction-loss metric.
     pub fn mse(&self, other: &Tensor) -> Result<f32> {
         if self.shape() != other.shape() {
@@ -295,6 +335,9 @@ mod tests {
         let a = Tensor::from_f32(vec![0., 0.], &[2]).unwrap();
         let b = Tensor::from_f32(vec![3., 4.], &[2]).unwrap();
         assert!((a.mse(&b).unwrap() - 12.5).abs() < 1e-6);
+        assert_eq!(a.max_abs_diff(&b).unwrap(), 4.0);
+        let c = Tensor::from_f32(vec![0.; 3], &[3]).unwrap();
+        assert!(a.max_abs_diff(&c).is_err());
     }
 
     #[test]

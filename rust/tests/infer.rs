@@ -1,0 +1,283 @@
+//! Quantized-inference integration tests — the packed-weight acceptance
+//! gate, artifact-free and PJRT-free:
+//!
+//! * golden-fixture parity: the fused packed GEMM must match the f32
+//!   `X · Ŵᵀ` path within 1e-4 on `tests/fixtures/flexround_golden.json`
+//!   (same fixture the reconstruction math is pinned against);
+//! * the full deployment round trip: `Session::quantize` → packed `.fxt`
+//!   artifact on disk → reload with **no FP weights available** → batched
+//!   `Engine::forward` matches the generic f32 quantized chain within 1e-4.
+
+use flexround::coordinator::{Plan, Session};
+use flexround::infer::{Engine, PackedMatrix, PackedModel};
+use flexround::manifest::{LayerInfo, Manifest, ModelInfo, PackEntry, UnitInfo};
+use flexround::recon;
+use flexround::runtime::Native;
+use flexround::ser::json::{self, Json};
+use flexround::tensor::{minmax_scale, Tensor};
+use flexround::util::rng::Pcg32;
+use std::collections::BTreeMap;
+
+fn f32s(v: &Json) -> Vec<f32> {
+    v.arr()
+        .expect("array")
+        .iter()
+        .map(|x| x.num().expect("number") as f32)
+        .collect()
+}
+
+/// Bits for a `[qmin, qmax]` grid that spans a power of two.
+fn grid_bits(qmin: f32, qmax: f32) -> u32 {
+    let span = (qmax - qmin + 1.0) as u32;
+    assert!(span.is_power_of_two(), "fixture grid span {span} not a power of two");
+    span.trailing_zeros()
+}
+
+#[test]
+fn golden_fixture_fused_gemm_parity() {
+    let text = std::fs::read_to_string("tests/fixtures/flexround_golden.json")
+        .expect("golden fixture (regenerate with python3 python/tests/gen_flexround_golden.py)");
+    let doc = json::parse(&text).expect("fixture json");
+    let cases = doc.get("cases").unwrap().arr().unwrap();
+    assert!(!cases.is_empty());
+    for case in cases {
+        let name = case.get("name").unwrap().str().unwrap();
+        let r = case.get("rows").unwrap().usize().unwrap();
+        let c = case.get("cols").unwrap().usize().unwrap();
+        let b = case.get("batch").unwrap().usize().unwrap();
+        let qmin = case.get("qmin").unwrap().num().unwrap() as f32;
+        let qmax = case.get("qmax").unwrap().num().unwrap() as f32;
+        let bits = grid_bits(qmin, qmax);
+        let w = Tensor::from_f32(f32s(case.get("w").unwrap()), &[r, c]).unwrap();
+        let s1 = Tensor::from_f32(f32s(case.get("s1").unwrap()), &[r, 1]).unwrap();
+        let s2 = Tensor::from_f32(f32s(case.get("s2").unwrap()), &[r, c]).unwrap();
+        let s3 = Tensor::from_f32(f32s(case.get("s3").unwrap()), &[r, 1]).unwrap();
+        let s4 = Tensor::from_f32(f32s(case.get("s4").unwrap()), &[1, c]).unwrap();
+        let zp = Tensor::from_f32(f32s(case.get("zp").unwrap()), &[r, 1]).unwrap();
+
+        let what = recon::fq_forward(&w, &s1, Some(&s2), Some(&s3), Some(&s4), &zp, qmin, qmax)
+            .unwrap();
+        let codes = recon::fq_codes(&w, &s1, Some(&s2), Some(&s3), Some(&s4), &zp, qmin, qmax)
+            .unwrap();
+        let packed =
+            PackedMatrix::from_tensors(&codes, &s1, &zp, bits, qmin as i32).unwrap();
+
+        // the packed store reproduces Ŵ itself…
+        let d = packed.dequantize().unwrap().max_abs_diff(&what).unwrap();
+        assert!(d <= 1e-5, "{name}: dequantized packed weights drift {d} from Ŵ");
+
+        // …and the fused kernel reproduces the f32 GEMM within 1e-4
+        let x = Tensor::from_f32(f32s(case.get("x").unwrap()), &[b, c]).unwrap();
+        let want = x.matmul_nt(&what).unwrap();
+        for workers in [1usize, 4] {
+            let got = flexround::infer::kernels::gemm_fused(&x, &packed, workers).unwrap();
+            assert_eq!(got.shape(), want.shape());
+            let d = got.max_abs_diff(&want).unwrap();
+            let tol = 1e-4 * (1.0 + want.abs_max());
+            assert!(
+                d <= tol,
+                "{name}: fused packed GEMM (workers={workers}) max|Δ| {d} > {tol}"
+            );
+        }
+        let got = flexround::infer::kernels::gemm_ref(&x, &packed).unwrap();
+        let d = got.max_abs_diff(&want).unwrap();
+        assert!(d <= 1e-4 * (1.0 + want.abs_max()), "{name}: reference kernel drift {d}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end: quantize → pack → save → reload (no FP weights) → serve math
+// ---------------------------------------------------------------------------
+
+const BITS: u32 = 4;
+
+fn entry(name: &str, shape: &[usize], learnable: bool) -> PackEntry {
+    PackEntry { name: name.to_string(), shape: shape.to_vec(), learnable }
+}
+
+fn linear_unit(name: &str, layer: &str, rows: usize, cols: usize) -> UnitInfo {
+    let mut packs = BTreeMap::new();
+    packs.insert(
+        "flexround.w".to_string(),
+        vec![
+            entry(&format!("{layer}.s1"), &[rows, 1], true),
+            entry(&format!("{layer}.s2"), &[rows, cols], true),
+            entry(&format!("{layer}.s3"), &[rows, 1], true),
+            entry(&format!("{layer}.s4"), &[1, cols], true),
+            entry(&format!("{layer}.zp"), &[rows, 1], false),
+        ],
+    );
+    UnitInfo {
+        name: name.to_string(),
+        kind: "linear".to_string(),
+        bits_override: None,
+        in_shape: vec![cols],
+        out_shape: vec![rows],
+        act_sites: 0,
+        layers: vec![LayerInfo {
+            name: layer.to_string(),
+            kind: "linear".to_string(),
+            rows,
+            cols,
+            conv_shape: None,
+            stride: 1,
+        }],
+        artifacts: BTreeMap::new(),
+        packs,
+    }
+}
+
+struct Fixture {
+    man: Manifest,
+    weights: BTreeMap<String, Tensor>,
+    inits: BTreeMap<String, Tensor>,
+    data: BTreeMap<String, Tensor>,
+}
+
+/// Two chained linear units (12 → 8 → 6), biases included, built in memory —
+/// the same shape of fixture `tests/native_recon.rs` uses.
+fn synthetic_fixture() -> Fixture {
+    let mut rng = Pcg32::seeded(4321);
+    let dims = [(8usize, 12usize), (6usize, 8usize)];
+    let mut weights = BTreeMap::new();
+    let mut inits = BTreeMap::new();
+    let mut units = Vec::new();
+    for (ui, &(rows, cols)) in dims.iter().enumerate() {
+        let uname = format!("u{ui}");
+        let wv: Vec<f32> = (0..rows * cols).map(|_| rng.next_normal() * 0.5).collect();
+        let w = Tensor::from_f32(wv.clone(), &[rows, cols]).unwrap();
+        weights.insert(format!("w/{uname}/fc"), w);
+        let bias: Vec<f32> = (0..rows).map(|_| rng.next_normal() * 0.1).collect();
+        weights.insert(format!("b/{uname}/fc"), Tensor::from_f32(bias, &[rows]).unwrap());
+        let s1: Vec<f32> = (0..rows)
+            .map(|r| minmax_scale(&wv[r * cols..(r + 1) * cols], BITS, true).0)
+            .collect();
+        let pfx = format!("init/{uname}/flexround/b{BITS}");
+        inits.insert(format!("{pfx}/fc.s1"), Tensor::from_f32(s1, &[rows, 1]).unwrap());
+        inits.insert(format!("{pfx}/fc.zp"), Tensor::zeros(&[rows, 1]));
+        inits.insert(format!("{pfx}/fc.s2"), Tensor::full(&[rows, cols], 1.0));
+        inits.insert(format!("{pfx}/fc.s3"), Tensor::full(&[rows, 1], 1.0));
+        inits.insert(format!("{pfx}/fc.s4"), Tensor::full(&[1, cols], 1.0));
+        units.push(linear_unit(&uname, "fc", rows, cols));
+    }
+
+    let calib_n = 64;
+    let calib = Tensor::from_f32(
+        (0..calib_n * dims[0].1).map(|_| rng.next_normal()).collect(),
+        &[calib_n, dims[0].1],
+    )
+    .unwrap();
+    let mut data = BTreeMap::new();
+    let mut datasets = BTreeMap::new();
+    datasets.insert("calib_x".to_string(), vec![calib_n, dims[0].1]);
+    data.insert("calib_x".to_string(), calib);
+
+    let mut lr_default = BTreeMap::new();
+    lr_default.insert("flexround".to_string(), 4e-3);
+    let model = ModelInfo {
+        name: "m".to_string(),
+        kind: "cnn".to_string(),
+        task: "synthetic".to_string(),
+        fp_metric: BTreeMap::new(),
+        symmetric: true,
+        per_channel: true,
+        bits_w: vec![BITS],
+        abits: vec![8],
+        methods_w: vec!["flexround".to_string()],
+        methods_wa: vec![],
+        calib_n,
+        calib_batch: 16,
+        seq: None,
+        units,
+        embed_artifact: None,
+        head_artifacts: BTreeMap::new(),
+        weights_file: "unused.fxt".to_string(),
+        init_file: "unused.fxt".to_string(),
+        data_file: "unused.fxt".to_string(),
+        datasets,
+        iters_default: 0,
+        lr_default,
+        drop_p_default: 0.0,
+    };
+    let mut models = BTreeMap::new();
+    models.insert("m".to_string(), model);
+    let man = Manifest { dir: std::env::temp_dir(), calib_batch: 16, models };
+    Fixture { man, weights, inits, data }
+}
+
+fn open<'a>(fx: &'a Fixture, backend: &'a Native) -> Session<'a> {
+    Session {
+        backend,
+        man: &fx.man,
+        model: fx.man.model("m").unwrap(),
+        weights: fx.weights.clone(),
+        inits: fx.inits.clone(),
+        data: fx.data.clone(),
+    }
+}
+
+/// The generic (non-packed) quantized chain, chunk by chunk.
+fn generic_forward_q(
+    sess: &Session,
+    r: &flexround::coordinator::QuantResult,
+    xs: &Tensor,
+) -> Vec<Tensor> {
+    let mut chunks = sess.first_unit_inputs(xs).unwrap();
+    for (unit, st) in sess.model.units.iter().zip(&r.units) {
+        chunks = sess.advance_q(unit, st, &r.plan.mode, &chunks).unwrap();
+    }
+    chunks
+}
+
+#[test]
+fn packed_roundtrip_serves_without_fp_weights() {
+    let fx = synthetic_fixture();
+    let backend = Native::with_workers(2);
+    let sess = open(&fx, &backend);
+    let mut plan = Plan::new("m", "flexround");
+    plan.iters = 40;
+    let result = sess.quantize(&plan).unwrap();
+
+    // save the packed artifact, then reload it from disk — the loaded model
+    // never touches `sess.weights` again
+    let pm = sess.packed_model(&result).unwrap();
+    assert!(pm.packed_bytes() < pm.fp32_bytes(), "4-bit pack must shrink the weights");
+    let path = std::env::temp_dir()
+        .join(format!("flexround_infer_roundtrip_{}.fxt", std::process::id()));
+    pm.save(&path).unwrap();
+    let loaded = PackedModel::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(pm, loaded);
+
+    let engine = Engine::new(loaded, 2);
+    let calib = sess.dataset("calib_x").unwrap();
+    let want = generic_forward_q(&sess, &result, calib);
+    let chunks = sess.first_unit_inputs(calib).unwrap();
+    assert_eq!(want.len(), chunks.len());
+    for (chunk, want) in chunks.iter().zip(&want) {
+        let got = engine.forward(chunk).unwrap();
+        assert_eq!(got.shape(), want.shape());
+        let d = got.max_abs_diff(want).unwrap();
+        let tol = 1e-4 * (1.0 + want.abs_max());
+        assert!(d <= tol, "packed engine vs f32 quantized chain: max|Δ| {d} > {tol}");
+    }
+
+    // `Session::forward_q` takes the same fast path and must agree too
+    let via_session = sess.forward_q(&result, calib).unwrap();
+    for (a, b) in via_session.iter().zip(&want) {
+        let d = a.max_abs_diff(b).unwrap();
+        assert!(d <= 1e-4 * (1.0 + b.abs_max()), "forward_q fast path drift {d}");
+    }
+}
+
+#[test]
+fn packed_export_rejects_wa_mode() {
+    let fx = synthetic_fixture();
+    let backend = Native::new();
+    let sess = open(&fx, &backend);
+    let mut plan = Plan::new("m", "flexround");
+    plan.iters = 0;
+    let mut result = sess.quantize(&plan).unwrap();
+    result.plan.mode = "wa".to_string();
+    assert!(sess.packed_model(&result).is_err());
+}

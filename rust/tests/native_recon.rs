@@ -62,7 +62,8 @@ fn golden_parity_with_python_reference() {
                 "{name}: Ŵ[{i}] = {got} vs reference {want}"
             );
         }
-        for (i, (got, want)) in codes.as_f32().unwrap().iter().zip(&want_codes).enumerate() {
+        // codes export as i32 (the bit-packable form)
+        for (i, (got, want)) in codes.to_f32_vec().iter().zip(&want_codes).enumerate() {
             assert!(
                 (got - want).abs() <= 1e-5,
                 "{name}: code[{i}] = {got} vs reference {want}"
@@ -295,7 +296,7 @@ fn native_export_codes_lie_on_grid() {
     for (unit, st) in sess.model.units.iter().zip(&r.units) {
         for (what, codes) in sess.export_qw(unit, st).unwrap() {
             assert_eq!(what.len(), codes.len());
-            for &x in codes.as_f32().unwrap() {
+            for x in codes.to_f32_vec() {
                 assert!((-8.0..=7.0).contains(&x), "code {x} outside 4-bit grid");
                 assert!((x - x.round()).abs() < 1e-4, "code {x} not integral");
             }

@@ -8,9 +8,13 @@
 #   2. full test suite (artifact tests self-skip when artifacts/ is absent)
 #   3. native-only build (--no-default-features): the backend must build
 #      with zero xla surface
-#   4. all secondary targets compile (benches, examples)
+#   4. all secondary targets compile, debug AND release (benches, examples —
+#      release because that is how the bench trajectories actually run)
 #   5. rustdoc with -D warnings: every doc reference must resolve
-#   6. rustfmt check — advisory until the pre-existing tree is formatted
+#   6. clippy with -D warnings — advisory until the pre-existing tree is
+#      lint-clean; new code (the `infer` kernels in particular) must not add
+#      warnings
+#   7. rustfmt check — advisory until the pre-existing tree is formatted
 #      (new code should be clean; the gate hardens once `cargo fmt` has
 #      been run repo-wide)
 set -eu
@@ -27,6 +31,17 @@ cargo build --no-default-features --lib --bins
 
 echo "== cargo build --all-targets (benches + examples) =="
 cargo build --all-targets
+
+echo "== cargo build --release --benches --examples =="
+cargo build --release --benches --examples
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy --all-targets (-D warnings; advisory) =="
+    cargo clippy --all-targets -- -D warnings \
+        || echo "clippy: lint drift (advisory; hardens once the pre-existing tree is clippy-clean)"
+else
+    echo "== cargo clippy unavailable; skipped =="
+fi
 
 echo "== cargo doc --no-deps (-D warnings) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
