@@ -1,0 +1,134 @@
+//! `cargo bench --bench block_recon` — perf harness for the block-by-block
+//! reconstruction pipeline (DESIGN.md §Block-Reconstruction):
+//!
+//! * FP-input vs quantized-input propagation: the quant mode maintains a
+//!   second activation chain and re-forwards it through every learned
+//!   block, so this is the cost of the paper's sequential protocol;
+//! * cached (disk-spilled) vs in-memory activations at a deliberately tiny
+//!   byte budget — the streaming overhead of a calibration set that does
+//!   not fit in RAM.
+//!
+//! Emits machine-readable results to `BENCH_block_recon.json` at the repo
+//! root, alongside the human-readable stdout lines.
+//!
+//! Environment knobs:
+//!   FLEXROUND_BENCH_ITERS   Adam steps per block (default 30)
+
+use flexround::block::{
+    run_pipeline, synthetic_block_model, PipelineOpts, ReconInput, SyntheticBlockSpec,
+};
+use flexround::runtime::Native;
+use flexround::ser::json::{self, Json};
+use std::time::Instant;
+
+fn main() {
+    let iters: usize = std::env::var("FLEXROUND_BENCH_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(30);
+    let spec = SyntheticBlockSpec {
+        blocks: 2,
+        d: 32,
+        heads: 4,
+        mlp: 64,
+        seq: 8,
+        calib_seqs: 16,
+        eval_seqs: 4,
+        chunk_seqs: 4,
+        vocab: 48,
+        bits: 4,
+        seed: 7,
+    };
+    let fx = synthetic_block_model(&spec).expect("synthetic block model");
+    let backend = Native::new();
+    let sess = fx.session(&backend);
+
+    let mut opts = PipelineOpts::new("flexround", spec.bits);
+    opts.iters = iters;
+    opts.lr = 3e-3;
+
+    println!(
+        "== block pipeline ({} blocks, d={}, heads={}, mlp={}, seq={}, {} calib seqs, {iters} iters/block) ==",
+        spec.blocks, spec.d, spec.heads, spec.mlp, spec.seq, spec.calib_seqs
+    );
+    let mut rows: Vec<(&str, f64, usize)> = Vec::new();
+    let run = |opts: &PipelineOpts| -> (f64, usize) {
+        let t0 = Instant::now();
+        let out = run_pipeline(&sess, opts).expect("pipeline run");
+        (t0.elapsed().as_secs_f64(), out.spilled_chunks)
+    };
+
+    // FP-input vs quantized-input propagation, all in memory
+    for mode in [ReconInput::Fp, ReconInput::Quant] {
+        opts.recon_input = mode;
+        opts.cache_dir = None;
+        opts.cache_budget_bytes = 0;
+        let (secs, _) = run(&opts);
+        let name: &str = match mode {
+            ReconInput::Fp => "fp_input_in_memory",
+            ReconInput::Quant => "quant_input_in_memory",
+        };
+        println!("{name:<26} {:.3}s", secs);
+        rows.push((name, secs, 0));
+    }
+
+    // cached vs in-memory at a tiny budget (quant mode, the expensive one)
+    let dir = std::env::temp_dir().join(format!("flexround_bench_blockcache_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("bench cache dir");
+    opts.recon_input = ReconInput::Quant;
+    opts.cache_dir = Some(dir.clone());
+    // one chunk = chunk_seqs·seq·d·4 bytes; keep ~1.5 chunks resident
+    opts.cache_budget_bytes = spec.chunk_seqs * spec.seq * spec.d * 6;
+    let (secs_cached, spilled) = run(&opts);
+    println!("quant_input_disk_cached    {secs_cached:.3}s ({spilled} chunk spills)");
+    rows.push(("quant_input_disk_cached", secs_cached, spilled));
+    std::fs::remove_dir_all(&dir).ok();
+
+    let fp_secs = rows[0].1;
+    let quant_secs = rows[1].1;
+    println!(
+        "  → quant-input propagation costs {:.2}× fp-input; disk cache costs {:.2}× in-memory",
+        quant_secs / fp_secs.max(1e-9),
+        secs_cached / quant_secs.max(1e-9)
+    );
+
+    let doc = Json::object(vec![
+        ("bench", Json::from_str_val("block_recon")),
+        ("blocks", Json::from_f64(spec.blocks as f64)),
+        ("d", Json::from_f64(spec.d as f64)),
+        ("heads", Json::from_f64(spec.heads as f64)),
+        ("mlp", Json::from_f64(spec.mlp as f64)),
+        ("seq", Json::from_f64(spec.seq as f64)),
+        ("calib_seqs", Json::from_f64(spec.calib_seqs as f64)),
+        ("iters_per_block", Json::from_f64(iters as f64)),
+        (
+            "runs",
+            Json::Arr(
+                rows.iter()
+                    .map(|(name, secs, spills)| {
+                        Json::object(vec![
+                            ("name", Json::from_str_val(name)),
+                            ("seconds", Json::from_f64(*secs)),
+                            ("chunk_spills", Json::from_f64(*spills as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "ratios",
+            Json::object(vec![
+                ("quant_vs_fp_input", Json::from_f64(quant_secs / fp_secs.max(1e-9))),
+                (
+                    "disk_cached_vs_in_memory",
+                    Json::from_f64(secs_cached / quant_secs.max(1e-9)),
+                ),
+            ]),
+        ),
+    ]);
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_block_recon.json");
+    match std::fs::write(out, json::to_string(&doc, 2) + "\n") {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

@@ -1,0 +1,250 @@
+//! Chunked, disk-spillable activation cache (DESIGN.md
+//! §Block-Reconstruction).
+//!
+//! The block-by-block pipeline keeps up to three activation chains alive
+//! (FP targets, FP inputs, quantized-path inputs); at LLM calibration sizes
+//! those no longer fit in RAM.  An [`ActivationCache`] holds an ordered list
+//! of activation chunks and, once the in-memory total exceeds its byte
+//! budget, spills the *oldest* in-memory chunk to a single-tensor FXT file
+//! under the cache directory ([`crate::ser::fxt`] — the same container every
+//! other artifact uses, so spilled chunks are inspectable with the normal
+//! tooling).  Reads are transparent: [`ActivationCache::get`] reloads from
+//! disk when needed, without promoting the chunk back into the budget.
+//!
+//! Without a cache directory the budget is ignored and everything stays in
+//! memory — the small-model fast path.  Spill files are deleted on drop
+//! (best effort), so an aborted pipeline leaves at most one run's chunks
+//! behind.
+
+use crate::ser::fxt;
+use crate::tensor::Tensor;
+use crate::Result;
+use anyhow::{anyhow, bail};
+use std::borrow::Cow;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-unique cache tags so concurrent caches (and pipeline stages)
+/// never collide on spill-file names.
+static NEXT_TAG: AtomicU64 = AtomicU64::new(0);
+
+const SPILL_KEY: &str = "a";
+
+enum Slot {
+    Mem(Tensor),
+    Disk(PathBuf),
+}
+
+/// An ordered store of activation chunks with a byte budget and optional
+/// disk spill.
+pub struct ActivationCache {
+    budget_bytes: usize,
+    dir: Option<PathBuf>,
+    tag: u64,
+    slots: Vec<Slot>,
+    mem_bytes: usize,
+    spilled: usize,
+    /// index of the oldest chunk still in memory (spill frontier)
+    frontier: usize,
+}
+
+impl ActivationCache {
+    /// In-memory-only cache (no budget enforcement).
+    pub fn unbounded() -> ActivationCache {
+        ActivationCache::with_budget(usize::MAX, None)
+    }
+
+    /// Cache that spills to `dir` once the in-memory total exceeds
+    /// `budget_bytes`.  With `dir = None` the budget is ignored.
+    pub fn with_budget(budget_bytes: usize, dir: Option<&Path>) -> ActivationCache {
+        ActivationCache {
+            budget_bytes,
+            dir: dir.map(Path::to_path_buf),
+            tag: NEXT_TAG.fetch_add(1, Ordering::Relaxed),
+            slots: Vec::new(),
+            mem_bytes: 0,
+            spilled: 0,
+            frontier: 0,
+        }
+    }
+
+    /// Build a cache from chunks already in hand (spilling as it goes).
+    pub fn from_chunks(
+        chunks: Vec<Tensor>,
+        budget_bytes: usize,
+        dir: Option<&Path>,
+    ) -> Result<ActivationCache> {
+        let mut c = ActivationCache::with_budget(budget_bytes, dir);
+        for t in chunks {
+            c.push(t)?;
+        }
+        Ok(c)
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Chunks currently spilled to disk.
+    pub fn spilled_chunks(&self) -> usize {
+        self.spilled
+    }
+
+    /// Bytes currently held in memory.
+    pub fn mem_bytes(&self) -> usize {
+        self.mem_bytes
+    }
+
+    fn spill_path(&self, i: usize) -> PathBuf {
+        let dir = self.dir.as_ref().expect("spill without a cache dir");
+        dir.join(format!("actcache_{}_{}_{i:06}.fxt", std::process::id(), self.tag))
+    }
+
+    /// Append a chunk, spilling the oldest in-memory chunks until the budget
+    /// holds again (the newest chunk itself may end up on disk when a single
+    /// chunk exceeds the whole budget).
+    pub fn push(&mut self, t: Tensor) -> Result<()> {
+        self.mem_bytes += t.len() * 4;
+        self.slots.push(Slot::Mem(t));
+        if self.dir.is_some() {
+            while self.mem_bytes > self.budget_bytes && self.frontier < self.slots.len() {
+                let i = self.frontier;
+                self.frontier += 1;
+                let Slot::Mem(tensor) = &self.slots[i] else { continue };
+                let path = self.spill_path(i);
+                let mut m = BTreeMap::new();
+                m.insert(SPILL_KEY.to_string(), tensor.clone());
+                fxt::write(&path, &m)
+                    .map_err(|e| anyhow!("spilling activation chunk {i}: {e:#}"))?;
+                self.mem_bytes -= tensor.len() * 4;
+                self.spilled += 1;
+                self.slots[i] = Slot::Disk(path);
+            }
+        }
+        Ok(())
+    }
+
+    /// Fetch chunk `i`: borrowed straight from memory (no copy for resident
+    /// chunks — the streamed Adam loop reads a chunk per step), or owned
+    /// after reloading from its spill file.
+    pub fn get(&self, i: usize) -> Result<Cow<'_, Tensor>> {
+        match self.slots.get(i) {
+            None => bail!("activation cache has {} chunks, asked for {i}", self.slots.len()),
+            Some(Slot::Mem(t)) => Ok(Cow::Borrowed(t)),
+            Some(Slot::Disk(path)) => {
+                let mut m = fxt::read(path)?;
+                let t = m
+                    .remove(SPILL_KEY)
+                    .ok_or_else(|| anyhow!("spill file {} lost its tensor", path.display()))?;
+                Ok(Cow::Owned(t))
+            }
+        }
+    }
+
+    /// Total rows across all chunks (axis 0).
+    pub fn total_rows(&self) -> Result<usize> {
+        let mut n = 0;
+        for i in 0..self.slots.len() {
+            n += match &self.slots[i] {
+                Slot::Mem(t) => t.shape().first().copied().unwrap_or(0),
+                Slot::Disk(_) => self.get(i)?.shape().first().copied().unwrap_or(0),
+            };
+        }
+        Ok(n)
+    }
+}
+
+impl Drop for ActivationCache {
+    fn drop(&mut self) {
+        for s in &self.slots {
+            if let Slot::Disk(path) = s {
+                let _ = std::fs::remove_file(path);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn chunk(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg32::seeded(seed);
+        Tensor::from_f32((0..rows * cols).map(|_| rng.next_normal()).collect(), &[rows, cols])
+            .unwrap()
+    }
+
+    #[test]
+    fn unbounded_cache_round_trips() {
+        let mut c = ActivationCache::unbounded();
+        assert!(c.is_empty());
+        let a = chunk(4, 8, 1);
+        let b = chunk(2, 8, 2);
+        c.push(a.clone()).unwrap();
+        c.push(b.clone()).unwrap();
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.spilled_chunks(), 0);
+        // resident chunks come back borrowed (no copy)
+        assert!(matches!(c.get(0).unwrap(), std::borrow::Cow::Borrowed(_)));
+        assert_eq!(c.get(0).unwrap().as_ref(), &a);
+        assert_eq!(c.get(1).unwrap().as_ref(), &b);
+        assert_eq!(c.total_rows().unwrap(), 6);
+        assert!(c.get(2).is_err());
+    }
+
+    #[test]
+    fn over_budget_chunks_spill_to_disk_and_read_back() {
+        let dir = std::env::temp_dir()
+            .join(format!("flexround_actcache_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // budget of ~1.5 chunks: pushing 4 chunks of 4×8 f32 (128 bytes each)
+        // must spill at least two of them
+        let mut c = ActivationCache::with_budget(192, Some(&dir));
+        let chunks: Vec<Tensor> = (0..4).map(|i| chunk(4, 8, 10 + i as u64)).collect();
+        for t in &chunks {
+            c.push(t.clone()).unwrap();
+        }
+        assert!(
+            c.spilled_chunks() >= 2,
+            "expected ≥2 spilled chunks, got {}",
+            c.spilled_chunks()
+        );
+        assert!(c.mem_bytes() <= 192, "budget violated: {} bytes in memory", c.mem_bytes());
+        // every chunk — spilled or resident — reads back bit-identical
+        for (i, want) in chunks.iter().enumerate() {
+            assert_eq!(c.get(i).unwrap().as_ref(), want, "chunk {i} round trip");
+        }
+        // spill files vanish on drop
+        let files = || {
+            std::fs::read_dir(&dir)
+                .unwrap()
+                .filter(|e| {
+                    e.as_ref()
+                        .unwrap()
+                        .file_name()
+                        .to_string_lossy()
+                        .starts_with("actcache_")
+                })
+                .count()
+        };
+        assert!(files() >= 2);
+        drop(c);
+        assert_eq!(files(), 0, "spill files must be removed on drop");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn budget_without_dir_stays_in_memory() {
+        let mut c = ActivationCache::with_budget(1, None);
+        c.push(chunk(4, 4, 3)).unwrap();
+        c.push(chunk(4, 4, 4)).unwrap();
+        assert_eq!(c.spilled_chunks(), 0);
+        assert_eq!(c.len(), 2);
+    }
+}

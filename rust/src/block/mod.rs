@@ -1,0 +1,921 @@
+//! Native transformer-block substrate (DESIGN.md §Block-Reconstruction).
+//!
+//! The paper's headline LLM result comes from "reconstructing the output in
+//! a block-by-block manner": each transformer block is one reconstruction
+//! unit, its six contraction weights (`wq wk wv wo up down`) fake-quantized
+//! with FlexRound Eq. 2 while layernorms, softmax attention, GELU, and the
+//! residual adds run in full precision.  This module provides that unit kind
+//! natively:
+//!
+//! * [`BlockDef`] — borrowed views of one `transformer_block` unit (the six
+//!   weights in canonical order, biases, layernorm parameters, head count,
+//!   rows-per-sequence);
+//! * [`forward_fp`] / [`forward_with`] — the pre-LN block forward
+//!   (`x → LN → QKV → causal softmax attention → proj → +x → LN → GELU MLP
+//!   → +`), FP weights or any substituted weight set (fake-quantized Ŵ);
+//! * [`attn_forward`] / [`attn_backward`] — multi-head causal attention
+//!   with cached probabilities, shared with the packed inference engine;
+//! * [`loss_and_grads`] — output-MSE loss plus the full backward pass:
+//!   activation cotangents through residuals / layernorm / GELU / softmax
+//!   (all smooth, finite-difference-checked in `tensor::ops` and here),
+//!   then [`recon::fq_backward`]'s closed-form STE (the Proposition 3.1
+//!   reciprocal rule) into the per-layer FlexRound parameters;
+//! * [`reconstruct_block`] — the Adam loop over calibration minibatches,
+//!   sampling whole *sequences* (attention couples rows within a sequence,
+//!   so row-level sampling would tear contexts apart).
+//!
+//! The sequential block-by-block driver (quantized-input propagation, the
+//! disk-spillable activation cache) lives in [`pipeline`]; [`cache`] holds
+//! the spill machinery.
+
+pub mod cache;
+pub mod pipeline;
+
+pub use cache::ActivationCache;
+pub use pipeline::{
+    chain_mse, mse_vs_fp, run_pipeline, synthetic_block_model, PipelineOpts, PipelineOutcome,
+    ReconInput, SyntheticBlockModel, SyntheticBlockSpec,
+};
+
+use crate::manifest::PackEntry;
+use crate::recon::{self, LayerSlots, ReconResult, ReconSettings};
+use crate::runtime::UnitCtx;
+use crate::tensor::{
+    gelu_bwd, layernorm_rows, layernorm_rows_bwd, minmax_scale, softmax_rows_bwd, Tensor,
+};
+use crate::util::rng::Pcg32;
+use crate::Result;
+use anyhow::{anyhow, bail};
+
+/// Canonical layer names (and order) of a `transformer_block` unit: the
+/// attention projections, then the GELU MLP pair.
+pub const CANON_LAYERS: [&str; 6] = ["wq", "wk", "wv", "wo", "up", "down"];
+
+/// Layernorm epsilon — shared by the native substrate and the packed
+/// inference engine so both paths are bit-comparable.
+pub const LN_EPS: f32 = 1e-5;
+
+/// Borrowed views of one transformer block: everything the forward/backward
+/// needs, nothing owned.
+pub struct BlockDef<'a> {
+    pub name: &'a str,
+    /// attention heads (hidden width must divide evenly)
+    pub heads: usize,
+    /// rows per sequence: attention attends within consecutive `seq`-row
+    /// groups of the activation matrix, causally
+    pub seq: usize,
+    /// hidden width
+    pub d: usize,
+    /// MLP inner width
+    pub mlp: usize,
+    /// the six contraction weights, [`CANON_LAYERS`] order
+    pub w: [&'a Tensor; 6],
+    /// per-layer biases, same order
+    pub b: [Option<&'a Tensor>; 6],
+    pub ln1_g: &'a Tensor,
+    pub ln1_b: &'a Tensor,
+    pub ln2_g: &'a Tensor,
+    pub ln2_b: &'a Tensor,
+}
+
+/// Build a [`BlockDef`] from an engine unit context: canonical layer list,
+/// weight shapes, layernorm extras (`p/{unit}/ln{1,2}.{g,b}` in the weights
+/// FXT), head divisibility, and the model's `seq` are all validated here so
+/// every downstream path gets one precise error.
+pub fn block_def_for<'a>(cx: &UnitCtx<'a>) -> Result<BlockDef<'a>> {
+    let unit = cx.unit;
+    if unit.kind != "transformer_block" {
+        bail!("block_def_for on unit {:?} of kind {:?}", unit.name, unit.kind);
+    }
+    let names: Vec<&str> = unit.layers.iter().map(|l| l.name.as_str()).collect();
+    if names != CANON_LAYERS {
+        bail!(
+            "transformer_block unit {:?} must list layers {CANON_LAYERS:?} in order, \
+             got {names:?}",
+            unit.name
+        );
+    }
+    let seq = cx.model.seq.ok_or_else(|| {
+        anyhow!(
+            "model {:?} has no \"seq\"; transformer_block attention needs the \
+             rows-per-sequence length",
+            cx.model.name
+        )
+    })?;
+    if seq == 0 {
+        bail!("model {:?}: seq must be ≥ 1", cx.model.name);
+    }
+    let heads = unit.heads.max(1);
+    let d = unit.layers[0].rows;
+    let mlp = unit.layers[4].rows;
+    let expect: [(usize, usize); 6] = [(d, d), (d, d), (d, d), (d, d), (mlp, d), (d, mlp)];
+    let mut w: Vec<&Tensor> = Vec::with_capacity(6);
+    let mut b: Vec<Option<&Tensor>> = Vec::with_capacity(6);
+    for (i, layer) in unit.layers.iter().enumerate() {
+        if (layer.rows, layer.cols) != expect[i] {
+            bail!(
+                "transformer_block {:?}: layer {:?} is {}×{}, expected {}×{}",
+                unit.name,
+                layer.name,
+                layer.rows,
+                layer.cols,
+                expect[i].0,
+                expect[i].1
+            );
+        }
+        let t = cx.weights.get(i).copied().flatten().ok_or_else(|| {
+            anyhow!(
+                "transformer_block {:?}: missing weights w/{}/{} in the model's FXT export",
+                unit.name,
+                unit.name,
+                layer.name
+            )
+        })?;
+        if t.shape() != &[layer.rows, layer.cols][..] {
+            bail!(
+                "transformer_block {:?}: weights for {:?} have shape {:?}, expected \
+                 [{}, {}]",
+                unit.name,
+                layer.name,
+                t.shape(),
+                layer.rows,
+                layer.cols
+            );
+        }
+        w.push(t);
+        b.push(cx.biases.get(i).copied().flatten());
+    }
+    if d % heads != 0 {
+        bail!(
+            "transformer_block {:?}: hidden width {d} not divisible by {heads} heads",
+            unit.name
+        );
+    }
+    let ln = |key: &str| -> Result<&'a Tensor> {
+        let t = cx.extras.get(key).copied().ok_or_else(|| {
+            anyhow!(
+                "transformer_block {:?}: missing layernorm tensor p/{}/{key} in the \
+                 weights FXT",
+                unit.name,
+                unit.name
+            )
+        })?;
+        if t.len() != d {
+            bail!(
+                "transformer_block {:?}: p/{}/{key} has {} values, expected hidden \
+                 width {d}",
+                unit.name,
+                unit.name,
+                t.len()
+            );
+        }
+        Ok(t)
+    };
+    Ok(BlockDef {
+        name: &unit.name,
+        heads,
+        seq,
+        d,
+        mlp,
+        w: [w[0], w[1], w[2], w[3], w[4], w[5]],
+        b: [b[0], b[1], b[2], b[3], b[4], b[5]],
+        ln1_g: ln("ln1.g")?,
+        ln1_b: ln("ln1.b")?,
+        ln2_g: ln("ln2.g")?,
+        ln2_b: ln("ln2.b")?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Multi-head causal attention
+// ---------------------------------------------------------------------------
+
+/// Multi-head causal softmax attention over `(n, d)` projections, attending
+/// within consecutive `seq`-row groups.  Returns the context `(n, d)` plus
+/// the cached attention probabilities — one row-stochastic, lower-triangular
+/// `(seq, seq)` tensor per `(sequence, head)` in `s·heads + h` order — which
+/// [`attn_backward`] consumes.
+pub fn attn_forward(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    heads: usize,
+    seq: usize,
+) -> Result<(Tensor, Vec<Tensor>)> {
+    attn_impl(q, k, v, heads, seq, true)
+}
+
+/// Forward-only attention: the context with **no** probability caches — the
+/// serving/inference hot path ([`crate::infer::Engine`]), which never runs a
+/// backward and should not allocate `nseq·heads` score tensors per call.
+pub fn attn_ctx(q: &Tensor, k: &Tensor, v: &Tensor, heads: usize, seq: usize) -> Result<Tensor> {
+    Ok(attn_impl(q, k, v, heads, seq, false)?.0)
+}
+
+fn attn_impl(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    heads: usize,
+    seq: usize,
+    want_probs: bool,
+) -> Result<(Tensor, Vec<Tensor>)> {
+    let (n, d) = check_attn_shapes(q, k, v, heads, seq)?;
+    let dh = d / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let (qv, kv, vv) = (q.as_f32()?, k.as_f32()?, v.as_f32()?);
+    let nseq = n / seq;
+    let mut ctx = vec![0.0f32; n * d];
+    let mut probs = Vec::with_capacity(if want_probs { nseq * heads } else { 0 });
+    // scratch for the forward-only path: the ctx accumulation only ever
+    // reads the freshly-written causal prefix of each row, so stale entries
+    // past the frontier are harmless and the buffer needs no re-zeroing
+    let mut scratch = vec![0.0f32; seq * seq];
+    for s in 0..nseq {
+        let base = s * seq;
+        for h in 0..heads {
+            let c0 = h * dh;
+            let mut owned = if want_probs { Some(vec![0.0f32; seq * seq]) } else { None };
+            let p: &mut [f32] = match owned.as_mut() {
+                Some(v) => v,
+                None => &mut scratch,
+            };
+            for i in 0..seq {
+                let qi = &qv[(base + i) * d + c0..(base + i) * d + c0 + dh];
+                let row = &mut p[i * seq..(i + 1) * seq];
+                let mut mx = f32::NEG_INFINITY;
+                for (j, rj) in row.iter_mut().enumerate().take(i + 1) {
+                    let kj = &kv[(base + j) * d + c0..(base + j) * d + c0 + dh];
+                    let mut acc = 0.0f32;
+                    for (a, b) in qi.iter().zip(kj) {
+                        acc += a * b;
+                    }
+                    *rj = acc * scale;
+                    mx = mx.max(*rj);
+                }
+                let mut sum = 0.0f32;
+                for rj in row.iter_mut().take(i + 1) {
+                    *rj = (*rj - mx).exp();
+                    sum += *rj;
+                }
+                let inv = 1.0 / sum;
+                for rj in row.iter_mut().take(i + 1) {
+                    *rj *= inv;
+                }
+                // cached rows beyond the causal frontier stay exactly zero
+                let crow = &mut ctx[(base + i) * d + c0..(base + i) * d + c0 + dh];
+                for (j, &pij) in p[i * seq..(i + 1) * seq].iter().enumerate().take(i + 1) {
+                    let vj = &vv[(base + j) * d + c0..(base + j) * d + c0 + dh];
+                    for (c, b) in crow.iter_mut().zip(vj) {
+                        *c += pij * b;
+                    }
+                }
+            }
+            if let Some(v) = owned {
+                probs.push(Tensor::from_f32(v, &[seq, seq])?);
+            }
+        }
+    }
+    Ok((Tensor::from_f32(ctx, &[n, d])?, probs))
+}
+
+/// Backward of [`attn_forward`]: given `∂L/∂ctx`, return
+/// `(∂L/∂q, ∂L/∂k, ∂L/∂v)` using the cached probabilities (softmax backward
+/// runs off the forward output — masked entries carry zero probability and
+/// therefore zero gradient).
+pub fn attn_backward(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    probs: &[Tensor],
+    dctx: &Tensor,
+    heads: usize,
+    seq: usize,
+) -> Result<(Tensor, Tensor, Tensor)> {
+    let (n, d) = check_attn_shapes(q, k, v, heads, seq)?;
+    if dctx.shape() != q.shape() {
+        bail!("attn_backward: dctx {:?} vs q {:?}", dctx.shape(), q.shape());
+    }
+    let nseq = n / seq;
+    if probs.len() != nseq * heads {
+        bail!("attn_backward: {} prob tensors for {} (sequence, head) pairs", probs.len(), nseq * heads);
+    }
+    let dh = d / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let (qv, kv, gv) = (q.as_f32()?, k.as_f32()?, dctx.as_f32()?);
+    let vv = v.as_f32()?;
+    let mut dq = vec![0.0f32; n * d];
+    let mut dk = vec![0.0f32; n * d];
+    let mut dv = vec![0.0f32; n * d];
+    for s in 0..nseq {
+        let base = s * seq;
+        for h in 0..heads {
+            let c0 = h * dh;
+            let p = &probs[s * heads + h];
+            if p.shape() != &[seq, seq][..] {
+                bail!("attn_backward: prob tensor {:?}, expected [{seq}, {seq}]", p.shape());
+            }
+            let pv = p.as_f32()?;
+            // dA[i][j] = dctx_i · v_j ;  dv_j += p[i][j] · dctx_i
+            let mut da = vec![0.0f32; seq * seq];
+            for i in 0..seq {
+                let gi = &gv[(base + i) * d + c0..(base + i) * d + c0 + dh];
+                for j in 0..=i {
+                    let vj = &vv[(base + j) * d + c0..(base + j) * d + c0 + dh];
+                    let mut acc = 0.0f32;
+                    for (a, b) in gi.iter().zip(vj) {
+                        acc += a * b;
+                    }
+                    da[i * seq + j] = acc;
+                    let pij = pv[i * seq + j];
+                    let dvj = &mut dv[(base + j) * d + c0..(base + j) * d + c0 + dh];
+                    for (o, a) in dvj.iter_mut().zip(gi) {
+                        *o += pij * a;
+                    }
+                }
+            }
+            let ds = softmax_rows_bwd(p, &Tensor::from_f32(da, &[seq, seq])?)?;
+            let dsv = ds.as_f32()?;
+            // dq_i = scale · Σ_j ds[i][j] k_j ;  dk_j = scale · Σ_i ds[i][j] q_i
+            for i in 0..seq {
+                let qi = &qv[(base + i) * d + c0..(base + i) * d + c0 + dh];
+                for j in 0..=i {
+                    let dsij = scale * dsv[i * seq + j];
+                    if dsij == 0.0 {
+                        continue;
+                    }
+                    let kj = &kv[(base + j) * d + c0..(base + j) * d + c0 + dh];
+                    let dqi = &mut dq[(base + i) * d + c0..(base + i) * d + c0 + dh];
+                    for (o, b) in dqi.iter_mut().zip(kj) {
+                        *o += dsij * b;
+                    }
+                    let dkj = &mut dk[(base + j) * d + c0..(base + j) * d + c0 + dh];
+                    for (o, a) in dkj.iter_mut().zip(qi) {
+                        *o += dsij * a;
+                    }
+                }
+            }
+        }
+    }
+    Ok((
+        Tensor::from_f32(dq, &[n, d])?,
+        Tensor::from_f32(dk, &[n, d])?,
+        Tensor::from_f32(dv, &[n, d])?,
+    ))
+}
+
+fn check_attn_shapes(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    heads: usize,
+    seq: usize,
+) -> Result<(usize, usize)> {
+    if q.ndim() != 2 || q.shape() != k.shape() || q.shape() != v.shape() {
+        bail!(
+            "attention: q/k/v shapes {:?}/{:?}/{:?} must be equal 2-D",
+            q.shape(),
+            k.shape(),
+            v.shape()
+        );
+    }
+    let (n, d) = (q.shape()[0], q.shape()[1]);
+    if heads == 0 || seq == 0 || d % heads != 0 {
+        bail!("attention: width {d} not divisible by {heads} heads (seq {seq})");
+    }
+    if n % seq != 0 {
+        bail!("attention: {n} rows not a multiple of seq {seq}");
+    }
+    Ok((n, d))
+}
+
+// ---------------------------------------------------------------------------
+// Block forward (FP and substituted-weight)
+// ---------------------------------------------------------------------------
+
+struct FwdCache {
+    h1: Tensor,
+    q: Tensor,
+    k: Tensor,
+    v: Tensor,
+    probs: Vec<Tensor>,
+    ctx: Tensor,
+    x2: Tensor,
+    mean2: Vec<f32>,
+    rstd2: Vec<f32>,
+    h2: Tensor,
+    up_pre: Tensor,
+    m: Tensor,
+    y: Tensor,
+}
+
+fn forward_cached(
+    def: &BlockDef,
+    w: &[&Tensor],
+    x: &Tensor,
+    workers: usize,
+    want_probs: bool,
+) -> Result<FwdCache> {
+    if w.len() != 6 {
+        bail!("block forward: {} weight tensors for 6 layers", w.len());
+    }
+    if x.ndim() != 2 || x.shape()[1] != def.d {
+        bail!("block {:?}: input {:?}, expected (n, {})", def.name, x.shape(), def.d);
+    }
+    if x.shape()[0] % def.seq != 0 {
+        bail!(
+            "block {:?}: {} input rows not a multiple of seq {}",
+            def.name,
+            x.shape()[0],
+            def.seq
+        );
+    }
+    let proj = |xin: &Tensor, i: usize| -> Result<Tensor> {
+        let mut y = recon::matmul_nt_par(xin, w[i], workers)?;
+        let bias = def.b[i].map(|t| t.as_f32()).transpose()?;
+        y.bias_relu_inplace(bias, false)?;
+        Ok(y)
+    };
+    let (h1, _, _) = layernorm_rows(x, def.ln1_g.as_f32()?, def.ln1_b.as_f32()?, LN_EPS)?;
+    let q = proj(&h1, 0)?;
+    let k = proj(&h1, 1)?;
+    let v = proj(&h1, 2)?;
+    let (ctx, probs) = attn_impl(&q, &k, &v, def.heads, def.seq, want_probs)?;
+    let attn = proj(&ctx, 3)?;
+    let x2 = x.zip(&attn, |a, b| a + b)?;
+    let (h2, mean2, rstd2) =
+        layernorm_rows(&x2, def.ln2_g.as_f32()?, def.ln2_b.as_f32()?, LN_EPS)?;
+    let up_pre = proj(&h2, 4)?;
+    let m = up_pre.gelu();
+    let down = proj(&m, 5)?;
+    let y = x2.zip(&down, |a, b| a + b)?;
+    Ok(FwdCache { h1, q, k, v, probs, ctx, x2, mean2, rstd2, h2, up_pre, m, y })
+}
+
+/// Block forward with an explicit weight set (fake-quantized Ŵ, or any
+/// substitution) — layernorms, attention, GELU, biases and residuals stay
+/// full-precision.  Forward-only: no backward caches are materialized.
+pub fn forward_with(def: &BlockDef, w: &[&Tensor], x: &Tensor, workers: usize) -> Result<Tensor> {
+    Ok(forward_cached(def, w, x, workers, false)?.y)
+}
+
+/// Full-precision block forward (the calibration-target path).
+pub fn forward_fp(def: &BlockDef, x: &Tensor, workers: usize) -> Result<Tensor> {
+    forward_with(def, &def.w, x, workers)
+}
+
+/// Materialize the six fake-quantized Ŵ from the current parameter pack.
+pub fn block_whats(
+    def: &BlockDef,
+    slots: &[LayerSlots],
+    params: &[Tensor],
+    qmin: f32,
+    qmax: f32,
+) -> Result<Vec<Tensor>> {
+    if slots.len() != 6 {
+        bail!("block {:?}: {} slot groups for 6 layers", def.name, slots.len());
+    }
+    def.w
+        .iter()
+        .zip(slots)
+        .map(|(w, s)| {
+            recon::fq_forward(
+                w,
+                &params[s.s1],
+                s.s2.map(|i| &params[i]),
+                s.s3.map(|i| &params[i]),
+                s.s4.map(|i| &params[i]),
+                &params[s.zp],
+                qmin,
+                qmax,
+            )
+        })
+        .collect()
+}
+
+/// Quantized block forward with the current parameter pack.
+pub fn forward_q(
+    def: &BlockDef,
+    slots: &[LayerSlots],
+    params: &[Tensor],
+    qmin: f32,
+    qmax: f32,
+    x: &Tensor,
+    workers: usize,
+) -> Result<Tensor> {
+    let whats = block_whats(def, slots, params, qmin, qmax)?;
+    let refs: Vec<&Tensor> = whats.iter().collect();
+    forward_with(def, &refs, x, workers)
+}
+
+// ---------------------------------------------------------------------------
+// Loss + gradients for one minibatch
+// ---------------------------------------------------------------------------
+
+/// Forward the minibatch through the fake-quantized block, compute
+/// `L = mean((ŷ − y)²)`, and backpropagate — through the residual adds,
+/// layernorm, GELU, the attention softmax, and finally
+/// [`recon::fq_backward`]'s STE — into per-entry parameter gradients.
+#[allow(clippy::too_many_arguments)]
+pub fn loss_and_grads(
+    def: &BlockDef,
+    slots: &[LayerSlots],
+    params: &[Tensor],
+    xb: &Tensor,
+    yb: &Tensor,
+    qmin: f32,
+    qmax: f32,
+    workers: usize,
+) -> Result<(f64, Vec<Option<Tensor>>)> {
+    let whats = block_whats(def, slots, params, qmin, qmax)?;
+    let refs: Vec<&Tensor> = whats.iter().collect();
+    let cache = forward_cached(def, &refs, xb, workers, true)?;
+    let yhat = &cache.y;
+    let loss = yhat.mse(yb)? as f64;
+
+    // ∂L/∂ŷ = 2(ŷ − y)/N
+    let n_inv = 2.0 / yhat.len() as f32;
+    let g = yhat.zip(yb, move |a, b| n_inv * (a - b))?;
+
+    // ---- MLP path: y = x2 + gelu(h2·Ŵupᵀ + bup)·Ŵdownᵀ + bdown ----
+    let d_down = g.matmul_tn(&cache.m)?; // ∂L/∂Ŵdown  (d, mlp)
+    let dm = g.matmul_nn(&whats[5])?; // (n, mlp)
+    let dup_pre = gelu_bwd(&cache.up_pre, &dm)?;
+    let d_up = dup_pre.matmul_tn(&cache.h2)?; // ∂L/∂Ŵup  (mlp, d)
+    let dh2 = dup_pre.matmul_nn(&whats[4])?; // (n, d)
+    let (dx2_ln, _, _) = layernorm_rows_bwd(
+        &cache.x2,
+        def.ln2_g.as_f32()?,
+        &cache.mean2,
+        &cache.rstd2,
+        &dh2,
+    )?;
+    // residual: x2 feeds both the MLP branch (via ln2) and y directly
+    let dx2 = g.zip(&dx2_ln, |a, b| a + b)?;
+
+    // ---- attention path: x2 = x + (attn(ln1(x))·Ŵoᵀ + bo) ----
+    let d_wo = dx2.matmul_tn(&cache.ctx)?; // ∂L/∂Ŵo  (d, d)
+    let dctx = dx2.matmul_nn(&whats[3])?; // (n, d)
+    let (dq, dk, dv) =
+        attn_backward(&cache.q, &cache.k, &cache.v, &cache.probs, &dctx, def.heads, def.seq)?;
+    let d_wq = dq.matmul_tn(&cache.h1)?;
+    let d_wk = dk.matmul_tn(&cache.h1)?;
+    let d_wv = dv.matmul_tn(&cache.h1)?;
+
+    // ---- STE into the FlexRound parameters, per layer ----
+    let mut grads: Vec<Option<Tensor>> = params.iter().map(|_| None).collect();
+    let dwhats = [d_wq, d_wk, d_wv, d_wo, d_up, d_down];
+    for (i, dwhat) in dwhats.iter().enumerate() {
+        let s = &slots[i];
+        let fg = recon::fq_backward(
+            def.w[i],
+            &params[s.s1],
+            s.s2.map(|j| &params[j]),
+            s.s3.map(|j| &params[j]),
+            s.s4.map(|j| &params[j]),
+            &params[s.zp],
+            dwhat,
+            qmin,
+            qmax,
+        )?;
+        grads[s.s1] = Some(fg.ds1);
+        if let (Some(j), Some(d)) = (s.s2, fg.ds2) {
+            grads[j] = Some(d);
+        }
+        if let (Some(j), Some(d)) = (s.s3, fg.ds3) {
+            grads[j] = Some(d);
+        }
+        if let (Some(j), Some(d)) = (s.s4, fg.ds4) {
+            grads[j] = Some(d);
+        }
+    }
+    Ok((loss, grads))
+}
+
+// ---------------------------------------------------------------------------
+// The per-block reconstruction loop
+// ---------------------------------------------------------------------------
+
+/// Expand sampled sequence indices into their row indices (`seq`
+/// consecutive rows per sequence) — the sequence-minibatch gather shared by
+/// [`reconstruct_block`] and the pipeline's streamed loop.
+pub fn seq_rows(sidx: &[usize], seq: usize) -> Vec<usize> {
+    let mut rows = Vec::with_capacity(sidx.len() * seq);
+    for &s in sidx {
+        rows.extend(s * seq..(s + 1) * seq);
+    }
+    rows
+}
+
+/// Learn one block's FlexRound parameters: [`recon::run_adam`] over random
+/// calibration minibatches of whole sequences.  `cfg.batch` is in *rows*;
+/// it is rounded down to whole sequences (at least one) because attention
+/// couples the rows of a sequence.
+#[allow(clippy::too_many_arguments)]
+pub fn reconstruct_block(
+    def: &BlockDef,
+    slots: &[LayerSlots],
+    entries: &[PackEntry],
+    params0: &[Tensor],
+    x: &Tensor,
+    y: &Tensor,
+    cfg: &ReconSettings,
+    rng: &mut Pcg32,
+) -> Result<ReconResult> {
+    if x.shape()[0] != y.shape()[0] {
+        bail!("calibration rows {} vs target rows {}", x.shape()[0], y.shape()[0]);
+    }
+    let n = x.shape()[0];
+    if n % def.seq != 0 {
+        bail!("block {:?}: {n} calibration rows not a multiple of seq {}", def.name, def.seq);
+    }
+    let nseq = n / def.seq;
+    let batch_seqs = (cfg.batch / def.seq).clamp(1, nseq);
+    recon::run_adam(entries, params0, cfg, rng, |rng, params| {
+        let rows = seq_rows(&rng.sample_indices(nseq, batch_seqs), def.seq);
+        let xb = x.gather_rows(&rows)?;
+        let yb = y.gather_rows(&rows)?;
+        loss_and_grads(def, slots, params, &xb, &yb, cfg.qmin, cfg.qmax, cfg.workers)
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Owned synthetic blocks (tests, benches, the CLI `--synthetic` path)
+// ---------------------------------------------------------------------------
+
+/// Owned tensors for one random transformer block — [`BlockTensors::def`]
+/// borrows them as a [`BlockDef`].
+pub struct BlockTensors {
+    pub heads: usize,
+    pub seq: usize,
+    pub d: usize,
+    pub mlp: usize,
+    pub w: Vec<Tensor>,
+    pub b: Vec<Option<Tensor>>,
+    pub ln1_g: Tensor,
+    pub ln1_b: Tensor,
+    pub ln2_g: Tensor,
+    pub ln2_b: Tensor,
+}
+
+impl BlockTensors {
+    /// Random block with residual-friendly weight scale (`σ ≈ 0.4/√d`).
+    pub fn random(d: usize, heads: usize, mlp: usize, seq: usize, seed: u64) -> BlockTensors {
+        let mut rng = Pcg32::seeded(seed);
+        let sigma = 0.4 / (d as f32).sqrt();
+        let mut mat = |rows: usize, cols: usize| -> Tensor {
+            Tensor::from_f32(
+                (0..rows * cols).map(|_| rng.next_normal() * sigma).collect(),
+                &[rows, cols],
+            )
+            .expect("block weight shape")
+        };
+        let w = vec![mat(d, d), mat(d, d), mat(d, d), mat(d, d), mat(mlp, d), mat(d, mlp)];
+        let mut bias = |len: usize| -> Option<Tensor> {
+            Some(
+                Tensor::from_f32((0..len).map(|_| rng.next_normal() * 0.02).collect(), &[len])
+                    .expect("bias shape"),
+            )
+        };
+        let b = vec![bias(d), bias(d), bias(d), bias(d), bias(mlp), bias(d)];
+        BlockTensors {
+            heads,
+            seq,
+            d,
+            mlp,
+            w,
+            b,
+            ln1_g: Tensor::full(&[d], 1.0),
+            ln1_b: Tensor::zeros(&[d]),
+            ln2_g: Tensor::full(&[d], 1.0),
+            ln2_b: Tensor::zeros(&[d]),
+        }
+    }
+
+    /// Borrow as a [`BlockDef`] named "blk".
+    pub fn def(&self) -> BlockDef<'_> {
+        BlockDef {
+            name: "blk",
+            heads: self.heads,
+            seq: self.seq,
+            d: self.d,
+            mlp: self.mlp,
+            w: [&self.w[0], &self.w[1], &self.w[2], &self.w[3], &self.w[4], &self.w[5]],
+            b: [
+                self.b[0].as_ref(),
+                self.b[1].as_ref(),
+                self.b[2].as_ref(),
+                self.b[3].as_ref(),
+                self.b[4].as_ref(),
+                self.b[5].as_ref(),
+            ],
+            ln1_g: &self.ln1_g,
+            ln1_b: &self.ln1_b,
+            ln2_g: &self.ln2_g,
+            ln2_b: &self.ln2_b,
+        }
+    }
+
+    /// FlexRound pack at the RTN init (per-row min/max s1, S2 = s3 = s4 = 1)
+    /// for every layer: `(entries, params, slots)` in [`CANON_LAYERS`] order.
+    pub fn flexround_pack(&self, bits: u32) -> (Vec<PackEntry>, Vec<Tensor>, Vec<LayerSlots>) {
+        let mut entries = Vec::new();
+        let mut params = Vec::new();
+        let mut slots = Vec::new();
+        for (li, name) in CANON_LAYERS.iter().enumerate() {
+            let w = &self.w[li];
+            let (rows, cols) = (w.shape()[0], w.shape()[1]);
+            let wv = w.as_f32().expect("block weights are f32");
+            let s1: Vec<f32> = (0..rows)
+                .map(|r| minmax_scale(&wv[r * cols..(r + 1) * cols], bits, true).0)
+                .collect();
+            let base = params.len();
+            let entry = |k: &str, shape: &[usize], learn: bool| PackEntry {
+                name: format!("{name}.{k}"),
+                shape: shape.to_vec(),
+                learnable: learn,
+            };
+            entries.extend([
+                entry("s1", &[rows, 1], true),
+                entry("s2", &[rows, cols], true),
+                entry("s3", &[rows, 1], true),
+                entry("s4", &[1, cols], true),
+                entry("zp", &[rows, 1], false),
+            ]);
+            params.extend([
+                Tensor::from_f32(s1, &[rows, 1]).expect("s1"),
+                Tensor::full(&[rows, cols], 1.0),
+                Tensor::full(&[rows, 1], 1.0),
+                Tensor::full(&[1, cols], 1.0),
+                Tensor::zeros(&[rows, 1]),
+            ]);
+            slots.push(LayerSlots {
+                layer: li,
+                s1: base,
+                zp: base + 4,
+                s2: Some(base + 1),
+                s3: Some(base + 2),
+                s4: Some(base + 3),
+            });
+        }
+        (entries, params, slots)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_x(n: usize, d: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg32::seeded(seed);
+        Tensor::from_f32((0..n * d).map(|_| rng.next_normal()).collect(), &[n, d]).unwrap()
+    }
+
+    #[test]
+    fn attention_probs_are_causal_and_stochastic() {
+        let (heads, seq, d) = (2usize, 4usize, 8usize);
+        let q = random_x(2 * seq, d, 1);
+        let k = random_x(2 * seq, d, 2);
+        let v = random_x(2 * seq, d, 3);
+        let (ctx, probs) = attn_forward(&q, &k, &v, heads, seq).unwrap();
+        assert_eq!(ctx.shape(), &[2 * seq, d]);
+        assert_eq!(probs.len(), 2 * heads);
+        for p in &probs {
+            let pv = p.as_f32().unwrap();
+            for i in 0..seq {
+                let row = &pv[i * seq..(i + 1) * seq];
+                assert!((row[..=i].iter().sum::<f32>() - 1.0).abs() < 1e-5);
+                for &masked in &row[i + 1..] {
+                    assert_eq!(masked, 0.0, "future position leaked");
+                }
+            }
+        }
+        // first row attends only to itself → ctx row 0 = v row 0 (per head)
+        let cv = ctx.as_f32().unwrap();
+        let vv = v.as_f32().unwrap();
+        for t in 0..d {
+            assert!((cv[t] - vv[t]).abs() < 1e-6);
+        }
+        // the forward-only (scratch-buffer) path is bit-identical
+        let ctx2 = attn_ctx(&q, &k, &v, heads, seq).unwrap();
+        assert_eq!(ctx.as_f32().unwrap(), ctx2.as_f32().unwrap());
+    }
+
+    #[test]
+    fn attention_backward_matches_finite_differences() {
+        let (heads, seq, d, n) = (2usize, 3usize, 4usize, 6usize);
+        let q = random_x(n, d, 11);
+        let k = random_x(n, d, 12);
+        let v = random_x(n, d, 13);
+        let g = random_x(n, d, 14);
+        let gv: Vec<f32> = g.as_f32().unwrap().to_vec();
+        let (_, probs) = attn_forward(&q, &k, &v, heads, seq).unwrap();
+        let (dq, dk, dv) = attn_backward(&q, &k, &v, &probs, &g, heads, seq).unwrap();
+
+        let j = |qx: &Tensor, kx: &Tensor, vx: &Tensor| -> f64 {
+            let (ctx, _) = attn_forward(qx, kx, vx, heads, seq).unwrap();
+            ctx.as_f32().unwrap().iter().zip(&gv).map(|(&c, &gi)| c as f64 * gi as f64).sum()
+        };
+        let eps = 1e-3f32;
+        let check = |which: &str, base: &Tensor, analytic: &Tensor,
+                     f: &dyn Fn(&Tensor) -> f64| {
+            let bv = base.as_f32().unwrap().to_vec();
+            let av = analytic.as_f32().unwrap();
+            for idx in 0..bv.len() {
+                let mut hi = bv.clone();
+                let mut lo = bv.clone();
+                hi[idx] += eps;
+                lo[idx] -= eps;
+                let th = Tensor::from_f32(hi, base.shape()).unwrap();
+                let tl = Tensor::from_f32(lo, base.shape()).unwrap();
+                let num = (f(&th) - f(&tl)) / (2.0 * eps as f64);
+                assert!(
+                    (av[idx] as f64 - num).abs() < 5e-3 * (1.0 + num.abs()),
+                    "{which}[{idx}]: analytic {} vs numeric {num}",
+                    av[idx]
+                );
+            }
+        };
+        check("dq", &q, &dq, &|t| j(t, &k, &v));
+        check("dk", &k, &dk, &|t| j(&q, t, &v));
+        check("dv", &v, &dv, &|t| j(&q, &k, t));
+    }
+
+    #[test]
+    fn block_forward_shapes_and_determinism() {
+        let bt = BlockTensors::random(8, 2, 16, 4, 5);
+        let def = bt.def();
+        let x = random_x(8, 8, 7);
+        let y1 = forward_fp(&def, &x, 1).unwrap();
+        let y4 = forward_fp(&def, &x, 4).unwrap();
+        assert_eq!(y1.shape(), &[8, 8]);
+        assert_eq!(y1.as_f32().unwrap(), y4.as_f32().unwrap(), "worker count changed results");
+        // rows not a multiple of seq are rejected
+        assert!(forward_fp(&def, &random_x(6, 8, 9), 1).is_err());
+    }
+
+    #[test]
+    fn block_reconstruction_improves_over_rtn_init() {
+        let bt = BlockTensors::random(8, 2, 16, 4, 21);
+        let def = bt.def();
+        let (entries, params, slots) = bt.flexround_pack(3);
+        let x = random_x(16 * 4, 8, 23);
+        let y = forward_fp(&def, &x, 1).unwrap();
+        let (qmin, qmax) = crate::tensor::qrange(3, true);
+        let before = forward_q(&def, &slots, &params, qmin, qmax, &x, 1)
+            .unwrap()
+            .mse(&y)
+            .unwrap();
+        let cfg = ReconSettings {
+            iters: 120,
+            lr: 3e-3,
+            batch: 16,
+            qmin,
+            qmax,
+            workers: 1,
+            verbose: false,
+            tag: "block".into(),
+        };
+        let mut rng = Pcg32::seeded(3);
+        let r = reconstruct_block(&def, &slots, &entries, &params, &x, &y, &cfg, &mut rng)
+            .unwrap();
+        assert!(r.first_loss.is_finite() && r.final_loss.is_finite());
+        let after = forward_q(&def, &slots, &r.params, qmin, qmax, &x, 1)
+            .unwrap()
+            .mse(&y)
+            .unwrap();
+        assert!(
+            after < before,
+            "block reconstruction should beat the RTN init: {before:.6} → {after:.6}"
+        );
+    }
+
+    #[test]
+    fn block_reconstruction_is_deterministic() {
+        let bt = BlockTensors::random(8, 2, 16, 4, 31);
+        let def = bt.def();
+        let (entries, params, slots) = bt.flexround_pack(4);
+        let x = random_x(8 * 4, 8, 33);
+        let y = forward_fp(&def, &x, 1).unwrap();
+        let (qmin, qmax) = crate::tensor::qrange(4, true);
+        let cfg = ReconSettings {
+            iters: 15,
+            lr: 3e-3,
+            batch: 8,
+            qmin,
+            qmax,
+            workers: 2,
+            verbose: false,
+            tag: "det".into(),
+        };
+        let run = || {
+            let mut rng = Pcg32::seeded(9);
+            reconstruct_block(&def, &slots, &entries, &params, &x, &y, &cfg, &mut rng).unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.final_loss, b.final_loss);
+        for (pa, pb) in a.params.iter().zip(&b.params) {
+            assert_eq!(pa.as_f32().unwrap(), pb.as_f32().unwrap());
+        }
+    }
+}

@@ -1,0 +1,617 @@
+//! The block-by-block reconstruction pipeline (DESIGN.md
+//! §Block-Reconstruction).
+//!
+//! Drives the paper's LLM protocol natively: blocks reconstruct in manifest
+//! order, each against the full-precision targets of its own inputs, with
+//! the calibration activations propagated block-to-block in one of two
+//! modes:
+//!
+//! * [`ReconInput::Quant`] — the paper's §3.1 protocol (and the LLM
+//!   experiments' default): every block sees the *quantized-path*
+//!   activations X̃ of its reconstructed predecessors, so error does not
+//!   compound silently;
+//! * [`ReconInput::Fp`] — AdaQuant-style full-precision inputs (one fewer
+//!   activation chain, and the mode `--parallel-units` fans out).
+//!
+//! All activation chains live in [`ActivationCache`]s, so calibration sets
+//! larger than RAM stream through with the overflow spilled to FXT files
+//! under `--cache-dir`.  Reconstruction samples one cached chunk per Adam
+//! step (then a row/sequence minibatch inside it) instead of concatenating
+//! the whole calibration set — the pipeline never materializes more than a
+//! few chunks at once.
+
+use super::cache::ActivationCache;
+use super::{block_def_for, BlockDef, BlockTensors, CANON_LAYERS};
+use crate::coordinator::{Plan, QuantResult, Session, UnitState};
+use crate::manifest::{LayerInfo, Manifest, ModelInfo, PackEntry, UnitInfo};
+use crate::recon::{self, LayerDef, LayerSlots};
+use crate::runtime::{native::stack_layer_defs, UnitCtx};
+use crate::tensor::{qrange, Tensor};
+use crate::util::{pool, rng::Pcg32};
+use crate::Result;
+use anyhow::{anyhow, bail};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Chunks advanced per backend call when streaming a chain through a unit:
+/// bounds transient memory at `ADVANCE_GROUP` chunks while amortizing the
+/// per-call Ŵ materialization across the group.
+const ADVANCE_GROUP: usize = 8;
+
+/// Which activations each block reconstructs against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReconInput {
+    /// full-precision inputs (AdaQuant-style)
+    Fp,
+    /// quantized-path inputs X̃ (the paper's sequential protocol)
+    Quant,
+}
+
+impl ReconInput {
+    pub fn parse(s: &str) -> Result<ReconInput> {
+        match s {
+            "fp" => Ok(ReconInput::Fp),
+            "quant" => Ok(ReconInput::Quant),
+            other => bail!("unknown --recon-input {other:?} (expected fp or quant)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ReconInput::Fp => "fp",
+            ReconInput::Quant => "quant",
+        }
+    }
+}
+
+/// Pipeline hyperparameters (weight-only by construction).
+#[derive(Clone, Debug)]
+pub struct PipelineOpts {
+    pub method: String,
+    pub bits_w: u32,
+    /// 0 → manifest default
+    pub iters: usize,
+    /// 0.0 → manifest default for the method
+    pub lr: f64,
+    /// 0 → all exported calibration rows
+    pub calib_n: usize,
+    pub seed: u64,
+    pub recon_input: ReconInput,
+    /// spill directory for the activation caches (None → all in memory)
+    pub cache_dir: Option<PathBuf>,
+    /// per-cache in-memory byte budget (0 → unbounded)
+    pub cache_budget_bytes: usize,
+    pub verbose: bool,
+}
+
+impl PipelineOpts {
+    pub fn new(method: &str, bits_w: u32) -> PipelineOpts {
+        PipelineOpts {
+            method: method.to_string(),
+            bits_w,
+            iters: 0,
+            lr: 0.0,
+            calib_n: 0,
+            seed: 7,
+            recon_input: ReconInput::Quant,
+            cache_dir: None,
+            cache_budget_bytes: 0,
+            verbose: false,
+        }
+    }
+}
+
+/// What a pipeline run produced: a standard [`QuantResult`] (so evaluation,
+/// packed export, and serving all compose with it) plus cache telemetry.
+pub struct PipelineOutcome {
+    pub result: QuantResult,
+    pub recon_input: ReconInput,
+    /// chunks per activation chain
+    pub chain_chunks: usize,
+    /// chunk spills across every cache the run created
+    pub spilled_chunks: usize,
+}
+
+/// Run the block-by-block reconstruction pipeline over `sess`'s model.
+/// Works for any natively-executable unit kind (`transformer_block` blocks
+/// sample whole sequences; `linear`/`mlp_relu` stacks sample rows).
+pub fn run_pipeline(sess: &Session, opts: &PipelineOpts) -> Result<PipelineOutcome> {
+    let mi = sess.model;
+    let iters = if opts.iters == 0 { mi.iters_default } else { opts.iters };
+    let lr = if opts.lr == 0.0 { mi.lr_for(&opts.method) } else { opts.lr };
+    let b = mi.calib_batch;
+    let calib_full = sess.dataset("calib_x")?;
+    let calib_n = if opts.calib_n == 0 {
+        calib_full.shape()[0]
+    } else {
+        opts.calib_n.min(calib_full.shape()[0])
+    };
+    let calib_n = (calib_n / b).max(1) * b;
+    let calib = calib_full.slice_rows(0, calib_n)?;
+
+    let budget = if opts.cache_budget_bytes == 0 { usize::MAX } else { opts.cache_budget_bytes };
+    let dir = opts.cache_dir.as_deref();
+    let chunks0 = sess.first_unit_inputs(&calib)?;
+    let chain_chunks = chunks0.len();
+    let mut spilled = 0usize;
+    // only the quantized-input protocol needs a second copy of the chain
+    let mut xq = match opts.recon_input {
+        ReconInput::Quant => Some(ActivationCache::from_chunks(chunks0.clone(), budget, dir)?),
+        ReconInput::Fp => None,
+    };
+    let mut fp = ActivationCache::from_chunks(chunks0, budget, dir)?;
+
+    let mut rng = Pcg32::seeded(opts.seed);
+    let learns = opts.method != "rtn" && iters > 0;
+    if opts.method != "rtn" && iters == 0 && opts.verbose {
+        eprintln!(
+            "  [pipeline] iters resolved to 0 (no --iters and the manifest default is 0): \
+             {} runs at its RTN init, no reconstruction",
+            opts.method
+        );
+    }
+    let mut states: Vec<UnitState> = Vec::with_capacity(mi.units.len());
+    let mut recon_seconds = 0.0f64;
+    let mut recon_steps = 0u64;
+
+    for (ui, unit) in mi.units.iter().enumerate() {
+        let cx = sess.unit_ctx(unit);
+        // FP targets for this block, streamed in bounded chunk groups (one
+        // backend call per group, so per-call setup work — Ŵ
+        // materialization on the quantized chain below — amortizes without
+        // unbounding memory)
+        let mut y_fp = ActivationCache::with_budget(budget, dir);
+        for start in (0..fp.len()).step_by(ADVANCE_GROUP) {
+            let end = (start + ADVANCE_GROUP).min(fp.len());
+            let xs: Vec<Tensor> =
+                (start..end).map(|i| Ok(fp.get(i)?.into_owned())).collect::<Result<_>>()?;
+            for y in sess.backend.unit_forward_fp(&cx, &xs)? {
+                y_fp.push(y)?;
+            }
+        }
+
+        let bits_w = unit.bits_override.unwrap_or(opts.bits_w);
+        let (params, entries) = sess.init_params(unit, &opts.method, "w", bits_w, 8)?;
+        let mut st = UnitState {
+            unit: unit.name.clone(),
+            method: opts.method.clone(),
+            params,
+            entries,
+            first_loss: f64::NAN,
+            final_loss: f64::NAN,
+            bits_w,
+            abits: 8,
+        };
+
+        if learns {
+            let x_src = xq.as_ref().unwrap_or(&fp);
+            let t0 = Instant::now();
+            let r = reconstruct_streamed(
+                sess,
+                &cx,
+                &st,
+                x_src,
+                &y_fp,
+                iters,
+                lr as f32,
+                b,
+                opts.verbose,
+                rng.fork(ui as u64),
+            )?;
+            recon_seconds += t0.elapsed().as_secs_f64();
+            recon_steps += r.steps;
+            st.params = r.params;
+            st.first_loss = r.first_loss;
+            st.final_loss = r.final_loss;
+            if opts.verbose {
+                eprintln!(
+                    "  [pipeline/{}-input] block {:<10} loss {:.6} → {:.6}",
+                    opts.recon_input.label(),
+                    unit.name,
+                    st.first_loss,
+                    st.final_loss
+                );
+            }
+        }
+
+        // advance the quantized chain through the learned block; grouped so
+        // the backend fake-quantizes each layer's Ŵ once per group, not
+        // once per chunk
+        if let Some(xq_cache) = xq.as_mut() {
+            let mut next = ActivationCache::with_budget(budget, dir);
+            for start in (0..xq_cache.len()).step_by(ADVANCE_GROUP) {
+                let end = (start + ADVANCE_GROUP).min(xq_cache.len());
+                let xs: Vec<Tensor> = (start..end)
+                    .map(|i| Ok(xq_cache.get(i)?.into_owned()))
+                    .collect::<Result<_>>()?;
+                for y in sess.advance_q(unit, &st, "w", &xs)? {
+                    next.push(y)?;
+                }
+            }
+            let old = std::mem::replace(xq_cache, next);
+            spilled += old.spilled_chunks();
+        }
+
+        spilled += fp.spilled_chunks();
+        fp = y_fp;
+        states.push(st);
+    }
+    spilled += fp.spilled_chunks();
+    if let Some(c) = &xq {
+        spilled += c.spilled_chunks();
+    }
+
+    let mut plan = Plan::new(&mi.name, &opts.method);
+    plan.bits_w = opts.bits_w;
+    plan.iters = iters;
+    plan.lr = lr;
+    plan.calib_n = calib_n;
+    plan.seed = opts.seed;
+    plan.verbose = opts.verbose;
+    Ok(PipelineOutcome {
+        result: QuantResult { plan, units: states, recon_seconds, recon_steps },
+        recon_input: opts.recon_input,
+        chain_chunks,
+        spilled_chunks: spilled,
+    })
+}
+
+/// Unit geometry for the streamed loop: a contraction stack or one
+/// transformer block.
+enum Defs<'a> {
+    Stack(Vec<LayerDef<'a>>),
+    Block(BlockDef<'a>),
+}
+
+/// The streamed Adam loop: each step samples one cached chunk (uniformly),
+/// then a minibatch inside it — rows for stacks, whole sequences for blocks.
+/// Memory stays bounded by one chunk regardless of calibration-set size.
+#[allow(clippy::too_many_arguments)]
+fn reconstruct_streamed(
+    sess: &Session,
+    cx: &UnitCtx,
+    st: &UnitState,
+    xs: &ActivationCache,
+    ys: &ActivationCache,
+    iters: usize,
+    lr: f32,
+    batch_rows: usize,
+    verbose: bool,
+    mut rng: Pcg32,
+) -> Result<recon::ReconResult> {
+    if xs.is_empty() || xs.len() != ys.len() {
+        bail!(
+            "streamed recon: {} input chunks vs {} target chunks",
+            xs.len(),
+            ys.len()
+        );
+    }
+    let defs = if cx.unit.kind == "transformer_block" {
+        Defs::Block(block_def_for(cx)?)
+    } else {
+        Defs::Stack(stack_layer_defs(cx)?)
+    };
+    let slots: Vec<LayerSlots> = recon::map_pack(cx.unit, &st.method, &st.entries)?;
+    let (qmin, qmax) = qrange(st.bits_w, sess.model.symmetric);
+    let cfg = recon::ReconSettings {
+        iters,
+        lr,
+        batch: batch_rows,
+        qmin,
+        qmax,
+        workers: pool::default_workers(),
+        verbose,
+        tag: format!("{}/{}", sess.model.name, cx.unit.name),
+    };
+    recon::run_adam(&st.entries, &st.params, &cfg, &mut rng, |rng, params| {
+        let ci = rng.below(xs.len() as u32) as usize;
+        let xc = xs.get(ci)?;
+        let yc = ys.get(ci)?;
+        let rows = xc.shape()[0];
+        let (xb, yb) = match &defs {
+            Defs::Stack(_) => {
+                let idx = rng.sample_indices(rows, cfg.batch.clamp(1, rows));
+                (xc.gather_rows(&idx)?, yc.gather_rows(&idx)?)
+            }
+            Defs::Block(def) => {
+                if rows % def.seq != 0 {
+                    bail!(
+                        "block {:?}: chunk of {rows} rows not a multiple of seq {}",
+                        def.name,
+                        def.seq
+                    );
+                }
+                let nseq = rows / def.seq;
+                let sidx = rng.sample_indices(nseq, (cfg.batch / def.seq).clamp(1, nseq));
+                let ridx = super::seq_rows(&sidx, def.seq);
+                (xc.gather_rows(&ridx)?, yc.gather_rows(&ridx)?)
+            }
+        };
+        match &defs {
+            Defs::Stack(layers) => {
+                recon::loss_and_grads(layers, &slots, params, &xb, &yb, qmin, qmax, cfg.workers)
+            }
+            Defs::Block(def) => {
+                super::loss_and_grads(def, &slots, params, &xb, &yb, qmin, qmax, cfg.workers)
+            }
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic transformer-block model (tests, benches, CLI `--synthetic`)
+// ---------------------------------------------------------------------------
+
+/// Shape of a synthetic block model.
+#[derive(Clone, Debug)]
+pub struct SyntheticBlockSpec {
+    pub blocks: usize,
+    /// hidden width
+    pub d: usize,
+    pub heads: usize,
+    /// MLP inner width
+    pub mlp: usize,
+    /// rows per sequence
+    pub seq: usize,
+    /// calibration sequences
+    pub calib_seqs: usize,
+    /// evaluation sequences
+    pub eval_seqs: usize,
+    /// sequences per activation chunk (calib_batch = chunk_seqs · seq)
+    pub chunk_seqs: usize,
+    /// lm-head vocabulary size
+    pub vocab: usize,
+    pub bits: u32,
+    pub seed: u64,
+}
+
+impl Default for SyntheticBlockSpec {
+    fn default() -> Self {
+        SyntheticBlockSpec {
+            blocks: 2,
+            d: 16,
+            heads: 2,
+            mlp: 32,
+            seq: 4,
+            calib_seqs: 8,
+            eval_seqs: 4,
+            chunk_seqs: 2,
+            vocab: 24,
+            bits: 4,
+            seed: 7,
+        }
+    }
+}
+
+/// Everything `Session` needs for an in-memory synthetic transformer-block
+/// LM: manifest + weights / init packs / datasets, plus a native `head/lm`
+/// projection so perplexity evaluates without any PJRT artifact.
+pub struct SyntheticBlockModel {
+    pub man: Manifest,
+    pub weights: BTreeMap<String, Tensor>,
+    pub inits: BTreeMap<String, Tensor>,
+    pub data: BTreeMap<String, Tensor>,
+}
+
+impl SyntheticBlockModel {
+    /// Open a [`Session`] over this fixture with the given backend.
+    pub fn session<'a>(&'a self, backend: &'a dyn crate::runtime::Backend) -> Session<'a> {
+        Session {
+            backend,
+            man: &self.man,
+            model: self.man.model("block_lm").expect("fixture model"),
+            weights: self.weights.clone(),
+            inits: self.inits.clone(),
+            data: self.data.clone(),
+        }
+    }
+}
+
+/// Build a random `blocks`-deep transformer-block LM.  Evaluation labels are
+/// the argmax of the full-precision logits (teacher labels), with the last
+/// position of every sequence set to −1 (the native perplexity's ignore
+/// index) — so FP perplexity is low and the quantized-vs-FP delta is a
+/// meaningful signal.
+pub fn synthetic_block_model(spec: &SyntheticBlockSpec) -> Result<SyntheticBlockModel> {
+    if spec.blocks == 0 || spec.heads == 0 || spec.d % spec.heads != 0 {
+        bail!("synthetic block model: blocks ≥ 1 and heads must divide d (spec {spec:?})");
+    }
+    if spec.chunk_seqs == 0
+        || spec.calib_seqs % spec.chunk_seqs != 0
+        || spec.eval_seqs % spec.chunk_seqs != 0
+    {
+        bail!(
+            "synthetic block model: calib_seqs and eval_seqs must be multiples of \
+             chunk_seqs (spec {spec:?})"
+        );
+    }
+    let mut rng = Pcg32::seeded(spec.seed);
+    let mut weights = BTreeMap::new();
+    let mut inits = BTreeMap::new();
+    let mut units = Vec::with_capacity(spec.blocks);
+    let mut towers: Vec<BlockTensors> = Vec::with_capacity(spec.blocks);
+    for ui in 0..spec.blocks {
+        let uname = format!("blk{ui}");
+        let bt = BlockTensors::random(spec.d, spec.heads, spec.mlp, spec.seq,
+                                      spec.seed ^ (ui as u64 + 1));
+        let (entries, params, _) = bt.flexround_pack(spec.bits);
+        // weights / biases / layernorm extras under the standard key grammar
+        for (li, lname) in CANON_LAYERS.iter().enumerate() {
+            weights.insert(format!("w/{uname}/{lname}"), bt.w[li].clone());
+            if let Some(bias) = &bt.b[li] {
+                weights.insert(format!("b/{uname}/{lname}"), bias.clone());
+            }
+        }
+        weights.insert(format!("p/{uname}/ln1.g"), bt.ln1_g.clone());
+        weights.insert(format!("p/{uname}/ln1.b"), bt.ln1_b.clone());
+        weights.insert(format!("p/{uname}/ln2.g"), bt.ln2_g.clone());
+        weights.insert(format!("p/{uname}/ln2.b"), bt.ln2_b.clone());
+        // init packs for both native methods
+        for (e, p) in entries.iter().zip(&params) {
+            inits.insert(
+                format!("init/{uname}/flexround/b{}/{}", spec.bits, e.name),
+                p.clone(),
+            );
+            let key = e.name.rsplit('.').next().unwrap_or("");
+            if key == "s1" || key == "zp" {
+                inits.insert(
+                    format!("init/{uname}/rtn/b{}/{}", spec.bits, e.name),
+                    p.clone(),
+                );
+            }
+        }
+        units.push(block_unit_info(&uname, spec));
+        towers.push(bt);
+    }
+
+    // datasets
+    let n_calib = spec.calib_seqs * spec.seq;
+    let n_eval = spec.eval_seqs * spec.seq;
+    let mk_x = |rng: &mut Pcg32, n: usize| -> Result<Tensor> {
+        Tensor::from_f32((0..n * spec.d).map(|_| rng.next_normal()).collect(), &[n, spec.d])
+    };
+    let calib_x = mk_x(&mut rng, n_calib)?;
+    let eval_x = mk_x(&mut rng, n_eval)?;
+    let head = Tensor::from_f32(
+        (0..spec.vocab * spec.d).map(|_| rng.next_normal() * 0.5).collect(),
+        &[spec.vocab, spec.d],
+    )?;
+
+    // teacher labels: argmax of FP logits, −1 at each sequence's last row
+    let mut h = eval_x.clone();
+    for bt in &towers {
+        h = super::forward_fp(&bt.def(), &h, 1)?;
+    }
+    let logits = h.matmul_nt(&head)?;
+    let mut labels: Vec<i32> = logits.argmax_rows()?.iter().map(|&i| i as i32).collect();
+    for s in 0..spec.eval_seqs {
+        labels[(s + 1) * spec.seq - 1] = -1;
+    }
+    weights.insert("head/lm".to_string(), head);
+
+    let mut data = BTreeMap::new();
+    let mut datasets = BTreeMap::new();
+    datasets.insert("calib_x".to_string(), vec![n_calib, spec.d]);
+    datasets.insert("eval_x".to_string(), vec![n_eval, spec.d]);
+    datasets.insert("eval_y".to_string(), vec![n_eval]);
+    data.insert("calib_x".to_string(), calib_x);
+    data.insert("eval_x".to_string(), eval_x);
+    data.insert("eval_y".to_string(), Tensor::from_i32(labels, &[n_eval])?);
+
+    let calib_batch = spec.chunk_seqs * spec.seq;
+    let mut lr_default = BTreeMap::new();
+    lr_default.insert("flexround".to_string(), 3e-3);
+    let model = ModelInfo {
+        name: "block_lm".to_string(),
+        kind: "block_lm".to_string(),
+        task: "lm".to_string(),
+        fp_metric: BTreeMap::new(),
+        symmetric: true,
+        per_channel: true,
+        bits_w: vec![spec.bits],
+        abits: vec![8],
+        methods_w: vec!["rtn".to_string(), "flexround".to_string()],
+        methods_wa: vec![],
+        calib_n: n_calib,
+        calib_batch,
+        seq: Some(spec.seq),
+        units,
+        embed_artifact: None,
+        head_artifacts: BTreeMap::new(),
+        weights_file: "unused.fxt".to_string(),
+        init_file: "unused.fxt".to_string(),
+        data_file: "unused.fxt".to_string(),
+        datasets,
+        iters_default: 0,
+        lr_default,
+        drop_p_default: 0.0,
+    };
+    let mut models = BTreeMap::new();
+    models.insert("block_lm".to_string(), model);
+    let man = Manifest { dir: std::env::temp_dir(), calib_batch, models };
+    Ok(SyntheticBlockModel { man, weights, inits, data })
+}
+
+fn block_unit_info(name: &str, spec: &SyntheticBlockSpec) -> UnitInfo {
+    let dims: [(usize, usize); 6] = [
+        (spec.d, spec.d),
+        (spec.d, spec.d),
+        (spec.d, spec.d),
+        (spec.d, spec.d),
+        (spec.mlp, spec.d),
+        (spec.d, spec.mlp),
+    ];
+    let entry = |n: String, shape: Vec<usize>, learn: bool| PackEntry {
+        name: n,
+        shape,
+        learnable: learn,
+    };
+    let mut flex = Vec::new();
+    let mut rtn = Vec::new();
+    let mut layers = Vec::new();
+    for (li, lname) in CANON_LAYERS.iter().enumerate() {
+        let (rows, cols) = dims[li];
+        flex.extend([
+            entry(format!("{lname}.s1"), vec![rows, 1], true),
+            entry(format!("{lname}.s2"), vec![rows, cols], true),
+            entry(format!("{lname}.s3"), vec![rows, 1], true),
+            entry(format!("{lname}.s4"), vec![1, cols], true),
+            entry(format!("{lname}.zp"), vec![rows, 1], false),
+        ]);
+        rtn.extend([
+            entry(format!("{lname}.s1"), vec![rows, 1], false),
+            entry(format!("{lname}.zp"), vec![rows, 1], false),
+        ]);
+        layers.push(LayerInfo {
+            name: lname.to_string(),
+            kind: "linear".to_string(),
+            rows,
+            cols,
+            conv_shape: None,
+            stride: 1,
+        });
+    }
+    let mut packs = BTreeMap::new();
+    packs.insert("flexround.w".to_string(), flex);
+    packs.insert("rtn.w".to_string(), rtn);
+    UnitInfo {
+        name: name.to_string(),
+        kind: "transformer_block".to_string(),
+        bits_override: None,
+        in_shape: vec![spec.seq, spec.d],
+        out_shape: vec![spec.seq, spec.d],
+        act_sites: 0,
+        heads: spec.heads,
+        layers,
+        artifacts: BTreeMap::new(),
+        packs,
+    }
+}
+
+/// Full-calibration-set output MSE of the quantized chain vs the FP chain —
+/// the pipeline's end-to-end quality metric (tests and the CLI report).
+pub fn chain_mse(sess: &Session, result: &QuantResult, xs: &Tensor) -> Result<f64> {
+    let q = sess.forward_q(result, xs)?;
+    mse_vs_fp(sess, &q, xs)
+}
+
+/// [`chain_mse`] with the quantized chunks already forwarded — callers
+/// holding a hoisted packed engine compute `q` themselves and skip a
+/// redundant export/pack.
+pub fn mse_vs_fp(sess: &Session, q: &[Tensor], xs: &Tensor) -> Result<f64> {
+    let fp = sess.forward_fp(xs)?;
+    if q.len() != fp.len() {
+        bail!("chain mse: {} quantized chunks vs {} fp chunks", q.len(), fp.len());
+    }
+    let mut acc = 0.0f64;
+    let mut n = 0usize;
+    for (a, b) in q.iter().zip(&fp) {
+        acc += a.mse(b)? as f64 * a.len() as f64;
+        n += a.len();
+    }
+    if n == 0 {
+        return Err(anyhow!("chain mse over an empty dataset"));
+    }
+    Ok(acc / n as f64)
+}

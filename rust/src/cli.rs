@@ -89,6 +89,20 @@ COMMANDS:
                                   out over the worker pool)
   eval       Evaluate a model (fp or after quantize with --load)
              --model <name> [--method…/--bits… as quantize]
+  pipeline   Block-by-block reconstruction over transformer_block units
+             (native, end to end): calibration → per-block FlexRound →
+             perplexity report → optional packed export + engine forward
+             --model <name> | --synthetic [--blocks <n>] [--width <d>]
+             [--heads <h>] [--mlp <f>] [--seq <s>] [--calib-seqs <n>]
+             [--eval-seqs <n>] [--chunk-seqs <n>] [--vocab <v>]
+             --method <m> --bits <b> [--iters <n>] [--lr <f>] [--calib-n <n>]
+             [--recon-input fp|quant]  propagate calibration activations at
+                                       full precision or through the
+                                       quantized chain (the paper's LLM
+                                       protocol; default quant)
+             [--cache-dir <dir>] [--cache-mb <n>]  spill activation chains
+                                       over the byte budget to FXT files
+             [--pack-out <file.fxt>] [--seed <n>]
   pack       Quantize, then export a bit-packed low-bit artifact (codes +
              per-row grids + biases; no FP weights inside)
              --model <name> --method <m> --bits <b> [--out <file.fxt>]

@@ -61,7 +61,8 @@ impl<'rt> Session<'rt> {
         })
     }
 
-    /// Engine view of one unit: manifest entry + host weight/bias tensors.
+    /// Engine view of one unit: manifest entry + host weight/bias tensors +
+    /// unit-level extras (layernorm parameters under `p/{unit}/…`).
     pub fn unit_ctx<'s>(&'s self, unit: &'s UnitInfo) -> UnitCtx<'s> {
         let weights = unit
             .layers
@@ -73,7 +74,13 @@ impl<'rt> Session<'rt> {
             .iter()
             .map(|l| self.weights.get(&format!("b/{}/{}", unit.name, l.name)))
             .collect();
-        UnitCtx { model: self.model, unit, weights, biases }
+        let pfx = format!("p/{}/", unit.name);
+        let extras = self
+            .weights
+            .iter()
+            .filter_map(|(k, t)| k.strip_prefix(&pfx).map(|s| (s.to_string(), t)))
+            .collect();
+        UnitCtx { model: self.model, unit, weights, biases, extras }
     }
 
     fn qview<'s>(st: &'s UnitState, mode: &'s str) -> QView<'s> {
@@ -361,12 +368,21 @@ impl<'rt> Session<'rt> {
             );
         }
         for (unit, st) in self.model.units.iter().zip(&result.units) {
-            if unit.kind != "linear" && unit.kind != "mlp_relu" {
+            // the packed engine executes exactly the natively-executable
+            // kinds — one predicate, shared with the native backend
+            if !crate::runtime::native::native_unit_kind(&unit.kind) {
                 bail!(
-                    "packed engine supports contraction units (linear, mlp_relu); \
-                     unit {:?} is {:?}",
+                    "packed engine supports the native unit kinds {:?}; unit {:?} is {:?}",
+                    crate::runtime::native::NATIVE_KINDS,
                     unit.name,
                     unit.kind
+                );
+            }
+            if unit.kind == "transformer_block" && self.model.seq.is_none() {
+                bail!(
+                    "packed export of transformer_block unit {:?} needs the model's \
+                     \"seq\" (rows per sequence)",
+                    unit.name
                 );
             }
             if !crate::infer::packed::SUPPORTED_BITS.contains(&st.bits_w) {
@@ -432,7 +448,24 @@ impl<'rt> Session<'rt> {
                     relu_after: unit.kind == "mlp_relu" && li + 1 < n,
                 });
             }
-            units.push(PackedUnit { name: unit.name.clone(), layers });
+            let pu = if unit.kind == "transformer_block" {
+                // block_def_for re-validates the canonical layer list and
+                // pulls the layernorm extras + head/seq geometry
+                let cx = self.unit_ctx(unit);
+                let def = crate::block::block_def_for(&cx)?;
+                PackedUnit {
+                    name: unit.name.clone(),
+                    kind: "transformer_block".to_string(),
+                    heads: def.heads,
+                    seq: def.seq,
+                    ln1: Some((def.ln1_g.as_f32()?.to_vec(), def.ln1_b.as_f32()?.to_vec())),
+                    ln2: Some((def.ln2_g.as_f32()?.to_vec(), def.ln2_b.as_f32()?.to_vec())),
+                    layers,
+                }
+            } else {
+                PackedUnit::stack(&unit.name, layers)
+            };
+            units.push(pu);
         }
         Ok(PackedModel { units })
     }

@@ -125,6 +125,75 @@ pub fn eval_encoder(sess: &Session, result: Option<&QuantResult>) -> Result<Metr
 // Language modeling (decoders — Tables 5/7/19/23/24)
 // ---------------------------------------------------------------------------
 
+/// Native perplexity over final hidden states: project through the
+/// weights-FXT lm head (`head/lm`, a `(vocab, d)` matrix), log-softmax, and
+/// average the NLL of the per-row labels.  Labels of −1 are ignored (each
+/// sequence's last position has no next token).  This is the
+/// block-reconstruction report path — no PJRT artifact involved, so the
+/// quantized-vs-FP perplexity delta lands in the run report on any build.
+pub fn eval_ppl_hidden(
+    sess: &Session,
+    result: Option<&QuantResult>,
+    xs_name: &str,
+    ys_name: &str,
+) -> Result<f64> {
+    let xs = sess.dataset(xs_name)?;
+    let h = match result {
+        Some(r) => sess.forward_q(r, xs)?,
+        None => sess.forward_fp(xs)?,
+    };
+    ppl_from_hidden(sess, &h, ys_name)
+}
+
+/// [`eval_ppl_hidden`] with the hidden-state chunks already forwarded —
+/// callers holding a hoisted packed engine (the pipeline report path)
+/// compute `h` themselves and skip a redundant export/pack.
+pub fn ppl_from_hidden(sess: &Session, h: &[Tensor], ys_name: &str) -> Result<f64> {
+    let head = sess.weights.get("head/lm").ok_or_else(|| {
+        anyhow::anyhow!(
+            "model {} has no native lm head (weights-FXT key \"head/lm\")",
+            sess.model.name
+        )
+    })?;
+    if head.ndim() != 2 {
+        bail!("head/lm must be a (vocab, d) matrix, got {:?}", head.shape());
+    }
+    let vocab = head.shape()[0];
+    let ys = sess.dataset(ys_name)?.as_i32()?;
+    let mut nll = 0.0f64;
+    let mut cnt = 0usize;
+    let mut row0 = 0usize;
+    for chunk in h {
+        let logits = chunk.matmul_nt(head)?;
+        let lv = logits.as_f32()?;
+        let rows = chunk.shape()[0];
+        for i in 0..rows {
+            let label = *ys.get(row0 + i).ok_or_else(|| {
+                anyhow::anyhow!("{ys_name} has {} labels for ≥{} rows", ys.len(), row0 + i + 1)
+            })?;
+            if label < 0 {
+                continue;
+            }
+            if label as usize >= vocab {
+                bail!("label {label} outside the {vocab}-token head");
+            }
+            let row = &lv[i * vocab..(i + 1) * vocab];
+            let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let lse = mx + row.iter().map(|&v| (v - mx).exp()).sum::<f32>().ln();
+            nll += (lse - row[label as usize]) as f64;
+            cnt += 1;
+        }
+        row0 += rows;
+    }
+    if row0 != ys.len() {
+        bail!("{ys_name} has {} labels for {row0} hidden rows", ys.len());
+    }
+    if cnt == 0 {
+        bail!("{ys_name}: every label is ignored (−1); perplexity undefined");
+    }
+    Ok((nll / cnt as f64).exp())
+}
+
 /// Perplexity over a token dataset through the lm head.
 #[cfg(feature = "pjrt")]
 pub fn eval_ppl(sess: &Session, result: Option<&QuantResult>, dataset: &str) -> Result<f64> {

@@ -7,13 +7,23 @@
 //! backend.  `Session::forward_q` uses it as a fast path, `infer::serve`
 //! wraps it in a micro-batched request queue, and the `infer`/`serve` CLI
 //! subcommands drive it directly.
+//!
+//! Transformer-block units run every projection (`wq wk wv wo up down`)
+//! through the same fused dequant-GEMM; layernorm, causal softmax attention
+//! (shared with [`crate::block`]), GELU, and the residual adds stay f32.
+//! Block models accept two input layouts: token rows `(n·seq, d)` (the
+//! `Session::forward_q` chunk shape) and *flattened sequences*
+//! `(n, seq·d)` — one request row per sequence — which is what
+//! [`Engine::in_width`] advertises so the serving layer coalesces whole
+//! sequences.
 
 use super::kernels;
 use super::packed::{PackedLayer, PackedMatrix, PackedModel, PackedUnit};
-use crate::tensor::Tensor;
+use crate::block::{attn_ctx, LN_EPS};
+use crate::tensor::{layernorm_rows, Tensor};
 use crate::util::rng::Pcg32;
 use crate::Result;
-use anyhow::anyhow;
+use anyhow::{anyhow, bail};
 
 /// A loaded packed model ready to serve forwards.
 pub struct Engine {
@@ -30,14 +40,24 @@ impl Engine {
         &self.model
     }
 
-    /// Input width the engine expects (first packed layer's columns).
+    /// Width of one *request row*: the first layer's columns, times the
+    /// model's rows-per-sequence for transformer-block models (a request is
+    /// one flattened sequence).
     pub fn in_width(&self) -> Result<usize> {
-        self.model.in_width().ok_or_else(|| anyhow!("engine holds an empty packed model"))
+        let tok = self
+            .model
+            .in_width()
+            .ok_or_else(|| anyhow!("engine holds an empty packed model"))?;
+        Ok(tok * self.model.seq())
     }
 
-    /// Output width the engine produces (last packed layer's rows).
+    /// Width of one output row, matching [`Engine::in_width`]'s layout.
     pub fn out_width(&self) -> Result<usize> {
-        self.model.out_width().ok_or_else(|| anyhow!("engine holds an empty packed model"))
+        let tok = self
+            .model
+            .out_width()
+            .ok_or_else(|| anyhow!("engine holds an empty packed model"))?;
+        Ok(tok * self.model.seq())
     }
 
     /// Batched quantized forward through every unit: `x` is `(n, in_width)`,
@@ -56,8 +76,23 @@ impl Engine {
     }
 
     fn forward_with(&self, x: &Tensor, fused: bool) -> Result<Tensor> {
-        let mut h = x.clone();
+        let seq = self.model.seq();
+        let tok_w = self
+            .model
+            .in_width()
+            .ok_or_else(|| anyhow!("engine holds an empty packed model"))?;
+        // flattened-sequence entry: one row per sequence (the serving shape)
+        let flat = x.ndim() == 2 && seq > 1 && x.shape()[1] == seq * tok_w;
+        let mut h = if flat {
+            x.reshape(&[x.shape()[0] * seq, tok_w])?
+        } else {
+            x.clone()
+        };
         for unit in &self.model.units {
+            if unit.kind == "transformer_block" {
+                h = self.block_forward(unit, &h, fused)?;
+                continue;
+            }
             for layer in &unit.layers {
                 let mut y = if fused {
                     kernels::gemm_fused(&h, &layer.mat, self.workers)?
@@ -68,7 +103,63 @@ impl Engine {
                 h = y;
             }
         }
+        if flat {
+            let rows = x.shape()[0];
+            let width = h.len() / rows.max(1);
+            h = h.reshape(&[rows, width])?;
+        }
         Ok(h)
+    }
+
+    /// One transformer block over token rows `(n·seq, d)`: fused dequant
+    /// GEMMs for all six projections, f32 layernorm / causal attention /
+    /// GELU / residuals — the same math as `block::forward_with`, with the
+    /// packed matrices never dequantized into a dense Ŵ.
+    fn block_forward(&self, unit: &PackedUnit, h: &Tensor, fused: bool) -> Result<Tensor> {
+        let [wq, wk, wv, wo, up, down] = match unit.layers.as_slice() {
+            [a, b, c, d, e, f] => [a, b, c, d, e, f],
+            _ => bail!(
+                "block unit {:?} has {} layers, expected the canonical 6",
+                unit.name,
+                unit.layers.len()
+            ),
+        };
+        let (g1, b1) = unit
+            .ln1
+            .as_ref()
+            .ok_or_else(|| anyhow!("block unit {:?} lacks ln1 parameters", unit.name))?;
+        let (g2, b2) = unit
+            .ln2
+            .as_ref()
+            .ok_or_else(|| anyhow!("block unit {:?} lacks ln2 parameters", unit.name))?;
+        if unit.seq == 0 || h.ndim() != 2 || h.shape()[0] % unit.seq != 0 {
+            bail!(
+                "block unit {:?}: input {:?} rows must be a multiple of seq {}",
+                unit.name,
+                h.shape(),
+                unit.seq
+            );
+        }
+        let gemm = |x: &Tensor, l: &PackedLayer| -> Result<Tensor> {
+            let mut y = if fused {
+                kernels::gemm_fused(x, &l.mat, self.workers)?
+            } else {
+                kernels::dequant_matmul(x, &l.mat)?
+            };
+            y.bias_relu_inplace(l.bias.as_deref(), false)?;
+            Ok(y)
+        };
+        let (h1, _, _) = layernorm_rows(h, g1, b1, LN_EPS)?;
+        let q = gemm(&h1, wq)?;
+        let k = gemm(&h1, wk)?;
+        let v = gemm(&h1, wv)?;
+        let ctx = attn_ctx(&q, &k, &v, unit.heads, unit.seq)?;
+        let attn = gemm(&ctx, wo)?;
+        let x2 = h.zip(&attn, |a, b| a + b)?;
+        let (h2, _, _) = layernorm_rows(&x2, g2, b2, LN_EPS)?;
+        let m = gemm(&h2, up)?.gelu();
+        let y = gemm(&m, down)?;
+        x2.zip(&y, |a, b| a + b)
     }
 
     /// Single-row forward (the serving fallback for a batch of one).
@@ -96,10 +187,10 @@ pub fn synthetic_model(units: usize, width: usize, bits: u32, seed: u64) -> Resu
         let scale: Vec<f32> = (0..width).map(|_| s0 * (0.75 + 0.5 * rng.next_f32())).collect();
         let zp = vec![0.0f32; width];
         let mat = PackedMatrix::pack(&codes, width, width, bits, qmin, scale, zp)?;
-        out.push(PackedUnit {
-            name: format!("u{ui}"),
-            layers: vec![PackedLayer { name: "fc".into(), mat, bias: None, relu_after: false }],
-        });
+        out.push(PackedUnit::stack(
+            &format!("u{ui}"),
+            vec![PackedLayer { name: "fc".into(), mat, bias: None, relu_after: false }],
+        ));
     }
     Ok(PackedModel { units: out })
 }
@@ -135,15 +226,15 @@ mod tests {
         // ReLU clips the negative result.
         let mat = PackedMatrix::pack(&[1], 1, 1, 4, -8, vec![2.0], vec![0.0]).unwrap();
         let model = PackedModel {
-            units: vec![PackedUnit {
-                name: "u".into(),
-                layers: vec![PackedLayer {
+            units: vec![PackedUnit::stack(
+                "u",
+                vec![PackedLayer {
                     name: "fc".into(),
                     mat,
                     bias: Some(vec![-5.0]),
                     relu_after: true,
                 }],
-            }],
+            )],
         };
         let engine = Engine::new(model, 1);
         let y = engine.forward(&Tensor::from_f32(vec![1.0], &[1, 1]).unwrap()).unwrap();
@@ -156,5 +247,80 @@ mod tests {
     fn empty_model_is_rejected() {
         let engine = Engine::new(PackedModel::default(), 1);
         assert!(engine.in_width().is_err());
+    }
+
+    /// Random packed transformer block (one unit) for engine tests.
+    fn block_model(d: usize, mlp: usize, heads: usize, seq: usize) -> PackedModel {
+        let mut rng = Pcg32::seeded(41);
+        let mut mk = |rows: usize, cols: usize| {
+            let codes: Vec<i32> =
+                (0..rows * cols).map(|_| -8 + rng.below(16) as i32).collect();
+            let s0 = 1.0 / (8.0 * (cols as f32).sqrt());
+            let scale: Vec<f32> = (0..rows).map(|_| s0 * (0.75 + 0.5 * rng.next_f32())).collect();
+            PackedMatrix::pack(&codes, rows, cols, 4, -8, scale, vec![0.0; rows]).unwrap()
+        };
+        let mut mats = vec![mk(d, d), mk(d, d), mk(d, d), mk(d, d), mk(mlp, d), mk(d, mlp)];
+        let layer = |name: &str, mat: PackedMatrix| PackedLayer {
+            name: name.into(),
+            mat,
+            bias: None,
+            relu_after: false,
+        };
+        let unit = PackedUnit {
+            name: "blk".into(),
+            kind: "transformer_block".into(),
+            heads,
+            seq,
+            ln1: Some((vec![1.0; d], vec![0.0; d])),
+            ln2: Some((vec![1.0; d], vec![0.0; d])),
+            layers: vec![
+                layer("wq", mats.remove(0)),
+                layer("wk", mats.remove(0)),
+                layer("wv", mats.remove(0)),
+                layer("wo", mats.remove(0)),
+                layer("up", mats.remove(0)),
+                layer("down", mats.remove(0)),
+            ],
+        };
+        PackedModel { units: vec![unit] }
+    }
+
+    #[test]
+    fn block_forward_token_and_flat_entries_agree() {
+        let (d, mlp, heads, seq) = (8usize, 16usize, 2usize, 4usize);
+        let engine = Engine::new(block_model(d, mlp, heads, seq), 2);
+        // request width is one flattened sequence
+        assert_eq!(engine.in_width().unwrap(), seq * d);
+        let mut rng = Pcg32::seeded(6);
+        let nseq = 3usize;
+        let tokens = Tensor::from_f32(
+            (0..nseq * seq * d).map(|_| rng.next_normal()).collect(),
+            &[nseq * seq, d],
+        )
+        .unwrap();
+        let toks_out = engine.forward(&tokens).unwrap();
+        assert_eq!(toks_out.shape(), &[nseq * seq, d]);
+        // same data as flattened sequences → same numbers, reshaped
+        let flat = tokens.reshape(&[nseq, seq * d]).unwrap();
+        let flat_out = engine.forward(&flat).unwrap();
+        assert_eq!(flat_out.shape(), &[nseq, seq * d]);
+        assert_eq!(
+            toks_out.as_f32().unwrap(),
+            flat_out.as_f32().unwrap(),
+            "flattened-sequence entry must match the token-row entry"
+        );
+        // fused vs dequantize-then-matmul parity through the whole block
+        let unfused = engine.forward_unfused(&tokens).unwrap();
+        let dmax = toks_out.max_abs_diff(&unfused).unwrap();
+        assert!(dmax <= 1e-4 * (1.0 + unfused.abs_max()), "fused block drift {dmax}");
+        // rows not a multiple of seq are rejected
+        let bad = Tensor::from_f32(vec![0.0; 3 * d], &[3, d]).unwrap();
+        assert!(engine.forward(&bad).is_err());
+        // serving row API: one flattened sequence in, one out
+        let row = engine.forward_row(flat.slice_rows(0, 1).unwrap().as_f32().unwrap()).unwrap();
+        assert_eq!(row.len(), seq * d);
+        for (a, b) in row.iter().zip(flat_out.as_f32().unwrap()) {
+            assert!((a - b).abs() <= 1e-5);
+        }
     }
 }

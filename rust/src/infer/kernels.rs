@@ -111,7 +111,7 @@ pub fn gemm_fused(x: &Tensor, m: &PackedMatrix, workers: usize) -> Result<Tensor
     let out = if serial {
         fused_block(xv, &sumx, n, k, m, 0, rows)
     } else {
-        let chunk = (rows + workers - 1) / workers;
+        let chunk = rows.div_ceil(workers);
         let ranges: Vec<(usize, usize)> = (0..workers)
             .map(|w| (w * chunk, ((w + 1) * chunk).min(rows)))
             .filter(|(lo, hi)| lo < hi)

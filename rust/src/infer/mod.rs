@@ -14,7 +14,9 @@
 //!   register, with a scalar reference kernel and the
 //!   dequantize-then-matmul baseline it is benchmarked against;
 //! * [`engine`] — the [`Engine`] forward API over a packed model
-//!   (`Session::forward_q`'s fast path);
+//!   (`Session::forward_q`'s fast path), including `transformer_block`
+//!   units: all six projections run the fused GEMM while layernorm /
+//!   causal attention / GELU / residuals stay f32 (`crate::block`);
 //! * [`serve`] — a micro-batched request queue ([`Server`]) that coalesces
 //!   single-row requests up to a batch deadline, runs one fused GEMM per
 //!   batch, and fans results back out (`flexround serve`).

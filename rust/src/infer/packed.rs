@@ -33,8 +33,10 @@ use std::path::Path;
 /// Bit-widths the packer supports (the paper's low-bit operating points).
 pub const SUPPORTED_BITS: [u32; 4] = [2, 3, 4, 8];
 
-/// Artifact format version (bumped on any key-grammar change).
-pub const FORMAT_VERSION: i32 = 1;
+/// Artifact format version (bumped on any key-grammar change).  Version 2
+/// added the `qu/…` unit-meta group for `transformer_block` units; version-1
+/// artifacts (stack units only) still load.
+pub const FORMAT_VERSION: i32 = 2;
 
 /// Codes stored per `u32` word at a bit-width.
 pub fn codes_per_word(bits: u32) -> usize {
@@ -86,7 +88,7 @@ impl PackedMatrix {
         }
         let qmax = qmin + ((1i64 << bits) - 1) as i32;
         let cpw = codes_per_word(bits);
-        let wpr = (cols + cpw - 1) / cpw;
+        let wpr = cols.div_ceil(cpw);
         let mut words = vec![0u32; rows * wpr];
         for r in 0..rows {
             for c in 0..cols {
@@ -242,11 +244,38 @@ pub struct PackedLayer {
     pub relu_after: bool,
 }
 
-/// One packed unit: an ordered contraction stack.
+/// One packed unit: an ordered contraction stack (`kind == "stack"`), or a
+/// transformer block (`kind == "transformer_block"`, six layers in
+/// `block::CANON_LAYERS` order plus layernorm parameters and attention
+/// geometry).
 #[derive(Clone, Debug, PartialEq)]
 pub struct PackedUnit {
     pub name: String,
+    pub kind: String,
+    /// attention heads (block units; 1 otherwise)
+    pub heads: usize,
+    /// rows per sequence for causal attention (block units; 1 otherwise)
+    pub seq: usize,
+    /// pre-attention layernorm `(gain, bias)` (block units)
+    pub ln1: Option<(Vec<f32>, Vec<f32>)>,
+    /// pre-MLP layernorm `(gain, bias)` (block units)
+    pub ln2: Option<(Vec<f32>, Vec<f32>)>,
     pub layers: Vec<PackedLayer>,
+}
+
+impl PackedUnit {
+    /// A plain sequential contraction stack (the pre-block unit shape).
+    pub fn stack(name: &str, layers: Vec<PackedLayer>) -> PackedUnit {
+        PackedUnit {
+            name: name.to_string(),
+            kind: "stack".to_string(),
+            heads: 1,
+            seq: 1,
+            ln1: None,
+            ln2: None,
+            layers,
+        }
+    }
 }
 
 /// A fully packed model — everything the inference engine needs, nothing it
@@ -267,6 +296,17 @@ impl PackedModel {
         self.units.last().and_then(|u| u.layers.last()).map(|l| l.mat.rows())
     }
 
+    /// Rows per sequence the model's attention expects (1 when no
+    /// transformer-block unit is present).
+    pub fn seq(&self) -> usize {
+        self.units.iter().map(|u| u.seq.max(1)).max().unwrap_or(1)
+    }
+
+    /// Whether any unit is a transformer block.
+    pub fn has_blocks(&self) -> bool {
+        self.units.iter().any(|u| u.kind == "transformer_block")
+    }
+
     pub fn packed_bytes(&self) -> usize {
         self.units
             .iter()
@@ -283,7 +323,8 @@ impl PackedModel {
             .sum()
     }
 
-    /// Lower to FXT tensors.  Key grammar (one group per layer):
+    /// Lower to FXT tensors.  Key grammar (one group per layer, plus one
+    /// unit-meta group per `transformer_block` unit):
     ///
     /// ```text
     ///   packed/version                        i32 [1]
@@ -292,6 +333,8 @@ impl PackedModel {
     ///   q/{uuuu}/{unit}/{ll}/{layer}/scale    f32 [rows]
     ///   q/{uuuu}/{unit}/{ll}/{layer}/zp       f32 [rows]
     ///   q/{uuuu}/{unit}/{ll}/{layer}/bias     f32 [rows]  (only when has_bias)
+    ///   qu/{uuuu}/{unit}/meta                 i32 [3] = kind(1=block) heads seq
+    ///   qu/{uuuu}/{unit}/ln1_g|ln1_b|ln2_g|ln2_b  f32 [d]   (block units)
     /// ```
     ///
     /// Zero-padded indices make BTreeMap iteration recover unit/layer order.
@@ -307,6 +350,32 @@ impl PackedModel {
             // reorder on reload
             if ui > 9999 {
                 bail!("packed artifact: at most 10000 units (got {})", self.units.len());
+            }
+            if unit.kind == "transformer_block" {
+                let upfx = format!("qu/{ui:04}/{}", unit.name);
+                out.insert(
+                    format!("{upfx}/meta"),
+                    Tensor::from_i32(
+                        vec![1, unit.heads as i32, unit.seq as i32],
+                        &[3],
+                    )?,
+                );
+                let (g1, b1) = unit.ln1.as_ref().ok_or_else(|| {
+                    anyhow!("block unit {:?} has no ln1 parameters", unit.name)
+                })?;
+                let (g2, b2) = unit.ln2.as_ref().ok_or_else(|| {
+                    anyhow!("block unit {:?} has no ln2 parameters", unit.name)
+                })?;
+                for (k, v) in
+                    [("ln1_g", g1), ("ln1_b", b1), ("ln2_g", g2), ("ln2_b", b2)]
+                {
+                    out.insert(
+                        format!("{upfx}/{k}"),
+                        Tensor::from_f32(v.clone(), &[v.len()])?,
+                    );
+                }
+            } else if unit.kind != "stack" {
+                bail!("packed artifact: unknown unit kind {:?}", unit.kind);
             }
             for (li, layer) in unit.layers.iter().enumerate() {
                 if li > 99 {
@@ -363,13 +432,25 @@ impl PackedModel {
             .get("packed/version")
             .ok_or_else(|| anyhow!("not a packed-model artifact (no packed/version entry)"))?
             .as_i32()?[0];
-        if version != FORMAT_VERSION {
-            bail!("packed artifact version {version}, this build reads {FORMAT_VERSION}");
+        // v1 (stack units only, no qu/ group) still loads
+        if version != 1 && version != FORMAT_VERSION {
+            bail!("packed artifact version {version}, this build reads 1..={FORMAT_VERSION}");
         }
         // Group field tensors by their layer prefix; BTreeMap order (zero-
-        // padded indices) is unit/layer order.
+        // padded indices) is unit/layer order.  `qu/{uuuu}/{unit}/{field}`
+        // carries unit-level meta for transformer blocks.
         let mut groups: BTreeMap<String, BTreeMap<String, &Tensor>> = BTreeMap::new();
+        let mut unit_meta: BTreeMap<String, BTreeMap<String, &Tensor>> = BTreeMap::new();
         for (key, t) in tensors {
+            if let Some(rest) = key.strip_prefix("qu/") {
+                let parts: Vec<&str> = rest.split('/').collect();
+                let (uidx, field) = match &parts[..] {
+                    [uidx, _uname, field] => (*uidx, *field),
+                    _ => bail!("malformed packed unit-meta key {key:?}"),
+                };
+                unit_meta.entry(uidx.to_string()).or_default().insert(field.to_string(), t);
+                continue;
+            }
             let Some(rest) = key.strip_prefix("q/") else { continue };
             let (prefix, field) = rest
                 .rsplit_once('/')
@@ -399,7 +480,7 @@ impl PackedModel {
             } else {
                 bail!("q/{prefix}: unsupported bit-width {bits}");
             };
-            let wpr = (cols + cpw - 1) / cpw;
+            let wpr = cols.div_ceil(cpw);
             if words_t.shape() != &[rows, wpr][..] {
                 bail!(
                     "q/{prefix}/words has shape {:?}, expected [{rows}, {wpr}]",
@@ -442,7 +523,32 @@ impl PackedModel {
             if last_uidx.as_deref() == Some(uidx) {
                 units.last_mut().expect("uidx seen ⇒ unit exists").layers.push(layer);
             } else {
-                units.push(PackedUnit { name: uname.to_string(), layers: vec![layer] });
+                let mut pu = PackedUnit::stack(uname, vec![layer]);
+                if let Some(fields) = unit_meta.get(uidx) {
+                    let meta = fields
+                        .get("meta")
+                        .ok_or_else(|| anyhow!("qu/{uidx}/{uname} is missing /meta"))?
+                        .as_i32()?;
+                    if meta.len() != 3 || meta[0] != 1 {
+                        bail!("qu/{uidx}/{uname}/meta malformed: {meta:?}");
+                    }
+                    pu.kind = "transformer_block".to_string();
+                    pu.heads = (meta[1].max(1)) as usize;
+                    pu.seq = (meta[2].max(1)) as usize;
+                    let ln = |g: &str, b: &str| -> Result<(Vec<f32>, Vec<f32>)> {
+                        let take = |f: &str| -> Result<Vec<f32>> {
+                            Ok(fields
+                                .get(f)
+                                .ok_or_else(|| anyhow!("qu/{uidx}/{uname} is missing /{f}"))?
+                                .as_f32()?
+                                .to_vec())
+                        };
+                        Ok((take(g)?, take(b)?))
+                    };
+                    pu.ln1 = Some(ln("ln1_g", "ln1_b")?);
+                    pu.ln2 = Some(ln("ln2_g", "ln2_b")?);
+                }
+                units.push(pu);
                 last_uidx = Some(uidx.to_string());
             }
         }
@@ -568,9 +674,9 @@ mod tests {
         };
         let model = PackedModel {
             units: vec![
-                PackedUnit {
-                    name: "u0".into(),
-                    layers: vec![
+                PackedUnit::stack(
+                    "u0",
+                    vec![
                         PackedLayer {
                             name: "up".into(),
                             mat: mk(1, 6, 5, 4, -8),
@@ -584,16 +690,16 @@ mod tests {
                             relu_after: false,
                         },
                     ],
-                },
-                PackedUnit {
-                    name: "u1".into(),
-                    layers: vec![PackedLayer {
+                ),
+                PackedUnit::stack(
+                    "u1",
+                    vec![PackedLayer {
                         name: "fc".into(),
                         mat: mk(3, 3, 4, 8, 0),
                         bias: None,
                         relu_after: false,
                     }],
-                },
+                ),
             ],
         };
         let tensors = model.to_tensors().unwrap();
@@ -601,6 +707,8 @@ mod tests {
         assert_eq!(model, back);
         assert_eq!(model.in_width(), Some(5));
         assert_eq!(model.out_width(), Some(3));
+        assert_eq!(model.seq(), 1);
+        assert!(!model.has_blocks());
         // in-memory FXT round-trip too (the on-disk format, minus the disk)
         let bytes = fxt::write_bytes(&tensors).unwrap();
         let back2 = PackedModel::from_tensors(&fxt::read_bytes(&bytes).unwrap()).unwrap();
@@ -608,18 +716,78 @@ mod tests {
     }
 
     #[test]
+    fn block_unit_roundtrip_with_unit_meta() {
+        let d = 6usize;
+        let mlp = 10usize;
+        let mk = |seed: i32, rows: usize, cols: usize| {
+            let codes: Vec<i32> =
+                (0..rows * cols).map(|i| -8 + (i as i32 * 5 + seed).rem_euclid(16)).collect();
+            PackedMatrix::pack(
+                &codes,
+                rows,
+                cols,
+                4,
+                -8,
+                (0..rows).map(|r| 0.05 + r as f32 * 0.01).collect(),
+                vec![0.0; rows],
+            )
+            .unwrap()
+        };
+        let layer = |name: &str, rows: usize, cols: usize, seed: i32| PackedLayer {
+            name: name.into(),
+            mat: mk(seed, rows, cols),
+            bias: Some(vec![0.01; rows]),
+            relu_after: false,
+        };
+        let block = PackedUnit {
+            name: "blk0".into(),
+            kind: "transformer_block".into(),
+            heads: 2,
+            seq: 4,
+            ln1: Some((vec![1.0; d], vec![0.0; d])),
+            ln2: Some((vec![0.9; d], vec![0.1; d])),
+            layers: vec![
+                layer("wq", d, d, 1),
+                layer("wk", d, d, 2),
+                layer("wv", d, d, 3),
+                layer("wo", d, d, 4),
+                layer("up", mlp, d, 5),
+                layer("down", d, mlp, 6),
+            ],
+        };
+        let model = PackedModel {
+            units: vec![block, PackedUnit::stack("head", vec![layer("fc", 3, d, 7)])],
+        };
+        let back = PackedModel::from_tensors(&model.to_tensors().unwrap()).unwrap();
+        assert_eq!(model, back);
+        assert_eq!(back.units[0].kind, "transformer_block");
+        assert_eq!(back.units[0].heads, 2);
+        assert_eq!(back.units[0].seq, 4);
+        assert_eq!(model.seq(), 4);
+        assert!(model.has_blocks());
+        // a block missing its layernorms must fail to serialize
+        let mut broken = model.clone();
+        broken.units[0].ln1 = None;
+        assert!(broken.to_tensors().is_err());
+    }
+
+    #[test]
     fn duplicate_unit_names_stay_distinct() {
         // consecutive units may share a name (repeated block types); load
         // groups by index, so the structure must survive the round trip
-        let unit = |name: &str| PackedUnit {
-            name: name.into(),
-            layers: vec![PackedLayer {
-                name: "fc".into(),
-                mat: PackedMatrix::pack(&[0, 1, -1, 2], 2, 2, 4, -8, vec![1.0; 2], vec![0.0; 2])
+        let unit = |name: &str| {
+            PackedUnit::stack(
+                name,
+                vec![PackedLayer {
+                    name: "fc".into(),
+                    mat: PackedMatrix::pack(
+                        &[0, 1, -1, 2], 2, 2, 4, -8, vec![1.0; 2], vec![0.0; 2],
+                    )
                     .unwrap(),
-                bias: None,
-                relu_after: false,
-            }],
+                    bias: None,
+                    relu_after: false,
+                }],
+            )
         };
         let model = PackedModel { units: vec![unit("blk"), unit("blk")] };
         let back = PackedModel::from_tensors(&model.to_tensors().unwrap()).unwrap();

@@ -217,7 +217,7 @@ pub fn drive(
     }
     let server = Server::start(engine, policy)?;
     let clients = clients.clamp(1, n);
-    let chunk = (n + clients - 1) / clients;
+    let chunk = n.div_ceil(clients);
     let t0 = Instant::now();
     let failures: usize = std::thread::scope(|s| {
         let mut handles = Vec::new();

@@ -32,6 +32,7 @@
 //! (markdown/CSV emitters), plus a minimal vendored `anyhow` and a
 //! compile-only `xla` stub (`rust/vendor/`).
 
+pub mod block;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -35,6 +35,8 @@ pub struct UnitInfo {
     pub in_shape: Vec<usize>,
     pub out_shape: Vec<usize>,
     pub act_sites: usize,
+    /// attention heads (`transformer_block` units; 1 elsewhere)
+    pub heads: usize,
     pub layers: Vec<LayerInfo>,
     /// artifact key (e.g. "recon.flexround.w") → file name
     pub artifacts: BTreeMap<String, String>,
@@ -227,6 +229,7 @@ fn parse_unit(v: &Json) -> Result<UnitInfo> {
         in_shape: v.get("in_shape")?.usize_vec()?,
         out_shape: v.get("out_shape")?.usize_vec()?,
         act_sites: v.get("act_sites")?.usize()?,
+        heads: v.opt("heads").and_then(|h| h.usize().ok()).unwrap_or(1).max(1),
         layers,
         artifacts,
         packs,
@@ -270,6 +273,7 @@ mod tests {
         let mi = m.model("m").unwrap();
         assert_eq!(mi.units.len(), 1);
         assert_eq!(mi.units[0].bits_override, Some(8));
+        assert_eq!(mi.units[0].heads, 1, "heads defaults to 1 when absent");
         assert_eq!(mi.units[0].layers[0].conv_shape.as_deref(), Some(&[3, 3, 3, 16][..]));
         assert_eq!(mi.unit("stem").unwrap().artifact("fp").unwrap(), "m.fp.stem.hlo.txt");
         assert!(mi.unit("nope").is_err());

@@ -34,9 +34,11 @@
 //! Supported natively: weight-only mode on units whose layers are plain
 //! contractions (`y = x · Ŵᵀ [+ b]`), optionally ReLU-separated
 //! (`mlp_relu`), for methods `rtn`, `flexround`, `flexround_fixed_s1`, and
-//! `flexround_no_s34`.  Anything needing convolutions, activation
-//! quantization, or AdaRound's soft rounding still runs through the PJRT
-//! backend — see `runtime::Backend`.
+//! `flexround_no_s34`; `transformer_block` units build on these kernels in
+//! [`crate::block`] (fq forward/backward per projection, attention and
+//! layernorm cotangents around them).  Anything needing convolutions,
+//! activation quantization, or AdaRound's soft rounding still runs through
+//! the PJRT backend — see `runtime::Backend`.
 
 pub mod adam;
 
@@ -50,18 +52,14 @@ use crate::Result;
 use anyhow::{anyhow, bail};
 
 /// Round half to even (banker's rounding), matching `jnp.round` and the XLA
-/// `round-nearest-even` op bit-for-bit away from f32 precision limits.
+/// `round-nearest-even` op bit-for-bit.  Delegates to
+/// [`f32::round_ties_even`] (stabilized in Rust 1.77); the hand-rolled
+/// floor-based implementation it replaced survives as the property-test
+/// oracle below, which pins agreement at negative exact halves and at
+/// magnitudes past the f32 integer threshold (`2^23`, where every float is
+/// already an integer).
 pub fn round_ties_even(x: f32) -> f32 {
-    let f = x.floor();
-    if x - f == 0.5 {
-        if f.rem_euclid(2.0) == 0.0 {
-            f
-        } else {
-            f + 1.0
-        }
-    } else {
-        x.round()
-    }
+    x.round_ties_even()
 }
 
 // ---------------------------------------------------------------------------
@@ -603,6 +601,37 @@ pub struct ReconResult {
     pub steps: u64,
 }
 
+/// The shared Adam reconstruction driver: `cfg.iters` steps of
+/// `step(rng, params) → (loss, grads)` with first/final-loss bookkeeping,
+/// the positivity-clamped [`Adam`] update, and throttled progress logging.
+/// Every minibatch-sampling strategy (row sampling here, sequence sampling
+/// in `block::reconstruct_block`, chunk-streamed sampling in the pipeline)
+/// is one closure over this loop — the bookkeeping exists exactly once.
+pub fn run_adam(
+    entries: &[PackEntry],
+    params0: &[Tensor],
+    cfg: &ReconSettings,
+    rng: &mut Pcg32,
+    mut step: impl FnMut(&mut Pcg32, &[Tensor]) -> Result<(f64, Vec<Option<Tensor>>)>,
+) -> Result<ReconResult> {
+    let mut params: Vec<Tensor> = params0.to_vec();
+    let mut opt = Adam::new(&params);
+    let mut first_loss = f64::NAN;
+    let mut final_loss = f64::NAN;
+    for t in 1..=cfg.iters {
+        let (loss, grads) = step(rng, &params)?;
+        if t == 1 {
+            first_loss = loss;
+        }
+        final_loss = loss;
+        opt.step(t, cfg.lr, entries, &mut params, &grads)?;
+        if cfg.verbose && (t == 1 || t % 100 == 0 || t == cfg.iters) {
+            eprintln!("    [{}] iter {t}/{} loss {loss:.6}", cfg.tag, cfg.iters);
+        }
+    }
+    Ok(ReconResult { params, first_loss, final_loss, steps: cfg.iters as u64 })
+}
+
 /// Learn the pack parameters for one unit: Adam over random calibration
 /// minibatches, loss/step bookkeeping identical to the PJRT loop.
 pub fn reconstruct_unit(
@@ -620,26 +649,12 @@ pub fn reconstruct_unit(
     }
     let n = x.shape()[0];
     let batch = cfg.batch.clamp(1, n);
-    let mut params: Vec<Tensor> = params0.to_vec();
-    let mut opt = Adam::new(&params);
-    let mut first_loss = f64::NAN;
-    let mut final_loss = f64::NAN;
-    for t in 1..=cfg.iters {
+    run_adam(entries, params0, cfg, rng, |rng, params| {
         let idx = rng.sample_indices(n, batch);
         let xb = x.gather_rows(&idx)?;
         let yb = y.gather_rows(&idx)?;
-        let (loss, grads) =
-            loss_and_grads(layers, slots, &params, &xb, &yb, cfg.qmin, cfg.qmax, cfg.workers)?;
-        if t == 1 {
-            first_loss = loss;
-        }
-        final_loss = loss;
-        opt.step(t, cfg.lr, entries, &mut params, &grads)?;
-        if cfg.verbose && (t == 1 || t % 100 == 0 || t == cfg.iters) {
-            eprintln!("    [{}] iter {t}/{} loss {loss:.6}", cfg.tag, cfg.iters);
-        }
-    }
-    Ok(ReconResult { params, first_loss, final_loss, steps: cfg.iters as u64 })
+        loss_and_grads(layers, slots, params, &xb, &yb, cfg.qmin, cfg.qmax, cfg.workers)
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -746,6 +761,78 @@ mod tests {
         assert_eq!(round_ties_even(-2.5), -2.0);
         assert_eq!(round_ties_even(1.2), 1.0);
         assert_eq!(round_ties_even(-1.7), -2.0);
+    }
+
+    /// The pre-delegation floor-based implementation — kept as the oracle
+    /// for the std delegation.
+    fn round_ties_even_ref(x: f32) -> f32 {
+        let f = x.floor();
+        if x - f == 0.5 {
+            if f.rem_euclid(2.0) == 0.0 {
+                f
+            } else {
+                f + 1.0
+            }
+        } else {
+            x.round()
+        }
+    }
+
+    #[test]
+    fn ties_negative_exact_halves() {
+        // every representable half in [−64, 64): the tie must land on the
+        // even neighbor, with the sign handled correctly
+        for n in -64i32..64 {
+            let x = n as f32 + 0.5; // exactly representable
+            let r = round_ties_even(x);
+            assert_eq!(r % 2.0, 0.0, "round_ties_even({x}) = {r} is odd");
+            assert!((r - x).abs() <= 0.5, "round_ties_even({x}) = {r} not nearest");
+            assert_eq!(r, round_ties_even_ref(x), "std vs reference at {x}");
+            // negation symmetry: banker's rounding is odd-symmetric
+            assert_eq!(round_ties_even(-x), -r, "sign asymmetry at {x}");
+        }
+    }
+
+    #[test]
+    fn ties_large_magnitudes_near_f32_integer_threshold() {
+        // at |x| ≥ 2^23 every f32 is an integer: rounding is the identity
+        let threshold = (1u32 << 23) as f32;
+        for &x in &[
+            threshold,
+            threshold + 1.0,
+            -threshold,
+            -(threshold + 1.0),
+            threshold * 1024.0,
+            f32::MAX,
+            f32::MIN,
+        ] {
+            assert_eq!(round_ties_even(x), x, "large magnitude {x} must be a fixed point");
+            assert_eq!(round_ties_even(x), round_ties_even_ref(x));
+        }
+        // the last non-integer f32 scale: 2^23 − 0.5 is representable and
+        // ties to the even 2^23
+        let x = threshold - 0.5;
+        assert_eq!(round_ties_even(x), threshold);
+        assert_eq!(round_ties_even(-x), -threshold);
+    }
+
+    #[test]
+    fn round_ties_even_agrees_with_reference_everywhere() {
+        Prop::new("std round_ties_even ≡ floor-based reference").cases(4000).check(|rng| {
+            // mix magnitudes: dense near the grid, sparse out to 2^24
+            let x = match rng.below(3) {
+                0 => (rng.next_f32() - 0.5) * 8.0,
+                1 => (rng.next_f32() - 0.5) * 1e4,
+                _ => (rng.next_f32() - 0.5) * 3e7,
+            };
+            // include exact halves often: snap a third of the cases
+            let x = if rng.below(3) == 0 { x.floor() + 0.5 } else { x };
+            let (got, want) = (round_ties_even(x), round_ties_even_ref(x));
+            if got != want {
+                return Err(format!("x = {x}: std {got} vs reference {want}"));
+            }
+            Ok(())
+        });
     }
 
     #[test]
@@ -979,6 +1066,7 @@ mod tests {
             in_shape: vec![4],
             out_shape: vec![2],
             act_sites: 0,
+            heads: 1,
             layers: vec![LayerInfo {
                 name: "fc".into(),
                 kind: "linear".into(),

@@ -43,6 +43,10 @@ pub struct UnitCtx<'a> {
     pub weights: Vec<Option<&'a Tensor>>,
     /// per-layer `b/{unit}/{layer}` tensors, in layer order
     pub biases: Vec<Option<&'a Tensor>>,
+    /// unit-level non-quantized parameters (`p/{unit}/{name}` in the
+    /// weights FXT, keyed by `{name}`) — layernorm gains/biases for
+    /// `transformer_block` units; empty elsewhere
+    pub extras: std::collections::BTreeMap<String, &'a Tensor>,
 }
 
 /// A view of one unit's learned quantization state, enough to run the

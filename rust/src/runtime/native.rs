@@ -4,6 +4,7 @@
 //! mode, contraction-shaped units).
 
 use super::{Backend, QView, ReconOutcome, ReconTask, UnitCtx};
+use crate::block::{self, BlockDef};
 use crate::recon::{self, LayerDef};
 use crate::tensor::{qrange, Tensor};
 use crate::util::pool;
@@ -12,9 +13,80 @@ use anyhow::{anyhow, bail};
 use std::sync::Mutex;
 use std::time::Instant;
 
-/// Unit kinds the native engine can execute: plain contraction stacks,
-/// optionally ReLU-separated.
-const NATIVE_KINDS: [&str; 2] = ["linear", "mlp_relu"];
+/// Unit kinds the native engine can execute: plain contraction stacks
+/// (optionally ReLU-separated) and transformer blocks.  This list is the
+/// single source of truth — the packed-export eligibility check
+/// (`Session::check_packable`) and the block pipeline route through
+/// [`native_unit_kind`] rather than re-spelling the strings.
+pub const NATIVE_KINDS: [&str; 3] = ["linear", "mlp_relu", "transformer_block"];
+
+/// The shared supported-unit-kind predicate.
+pub fn native_unit_kind(kind: &str) -> bool {
+    NATIVE_KINDS.contains(&kind)
+}
+
+/// Contraction kinds whose layers form a *sequential stack* (everything in
+/// [`NATIVE_KINDS`] except `transformer_block`, whose six layers wire into
+/// attention + MLP instead).
+fn stack_kind(kind: &str) -> bool {
+    kind == "linear" || kind == "mlp_relu"
+}
+
+/// Per-layer [`LayerDef`] views for a sequential contraction stack — shared
+/// by the [`Native`] engine and the block pipeline's streamed recon loop.
+pub fn stack_layer_defs<'a>(cx: &UnitCtx<'a>) -> Result<Vec<LayerDef<'a>>> {
+    if !stack_kind(&cx.unit.kind) {
+        bail!(
+            "native backend cannot execute unit {:?} of kind {:?} as a contraction \
+             stack (supported kinds: {NATIVE_KINDS:?}); use --backend pjrt with AOT \
+             artifacts",
+            cx.unit.name,
+            cx.unit.kind
+        );
+    }
+    layer_weight_defs(cx)
+}
+
+/// Per-layer weight/bias views without any executability check (enough for
+/// weight export — works for blocks too, whose layers are canonical 2-D
+/// contractions).
+fn layer_weight_defs<'a>(cx: &UnitCtx<'a>) -> Result<Vec<LayerDef<'a>>> {
+    let relu_between = cx.unit.kind == "mlp_relu";
+    let n = cx.unit.layers.len();
+    let mut out = Vec::with_capacity(n);
+    for (i, layer) in cx.unit.layers.iter().enumerate() {
+        let w = cx
+            .weights
+            .get(i)
+            .copied()
+            .flatten()
+            .ok_or_else(|| {
+                anyhow!(
+                    "native backend: missing weights w/{}/{} in the model's FXT export",
+                    cx.unit.name,
+                    layer.name
+                )
+            })?;
+        if w.shape() != &[layer.rows, layer.cols][..] {
+            bail!(
+                "native backend: weights for {}/{} have shape {:?}, expected the \
+                 canonical 2-D layout [{}, {}]",
+                cx.unit.name,
+                layer.name,
+                w.shape(),
+                layer.rows,
+                layer.cols
+            );
+        }
+        out.push(LayerDef {
+            name: &layer.name,
+            w,
+            bias: cx.biases.get(i).copied().flatten(),
+            relu_after: relu_between && i + 1 < n,
+        });
+    }
+    Ok(out)
+}
 
 #[derive(Default, Clone, Debug)]
 pub struct NativeStats {
@@ -51,58 +123,9 @@ impl Native {
         self.stats.lock().expect("stats lock").clone()
     }
 
-    /// Per-layer weight/bias views, without any executability check (enough
-    /// for weight export).
-    fn layer_weights<'a>(&self, cx: &UnitCtx<'a>) -> Result<Vec<LayerDef<'a>>> {
-        let relu_between = cx.unit.kind == "mlp_relu";
-        let n = cx.unit.layers.len();
-        let mut out = Vec::with_capacity(n);
-        for (i, layer) in cx.unit.layers.iter().enumerate() {
-            let w = cx
-                .weights
-                .get(i)
-                .copied()
-                .flatten()
-                .ok_or_else(|| {
-                    anyhow!(
-                        "native backend: missing weights w/{}/{} in the model's FXT export",
-                        cx.unit.name,
-                        layer.name
-                    )
-                })?;
-            if w.shape() != &[layer.rows, layer.cols][..] {
-                bail!(
-                    "native backend: weights for {}/{} have shape {:?}, expected the \
-                     canonical 2-D layout [{}, {}]",
-                    cx.unit.name,
-                    layer.name,
-                    w.shape(),
-                    layer.rows,
-                    layer.cols
-                );
-            }
-            out.push(LayerDef {
-                name: &layer.name,
-                w,
-                bias: cx.biases.get(i).copied().flatten(),
-                relu_after: relu_between && i + 1 < n,
-            });
-        }
-        Ok(out)
-    }
-
-    /// Layer views for *execution*: additionally requires a supported unit
-    /// topology.
-    fn layer_defs<'a>(&self, cx: &UnitCtx<'a>) -> Result<Vec<LayerDef<'a>>> {
-        if !NATIVE_KINDS.contains(&cx.unit.kind.as_str()) {
-            bail!(
-                "native backend cannot execute unit {:?} of kind {:?} (supported kinds: \
-                 {NATIVE_KINDS:?}); use --backend pjrt with AOT artifacts",
-                cx.unit.name,
-                cx.unit.kind
-            );
-        }
-        self.layer_weights(cx)
+    /// The block view of a `transformer_block` unit context.
+    fn block_def<'a>(&self, cx: &UnitCtx<'a>) -> Result<BlockDef<'a>> {
+        block::block_def_for(cx)
     }
 
     fn reconstruct_with(&self, task: &ReconTask, workers: usize) -> Result<ReconOutcome> {
@@ -114,7 +137,6 @@ impl Native {
             );
         }
         let cx = &task.cx;
-        let layers = self.layer_defs(cx)?;
         let slots = recon::map_pack(cx.unit, &task.method, &task.entries)?;
         let (qmin, qmax) = qrange(task.bits_w, cx.model.symmetric);
         let x_all = Tensor::concat_rows(&task.x)?;
@@ -131,9 +153,17 @@ impl Native {
         };
         let mut rng = task.rng.clone();
         let t0 = Instant::now();
-        let r = recon::reconstruct_unit(
-            &layers, &slots, &task.entries, &task.params, &x_all, &y_all, &cfg, &mut rng,
-        )?;
+        let r = if cx.unit.kind == "transformer_block" {
+            let def = self.block_def(cx)?;
+            block::reconstruct_block(
+                &def, &slots, &task.entries, &task.params, &x_all, &y_all, &cfg, &mut rng,
+            )?
+        } else {
+            let layers = stack_layer_defs(cx)?;
+            recon::reconstruct_unit(
+                &layers, &slots, &task.entries, &task.params, &x_all, &y_all, &cfg, &mut rng,
+            )?
+        };
         let seconds = t0.elapsed().as_secs_f64();
         {
             let mut s = self.stats.lock().expect("stats lock");
@@ -166,8 +196,12 @@ impl Backend for Native {
     }
 
     fn unit_forward_fp(&self, cx: &UnitCtx, chunks: &[Tensor]) -> Result<Vec<Tensor>> {
-        let layers = self.layer_defs(cx)?;
         self.stats.lock().expect("stats lock").forwards += chunks.len() as u64;
+        if cx.unit.kind == "transformer_block" {
+            let def = self.block_def(cx)?;
+            return chunks.iter().map(|c| block::forward_fp(&def, c, self.workers)).collect();
+        }
+        let layers = stack_layer_defs(cx)?;
         chunks
             .iter()
             .map(|c| recon::unit_forward_fp(&layers, c, self.workers))
@@ -178,10 +212,20 @@ impl Backend for Native {
         if q.mode != "w" {
             bail!("native backend supports weight-only mode; use --backend pjrt for \"wa\"");
         }
-        let layers = self.layer_defs(cx)?;
         let slots = recon::map_pack(cx.unit, q.method, q.entries)?;
         let (qmin, qmax) = qrange(q.bits_w, cx.model.symmetric);
         self.stats.lock().expect("stats lock").forwards += chunks.len() as u64;
+        if cx.unit.kind == "transformer_block" {
+            let def = self.block_def(cx)?;
+            // Ŵ once per layer; only attention + contractions repeat per chunk.
+            let whats = block::block_whats(&def, &slots, q.params, qmin, qmax)?;
+            let refs: Vec<&Tensor> = whats.iter().collect();
+            return chunks
+                .iter()
+                .map(|c| block::forward_with(&def, &refs, c, self.workers))
+                .collect();
+        }
+        let layers = stack_layer_defs(cx)?;
         // Ŵ once per layer; only the contractions repeat per chunk.
         let whats = recon::unit_whats(&layers, &slots, q.params, qmin, qmax)?;
         chunks
@@ -207,7 +251,7 @@ impl Backend for Native {
     }
 
     fn export_qw(&self, cx: &UnitCtx, q: &QView) -> Result<Vec<(Tensor, Tensor)>> {
-        let layers = self.layer_weights(cx)?;
+        let layers = layer_weight_defs(cx)?;
         let slots = recon::map_pack(cx.unit, q.method, q.entries)?;
         let (qmin, qmax) = qrange(q.bits_w, cx.model.symmetric);
         recon::export_qw(&layers, &slots, q.params, qmin, qmax)
@@ -215,7 +259,7 @@ impl Backend for Native {
 
     /// Codes without the Ŵ materialization (half the export work).
     fn export_codes(&self, cx: &UnitCtx, q: &QView) -> Result<Vec<Tensor>> {
-        let layers = self.layer_weights(cx)?;
+        let layers = layer_weight_defs(cx)?;
         let slots = recon::map_pack(cx.unit, q.method, q.entries)?;
         let (qmin, qmax) = qrange(q.bits_w, cx.model.symmetric);
         recon::export_codes(&layers, &slots, q.params, qmin, qmax)

@@ -129,6 +129,10 @@ fn eval_for(sess: &Session, r: Option<&crate::coordinator::QuantResult>)
             Some(r) => eval::eval_cnn(sess, r)?,
             None => eval::eval_cnn_fp(sess)?,
         }),
+        // native transformer-block LMs evaluate on any build/backend
+        "block_lm" => {
+            m.insert("ppl".into(), eval::eval_ppl_hidden(sess, r, "eval_x", "eval_y")?);
+        }
         #[cfg(feature = "pjrt")]
         "encoder" => m.extend(eval::eval_encoder(sess, r)?),
         #[cfg(feature = "pjrt")]

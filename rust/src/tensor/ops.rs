@@ -225,6 +225,38 @@ impl Tensor {
         Tensor::from_f32(out, &[1, c])
     }
 
+    /// Row-wise numerically-stable softmax over a 2-D tensor (attention
+    /// probabilities, logit→probability conversion).
+    pub fn softmax_rows(&self) -> Result<Tensor> {
+        if self.ndim() != 2 {
+            bail!("softmax_rows on {:?}", self.shape());
+        }
+        let (n, c) = (self.shape()[0], self.shape()[1]);
+        let v = self.to_f32_vec();
+        let mut out = vec![0.0f32; n * c];
+        for i in 0..n {
+            let row = &v[i * c..(i + 1) * c];
+            let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let orow = &mut out[i * c..(i + 1) * c];
+            let mut sum = 0.0f32;
+            for (o, &x) in orow.iter_mut().zip(row) {
+                *o = (x - mx).exp();
+                sum += *o;
+            }
+            let inv = 1.0 / sum;
+            for o in orow.iter_mut() {
+                *o *= inv;
+            }
+        }
+        Tensor::from_f32(out, self.shape())
+    }
+
+    /// GELU activation (tanh approximation, the GPT-2 form) — the
+    /// transformer-block MLP nonlinearity.
+    pub fn gelu(&self) -> Tensor {
+        self.map(gelu_scalar)
+    }
+
     /// Top-k indices per row (descending) — for top-5 accuracy.
     pub fn topk_rows(&self, k: usize) -> Result<Vec<Vec<usize>>> {
         if self.ndim() != 2 {
@@ -242,6 +274,146 @@ impl Tensor {
             })
             .collect())
     }
+}
+
+// ---------------------------------------------------------------------------
+// Transformer-block primitives: GELU / softmax / layernorm backwards.  The
+// forward halves live on `Tensor` ([`Tensor::softmax_rows`], [`Tensor::gelu`],
+// [`layernorm_rows`]); the backwards are free functions so `block::`'s
+// closed-form STE backprop (and its finite-difference gradchecks) can drive
+// them with explicit caches.
+// ---------------------------------------------------------------------------
+
+fn gelu_scalar(x: f32) -> f32 {
+    const C: f32 = 0.797_884_56; // sqrt(2/π)
+    const A: f32 = 0.044_715;
+    0.5 * x * (1.0 + (C * (x + A * x * x * x)).tanh())
+}
+
+/// d gelu(x)/dx for the tanh approximation (smooth everywhere, so plain
+/// finite differences validate it).
+fn gelu_grad_scalar(x: f32) -> f32 {
+    const C: f32 = 0.797_884_56;
+    const A: f32 = 0.044_715;
+    let u = C * (x + A * x * x * x);
+    let t = u.tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * C * (1.0 + 3.0 * A * x * x)
+}
+
+/// GELU backward: `dx = gy ⊙ gelu'(x)` with `x` the *pre-activation*.
+pub fn gelu_bwd(x: &Tensor, gy: &Tensor) -> Result<Tensor> {
+    x.zip(gy, |xi, gi| gi * gelu_grad_scalar(xi))
+}
+
+/// Softmax backward from the forward *output* `y` (row-wise probabilities):
+/// `dx = y ⊙ (gy − Σ_row gy ⊙ y)`.  Rows of `y` that are all zero (masked
+/// attention rows) propagate zero gradient, which is exactly right.
+pub fn softmax_rows_bwd(y: &Tensor, gy: &Tensor) -> Result<Tensor> {
+    if y.shape() != gy.shape() || y.ndim() != 2 {
+        bail!("softmax_rows_bwd: y {:?} vs gy {:?}", y.shape(), gy.shape());
+    }
+    let (n, c) = (y.shape()[0], y.shape()[1]);
+    let yv = y.as_f32()?;
+    let gv = gy.as_f32()?;
+    let mut out = vec![0.0f32; n * c];
+    for i in 0..n {
+        let yr = &yv[i * c..(i + 1) * c];
+        let gr = &gv[i * c..(i + 1) * c];
+        let dot: f32 = yr.iter().zip(gr).map(|(&a, &b)| a * b).sum();
+        for ((o, &yj), &gj) in out[i * c..(i + 1) * c].iter_mut().zip(yr).zip(gr) {
+            *o = yj * (gj - dot);
+        }
+    }
+    Tensor::from_f32(out, y.shape())
+}
+
+/// Row-wise layernorm `y = gain ⊙ (x − μ)/√(σ² + eps) + bias` over a 2-D
+/// tensor; returns `(y, mean, rstd)` — the per-row statistics are the
+/// backward pass's cache.
+pub fn layernorm_rows(
+    x: &Tensor,
+    gain: &[f32],
+    bias: &[f32],
+    eps: f32,
+) -> Result<(Tensor, Vec<f32>, Vec<f32>)> {
+    if x.ndim() != 2 {
+        bail!("layernorm_rows on {:?}", x.shape());
+    }
+    let (n, c) = (x.shape()[0], x.shape()[1]);
+    if gain.len() != c || bias.len() != c {
+        bail!("layernorm_rows: gain/bias of {}/{} values on width {c}", gain.len(), bias.len());
+    }
+    let xv = x.as_f32()?;
+    let mut out = vec![0.0f32; n * c];
+    let mut mean = vec![0.0f32; n];
+    let mut rstd = vec![0.0f32; n];
+    for i in 0..n {
+        let row = &xv[i * c..(i + 1) * c];
+        let mu = row.iter().sum::<f32>() / c as f32;
+        let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / c as f32;
+        let rs = 1.0 / (var + eps).sqrt();
+        mean[i] = mu;
+        rstd[i] = rs;
+        for (((o, &xj), &g), &b) in
+            out[i * c..(i + 1) * c].iter_mut().zip(row).zip(gain).zip(bias)
+        {
+            *o = g * (xj - mu) * rs + b;
+        }
+    }
+    Ok((Tensor::from_f32(out, x.shape())?, mean, rstd))
+}
+
+/// Layernorm backward with the cached `(mean, rstd)` from
+/// [`layernorm_rows`]; returns `(dx, dgain, dbias)`.
+pub fn layernorm_rows_bwd(
+    x: &Tensor,
+    gain: &[f32],
+    mean: &[f32],
+    rstd: &[f32],
+    gy: &Tensor,
+) -> Result<(Tensor, Vec<f32>, Vec<f32>)> {
+    if x.shape() != gy.shape() || x.ndim() != 2 {
+        bail!("layernorm_rows_bwd: x {:?} vs gy {:?}", x.shape(), gy.shape());
+    }
+    let (n, c) = (x.shape()[0], x.shape()[1]);
+    if gain.len() != c || mean.len() != n || rstd.len() != n {
+        bail!("layernorm_rows_bwd: cache sizes {}/{}/{} vs ({n}, {c})",
+              gain.len(), mean.len(), rstd.len());
+    }
+    let xv = x.as_f32()?;
+    let gv = gy.as_f32()?;
+    let mut dx = vec![0.0f32; n * c];
+    let mut dgain = vec![0.0f32; c];
+    let mut dbias = vec![0.0f32; c];
+    for i in 0..n {
+        let row = &xv[i * c..(i + 1) * c];
+        let gr = &gv[i * c..(i + 1) * c];
+        // x̂ and dx̂ = gy ⊙ gain; dx = rstd·(dx̂ − mean(dx̂) − x̂·mean(dx̂ ⊙ x̂))
+        let mut m1 = 0.0f32; // mean of dx̂
+        let mut m2 = 0.0f32; // mean of dx̂ ⊙ x̂
+        for ((&xj, &gj), &gnj) in row.iter().zip(gr).zip(gain) {
+            let xh = (xj - mean[i]) * rstd[i];
+            let dxh = gj * gnj;
+            m1 += dxh;
+            m2 += dxh * xh;
+        }
+        m1 /= c as f32;
+        m2 /= c as f32;
+        for ((((o, &xj), &gj), &gnj), (dg, db)) in dx[i * c..(i + 1) * c]
+            .iter_mut()
+            .zip(row)
+            .zip(gr)
+            .zip(gain)
+            .zip(dgain.iter_mut().zip(dbias.iter_mut()))
+        {
+            let xh = (xj - mean[i]) * rstd[i];
+            let dxh = gj * gnj;
+            *o = rstd[i] * (dxh - m1 - xh * m2);
+            *dg += gj * xh;
+            *db += gj;
+        }
+    }
+    Ok((Tensor::from_f32(dx, x.shape())?, dgain, dbias))
 }
 
 // ---------------------------------------------------------------------------
@@ -414,6 +586,149 @@ mod tests {
             let n = q / s1;
             assert!((n - n.round()).abs() < 1e-5);
             assert!(n >= -4.0 && n <= 3.0);
+        }
+    }
+
+    // ---- transformer-block primitives -----------------------------------
+
+    use crate::util::rng::Pcg32;
+
+    /// Central finite difference of a scalar functional `f` with respect to
+    /// one slot of `base`, in f32 forward / f64 accumulate.
+    fn fd(base: &[f32], k: usize, eps: f32, f: impl Fn(&[f32]) -> f64) -> f64 {
+        let mut hi = base.to_vec();
+        let mut lo = base.to_vec();
+        hi[k] += eps;
+        lo[k] -= eps;
+        (f(&hi) - f(&lo)) / (2.0 * eps as f64)
+    }
+
+    fn dot64(a: &Tensor, g: &[f32]) -> f64 {
+        a.as_f32().unwrap().iter().zip(g).map(|(&x, &gi)| x as f64 * gi as f64).sum()
+    }
+
+    #[test]
+    fn softmax_rows_normalizes_and_orders() {
+        let t = Tensor::from_f32(vec![1.0, 2.0, 3.0, -1.0, 0.0, 1000.0], &[2, 3]).unwrap();
+        let p = t.softmax_rows().unwrap();
+        let v = p.as_f32().unwrap();
+        assert!((v[..3].iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(v[0] < v[1] && v[1] < v[2]);
+        // numerically stable under huge logits
+        assert!((v[5] - 1.0).abs() < 1e-6 && v[3] == 0.0);
+    }
+
+    #[test]
+    fn softmax_backward_matches_finite_differences() {
+        let mut rng = Pcg32::seeded(17);
+        let (n, c) = (3usize, 5usize);
+        let xv: Vec<f32> = (0..n * c).map(|_| rng.next_normal()).collect();
+        let gv: Vec<f32> = (0..n * c).map(|_| rng.next_normal()).collect();
+        let x = Tensor::from_f32(xv.clone(), &[n, c]).unwrap();
+        let g = Tensor::from_f32(gv.clone(), &[n, c]).unwrap();
+        let y = x.softmax_rows().unwrap();
+        let dx = softmax_rows_bwd(&y, &g).unwrap();
+        let dxv = dx.as_f32().unwrap();
+        let f = |xs: &[f32]| {
+            let t = Tensor::from_f32(xs.to_vec(), &[n, c]).unwrap();
+            dot64(&t.softmax_rows().unwrap(), &gv)
+        };
+        for k in 0..n * c {
+            let num = fd(&xv, k, 1e-3, f);
+            assert!(
+                (dxv[k] as f64 - num).abs() < 2e-3 * (1.0 + num.abs()),
+                "softmax dx[{k}]: analytic {} vs numeric {num}",
+                dxv[k]
+            );
+        }
+    }
+
+    #[test]
+    fn gelu_backward_matches_finite_differences() {
+        let mut rng = Pcg32::seeded(19);
+        let xv: Vec<f32> = (0..64).map(|_| rng.next_normal() * 2.0).collect();
+        let gv: Vec<f32> = (0..64).map(|_| rng.next_normal()).collect();
+        let x = Tensor::from_f32(xv.clone(), &[64]).unwrap();
+        let g = Tensor::from_f32(gv.clone(), &[64]).unwrap();
+        let dx = gelu_bwd(&x, &g).unwrap();
+        let dxv = dx.as_f32().unwrap();
+        let f = |xs: &[f32]| {
+            let t = Tensor::from_f32(xs.to_vec(), &[64]).unwrap();
+            dot64(&t.gelu(), &gv)
+        };
+        for k in 0..64 {
+            let num = fd(&xv, k, 1e-3, f);
+            assert!(
+                (dxv[k] as f64 - num).abs() < 2e-3 * (1.0 + num.abs()),
+                "gelu dx[{k}]: analytic {} vs numeric {num}",
+                dxv[k]
+            );
+        }
+        // sanity: gelu(0) = 0, gelu(x) → x for large x, → 0 for very negative
+        assert_eq!(Tensor::from_f32(vec![0.0], &[1]).unwrap().gelu().as_f32().unwrap()[0], 0.0);
+        let big = Tensor::from_f32(vec![10.0, -10.0], &[2]).unwrap().gelu();
+        assert!((big.as_f32().unwrap()[0] - 10.0).abs() < 1e-4);
+        assert!(big.as_f32().unwrap()[1].abs() < 1e-4);
+    }
+
+    #[test]
+    fn layernorm_forward_statistics() {
+        let mut rng = Pcg32::seeded(23);
+        let (n, c) = (4usize, 16usize);
+        let x = Tensor::from_f32(
+            (0..n * c).map(|_| 3.0 + 2.0 * rng.next_normal()).collect(),
+            &[n, c],
+        )
+        .unwrap();
+        let (y, mean, rstd) = layernorm_rows(&x, &vec![1.0; c], &vec![0.0; c], 1e-5).unwrap();
+        assert_eq!(mean.len(), n);
+        assert_eq!(rstd.len(), n);
+        let yv = y.as_f32().unwrap();
+        for i in 0..n {
+            let row = &yv[i * c..(i + 1) * c];
+            let mu = row.iter().sum::<f32>() / c as f32;
+            let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / c as f32;
+            assert!(mu.abs() < 1e-5, "normalized row mean {mu}");
+            assert!((var - 1.0).abs() < 1e-3, "normalized row var {var}");
+        }
+    }
+
+    #[test]
+    fn layernorm_backward_matches_finite_differences() {
+        let mut rng = Pcg32::seeded(29);
+        let (n, c) = (3usize, 8usize);
+        let xv: Vec<f32> = (0..n * c).map(|_| rng.next_normal()).collect();
+        let gnv: Vec<f32> = (0..c).map(|_| 0.5 + rng.next_f32()).collect();
+        let bv: Vec<f32> = (0..c).map(|_| rng.next_normal() * 0.1).collect();
+        let gv: Vec<f32> = (0..n * c).map(|_| rng.next_normal()).collect();
+        let x = Tensor::from_f32(xv.clone(), &[n, c]).unwrap();
+        let g = Tensor::from_f32(gv.clone(), &[n, c]).unwrap();
+        let (_, mean, rstd) = layernorm_rows(&x, &gnv, &bv, 1e-5).unwrap();
+        let (dx, dgain, dbias) = layernorm_rows_bwd(&x, &gnv, &mean, &rstd, &g).unwrap();
+        let dxv = dx.as_f32().unwrap();
+        let f_x = |xs: &[f32]| {
+            let t = Tensor::from_f32(xs.to_vec(), &[n, c]).unwrap();
+            dot64(&layernorm_rows(&t, &gnv, &bv, 1e-5).unwrap().0, &gv)
+        };
+        for k in 0..n * c {
+            let num = fd(&xv, k, 1e-3, f_x);
+            assert!(
+                (dxv[k] as f64 - num).abs() < 5e-3 * (1.0 + num.abs()),
+                "layernorm dx[{k}]: analytic {} vs numeric {num}",
+                dxv[k]
+            );
+        }
+        let f_gain = |gs: &[f32]| {
+            dot64(&layernorm_rows(&x, gs, &bv, 1e-5).unwrap().0, &gv)
+        };
+        let f_bias = |bs: &[f32]| {
+            dot64(&layernorm_rows(&x, &gnv, bs, 1e-5).unwrap().0, &gv)
+        };
+        for k in 0..c {
+            let ng = fd(&gnv, k, 1e-3, f_gain);
+            let nb = fd(&bv, k, 1e-3, f_bias);
+            assert!((dgain[k] as f64 - ng).abs() < 5e-3 * (1.0 + ng.abs()), "dgain[{k}]");
+            assert!((dbias[k] as f64 - nb).abs() < 5e-3 * (1.0 + nb.abs()), "dbias[{k}]");
         }
     }
 

@@ -1,0 +1,233 @@
+//! Transformer-block acceptance gate — artifact-free and PJRT-free:
+//!
+//! * a synthetic `transformer_block` manifest runs end-to-end natively —
+//!   calibration → block-by-block FlexRound reconstruction (both
+//!   `--recon-input fp` and `--recon-input quant`) → pack → `Engine`
+//!   forward — with the packed engine matching the generic f32 quantized
+//!   chain within 1e-4;
+//! * the disk-spillable activation cache: a calibration set larger than the
+//!   memory budget spills chunks to disk, and the pipeline's results are
+//!   bit-identical to the all-in-memory run (caching is value-transparent);
+//! * native perplexity through the weights-FXT lm head (`eval_ppl_hidden`)
+//!   reports finite quantized-vs-FP deltas on the synthetic manifest;
+//! * `Session::quantize` routes `transformer_block` units through the
+//!   native backend (op-level finite-difference gradchecks live in
+//!   `tensor::ops` and `block::tests`).
+
+use flexround::block::{
+    chain_mse, run_pipeline, synthetic_block_model, PipelineOpts, ReconInput, SyntheticBlockSpec,
+};
+use flexround::coordinator::Plan;
+use flexround::eval;
+use flexround::infer::{Engine, PackedModel};
+use flexround::runtime::Native;
+
+fn spec() -> SyntheticBlockSpec {
+    SyntheticBlockSpec {
+        blocks: 2,
+        d: 16,
+        heads: 2,
+        mlp: 32,
+        seq: 4,
+        calib_seqs: 8,
+        eval_seqs: 4,
+        chunk_seqs: 2,
+        vocab: 24,
+        bits: 4,
+        seed: 7,
+    }
+}
+
+fn opts(recon_input: ReconInput, iters: usize) -> PipelineOpts {
+    let mut o = PipelineOpts::new("flexround", 4);
+    o.iters = iters;
+    o.lr = 3e-3;
+    o.recon_input = recon_input;
+    o
+}
+
+#[test]
+fn pipeline_improves_over_rtn_in_both_input_modes() {
+    let fx = synthetic_block_model(&spec()).unwrap();
+    let backend = Native::with_workers(2);
+    let sess = fx.session(&backend);
+    let calib = sess.dataset("calib_x").unwrap().clone();
+
+    // RTN-at-init baseline: zero learning iterations
+    let base = run_pipeline(&sess, &opts(ReconInput::Quant, 0)).unwrap();
+    assert_eq!(base.result.recon_steps, 0);
+    let mse_rtn = chain_mse(&sess, &base.result, &calib).unwrap();
+    assert!(mse_rtn.is_finite() && mse_rtn > 0.0);
+
+    for mode in [ReconInput::Fp, ReconInput::Quant] {
+        let out = run_pipeline(&sess, &opts(mode, 60)).unwrap();
+        assert_eq!(out.result.recon_steps, 120, "60 iters × 2 blocks");
+        assert_eq!(out.result.units.len(), 2);
+        for u in &out.result.units {
+            assert!(
+                u.first_loss.is_finite() && u.final_loss.is_finite(),
+                "block {} losses must be finite under {mode:?}",
+                u.unit
+            );
+        }
+        let mse = chain_mse(&sess, &out.result, &calib).unwrap();
+        assert!(
+            mse < mse_rtn,
+            "{mode:?}-input pipeline should beat the RTN init: {mse_rtn:.6} → {mse:.6}"
+        );
+    }
+}
+
+#[test]
+fn activation_cache_spills_and_results_are_identical() {
+    let fx = synthetic_block_model(&spec()).unwrap();
+    let backend = Native::new();
+    let sess = fx.session(&backend);
+
+    let in_memory = run_pipeline(&sess, &opts(ReconInput::Quant, 25)).unwrap();
+    assert_eq!(in_memory.spilled_chunks, 0);
+
+    // one chunk is chunk_seqs·seq·d·4 = 2·4·16·4 = 512 bytes; a 600-byte
+    // budget forces every chain past its budget on the second chunk
+    let dir = std::env::temp_dir()
+        .join(format!("flexround_block_pipeline_spill_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut cached = opts(ReconInput::Quant, 25);
+    cached.cache_dir = Some(dir.clone());
+    cached.cache_budget_bytes = 600;
+    let spilled = run_pipeline(&sess, &cached).unwrap();
+    assert!(
+        spilled.spilled_chunks > 0,
+        "calibration set larger than the budget must spill to disk"
+    );
+
+    // caching is value-transparent: learned parameters and losses are
+    // bit-identical to the all-in-memory run
+    for (a, b) in in_memory.result.units.iter().zip(&spilled.result.units) {
+        assert_eq!(a.final_loss, b.final_loss, "block {} loss drifted under spill", a.unit);
+        for (pa, pb) in a.params.iter().zip(&b.params) {
+            assert_eq!(pa.as_f32().unwrap(), pb.as_f32().unwrap());
+        }
+    }
+    // drop of the run's caches removed the spill files
+    let leftovers = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter(|e| {
+            e.as_ref().unwrap().file_name().to_string_lossy().starts_with("actcache_")
+        })
+        .count();
+    assert_eq!(leftovers, 0, "spill files must be cleaned up");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn pipeline_pack_engine_roundtrip_matches_generic_chain() {
+    let fx = synthetic_block_model(&spec()).unwrap();
+    let backend = Native::with_workers(2);
+    let sess = fx.session(&backend);
+    let out = run_pipeline(&sess, &opts(ReconInput::Quant, 40)).unwrap();
+
+    // pack → save → reload: the artifact carries no FP weights
+    let pm = sess.packed_model(&out.result).unwrap();
+    assert!(pm.has_blocks());
+    assert_eq!(pm.seq(), 4);
+    assert!(pm.packed_bytes() < pm.fp32_bytes(), "4-bit pack must shrink the block");
+    let path = std::env::temp_dir()
+        .join(format!("flexround_block_pack_{}.fxt", std::process::id()));
+    pm.save(&path).unwrap();
+    let loaded = PackedModel::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(pm, loaded);
+
+    // generic f32 quantized chain vs the packed engine, chunk by chunk
+    let engine = Engine::new(loaded, 2);
+    let calib = sess.dataset("calib_x").unwrap();
+    let chunks = sess.first_unit_inputs(calib).unwrap();
+    let mut generic = chunks.clone();
+    for (unit, st) in sess.model.units.iter().zip(&out.result.units) {
+        generic = sess.advance_q(unit, st, "w", &generic).unwrap();
+    }
+    for (chunk, want) in chunks.iter().zip(&generic) {
+        let got = engine.forward(chunk).unwrap();
+        assert_eq!(got.shape(), want.shape());
+        let d = got.max_abs_diff(want).unwrap();
+        let tol = 1e-4 * (1.0 + want.abs_max());
+        assert!(d <= tol, "packed block engine vs f32 chain: max|Δ| {d} > {tol}");
+    }
+
+    // flattened-sequence serving entry: same rows, reshaped
+    let seq_d = engine.in_width().unwrap();
+    assert_eq!(seq_d, 4 * 16);
+    let flat = chunks[0]
+        .reshape(&[chunks[0].shape()[0] / 4, seq_d])
+        .unwrap();
+    let served = engine.forward(&flat).unwrap();
+    let direct = engine.forward(&chunks[0]).unwrap();
+    assert_eq!(
+        served.as_f32().unwrap(),
+        direct.as_f32().unwrap(),
+        "serving layout must match the token layout"
+    );
+
+    // Session::forward_q takes the packed fast path for block models too
+    let via_session = sess.forward_q(&out.result, calib).unwrap();
+    for (a, b) in via_session.iter().zip(&generic) {
+        let d = a.max_abs_diff(b).unwrap();
+        assert!(d <= 1e-4 * (1.0 + b.abs_max()), "forward_q fast path drift {d}");
+    }
+}
+
+#[test]
+fn native_perplexity_reports_quantized_vs_fp_delta() {
+    let fx = synthetic_block_model(&spec()).unwrap();
+    let backend = Native::new();
+    let sess = fx.session(&backend);
+    let ppl_fp = eval::eval_ppl_hidden(&sess, None, "eval_x", "eval_y").unwrap();
+    assert!(ppl_fp.is_finite() && ppl_fp >= 1.0, "fp perplexity {ppl_fp}");
+
+    let out = run_pipeline(&sess, &opts(ReconInput::Quant, 40)).unwrap();
+    let ppl_q = eval::eval_ppl_hidden(&sess, Some(&out.result), "eval_x", "eval_y").unwrap();
+    assert!(ppl_q.is_finite() && ppl_q >= 1.0, "quantized perplexity {ppl_q}");
+    // teacher labels are the FP argmax, so FP is the floor up to clipping
+    assert!(
+        ppl_fp < ppl_q * 2.0,
+        "fp ppl {ppl_fp} should not be far above quantized ppl {ppl_q}"
+    );
+}
+
+#[test]
+fn session_quantize_routes_blocks_through_native_backend() {
+    let fx = synthetic_block_model(&spec()).unwrap();
+    let backend = Native::with_workers(2);
+    let sess = fx.session(&backend);
+    let mut plan = Plan::new("block_lm", "flexround");
+    plan.iters = 20;
+    plan.lr = 3e-3;
+    let r = sess.quantize(&plan).unwrap();
+    assert_eq!(r.recon_steps, 40, "20 iters × 2 blocks");
+    for u in &r.units {
+        assert!(u.first_loss.is_finite() && u.final_loss.is_finite(), "block {}", u.unit);
+    }
+    // quantized and fp chains both run end to end with the right shapes
+    let calib = sess.dataset("calib_x").unwrap();
+    let q = sess.forward_q(&r, calib).unwrap();
+    let fp = sess.forward_fp(calib).unwrap();
+    assert_eq!(q.len(), fp.len());
+    assert_eq!(q[0].shape(), &[8, 16]); // chunk_seqs·seq × d
+    // rtn also runs (no learning)
+    let rtn = sess.quantize(&Plan::new("block_lm", "rtn")).unwrap();
+    assert_eq!(rtn.recon_steps, 0);
+    let _ = sess.forward_q(&rtn, calib).unwrap();
+}
+
+#[test]
+fn pipeline_rejects_quant_input_mismatch_gracefully() {
+    // sanity on the ReconInput parser used by the CLI
+    assert!(matches!(ReconInput::parse("fp"), Ok(ReconInput::Fp)));
+    assert!(matches!(ReconInput::parse("quant"), Ok(ReconInput::Quant)));
+    assert!(ReconInput::parse("bogus").is_err());
+    // and on the spec validator
+    let mut bad = spec();
+    bad.heads = 3; // 16 % 3 != 0
+    assert!(synthetic_block_model(&bad).is_err());
+}

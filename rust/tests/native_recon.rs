@@ -119,6 +119,7 @@ fn linear_unit(name: &str, layer: &str, rows: usize, cols: usize) -> UnitInfo {
         in_shape: vec![cols],
         out_shape: vec![rows],
         act_sites: 0,
+        heads: 1,
         layers: vec![LayerInfo {
             name: layer.to_string(),
             kind: "linear".to_string(),

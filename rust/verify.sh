@@ -11,9 +11,10 @@
 #   4. all secondary targets compile, debug AND release (benches, examples —
 #      release because that is how the bench trajectories actually run)
 #   5. rustdoc with -D warnings: every doc reference must resolve
-#   6. clippy with -D warnings — advisory until the pre-existing tree is
-#      lint-clean; new code (the `infer` kernels in particular) must not add
-#      warnings
+#   6. clippy — BLOCKING for src/block/ and src/infer/ (any clippy
+#      diagnostic anchored in those trees fails the gate); advisory with
+#      -D warnings for the rest of the crate until the pre-existing tree is
+#      lint-clean
 #   7. rustfmt check — advisory until the pre-existing tree is formatted
 #      (new code should be clean; the gate hardens once `cargo fmt` has
 #      been run repo-wide)
@@ -36,7 +37,16 @@ echo "== cargo build --release --benches --examples =="
 cargo build --release --benches --examples
 
 if cargo clippy --version >/dev/null 2>&1; then
-    echo "== cargo clippy --all-targets (-D warnings; advisory) =="
+    echo "== cargo clippy (BLOCKING for src/block/ and src/infer/) =="
+    clippy_out=$(cargo clippy --all-targets --message-format short 2>&1) || true
+    if printf '%s\n' "$clippy_out" \
+        | grep -E 'src/(block|infer)/[^ :]*:[0-9]+:[0-9]+: (warning|error)' \
+        | grep -v 'generated [0-9]* warning' >/dev/null; then
+        printf '%s\n' "$clippy_out" | grep -E 'src/(block|infer)/' || true
+        echo "clippy: diagnostics in src/block/ or src/infer/ are blocking"
+        exit 1
+    fi
+    echo "== cargo clippy --all-targets (-D warnings; advisory elsewhere) =="
     cargo clippy --all-targets -- -D warnings \
         || echo "clippy: lint drift (advisory; hardens once the pre-existing tree is clippy-clean)"
 else
