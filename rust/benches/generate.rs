@@ -1,0 +1,194 @@
+//! `cargo bench --bench generate` — decode-latency harness for KV-cached
+//! autoregressive generation (DESIGN.md §Generation):
+//!
+//! * prefill latency at several prompt lengths;
+//! * per-token decode cost along one generation: the KV-cached path must
+//!   stay O(1) in the generated length while the full-context recompute
+//!   baseline grows O(t) — measured as mean per-token latency over the
+//!   first 8 vs the last 8 emitted tokens;
+//! * the cached-vs-recompute speedup at depth, plus a stream-identity
+//!   check (both decoders must sample the exact same tokens).
+//!
+//! Emits machine-readable results to `BENCH_generate.json` at the repo
+//! root, alongside the human-readable stdout table.
+//!
+//! Environment knobs:
+//!   FLEXROUND_BENCH_WORKERS  worker threads for the fused GEMMs (default all)
+//!   FLEXROUND_BENCH_TOKENS   tokens generated for the decode curve (default 96)
+
+use flexround::infer::generate;
+use flexround::infer::Engine;
+use flexround::ser::json::{self, Json};
+use flexround::tensor::Tensor;
+use flexround::util::pool;
+use flexround::util::rng::Pcg32;
+use std::time::Instant;
+
+const BLOCKS: usize = 2;
+const D: usize = 256;
+const HEADS: usize = 4;
+const MLP: usize = 512;
+const VOCAB: usize = 512;
+const BITS: u32 = 4;
+const TEMP: f32 = 0.8;
+const TOP_K: usize = 32;
+
+fn mean(s: &[f64]) -> f64 {
+    if s.is_empty() {
+        0.0
+    } else {
+        s.iter().sum::<f64>() / s.len() as f64
+    }
+}
+
+fn main() {
+    let workers: usize = std::env::var("FLEXROUND_BENCH_WORKERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(pool::default_workers);
+    let max_new: usize = std::env::var("FLEXROUND_BENCH_TOKENS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(96)
+        .max(20);
+    let model = generate::synthetic_lm(BLOCKS, D, HEADS, MLP, 32, VOCAB, BITS, 7)
+        .expect("synthetic lm");
+    let engine = Engine::new(model, workers);
+    println!(
+        "== KV-cached generation ({BLOCKS} blocks, d={D}, mlp={MLP}, vocab={VOCAB}, \
+         W{BITS}, workers={workers}) =="
+    );
+
+    // ---- prefill latency vs prompt length ----
+    let mut prefill_rows: Vec<Json> = Vec::new();
+    for plen in [8usize, 32, 128] {
+        let (_, prompt) = generate::random_prompt(engine.model(), plen, 3).expect("prompt");
+        let reps = 5usize;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let _ = engine.prefill(&prompt).expect("prefill");
+        }
+        let ms = 1e3 * t0.elapsed().as_secs_f64() / reps as f64;
+        println!("prefill  t={plen:>4}  {ms:9.3} ms");
+        prefill_rows.push(Json::object(vec![
+            ("prompt_len", Json::from_f64(plen as f64)),
+            ("ms", Json::from_f64(ms)),
+        ]));
+    }
+
+    // ---- per-token decode: cached vs full-context recompute ----
+    let (_, prompt) = generate::random_prompt(engine.model(), 8, 3).expect("prompt");
+
+    // cached path: time every decode_step individually
+    let (mut state, logits) = engine.prefill(&prompt).expect("prefill");
+    let w = logits.shape()[1];
+    let rows = logits.shape()[0];
+    let mut rng = Pcg32::seeded(7);
+    let lv = logits.as_f32().expect("logits");
+    let mut tok = generate::sample_token(&lv[(rows - 1) * w..rows * w], TEMP, TOP_K, &mut rng);
+    let mut cached_tokens = vec![tok];
+    let mut cached_ms: Vec<f64> = Vec::with_capacity(max_new);
+    for _ in 1..max_new {
+        let row = generate::embed_token(engine.model(), tok).expect("embed");
+        let t0 = Instant::now();
+        let out = engine.decode_step(&mut state, &row).expect("decode");
+        cached_ms.push(1e3 * t0.elapsed().as_secs_f64());
+        tok = generate::sample_token(&out, TEMP, TOP_K, &mut rng);
+        cached_tokens.push(tok);
+    }
+
+    // recompute baseline: forward the whole growing prefix per token
+    let dtok = engine.model().in_width().expect("token width");
+    let mut rng2 = Pcg32::seeded(7);
+    let mut work: Vec<f32> = prompt.as_f32().expect("prompt rows").to_vec();
+    let mut t = prompt.shape()[0];
+    let mut rec_tokens: Vec<usize> = Vec::with_capacity(max_new);
+    let mut recompute_ms: Vec<f64> = Vec::with_capacity(max_new);
+    for step in 0..max_new {
+        let x = Tensor::from_f32(work.clone(), &[t, dtok]).expect("prefix");
+        let t0 = Instant::now();
+        let logits = engine.forward_ctx(&x, t).expect("forward_ctx");
+        if step > 0 {
+            // step 0 is the prefill-equivalent; per-token costs start after
+            recompute_ms.push(1e3 * t0.elapsed().as_secs_f64());
+        }
+        let lv = logits.as_f32().expect("logits");
+        let wv = logits.shape()[1];
+        let tok = generate::sample_token(&lv[(t - 1) * wv..t * wv], TEMP, TOP_K, &mut rng2);
+        rec_tokens.push(tok);
+        if step + 1 < max_new {
+            work.extend_from_slice(&generate::embed_token(engine.model(), tok).expect("embed"));
+            t += 1;
+        }
+    }
+    let streams_match = cached_tokens == rec_tokens;
+    // drift guard: the hand-instrumented loop above must emit the same
+    // stream as the *shipped* decoder, or the bench measures a stale copy
+    let shipped = generate::generate(
+        &engine,
+        &prompt,
+        &generate::GenOpts { max_new, temp: TEMP, top_k: TOP_K, seed: 7 },
+    )
+    .expect("shipped generate");
+    assert_eq!(
+        shipped.tokens, cached_tokens,
+        "bench decode loop diverged from infer::generate::generate"
+    );
+
+    let span = 8usize;
+    let c_first = mean(&cached_ms[..span.min(cached_ms.len())]);
+    let c_last = mean(&cached_ms[cached_ms.len().saturating_sub(span)..]);
+    let r_first = mean(&recompute_ms[..span.min(recompute_ms.len())]);
+    let r_last = mean(&recompute_ms[recompute_ms.len().saturating_sub(span)..]);
+    println!("decode ({max_new} tokens, temp {TEMP}, top-k {TOP_K}):");
+    println!("  cached     first8 {c_first:9.3} ms/tok   last8 {c_last:9.3} ms/tok  (growth {:.2}×)",
+             c_last / c_first.max(1e-12));
+    println!("  recompute  first8 {r_first:9.3} ms/tok   last8 {r_last:9.3} ms/tok  (growth {:.2}×)",
+             r_last / r_first.max(1e-12));
+    println!(
+        "  → cached is {:.2}× the recompute baseline at depth; streams {}",
+        r_last / c_last.max(1e-12),
+        if streams_match { "IDENTICAL" } else { "MISMATCHED (bug!)" }
+    );
+
+    // ---- BENCH_generate.json at the repo root ----
+    let doc = Json::object(vec![
+        ("bench", Json::from_str_val("generate")),
+        ("workers", Json::from_f64(workers as f64)),
+        (
+            "model",
+            Json::object(vec![
+                ("blocks", Json::from_f64(BLOCKS as f64)),
+                ("d", Json::from_f64(D as f64)),
+                ("heads", Json::from_f64(HEADS as f64)),
+                ("mlp", Json::from_f64(MLP as f64)),
+                ("vocab", Json::from_f64(VOCAB as f64)),
+                ("bits", Json::from_f64(BITS as f64)),
+            ]),
+        ),
+        ("prefill", Json::Arr(prefill_rows)),
+        (
+            "decode",
+            Json::object(vec![
+                ("max_new", Json::from_f64(max_new as f64)),
+                ("prompt_len", Json::from_f64(8.0)),
+                ("cached_ms_per_token_first8", Json::from_f64(c_first)),
+                ("cached_ms_per_token_last8", Json::from_f64(c_last)),
+                ("recompute_ms_per_token_first8", Json::from_f64(r_first)),
+                ("recompute_ms_per_token_last8", Json::from_f64(r_last)),
+                ("cached_growth", Json::from_f64(c_last / c_first.max(1e-12))),
+                ("recompute_growth", Json::from_f64(r_last / r_first.max(1e-12))),
+                (
+                    "cached_vs_recompute_at_depth",
+                    Json::from_f64(r_last / c_last.max(1e-12)),
+                ),
+            ]),
+        ),
+        ("streams_match", Json::Bool(streams_match)),
+    ]);
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_generate.json");
+    match std::fs::write(out, json::to_string(&doc, 2) + "\n") {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

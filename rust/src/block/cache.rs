@@ -12,9 +12,11 @@
 //! disk when needed, without promoting the chunk back into the budget.
 //!
 //! Without a cache directory the budget is ignored and everything stays in
-//! memory — the small-model fast path.  Spill files are deleted on drop
-//! (best effort), so an aborted pipeline leaves at most one run's chunks
-//! behind.
+//! memory — the small-model fast path.  Spill-file lifecycle: every exit
+//! path — normal drop, an error `?`-propagated out of `run_pipeline`, or an
+//! unwinding panic mid-stream — runs [`ActivationCache::purge`] (explicitly
+//! or via `Drop`) and deletes the cache's spill files, so an aborted
+//! pipeline leaves the cache directory empty.
 
 use crate::ser::fxt;
 use crate::tensor::Tensor;
@@ -119,14 +121,35 @@ impl ActivationCache {
                 let path = self.spill_path(i);
                 let mut m = BTreeMap::new();
                 m.insert(SPILL_KEY.to_string(), tensor.clone());
-                fxt::write(&path, &m)
-                    .map_err(|e| anyhow!("spilling activation chunk {i}: {e:#}"))?;
+                if let Err(e) = fxt::write(&path, &m) {
+                    // a failed write may leave a partial file the Drop
+                    // cleanup would never see (the slot stays Mem) — remove
+                    // it here so an error path cannot leak
+                    let _ = std::fs::remove_file(&path);
+                    return Err(anyhow!("spilling activation chunk {i}: {e:#}"));
+                }
                 self.mem_bytes -= tensor.len() * 4;
                 self.spilled += 1;
                 self.slots[i] = Slot::Disk(path);
             }
         }
         Ok(())
+    }
+
+    /// Delete every spill file and drop every chunk now.  Idempotent; also
+    /// what [`Drop`] runs, so both an explicit teardown and any exit path —
+    /// error returns and unwinding panics included — leave the cache
+    /// directory empty.  The cache itself stays usable (empty) afterwards.
+    pub fn purge(&mut self) {
+        for s in &self.slots {
+            if let Slot::Disk(path) = s {
+                let _ = std::fs::remove_file(path);
+            }
+        }
+        self.slots.clear();
+        self.mem_bytes = 0;
+        self.spilled = 0;
+        self.frontier = 0;
     }
 
     /// Fetch chunk `i`: borrowed straight from memory (no copy for resident
@@ -161,11 +184,7 @@ impl ActivationCache {
 
 impl Drop for ActivationCache {
     fn drop(&mut self) {
-        for s in &self.slots {
-            if let Slot::Disk(path) = s {
-                let _ = std::fs::remove_file(path);
-            }
-        }
+        self.purge();
     }
 }
 
@@ -246,5 +265,65 @@ mod tests {
         c.push(chunk(4, 4, 4)).unwrap();
         assert_eq!(c.spilled_chunks(), 0);
         assert_eq!(c.len(), 2);
+    }
+
+    fn spill_files(dir: &std::path::Path) -> usize {
+        std::fs::read_dir(dir)
+            .unwrap()
+            .filter(|e| {
+                e.as_ref().unwrap().file_name().to_string_lossy().starts_with("actcache_")
+            })
+            .count()
+    }
+
+    #[test]
+    fn purge_removes_spill_files_and_resets_the_cache() {
+        let dir = std::env::temp_dir()
+            .join(format!("flexround_actcache_purge_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut c = ActivationCache::with_budget(64, Some(&dir));
+        for i in 0..4 {
+            c.push(chunk(4, 8, 20 + i)).unwrap();
+        }
+        assert!(c.spilled_chunks() >= 2);
+        assert!(spill_files(&dir) >= 2);
+        c.purge();
+        assert_eq!(spill_files(&dir), 0, "purge must delete every spill file");
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.spilled_chunks(), 0);
+        assert_eq!(c.mem_bytes(), 0);
+        // the purged cache is still usable — and purge is idempotent
+        c.purge();
+        c.push(chunk(4, 8, 30)).unwrap();
+        assert_eq!(c.len(), 1);
+        drop(c);
+        assert_eq!(spill_files(&dir), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn panic_mid_stream_still_cleans_spill_files() {
+        // Satellite regression (PR 4): a pipeline that panics (or errors)
+        // mid-stream must not leak FXT spill files — cleanup rides on Drop,
+        // which unwinding runs.
+        let dir = std::env::temp_dir()
+            .join(format!("flexround_actcache_panic_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let dir2 = dir.clone();
+        let result = std::panic::catch_unwind(move || {
+            let mut c = ActivationCache::with_budget(64, Some(&dir2));
+            for i in 0..4 {
+                c.push(chunk(4, 8, 40 + i)).unwrap();
+            }
+            assert!(c.spilled_chunks() >= 2);
+            panic!("forced mid-stream failure");
+        });
+        assert!(result.is_err(), "the forced panic must propagate");
+        assert_eq!(
+            spill_files(&dir),
+            0,
+            "spill files must be cleaned up when the owner unwinds"
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

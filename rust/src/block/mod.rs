@@ -15,6 +15,10 @@
 //!   → +`), FP weights or any substituted weight set (fake-quantized Ŵ);
 //! * [`attn_forward`] / [`attn_backward`] — multi-head causal attention
 //!   with cached probabilities, shared with the packed inference engine;
+//! * [`attn_score_row`] — the single-query-row attention core both the
+//!   full-context forward and the KV-cached incremental decode path
+//!   ([`crate::infer::Engine::decode_step`]) are built from, so the two
+//!   stay bit-identical by construction;
 //! * [`loss_and_grads`] — output-MSE loss plus the full backward pass:
 //!   activation cotangents through residuals / layernorm / GELU / softmax
 //!   (all smooth, finite-difference-checked in `tensor::ops` and here),
@@ -212,6 +216,61 @@ pub fn attn_ctx(q: &Tensor, k: &Tensor, v: &Tensor, heads: usize, seq: usize) ->
     Ok(attn_impl(q, k, v, heads, seq, false)?.0)
 }
 
+/// One query row of one head against `count` cached key/value rows: scaled
+/// dot-product scores, max-shifted softmax over positions `0..count`, and
+/// the probability-weighted value sum accumulated into `out` (the head
+/// width, pre-zeroed by the caller).
+///
+/// `kbuf`/`vbuf` are row-major `(rows ≥ count, stride)` buffers with this
+/// head's channels at columns `c0..c0 + out.len()`; `probs[..count]`
+/// receives the normalized attention row (entries past `count` are left
+/// untouched).  This is the single attention core shared by the
+/// full-context forward ([`attn_forward`], where `count` walks the causal
+/// frontier row by row) and the incremental KV-cache decode path
+/// ([`crate::infer::Engine::decode_step`], where the one new token attends
+/// to everything cached) — sharing it is what makes prefill-then-decode
+/// bit-identical to the full-context forward.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_score_row(
+    qi: &[f32],
+    kbuf: &[f32],
+    vbuf: &[f32],
+    stride: usize,
+    c0: usize,
+    count: usize,
+    scale: f32,
+    probs: &mut [f32],
+    out: &mut [f32],
+) {
+    let dh = out.len();
+    debug_assert!(qi.len() == dh && probs.len() >= count && count >= 1);
+    let mut mx = f32::NEG_INFINITY;
+    for (j, rj) in probs.iter_mut().enumerate().take(count) {
+        let kj = &kbuf[j * stride + c0..j * stride + c0 + dh];
+        let mut acc = 0.0f32;
+        for (a, b) in qi.iter().zip(kj) {
+            acc += a * b;
+        }
+        *rj = acc * scale;
+        mx = mx.max(*rj);
+    }
+    let mut sum = 0.0f32;
+    for rj in probs.iter_mut().take(count) {
+        *rj = (*rj - mx).exp();
+        sum += *rj;
+    }
+    let inv = 1.0 / sum;
+    for rj in probs.iter_mut().take(count) {
+        *rj *= inv;
+    }
+    for (j, &pij) in probs.iter().enumerate().take(count) {
+        let vj = &vbuf[j * stride + c0..j * stride + c0 + dh];
+        for (c, b) in out.iter_mut().zip(vj) {
+            *c += pij * b;
+        }
+    }
+}
+
 fn attn_impl(
     q: &Tensor,
     k: &Tensor,
@@ -233,6 +292,8 @@ fn attn_impl(
     let mut scratch = vec![0.0f32; seq * seq];
     for s in 0..nseq {
         let base = s * seq;
+        let kseq = &kv[base * d..(base + seq) * d];
+        let vseq = &vv[base * d..(base + seq) * d];
         for h in 0..heads {
             let c0 = h * dh;
             let mut owned = if want_probs { Some(vec![0.0f32; seq * seq]) } else { None };
@@ -242,34 +303,18 @@ fn attn_impl(
             };
             for i in 0..seq {
                 let qi = &qv[(base + i) * d + c0..(base + i) * d + c0 + dh];
-                let row = &mut p[i * seq..(i + 1) * seq];
-                let mut mx = f32::NEG_INFINITY;
-                for (j, rj) in row.iter_mut().enumerate().take(i + 1) {
-                    let kj = &kv[(base + j) * d + c0..(base + j) * d + c0 + dh];
-                    let mut acc = 0.0f32;
-                    for (a, b) in qi.iter().zip(kj) {
-                        acc += a * b;
-                    }
-                    *rj = acc * scale;
-                    mx = mx.max(*rj);
-                }
-                let mut sum = 0.0f32;
-                for rj in row.iter_mut().take(i + 1) {
-                    *rj = (*rj - mx).exp();
-                    sum += *rj;
-                }
-                let inv = 1.0 / sum;
-                for rj in row.iter_mut().take(i + 1) {
-                    *rj *= inv;
-                }
                 // cached rows beyond the causal frontier stay exactly zero
-                let crow = &mut ctx[(base + i) * d + c0..(base + i) * d + c0 + dh];
-                for (j, &pij) in p[i * seq..(i + 1) * seq].iter().enumerate().take(i + 1) {
-                    let vj = &vv[(base + j) * d + c0..(base + j) * d + c0 + dh];
-                    for (c, b) in crow.iter_mut().zip(vj) {
-                        *c += pij * b;
-                    }
-                }
+                attn_score_row(
+                    qi,
+                    kseq,
+                    vseq,
+                    d,
+                    c0,
+                    i + 1,
+                    scale,
+                    &mut p[i * seq..(i + 1) * seq],
+                    &mut ctx[(base + i) * d + c0..(base + i) * d + c0 + dh],
+                );
             }
             if let Some(v) = owned {
                 probs.push(Tensor::from_f32(v, &[seq, seq])?);

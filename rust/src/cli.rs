@@ -113,9 +113,20 @@ COMMANDS:
              [--rows <n>] [--seed <n>] [--workers <n>] [--out <file.fxt>]
   serve      Micro-batched serving loadgen over a packed artifact: coalesce
              single-row requests up to a deadline, one fused GEMM per batch
+             (the serving queue also carries KV-cached generation sessions)
              --packed <file.fxt> | --synthetic [--units/--width/--bits]
              [--requests <n>] [--clients <n>] [--max-batch <n>]
              [--deadline-ms <f>] [--workers <n>] [--compare]
+  generate   KV-cached autoregressive decode over a packed block model:
+             prefill the prompt once, then one incremental step per token
+             (greedy, or temperature/top-k sampling; token embeddings are
+             tied to the packed lm head, so one artifact is all it needs)
+             --packed <file.fxt> | --synthetic [--blocks <n>] [--width <d>]
+             [--heads <h>] [--mlp <f>] [--seq <s>] [--vocab <v>] [--bits <b>]
+             [--prompt-len <t>] [--max-new <n>] [--temp <f>] [--top-k <k>]
+             [--seed <n>] [--workers <n>]
+             [--compare]  also run the full-context recompute baseline and
+                          verify the token streams match
   sweep      Run a whole experiment table from a config file
              --config configs/<exp>.toml [--set k=v …]
   figure     Emit grid-shift / histogram data for the paper's figures

@@ -475,6 +475,55 @@ impl<'rt> Session<'rt> {
         Ok(Engine::new(self.packed_model(result)?, crate::util::pool::default_workers()))
     }
 
+    /// [`Session::packed_model`] plus a trailing `head` stack unit packed
+    /// from the native `head/lm` weights ([`Session::packed_head_unit`]):
+    /// a **generation-complete** artifact.  `flexround generate --packed`
+    /// projects hidden states through this head and ties token embeddings
+    /// to its rows, so the one `.fxt` file is all decode needs — still no
+    /// FP weights inside.
+    pub fn packed_lm_model(&self, result: &QuantResult) -> Result<PackedModel> {
+        let mut pm = self.packed_model(result)?;
+        pm.units.push(self.packed_head_unit()?);
+        Ok(pm)
+    }
+
+    /// The native `head/lm` weights packed as a `head` stack unit (8-bit
+    /// asymmetric per-row RTN) — the piece that makes an already-packed
+    /// block model generation-complete without re-packing its blocks.
+    pub fn packed_head_unit(&self) -> Result<PackedUnit> {
+        let head = self.weights.get("head/lm").ok_or_else(|| {
+            anyhow!(
+                "model {} has no native lm head (weights-FXT key \"head/lm\") to pack",
+                self.model.name
+            )
+        })?;
+        if head.ndim() != 2 {
+            bail!("head/lm must be a (vocab, d) matrix, got {:?}", head.shape());
+        }
+        let (rows, cols) = (head.shape()[0], head.shape()[1]);
+        let hv = head.as_f32()?;
+        let bits = 8u32;
+        let (qmin, qmax) = qrange(bits, false);
+        let mut s1 = Vec::with_capacity(rows);
+        let mut zp = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let (s, z) =
+                crate::tensor::minmax_scale(&hv[r * cols..(r + 1) * cols], bits, false);
+            s1.push(s);
+            zp.push(z);
+        }
+        let codes: Vec<i32> =
+            crate::tensor::rtn_codes_rows(hv, rows, cols, &s1, &zp, qmin, qmax)
+                .iter()
+                .map(|&c| c as i32)
+                .collect();
+        let mat = PackedMatrix::pack(&codes, rows, cols, bits, qmin as i32, s1, zp)?;
+        Ok(PackedUnit::stack(
+            "head",
+            vec![PackedLayer { name: "lm".into(), mat, bias: None, relu_after: false }],
+        ))
+    }
+
     /// Full-precision forward (baseline metrics).
     pub fn forward_fp(&self, xs: &Tensor) -> Result<Vec<Tensor>> {
         let mut chunks = self.first_unit_inputs(xs)?;

@@ -18,6 +18,21 @@ use std::collections::BTreeMap;
 /// A bundle of named metrics.
 pub type Metrics = BTreeMap<String, f64>;
 
+/// Numerically-stable log-sum-exp of a logit row: `max + ln Σ exp(x − max)`.
+/// The max shift is what keeps `exp` in range — `exp(88.8)` already
+/// overflows f32, and quantized lm heads routinely emit logits far past
+/// that.  Shared by the perplexity path ([`ppl_from_hidden`]) and the
+/// sampling softmax (`infer::generate::sample_token`).
+pub fn log_sum_exp(row: &[f32]) -> f32 {
+    let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    if !mx.is_finite() {
+        // all −∞ (empty/fully-masked row) or a +∞ spike: the shift is
+        // meaningless, the answer is the max itself
+        return mx;
+    }
+    mx + row.iter().map(|&v| (v - mx).exp()).sum::<f32>().ln()
+}
+
 // ---------------------------------------------------------------------------
 // Classification (CNNs — Tables 1/2/3/8/9/10/11, Figure 7)
 // ---------------------------------------------------------------------------
@@ -178,8 +193,7 @@ pub fn ppl_from_hidden(sess: &Session, h: &[Tensor], ys_name: &str) -> Result<f6
                 bail!("label {label} outside the {vocab}-token head");
             }
             let row = &lv[i * vocab..(i + 1) * vocab];
-            let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-            let lse = mx + row.iter().map(|&v| (v - mx).exp()).sum::<f32>().ln();
+            let lse = log_sum_exp(row);
             nll += (lse - row[label as usize]) as f64;
             cnt += 1;
         }
@@ -364,5 +378,38 @@ mod tests {
         let logits = Tensor::from_f32(vec![0.1, 0.9], &[1, 2]).unwrap();
         let labels = Tensor::from_i32(vec![0, 1], &[2]).unwrap();
         assert!(topk_accuracy(&[logits], &labels).is_err());
+    }
+
+    #[test]
+    fn log_sum_exp_is_max_shifted() {
+        // the ±90 range the satellite pins: exp(90) overflows f32, so the
+        // naive (unshifted) sum is infinite while the shifted one is exact
+        let row = [90.0f32, -90.0, 0.0];
+        assert!(row.iter().map(|&v| v.exp()).sum::<f32>().is_infinite());
+        let lse = log_sum_exp(&row);
+        assert!(lse.is_finite());
+        let want = 90.0 + (1.0f64 + (-90.0f64).exp() + (-180.0f64).exp()).ln();
+        assert!((lse as f64 - want).abs() < 1e-3, "lse {lse} vs {want}");
+        // degenerate rows stay well-defined
+        assert_eq!(log_sum_exp(&[f32::NEG_INFINITY, f32::NEG_INFINITY]), f32::NEG_INFINITY);
+        assert!((log_sum_exp(&[0.0]) - 0.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn ppl_survives_large_logits() {
+        // Satellite regression (PR 4): perplexity over logits in the ±90
+        // range must stay finite — an unshifted softmax cross-entropy
+        // overflows exp() to inf and poisons the report.  The head is
+        // scaled 60× so the synthetic LM's logits overflow a naive exp
+        // while leaving the teacher argmax (the eval labels) unchanged.
+        use crate::block::{synthetic_block_model, SyntheticBlockSpec};
+        use crate::runtime::Native;
+        let mut fx = synthetic_block_model(&SyntheticBlockSpec::default()).unwrap();
+        let big = fx.weights["head/lm"].map(|v| v * 60.0);
+        fx.weights.insert("head/lm".to_string(), big);
+        let native = Native::new();
+        let sess = fx.session(&native);
+        let ppl = eval_ppl_hidden(&sess, None, "eval_x", "eval_y").unwrap();
+        assert!(ppl.is_finite() && ppl >= 1.0, "perplexity must stay finite, got {ppl}");
     }
 }

@@ -11,6 +11,12 @@
 //! Transformer-block units run every projection (`wq wk wv wo up down`)
 //! through the same fused dequant-GEMM; layernorm, causal softmax attention
 //! (shared with [`crate::block`]), GELU, and the residual adds stay f32.
+//! Beyond the batch `forward`, block models expose the incremental decode
+//! pair [`Engine::prefill`] / [`Engine::decode_step`] over a per-block
+//! [`KvCache`] — one token per step, attention against the cached K/V rows
+//! only — plus [`Engine::forward_ctx`] (full-context forward at an explicit
+//! sequence length), the decode path's parity oracle and recompute
+//! baseline.  `infer::generate` wires these into token sampling.
 //! Block models accept two input layouts: token rows `(n·seq, d)` (the
 //! `Session::forward_q` chunk shape) and *flattened sequences*
 //! `(n, seq·d)` — one request row per sequence — which is what
@@ -18,8 +24,9 @@
 //! sequences.
 
 use super::kernels;
+use super::kv::{BlockKv, GenState, KvCache};
 use super::packed::{PackedLayer, PackedMatrix, PackedModel, PackedUnit};
-use crate::block::{attn_ctx, LN_EPS};
+use crate::block::{attn_ctx, attn_score_row, LN_EPS};
 use crate::tensor::{layernorm_rows, Tensor};
 use crate::util::rng::Pcg32;
 use crate::Result;
@@ -89,19 +96,11 @@ impl Engine {
             x.clone()
         };
         for unit in &self.model.units {
-            if unit.kind == "transformer_block" {
-                h = self.block_forward(unit, &h, fused)?;
-                continue;
-            }
-            for layer in &unit.layers {
-                let mut y = if fused {
-                    kernels::gemm_fused(&h, &layer.mat, self.workers)?
-                } else {
-                    kernels::dequant_matmul(&h, &layer.mat)?
-                };
-                y.bias_relu_inplace(layer.bias.as_deref(), layer.relu_after)?;
-                h = y;
-            }
+            h = if unit.kind == "transformer_block" {
+                self.block_forward(unit, &h, fused, unit.seq)?
+            } else {
+                self.stack_forward(unit, &h, fused)?
+            };
         }
         if flat {
             let rows = x.shape()[0];
@@ -111,55 +110,227 @@ impl Engine {
         Ok(h)
     }
 
-    /// One transformer block over token rows `(n·seq, d)`: fused dequant
-    /// GEMMs for all six projections, f32 layernorm / causal attention /
-    /// GELU / residuals — the same math as `block::forward_with`, with the
-    /// packed matrices never dequantized into a dense Ŵ.
-    fn block_forward(&self, unit: &PackedUnit, h: &Tensor, fused: bool) -> Result<Tensor> {
-        let [wq, wk, wv, wo, up, down] = match unit.layers.as_slice() {
-            [a, b, c, d, e, f] => [a, b, c, d, e, f],
-            _ => bail!(
-                "block unit {:?} has {} layers, expected the canonical 6",
-                unit.name,
-                unit.layers.len()
-            ),
+    /// Full-context forward with an explicit rows-per-sequence `seq`
+    /// overriding every block's packed `seq`: the attention geometry carries
+    /// no learned positional state, so any context length works.  This is
+    /// the generation path's full-recompute baseline and the parity oracle
+    /// for [`Engine::prefill`] + [`Engine::decode_step`]
+    /// (`rust/tests/generate.rs`).  Token-rows entry only (`x` is
+    /// `(n·seq, d)`).
+    pub fn forward_ctx(&self, x: &Tensor, seq: usize) -> Result<Tensor> {
+        if seq == 0 {
+            bail!("forward_ctx: seq must be ≥ 1");
+        }
+        let mut h = x.clone();
+        for unit in &self.model.units {
+            h = if unit.kind == "transformer_block" {
+                self.block_forward(unit, &h, true, seq)?
+            } else {
+                self.stack_forward(unit, &h, true)?
+            };
+        }
+        Ok(h)
+    }
+
+    /// An ordered contraction stack over activation rows.
+    fn stack_forward(&self, unit: &PackedUnit, h: &Tensor, fused: bool) -> Result<Tensor> {
+        let mut out: Option<Tensor> = None;
+        for layer in &unit.layers {
+            let x = out.as_ref().unwrap_or(h);
+            let mut y = if fused {
+                kernels::gemm_fused(x, &layer.mat, self.workers)?
+            } else {
+                kernels::dequant_matmul(x, &layer.mat)?
+            };
+            y.bias_relu_inplace(layer.bias.as_deref(), layer.relu_after)?;
+            out = Some(y);
+        }
+        out.ok_or_else(|| anyhow!("unit {:?} has no layers", unit.name))
+    }
+
+    /// Fused (or baseline) GEMM plus bias for one packed projection.
+    fn gemm_bias(&self, x: &Tensor, l: &PackedLayer, fused: bool) -> Result<Tensor> {
+        let mut y = if fused {
+            kernels::gemm_fused(x, &l.mat, self.workers)?
+        } else {
+            kernels::dequant_matmul(x, &l.mat)?
         };
-        let (g1, b1) = unit
-            .ln1
-            .as_ref()
-            .ok_or_else(|| anyhow!("block unit {:?} lacks ln1 parameters", unit.name))?;
-        let (g2, b2) = unit
-            .ln2
-            .as_ref()
-            .ok_or_else(|| anyhow!("block unit {:?} lacks ln2 parameters", unit.name))?;
-        if unit.seq == 0 || h.ndim() != 2 || h.shape()[0] % unit.seq != 0 {
+        y.bias_relu_inplace(l.bias.as_deref(), false)?;
+        Ok(y)
+    }
+
+    /// One transformer block over token rows `(n·seq, d)` at an explicit
+    /// `seq`: fused dequant GEMMs for all six projections, f32 layernorm /
+    /// causal attention / GELU / residuals — the same math as
+    /// `block::forward_with`, with the packed matrices never dequantized
+    /// into a dense Ŵ.
+    fn block_forward(
+        &self,
+        unit: &PackedUnit,
+        h: &Tensor,
+        fused: bool,
+        seq: usize,
+    ) -> Result<Tensor> {
+        let p = block_parts(unit)?;
+        if seq == 0 || h.ndim() != 2 || h.shape()[0] % seq != 0 {
             bail!(
-                "block unit {:?}: input {:?} rows must be a multiple of seq {}",
+                "block unit {:?}: input {:?} rows must be a multiple of seq {seq}",
                 unit.name,
-                h.shape(),
-                unit.seq
+                h.shape()
             );
         }
-        let gemm = |x: &Tensor, l: &PackedLayer| -> Result<Tensor> {
-            let mut y = if fused {
-                kernels::gemm_fused(x, &l.mat, self.workers)?
-            } else {
-                kernels::dequant_matmul(x, &l.mat)?
-            };
-            y.bias_relu_inplace(l.bias.as_deref(), false)?;
-            Ok(y)
-        };
-        let (h1, _, _) = layernorm_rows(h, g1, b1, LN_EPS)?;
-        let q = gemm(&h1, wq)?;
-        let k = gemm(&h1, wk)?;
-        let v = gemm(&h1, wv)?;
-        let ctx = attn_ctx(&q, &k, &v, unit.heads, unit.seq)?;
-        let attn = gemm(&ctx, wo)?;
-        let x2 = h.zip(&attn, |a, b| a + b)?;
-        let (h2, _, _) = layernorm_rows(&x2, g2, b2, LN_EPS)?;
-        let m = gemm(&h2, up)?.gelu();
-        let y = gemm(&m, down)?;
+        let (h1, _, _) = layernorm_rows(h, p.g1, p.b1, LN_EPS)?;
+        let q = self.gemm_bias(&h1, p.wq, fused)?;
+        let k = self.gemm_bias(&h1, p.wk, fused)?;
+        let v = self.gemm_bias(&h1, p.wv, fused)?;
+        let ctx = attn_ctx(&q, &k, &v, unit.heads, seq)?;
+        self.block_tail(&p, h, &ctx, fused)
+    }
+
+    /// Post-attention half of a block (`wo` projection, residual, MLP) —
+    /// shared by the full-context, prefill, and incremental decode paths.
+    fn block_tail(&self, p: &BlockParts, x: &Tensor, ctx: &Tensor, fused: bool) -> Result<Tensor> {
+        let attn = self.gemm_bias(ctx, p.wo, fused)?;
+        let x2 = x.zip(&attn, |a, b| a + b)?;
+        let (h2, _, _) = layernorm_rows(&x2, p.g2, p.b2, LN_EPS)?;
+        let m = self.gemm_bias(&h2, p.up, fused)?.gelu();
+        let y = self.gemm_bias(&m, p.down, fused)?;
         x2.zip(&y, |a, b| a + b)
+    }
+
+    /// One block over the whole prompt (a single sequence of `t` rows) —
+    /// the same math as [`Engine::block_forward`] at `seq = t`, additionally
+    /// pushing every K/V row into `kv` for later decode steps.
+    fn block_prefill(
+        &self,
+        unit: &PackedUnit,
+        h: &Tensor,
+        t: usize,
+        kv: &mut BlockKv,
+    ) -> Result<Tensor> {
+        let p = block_parts(unit)?;
+        let (h1, _, _) = layernorm_rows(h, p.g1, p.b1, LN_EPS)?;
+        let q = self.gemm_bias(&h1, p.wq, true)?;
+        let k = self.gemm_bias(&h1, p.wk, true)?;
+        let v = self.gemm_bias(&h1, p.wv, true)?;
+        kv.extend(k.as_f32()?, v.as_f32()?)?;
+        let ctx = attn_ctx(&q, &k, &v, unit.heads, t)?;
+        self.block_tail(&p, h, &ctx, true)
+    }
+
+    /// One block over one new token row: append its K/V rows to the cache
+    /// and attend against everything cached (the causal mask degenerates to
+    /// "attend to all cached positions").
+    fn block_decode(
+        &self,
+        unit: &PackedUnit,
+        x: &Tensor,
+        kv: &mut BlockKv,
+        probs: &mut Vec<f32>,
+    ) -> Result<Tensor> {
+        let p = block_parts(unit)?;
+        let (h1, _, _) = layernorm_rows(x, p.g1, p.b1, LN_EPS)?;
+        let q = self.gemm_bias(&h1, p.wq, true)?;
+        let k = self.gemm_bias(&h1, p.wk, true)?;
+        let v = self.gemm_bias(&h1, p.wv, true)?;
+        kv.extend(k.as_f32()?, v.as_f32()?)?;
+        let d = kv.width();
+        let heads = unit.heads.max(1);
+        if d % heads != 0 {
+            bail!("block unit {:?}: width {d} not divisible by {heads} heads", unit.name);
+        }
+        let dh = d / heads;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let count = kv.len();
+        if probs.len() < count {
+            probs.resize(count, 0.0);
+        }
+        let qv = q.as_f32()?;
+        let mut ctx = vec![0.0f32; d];
+        for hd in 0..heads {
+            let c0 = hd * dh;
+            attn_score_row(
+                &qv[c0..c0 + dh],
+                kv.k(),
+                kv.v(),
+                d,
+                c0,
+                count,
+                scale,
+                probs,
+                &mut ctx[c0..c0 + dh],
+            );
+        }
+        let ctx = Tensor::from_f32(ctx, &[1, d])?;
+        self.block_tail(&p, x, &ctx, true)
+    }
+
+    /// Run the whole prompt (`(t ≥ 1, d)` token rows, one sequence) through
+    /// the model once, filling a fresh KV cache with every block's key/value
+    /// rows, and return the generation state plus the output at **all** `t`
+    /// positions (`(t, out_width)` — logits when the model ends in an
+    /// lm-head stack).  Bit-for-bit equivalent to
+    /// [`Engine::forward_ctx`]`(x, t)`: that is the prefill/decode parity
+    /// contract (`rust/tests/generate.rs`).
+    pub fn prefill(&self, x: &Tensor) -> Result<(GenState, Tensor)> {
+        if x.ndim() != 2 || x.shape()[0] == 0 {
+            bail!("prefill: prompt must be (t ≥ 1, d) token rows, got {:?}", x.shape());
+        }
+        let t = x.shape()[0];
+        let mut dims = Vec::new();
+        for u in self.model.units.iter().filter(|u| u.kind == "transformer_block") {
+            let d = u
+                .layers
+                .first()
+                .map(|l| l.mat.cols())
+                .ok_or_else(|| anyhow!("block unit {:?} has no layers", u.name))?;
+            dims.push(d);
+        }
+        let mut kv = KvCache::new(&dims, t + self.model.seq());
+        let mut h = x.clone();
+        let mut bi = 0usize;
+        for unit in &self.model.units {
+            h = if unit.kind == "transformer_block" {
+                let out = self.block_prefill(unit, &h, t, kv.block_mut(bi)?)?;
+                bi += 1;
+                out
+            } else {
+                self.stack_forward(unit, &h, true)?
+            };
+        }
+        kv.set_pos(t)?;
+        Ok((GenState::new(kv), h))
+    }
+
+    /// Advance generation by one token: `row` is the token's input
+    /// embedding (the model's token width).  Appends the token's K/V rows
+    /// to every block's cache, attends against everything cached, and
+    /// returns this position's output row — logits when the packed model
+    /// ends in an lm-head stack.  Cost is O(1) in the generated length for
+    /// the GEMMs and O(t) for the attention reads, versus O(t) GEMMs for a
+    /// full-context recompute.
+    pub fn decode_step(&self, state: &mut GenState, row: &[f32]) -> Result<Vec<f32>> {
+        let tok_w = self
+            .model
+            .in_width()
+            .ok_or_else(|| anyhow!("engine holds an empty packed model"))?;
+        if row.len() != tok_w {
+            bail!("decode_step: input row has {} values, the model takes {tok_w}", row.len());
+        }
+        let mut h = Tensor::from_f32(row.to_vec(), &[1, tok_w])?;
+        let mut bi = 0usize;
+        for unit in &self.model.units {
+            h = if unit.kind == "transformer_block" {
+                let out =
+                    self.block_decode(unit, &h, state.kv.block_mut(bi)?, &mut state.probs_scratch)?;
+                bi += 1;
+                out
+            } else {
+                self.stack_forward(unit, &h, true)?
+            };
+        }
+        state.kv.advance()?;
+        Ok(h.as_f32()?.to_vec())
     }
 
     /// Single-row forward (the serving fallback for a batch of one).
@@ -167,6 +338,43 @@ impl Engine {
         let x = Tensor::from_f32(row.to_vec(), &[1, row.len()])?;
         Ok(self.forward(&x)?.as_f32()?.to_vec())
     }
+}
+
+/// Borrowed views of one packed transformer block's six projections and
+/// layernorm parameters (validated once per unit call).
+struct BlockParts<'a> {
+    wq: &'a PackedLayer,
+    wk: &'a PackedLayer,
+    wv: &'a PackedLayer,
+    wo: &'a PackedLayer,
+    up: &'a PackedLayer,
+    down: &'a PackedLayer,
+    g1: &'a [f32],
+    b1: &'a [f32],
+    g2: &'a [f32],
+    b2: &'a [f32],
+}
+
+fn block_parts(unit: &PackedUnit) -> Result<BlockParts<'_>> {
+    let [wq, wk, wv, wo, up, down] = match unit.layers.as_slice() {
+        [a, b, c, d, e, f] => [a, b, c, d, e, f],
+        _ => bail!(
+            "block unit {:?} has {} layers, expected the canonical 6",
+            unit.name,
+            unit.layers.len()
+        ),
+    };
+    let (g1, b1) = unit
+        .ln1
+        .as_ref()
+        .map(|(g, b)| (g.as_slice(), b.as_slice()))
+        .ok_or_else(|| anyhow!("block unit {:?} lacks ln1 parameters", unit.name))?;
+    let (g2, b2) = unit
+        .ln2
+        .as_ref()
+        .map(|(g, b)| (g.as_slice(), b.as_slice()))
+        .ok_or_else(|| anyhow!("block unit {:?} lacks ln2 parameters", unit.name))?;
+    Ok(BlockParts { wq, wk, wv, wo, up, down, g1, b1, g2, b2 })
 }
 
 /// A self-contained random packed model (demo / bench / serve-loadgen input
@@ -322,5 +530,62 @@ mod tests {
         for (a, b) in row.iter().zip(flat_out.as_f32().unwrap()) {
             assert!((a - b).abs() <= 1e-5);
         }
+    }
+
+    #[test]
+    fn forward_ctx_matches_forward_at_the_packed_seq() {
+        let (d, mlp, heads, seq) = (8usize, 16usize, 2usize, 4usize);
+        let engine = Engine::new(block_model(d, mlp, heads, seq), 2);
+        let mut rng = Pcg32::seeded(17);
+        let x = Tensor::from_f32(
+            (0..2 * seq * d).map(|_| rng.next_normal()).collect(),
+            &[2 * seq, d],
+        )
+        .unwrap();
+        let a = engine.forward(&x).unwrap();
+        let b = engine.forward_ctx(&x, seq).unwrap();
+        assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+        // an explicit seq override changes the attention grouping: rows not
+        // a multiple of it are rejected, odd lengths are served
+        assert!(engine.forward_ctx(&x, 3).is_err());
+        let odd = engine.forward_ctx(&x.slice_rows(0, 5).unwrap(), 5).unwrap();
+        assert_eq!(odd.shape(), &[5, d]);
+        assert!(engine.forward_ctx(&x, 0).is_err());
+    }
+
+    #[test]
+    fn prefill_then_decode_is_bit_identical_to_full_context() {
+        let (d, mlp, heads, seq) = (8usize, 16usize, 2usize, 4usize);
+        let engine = Engine::new(block_model(d, mlp, heads, seq), 2);
+        let mut rng = Pcg32::seeded(23);
+        let t = 6usize;
+        let x = Tensor::from_f32(
+            (0..t * d).map(|_| rng.next_normal()).collect(),
+            &[t, d],
+        )
+        .unwrap();
+        let full = engine.forward_ctx(&x, t).unwrap();
+        let fv = full.as_f32().unwrap();
+        // one-shot prefill replays the whole prompt
+        let (state, pre) = engine.prefill(&x).unwrap();
+        assert_eq!(state.pos(), t);
+        assert_eq!(state.kv().blocks(), 1);
+        assert_eq!(pre.as_f32().unwrap(), fv, "prefill must equal the full-context forward");
+        // prefill one row, then decode the rest incrementally
+        let (mut st, first) = engine.prefill(&x.slice_rows(0, 1).unwrap()).unwrap();
+        assert_eq!(first.as_f32().unwrap(), &fv[..d]);
+        let xv = x.as_f32().unwrap();
+        for i in 1..t {
+            let out = engine.decode_step(&mut st, &xv[i * d..(i + 1) * d]).unwrap();
+            assert_eq!(st.pos(), i + 1);
+            assert_eq!(
+                out.as_slice(),
+                &fv[i * d..(i + 1) * d],
+                "decode step {i} must be bit-identical to the full-context row"
+            );
+        }
+        // wrong-width rows are rejected before touching the cache
+        assert!(engine.decode_step(&mut st, &[0.0; 3]).is_err());
+        assert_eq!(st.pos(), t);
     }
 }

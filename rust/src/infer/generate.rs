@@ -1,0 +1,442 @@
+//! Autoregressive generation over packed block models (DESIGN.md
+//! §Generation).
+//!
+//! The paper's NLG claim is that block-by-block reconstructed models *serve
+//! generation* at negligible quality loss — which needs an incremental
+//! decode path, not just full-context forwards.  This module drives
+//! [`Engine::prefill`] / [`Engine::decode_step`] into a token loop:
+//!
+//! * the lm head is the packed model's trailing stack unit (the `(vocab, d)`
+//!   projection `Session::packed_lm_model` exports from the `head/lm`
+//!   weights), and token embeddings are **tied** to it — the embedding of
+//!   token `t` is the head matrix's dequantized row `t`, so a packed
+//!   artifact is generation-complete with no extra tensors;
+//! * sampling is greedy at `temp == 0`, otherwise a max-shifted softmax
+//!   ([`crate::eval::log_sum_exp`]) over `logits / temp` restricted to the
+//!   `top_k` highest logits, drawn through the deterministic
+//!   [`Pcg32`] stream — a fixed seed replays the exact token stream;
+//! * [`generate_recompute`] is the full-context baseline (re-forward the
+//!   whole prefix for every token, O(t) GEMM work per token where the
+//!   cached path is O(1)): it must emit the identical stream, and
+//!   `benches/generate.rs` measures the cached path against it.
+
+use super::engine::Engine;
+use super::packed::{PackedLayer, PackedMatrix, PackedModel, PackedUnit};
+use crate::eval::log_sum_exp;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+use crate::Result;
+use anyhow::{anyhow, bail};
+use std::time::Instant;
+
+/// Sampling controls for one generation session.
+#[derive(Clone, Copy, Debug)]
+pub struct GenOpts {
+    /// tokens to generate after the prompt
+    pub max_new: usize,
+    /// `0.0` → greedy argmax; otherwise the softmax temperature
+    pub temp: f32,
+    /// restrict sampling to the k highest logits (`0` → full vocabulary)
+    pub top_k: usize,
+    /// sampling stream seed (fixed seed ⇒ identical token stream)
+    pub seed: u64,
+}
+
+impl Default for GenOpts {
+    fn default() -> Self {
+        GenOpts { max_new: 16, temp: 0.0, top_k: 0, seed: 7 }
+    }
+}
+
+/// One finished generation: the sampled token ids plus the wall-clock
+/// split between prompt prefill (the cached path's prompt pass, or the
+/// recompute path's first full-prompt forward) and the decode loop — the
+/// loop emits `tokens.len() − 1` incremental positions, the first token
+/// being sampled from the prefill logits.
+#[derive(Clone, Debug)]
+pub struct Generated {
+    pub tokens: Vec<usize>,
+    pub prefill_secs: f64,
+    pub decode_secs: f64,
+}
+
+impl Generated {
+    /// Mean decode cost per *incremental step* (the first token rides the
+    /// prefill, so `tokens.len() − 1` steps paid `decode_secs`).
+    pub fn decode_secs_per_token(&self) -> f64 {
+        self.decode_secs / self.tokens.len().saturating_sub(1).max(1) as f64
+    }
+}
+
+/// The tied lm head of a packed model: the last unit must be a contraction
+/// stack whose final layer maps the block width `d` to the vocabulary —
+/// its rows double as the (dequantized) token embedding table.
+pub fn lm_head(model: &PackedModel) -> Result<&PackedMatrix> {
+    let unit = model.units.last().ok_or_else(|| anyhow!("empty packed model"))?;
+    if unit.kind != "stack" {
+        bail!(
+            "generation needs a trailing lm-head stack unit; the last unit {:?} is a {:?}",
+            unit.name,
+            unit.kind
+        );
+    }
+    let mat = &unit
+        .layers
+        .last()
+        .ok_or_else(|| anyhow!("head unit {:?} has no layers", unit.name))?
+        .mat;
+    let d = model.in_width().unwrap_or(0);
+    if mat.cols() != d {
+        bail!(
+            "lm head {:?} contracts {} columns but the model's token width is {d}; \
+             tied embeddings need a (vocab, d) head",
+            unit.name,
+            mat.cols()
+        );
+    }
+    Ok(mat)
+}
+
+/// Vocabulary size served by the tied head.
+pub fn vocab(model: &PackedModel) -> Result<usize> {
+    Ok(lm_head(model)?.rows())
+}
+
+/// Tied token embedding: the head matrix's dequantized row `tok`.
+pub fn embed_token(model: &PackedModel, tok: usize) -> Result<Vec<f32>> {
+    let m = lm_head(model)?;
+    if tok >= m.rows() {
+        bail!("token {tok} outside the {}-token head", m.rows());
+    }
+    let mut row = vec![0.0f32; m.cols()];
+    m.unpack_row(tok, &mut row);
+    let (s, z) = (m.scale()[tok], m.zp()[tok]);
+    for x in &mut row {
+        *x = s * (*x - z);
+    }
+    Ok(row)
+}
+
+/// Sample one token id from a logit row.  `temp == 0` is greedy argmax
+/// (first maximum wins, deterministically); otherwise a max-shifted softmax
+/// over `logits / temp`, restricted to the `top_k` highest logits when
+/// `top_k ∈ [1, vocab)`, with ties broken by token id so the candidate set
+/// is platform-deterministic.
+pub fn sample_token(logits: &[f32], temp: f32, top_k: usize, rng: &mut Pcg32) -> usize {
+    debug_assert!(!logits.is_empty());
+    if temp <= 0.0 {
+        let mut best = 0usize;
+        for (j, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = j;
+            }
+        }
+        return best;
+    }
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    if top_k > 0 && top_k < logits.len() {
+        let by_logit_desc = |a: &usize, b: &usize| {
+            logits[*b]
+                .partial_cmp(&logits[*a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(b))
+        };
+        // O(V) partition for the k largest, then order just those k — a
+        // full-vocabulary sort per emitted token would put O(V log V) in
+        // the decode hot loop.  The post-sort keeps the candidate *order*
+        // (which the CDF walk below observes) deterministic regardless of
+        // the partition's internal layout.
+        idx.select_nth_unstable_by(top_k - 1, by_logit_desc);
+        idx.truncate(top_k);
+        idx.sort_unstable_by(by_logit_desc);
+    }
+    let scaled: Vec<f32> = idx.iter().map(|&j| logits[j] / temp).collect();
+    // the most probable candidate (by raw logit, immune to scaled-overflow
+    // ties): the fallback for both the degenerate regime below and the CDF
+    // walk's residual rounding mass
+    let mut bc = 0usize;
+    for (c, &j) in idx.iter().enumerate() {
+        if logits[j] > logits[idx[bc]] {
+            bc = c;
+        }
+    }
+    let lse = log_sum_exp(&scaled);
+    if !lse.is_finite() {
+        // a microscopic temperature (or huge logits) overflowed logits/temp:
+        // the distribution is numerically a point mass — behave like greedy
+        // instead of emitting NaN-driven garbage
+        return idx[bc];
+    }
+    let mut u = rng.next_f32();
+    let mut pick = idx[bc];
+    for (c, &j) in idx.iter().enumerate() {
+        let p = (scaled[c] - lse).exp();
+        if u <= p {
+            pick = j;
+            break;
+        }
+        u -= p;
+    }
+    pick
+}
+
+/// KV-cached generation: prefill the prompt (`(t, d)` token rows), then
+/// decode `opts.max_new` tokens incrementally — one [`Engine::decode_step`]
+/// per token.
+pub fn generate(engine: &Engine, prompt: &Tensor, opts: &GenOpts) -> Result<Generated> {
+    let v = vocab(engine.model())?;
+    let mut rng = Pcg32::seeded(opts.seed);
+    let t0 = Instant::now();
+    let (mut state, logits) = engine.prefill(prompt)?;
+    let prefill_secs = t0.elapsed().as_secs_f64();
+    let rows = logits.shape()[0];
+    let width = logits.shape()[1];
+    if width != v {
+        bail!("prefill emitted {width}-wide rows, expected the {v}-token head");
+    }
+    let mut last: Vec<f32> = logits.as_f32()?[(rows - 1) * width..rows * width].to_vec();
+    let mut tokens = Vec::with_capacity(opts.max_new);
+    let t1 = Instant::now();
+    for _ in 0..opts.max_new {
+        let tok = sample_token(&last, opts.temp, opts.top_k, &mut rng);
+        tokens.push(tok);
+        if tokens.len() == opts.max_new {
+            break;
+        }
+        let row = embed_token(engine.model(), tok)?;
+        last = engine.decode_step(&mut state, &row)?;
+    }
+    Ok(Generated { tokens, prefill_secs, decode_secs: t1.elapsed().as_secs_f64() })
+}
+
+/// Full-context recompute baseline: the identical token stream (same seed ⇒
+/// same samples off bit-identical logits), but every step re-forwards the
+/// whole prefix through [`Engine::forward_ctx`] — O(t) GEMM work per token
+/// where the cached path is O(1).  Exists as the parity check and the
+/// bench baseline; never the serving path.
+pub fn generate_recompute(engine: &Engine, prompt: &Tensor, opts: &GenOpts) -> Result<Generated> {
+    let v = vocab(engine.model())?;
+    let d = engine
+        .model()
+        .in_width()
+        .ok_or_else(|| anyhow!("empty packed model"))?;
+    if prompt.ndim() != 2 || prompt.shape()[0] == 0 || prompt.shape()[1] != d {
+        bail!("recompute generation: prompt {:?}, expected (t ≥ 1, {d})", prompt.shape());
+    }
+    let mut rng = Pcg32::seeded(opts.seed);
+    let mut work: Vec<f32> = prompt.as_f32()?.to_vec();
+    let mut t = prompt.shape()[0];
+    let mut tokens = Vec::with_capacity(opts.max_new);
+    let t0 = Instant::now();
+    // the first full-prompt forward is this path's prefill-equivalent —
+    // reported as prefill_secs so decode_secs stays comparable with the
+    // cached path's per-token decode loop
+    let mut prefill_secs = 0.0f64;
+    for step in 0..opts.max_new {
+        let x = Tensor::from_f32(work.clone(), &[t, d])?;
+        let logits = engine.forward_ctx(&x, t)?;
+        if step == 0 {
+            prefill_secs = t0.elapsed().as_secs_f64();
+        }
+        let width = logits.shape()[1];
+        if width != v {
+            bail!("forward emitted {width}-wide rows, expected the {v}-token head");
+        }
+        let lv = logits.as_f32()?;
+        let tok = sample_token(&lv[(t - 1) * width..t * width], opts.temp, opts.top_k, &mut rng);
+        tokens.push(tok);
+        if tokens.len() == opts.max_new {
+            break;
+        }
+        work.extend_from_slice(&embed_token(engine.model(), tok)?);
+        t += 1;
+    }
+    Ok(Generated {
+        tokens,
+        prefill_secs,
+        decode_secs: t0.elapsed().as_secs_f64() - prefill_secs,
+    })
+}
+
+/// A self-contained random packed *language model*: `blocks` transformer
+/// blocks (hidden `d`, `heads`, MLP width `mlp`, packed context `seq`)
+/// followed by a tied `(vocab, d)` lm-head stack — everything [`generate`]
+/// needs, no files.  Weight scales keep activations O(1) through the depth.
+#[allow(clippy::too_many_arguments)]
+pub fn synthetic_lm(
+    blocks: usize,
+    d: usize,
+    heads: usize,
+    mlp: usize,
+    seq: usize,
+    vocab: usize,
+    bits: u32,
+    seed: u64,
+) -> Result<PackedModel> {
+    if blocks == 0 || heads == 0 || d % heads != 0 || vocab == 0 || seq == 0 || mlp == 0 {
+        bail!(
+            "synthetic lm: blocks/heads/mlp/vocab/seq must be ≥ 1 and heads must divide d \
+             (got blocks={blocks} d={d} heads={heads} mlp={mlp} seq={seq} vocab={vocab})"
+        );
+    }
+    let (qmin, qmax) = crate::tensor::qrange(bits, true);
+    let (qmin, qmax) = (qmin as i32, qmax as i32);
+    let span = (qmax - qmin + 1) as u32;
+    let mut rng = Pcg32::seeded(seed);
+    let mk = |rng: &mut Pcg32, rows: usize, cols: usize, s0: f32| -> Result<PackedMatrix> {
+        let codes: Vec<i32> =
+            (0..rows * cols).map(|_| qmin + rng.below(span) as i32).collect();
+        let scale: Vec<f32> =
+            (0..rows).map(|_| s0 * (0.75 + 0.5 * rng.next_f32())).collect();
+        PackedMatrix::pack(&codes, rows, cols, bits, qmin, scale, vec![0.0; rows])
+    };
+    let layer = |name: &str, mat: PackedMatrix| PackedLayer {
+        name: name.into(),
+        mat,
+        bias: None,
+        relu_after: false,
+    };
+    // residual-friendly scales: uniform grid codes have rms ≈ qmax/√3, so
+    // s0·qmax/√3·√cols ≈ 0.3 keeps each branch small next to the residual
+    let s_d = 0.5 / (qmax.max(1) as f32 * (d as f32).sqrt());
+    let s_mlp = 0.5 / (qmax.max(1) as f32 * (mlp as f32).sqrt());
+    let mut units = Vec::with_capacity(blocks + 1);
+    for ui in 0..blocks {
+        units.push(PackedUnit {
+            name: format!("blk{ui}"),
+            kind: "transformer_block".into(),
+            heads,
+            seq,
+            ln1: Some((vec![1.0; d], vec![0.0; d])),
+            ln2: Some((vec![1.0; d], vec![0.0; d])),
+            layers: vec![
+                layer("wq", mk(&mut rng, d, d, s_d)?),
+                layer("wk", mk(&mut rng, d, d, s_d)?),
+                layer("wv", mk(&mut rng, d, d, s_d)?),
+                layer("wo", mk(&mut rng, d, d, s_d)?),
+                layer("up", mk(&mut rng, mlp, d, s_d)?),
+                layer("down", mk(&mut rng, d, mlp, s_mlp)?),
+            ],
+        });
+    }
+    // head scale spreads logits over a few units so sampling has contrast
+    let s_head = 3.0 / (qmax.max(1) as f32 * (d as f32).sqrt());
+    units.push(PackedUnit::stack("head", vec![layer("lm", mk(&mut rng, vocab, d, s_head)?)]));
+    Ok(PackedModel { units })
+}
+
+/// Deterministic prompt for demos/benches/loadgen: `len` tied-embedding
+/// rows of random tokens drawn from the model's vocabulary (seeded apart
+/// from the sampling stream so prompt and samples do not correlate).
+pub fn random_prompt(model: &PackedModel, len: usize, seed: u64) -> Result<(Vec<usize>, Tensor)> {
+    let v = vocab(model)?;
+    let d = model.in_width().ok_or_else(|| anyhow!("empty packed model"))?;
+    let mut rng = Pcg32::seeded(seed ^ 0x9E37_79B9);
+    let n = len.max(1);
+    let mut toks = Vec::with_capacity(n);
+    let mut rows = Vec::with_capacity(n * d);
+    for _ in 0..n {
+        let t = rng.below(v as u32) as usize;
+        toks.push(t);
+        rows.extend_from_slice(&embed_token(model, t)?);
+    }
+    let x = Tensor::from_f32(rows, &[n, d])?;
+    Ok((toks, x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_sampling_is_argmax() {
+        let mut rng = Pcg32::seeded(1);
+        let logits = [0.1f32, 2.5, -1.0, 2.5, 0.0];
+        // first maximum wins on ties
+        assert_eq!(sample_token(&logits, 0.0, 0, &mut rng), 1);
+        assert_eq!(sample_token(&logits, 0.0, 3, &mut rng), 1);
+    }
+
+    #[test]
+    fn top_k_restricts_the_candidate_set() {
+        let logits = [0.0f32, 10.0, -5.0, 9.0, 1.0];
+        let mut rng = Pcg32::seeded(2);
+        for _ in 0..200 {
+            let t = sample_token(&logits, 1.0, 2, &mut rng);
+            assert!(t == 1 || t == 3, "top-2 must only emit tokens 1/3, got {t}");
+        }
+        // full-vocab sampling with a huge temperature eventually leaves the
+        // top-2 set
+        let mut rng = Pcg32::seeded(3);
+        let mut saw_other = false;
+        for _ in 0..500 {
+            let t = sample_token(&logits, 50.0, 0, &mut rng);
+            if t != 1 && t != 3 {
+                saw_other = true;
+            }
+        }
+        assert!(saw_other, "unrestricted sampling should reach the tail");
+    }
+
+    #[test]
+    fn microscopic_temperature_degenerates_to_greedy() {
+        // logits/temp overflows f32 here — the sampler must behave like
+        // argmax instead of emitting NaN-driven junk (PR 4 review fix)
+        let logits = [1.0f32, 3.0, -2.0];
+        let mut rng = Pcg32::seeded(8);
+        for _ in 0..20 {
+            assert_eq!(sample_token(&logits, 1e-40, 0, &mut rng), 1);
+            assert_eq!(sample_token(&logits, 1e-40, 2, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn sampling_survives_extreme_logits() {
+        // ±90-range logits overflow a naive softmax; the max-shifted path
+        // must keep sampling well-defined (and still prefer the peak)
+        let logits = [90.0f32, -90.0, 0.0];
+        let mut rng = Pcg32::seeded(4);
+        for _ in 0..50 {
+            assert_eq!(sample_token(&logits, 1.0, 0, &mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn tied_embeddings_match_the_dequantized_head_rows() {
+        let model = synthetic_lm(1, 8, 2, 16, 4, 10, 4, 9).unwrap();
+        assert_eq!(vocab(&model).unwrap(), 10);
+        let head = lm_head(&model).unwrap().clone();
+        let w = head.dequantize().unwrap();
+        let wv = w.as_f32().unwrap();
+        for tok in [0usize, 3, 9] {
+            let e = embed_token(&model, tok).unwrap();
+            assert_eq!(e.as_slice(), &wv[tok * 8..(tok + 1) * 8], "embedding row {tok}");
+        }
+        assert!(embed_token(&model, 10).is_err());
+    }
+
+    #[test]
+    fn models_without_a_tied_head_are_rejected() {
+        let mut model = synthetic_lm(1, 8, 2, 16, 4, 10, 4, 9).unwrap();
+        model.units.pop(); // drop the head: last unit is now a block
+        assert!(lm_head(&model).is_err());
+        let engine = Engine::new(model, 1);
+        let (_, prompt) = {
+            let full = synthetic_lm(1, 8, 2, 16, 4, 10, 4, 9).unwrap();
+            random_prompt(&full, 3, 5).unwrap()
+        };
+        assert!(generate(&engine, &prompt, &GenOpts::default()).is_err());
+    }
+
+    #[test]
+    fn synthetic_lm_shapes_and_determinism() {
+        let a = synthetic_lm(2, 16, 4, 32, 8, 24, 4, 11).unwrap();
+        let b = synthetic_lm(2, 16, 4, 32, 8, 24, 4, 11).unwrap();
+        assert_eq!(a, b, "same seed must build the same model");
+        assert_eq!(a.units.len(), 3);
+        assert!(a.has_blocks());
+        assert_eq!(a.in_width(), Some(16));
+        assert_eq!(a.out_width(), Some(24));
+        assert!(synthetic_lm(2, 16, 3, 32, 8, 24, 4, 11).is_err(), "heads must divide d");
+    }
+}

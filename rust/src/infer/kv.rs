@@ -1,0 +1,211 @@
+//! Per-block K/V caches for incremental autoregressive decode (DESIGN.md
+//! §Generation).
+//!
+//! Full-context serving recomputes attention over the whole sequence on
+//! every call — O(t²) work to emit token `t + 1`.  The decode path instead
+//! caches each transformer block's key/value rows as they are produced:
+//! [`crate::infer::Engine::prefill`] fills one [`BlockKv`] per block from
+//! the prompt, and every [`crate::infer::Engine::decode_step`] appends one
+//! row per block and attends the new token against everything cached — the
+//! causal mask degenerates to "attend to all", so the per-token cost is
+//! O(t) attention reads plus O(1) GEMM work in the generated length.
+//!
+//! [`KvCache`] tracks the committed token position across blocks and
+//! validates that every block advanced in lockstep (a desynchronized cache
+//! means a dropped or double-pushed row, which would silently corrupt every
+//! later token).  [`GenState`] is the engine-facing bundle: the cache plus
+//! reusable attention scratch.
+
+use crate::Result;
+use anyhow::{anyhow, bail};
+
+/// K/V rows cached for one transformer block, row-major `(pos, d)`.
+#[derive(Clone, Debug)]
+pub struct BlockKv {
+    d: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl BlockKv {
+    fn new(d: usize, capacity_rows: usize) -> BlockKv {
+        BlockKv {
+            d,
+            k: Vec::with_capacity(capacity_rows * d),
+            v: Vec::with_capacity(capacity_rows * d),
+        }
+    }
+
+    /// Hidden width of one cached row.
+    pub fn width(&self) -> usize {
+        self.d
+    }
+
+    /// Rows cached so far.
+    pub fn len(&self) -> usize {
+        self.k.len() / self.d.max(1)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.k.is_empty()
+    }
+
+    /// All cached key rows, row-major `(len, d)`.
+    pub fn k(&self) -> &[f32] {
+        &self.k
+    }
+
+    /// All cached value rows, row-major `(len, d)`.
+    pub fn v(&self) -> &[f32] {
+        &self.v
+    }
+
+    /// Append whole `(rows, d)` K/V row groups — prefill pushes the full
+    /// prompt at once, decode pushes one row per step.
+    pub fn extend(&mut self, krows: &[f32], vrows: &[f32]) -> Result<()> {
+        if krows.is_empty() || krows.len() != vrows.len() || krows.len() % self.d != 0 {
+            bail!(
+                "kv extend: {} k values vs {} v values (row width {})",
+                krows.len(),
+                vrows.len(),
+                self.d
+            );
+        }
+        self.k.extend_from_slice(krows);
+        self.v.extend_from_slice(vrows);
+        Ok(())
+    }
+}
+
+/// The whole model's K/V state: one [`BlockKv`] per transformer-block unit
+/// plus the committed token position.
+pub struct KvCache {
+    blocks: Vec<BlockKv>,
+    pos: usize,
+}
+
+impl KvCache {
+    /// One per-block cache per hidden width in `dims`, sized for
+    /// `capacity_rows` tokens before the first reallocation (a hint, not a
+    /// limit — generation may run past it).
+    pub fn new(dims: &[usize], capacity_rows: usize) -> KvCache {
+        KvCache {
+            blocks: dims.iter().map(|&d| BlockKv::new(d, capacity_rows)).collect(),
+            pos: 0,
+        }
+    }
+
+    /// Number of block caches.
+    pub fn blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Tokens committed (prompt + decoded so far).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn block_mut(&mut self, i: usize) -> Result<&mut BlockKv> {
+        let n = self.blocks.len();
+        self.blocks
+            .get_mut(i)
+            .ok_or_else(|| anyhow!("kv cache has {n} block slots, asked for {i}"))
+    }
+
+    /// Commit position `t`: every block must hold exactly `t` rows — a
+    /// mismatch means some block missed (or double-pushed) a row and the
+    /// cache is corrupt.
+    pub fn set_pos(&mut self, t: usize) -> Result<()> {
+        for (i, b) in self.blocks.iter().enumerate() {
+            if b.len() != t {
+                bail!("kv cache block {i} holds {} rows, expected {t}", b.len());
+            }
+        }
+        self.pos = t;
+        Ok(())
+    }
+
+    /// Commit one decode step (every block grew by exactly one row).
+    pub fn advance(&mut self) -> Result<()> {
+        self.set_pos(self.pos + 1)
+    }
+
+    /// Bytes held across every block's K and V buffers.
+    pub fn bytes(&self) -> usize {
+        self.blocks.iter().map(|b| (b.k.len() + b.v.len()) * 4).sum()
+    }
+}
+
+/// One generation session's mutable state: the KV cache plus reusable
+/// attention-probability scratch.  Produced by
+/// [`crate::infer::Engine::prefill`], advanced by
+/// [`crate::infer::Engine::decode_step`].
+pub struct GenState {
+    pub(crate) kv: KvCache,
+    pub(crate) probs_scratch: Vec<f32>,
+}
+
+impl GenState {
+    pub fn new(kv: KvCache) -> GenState {
+        GenState { kv, probs_scratch: Vec::new() }
+    }
+
+    /// Tokens currently committed (prompt + generated so far).
+    pub fn pos(&self) -> usize {
+        self.kv.pos()
+    }
+
+    pub fn kv(&self) -> &KvCache {
+        &self.kv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_rows_accumulate_and_positions_commit() {
+        let mut cache = KvCache::new(&[4, 4], 8);
+        assert_eq!(cache.blocks(), 2);
+        assert_eq!(cache.pos(), 0);
+        // prefill three rows into both blocks, then commit
+        let rows = vec![1.0f32; 3 * 4];
+        cache.block_mut(0).unwrap().extend(&rows, &rows).unwrap();
+        cache.block_mut(1).unwrap().extend(&rows, &rows).unwrap();
+        cache.set_pos(3).unwrap();
+        assert_eq!(cache.pos(), 3);
+        assert_eq!(cache.bytes(), 2 * 2 * 3 * 4 * 4);
+        // one decode step: one row per block
+        let one = vec![2.0f32; 4];
+        cache.block_mut(0).unwrap().extend(&one, &one).unwrap();
+        cache.block_mut(1).unwrap().extend(&one, &one).unwrap();
+        cache.advance().unwrap();
+        assert_eq!(cache.pos(), 4);
+        let b = cache.block_mut(0).unwrap();
+        assert_eq!(b.len(), 4);
+        assert_eq!(&b.k()[3 * 4..], &one[..]);
+    }
+
+    #[test]
+    fn desynchronized_blocks_are_rejected() {
+        let mut cache = KvCache::new(&[4, 4], 2);
+        let one = vec![0.0f32; 4];
+        cache.block_mut(0).unwrap().extend(&one, &one).unwrap();
+        // block 1 never pushed → the commit must fail, pos must not move
+        assert!(cache.advance().is_err());
+        assert_eq!(cache.pos(), 0);
+        assert!(cache.block_mut(9).is_err());
+    }
+
+    #[test]
+    fn extend_validates_row_shapes() {
+        let mut cache = KvCache::new(&[4], 2);
+        let b = cache.block_mut(0).unwrap();
+        assert!(b.extend(&[0.0; 4], &[0.0; 8]).is_err(), "k/v length mismatch");
+        assert!(b.extend(&[0.0; 3], &[0.0; 3]).is_err(), "not a whole row");
+        assert!(b.extend(&[], &[]).is_err(), "empty push");
+        assert!(b.is_empty());
+        assert_eq!(b.width(), 4);
+    }
+}

@@ -17,15 +17,27 @@
 //!   (`Session::forward_q`'s fast path), including `transformer_block`
 //!   units: all six projections run the fused GEMM while layernorm /
 //!   causal attention / GELU / residuals stay f32 (`crate::block`);
+//! * [`kv`] — per-block K/V caches behind [`Engine::prefill`] /
+//!   [`Engine::decode_step`]: incremental decode attends one new token
+//!   against everything cached instead of recomputing full-context
+//!   attention per emitted token;
+//! * [`generate`] — autoregressive token generation over those primitives:
+//!   tied lm-head embeddings, greedy + temperature/top-k sampling, and the
+//!   full-context recompute baseline (`flexround generate`);
 //! * [`serve`] — a micro-batched request queue ([`Server`]) that coalesces
 //!   single-row requests up to a batch deadline, runs one fused GEMM per
-//!   batch, and fans results back out (`flexround serve`).
+//!   batch, and fans results back out — plus whole generation sessions
+//!   through the same queue (`flexround serve`).
 
 pub mod engine;
+pub mod generate;
 pub mod kernels;
+pub mod kv;
 pub mod packed;
 pub mod serve;
 
 pub use engine::{synthetic_model, Engine};
+pub use generate::{GenOpts, Generated};
+pub use kv::{BlockKv, GenState, KvCache};
 pub use packed::{PackedLayer, PackedMatrix, PackedModel, PackedUnit};
-pub use serve::{drive, BatchPolicy, Client, Server, ServeStats};
+pub use serve::{drive, BatchPolicy, Client, Server, ServeStats, MAX_GEN_TOKENS};

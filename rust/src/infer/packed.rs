@@ -617,6 +617,91 @@ mod tests {
     }
 
     #[test]
+    fn pack_roundtrip_asymmetric_grids() {
+        // Satellite (PR 4): *asymmetric* grids — the unsigned [0, 2^b − 1]
+        // code range with genuinely nonzero per-row zero points.  PR 2's
+        // props randomized the range but kept |zp| ≤ 2 and mostly symmetric
+        // grids; real asymmetric calibration (minmax_scale with
+        // symmetric = false) lands zp anywhere inside the grid.  Checks
+        // pack→unpack identity, the dequantization formula, and fused-GEMM
+        // parity at every supported bit-width on non-word-aligned rows.
+        use crate::infer::kernels;
+        for &bits in &SUPPORTED_BITS {
+            Prop::new("asymmetric pack/unpack/dequant/gemm").cases(32).check(|rng| {
+                let rows = 1 + rng.below(6) as usize;
+                // up to 37 columns so partial last words are constant
+                let cols = 1 + rng.below(37) as usize;
+                let (qmin, qmax) = grid(bits, false);
+                let span = (qmax - qmin + 1) as u32;
+                let mut codes: Vec<i32> =
+                    (0..rows * cols).map(|_| qmin + rng.below(span) as i32).collect();
+                codes[0] = qmin;
+                let n = codes.len();
+                codes[n - 1] = qmax;
+                let scale: Vec<f32> = (0..rows).map(|_| 0.01 + 0.2 * rng.next_f32()).collect();
+                // per-row zero points strictly inside the grid, never zero
+                let zp: Vec<f32> = (0..rows)
+                    .map(|_| 1.0 + rng.below(span.saturating_sub(1).max(1)) as f32)
+                    .collect();
+                let m =
+                    PackedMatrix::pack(&codes, rows, cols, bits, qmin, scale.clone(), zp.clone())
+                        .map_err(|e| e.to_string())?;
+                if m.unpack() != codes {
+                    return Err(format!(
+                        "asymmetric round-trip mismatch at {bits}-bit {rows}×{cols}"
+                    ));
+                }
+                // Ŵ = s·(n − zp) elementwise, zp honored per row
+                let w = m.dequantize().map_err(|e| e.to_string())?;
+                let wv = w.as_f32().map_err(|e| e.to_string())?;
+                for r in 0..rows {
+                    for c in 0..cols {
+                        let want = scale[r] * (codes[r * cols + c] as f32 - zp[r]);
+                        if (wv[r * cols + c] - want).abs() > 1e-6 * (1.0 + want.abs()) {
+                            return Err(format!(
+                                "dequant mismatch at ({r},{c}) for {bits}-bit asymmetric grid"
+                            ));
+                        }
+                    }
+                }
+                // the artifact round trip preserves the asymmetric grid
+                let unit = PackedUnit::stack(
+                    "u",
+                    vec![PackedLayer {
+                        name: "fc".into(),
+                        mat: m.clone(),
+                        bias: None,
+                        relu_after: false,
+                    }],
+                );
+                let model = PackedModel { units: vec![unit] };
+                let back = PackedModel::from_tensors(&model.to_tensors().map_err(|e| e.to_string())?)
+                    .map_err(|e| e.to_string())?;
+                if back != model {
+                    return Err(format!("artifact round trip lost the {bits}-bit grid"));
+                }
+                // the fused kernel must honor the nonzero zero point
+                let nb = 1 + rng.below(3) as usize;
+                let x = Tensor::from_f32(
+                    (0..nb * cols).map(|_| rng.next_normal()).collect(),
+                    &[nb, cols],
+                )
+                .map_err(|e| e.to_string())?;
+                let fused = kernels::gemm_fused(&x, &m, 2).map_err(|e| e.to_string())?;
+                let reference = kernels::gemm_ref(&x, &m).map_err(|e| e.to_string())?;
+                let d = fused.max_abs_diff(&reference).map_err(|e| e.to_string())?;
+                let tol = 1e-4 * (1.0 + reference.abs_max());
+                if d > tol {
+                    return Err(format!(
+                        "asymmetric fused gemm drift {d} > {tol} at {bits}-bit {rows}×{cols}"
+                    ));
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
     fn word_layout_is_row_aligned() {
         // bits=3 packs 10 codes per word: 10 cols → 1 word/row, 11 → 2.
         let codes = vec![1i32; 22];

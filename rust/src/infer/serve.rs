@@ -9,21 +9,39 @@
 //! and fans the result rows back to their callers.  Latency is bounded by
 //! the deadline; throughput approaches the batched-GEMM rate as load rises.
 //!
+//! Alongside row micro-batching the queue carries whole **generation
+//! sessions** ([`Client::generate`]): a prompt plus sampling options, run on
+//! the batcher thread through the KV-cached decode loop
+//! (`infer::generate`), answered with the sampled token ids.
+//!
 //! The pieces:
 //!
 //! * [`Server::start`] — spawns the batcher thread owning the [`Engine`];
 //! * [`Client`] — cheap cloneable handle; [`Client::call`] blocks for the
 //!   result, [`Client::submit`] returns the response channel for pipelined
-//!   callers;
+//!   callers, [`Client::generate`] blocks for a whole token stream;
 //! * [`drive`] — a synchronous load generator (CLI `serve` subcommand and
 //!   `benches/infer.rs`): N client threads × M rows, returns wall time and
 //!   the server-side [`ServeStats`].
+//!
+//! ## Shutdown contract
+//!
+//! Every submit and [`Server::shutdown`]'s stop marker go through one
+//! mutex-guarded sender, so the `Msg::Shutdown` marker is a true barrier in
+//! the queue: **a request whose submit returned `Ok` is guaranteed a real
+//! response** — including a batch still being collected when the marker
+//! lands — and any submit after the marker fails fast with "server is shut
+//! down".  (Without the gate, a request could race into the queue *behind*
+//! the marker and be silently dropped; the regression test below pins
+//! this.)  Shutdown never blocks on straggler [`Client`] clones.
 
 use super::engine::Engine;
+use super::generate::{self, GenOpts};
 use crate::tensor::Tensor;
 use crate::Result;
 use anyhow::anyhow;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// When to close a micro-batch.
@@ -52,6 +70,12 @@ pub struct ServeStats {
     pub max_batch: usize,
     /// seconds spent inside the engine forward
     pub gemm_secs: f64,
+    /// generation sessions answered
+    pub gen_sessions: u64,
+    /// tokens emitted across all generation sessions
+    pub gen_tokens: u64,
+    /// seconds spent inside generation (prefill + decode)
+    pub gen_secs: f64,
 }
 
 impl ServeStats {
@@ -70,24 +94,53 @@ struct Request {
     resp: Sender<Result<Vec<f32>>>,
 }
 
+struct GenRequest {
+    prompt: Vec<f32>,
+    opts: GenOpts,
+    resp: Sender<Result<Vec<usize>>>,
+}
+
 /// Queue messages.  `Shutdown` exists because dropping the server's own
 /// `Sender` does not disconnect the channel while [`Client`] clones are
 /// alive — [`Server::shutdown`] must not block on stragglers.
 enum Msg {
     Req(Request),
+    Gen(GenRequest),
     Shutdown,
 }
 
-/// Handle for submitting rows to a running [`Server`].
+/// The submit/shutdown gate: every accepted message is sent while holding
+/// this mutex, and shutdown takes the sender out *under the same lock* —
+/// which makes the queued `Msg::Shutdown` marker a barrier no accepted
+/// request can land behind.
+struct Gate {
+    tx: Mutex<Option<Sender<Msg>>>,
+}
+
+impl Gate {
+    fn send(&self, msg: Msg) -> Result<()> {
+        let guard = self.tx.lock().map_err(|_| anyhow!("server gate poisoned"))?;
+        let Some(tx) = guard.as_ref() else {
+            return Err(anyhow!("server is shut down"));
+        };
+        tx.send(msg).map_err(|_| anyhow!("server is shut down"))
+    }
+}
+
+/// Handle for submitting rows (and generation sessions) to a running
+/// [`Server`].
 #[derive(Clone)]
 pub struct Client {
-    tx: Sender<Msg>,
+    gate: Arc<Gate>,
     width: usize,
+    tok_width: usize,
 }
 
 impl Client {
     /// Enqueue one activation row; the returned channel yields its output
-    /// row once the batch it lands in has run.
+    /// row once the batch it lands in has run.  An `Ok` here is a promise:
+    /// the row *will* be answered, even if the server shuts down right
+    /// after.
     pub fn submit(&self, row: Vec<f32>) -> Result<Receiver<Result<Vec<f32>>>> {
         if row.len() != self.width {
             return Err(anyhow!(
@@ -97,9 +150,7 @@ impl Client {
             ));
         }
         let (tx, rx) = channel();
-        self.tx
-            .send(Msg::Req(Request { row, resp: tx }))
-            .map_err(|_| anyhow!("server is shut down"))?;
+        self.gate.send(Msg::Req(Request { row, resp: tx }))?;
         Ok(rx)
     }
 
@@ -109,12 +160,41 @@ impl Client {
             .recv()
             .map_err(|_| anyhow!("server dropped the request (shutting down?)"))?
     }
+
+    /// Submit a whole generation session: `prompt` is `t ≥ 1` flattened
+    /// token rows (`t · tok_width` values).  Blocks until the sampled token
+    /// ids come back; the session runs KV-cached on the batcher thread
+    /// *between* row batches (row traffic waits out the session, so the
+    /// deadline bound does not cover it), and the server caps `max_new` at
+    /// [`MAX_GEN_TOKENS`] so one session cannot pin the batcher — or stall
+    /// [`Server::shutdown`] — indefinitely.
+    pub fn generate(&self, prompt: Vec<f32>, opts: GenOpts) -> Result<Vec<usize>> {
+        if prompt.is_empty() || prompt.len() % self.tok_width != 0 {
+            return Err(anyhow!(
+                "generation prompt has {} values, need a nonzero multiple of the \
+                 token width {}",
+                prompt.len(),
+                self.tok_width
+            ));
+        }
+        if prompt.len() / self.tok_width > MAX_GEN_TOKENS {
+            return Err(anyhow!(
+                "generation prompt has {} rows, the server accepts at most {MAX_GEN_TOKENS}",
+                prompt.len() / self.tok_width
+            ));
+        }
+        let (tx, rx) = channel();
+        self.gate.send(Msg::Gen(GenRequest { prompt, opts, resp: tx }))?;
+        rx.recv()
+            .map_err(|_| anyhow!("server dropped the generation session (shutting down?)"))?
+    }
 }
 
 /// A running micro-batch server (one batcher thread owning the engine).
 pub struct Server {
-    tx: Sender<Msg>,
+    gate: Arc<Gate>,
     width: usize,
+    tok_width: usize,
     handle: std::thread::JoinHandle<ServeStats>,
 }
 
@@ -122,25 +202,32 @@ impl Server {
     /// Spawn the batcher thread.  Fails on an empty model (no input width).
     pub fn start(engine: Engine, policy: BatchPolicy) -> Result<Server> {
         let width = engine.in_width()?;
+        let tok_width = engine.model().in_width().unwrap_or(width).max(1);
         let max_batch = policy.max_batch.max(1);
         let (tx, rx) = channel::<Msg>();
-        let handle = std::thread::spawn(move || run_batcher(engine, rx, max_batch, policy.deadline));
-        Ok(Server { tx, width, handle })
+        let handle =
+            std::thread::spawn(move || run_batcher(engine, rx, max_batch, policy.deadline));
+        Ok(Server { gate: Arc::new(Gate { tx: Mutex::new(Some(tx)) }), width, tok_width, handle })
     }
 
     pub fn client(&self) -> Client {
-        Client { tx: self.tx.clone(), width: self.width }
+        Client { gate: Arc::clone(&self.gate), width: self.width, tok_width: self.tok_width }
     }
 
-    /// Stop the batcher and join it.  Requests already queued ahead of the
-    /// stop marker are answered first; rows arriving after it (racing
-    /// clients) get a "server dropped the request" error on their response
-    /// channel, and later submits fail with "server is shut down".  Never
-    /// blocks on straggler [`Client`] clones.
+    /// Stop the batcher and join it.  The gate closes and the stop marker is
+    /// queued under one lock, so shutdown is a clean barrier: every request
+    /// accepted before it gets a real response (a batch still being
+    /// collected when the marker lands is executed and answered), and every
+    /// submit after it fails with "server is shut down".  Never blocks on
+    /// straggler [`Client`] clones.
     pub fn shutdown(self) -> Result<ServeStats> {
-        let Server { tx, width: _, handle } = self;
-        let _ = tx.send(Msg::Shutdown);
-        drop(tx);
+        let Server { gate, width: _, tok_width: _, handle } = self;
+        {
+            let mut guard = gate.tx.lock().map_err(|_| anyhow!("server gate poisoned"))?;
+            if let Some(tx) = guard.take() {
+                let _ = tx.send(Msg::Shutdown);
+            }
+        }
         handle.join().map_err(|_| anyhow!("serve batcher thread panicked"))
     }
 }
@@ -154,19 +241,32 @@ fn run_batcher(
     let mut stats = ServeStats::default();
     let mut open = true;
     while open {
-        // block until a batch opens
+        // block until a batch opens (generation sessions run immediately —
+        // they own the engine for many sequential steps anyway)
         let first = match rx.recv() {
             Ok(Msg::Req(r)) => r,
+            Ok(Msg::Gen(g)) => {
+                run_gen(&engine, g, &mut stats);
+                continue;
+            }
             Ok(Msg::Shutdown) | Err(_) => break,
         };
         let opened = Instant::now();
         let mut batch = vec![first];
+        // generation sessions arriving while the batch coalesces run after
+        // its GEMM, so row latency stays bounded by the deadline
+        let mut gens: Vec<GenRequest> = Vec::new();
         while batch.len() < max_batch {
             let Some(left) = deadline.checked_sub(opened.elapsed()) else { break };
             match rx.recv_timeout(left) {
                 Ok(Msg::Req(r)) => batch.push(r),
+                Ok(Msg::Gen(g)) => gens.push(g),
                 Err(RecvTimeoutError::Timeout) => break,
                 Ok(Msg::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
+                    // the in-flight batch (and any collected generation
+                    // sessions) must still be executed and answered — the
+                    // shutdown barrier guarantees nothing accepted sits
+                    // behind the marker
                     open = false;
                     break;
                 }
@@ -198,8 +298,48 @@ fn run_batcher(
                 }
             }
         }
+        for g in gens {
+            run_gen(&engine, g, &mut stats);
+        }
     }
     stats
+}
+
+/// Server-side ceiling on tokens per generation session — applied to both
+/// `max_new` (clamped) and the prompt length (rejected): both are
+/// client-supplied, and the batcher runs sessions synchronously, so an
+/// uncapped request would head-of-line block every row request and keep
+/// [`Server::shutdown`] joining forever.
+pub const MAX_GEN_TOKENS: usize = 4096;
+
+/// Run one generation session on the batcher thread and answer it.
+fn run_gen(engine: &Engine, g: GenRequest, stats: &mut ServeStats) {
+    let GenRequest { prompt, mut opts, resp } = g;
+    opts.max_new = opts.max_new.min(MAX_GEN_TOKENS);
+    let d = engine.model().in_width().unwrap_or(1).max(1);
+    let rows = prompt.len() / d;
+    if rows > MAX_GEN_TOKENS {
+        // belt-and-braces twin of the Client-side check, so the invariant
+        // holds even if a future producer skips Client::generate
+        let _ = resp.send(Err(anyhow!(
+            "generation prompt has {rows} rows, the server accepts at most {MAX_GEN_TOKENS}"
+        )));
+        return;
+    }
+    let t0 = Instant::now();
+    let result = Tensor::from_f32(prompt, &[rows, d])
+        .and_then(|x| generate::generate(engine, &x, &opts));
+    stats.gen_secs += t0.elapsed().as_secs_f64();
+    stats.gen_sessions += 1;
+    match result {
+        Ok(gen) => {
+            stats.gen_tokens += gen.tokens.len() as u64;
+            let _ = resp.send(Ok(gen.tokens));
+        }
+        Err(e) => {
+            let _ = resp.send(Err(anyhow!("generation session failed: {e:#}")));
+        }
+    }
 }
 
 /// Synchronous load generator: split `rows` across `clients` threads, each
@@ -314,5 +454,80 @@ mod tests {
         assert!(secs > 0.0);
         assert_eq!(stats.requests, 64);
         assert!(stats.mean_batch() >= 1.0);
+    }
+
+    #[test]
+    fn shutdown_is_a_barrier_every_accepted_request_is_answered() {
+        // Regression (PR 4 shutdown race): a submit that returns Ok must
+        // receive a *real* response even when it races Server::shutdown.
+        // Pre-fix, a request could land in the queue behind the Shutdown
+        // marker and be silently dropped — its caller saw a disconnect
+        // instead of a result.  Many rounds with varied timing so the race
+        // window is actually explored.
+        for round in 0..25u64 {
+            let server = Server::start(
+                engine(),
+                BatchPolicy { max_batch: 3, deadline: Duration::from_micros(200) },
+            )
+            .unwrap();
+            let client = server.client();
+            let row = rows(1, 16, round).remove(0);
+            let submitter = std::thread::spawn(move || {
+                let mut accepted = Vec::new();
+                loop {
+                    match client.submit(row.clone()) {
+                        Ok(rx) => accepted.push(rx),
+                        Err(_) => break,
+                    }
+                }
+                accepted
+            });
+            // let some submits land before (and while) the shutdown races in
+            std::thread::sleep(Duration::from_micros(60 + 137 * (round % 7)));
+            let stats = server.shutdown().unwrap();
+            let accepted = submitter.join().unwrap();
+            for (i, rx) in accepted.iter().enumerate() {
+                let resp = rx.recv().unwrap_or_else(|_| {
+                    panic!(
+                        "round {round}: accepted request {i}/{} was dropped on shutdown",
+                        accepted.len()
+                    )
+                });
+                assert!(resp.is_ok(), "round {round}: accepted request {i} got {resp:?}");
+            }
+            assert_eq!(
+                stats.requests as usize,
+                accepted.len(),
+                "round {round}: server answered a different number of rows than it accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn generation_sessions_run_alongside_row_batching() {
+        use crate::infer::generate::{self, GenOpts};
+        let model = generate::synthetic_lm(2, 8, 2, 16, 4, 12, 4, 5).unwrap();
+        let reference = Engine::new(model.clone(), 1);
+        let opts = GenOpts { max_new: 6, temp: 0.7, top_k: 4, seed: 11 };
+        let (_, prompt) = generate::random_prompt(reference.model(), 3, 9).unwrap();
+        let want = generate::generate(&reference, &prompt, &opts).unwrap().tokens;
+
+        let server = Server::start(Engine::new(model, 1), BatchPolicy::default()).unwrap();
+        let client = server.client();
+        // a generation session and a plain row request share the queue
+        let got = client.generate(prompt.as_f32().unwrap().to_vec(), opts).unwrap();
+        assert_eq!(got, want, "served generation must equal the direct decode loop");
+        let row_out = client.call(vec![0.0; 4 * 8]).unwrap();
+        assert_eq!(row_out.len(), 4 * 12, "row serving still works on an LM model");
+        // bad prompts are rejected before queueing; bad sessions answer with
+        // an error instead of hanging
+        assert!(client.generate(vec![0.0; 3], opts).is_err());
+        // over-long prompts are refused (head-of-line/shutdown-stall guard)
+        assert!(client.generate(vec![0.0; (MAX_GEN_TOKENS + 1) * 8], opts).is_err());
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.gen_sessions, 1);
+        assert_eq!(stats.gen_tokens as usize, want.len());
+        assert_eq!(stats.requests, 1);
+        assert!(stats.gen_secs >= 0.0);
     }
 }

@@ -10,6 +10,8 @@
 //! flexround pack     --model mlp_units --method flexround --bits 4 --out m.fxt
 //! flexround infer    --packed m.fxt --rows 32          # no FP weights needed
 //! flexround serve    --synthetic --requests 512 --compare
+//! flexround generate --packed blk.fxt --max-new 32 --temp 0.8 --top-k 40
+//! flexround generate --synthetic --compare            # cached vs recompute
 //! flexround sweep    --config configs/t2_weight_only.toml
 //! flexround figure   --model tinymobilenet --unit b1 --method flexround --bits 4
 //! flexround inspect  --model llm_mini
@@ -57,6 +59,7 @@ fn run(argv: &[String]) -> Result<()> {
         "pack" => cmd_pack(&args, &art_dir, quiet),
         "infer" => cmd_infer(&args),
         "serve" => cmd_serve(&args),
+        "generate" => cmd_generate(&args),
         "figure" => cmd_figure(&args, &art_dir, &rep_dir, quiet),
         "sweep" => cmd_sweep(&args, &art_dir, &rep_dir, quiet),
         other => bail!("unknown command {other:?}\n\n{USAGE}"),
@@ -391,15 +394,95 @@ fn run_pipeline_cmd(
         let Some(engine) = &engine else {
             bail!("--pack-out needs a packable result (see the message above)");
         };
-        engine.model().save(Path::new(out))?;
+        // generation-complete when the model carries a native lm head: the
+        // already-packed blocks gain a packed `head` stack (no re-packing)
+        // so `flexround generate --packed` can decode from the artifact
+        let with_head = sess.weights.contains_key("head/lm");
+        let headed_engine = if with_head {
+            let mut saved = engine.model().clone();
+            saved.units.push(sess.packed_head_unit()?);
+            saved.save(Path::new(out))?;
+            Some(flexround::infer::Engine::new(saved, engine.workers))
+        } else {
+            engine.model().save(Path::new(out))?;
+            None
+        };
+        // time the forward through the engine serving the *saved* model, so
+        // the printed output shape is what the artifact actually produces
+        let saved_engine = headed_engine.as_ref().unwrap_or(engine);
         let chunks = sess.first_unit_inputs(sess.dataset("calib_x")?)?;
         let t0 = std::time::Instant::now();
-        let y = engine.forward(&chunks[0])?;
+        let y = saved_engine.forward(&chunks[0])?;
         println!(
-            "packed → {out}; engine forward {:?} → {:?} in {:.3}ms (no FP weights)",
+            "packed → {out}{}; engine forward {:?} → {:?} in {:.3}ms (no FP weights)",
+            if with_head { " (with packed lm head — generation-ready)" } else { "" },
             chunks[0].shape(),
             y.shape(),
             1e3 * t0.elapsed().as_secs_f64()
+        );
+    }
+    Ok(())
+}
+
+/// `flexround generate` — KV-cached autoregressive decode over a packed
+/// block model: prefill the prompt once, then one incremental step per
+/// token.  `--synthetic` builds a random packed LM in memory; `--packed`
+/// loads a generation-complete artifact (blocks + tied lm head, e.g. from
+/// `pipeline --pack-out`).  Fixed `--seed` ⇒ identical token stream.
+fn cmd_generate(args: &Args) -> Result<()> {
+    use flexround::infer::generate::{self, GenOpts};
+    use flexround::infer::{Engine, PackedModel};
+    let workers = args.usize_flag("workers", flexround::util::pool::default_workers());
+    let model = if let Some(p) = args.flag("packed") {
+        PackedModel::load(Path::new(p))?
+    } else if args.has("synthetic") {
+        generate::synthetic_lm(
+            args.usize_flag("blocks", 2),
+            args.usize_flag("width", 64),
+            args.usize_flag("heads", 4),
+            args.usize_flag("mlp", 128),
+            args.usize_flag("seq", 16),
+            args.usize_flag("vocab", 256),
+            args.usize_flag("bits", 4) as u32,
+            args.usize_flag("seed", 7) as u64,
+        )?
+    } else {
+        bail!("generate needs --packed <model.fxt> or --synthetic");
+    };
+    let opts = GenOpts {
+        max_new: args.usize_flag("max-new", 32).max(1),
+        temp: args.f64_flag("temp", 0.0) as f32,
+        top_k: args.usize_flag("top-k", 0),
+        seed: args.usize_flag("seed", 7) as u64,
+    };
+    let engine = Engine::new(model, workers);
+    let (prompt_toks, prompt) =
+        generate::random_prompt(engine.model(), args.usize_flag("prompt-len", 4), opts.seed)?;
+    let gen = generate::generate(&engine, &prompt, &opts)?;
+    let per_tok = 1e3 * gen.decode_secs_per_token();
+    let join = |ts: &[usize]| {
+        ts.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" ")
+    };
+    println!("prompt ({} tokens): {}", prompt_toks.len(), join(&prompt_toks));
+    println!("generated {} tokens: {}", gen.tokens.len(), join(&gen.tokens));
+    println!(
+        "prefill {:.3}ms · decode {per_tok:.3}ms/token (KV-cached; temp {}, top-k {}, seed {})",
+        1e3 * gen.prefill_secs,
+        opts.temp,
+        opts.top_k,
+        opts.seed
+    );
+    if args.has("compare") {
+        let base = generate::generate_recompute(&engine, &prompt, &opts)?;
+        let base_tok = 1e3 * base.decode_secs_per_token();
+        println!(
+            "recompute baseline {base_tok:.3}ms/token → cached speedup {:.2}×{}",
+            base_tok / per_tok.max(1e-9),
+            if base.tokens == gen.tokens {
+                " (identical stream)"
+            } else {
+                " (STREAM MISMATCH — file a bug)"
+            }
         );
     }
     Ok(())

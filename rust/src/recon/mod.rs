@@ -361,7 +361,7 @@ pub fn matmul_nt_par(a: &Tensor, b: &Tensor, workers: usize) -> Result<Tensor> {
     {
         return a.matmul_nt(b);
     }
-    let chunk = (m + workers - 1) / workers;
+    let chunk = m.div_ceil(workers);
     let ranges: Vec<(usize, usize)> =
         (0..workers).map(|i| (i * chunk, ((i + 1) * chunk).min(m))).filter(|(lo, hi)| lo < hi).collect();
     let parts = pool::par_map(workers, &ranges, |_, &(lo, hi)| {

@@ -221,6 +221,35 @@ fn session_quantize_routes_blocks_through_native_backend() {
 }
 
 #[test]
+fn mid_pipeline_error_leaves_the_cache_dir_empty() {
+    // Satellite regression (PR 4): a pipeline that *fails* between blocks —
+    // here block 1's weights are missing from the FXT export — must not
+    // leak spill files; every ActivationCache cleans up via purge()/Drop on
+    // the error path.
+    let mut fx = synthetic_block_model(&spec()).unwrap();
+    assert!(fx.weights.remove("w/blk1/wq").is_some(), "fixture layout changed");
+    let backend = Native::new();
+    let sess = fx.session(&backend);
+
+    let dir = std::env::temp_dir()
+        .join(format!("flexround_block_pipeline_errleak_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut o = opts(ReconInput::Quant, 5);
+    o.cache_dir = Some(dir.clone());
+    o.cache_budget_bytes = 1; // force every chunk of every chain to spill
+    let err = run_pipeline(&sess, &o);
+    assert!(err.is_err(), "a block with missing weights must fail the pipeline");
+    let leftovers = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter(|e| {
+            e.as_ref().unwrap().file_name().to_string_lossy().starts_with("actcache_")
+        })
+        .count();
+    assert_eq!(leftovers, 0, "an erroring pipeline must not leak spill files");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn pipeline_rejects_quant_input_mismatch_gracefully() {
     // sanity on the ReconInput parser used by the CLI
     assert!(matches!(ReconInput::parse("fp"), Ok(ReconInput::Fp)));
