@@ -1,0 +1,157 @@
+//! `cargo bench --bench kernels` — perf harness for the unified `linalg`
+//! kernel core (DESIGN.md §Compute-Kernels):
+//!
+//! * blocked `matmul_nt` (serial tile loop, and under the parallel
+//!   dispatch policy) vs the retained naive triple-loop oracle at
+//!   1024×1024·1024ᵀ;
+//! * the fused dequant-GEMM panel kernel vs PR 2's rowwise fused kernel at
+//!   1024×1024, W4/W8, micro-batch 8;
+//! * the batch-1 gemv decode path (what `Engine::decode_step` pays per
+//!   projection) at 1024×1024, W4/W8.
+//!
+//! Emits machine-readable results to `BENCH_kernels.json` at the repo root,
+//! alongside the human-readable stdout table.
+//!
+//! Environment knobs:
+//!   FLEXROUND_BENCH_MS       per-measurement budget in ms (default 800)
+//!   FLEXROUND_BENCH_WORKERS  worker threads for parallel dispatch (default all)
+
+use flexround::infer::{kernels, synthetic_model, PackedMatrix};
+use flexround::linalg::{self, Dispatch};
+use flexround::ser::json::{self, Json};
+use flexround::tensor::Tensor;
+use flexround::util::pool;
+use flexround::util::rng::Pcg32;
+use flexround::util::stats::{bench, BenchResult};
+use std::time::Duration;
+
+const DIM: usize = 1024;
+
+fn ms(r: &BenchResult) -> Json {
+    Json::object(vec![
+        ("iters", Json::from_f64(r.iters as f64)),
+        ("mean_ms", Json::from_f64(r.mean * 1e3)),
+        ("p50_ms", Json::from_f64(r.p50 * 1e3)),
+        ("min_ms", Json::from_f64(r.min * 1e3)),
+    ])
+}
+
+fn bench_matrix(bits: u32, seed: u64) -> PackedMatrix {
+    let model = synthetic_model(1, DIM, bits, seed).expect("synthetic model");
+    model.units[0].layers[0].mat.clone()
+}
+
+fn main() {
+    let budget = Duration::from_millis(
+        std::env::var("FLEXROUND_BENCH_MS").ok().and_then(|s| s.parse().ok()).unwrap_or(800),
+    );
+    let workers: usize = std::env::var("FLEXROUND_BENCH_WORKERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(pool::default_workers);
+
+    let mut rng = Pcg32::seeded(3);
+
+    // ---- blocked vs naive f32 matmul_nt at 1024² ----
+    println!("== blocked linalg::gemm_nt vs naive triple loop ({DIM}×{DIM}·{DIM}ᵀ, workers={workers}) ==");
+    let a = Tensor::from_f32((0..DIM * DIM).map(|_| rng.next_normal()).collect(), &[DIM, DIM])
+        .expect("a");
+    let b = Tensor::from_f32((0..DIM * DIM).map(|_| rng.next_normal()).collect(), &[DIM, DIM])
+        .expect("b");
+    let (av, bv) = (a.as_f32().expect("f32"), b.as_f32().expect("f32"));
+    let naive = bench("matmul_nt_naive", budget, 5, || {
+        let _ = linalg::gemm_nt_ref(av, bv, DIM, DIM, DIM);
+    });
+    println!("{}", naive.report());
+    let blocked = bench("matmul_nt_blocked_serial", budget, 50, || {
+        let _ = a.matmul_nt_with(&b, &Dispatch::serial()).expect("blocked");
+    });
+    println!("{}", blocked.report());
+    let blocked_par = bench("matmul_nt_blocked_par", budget, 200, || {
+        let _ = a.matmul_nt_with(&b, &Dispatch::new(workers)).expect("blocked par");
+    });
+    println!("{}", blocked_par.report());
+    let s_serial = naive.p50 / blocked.p50.max(1e-12);
+    let s_par = naive.p50 / blocked_par.p50.max(1e-12);
+    println!("  → blocked serial is {s_serial:.2}× the naive loop; parallel {s_par:.2}×");
+    let matmul_json = Json::object(vec![
+        ("dim", Json::from_f64(DIM as f64)),
+        ("naive", ms(&naive)),
+        ("blocked_serial", ms(&blocked)),
+        ("blocked_parallel", ms(&blocked_par)),
+        ("speedup_blocked_vs_naive", Json::from_f64(s_serial)),
+        ("speedup_parallel_vs_naive", Json::from_f64(s_par)),
+    ]);
+
+    // ---- fused panel kernel vs rowwise fused at 1024², W4/W8 ----
+    let batch = 8usize;
+    println!("== fused panel kernel vs rowwise fused ({DIM}×{DIM}, batch {batch}) ==");
+    let mut fused_rows: Vec<Json> = Vec::new();
+    for bits in [4u32, 8] {
+        let m = bench_matrix(bits, 7);
+        let x = Tensor::from_f32(
+            (0..batch * DIM).map(|_| rng.next_normal()).collect(),
+            &[batch, DIM],
+        )
+        .expect("activations");
+        let rowwise = bench(&format!("fused_rowwise_w{bits}"), budget, 2_000, || {
+            let _ = kernels::gemm_fused_rowwise(&x, &m).expect("rowwise");
+        });
+        println!("{}", rowwise.report());
+        let panel = bench(&format!("fused_panel_w{bits}"), budget, 2_000, || {
+            let _ = kernels::gemm_fused(&x, &m, 1).expect("panel");
+        });
+        println!("{}", panel.report());
+        let panel_par = bench(&format!("fused_panel_par_w{bits}"), budget, 5_000, || {
+            let _ = kernels::gemm_fused(&x, &m, workers).expect("panel par");
+        });
+        println!("{}", panel_par.report());
+        let s = rowwise.p50 / panel.p50.max(1e-12);
+        println!("  → panel kernel is {s:.2}× the rowwise kernel (serial, W{bits})");
+        fused_rows.push(Json::object(vec![
+            ("bits", Json::from_f64(bits as f64)),
+            ("batch", Json::from_f64(batch as f64)),
+            ("rowwise", ms(&rowwise)),
+            ("panel_serial", ms(&panel)),
+            ("panel_parallel", ms(&panel_par)),
+            ("speedup_panel_vs_rowwise", Json::from_f64(s)),
+        ]));
+    }
+
+    // ---- batch-1 gemv decode path at 1024², W4/W8 ----
+    println!("== gemv decode path (batch 1, {DIM}×{DIM}) ==");
+    let mut gemv_rows: Vec<Json> = Vec::new();
+    for bits in [4u32, 8] {
+        let m = bench_matrix(bits, 7);
+        let x = Tensor::from_f32(
+            (0..DIM).map(|_| rng.next_normal()).collect(),
+            &[1, DIM],
+        )
+        .expect("row");
+        let gemv = bench(&format!("fused_gemv_w{bits}_b1"), budget, 20_000, || {
+            let _ = kernels::gemm_fused(&x, &m, workers).expect("gemv");
+        });
+        println!("{}", gemv.report());
+        let per_s = 1.0 / gemv.p50.max(1e-12);
+        println!("  → {per_s:.0} batch-1 projections/s at W{bits}");
+        gemv_rows.push(Json::object(vec![
+            ("bits", Json::from_f64(bits as f64)),
+            ("gemv", ms(&gemv)),
+            ("projections_per_s", Json::from_f64(per_s)),
+        ]));
+    }
+
+    // ---- BENCH_kernels.json at the repo root ----
+    let doc = Json::object(vec![
+        ("bench", Json::from_str_val("kernels")),
+        ("workers", Json::from_f64(workers as f64)),
+        ("matmul_nt_1024", matmul_json),
+        ("fused_1024", Json::Arr(fused_rows)),
+        ("gemv_decode_1024", Json::Arr(gemv_rows)),
+    ]);
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json");
+    match std::fs::write(out, json::to_string(&doc, 2) + "\n") {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

@@ -41,6 +41,7 @@ pub use pipeline::{
     ReconInput, SyntheticBlockModel, SyntheticBlockSpec,
 };
 
+use crate::linalg;
 use crate::manifest::PackEntry;
 use crate::recon::{self, LayerSlots, ReconResult, ReconSettings};
 use crate::runtime::UnitCtx;
@@ -247,11 +248,9 @@ pub fn attn_score_row(
     let mut mx = f32::NEG_INFINITY;
     for (j, rj) in probs.iter_mut().enumerate().take(count) {
         let kj = &kbuf[j * stride + c0..j * stride + c0 + dh];
-        let mut acc = 0.0f32;
-        for (a, b) in qi.iter().zip(kj) {
-            acc += a * b;
-        }
-        *rj = acc * scale;
+        // the crate-wide sequential contraction core: the same bits as the
+        // gemv/GEMM kernels, so score rows never depend on the path taken
+        *rj = linalg::dot(qi, kj) * scale;
         mx = mx.max(*rj);
     }
     let mut sum = 0.0f32;
@@ -367,11 +366,7 @@ pub fn attn_backward(
                 let gi = &gv[(base + i) * d + c0..(base + i) * d + c0 + dh];
                 for j in 0..=i {
                     let vj = &vv[(base + j) * d + c0..(base + j) * d + c0 + dh];
-                    let mut acc = 0.0f32;
-                    for (a, b) in gi.iter().zip(vj) {
-                        acc += a * b;
-                    }
-                    da[i * seq + j] = acc;
+                    da[i * seq + j] = linalg::dot(gi, vj);
                     let pij = pv[i * seq + j];
                     let dvj = &mut dv[(base + j) * d + c0..(base + j) * d + c0 + dh];
                     for (o, a) in dvj.iter_mut().zip(gi) {
@@ -582,12 +577,16 @@ pub fn loss_and_grads(
     let n_inv = 2.0 / yhat.len() as f32;
     let g = yhat.zip(yb, move |a, b| n_inv * (a - b))?;
 
+    // backward matmuls run under the same dispatch budget as the forward
+    // projections (they used to be unconditionally serial)
+    let disp = linalg::Dispatch::new(workers);
+
     // ---- MLP path: y = x2 + gelu(h2·Ŵupᵀ + bup)·Ŵdownᵀ + bdown ----
-    let d_down = g.matmul_tn(&cache.m)?; // ∂L/∂Ŵdown  (d, mlp)
-    let dm = g.matmul_nn(&whats[5])?; // (n, mlp)
+    let d_down = g.matmul_tn_with(&cache.m, &disp)?; // ∂L/∂Ŵdown  (d, mlp)
+    let dm = g.matmul_nn_with(&whats[5], &disp)?; // (n, mlp)
     let dup_pre = gelu_bwd(&cache.up_pre, &dm)?;
-    let d_up = dup_pre.matmul_tn(&cache.h2)?; // ∂L/∂Ŵup  (mlp, d)
-    let dh2 = dup_pre.matmul_nn(&whats[4])?; // (n, d)
+    let d_up = dup_pre.matmul_tn_with(&cache.h2, &disp)?; // ∂L/∂Ŵup  (mlp, d)
+    let dh2 = dup_pre.matmul_nn_with(&whats[4], &disp)?; // (n, d)
     let (dx2_ln, _, _) = layernorm_rows_bwd(
         &cache.x2,
         def.ln2_g.as_f32()?,
@@ -599,13 +598,13 @@ pub fn loss_and_grads(
     let dx2 = g.zip(&dx2_ln, |a, b| a + b)?;
 
     // ---- attention path: x2 = x + (attn(ln1(x))·Ŵoᵀ + bo) ----
-    let d_wo = dx2.matmul_tn(&cache.ctx)?; // ∂L/∂Ŵo  (d, d)
-    let dctx = dx2.matmul_nn(&whats[3])?; // (n, d)
+    let d_wo = dx2.matmul_tn_with(&cache.ctx, &disp)?; // ∂L/∂Ŵo  (d, d)
+    let dctx = dx2.matmul_nn_with(&whats[3], &disp)?; // (n, d)
     let (dq, dk, dv) =
         attn_backward(&cache.q, &cache.k, &cache.v, &cache.probs, &dctx, def.heads, def.seq)?;
-    let d_wq = dq.matmul_tn(&cache.h1)?;
-    let d_wk = dk.matmul_tn(&cache.h1)?;
-    let d_wv = dv.matmul_tn(&cache.h1)?;
+    let d_wq = dq.matmul_tn_with(&cache.h1, &disp)?;
+    let d_wk = dk.matmul_tn_with(&cache.h1, &disp)?;
+    let d_wv = dv.matmul_tn_with(&cache.h1, &disp)?;
 
     // ---- STE into the FlexRound parameters, per layer ----
     let mut grads: Vec<Option<Tensor>> = params.iter().map(|_| None).collect();

@@ -163,6 +163,11 @@ pub fn eval_ppl_hidden(
 /// [`eval_ppl_hidden`] with the hidden-state chunks already forwarded —
 /// callers holding a hoisted packed engine (the pipeline report path)
 /// compute `h` themselves and skip a redundant export/pack.
+///
+/// The `(rows, d) · (vocab, d)ᵀ` head projection below dominates this
+/// function; it runs the crate-wide `linalg` dispatch — pool-parallel row
+/// panels for calibration-sized chunks, the gemv fast path when a chunk
+/// degenerates to a single row — instead of a private serial loop.
 pub fn ppl_from_hidden(sess: &Session, h: &[Tensor], ys_name: &str) -> Result<f64> {
     let head = sess.weights.get("head/lm").ok_or_else(|| {
         anyhow::anyhow!(

@@ -9,8 +9,11 @@
 //! subcommands drive it directly.
 //!
 //! Transformer-block units run every projection (`wq wk wv wo up down`)
-//! through the same fused dequant-GEMM; layernorm, causal softmax attention
-//! (shared with [`crate::block`]), GELU, and the residual adds stay f32.
+//! through the same fused dequant-GEMM — which itself runs the crate-wide
+//! [`crate::linalg`] tile loop, so serving shares one kernel core and one
+//! parallel-dispatch policy with reconstruction and eval; layernorm, causal
+//! softmax attention (shared with [`crate::block`]), GELU, and the residual
+//! adds stay f32.
 //! Beyond the batch `forward`, block models expose the incremental decode
 //! pair [`Engine::prefill`] / [`Engine::decode_step`] over a per-block
 //! [`KvCache`] — one token per step, attention against the cached K/V rows
@@ -308,7 +311,10 @@ impl Engine {
     /// returns this position's output row — logits when the packed model
     /// ends in an lm-head stack.  Cost is O(1) in the generated length for
     /// the GEMMs and O(t) for the attention reads, versus O(t) GEMMs for a
-    /// full-context recompute.
+    /// full-context recompute.  Every projection here is a batch-1 fused
+    /// GEMM, which `kernels` routes to the shared `linalg::gemv_nt` core —
+    /// bit-identical to the batched tile loop, minus its bookkeeping (tile
+    /// overhead is pure loss at one row, and decode is the latency path).
     pub fn decode_step(&self, state: &mut GenState, row: &[f32]) -> Result<Vec<f32>> {
         let tok_w = self
             .model

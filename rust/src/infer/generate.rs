@@ -127,7 +127,10 @@ pub fn sample_token(logits: &[f32], temp: f32, top_k: usize, rng: &mut Pcg32) ->
     if temp <= 0.0 {
         let mut best = 0usize;
         for (j, &v) in logits.iter().enumerate() {
-            if v > logits[best] {
+            let b = logits[best];
+            // same deterministic rule as Tensor::argmax_rows: first maximum
+            // wins, a NaN never beats a number (all-NaN rows yield 0)
+            if (b.is_nan() && !v.is_nan()) || v > b {
                 best = j;
             }
         }
@@ -355,6 +358,10 @@ mod tests {
         // first maximum wins on ties
         assert_eq!(sample_token(&logits, 0.0, 0, &mut rng), 1);
         assert_eq!(sample_token(&logits, 0.0, 3, &mut rng), 1);
+        // NaN never wins — the same contract as Tensor::argmax_rows, so
+        // argmax-based eval and greedy decode name the same token
+        assert_eq!(sample_token(&[f32::NAN, 2.0, 1.0], 0.0, 0, &mut rng), 1);
+        assert_eq!(sample_token(&[f32::NAN, f32::NAN], 0.0, 0, &mut rng), 0);
     }
 
     #[test]

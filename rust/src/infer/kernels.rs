@@ -1,29 +1,42 @@
-//! Fused dequant-GEMM kernels over [`PackedMatrix`].
+//! Fused dequant-GEMM kernels over [`PackedMatrix`], built on the unified
+//! [`crate::linalg`] kernel core (DESIGN.md §Compute-Kernels).
 //!
 //! The serving hot path is `Y = X · Ŵᵀ` with `Ŵ = s · (n − z)` never
-//! materialized.  Three implementations, slowest to fastest:
+//! materialized.  Implementations, slowest to fastest:
 //!
 //! * [`gemm_ref`] — scalar reference: decodes and scales every element
-//!   independently.  The correctness oracle for the other two.
+//!   independently.  The correctness oracle for everything else.
 //! * [`dequant_matmul`] — the naive deployment baseline: materialize the
-//!   full f32 `Ŵ` (4 bytes/element), then run the dense [`Tensor::matmul_nt`].
-//!   Benchmared against the fused kernel in `benches/infer.rs`.
-//! * [`gemm_fused`] — unpack-on-the-fly: one weight row's codes are decoded
-//!   into an L1-resident scratch buffer (`cols × 4` bytes, reused across the
-//!   whole micro-batch), the integer-code dot product runs against each
-//!   activation row, and the per-channel scale is applied once per output in
-//!   register via
+//!   full f32 `Ŵ` (4 bytes/element), then run the dense
+//!   [`Tensor::matmul_nt`].
+//! * [`gemm_fused_rowwise`] — one weight row decoded at a time, a scalar
+//!   dot per activation row (PR 2's original fused kernel).  Retained as
+//!   the second oracle — it must stay *bit-identical* to the panel kernel
+//!   — and as the baseline for `cargo bench --bench kernels`.
+//! * [`gemm_fused`] — the production kernel: an [`linalg::NR`]-row panel of
+//!   weight codes is decoded into an L1-resident scratch, the shared
+//!   register-tiled loop ([`linalg::gemm_nt_into`]) contracts activations
+//!   against the decoded panel, and the per-channel scale lands once per
+//!   output in the epilogue via the algebraic form
 //!
 //!   ```text
 //!     y[i][j] = s_j · ( Σ_t n[j][t]·x[i][t]  −  z_j · Σ_t x[i][t] )
 //!   ```
 //!
-//!   so memory traffic is the packed words (bits/8 bytes per weight) instead
-//!   of the dense f32 matrix — the whole point of serving low-bit weights.
-//!   Row-ranges fan out over [`crate::util::pool`] like the reconstruction
-//!   matmuls.
+//!   so memory traffic stays the packed words (bits/8 bytes per weight)
+//!   instead of the dense f32 matrix.  Batch-1 inputs (the KV-cached
+//!   decode hot path, `Engine::decode_step`) skip the tile loop for the
+//!   shared [`linalg::gemv_nt`] core — same bits, no tile bookkeeping.
+//!
+//! Weight-row ranges fan out under the crate-wide [`Dispatch`] policy —
+//! the same flops threshold and pool fan-out as every other matmul (the
+//! old one-off `n·rows·k < 2¹⁶` cutoff lives on *as* that policy's
+//! [`crate::linalg::PAR_FLOPS_MIN`]).  Because every kernel sums k
+//! ascending with one accumulator per element, serial, parallel, rowwise,
+//! panel, and gemv paths are all bit-identical.
 
 use super::packed::PackedMatrix;
+use crate::linalg::{self, Dispatch};
 use crate::tensor::Tensor;
 use crate::util::pool;
 use crate::Result;
@@ -42,7 +55,7 @@ fn check_shapes(x: &Tensor, m: &PackedMatrix) -> Result<(usize, usize)> {
 }
 
 /// Scalar reference kernel: per-element decode + scale (no scratch, no
-/// algebraic refactoring).  Slow; exists so the fused kernel has an
+/// algebraic refactoring).  Slow; exists so the fused kernels have an
 /// independent oracle.
 pub fn gemm_ref(x: &Tensor, m: &PackedMatrix) -> Result<Tensor> {
     let (n, k) = check_shapes(x, m)?;
@@ -63,14 +76,51 @@ pub fn gemm_ref(x: &Tensor, m: &PackedMatrix) -> Result<Tensor> {
     Tensor::from_f32(out, &[n, rows])
 }
 
-/// Deployment baseline: materialize f32 `Ŵ`, then dense matmul.
+/// Deployment baseline: materialize f32 `Ŵ`, then dense matmul (which
+/// itself runs the blocked `linalg` kernel these days — the comparison in
+/// `benches/kernels.rs` is therefore pure memory-traffic, not loop shape).
 pub fn dequant_matmul(x: &Tensor, m: &PackedMatrix) -> Result<Tensor> {
     check_shapes(x, m)?;
     x.matmul_nt(&m.dequantize()?)
 }
 
-/// Fused kernel over weight rows `[jlo, jhi)`: returns the `(n, jhi−jlo)`
-/// output block, column-major-free (row-major within the block).
+/// Row-sums of the activation batch — the `Σ_t x[i][t]` half of the fused
+/// algebraic form, shared by the rowwise and panel kernels.
+fn row_sums(xv: &[f32], n: usize, k: usize) -> Vec<f32> {
+    (0..n).map(|i| xv[i * k..(i + 1) * k].iter().sum()).collect()
+}
+
+/// PR 2's original fused kernel: one weight row decoded at a time, scalar
+/// dots against every activation row.  Serial, whole-matrix.  Kept as the
+/// bit-exact oracle and bench baseline for the panel kernel ([`gemm_fused`]
+/// must match it exactly — same per-element accumulation order).
+pub fn gemm_fused_rowwise(x: &Tensor, m: &PackedMatrix) -> Result<Tensor> {
+    let (n, k) = check_shapes(x, m)?;
+    let rows = m.rows();
+    let xv = x.as_f32()?;
+    let sumx = row_sums(xv, n, k);
+    let mut out = vec![0.0f32; n * rows];
+    let mut buf = vec![0.0f32; k];
+    for j in 0..rows {
+        m.unpack_row(j, &mut buf);
+        let (s, z) = (m.scale()[j], m.zp()[j]);
+        for i in 0..n {
+            let xrow = &xv[i * k..(i + 1) * k];
+            let mut acc = 0.0f32;
+            for (&c, &xt) in buf.iter().zip(xrow) {
+                acc += c * xt;
+            }
+            out[i * rows + j] = s * (acc - z * sumx[i]);
+        }
+    }
+    Tensor::from_f32(out, &[n, rows])
+}
+
+/// Fused kernel over weight rows `[jlo, jhi)`: decode an
+/// [`linalg::NR`]-row panel of codes into the f32 scratch, contract with
+/// the shared register-tiled loop (or the gemv core at batch 1), apply the
+/// `s·(acc − z·Σx)` epilogue.  Returns the `(n, jhi − jlo)` output block
+/// (row-major within the block).
 fn fused_block(
     xv: &[f32],
     sumx: &[f32],
@@ -82,52 +132,59 @@ fn fused_block(
 ) -> Vec<f32> {
     let width = jhi - jlo;
     let mut out = vec![0.0f32; n * width];
-    let mut buf = vec![0.0f32; k];
-    for j in jlo..jhi {
-        m.unpack_row(j, &mut buf);
-        let (s, z) = (m.scale()[j], m.zp()[j]);
-        for i in 0..n {
-            let xrow = &xv[i * k..(i + 1) * k];
-            let mut acc = 0.0f32;
-            for (&c, &xt) in buf.iter().zip(xrow) {
-                acc += c * xt;
-            }
-            out[i * width + (j - jlo)] = s * (acc - z * sumx[i]);
+    let mut panel = vec![0.0f32; linalg::NR * k];
+    let mut tmp = vec![0.0f32; n * linalg::NR];
+    let mut j = jlo;
+    while j < jhi {
+        let nr = linalg::NR.min(jhi - j);
+        for p in 0..nr {
+            m.unpack_row(j + p, &mut panel[p * k..(p + 1) * k]);
         }
+        // no re-zeroing: both contraction paths below assign every element
+        // of tmp's active region exactly once (overwrite semantics)
+        if n == 1 {
+            // decode hot path: one activation row, no tile bookkeeping
+            linalg::gemv_nt(xv, &panel[..nr * k], k, nr, &mut tmp[..nr]);
+        } else {
+            linalg::gemm_nt_into(xv, &panel[..nr * k], n, k, nr, &mut tmp[..n * nr]);
+        }
+        for p in 0..nr {
+            let (s, z) = (m.scale()[j + p], m.zp()[j + p]);
+            for i in 0..n {
+                out[i * width + (j - jlo) + p] = s * (tmp[i * nr + p] - z * sumx[i]);
+            }
+        }
+        j += nr;
     }
     out
 }
 
 /// Fused dequant-GEMM `Y = X · Ŵᵀ` without materializing `Ŵ`; exact same
-/// shapes as [`Tensor::matmul_nt`] against the dequantized matrix.  Splits
-/// weight rows across `workers` pool threads when the problem is big enough
-/// to amortize the fan-out.
+/// shapes as [`Tensor::matmul_nt`] against the dequantized matrix.  Weight
+/// rows split across pool workers under the crate-wide [`Dispatch`] policy
+/// (serial below the shared flops threshold) — serial and parallel results
+/// are bit-identical.
 pub fn gemm_fused(x: &Tensor, m: &PackedMatrix, workers: usize) -> Result<Tensor> {
     let (n, k) = check_shapes(x, m)?;
     let rows = m.rows();
     let xv = x.as_f32()?;
-    let sumx: Vec<f32> = (0..n).map(|i| xv[i * k..(i + 1) * k].iter().sum()).collect();
-    let serial = workers <= 1 || rows < 2 * workers || n * rows * k < (1 << 16);
-    let out = if serial {
-        fused_block(xv, &sumx, n, k, m, 0, rows)
-    } else {
-        let chunk = rows.div_ceil(workers);
-        let ranges: Vec<(usize, usize)> = (0..workers)
-            .map(|w| (w * chunk, ((w + 1) * chunk).min(rows)))
-            .filter(|(lo, hi)| lo < hi)
-            .collect();
-        let blocks = pool::par_map(ranges.len(), &ranges, |_, &(lo, hi)| {
-            fused_block(xv, &sumx, n, k, m, lo, hi)
-        });
-        let mut out = vec![0.0f32; n * rows];
-        for (&(lo, hi), block) in ranges.iter().zip(&blocks) {
-            let width = hi - lo;
-            for i in 0..n {
-                out[i * rows + lo..i * rows + hi]
-                    .copy_from_slice(&block[i * width..(i + 1) * width]);
+    let sumx = row_sums(xv, n, k);
+    let out = match Dispatch::new(workers).panels(rows, n * rows * k) {
+        None => fused_block(xv, &sumx, n, k, m, 0, rows),
+        Some(ranges) => {
+            let blocks = pool::par_map(ranges.len(), &ranges, |_, &(lo, hi)| {
+                fused_block(xv, &sumx, n, k, m, lo, hi)
+            });
+            let mut out = vec![0.0f32; n * rows];
+            for (&(lo, hi), block) in ranges.iter().zip(&blocks) {
+                let width = hi - lo;
+                for i in 0..n {
+                    out[i * rows + lo..i * rows + hi]
+                        .copy_from_slice(&block[i * width..(i + 1) * width]);
+                }
             }
+            out
         }
-        out
     };
     Tensor::from_f32(out, &[n, rows])
 }
@@ -164,10 +221,21 @@ mod tests {
             .map_err(|e| e.to_string())?;
             let reference = gemm_ref(&x, &m).map_err(|e| e.to_string())?;
             let baseline = dequant_matmul(&x, &m).map_err(|e| e.to_string())?;
+            let rowwise = gemm_fused_rowwise(&x, &m).map_err(|e| e.to_string())?;
             for workers in [1usize, 4] {
                 let fused = gemm_fused(&x, &m, workers).map_err(|e| e.to_string())?;
                 if fused.shape() != reference.shape() {
                     return Err(format!("shape {:?} vs {:?}", fused.shape(), reference.shape()));
+                }
+                // the panel kernel must reproduce the rowwise oracle
+                // bit-for-bit: identical per-element accumulation order
+                if fused.as_f32().map_err(|e| e.to_string())?
+                    != rowwise.as_f32().map_err(|e| e.to_string())?
+                {
+                    return Err(format!(
+                        "panel kernel (workers={workers}) drifted from the rowwise oracle \
+                         ({bits}-bit {rows}×{cols}, batch {n})"
+                    ));
                 }
                 for (label, other) in [("ref", &reference), ("dequant", &baseline)] {
                     let d = fused.max_abs_diff(other).map_err(|e| e.to_string())?;
@@ -186,8 +254,9 @@ mod tests {
 
     #[test]
     fn parallel_split_covers_large_matrices() {
-        // big enough to cross the serial threshold: results must agree with
-        // the serial fused path exactly (same per-element op order).
+        // big enough to cross the shared dispatch threshold: results must
+        // agree with the serial fused path exactly (same per-element op
+        // order on both sides of the panel split).
         let mut rng = Pcg32::seeded(9);
         let m = random_packed(&mut rng, 96, 64, 4);
         let x = Tensor::from_f32((0..12 * 64).map(|_| rng.next_normal()).collect(), &[12, 64])
@@ -198,11 +267,38 @@ mod tests {
     }
 
     #[test]
+    fn batch1_gemv_path_matches_batched_rows() {
+        // the decode hot path: a single activation row must produce exactly
+        // the bits the same row yields inside a batch (the prefill/decode
+        // parity contract depends on this).
+        let mut rng = Pcg32::seeded(21);
+        for bits in [2u32, 4, 8] {
+            let m = random_packed(&mut rng, 33, 17, bits);
+            let batch = Tensor::from_f32(
+                (0..5 * 17).map(|_| rng.next_normal()).collect(),
+                &[5, 17],
+            )
+            .unwrap();
+            let full = gemm_fused(&batch, &m, 1).unwrap();
+            for i in 0..5 {
+                let row = batch.slice_rows(i, i + 1).unwrap();
+                let one = gemm_fused(&row, &m, 1).unwrap();
+                assert_eq!(
+                    one.as_f32().unwrap(),
+                    &full.as_f32().unwrap()[i * 33..(i + 1) * 33],
+                    "{bits}-bit batch-1 row {i} drifted from the batched result"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn shape_mismatch_rejected() {
         let mut rng = Pcg32::seeded(2);
         let m = random_packed(&mut rng, 4, 6, 4);
         let x = Tensor::from_f32(vec![0.0; 10], &[2, 5]).unwrap();
         assert!(gemm_fused(&x, &m, 1).is_err());
         assert!(gemm_ref(&x, &m).is_err());
+        assert!(gemm_fused_rowwise(&x, &m).is_err());
     }
 }

@@ -8,7 +8,11 @@
 //! the prompt, and every [`crate::infer::Engine::decode_step`] appends one
 //! row per block and attends the new token against everything cached — the
 //! causal mask degenerates to "attend to all", so the per-token cost is
-//! O(t) attention reads plus O(1) GEMM work in the generated length.
+//! O(t) attention reads plus O(1) GEMM work in the generated length.  The
+//! attention reads themselves are strided `crate::linalg::dot` calls over
+//! these buffers (`block::attn_score_row`) and the GEMMs take the batch-1
+//! gemv path — the decode loop runs on the same kernel core as everything
+//! else, with zero per-token allocation against the cache.
 //!
 //! [`KvCache`] tracks the committed token position across blocks and
 //! validates that every block advanced in lockstep (a desynchronized cache

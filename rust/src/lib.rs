@@ -26,7 +26,9 @@
 //!
 //! The build image vendors only in-tree crates (no crates.io access), so the
 //! substrates usually pulled from the registry are implemented here from
-//! scratch: [`tensor`] (n-d arrays + matmuls), [`ser`] (JSON + the FXT
+//! scratch: [`tensor`] (n-d arrays) over [`linalg`] (the register-tiled
+//! blocked-GEMM core + the one parallel-dispatch policy every matmul in the
+//! crate shares), [`ser`] (JSON + the FXT
 //! tensor container), [`config`] (layered TOML-subset), [`cli`], [`util`]
 //! (PCG RNG, stats, thread pool, property-test harness), [`report`]
 //! (markdown/CSV emitters), plus a minimal vendored `anyhow` and a
@@ -38,6 +40,7 @@ pub mod config;
 pub mod coordinator;
 pub mod eval;
 pub mod infer;
+pub mod linalg;
 pub mod manifest;
 pub mod quant;
 pub mod recon;

@@ -1,0 +1,132 @@
+//! The single parallel-dispatch policy behind every matmul (DESIGN.md
+//! §Compute-Kernels).
+//!
+//! Before this module each kernel family carried its own ad-hoc serial
+//! heuristic — `infer/kernels.rs` went serial below `n·rows·k < 2¹⁶`
+//! mul-adds, the reconstruction matmuls below `m·r < 2¹⁴` *output elements*
+//! (ignoring k entirely), and the backward-pass matmuls never parallelized
+//! at all.  [`Dispatch`] replaces all of them: one flops threshold
+//! ([`PAR_FLOPS_MIN`]), one fan-out mechanism (output-row panels over
+//! [`crate::util::pool`] scoped workers, each writing its own disjoint
+//! panel of the output buffer).
+//!
+//! Parallel results are bit-identical to serial ones: the panel split only
+//! decides *which worker* computes an output row — every element still sums
+//! its contraction axis with one accumulator in ascending order
+//! (`linalg::micro`), so no reduction ever crosses a panel boundary.
+
+use crate::util::pool;
+
+/// Mul-adds below which every kernel stays serial.  The pool fan-out costs
+/// tens of microseconds of spawn/join; a contraction this small finishes
+/// faster than the fan-out itself.  One constant for the whole crate.
+pub const PAR_FLOPS_MIN: usize = 1 << 16;
+
+/// The crate-wide matmul dispatch policy: a worker budget plus the shared
+/// serial/parallel decision.  Construct with an explicit worker count
+/// ([`Dispatch::new`], e.g. from a `--workers` flag), the machine default
+/// ([`Dispatch::auto`]), or force serial execution ([`Dispatch::serial`]).
+#[derive(Clone, Copy, Debug)]
+pub struct Dispatch {
+    workers: usize,
+}
+
+impl Dispatch {
+    /// Policy with an explicit worker budget (clamped to ≥ 1).
+    pub fn new(workers: usize) -> Dispatch {
+        Dispatch { workers: workers.max(1) }
+    }
+
+    /// Always-serial policy (single worker).
+    pub fn serial() -> Dispatch {
+        Dispatch { workers: 1 }
+    }
+
+    /// Policy sized to the machine ([`pool::default_workers`]).
+    pub fn auto() -> Dispatch {
+        Dispatch::new(pool::default_workers())
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The serial/parallel decision: split `rows` output rows into
+    /// per-worker panels, or `None` when the problem should run serial —
+    /// a single worker, too few rows to split (`rows < 2·workers`), or too
+    /// little work to amortize the fan-out (`flops < PAR_FLOPS_MIN`).
+    pub fn panels(&self, rows: usize, flops: usize) -> Option<Vec<(usize, usize)>> {
+        if self.workers <= 1 || rows < 2 * self.workers || flops < PAR_FLOPS_MIN {
+            return None;
+        }
+        let chunk = rows.div_ceil(self.workers);
+        Some(
+            (0..self.workers)
+                .map(|w| (w * chunk, ((w + 1) * chunk).min(rows)))
+                .filter(|(lo, hi)| lo < hi)
+                .collect(),
+        )
+    }
+
+    /// Run `kernel` over the `(rows, cols)` row-major output buffer `out`:
+    /// in place when [`Dispatch::panels`] says serial, otherwise fanned out
+    /// over the pool with each worker writing its own disjoint row panel.
+    /// `kernel(lo, hi, panel)` computes global output rows `[lo, hi)` into
+    /// `panel` (local row 0 = global row `lo`).
+    pub fn run_rows(
+        &self,
+        rows: usize,
+        cols: usize,
+        flops: usize,
+        out: &mut [f32],
+        kernel: impl Fn(usize, usize, &mut [f32]) + Sync,
+    ) {
+        debug_assert_eq!(out.len(), rows * cols);
+        match self.panels(rows, flops) {
+            None => kernel(0, rows, out),
+            Some(ranges) => pool::par_panels(out, cols, &ranges, |(lo, hi), panel| {
+                kernel(lo, hi, panel)
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_or_single_worker_stays_serial() {
+        assert!(Dispatch::serial().panels(1024, usize::MAX).is_none());
+        assert!(Dispatch::new(4).panels(7, usize::MAX).is_none(), "too few rows to split");
+        assert!(Dispatch::new(4).panels(1024, PAR_FLOPS_MIN - 1).is_none(), "below threshold");
+        assert!(Dispatch::new(0).workers() == 1, "worker budget clamps to 1");
+    }
+
+    #[test]
+    fn panels_cover_rows_exactly_once() {
+        let d = Dispatch::new(4);
+        let ranges = d.panels(10, PAR_FLOPS_MIN).expect("should parallelize");
+        assert_eq!(ranges.first().map(|r| r.0), Some(0));
+        assert_eq!(ranges.last().map(|r| r.1), Some(10));
+        for w in ranges.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "panels must tile contiguously");
+        }
+    }
+
+    #[test]
+    fn run_rows_serial_and_parallel_agree() {
+        // kernel writes row index into every slot: panel offsets must line up
+        let fill = |lo: usize, _hi: usize, panel: &mut [f32]| {
+            for (i, row) in panel.chunks_mut(3).enumerate() {
+                row.fill((lo + i) as f32);
+            }
+        };
+        let mut serial = vec![0.0f32; 24 * 3];
+        Dispatch::serial().run_rows(24, 3, usize::MAX, &mut serial, fill);
+        let mut par = vec![0.0f32; 24 * 3];
+        Dispatch::new(4).run_rows(24, 3, usize::MAX, &mut par, fill);
+        assert_eq!(serial, par);
+        assert_eq!(serial[23 * 3], 23.0);
+    }
+}

@@ -1,0 +1,322 @@
+//! Register-tiled f32 micro-kernels — the one tile loop behind every matmul
+//! in the crate (DESIGN.md §Compute-Kernels).
+//!
+//! Every kernel here — the [`MR`]×[`NR`] register tile, the edge tiles, the
+//! [`gemv_nt`]/[`gemv_nn`] single-row paths, and the shared [`dot`] core —
+//! keeps **one accumulator per output element and sums the contraction axis
+//! in ascending order**.  That single invariant is what makes the crate's
+//! parity pins hold *by construction* instead of by tolerance:
+//!
+//! * serial ≡ parallel: row-panel fan-out never changes which products feed
+//!   an element, or in what order;
+//! * batch-1 gemv ≡ the same row of a batched GEMM (the prefill/decode
+//!   bit-identity contract in `rust/tests/generate.rs`);
+//! * blocked ≡ the naive triple-loop oracles, bit-for-bit
+//!   (`rust/tests/kernels.rs`).
+//!
+//! The speedup over the naive loops comes from instruction-level
+//! parallelism, not from reassociation: the tile holds MR·NR *independent*
+//! accumulator chains in registers, so the CPU (and the auto-vectorizer,
+//! which may vectorize across the NR accumulators without touching any
+//! single chain's order) is never stalled on one chain's add latency, and
+//! each k step streams only MR + NR values for MR·NR multiply-adds.
+
+#![allow(clippy::too_many_arguments)]
+
+/// Micro-tile rows (output rows per register block).
+pub const MR: usize = 4;
+
+/// Micro-tile columns (output columns per register block).
+pub const NR: usize = 8;
+
+/// Sequential dot product — THE canonical contraction: one accumulator,
+/// ascending index.  Shared verbatim by the gemv paths, the attention score
+/// core (`block::attn_score_row`), and (element-wise) the register tiles.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Single-row `y = x · Bᵀ` (`x: k`, `B: (r, k)` row-major, `y: r`): one
+/// [`dot`] per weight row, B streamed exactly once — the batch-1 fast path
+/// behind decode-step projections and one-row lm-head chunks, where tile
+/// bookkeeping would cost more than it buys.
+#[inline]
+pub fn gemv_nt(x: &[f32], b: &[f32], k: usize, r: usize, out: &mut [f32]) {
+    debug_assert!(x.len() == k && b.len() == r * k && out.len() == r);
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = dot(x, &b[j * k..j * k + k]);
+    }
+}
+
+/// Single-row `y = x · B` (`x: k`, `B: (k, c)` row-major, `y: c`,
+/// pre-zeroed): saxpy over B's rows, ascending `t` per element.
+#[inline]
+pub fn gemv_nn(x: &[f32], b: &[f32], k: usize, c: usize, out: &mut [f32]) {
+    debug_assert!(x.len() == k && b.len() == k * c && out.len() == c);
+    for (t, &xv) in x.iter().enumerate() {
+        let brow = &b[t * c..t * c + c];
+        for (o, &bv) in out.iter_mut().zip(brow) {
+            *o += xv * bv;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NT: C[m, r] = A[m, k] · B[r, k]ᵀ   (both operands row-contiguous)
+// ---------------------------------------------------------------------------
+
+/// Blocked NT kernel over output rows `[mlo, mhi)`, writing the
+/// `(mhi − mlo, r)` row panel `out` (overwrite semantics: every element is
+/// assigned exactly once).
+pub fn gemm_nt_panel(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    r: usize,
+    mlo: usize,
+    mhi: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), (mhi - mlo) * r);
+    let mut i = mlo;
+    let mut oi = 0usize;
+    while i < mhi {
+        let mr = MR.min(mhi - i);
+        let mut j = 0usize;
+        while j < r {
+            let nr = NR.min(r - j);
+            if mr == MR && nr == NR {
+                tile_nt(a, b, k, r, i, j, out, oi);
+            } else {
+                tile_nt_edge(a, b, k, r, i, j, mr, nr, out, oi);
+            }
+            j += nr;
+        }
+        i += mr;
+        oi += mr;
+    }
+}
+
+#[inline]
+fn tile_nt(a: &[f32], b: &[f32], k: usize, r: usize, i0: usize, j0: usize, out: &mut [f32], oi: usize) {
+    let ar: [&[f32]; MR] = core::array::from_fn(|ii| &a[(i0 + ii) * k..(i0 + ii) * k + k]);
+    let br: [&[f32]; NR] = core::array::from_fn(|jj| &b[(j0 + jj) * k..(j0 + jj) * k + k]);
+    let mut acc = [[0.0f32; NR]; MR];
+    for t in 0..k {
+        let av = [ar[0][t], ar[1][t], ar[2][t], ar[3][t]];
+        let bv = [br[0][t], br[1][t], br[2][t], br[3][t], br[4][t], br[5][t], br[6][t], br[7][t]];
+        for (accrow, &a_t) in acc.iter_mut().zip(&av) {
+            for (c, &b_t) in accrow.iter_mut().zip(&bv) {
+                *c += a_t * b_t;
+            }
+        }
+    }
+    for (ii, accrow) in acc.iter().enumerate() {
+        let orow = &mut out[(oi + ii) * r + j0..(oi + ii) * r + j0 + NR];
+        for (o, &v) in orow.iter_mut().zip(accrow) {
+            *o = v;
+        }
+    }
+}
+
+#[inline]
+fn tile_nt_edge(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    r: usize,
+    i0: usize,
+    j0: usize,
+    mr: usize,
+    nr: usize,
+    out: &mut [f32],
+    oi: usize,
+) {
+    for ii in 0..mr {
+        let arow = &a[(i0 + ii) * k..(i0 + ii) * k + k];
+        for jj in 0..nr {
+            let brow = &b[(j0 + jj) * k..(j0 + jj) * k + k];
+            out[(oi + ii) * r + j0 + jj] = dot(arow, brow);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NN: C[m, c] = A[m, k] · B[k, c]
+// ---------------------------------------------------------------------------
+
+/// Blocked NN kernel over output rows `[mlo, mhi)`, writing the
+/// `(mhi − mlo, c)` row panel `out` (overwrite semantics: every element is
+/// assigned exactly once).
+pub fn gemm_nn_panel(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    c: usize,
+    mlo: usize,
+    mhi: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), (mhi - mlo) * c);
+    let mut i = mlo;
+    let mut oi = 0usize;
+    while i < mhi {
+        let mr = MR.min(mhi - i);
+        let mut j = 0usize;
+        while j < c {
+            let nr = NR.min(c - j);
+            if mr == MR && nr == NR {
+                tile_nn(a, b, k, c, i, j, out, oi);
+            } else {
+                tile_nn_edge(a, b, k, c, i, j, mr, nr, out, oi);
+            }
+            j += nr;
+        }
+        i += mr;
+        oi += mr;
+    }
+}
+
+#[inline]
+fn tile_nn(a: &[f32], b: &[f32], k: usize, c: usize, i0: usize, j0: usize, out: &mut [f32], oi: usize) {
+    let ar: [&[f32]; MR] = core::array::from_fn(|ii| &a[(i0 + ii) * k..(i0 + ii) * k + k]);
+    let mut acc = [[0.0f32; NR]; MR];
+    for t in 0..k {
+        let brow = &b[t * c + j0..t * c + j0 + NR];
+        let av = [ar[0][t], ar[1][t], ar[2][t], ar[3][t]];
+        for (accrow, &a_t) in acc.iter_mut().zip(&av) {
+            for (acc_c, &b_t) in accrow.iter_mut().zip(brow) {
+                *acc_c += a_t * b_t;
+            }
+        }
+    }
+    for (ii, accrow) in acc.iter().enumerate() {
+        let orow = &mut out[(oi + ii) * c + j0..(oi + ii) * c + j0 + NR];
+        for (o, &v) in orow.iter_mut().zip(accrow) {
+            *o = v;
+        }
+    }
+}
+
+#[inline]
+fn tile_nn_edge(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    c: usize,
+    i0: usize,
+    j0: usize,
+    mr: usize,
+    nr: usize,
+    out: &mut [f32],
+    oi: usize,
+) {
+    for ii in 0..mr {
+        let arow = &a[(i0 + ii) * k..(i0 + ii) * k + k];
+        for jj in 0..nr {
+            let mut acc = 0.0f32;
+            for (t, &av) in arow.iter().enumerate() {
+                acc += av * b[t * c + j0 + jj];
+            }
+            out[(oi + ii) * c + j0 + jj] = acc;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TN: C[m, c] = A[n, m]ᵀ · B[n, c]
+// ---------------------------------------------------------------------------
+
+/// Blocked TN kernel over output rows `[mlo, mhi)` (columns of A), writing
+/// the `(mhi − mlo, c)` row panel `out` (overwrite semantics: every element
+/// is assigned exactly once).
+pub fn gemm_tn_panel(
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    m: usize,
+    c: usize,
+    mlo: usize,
+    mhi: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), (mhi - mlo) * c);
+    let mut i = mlo;
+    let mut oi = 0usize;
+    while i < mhi {
+        let mr = MR.min(mhi - i);
+        let mut j = 0usize;
+        while j < c {
+            let nr = NR.min(c - j);
+            if mr == MR && nr == NR {
+                tile_tn(a, b, n, m, c, i, j, out, oi);
+            } else {
+                tile_tn_edge(a, b, n, m, c, i, j, mr, nr, out, oi);
+            }
+            j += nr;
+        }
+        i += mr;
+        oi += mr;
+    }
+}
+
+#[inline]
+fn tile_tn(
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    m: usize,
+    c: usize,
+    i0: usize,
+    j0: usize,
+    out: &mut [f32],
+    oi: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for t in 0..n {
+        let acol = &a[t * m + i0..t * m + i0 + MR];
+        let brow = &b[t * c + j0..t * c + j0 + NR];
+        for (accrow, &a_t) in acc.iter_mut().zip(acol) {
+            for (acc_c, &b_t) in accrow.iter_mut().zip(brow) {
+                *acc_c += a_t * b_t;
+            }
+        }
+    }
+    for (ii, accrow) in acc.iter().enumerate() {
+        let orow = &mut out[(oi + ii) * c + j0..(oi + ii) * c + j0 + NR];
+        for (o, &v) in orow.iter_mut().zip(accrow) {
+            *o = v;
+        }
+    }
+}
+
+#[inline]
+fn tile_tn_edge(
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    m: usize,
+    c: usize,
+    i0: usize,
+    j0: usize,
+    mr: usize,
+    nr: usize,
+    out: &mut [f32],
+    oi: usize,
+) {
+    for ii in 0..mr {
+        for jj in 0..nr {
+            let mut acc = 0.0f32;
+            for t in 0..n {
+                acc += a[t * m + i0 + ii] * b[t * c + j0 + jj];
+            }
+            out[(oi + ii) * c + j0 + jj] = acc;
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! Unified blocked-GEMM kernel core (DESIGN.md §Compute-Kernels).
+//!
+//! Every matmul in the repo — FlexRound reconstruction forwards/backwards
+//! (`Ŷ = X̃·Ŵᵀ` and its cotangents), block attention/MLP projections, the
+//! fused dequant-GEMM serving path, KV-cached decode, and the eval lm-head
+//! projection — bottoms out here:
+//!
+//! * [`micro`] — the register-tiled micro-kernel family ([`MR`]×[`NR`]
+//!   accumulator tiles, shared [`dot`]/gemv cores) behind [`gemm_nt`],
+//!   [`gemm_nn`] and [`gemm_tn`];
+//! * [`dispatch`] — the single serial/parallel policy ([`Dispatch`]):
+//!   one flops threshold ([`PAR_FLOPS_MIN`]), one output-row-panel fan-out
+//!   over [`crate::util::pool`];
+//! * batch-1 inputs skip tile bookkeeping entirely via the [`gemv_nt`] /
+//!   [`gemv_nn`] fast paths — the decode hot loop is one row at a time;
+//! * [`gemm_nt_ref`] / [`gemm_nn_ref`] / [`gemm_tn_ref`] — the naive triple
+//!   loops the blocked kernels replaced, retained **only** as correctness
+//!   oracles for `rust/tests/kernels.rs` and as the bench baseline for
+//!   `cargo bench --bench kernels`.
+//!
+//! All kernels keep one accumulator per output element, contraction index
+//! ascending, so blocked ≡ naive, serial ≡ parallel, and gemv ≡ batched-row
+//! results are bit-identical (see `micro`'s module docs for why that
+//! matters to the repo's parity pins).
+
+pub mod dispatch;
+pub mod micro;
+
+pub use dispatch::{Dispatch, PAR_FLOPS_MIN};
+pub use micro::{dot, gemv_nn, gemv_nt, MR, NR};
+
+/// `C[m, r] = A[m, k] · B[r, k]ᵀ` — both operands row-contiguous (the
+/// reconstruction and serving orientation).  Batch-1 dispatches to
+/// [`gemv_nt`]; larger problems run the blocked kernel under `d`'s policy.
+pub fn gemm_nt(a: &[f32], b: &[f32], m: usize, k: usize, r: usize, d: &Dispatch) -> Vec<f32> {
+    debug_assert!(a.len() == m * k && b.len() == r * k);
+    let mut out = vec![0.0f32; m * r];
+    if m == 1 {
+        micro::gemv_nt(a, b, k, r, &mut out);
+        return out;
+    }
+    d.run_rows(m, r, m * k * r, &mut out, |lo, hi, panel| {
+        micro::gemm_nt_panel(a, b, k, r, lo, hi, panel)
+    });
+    out
+}
+
+/// Serial blocked NT GEMM into a caller-owned buffer (`(m, r)` row-major;
+/// **overwrite semantics** — every element of `out` is assigned exactly
+/// once, so the caller need not zero it): the shared tile loop the fused
+/// dequant kernel runs over its decoded weight-row panels
+/// (`infer::kernels`).
+pub fn gemm_nt_into(a: &[f32], b: &[f32], m: usize, k: usize, r: usize, out: &mut [f32]) {
+    micro::gemm_nt_panel(a, b, k, r, 0, m, out)
+}
+
+/// `C[m, c] = A[m, k] · B[k, c]` (the activation-cotangent orientation
+/// `∂L/∂X = G · Ŵ`).
+pub fn gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, c: usize, d: &Dispatch) -> Vec<f32> {
+    debug_assert!(a.len() == m * k && b.len() == k * c);
+    let mut out = vec![0.0f32; m * c];
+    if m == 1 {
+        micro::gemv_nn(a, b, k, c, &mut out);
+        return out;
+    }
+    d.run_rows(m, c, m * k * c, &mut out, |lo, hi, panel| {
+        micro::gemm_nn_panel(a, b, k, c, lo, hi, panel)
+    });
+    out
+}
+
+/// `C[m, c] = A[n, m]ᵀ · B[n, c]` (the weight-cotangent orientation
+/// `∂L/∂Ŵ = Gᵀ · X`).
+pub fn gemm_tn(a: &[f32], b: &[f32], n: usize, m: usize, c: usize, d: &Dispatch) -> Vec<f32> {
+    debug_assert!(a.len() == n * m && b.len() == n * c);
+    let mut out = vec![0.0f32; m * c];
+    d.run_rows(m, c, n * m * c, &mut out, |lo, hi, panel| {
+        micro::gemm_tn_panel(a, b, n, m, c, lo, hi, panel)
+    });
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Naive oracles — the `Tensor::matmul_*` triple loops these kernels
+// replaced, retained for tests and benches only.  No production path calls
+// these.  One deliberate difference from the pre-refactor loops: the old
+// NN/TN kernels skipped `a == 0.0` terms, which the oracles (and the new
+// kernels) do not — so `0·∞ = NaN` propagates instead of vanishing and
+// `-0.0` sums are IEEE-exact.  The oracles pin the *plain-math* semantics,
+// not the old sparse-skip behavior.
+// ---------------------------------------------------------------------------
+
+/// Naive NT triple loop (test oracle / bench baseline).
+pub fn gemm_nt_ref(a: &[f32], b: &[f32], m: usize, k: usize, r: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * r];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..r {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (&x, &y) in arow.iter().zip(brow) {
+                acc += x * y;
+            }
+            out[i * r + j] = acc;
+        }
+    }
+    out
+}
+
+/// Naive NN triple loop (test oracle / bench baseline).
+pub fn gemm_nn_ref(a: &[f32], b: &[f32], m: usize, k: usize, c: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * c];
+    for i in 0..m {
+        let orow = &mut out[i * c..(i + 1) * c];
+        for t in 0..k {
+            let av = a[i * k + t];
+            let brow = &b[t * c..(t + 1) * c];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// Naive TN triple loop (test oracle / bench baseline).
+pub fn gemm_tn_ref(a: &[f32], b: &[f32], n: usize, m: usize, c: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * c];
+    for t in 0..n {
+        let arow = &a[t * m..(t + 1) * m];
+        let brow = &b[t * c..(t + 1) * c];
+        for (i, &av) in arow.iter().enumerate() {
+            let orow = &mut out[i * c..(i + 1) * c];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn randv(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_normal()).collect()
+    }
+
+    #[test]
+    fn blocked_matches_oracle_on_tile_edges() {
+        // dims straddling the 4×8 tile: full tiles, row edge, column edge
+        let mut rng = Pcg32::seeded(31);
+        for (m, k, r) in [(4, 8, 8), (5, 3, 9), (1, 7, 13), (8, 16, 8), (3, 1, 1), (9, 5, 17)] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, r * k);
+            assert_eq!(
+                gemm_nt(&a, &b, m, k, r, &Dispatch::serial()),
+                gemm_nt_ref(&a, &b, m, k, r),
+                "NT {m}×{k}·{r}ᵀ"
+            );
+            let bnn = randv(&mut rng, k * r);
+            assert_eq!(
+                gemm_nn(&a, &bnn, m, k, r, &Dispatch::serial()),
+                gemm_nn_ref(&a, &bnn, m, k, r),
+                "NN {m}×{k}·{k}×{r}"
+            );
+            let atn = randv(&mut rng, k * m);
+            let btn = randv(&mut rng, k * r);
+            assert_eq!(
+                gemm_tn(&atn, &btn, k, m, r, &Dispatch::serial()),
+                gemm_tn_ref(&atn, &btn, k, m, r),
+                "TN ({k}×{m})ᵀ·{k}×{r}"
+            );
+        }
+    }
+
+    #[test]
+    fn k_zero_yields_zeros() {
+        let out = gemm_nt(&[], &[], 3, 0, 5, &Dispatch::auto());
+        assert_eq!(out, vec![0.0; 15]);
+        let out = gemm_tn(&[], &[], 0, 2, 2, &Dispatch::auto());
+        assert_eq!(out, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn gemv_fast_path_equals_batched_row() {
+        let mut rng = Pcg32::seeded(77);
+        let (k, r) = (33, 21);
+        let x = randv(&mut rng, k);
+        let b = randv(&mut rng, r * k);
+        let via_gemm = gemm_nt(&x, &b, 1, k, r, &Dispatch::auto());
+        let mut via_gemv = vec![0.0f32; r];
+        gemv_nt(&x, &b, k, r, &mut via_gemv);
+        assert_eq!(via_gemm, via_gemv);
+        // the same row inside a batch produces the same bits
+        let mut batch = x.clone();
+        batch.extend(randv(&mut rng, 2 * k));
+        let full = gemm_nt(&batch, &b, 3, k, r, &Dispatch::serial());
+        assert_eq!(&full[..r], via_gemv.as_slice(), "batch-1 ≡ batched row 0");
+    }
+
+    #[test]
+    fn parallel_is_bit_identical_to_serial() {
+        let mut rng = Pcg32::seeded(5);
+        let (m, k, r) = (64, 48, 40); // above PAR_FLOPS_MIN
+        assert!(m * k * r >= PAR_FLOPS_MIN);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, r * k);
+        assert_eq!(
+            gemm_nt(&a, &b, m, k, r, &Dispatch::serial()),
+            gemm_nt(&a, &b, m, k, r, &Dispatch::new(4)),
+        );
+        let bnn = randv(&mut rng, k * r);
+        assert_eq!(
+            gemm_nn(&a, &bnn, m, k, r, &Dispatch::serial()),
+            gemm_nn(&a, &bnn, m, k, r, &Dispatch::new(4)),
+        );
+        let atn = randv(&mut rng, k * m);
+        assert_eq!(
+            gemm_tn(&atn, &bnn, k, m, r, &Dispatch::serial()),
+            gemm_tn(&atn, &bnn, k, m, r, &Dispatch::new(4)),
+        );
+    }
+
+    #[test]
+    fn dot_is_the_sequential_contraction() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32, 5.0, 6.0];
+        assert_eq!(dot(&a, &b), ((4.0 + 10.0) + 18.0));
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+}

@@ -44,6 +44,7 @@ pub mod adam;
 
 pub use adam::Adam;
 
+use crate::linalg;
 use crate::manifest::{PackEntry, UnitInfo};
 use crate::tensor::Tensor;
 use crate::util::pool;
@@ -348,27 +349,12 @@ fn add_bias_relu(mut y: Tensor, bias: Option<&Tensor>, relu: bool) -> Result<Ten
     Ok(y)
 }
 
-/// `A · Bᵀ`, fanned out over the existing [`crate::util::pool`] worker threads when
-/// the output is big enough to amortize the spawn (row-sliced; exact same
-/// result as the serial kernel).
+/// `A · Bᵀ` under an explicit worker budget — the crate-wide
+/// [`crate::linalg::Dispatch`] policy decides serial vs output-row-panel
+/// fan-out (exact same result either way; the old per-call-site row/element
+/// heuristic is gone).
 pub fn matmul_nt_par(a: &Tensor, b: &Tensor, workers: usize) -> Result<Tensor> {
-    let m = a.shape().first().copied().unwrap_or(0);
-    if workers <= 1
-        || a.ndim() != 2
-        || b.ndim() != 2
-        || m < 2 * workers
-        || m * b.shape()[0] < (1 << 14)
-    {
-        return a.matmul_nt(b);
-    }
-    let chunk = m.div_ceil(workers);
-    let ranges: Vec<(usize, usize)> =
-        (0..workers).map(|i| (i * chunk, ((i + 1) * chunk).min(m))).filter(|(lo, hi)| lo < hi).collect();
-    let parts = pool::par_map(workers, &ranges, |_, &(lo, hi)| {
-        a.slice_rows(lo, hi).and_then(|s| s.matmul_nt(b))
-    });
-    let ok: Vec<Tensor> = parts.into_iter().collect::<Result<_>>()?;
-    Tensor::concat_rows(&ok)
+    a.matmul_nt_with(b, &linalg::Dispatch::new(workers))
 }
 
 /// Full-precision unit forward: `x` through every layer's raw weights.
@@ -540,6 +526,9 @@ pub fn loss_and_grads(
     let n_inv = 2.0 / yhat.len() as f32;
     let mut g = yhat.zip(yb, move |a, b| n_inv * (a - b))?;
 
+    // backward matmuls share the forward's worker budget (the same
+    // crate-wide dispatch policy — they used to be unconditionally serial)
+    let disp = linalg::Dispatch::new(workers);
     let mut grads: Vec<Option<Tensor>> = params.iter().map(|_| None).collect();
     for li in (0..layers.len()).rev() {
         let l = &layers[li];
@@ -548,7 +537,7 @@ pub fn loss_and_grads(
             g = g.zip(&pres[li], |gi, pre| if pre > 0.0 { gi } else { 0.0 })?;
         }
         // ∂L/∂Ŵ = Gᵀ · X  (r, c)
-        let dwhat = g.matmul_tn(&acts[li])?;
+        let dwhat = g.matmul_tn_with(&acts[li], &disp)?;
         let fg = fq_backward(
             l.w,
             &params[s.s1],
@@ -572,7 +561,7 @@ pub fn loss_and_grads(
         }
         if li > 0 {
             // ∂L/∂X = G · Ŵ  (n, c) feeds the next layer down.
-            g = g.matmul_nn(&whats[li])?;
+            g = g.matmul_nn_with(&whats[li], &disp)?;
         }
     }
     Ok((loss, grads))

@@ -2,6 +2,7 @@
 //! reference quantizers used by tests and the grid-shift analysis.
 
 use super::{DType, Tensor};
+use crate::linalg::{self, Dispatch};
 use crate::Result;
 use anyhow::bail;
 
@@ -97,7 +98,11 @@ impl Tensor {
         Ok(s / a.len().max(1) as f32)
     }
 
-    /// Row-wise argmax over a 2-D tensor (logits → predictions).
+    /// Row-wise argmax over a 2-D tensor (logits → predictions).  Ties
+    /// break toward the **lowest** index and NaNs are never selected —
+    /// the same deterministic contract as `infer::generate::sample_token`'s
+    /// greedy path (break ties by token id), so argmax-based eval and
+    /// greedy decode agree on which token a tied logit row names.
     pub fn argmax_rows(&self) -> Result<Vec<usize>> {
         if self.ndim() != 2 {
             bail!("argmax_rows on {:?}", self.shape());
@@ -107,94 +112,73 @@ impl Tensor {
         Ok((0..n)
             .map(|i| {
                 let row = &v[i * c..(i + 1) * c];
-                row.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
-                    .map(|(j, _)| j)
-                    .unwrap_or(0)
+                let mut best = 0usize;
+                for (j, &x) in row.iter().enumerate() {
+                    let b = row[best];
+                    // strict > keeps the first maximum; a NaN never wins
+                    // over a number (and an all-NaN row stays at index 0)
+                    if (b.is_nan() && !x.is_nan()) || x > b {
+                        best = j;
+                    }
+                }
+                best
             })
             .collect())
     }
 
     /// `A · Bᵀ` for `A: (m, k)`, `B: (r, k)` → `(m, r)`.  The native
-    /// reconstruction hot path (`Ŷ = X̃ · Ŵᵀ`) — both operands are read
-    /// row-contiguously, so the naive triple loop is cache-friendly.
+    /// reconstruction hot path (`Ŷ = X̃ · Ŵᵀ`), routed through the blocked
+    /// [`crate::linalg`] kernel core under the machine-default dispatch
+    /// policy (single rows take the gemv fast path, big problems fan out
+    /// over the pool — results are bit-identical either way).
     pub fn matmul_nt(&self, b: &Tensor) -> Result<Tensor> {
+        self.matmul_nt_with(b, &Dispatch::auto())
+    }
+
+    /// [`Tensor::matmul_nt`] under an explicit dispatch policy (callers
+    /// that manage their own parallelism budget, e.g. the reconstruction
+    /// loop's `--workers`).
+    pub fn matmul_nt_with(&self, b: &Tensor, d: &Dispatch) -> Result<Tensor> {
         if self.ndim() != 2 || b.ndim() != 2 || self.shape()[1] != b.shape()[1] {
             bail!("matmul_nt shape mismatch {:?} vs {:?}", self.shape(), b.shape());
         }
         let (m, k) = (self.shape()[0], self.shape()[1]);
         let r = b.shape()[0];
-        let av = self.as_f32()?;
-        let bv = b.as_f32()?;
-        let mut out = vec![0.0f32; m * r];
-        for i in 0..m {
-            let arow = &av[i * k..(i + 1) * k];
-            for j in 0..r {
-                let brow = &bv[j * k..(j + 1) * k];
-                let mut acc = 0.0f32;
-                for t in 0..k {
-                    acc += arow[t] * brow[t];
-                }
-                out[i * r + j] = acc;
-            }
-        }
+        let out = linalg::gemm_nt(self.as_f32()?, b.as_f32()?, m, k, r, d);
         Tensor::from_f32(out, &[m, r])
     }
 
     /// `A · B` for `A: (m, k)`, `B: (k, c)` → `(m, c)`  (activation
-    /// cotangent: `∂L/∂X = G · Ŵ`).  Inner loops run saxpy-style over
-    /// contiguous rows of B.
+    /// cotangent: `∂L/∂X = G · Ŵ`), on the blocked [`crate::linalg`] core.
     pub fn matmul_nn(&self, b: &Tensor) -> Result<Tensor> {
+        self.matmul_nn_with(b, &Dispatch::auto())
+    }
+
+    /// [`Tensor::matmul_nn`] under an explicit dispatch policy.
+    pub fn matmul_nn_with(&self, b: &Tensor, d: &Dispatch) -> Result<Tensor> {
         if self.ndim() != 2 || b.ndim() != 2 || self.shape()[1] != b.shape()[0] {
             bail!("matmul_nn shape mismatch {:?} vs {:?}", self.shape(), b.shape());
         }
         let (m, k) = (self.shape()[0], self.shape()[1]);
         let c = b.shape()[1];
-        let av = self.as_f32()?;
-        let bv = b.as_f32()?;
-        let mut out = vec![0.0f32; m * c];
-        for i in 0..m {
-            let orow = &mut out[i * c..(i + 1) * c];
-            for t in 0..k {
-                let a = av[i * k + t];
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &bv[t * c..(t + 1) * c];
-                for j in 0..c {
-                    orow[j] += a * brow[j];
-                }
-            }
-        }
+        let out = linalg::gemm_nn(self.as_f32()?, b.as_f32()?, m, k, c, d);
         Tensor::from_f32(out, &[m, c])
     }
 
     /// `Aᵀ · B` for `A: (n, m)`, `B: (n, c)` → `(m, c)`  (weight cotangent:
-    /// `∂L/∂Ŵ = Gᵀ · X`).
+    /// `∂L/∂Ŵ = Gᵀ · X`), on the blocked [`crate::linalg`] core.
     pub fn matmul_tn(&self, b: &Tensor) -> Result<Tensor> {
+        self.matmul_tn_with(b, &Dispatch::auto())
+    }
+
+    /// [`Tensor::matmul_tn`] under an explicit dispatch policy.
+    pub fn matmul_tn_with(&self, b: &Tensor, d: &Dispatch) -> Result<Tensor> {
         if self.ndim() != 2 || b.ndim() != 2 || self.shape()[0] != b.shape()[0] {
             bail!("matmul_tn shape mismatch {:?} vs {:?}", self.shape(), b.shape());
         }
         let (n, m) = (self.shape()[0], self.shape()[1]);
         let c = b.shape()[1];
-        let av = self.as_f32()?;
-        let bv = b.as_f32()?;
-        let mut out = vec![0.0f32; m * c];
-        for t in 0..n {
-            let arow = &av[t * m..(t + 1) * m];
-            let brow = &bv[t * c..(t + 1) * c];
-            for i in 0..m {
-                let a = arow[i];
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = &mut out[i * c..(i + 1) * c];
-                for j in 0..c {
-                    orow[j] += a * brow[j];
-                }
-            }
-        }
+        let out = linalg::gemm_tn(self.as_f32()?, b.as_f32()?, n, m, c, d);
         Tensor::from_f32(out, &[m, c])
     }
 
@@ -519,6 +503,23 @@ mod tests {
         let tk = t.topk_rows(2).unwrap();
         assert_eq!(tk[0], vec![1, 2]);
         assert_eq!(tk[1], vec![0, 1]);
+    }
+
+    #[test]
+    fn argmax_rows_breaks_ties_low_and_skips_nan() {
+        // the sample_token contract: ties resolve to the lowest index, and
+        // NaN is never the answer (max_by used to return the *last* max)
+        let t = Tensor::from_f32(
+            vec![
+                1.0, 5.0, 5.0, 0.0, // tie between 1 and 2 → 1
+                f32::NAN, 2.0, 2.0, 1.0, // NaN prefix → first max at 1
+                3.0, f32::NAN, 3.0, 3.0, // NaN in the middle → 0
+                f32::NAN, f32::NAN, f32::NAN, f32::NAN, // all NaN → lowest index
+            ],
+            &[4, 4],
+        )
+        .unwrap();
+        assert_eq!(t.argmax_rows().unwrap(), vec![1, 1, 0, 0]);
     }
 
     #[test]

@@ -1,14 +1,22 @@
 //! A small scoped worker pool over std threads (rayon is not vendored).
 //!
 //! The PJRT client itself is single-threaded per executable here, but data
-//! preparation, metric reduction, and the analysis fan-outs (grid-shift
-//! histograms over many layers) parallelize across units.
+//! preparation, metric reduction, the analysis fan-outs (grid-shift
+//! histograms over many layers), and the `linalg` dispatch policy's
+//! output-row panels ([`par_panels`]) all parallelize across units.
+//!
+//! Scheduling is FIFO: jobs *start* in submission order, so a long-running
+//! early job overlaps the tail instead of being picked up last (the queue
+//! used to pop LIFO from the back of a `Vec`, which ran the first-submitted
+//! — typically largest — job on the last free worker).
 
+use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
 /// Run `jobs` closures on up to `workers` threads; returns results in job
-/// order.  Panics in jobs are propagated as Err strings.
+/// order.  Jobs are *started* in submission (FIFO) order.  Panics in jobs
+/// are propagated as Err strings.
 pub fn run_jobs<T: Send + 'static>(
     workers: usize,
     jobs: Vec<Box<dyn FnOnce() -> T + Send>>,
@@ -18,14 +26,14 @@ pub fn run_jobs<T: Send + 'static>(
         return Vec::new();
     }
     let workers = workers.clamp(1, n);
-    let queue = Arc::new(Mutex::new(jobs.into_iter().enumerate().collect::<Vec<_>>()));
+    let queue = Arc::new(Mutex::new(jobs.into_iter().enumerate().collect::<VecDeque<_>>()));
     let (tx, rx) = mpsc::channel::<(usize, T)>();
     std::thread::scope(|s| {
         for _ in 0..workers {
             let queue = Arc::clone(&queue);
             let tx = tx.clone();
             s.spawn(move || loop {
-                let job = queue.lock().expect("queue poisoned").pop();
+                let job = queue.lock().expect("queue poisoned").pop_front();
                 match job {
                     Some((i, f)) => {
                         let r = f();
@@ -46,7 +54,8 @@ pub fn run_jobs<T: Send + 'static>(
     })
 }
 
-/// Parallel map over a slice with index.
+/// Parallel map over a slice with index (FIFO by construction: workers pull
+/// the next unclaimed index off a shared counter).
 pub fn par_map<I: Sync, T: Send + 'static>(
     workers: usize,
     items: &[I],
@@ -89,9 +98,46 @@ pub fn par_map<I: Sync, T: Send + 'static>(
     })
 }
 
-/// Number of workers to use by default.
+/// Run `f` over disjoint row panels of the `(rows, cols)` row-major buffer
+/// `buf`, one scoped worker thread per range — the fan-out primitive behind
+/// `linalg::Dispatch`.  `ranges` must be ascending and non-overlapping
+/// (`linalg::Dispatch::panels` produces exactly that); each call
+/// `f((lo, hi), panel)` owns the `&mut` sub-slice holding rows `[lo, hi)`,
+/// so workers write results in place with no gather/copy step.
+pub fn par_panels<F>(buf: &mut [f32], cols: usize, ranges: &[(usize, usize)], f: F)
+where
+    F: Fn((usize, usize), &mut [f32]) + Sync,
+{
+    if ranges.len() <= 1 {
+        for &(lo, hi) in ranges {
+            f((lo, hi), &mut buf[lo * cols..hi * cols]);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut rest: &mut [f32] = buf;
+        let mut consumed = 0usize;
+        for &(lo, hi) in ranges {
+            debug_assert!(lo >= consumed && hi >= lo);
+            let r = std::mem::take(&mut rest);
+            let (_, r) = r.split_at_mut((lo - consumed) * cols);
+            let (panel, r) = r.split_at_mut((hi - lo) * cols);
+            rest = r;
+            consumed = hi;
+            let f = &f;
+            s.spawn(move || f((lo, hi), panel));
+        }
+    });
+}
+
+/// Number of workers to use by default.  Cached after the first call:
+/// `available_parallelism` is a syscall, and the matmul dispatch policy
+/// asks on every `Tensor::matmul_*` invocation.
 pub fn default_workers() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    static WORKERS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *WORKERS.get_or_init(|| {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
 }
 
 #[cfg(test)]
@@ -107,10 +153,52 @@ mod tests {
     }
 
     #[test]
+    fn fifo_scheduling_order() {
+        // Regression: the queue used to pop from the *back* of a Vec, so a
+        // single worker ran jobs in reverse submission order.  With one
+        // worker the start order is fully observable — it must be FIFO.
+        let started = Arc::new(Mutex::new(Vec::new()));
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..16usize)
+            .map(|i| {
+                let started = Arc::clone(&started);
+                Box::new(move || {
+                    started.lock().unwrap().push(i);
+                    i
+                }) as _
+            })
+            .collect();
+        let out = run_jobs(1, jobs);
+        assert_eq!(out, (0..16).collect::<Vec<_>>());
+        assert_eq!(
+            *started.lock().unwrap(),
+            (0..16).collect::<Vec<_>>(),
+            "jobs must start in submission order"
+        );
+    }
+
+    #[test]
     fn par_map_matches_serial() {
         let items: Vec<u64> = (0..100).collect();
         let out = par_map(8, &items, |_, &x| x * x);
         assert_eq!(out, items.iter().map(|&x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_panels_writes_disjoint_rows_in_place() {
+        let mut buf = vec![0.0f32; 10 * 2];
+        let ranges = [(0usize, 3usize), (3, 7), (7, 10)];
+        par_panels(&mut buf, 2, &ranges, |(lo, _hi), panel| {
+            for (i, row) in panel.chunks_mut(2).enumerate() {
+                row.fill((lo + i) as f32);
+            }
+        });
+        let want: Vec<f32> = (0..10).flat_map(|i| [i as f32, i as f32]).collect();
+        assert_eq!(buf, want);
+        // single-range call runs inline on the caller's thread
+        let mut one = vec![0.0f32; 4];
+        par_panels(&mut one, 2, &[(0, 2)], |_, panel| panel.fill(1.0));
+        assert_eq!(one, vec![1.0; 4]);
+        par_panels(&mut one, 2, &[], |_, _| unreachable!("no ranges, no calls"));
     }
 
     #[test]

@@ -1,0 +1,229 @@
+//! Kernel-parity suite: the blocked `linalg` core against the retained
+//! naive oracles, bit-for-bit, across every orientation the repo uses —
+//! plus the fused dequant path at all packed bit-widths and the batch-1
+//! gemv dispatch (DESIGN.md §Compute-Kernels).
+//!
+//! These pins are exact (`==`, not tolerance): every kernel keeps one
+//! accumulator per output element with the contraction index ascending, so
+//! blocked ≡ naive, serial ≡ parallel, and gemv ≡ batched-row hold by
+//! construction.  `verify.sh` runs this file as its fast kernel smoke gate.
+
+use flexround::infer::kernels::{gemm_fused, gemm_fused_rowwise, gemm_ref};
+use flexround::infer::PackedMatrix;
+use flexround::linalg::{self, Dispatch, PAR_FLOPS_MIN};
+use flexround::tensor::{qrange, Tensor};
+use flexround::util::prop::Prop;
+use flexround::util::rng::Pcg32;
+
+fn randt(rng: &mut Pcg32, rows: usize, cols: usize) -> Tensor {
+    Tensor::from_f32((0..rows * cols).map(|_| rng.next_normal()).collect(), &[rows, cols])
+        .expect("random tensor")
+}
+
+fn random_packed(rng: &mut Pcg32, rows: usize, cols: usize, bits: u32) -> PackedMatrix {
+    let (qmin, qmax) = qrange(bits, true);
+    let (qmin, qmax) = (qmin as i32, qmax as i32);
+    let span = (qmax - qmin + 1) as u32;
+    let codes: Vec<i32> = (0..rows * cols).map(|_| qmin + rng.below(span) as i32).collect();
+    let scale: Vec<f32> = (0..rows).map(|_| 0.02 + 0.3 * rng.next_f32()).collect();
+    let zp: Vec<f32> = (0..rows).map(|_| rng.below(3) as f32 - 1.0).collect();
+    PackedMatrix::pack(&codes, rows, cols, bits, qmin, scale, zp).expect("pack")
+}
+
+#[test]
+fn blocked_gemms_match_naive_oracles_bitwise() {
+    // random dims 1..=40 deliberately straddle the 4×8 tile in every way:
+    // full tiles, ragged row edges, ragged column edges, sub-tile problems
+    Prop::new("linalg::gemm_* ≡ naive oracles").cases(120).check(|rng| {
+        let m = 1 + rng.below(40) as usize;
+        let k = 1 + rng.below(40) as usize;
+        let r = 1 + rng.below(40) as usize;
+        let a = randt(rng, m, k);
+        let bt = randt(rng, r, k);
+        let nt = a.matmul_nt_with(&bt, &Dispatch::serial()).map_err(|e| e.to_string())?;
+        let nt_ref = linalg::gemm_nt_ref(
+            a.as_f32().map_err(|e| e.to_string())?,
+            bt.as_f32().map_err(|e| e.to_string())?,
+            m,
+            k,
+            r,
+        );
+        if nt.as_f32().map_err(|e| e.to_string())? != nt_ref.as_slice() {
+            return Err(format!("NT {m}×{k}·({r}×{k})ᵀ drifted from the naive oracle"));
+        }
+        let bn = randt(rng, k, r);
+        let nn = a.matmul_nn_with(&bn, &Dispatch::serial()).map_err(|e| e.to_string())?;
+        let nn_ref = linalg::gemm_nn_ref(
+            a.as_f32().map_err(|e| e.to_string())?,
+            bn.as_f32().map_err(|e| e.to_string())?,
+            m,
+            k,
+            r,
+        );
+        if nn.as_f32().map_err(|e| e.to_string())? != nn_ref.as_slice() {
+            return Err(format!("NN {m}×{k}·{k}×{r} drifted from the naive oracle"));
+        }
+        let at = randt(rng, k, m);
+        let tn = at.matmul_tn_with(&bn, &Dispatch::serial()).map_err(|e| e.to_string())?;
+        let tn_ref = linalg::gemm_tn_ref(
+            at.as_f32().map_err(|e| e.to_string())?,
+            bn.as_f32().map_err(|e| e.to_string())?,
+            k,
+            m,
+            r,
+        );
+        if tn.as_f32().map_err(|e| e.to_string())? != tn_ref.as_slice() {
+            return Err(format!("TN ({k}×{m})ᵀ·{k}×{r} drifted from the naive oracle"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn serial_and_parallel_dispatch_are_bit_identical() {
+    Prop::new("linalg serial ≡ parallel").cases(24).check(|rng| {
+        // dims chosen to clear the flops threshold so the pool actually
+        // fans out, with ragged edges to cross panel boundaries mid-tile
+        let m = 42 + rng.below(23) as usize;
+        let k = 42 + rng.below(23) as usize;
+        let r = 42 + rng.below(23) as usize;
+        assert!(m * k * r >= PAR_FLOPS_MIN, "{m}·{k}·{r} must clear the dispatch threshold");
+        let a = randt(rng, m, k);
+        let bt = randt(rng, r, k);
+        let s = a.matmul_nt_with(&bt, &Dispatch::serial()).map_err(|e| e.to_string())?;
+        let p = a.matmul_nt_with(&bt, &Dispatch::new(4)).map_err(|e| e.to_string())?;
+        if s.as_f32().map_err(|e| e.to_string())? != p.as_f32().map_err(|e| e.to_string())? {
+            return Err(format!("NT serial vs parallel drift at {m}×{k}×{r}"));
+        }
+        let bn = randt(rng, k, r);
+        let s = a.matmul_nn_with(&bn, &Dispatch::serial()).map_err(|e| e.to_string())?;
+        let p = a.matmul_nn_with(&bn, &Dispatch::new(3)).map_err(|e| e.to_string())?;
+        if s.as_f32().map_err(|e| e.to_string())? != p.as_f32().map_err(|e| e.to_string())? {
+            return Err(format!("NN serial vs parallel drift at {m}×{k}×{r}"));
+        }
+        let at = randt(rng, k, m);
+        let s = at.matmul_tn_with(&bn, &Dispatch::serial()).map_err(|e| e.to_string())?;
+        let p = at.matmul_tn_with(&bn, &Dispatch::new(5)).map_err(|e| e.to_string())?;
+        if s.as_f32().map_err(|e| e.to_string())? != p.as_f32().map_err(|e| e.to_string())? {
+            return Err(format!("TN serial vs parallel drift at {m}×{k}×{r}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn k_zero_contractions_are_well_defined_zeros() {
+    // a (3, 0)·(5, 0)ᵀ contraction is empty: the answer is all zeros, not
+    // an error or garbage — tile edges must tolerate empty k slices
+    let a = Tensor::from_f32(vec![], &[3, 0]).unwrap();
+    let b = Tensor::from_f32(vec![], &[5, 0]).unwrap();
+    let nt = a.matmul_nt(&b).unwrap();
+    assert_eq!(nt.shape(), &[3, 5]);
+    assert_eq!(nt.as_f32().unwrap(), &[0.0; 15]);
+    // NN with an empty inner axis, TN with zero shared rows
+    let bn = Tensor::from_f32(vec![], &[0, 4]).unwrap();
+    let nn = a.matmul_nn(&bn).unwrap();
+    assert_eq!(nn.shape(), &[3, 4]);
+    assert_eq!(nn.as_f32().unwrap(), &[0.0; 12]);
+    let at = Tensor::from_f32(vec![], &[0, 2]).unwrap();
+    let tn = at.matmul_tn(&bn).unwrap();
+    assert_eq!(tn.shape(), &[2, 4]);
+    assert_eq!(tn.as_f32().unwrap(), &[0.0; 8]);
+    // zero-row B: a (3, k)·(0, k)ᵀ product is a (3, 0) tensor
+    let a2 = Tensor::from_f32(vec![1.0; 6], &[3, 2]).unwrap();
+    let b0 = Tensor::from_f32(vec![], &[0, 2]).unwrap();
+    assert_eq!(a2.matmul_nt(&b0).unwrap().shape(), &[3, 0]);
+}
+
+#[test]
+fn batch1_rows_take_the_gemv_path_with_identical_bits() {
+    Prop::new("gemv dispatch ≡ batched rows").cases(40).check(|rng| {
+        let k = 1 + rng.below(50) as usize;
+        let r = 1 + rng.below(30) as usize;
+        let n = 2 + rng.below(5) as usize;
+        let x = randt(rng, n, k);
+        let b = randt(rng, r, k);
+        let full = x.matmul_nt_with(&b, &Dispatch::serial()).map_err(|e| e.to_string())?;
+        for i in 0..n {
+            let row = x.slice_rows(i, i + 1).map_err(|e| e.to_string())?;
+            // m == 1 dispatches to linalg::gemv_nt inside gemm_nt
+            let one = row.matmul_nt(&b).map_err(|e| e.to_string())?;
+            let fv = full.as_f32().map_err(|e| e.to_string())?;
+            if one.as_f32().map_err(|e| e.to_string())? != &fv[i * r..(i + 1) * r] {
+                return Err(format!("gemv row {i} ≠ batched row ({n}×{k}·{r}ᵀ)"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fused_panel_kernel_matches_oracles_at_all_packed_widths() {
+    Prop::new("fused panel ≡ rowwise ≡ scalar ref, 2/3/4/8-bit").cases(40).check(|rng| {
+        let bits = [2u32, 3, 4, 8][rng.below(4) as usize];
+        let rows = 1 + rng.below(24) as usize;
+        let cols = 1 + rng.below(40) as usize;
+        let n = 1 + rng.below(6) as usize;
+        let m = random_packed(rng, rows, cols, bits);
+        let x = randt(rng, n, cols);
+        let rowwise = gemm_fused_rowwise(&x, &m).map_err(|e| e.to_string())?;
+        let reference = gemm_ref(&x, &m).map_err(|e| e.to_string())?;
+        for workers in [1usize, 4] {
+            let fused = gemm_fused(&x, &m, workers).map_err(|e| e.to_string())?;
+            // bit-exact against the retained rowwise kernel
+            if fused.as_f32().map_err(|e| e.to_string())?
+                != rowwise.as_f32().map_err(|e| e.to_string())?
+            {
+                return Err(format!(
+                    "panel(workers={workers}) ≠ rowwise at {bits}-bit {rows}×{cols} batch {n}"
+                ));
+            }
+            // tolerance against the independent scalar reference (different
+            // algebraic form, so only ≤1e-4-close, as PR 2 pinned)
+            let d = fused.max_abs_diff(&reference).map_err(|e| e.to_string())?;
+            let tol = 1e-4 * (1.0 + reference.abs_max());
+            if d > tol {
+                return Err(format!(
+                    "panel vs scalar ref: max|Δ| {d} > {tol} at {bits}-bit {rows}×{cols}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fused_batch1_decode_path_is_bit_identical() {
+    // the gemv fast path inside gemm_fused is what decode_step runs; its
+    // bits must equal both the batched kernel's row and the rowwise oracle
+    let mut rng = Pcg32::seeded(97);
+    for bits in [2u32, 3, 4, 8] {
+        let m = random_packed(&mut rng, 48, 31, bits);
+        let batch = randt(&mut rng, 4, 31);
+        let full = gemm_fused(&batch, &m, 1).unwrap();
+        for i in 0..4 {
+            let row = batch.slice_rows(i, i + 1).unwrap();
+            let one = gemm_fused(&row, &m, 1).unwrap();
+            let oracle = gemm_fused_rowwise(&row, &m).unwrap();
+            assert_eq!(one.as_f32().unwrap(), oracle.as_f32().unwrap(), "{bits}-bit vs oracle");
+            assert_eq!(
+                one.as_f32().unwrap(),
+                &full.as_f32().unwrap()[i * 48..(i + 1) * 48],
+                "{bits}-bit batch-1 row {i} vs batched"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_serial_parallel_bit_identity_holds() {
+    // kernels.rs pinned this for the old kernel; re-pin on the panel kernel
+    let mut rng = Pcg32::seeded(13);
+    for bits in [4u32, 8] {
+        let m = random_packed(&mut rng, 128, 96, bits);
+        let x = randt(&mut rng, 16, 96);
+        let serial = gemm_fused(&x, &m, 1).unwrap();
+        let par = gemm_fused(&x, &m, 4).unwrap();
+        assert_eq!(serial.as_f32().unwrap(), par.as_f32().unwrap(), "{bits}-bit");
+    }
+}

@@ -5,6 +5,9 @@
 #
 # Steps:
 #   1. release build, default features (native + pjrt-stub scaffolding)
+#   1b. kernel-parity smoke: rust/tests/kernels.rs pins the blocked linalg
+#       core bit-exactly against the naive oracles (fast, fails early —
+#       a kernel regression should not wait for the full suite)
 #   2. full test suite (artifact tests self-skip when artifacts/ is absent)
 #   3. native-only build (--no-default-features): the backend must build
 #      with zero xla surface
@@ -13,8 +16,9 @@
 #   5. rustdoc with -D warnings: every doc reference must resolve
 #   6. clippy — BLOCKING for all of src/ (any clippy diagnostic anchored
 #      under rust/src/ fails the gate; promoted from the per-directory
-#      block/infer gate in PR 4); advisory with -D warnings for the
-#      remaining targets (benches/tests/examples)
+#      block/infer gate in PR 4 — this includes the new src/linalg/ kernel
+#      core); advisory with -D warnings for the remaining targets
+#      (benches/tests/examples)
 #   7. rustfmt check — advisory until the pre-existing tree is formatted
 #      (new code should be clean; the gate hardens once `cargo fmt` has
 #      been run repo-wide)
@@ -23,6 +27,9 @@ cd "$(dirname "$0")"
 
 echo "== cargo build --release =="
 cargo build --release
+
+echo "== kernel-parity smoke (blocked linalg vs naive oracles, bit-exact) =="
+cargo test -q --release --test kernels
 
 echo "== cargo test -q =="
 cargo test -q
