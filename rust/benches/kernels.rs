@@ -4,8 +4,14 @@
 //! * blocked `matmul_nt` (serial tile loop, and under the parallel
 //!   dispatch policy) vs the retained naive triple-loop oracle at
 //!   1024×1024·1024ᵀ;
+//! * the scalar tiles vs the runtime-detected SIMD arm on the same serial
+//!   1024³ NT problem, plus the batch-1 `gemv_nt` core at serving shapes
+//!   (hidden→hidden, up-/down-projection) — the acceptance numbers for the
+//!   ISA dispatch layer;
 //! * the fused dequant-GEMM panel kernel vs PR 2's rowwise fused kernel at
 //!   1024×1024, W4/W8, micro-batch 8;
+//! * the f32 panel kernel vs the integer-domain fused GEMM
+//!   (`gemm_fused_int`) at W4/W8, batch 1 and 8;
 //! * the batch-1 gemv decode path (what `Engine::decode_step` pays per
 //!   projection) at 1024×1024, W4/W8.
 //!
@@ -15,9 +21,12 @@
 //! Environment knobs:
 //!   FLEXROUND_BENCH_MS       per-measurement budget in ms (default 800)
 //!   FLEXROUND_BENCH_WORKERS  worker threads for parallel dispatch (default all)
+//!   FLEXROUND_FORCE_SCALAR   nonempty (≠"0") pins the *active* arm to the
+//!                            scalar tiles; the ISA section still pits both
+//!                            arms against each other via explicit pins
 
 use flexround::infer::{kernels, synthetic_model, PackedMatrix};
-use flexround::linalg::{self, Dispatch};
+use flexround::linalg::{self, simd, Dispatch, Isa};
 use flexround::ser::json::{self, Json};
 use flexround::tensor::Tensor;
 use flexround::util::pool;
@@ -83,6 +92,59 @@ fn main() {
         ("speedup_parallel_vs_naive", Json::from_f64(s_par)),
     ]);
 
+    // ---- scalar tiles vs detected SIMD arm, serial 1024³ NT ----
+    let vec_isa = Isa::detect();
+    println!(
+        "== scalar tiles vs detected SIMD arm ({}) — serial {DIM}×{DIM}·{DIM}ᵀ ==",
+        vec_isa.label()
+    );
+    let scalar_nt = bench("matmul_nt_scalar", budget, 50, || {
+        let _ = a.matmul_nt_with(&b, &Dispatch::serial().with_isa(Isa::Scalar)).expect("scalar");
+    });
+    println!("{}", scalar_nt.report());
+    let simd_nt = bench(&format!("matmul_nt_{}", vec_isa.label()), budget, 50, || {
+        let _ = a.matmul_nt_with(&b, &Dispatch::serial().with_isa(vec_isa)).expect("simd");
+    });
+    println!("{}", simd_nt.report());
+    let s_simd = scalar_nt.p50 / simd_nt.p50.max(1e-12);
+    println!("  → {} arm is {s_simd:.2}× the scalar tiles (serial NT)", vec_isa.label());
+    let isa_json = Json::object(vec![
+        ("dim", Json::from_f64(DIM as f64)),
+        ("isa", Json::from_str_val(vec_isa.label())),
+        ("scalar_serial", ms(&scalar_nt)),
+        ("simd_serial", ms(&simd_nt)),
+        ("speedup_simd_vs_scalar", Json::from_f64(s_simd)),
+    ]);
+
+    // ---- gemv_nt core at serving shapes, scalar vs SIMD ----
+    println!("== gemv_nt core, scalar vs {} (batch-1 serving shapes) ==", vec_isa.label());
+    let mut gemv_isa_rows: Vec<Json> = Vec::new();
+    for (k, r) in [(DIM, DIM), (DIM, 4 * DIM), (4 * DIM, DIM)] {
+        let x: Vec<f32> = (0..k).map(|_| rng.next_normal()).collect();
+        let w: Vec<f32> = (0..r * k).map(|_| rng.next_normal()).collect();
+        let mut out = vec![0.0f32; r];
+        let scalar_g = bench(&format!("gemv_nt_scalar_{k}x{r}"), budget, 10_000, || {
+            out.iter_mut().for_each(|o| *o = 0.0);
+            simd::gemv_nt(Isa::Scalar, &x, &w, k, r, &mut out);
+        });
+        println!("{}", scalar_g.report());
+        let mut out = vec![0.0f32; r];
+        let simd_g = bench(&format!("gemv_nt_{}_{k}x{r}", vec_isa.label()), budget, 10_000, || {
+            out.iter_mut().for_each(|o| *o = 0.0);
+            simd::gemv_nt(vec_isa, &x, &w, k, r, &mut out);
+        });
+        println!("{}", simd_g.report());
+        let s = scalar_g.p50 / simd_g.p50.max(1e-12);
+        println!("  → {s:.2}× at {k}→{r}");
+        gemv_isa_rows.push(Json::object(vec![
+            ("k", Json::from_f64(k as f64)),
+            ("r", Json::from_f64(r as f64)),
+            ("scalar", ms(&scalar_g)),
+            ("simd", ms(&simd_g)),
+            ("speedup_simd_vs_scalar", Json::from_f64(s)),
+        ]));
+    }
+
     // ---- fused panel kernel vs rowwise fused at 1024², W4/W8 ----
     let batch = 8usize;
     println!("== fused panel kernel vs rowwise fused ({DIM}×{DIM}, batch {batch}) ==");
@@ -118,6 +180,45 @@ fn main() {
         ]));
     }
 
+    // ---- f32 panel vs integer-domain fused GEMM, W4/W8 × batch {1, 8} ----
+    println!("== f32 panel vs integer-domain fused gemm ({DIM}×{DIM}) ==");
+    let mut int_rows: Vec<Json> = Vec::new();
+    for bits in [4u32, 8] {
+        let m = bench_matrix(bits, 7);
+        for batch in [1usize, 8] {
+            // f32 side: generic (non-integral) activations on the panel path
+            let xf = Tensor::from_f32(
+                (0..batch * DIM).map(|_| rng.next_normal()).collect(),
+                &[batch, DIM],
+            )
+            .expect("f32 activations");
+            // integer side: exact 8-bit-magnitude integer activations — the
+            // quantized-activation serving shape the integer domain targets
+            let xi = Tensor::from_f32(
+                (0..batch * DIM).map(|_| rng.below(255) as f32 - 127.0).collect(),
+                &[batch, DIM],
+            )
+            .expect("integer activations");
+            let f32_side = bench(&format!("fused_f32_w{bits}_b{batch}"), budget, 2_000, || {
+                let _ = kernels::gemm_fused(&xf, &m, 1).expect("f32 fused");
+            });
+            println!("{}", f32_side.report());
+            let int_side = bench(&format!("fused_int_w{bits}_b{batch}"), budget, 2_000, || {
+                let _ = kernels::gemm_fused_int(&xi, &m, 1).expect("int fused");
+            });
+            println!("{}", int_side.report());
+            let s = f32_side.p50 / int_side.p50.max(1e-12);
+            println!("  → integer domain is {s:.2}× the f32 panel (W{bits}, batch {batch})");
+            int_rows.push(Json::object(vec![
+                ("bits", Json::from_f64(bits as f64)),
+                ("batch", Json::from_f64(batch as f64)),
+                ("f32_panel", ms(&f32_side)),
+                ("integer", ms(&int_side)),
+                ("speedup_int_vs_f32", Json::from_f64(s)),
+            ]));
+        }
+    }
+
     // ---- batch-1 gemv decode path at 1024², W4/W8 ----
     println!("== gemv decode path (batch 1, {DIM}×{DIM}) ==");
     let mut gemv_rows: Vec<Json> = Vec::new();
@@ -146,7 +247,10 @@ fn main() {
         ("bench", Json::from_str_val("kernels")),
         ("workers", Json::from_f64(workers as f64)),
         ("matmul_nt_1024", matmul_json),
+        ("matmul_nt_isa", isa_json),
+        ("gemv_nt_isa", Json::Arr(gemv_isa_rows)),
         ("fused_1024", Json::Arr(fused_rows)),
+        ("fused_int_1024", Json::Arr(int_rows)),
         ("gemv_decode_1024", Json::Arr(gemv_rows)),
     ]);
     let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json");

@@ -9,10 +9,11 @@
 //! * [`dequant_matmul`] — the naive deployment baseline: materialize the
 //!   full f32 `Ŵ` (4 bytes/element), then run the dense
 //!   [`Tensor::matmul_nt`].
-//! * [`gemm_fused_rowwise`] — one weight row decoded at a time, a scalar
-//!   dot per activation row (PR 2's original fused kernel).  Retained as
-//!   the second oracle — it must stay *bit-identical* to the panel kernel
-//!   — and as the baseline for `cargo bench --bench kernels`.
+//! * [`gemm_fused_rowwise`] — one weight row decoded at a time, one
+//!   [`crate::linalg::simd::dot`] per activation row (PR 2's original fused
+//!   kernel, now ISA-routed).  Retained as the second oracle — it must stay
+//!   *bit-identical* to the panel kernel within an ISA arm — and as the
+//!   baseline for `cargo bench --bench kernels`.
 //! * [`gemm_fused`] — the production kernel: an [`linalg::NR`]-row panel of
 //!   weight codes is decoded into an L1-resident scratch, the shared
 //!   register-tiled loop ([`linalg::gemm_nt_into`]) contracts activations
@@ -26,17 +27,40 @@
 //!   so memory traffic stays the packed words (bits/8 bytes per weight)
 //!   instead of the dense f32 matrix.  Batch-1 inputs (the KV-cached
 //!   decode hot path, `Engine::decode_step`) skip the tile loop for the
-//!   shared [`linalg::gemv_nt`] core — same bits, no tile bookkeeping.
+//!   shared [`crate::linalg::simd::gemv_nt`] core — same bits, no tile
+//!   bookkeeping.
+//!
+//! # Integer domain
+//!
+//! When every activation is an exact integer (token one-hots, integer
+//! embeddings, quantized activations), [`gemm_fused`] drops the f32 tiles
+//! entirely and accumulates `Σ n·x` and `Σ x` on unpacked i32 codes
+//! ([`crate::linalg::simd::dot_i32`]), applying `s·(acc − z·Σx)` once per
+//! output element.  Integer addition is associative, so this path is
+//! **bit-exact** against [`gemm_fused_rowwise`] on every ISA arm: the
+//! auto-route only fires inside the f32 exactness window (all intermediate
+//! magnitudes `< 2²⁴`, see [`IntActs::capture`]'s limit), where f32
+//! arithmetic is itself exact and therefore order-independent — the i32
+//! accumulator and the f32 accumulator hold the *same* number, and the
+//! epilogue expression trees are identical.  [`gemm_fused_int`] exposes the
+//! integer kernel over its full domain (`|x| ≤ i32::MAX / max|code|`),
+//! where i32 accumulation may overflow: [`int_safe_k`] pins the safe
+//! contraction length and the kernel chunks K beyond it, widening each i32
+//! partial into an i64 total (the split-accumulator fallback) — still
+//! associative, still chunk-size-invariant.  At batch 1 the integer rowwise
+//! loop *is* the integer gemv decode fast path: one `dot_i32` per weight
+//! row, no tile bookkeeping to skip.
 //!
 //! Weight-row ranges fan out under the crate-wide [`Dispatch`] policy —
 //! the same flops threshold and pool fan-out as every other matmul (the
 //! old one-off `n·rows·k < 2¹⁶` cutoff lives on *as* that policy's
-//! [`crate::linalg::PAR_FLOPS_MIN`]).  Because every kernel sums k
-//! ascending with one accumulator per element, serial, parallel, rowwise,
-//! panel, and gemv paths are all bit-identical.
+//! [`crate::linalg::PAR_FLOPS_MIN`]).  Because every kernel gives each
+//! output element one fixed per-element reduction tree within an ISA arm,
+//! serial, parallel, rowwise, panel, and gemv paths are all bit-identical
+//! *per arm*; the integer path is bit-identical across arms too.
 
 use super::packed::PackedMatrix;
-use crate::linalg::{self, Dispatch};
+use crate::linalg::{self, simd, Dispatch, Isa};
 use crate::tensor::Tensor;
 use crate::util::pool;
 use crate::Result;
@@ -90,11 +114,18 @@ fn row_sums(xv: &[f32], n: usize, k: usize) -> Vec<f32> {
     (0..n).map(|i| xv[i * k..(i + 1) * k].iter().sum()).collect()
 }
 
-/// PR 2's original fused kernel: one weight row decoded at a time, scalar
-/// dots against every activation row.  Serial, whole-matrix.  Kept as the
-/// bit-exact oracle and bench baseline for the panel kernel ([`gemm_fused`]
-/// must match it exactly — same per-element accumulation order).
+/// PR 2's original fused kernel on the *active* ISA arm — see
+/// [`gemm_fused_rowwise_isa`].
 pub fn gemm_fused_rowwise(x: &Tensor, m: &PackedMatrix) -> Result<Tensor> {
+    gemm_fused_rowwise_isa(x, m, Isa::active())
+}
+
+/// One weight row decoded at a time, one ISA-routed dot per activation
+/// row.  Serial, whole-matrix.  Kept as the bit-exact oracle and bench
+/// baseline for the panel kernel: within an ISA arm, [`gemm_fused`] must
+/// match it exactly — the panel tiles give every output element the same
+/// per-element reduction tree this loop does.
+pub fn gemm_fused_rowwise_isa(x: &Tensor, m: &PackedMatrix, isa: Isa) -> Result<Tensor> {
     let (n, k) = check_shapes(x, m)?;
     let rows = m.rows();
     let xv = x.as_f32()?;
@@ -106,10 +137,7 @@ pub fn gemm_fused_rowwise(x: &Tensor, m: &PackedMatrix) -> Result<Tensor> {
         let (s, z) = (m.scale()[j], m.zp()[j]);
         for i in 0..n {
             let xrow = &xv[i * k..(i + 1) * k];
-            let mut acc = 0.0f32;
-            for (&c, &xt) in buf.iter().zip(xrow) {
-                acc += c * xt;
-            }
+            let acc = simd::dot(isa, &buf, xrow);
             out[i * rows + j] = s * (acc - z * sumx[i]);
         }
     }
@@ -118,9 +146,10 @@ pub fn gemm_fused_rowwise(x: &Tensor, m: &PackedMatrix) -> Result<Tensor> {
 
 /// Fused kernel over weight rows `[jlo, jhi)`: decode an
 /// [`linalg::NR`]-row panel of codes into the f32 scratch, contract with
-/// the shared register-tiled loop (or the gemv core at batch 1), apply the
-/// `s·(acc − z·Σx)` epilogue.  Returns the `(n, jhi − jlo)` output block
-/// (row-major within the block).
+/// the shared register-tiled loop (or the gemv core at batch 1) on `isa`,
+/// apply the `s·(acc − z·Σx)` epilogue.  Returns the `(n, jhi − jlo)`
+/// output block (row-major within the block).
+#[allow(clippy::too_many_arguments)]
 fn fused_block(
     xv: &[f32],
     sumx: &[f32],
@@ -129,6 +158,7 @@ fn fused_block(
     m: &PackedMatrix,
     jlo: usize,
     jhi: usize,
+    isa: Isa,
 ) -> Vec<f32> {
     let width = jhi - jlo;
     let mut out = vec![0.0f32; n * width];
@@ -144,9 +174,9 @@ fn fused_block(
         // of tmp's active region exactly once (overwrite semantics)
         if n == 1 {
             // decode hot path: one activation row, no tile bookkeeping
-            linalg::gemv_nt(xv, &panel[..nr * k], k, nr, &mut tmp[..nr]);
+            simd::gemv_nt(isa, xv, &panel[..nr * k], k, nr, &mut tmp[..nr]);
         } else {
-            linalg::gemm_nt_into(xv, &panel[..nr * k], n, k, nr, &mut tmp[..n * nr]);
+            linalg::gemm_nt_into(isa, xv, &panel[..nr * k], n, k, nr, &mut tmp[..n * nr]);
         }
         for p in 0..nr {
             let (s, z) = (m.scale()[j + p], m.zp()[j + p]);
@@ -159,31 +189,241 @@ fn fused_block(
     out
 }
 
+/// Stitch per-range output blocks (each `(n, hi − lo)` row-major) back into
+/// the `(n, rows)` output — shared by the f32 and integer parallel paths.
+fn gather_blocks(
+    n: usize,
+    rows: usize,
+    ranges: &[(usize, usize)],
+    blocks: &[Vec<f32>],
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * rows];
+    for (&(lo, hi), block) in ranges.iter().zip(blocks) {
+        let width = hi - lo;
+        for i in 0..n {
+            out[i * rows + lo..i * rows + hi]
+                .copy_from_slice(&block[i * width..(i + 1) * width]);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Integer domain
+// ---------------------------------------------------------------------------
+
+/// Largest code magnitude the matrix's grid can produce:
+/// `max(|qmin|, |qmin + 2^bits − 1|)`, clamped ≥ 1.
+fn code_mag(m: &PackedMatrix) -> i64 {
+    let qmin = m.qmin() as i64;
+    let qmax = qmin + (1i64 << m.bits()) - 1;
+    qmin.abs().max(qmax.abs()).max(1)
+}
+
+/// Activation-magnitude bound under which the whole fused contraction stays
+/// inside f32's exact-integer window: with `|x| ≤ exact_amax`, every
+/// product `|n·x| ≤ nmax·amax` and every partial sum
+/// `|Σ n·x| ≤ k·nmax·amax ≤ 2²⁴ − 1` is an integer f32 represents exactly,
+/// so f32 accumulation in *any* order equals the i32 result bit-for-bit.
+fn exact_amax(k: usize, nmax: i64) -> i64 {
+    ((1i64 << 24) - 1) / ((k.max(1) as i64) * nmax)
+}
+
+/// Longest contraction the plain i32 accumulator provably survives:
+/// `⌊i32::MAX / (code_mag · act_mag)⌋` terms of magnitude
+/// `≤ code_mag · act_mag` can never leave `[i32::MIN, i32::MAX]`, whatever
+/// their signs.  Beyond it the integer kernel chunks K and widens each i32
+/// partial into an i64 total.  Pinned worst cases (asserted in
+/// `rust/tests/kernels.rs`):
+///
+/// * W8 asymmetric grid (codes in `[0, 255]`) against 8-bit-magnitude
+///   activations (`|x| ≤ 127`): per-term bound `255·127 = 32385`, so
+///   `safe_k = ⌊2147483647 / 32385⌋ = 66_311` — every practical hidden
+///   width fits a single i32 accumulator;
+/// * the same grid against adversarial `|x| = 2²⁰` activations: per-term
+///   bound `255·2²⁰ = 267_386_880`, so `safe_k = 8` — the fallback is
+///   load-bearing, not theoretical.
+///
+/// Result clamps ≥ 1 so a single term (which by the explicit-API input
+/// bound `|x| ≤ i32::MAX / code_mag` cannot overflow) always passes.
+pub fn int_safe_k(code_mag: i64, act_mag: i64) -> usize {
+    let per = code_mag.max(1) * act_mag.max(1);
+    (((i32::MAX as i64) / per).max(1)) as usize
+}
+
+/// Activation batch captured into the integer domain: the i32 code view,
+/// per-row i64 sums (`Σ_t x[i][t]`), and the observed magnitude bound.
+struct IntActs {
+    q: Vec<i32>,
+    sumq: Vec<i64>,
+    amax: i64,
+}
+
+impl IntActs {
+    /// `Some` iff every activation is an exact integer with `|x| ≤ limit`
+    /// (so NaN/±inf/fractional batches — the common serving case — bail on
+    /// pass 1 without allocating; the f64 compare avoids f32→int cast
+    /// saturation for huge finite values).
+    fn capture(xv: &[f32], n: usize, k: usize, limit: i64) -> Option<IntActs> {
+        if limit < 1 {
+            return None;
+        }
+        let lim = limit as f64;
+        for &v in xv {
+            let d = v as f64;
+            // NaN: fract() is NaN ≠ 0; ±inf: likewise — both rejected here
+            if d.fract() != 0.0 || d.abs() > lim {
+                return None;
+            }
+        }
+        let mut q = Vec::with_capacity(xv.len());
+        let mut amax = 0i64;
+        for &v in xv {
+            let c = v as i64; // exact: v is integral with |v| ≤ limit
+            amax = amax.max(c.abs());
+            q.push(c as i32);
+        }
+        let sumq: Vec<i64> = (0..n)
+            .map(|i| q[i * k..(i + 1) * k].iter().map(|&c| c as i64).sum::<i64>())
+            .collect();
+        Some(IntActs { q, sumq, amax: amax.max(1) })
+    }
+}
+
+/// i32 panel dot with the overflow guard: a single [`simd::dot_i32`] when
+/// the whole contraction fits [`int_safe_k`], otherwise K chunked at
+/// `safe_k` with each i32 partial widened into the i64 total (the
+/// split-accumulator fallback).  Integer addition is associative, so every
+/// chunking — and every ISA arm — yields identical bits.
+fn dot_i32_widening(isa: Isa, a: &[i32], b: &[i32], safe_k: usize) -> i64 {
+    if a.len() <= safe_k {
+        return simd::dot_i32(isa, a, b) as i64;
+    }
+    a.chunks(safe_k)
+        .zip(b.chunks(safe_k))
+        .map(|(ca, cb)| simd::dot_i32(isa, ca, cb) as i64)
+        .sum()
+}
+
+/// Integer-domain fused kernel over weight rows `[jlo, jhi)`: decode row
+/// codes as raw i32, one [`dot_i32_widening`] per activation row, epilogue
+/// `s·(acc − z·Σx)` once per output element.  At `n == 1` this loop *is*
+/// the batch-1 integer gemv decode fast path — one integer dot per weight
+/// row, nothing to skip.
+#[allow(clippy::too_many_arguments)]
+fn int_block(
+    acts: &IntActs,
+    n: usize,
+    k: usize,
+    m: &PackedMatrix,
+    jlo: usize,
+    jhi: usize,
+    isa: Isa,
+    safe_k: usize,
+) -> Vec<f32> {
+    let width = jhi - jlo;
+    let mut out = vec![0.0f32; n * width];
+    let mut codes = vec![0i32; k];
+    for j in jlo..jhi {
+        m.unpack_row_i32(j, &mut codes);
+        let (s, z) = (m.scale()[j], m.zp()[j]);
+        for i in 0..n {
+            let xrow = &acts.q[i * k..(i + 1) * k];
+            let acc = dot_i32_widening(isa, &codes, xrow, safe_k);
+            // identical expression tree to the f32 epilogue: inside the
+            // exactness window `acc as f32` / `sumq as f32` are the very
+            // bits the f32 kernels accumulate, so the result is bit-exact
+            out[i * width + (j - jlo)] = s * (acc as f32 - z * (acts.sumq[i] as f32));
+        }
+    }
+    out
+}
+
+/// Shared integer-domain driver: weight rows fan out under `d` exactly like
+/// the f32 path, each worker running [`int_block`] over its range.
+fn gemm_int(acts: &IntActs, n: usize, k: usize, m: &PackedMatrix, d: &Dispatch) -> Vec<f32> {
+    let rows = m.rows();
+    let isa = d.isa();
+    let safe_k = int_safe_k(code_mag(m), acts.amax);
+    match d.panels(rows, n * rows * k) {
+        None => int_block(acts, n, k, m, 0, rows, isa, safe_k),
+        Some(ranges) => {
+            let blocks = pool::par_map(ranges.len(), &ranges, |_, &(lo, hi)| {
+                int_block(acts, n, k, m, lo, hi, isa, safe_k)
+            });
+            gather_blocks(n, rows, &ranges, &blocks)
+        }
+    }
+}
+
+/// Whether [`gemm_fused`] would take the integer-domain path for this
+/// input: every activation an exact integer inside the f32 exactness
+/// window for this matrix's grid and contraction length.
+pub fn int_gemm_eligible(x: &Tensor, m: &PackedMatrix) -> bool {
+    match check_shapes(x, m) {
+        Ok((n, k)) => x
+            .as_f32()
+            .map(|xv| IntActs::capture(xv, n, k, exact_amax(k, code_mag(m))).is_some())
+            .unwrap_or(false),
+        Err(_) => false,
+    }
+}
+
+/// Explicit integer-domain fused GEMM — see [`gemm_fused_int_with`].
+pub fn gemm_fused_int(x: &Tensor, m: &PackedMatrix, workers: usize) -> Result<Tensor> {
+    gemm_fused_int_with(x, m, &Dispatch::new(workers))
+}
+
+/// Explicit integer-domain fused GEMM over the kernel's *full* domain:
+/// activations must be exact integers with `|x| ≤ i32::MAX / max|code|`
+/// (the per-product i32 bound), which is far wider than [`gemm_fused`]'s
+/// auto-route window — beyond [`int_safe_k`] terms the kernel chunks K and
+/// widens partials into i64, then rounds once at the f32 epilogue.  Errors
+/// on non-integer or out-of-range activations instead of silently falling
+/// back.
+pub fn gemm_fused_int_with(x: &Tensor, m: &PackedMatrix, d: &Dispatch) -> Result<Tensor> {
+    let (n, k) = check_shapes(x, m)?;
+    let limit = (i32::MAX as i64) / code_mag(m);
+    let acts = match IntActs::capture(x.as_f32()?, n, k, limit) {
+        Some(a) => a,
+        None => bail!(
+            "integer fused gemm: every activation must be an exact integer with \
+             |x| ≤ {limit} (i32::MAX / max|code| for this {}-bit grid)",
+            m.bits()
+        ),
+    };
+    Tensor::from_f32(gemm_int(&acts, n, k, m, d), &[n, m.rows()])
+}
+
+/// Fused dequant-GEMM `Y = X · Ŵᵀ` without materializing `Ŵ` — see
+/// [`gemm_fused_with`].
+pub fn gemm_fused(x: &Tensor, m: &PackedMatrix, workers: usize) -> Result<Tensor> {
+    gemm_fused_with(x, m, &Dispatch::new(workers))
+}
+
 /// Fused dequant-GEMM `Y = X · Ŵᵀ` without materializing `Ŵ`; exact same
 /// shapes as [`Tensor::matmul_nt`] against the dequantized matrix.  Weight
-/// rows split across pool workers under the crate-wide [`Dispatch`] policy
-/// (serial below the shared flops threshold) — serial and parallel results
-/// are bit-identical.
-pub fn gemm_fused(x: &Tensor, m: &PackedMatrix, workers: usize) -> Result<Tensor> {
+/// rows split across pool workers under `d` (serial below the shared flops
+/// threshold) — serial and parallel results are bit-identical per ISA arm.
+/// Integral activation batches inside the f32 exactness window auto-route
+/// to the integer-domain kernel (bit-exact, see the module docs); all
+/// others run the f32 panel path on `d`'s ISA arm.
+pub fn gemm_fused_with(x: &Tensor, m: &PackedMatrix, d: &Dispatch) -> Result<Tensor> {
     let (n, k) = check_shapes(x, m)?;
     let rows = m.rows();
     let xv = x.as_f32()?;
+    if let Some(acts) = IntActs::capture(xv, n, k, exact_amax(k, code_mag(m))) {
+        return Tensor::from_f32(gemm_int(&acts, n, k, m, d), &[n, rows]);
+    }
     let sumx = row_sums(xv, n, k);
-    let out = match Dispatch::new(workers).panels(rows, n * rows * k) {
-        None => fused_block(xv, &sumx, n, k, m, 0, rows),
+    let isa = d.isa();
+    let out = match d.panels(rows, n * rows * k) {
+        None => fused_block(xv, &sumx, n, k, m, 0, rows, isa),
         Some(ranges) => {
             let blocks = pool::par_map(ranges.len(), &ranges, |_, &(lo, hi)| {
-                fused_block(xv, &sumx, n, k, m, lo, hi)
+                fused_block(xv, &sumx, n, k, m, lo, hi, isa)
             });
-            let mut out = vec![0.0f32; n * rows];
-            for (&(lo, hi), block) in ranges.iter().zip(&blocks) {
-                let width = hi - lo;
-                for i in 0..n {
-                    out[i * rows + lo..i * rows + hi]
-                        .copy_from_slice(&block[i * width..(i + 1) * width]);
-                }
-            }
-            out
+            gather_blocks(n, rows, &ranges, &blocks)
         }
     };
     Tensor::from_f32(out, &[n, rows])
@@ -229,6 +469,7 @@ mod tests {
                 }
                 // the panel kernel must reproduce the rowwise oracle
                 // bit-for-bit: identical per-element accumulation order
+                // (both run the active ISA arm here)
                 if fused.as_f32().map_err(|e| e.to_string())?
                     != rowwise.as_f32().map_err(|e| e.to_string())?
                 {
@@ -250,6 +491,57 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn int_path_routes_and_matches() {
+        // integral in-window activations: gemm_fused must take the integer
+        // route and still be bit-exact against the f32 rowwise oracle; the
+        // explicit integer API must agree with both.
+        Prop::new("integer auto-route ≡ rowwise, bitwise").cases(32).check(|rng| {
+            let bits = [2u32, 3, 4, 8][rng.below(4) as usize];
+            let rows = 1 + rng.below(16) as usize;
+            let cols = 1 + rng.below(32) as usize;
+            let n = 1 + rng.below(4) as usize;
+            let m = random_packed(rng, rows, cols, bits);
+            let amax = super::exact_amax(cols, super::code_mag(&m)).clamp(1, 50) as u32;
+            let x = Tensor::from_f32(
+                (0..n * cols)
+                    .map(|_| rng.below(2 * amax + 1) as f32 - amax as f32)
+                    .collect(),
+                &[n, cols],
+            )
+            .map_err(|e| e.to_string())?;
+            if !int_gemm_eligible(&x, &m) {
+                return Err(format!("{bits}-bit integral batch should be int-eligible"));
+            }
+            let rowwise = gemm_fused_rowwise(&x, &m).map_err(|e| e.to_string())?;
+            for workers in [1usize, 4] {
+                let auto = gemm_fused(&x, &m, workers).map_err(|e| e.to_string())?;
+                let explicit = gemm_fused_int(&x, &m, workers).map_err(|e| e.to_string())?;
+                if auto.as_f32().map_err(|e| e.to_string())?
+                    != rowwise.as_f32().map_err(|e| e.to_string())?
+                {
+                    return Err(format!(
+                        "integer auto-route drifted from rowwise ({bits}-bit {rows}×{cols})"
+                    ));
+                }
+                if explicit.as_f32().map_err(|e| e.to_string())?
+                    != auto.as_f32().map_err(|e| e.to_string())?
+                {
+                    return Err(format!(
+                        "gemm_fused_int disagrees with the auto route ({bits}-bit)"
+                    ));
+                }
+            }
+            Ok(())
+        });
+        // non-integral activations: not eligible, explicit API refuses
+        let mut rng = Pcg32::seeded(3);
+        let m = random_packed(&mut rng, 4, 6, 4);
+        let x = Tensor::from_f32(vec![0.5; 12], &[2, 6]).unwrap();
+        assert!(!int_gemm_eligible(&x, &m));
+        assert!(gemm_fused_int(&x, &m, 1).is_err());
     }
 
     #[test]
@@ -300,5 +592,6 @@ mod tests {
         assert!(gemm_fused(&x, &m, 1).is_err());
         assert!(gemm_ref(&x, &m).is_err());
         assert!(gemm_fused_rowwise(&x, &m).is_err());
+        assert!(gemm_fused_int(&x, &m, 1).is_err());
     }
 }

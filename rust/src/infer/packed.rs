@@ -192,6 +192,27 @@ impl PackedMatrix {
         }
     }
 
+    /// Decode row `r`'s codes as raw i32 into `out` (length `cols`) — the
+    /// integer-domain fused kernel's scratch-fill, same word walk as
+    /// [`PackedMatrix::unpack_row`] minus the f32 cast.
+    #[inline]
+    pub fn unpack_row_i32(&self, r: usize, out: &mut [i32]) {
+        debug_assert_eq!(out.len(), self.cols);
+        let cpw = codes_per_word(self.bits);
+        let mask = (1u32 << self.bits) - 1;
+        let words = &self.words[r * self.words_per_row..(r + 1) * self.words_per_row];
+        let mut t = 0usize;
+        for &w in words {
+            let mut v = w;
+            let lim = cpw.min(self.cols - t);
+            for _ in 0..lim {
+                out[t] = self.qmin + (v & mask) as i32;
+                v >>= self.bits;
+                t += 1;
+            }
+        }
+    }
+
     /// All codes, row-major (round-trip tests).
     pub fn unpack(&self) -> Vec<i32> {
         let mut out = Vec::with_capacity(self.rows * self.cols);

@@ -10,11 +10,19 @@
 //! [`crate::util::pool`] scoped workers, each writing its own disjoint
 //! panel of the output buffer).
 //!
-//! Parallel results are bit-identical to serial ones: the panel split only
-//! decides *which worker* computes an output row — every element still sums
-//! its contraction axis with one accumulator in ascending order
-//! (`linalg::micro`), so no reduction ever crosses a panel boundary.
+//! Parallel results are bit-identical to serial ones *within an ISA arm*:
+//! the panel split only decides *which worker* computes an output row —
+//! every element keeps the same per-element reduction tree on either side
+//! of the split (`linalg::micro` on the scalar arm, `linalg::simd` on the
+//! AVX2 arm), so no reduction ever crosses a panel boundary.
+//!
+//! Since the SIMD PR, a [`Dispatch`] also carries *which* instruction-set
+//! arm the kernels run on ([`Isa`]).  Constructors default to
+//! [`Isa::active`] (runtime detection, `FLEXROUND_FORCE_SCALAR` override);
+//! [`Dispatch::with_isa`] pins an explicit arm — that is how the
+//! differential kernel-parity harness runs the same problem on both arms.
 
+use super::simd::Isa;
 use crate::util::pool;
 
 /// Mul-adds below which every kernel stays serial.  The pool fan-out costs
@@ -22,24 +30,27 @@ use crate::util::pool;
 /// faster than the fan-out itself.  One constant for the whole crate.
 pub const PAR_FLOPS_MIN: usize = 1 << 16;
 
-/// The crate-wide matmul dispatch policy: a worker budget plus the shared
-/// serial/parallel decision.  Construct with an explicit worker count
-/// ([`Dispatch::new`], e.g. from a `--workers` flag), the machine default
-/// ([`Dispatch::auto`]), or force serial execution ([`Dispatch::serial`]).
+/// The crate-wide matmul dispatch policy: a worker budget, the ISA arm,
+/// and the shared serial/parallel decision.  Construct with an explicit
+/// worker count ([`Dispatch::new`], e.g. from a `--workers` flag), the
+/// machine default ([`Dispatch::auto`]), or force serial execution
+/// ([`Dispatch::serial`]); all three pick the ISA via [`Isa::active`],
+/// overridable per-policy with [`Dispatch::with_isa`].
 #[derive(Clone, Copy, Debug)]
 pub struct Dispatch {
     workers: usize,
+    isa: Isa,
 }
 
 impl Dispatch {
     /// Policy with an explicit worker budget (clamped to ≥ 1).
     pub fn new(workers: usize) -> Dispatch {
-        Dispatch { workers: workers.max(1) }
+        Dispatch { workers: workers.max(1), isa: Isa::active() }
     }
 
     /// Always-serial policy (single worker).
     pub fn serial() -> Dispatch {
-        Dispatch { workers: 1 }
+        Dispatch::new(1)
     }
 
     /// Policy sized to the machine ([`pool::default_workers`]).
@@ -47,8 +58,20 @@ impl Dispatch {
         Dispatch::new(pool::default_workers())
     }
 
+    /// Same policy pinned to an explicit ISA arm (test/bench control; the
+    /// production constructors all defer to [`Isa::active`]).
+    pub fn with_isa(mut self, isa: Isa) -> Dispatch {
+        self.isa = isa;
+        self
+    }
+
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// The instruction-set arm kernels under this policy run on.
+    pub fn isa(&self) -> Isa {
+        self.isa
     }
 
     /// The serial/parallel decision: split `rows` output rows into
@@ -101,6 +124,14 @@ mod tests {
         assert!(Dispatch::new(4).panels(7, usize::MAX).is_none(), "too few rows to split");
         assert!(Dispatch::new(4).panels(1024, PAR_FLOPS_MIN - 1).is_none(), "below threshold");
         assert!(Dispatch::new(0).workers() == 1, "worker budget clamps to 1");
+    }
+
+    #[test]
+    fn isa_override_sticks() {
+        let d = Dispatch::new(4).with_isa(Isa::Scalar);
+        assert_eq!(d.isa(), Isa::Scalar);
+        assert_eq!(d.workers(), 4);
+        assert_eq!(Dispatch::serial().isa(), Isa::active(), "default arm is the active one");
     }
 
     #[test]

@@ -1,5 +1,11 @@
-//! Register-tiled f32 micro-kernels — the one tile loop behind every matmul
-//! in the crate (DESIGN.md §Compute-Kernels).
+//! Scalar register-tiled f32 micro-kernels (DESIGN.md §Compute-Kernels).
+//!
+//! Since the SIMD PR this family is the **scalar ISA arm**: always
+//! available, selected by `FLEXROUND_FORCE_SCALAR` (or
+//! `Dispatch::with_isa(Isa::Scalar)`), and the oracle the AVX2 kernels in
+//! [`super::simd`] are differentially tested against.  Production matmuls
+//! route through `super::simd`'s `Isa`-taking wrappers and land here on the
+//! scalar arm.
 //!
 //! Every kernel here — the [`MR`]×[`NR`] register tile, the edge tiles, the
 //! [`gemv_nt`]/[`gemv_nn`] single-row paths, and the shared [`dot`] core —
@@ -29,9 +35,10 @@ pub const MR: usize = 4;
 /// Micro-tile columns (output columns per register block).
 pub const NR: usize = 8;
 
-/// Sequential dot product — THE canonical contraction: one accumulator,
-/// ascending index.  Shared verbatim by the gemv paths, the attention score
-/// core (`block::attn_score_row`), and (element-wise) the register tiles.
+/// Sequential dot product — THE canonical scalar contraction: one
+/// accumulator, ascending index.  Shared verbatim by the gemv paths and
+/// (element-wise) the register tiles; the attention score core reaches it
+/// through the ISA-routed `linalg::dot` on the scalar arm.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());

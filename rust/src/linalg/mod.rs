@@ -5,12 +5,17 @@
 //! fused dequant-GEMM serving path, KV-cached decode, and the eval lm-head
 //! projection — bottoms out here:
 //!
-//! * [`micro`] — the register-tiled micro-kernel family ([`MR`]×[`NR`]
-//!   accumulator tiles, shared [`dot`]/gemv cores) behind [`gemm_nt`],
-//!   [`gemm_nn`] and [`gemm_tn`];
+//! * [`micro`] — the scalar register-tiled micro-kernel family
+//!   ([`MR`]×[`NR`] accumulator tiles, shared [`dot`]/gemv cores): the
+//!   always-available ISA arm *and* the selectable oracle the SIMD arm is
+//!   differentially tested against;
+//! * [`simd`] — the runtime ISA probe ([`Isa`]) plus the AVX2 kernels; every
+//!   routing function there takes an explicit [`Isa`], and
+//!   `FLEXROUND_FORCE_SCALAR` pins the whole process to the scalar arm;
 //! * [`dispatch`] — the single serial/parallel policy ([`Dispatch`]):
 //!   one flops threshold ([`PAR_FLOPS_MIN`]), one output-row-panel fan-out
-//!   over [`crate::util::pool`];
+//!   over [`crate::util::pool`], and (since the SIMD PR) the ISA arm the
+//!   kernels run on ([`Dispatch::isa`]);
 //! * batch-1 inputs skip tile bookkeeping entirely via the [`gemv_nt`] /
 //!   [`gemv_nn`] fast paths — the decode hot loop is one row at a time;
 //! * [`gemm_nt_ref`] / [`gemm_nn_ref`] / [`gemm_tn_ref`] — the naive triple
@@ -18,40 +23,69 @@
 //!   oracles for `rust/tests/kernels.rs` and as the bench baseline for
 //!   `cargo bench --bench kernels`.
 //!
-//! All kernels keep one accumulator per output element, contraction index
-//! ascending, so blocked ≡ naive, serial ≡ parallel, and gemv ≡ batched-row
-//! results are bit-identical (see `micro`'s module docs for why that
-//! matters to the repo's parity pins).
+//! Within either ISA arm, every kernel gives each output element one fixed
+//! reduction tree (scalar: one accumulator, contraction ascending; AVX2:
+//! the per-element scheme in [`simd`]'s module docs), so serial ≡ parallel
+//! and gemv ≡ batched-row stay bit-identical on both arms.  Blocked ≡ naive
+//! is pinned with `==` on the *scalar* arm; the AVX2 arm is held to the
+//! scalar oracle under a ULP budget instead, because FMA contracts each
+//! multiply-add into one rounding (`rust/tests/kernels.rs`).
 
 pub mod dispatch;
 pub mod micro;
+pub mod simd;
 
 pub use dispatch::{Dispatch, PAR_FLOPS_MIN};
-pub use micro::{dot, gemv_nn, gemv_nt, MR, NR};
+pub use micro::{MR, NR};
+pub use simd::Isa;
+
+/// Sequential dot product on the active ISA arm — THE canonical
+/// contraction, shared by the gemv paths and the attention score core
+/// (`block::attn_score_row`).  Pin an arm explicitly via [`simd::dot`].
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    simd::dot(Isa::active(), a, b)
+}
+
+/// Single-row `y = x · Bᵀ` on the active ISA arm (overwrite semantics) —
+/// the batch-1 fast path behind decode-step projections and one-row
+/// lm-head chunks.  Pin an arm explicitly via [`simd::gemv_nt`].
+#[inline]
+pub fn gemv_nt(x: &[f32], b: &[f32], k: usize, r: usize, out: &mut [f32]) {
+    simd::gemv_nt(Isa::active(), x, b, k, r, out)
+}
+
+/// Single-row `y = x · B` on the active ISA arm (`out` pre-zeroed).  Pin an
+/// arm explicitly via [`simd::gemv_nn`].
+#[inline]
+pub fn gemv_nn(x: &[f32], b: &[f32], k: usize, c: usize, out: &mut [f32]) {
+    simd::gemv_nn(Isa::active(), x, b, k, c, out)
+}
 
 /// `C[m, r] = A[m, k] · B[r, k]ᵀ` — both operands row-contiguous (the
 /// reconstruction and serving orientation).  Batch-1 dispatches to
-/// [`gemv_nt`]; larger problems run the blocked kernel under `d`'s policy.
+/// [`gemv_nt`]; larger problems run the blocked kernel under `d`'s policy
+/// (worker budget *and* ISA arm).
 pub fn gemm_nt(a: &[f32], b: &[f32], m: usize, k: usize, r: usize, d: &Dispatch) -> Vec<f32> {
     debug_assert!(a.len() == m * k && b.len() == r * k);
     let mut out = vec![0.0f32; m * r];
     if m == 1 {
-        micro::gemv_nt(a, b, k, r, &mut out);
+        simd::gemv_nt(d.isa(), a, b, k, r, &mut out);
         return out;
     }
     d.run_rows(m, r, m * k * r, &mut out, |lo, hi, panel| {
-        micro::gemm_nt_panel(a, b, k, r, lo, hi, panel)
+        simd::gemm_nt_panel(d.isa(), a, b, k, r, lo, hi, panel)
     });
     out
 }
 
-/// Serial blocked NT GEMM into a caller-owned buffer (`(m, r)` row-major;
-/// **overwrite semantics** — every element of `out` is assigned exactly
-/// once, so the caller need not zero it): the shared tile loop the fused
-/// dequant kernel runs over its decoded weight-row panels
-/// (`infer::kernels`).
-pub fn gemm_nt_into(a: &[f32], b: &[f32], m: usize, k: usize, r: usize, out: &mut [f32]) {
-    micro::gemm_nt_panel(a, b, k, r, 0, m, out)
+/// Serial blocked NT GEMM on an explicit ISA arm into a caller-owned
+/// buffer (`(m, r)` row-major; **overwrite semantics** — every element of
+/// `out` is assigned exactly once, so the caller need not zero it): the
+/// shared tile loop the fused dequant kernel runs over its decoded
+/// weight-row panels (`infer::kernels`).
+pub fn gemm_nt_into(isa: Isa, a: &[f32], b: &[f32], m: usize, k: usize, r: usize, out: &mut [f32]) {
+    simd::gemm_nt_panel(isa, a, b, k, r, 0, m, out)
 }
 
 /// `C[m, c] = A[m, k] · B[k, c]` (the activation-cotangent orientation
@@ -60,11 +94,11 @@ pub fn gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, c: usize, d: &Dispatch)
     debug_assert!(a.len() == m * k && b.len() == k * c);
     let mut out = vec![0.0f32; m * c];
     if m == 1 {
-        micro::gemv_nn(a, b, k, c, &mut out);
+        simd::gemv_nn(d.isa(), a, b, k, c, &mut out);
         return out;
     }
     d.run_rows(m, c, m * k * c, &mut out, |lo, hi, panel| {
-        micro::gemm_nn_panel(a, b, k, c, lo, hi, panel)
+        simd::gemm_nn_panel(d.isa(), a, b, k, c, lo, hi, panel)
     });
     out
 }
@@ -75,7 +109,7 @@ pub fn gemm_tn(a: &[f32], b: &[f32], n: usize, m: usize, c: usize, d: &Dispatch)
     debug_assert!(a.len() == n * m && b.len() == n * c);
     let mut out = vec![0.0f32; m * c];
     d.run_rows(m, c, n * m * c, &mut out, |lo, hi, panel| {
-        micro::gemm_tn_panel(a, b, n, m, c, lo, hi, panel)
+        simd::gemm_tn_panel(d.isa(), a, b, n, m, c, lo, hi, panel)
     });
     out
 }
@@ -150,26 +184,30 @@ mod tests {
 
     #[test]
     fn blocked_matches_oracle_on_tile_edges() {
-        // dims straddling the 4×8 tile: full tiles, row edge, column edge
+        // dims straddling the 4×8 tile: full tiles, row edge, column edge.
+        // Exact `==` is a *scalar-arm* pin: the SIMD arm uses FMA, so it is
+        // held to the oracle under a ULP budget in rust/tests/kernels.rs
+        // instead.
+        let scalar = Dispatch::serial().with_isa(Isa::Scalar);
         let mut rng = Pcg32::seeded(31);
         for (m, k, r) in [(4, 8, 8), (5, 3, 9), (1, 7, 13), (8, 16, 8), (3, 1, 1), (9, 5, 17)] {
             let a = randv(&mut rng, m * k);
             let b = randv(&mut rng, r * k);
             assert_eq!(
-                gemm_nt(&a, &b, m, k, r, &Dispatch::serial()),
+                gemm_nt(&a, &b, m, k, r, &scalar),
                 gemm_nt_ref(&a, &b, m, k, r),
                 "NT {m}×{k}·{r}ᵀ"
             );
             let bnn = randv(&mut rng, k * r);
             assert_eq!(
-                gemm_nn(&a, &bnn, m, k, r, &Dispatch::serial()),
+                gemm_nn(&a, &bnn, m, k, r, &scalar),
                 gemm_nn_ref(&a, &bnn, m, k, r),
                 "NN {m}×{k}·{k}×{r}"
             );
             let atn = randv(&mut rng, k * m);
             let btn = randv(&mut rng, k * r);
             assert_eq!(
-                gemm_tn(&atn, &btn, k, m, r, &Dispatch::serial()),
+                gemm_tn(&atn, &btn, k, m, r, &scalar),
                 gemm_tn_ref(&atn, &btn, k, m, r),
                 "TN ({k}×{m})ᵀ·{k}×{r}"
             );
@@ -186,19 +224,24 @@ mod tests {
 
     #[test]
     fn gemv_fast_path_equals_batched_row() {
+        // per-arm identity: the gemv core and the tile family give an
+        // element the same reduction tree on whichever arm is selected
         let mut rng = Pcg32::seeded(77);
         let (k, r) = (33, 21);
         let x = randv(&mut rng, k);
         let b = randv(&mut rng, r * k);
-        let via_gemm = gemm_nt(&x, &b, 1, k, r, &Dispatch::auto());
-        let mut via_gemv = vec![0.0f32; r];
-        gemv_nt(&x, &b, k, r, &mut via_gemv);
-        assert_eq!(via_gemm, via_gemv);
-        // the same row inside a batch produces the same bits
         let mut batch = x.clone();
         batch.extend(randv(&mut rng, 2 * k));
-        let full = gemm_nt(&batch, &b, 3, k, r, &Dispatch::serial());
-        assert_eq!(&full[..r], via_gemv.as_slice(), "batch-1 ≡ batched row 0");
+        for isa in [Isa::Scalar, Isa::detect()] {
+            let d = Dispatch::serial().with_isa(isa);
+            let via_gemm = gemm_nt(&x, &b, 1, k, r, &d);
+            let mut via_gemv = vec![0.0f32; r];
+            simd::gemv_nt(isa, &x, &b, k, r, &mut via_gemv);
+            assert_eq!(via_gemm, via_gemv, "{} gemv ≠ m==1 gemm", isa.label());
+            // the same row inside a batch produces the same bits
+            let full = gemm_nt(&batch, &b, 3, k, r, &d);
+            assert_eq!(&full[..r], via_gemv.as_slice(), "{} batch-1 ≡ row 0", isa.label());
+        }
     }
 
     #[test]
@@ -208,20 +251,30 @@ mod tests {
         assert!(m * k * r >= PAR_FLOPS_MIN);
         let a = randv(&mut rng, m * k);
         let b = randv(&mut rng, r * k);
-        assert_eq!(
-            gemm_nt(&a, &b, m, k, r, &Dispatch::serial()),
-            gemm_nt(&a, &b, m, k, r, &Dispatch::new(4)),
-        );
         let bnn = randv(&mut rng, k * r);
-        assert_eq!(
-            gemm_nn(&a, &bnn, m, k, r, &Dispatch::serial()),
-            gemm_nn(&a, &bnn, m, k, r, &Dispatch::new(4)),
-        );
         let atn = randv(&mut rng, k * m);
-        assert_eq!(
-            gemm_tn(&atn, &bnn, k, m, r, &Dispatch::serial()),
-            gemm_tn(&atn, &bnn, k, m, r, &Dispatch::new(4)),
-        );
+        for isa in [Isa::Scalar, Isa::detect()] {
+            let s = Dispatch::serial().with_isa(isa);
+            let p = Dispatch::new(4).with_isa(isa);
+            assert_eq!(
+                gemm_nt(&a, &b, m, k, r, &s),
+                gemm_nt(&a, &b, m, k, r, &p),
+                "NT {}",
+                isa.label()
+            );
+            assert_eq!(
+                gemm_nn(&a, &bnn, m, k, r, &s),
+                gemm_nn(&a, &bnn, m, k, r, &p),
+                "NN {}",
+                isa.label()
+            );
+            assert_eq!(
+                gemm_tn(&atn, &bnn, k, m, r, &s),
+                gemm_tn(&atn, &bnn, k, m, r, &p),
+                "TN {}",
+                isa.label()
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,859 @@
+//! Runtime ISA dispatch + AVX2 SIMD micro-kernels (DESIGN.md
+//! §Compute-Kernels).
+//!
+//! [`Isa`] is the capability probe: [`Isa::detect`] asks the CPU once
+//! (AVX2 **and** FMA — the vector tiles fuse multiply-adds), and
+//! [`Isa::active`] caches the process-wide choice, honoring the
+//! `FLEXROUND_FORCE_SCALAR` environment override so the scalar arm stays
+//! reachable on any machine (`verify.sh` runs the kernel-parity suite once
+//! per arm).  The scalar tiles in [`micro`] are *retained as selectable
+//! oracles*, not replaced: every routing function here takes an explicit
+//! `Isa`, so tests and benches can pin either arm.
+//!
+//! ## The per-element contraction scheme (why the parity pins survive)
+//!
+//! The crate's bit-exactness pins (serial ≡ parallel, gemv ≡ batched row —
+//! see [`micro`]'s module docs) survive vectorization because every AVX2
+//! kernel gives each output element the *same* reduction tree regardless of
+//! which tile or panel computes it:
+//!
+//! * NT orientation ([`dot`], [`gemv_nt`], [`gemm_nt_panel`]): one 8-lane
+//!   accumulator per element, `fmadd` over ascending k-chunks of 8, one
+//!   fixed horizontal-sum order, then a plain scalar `mul + add` tail for
+//!   the `k mod 8` remainder — identical whether the element is computed
+//!   alone (gemv), in a 1×4 strip, or in a 2×4 register tile;
+//! * NN/TN orientation ([`gemv_nn`], [`gemm_nn_panel`], [`gemm_tn_panel`]):
+//!   output columns vectorized 8-wide with a broadcast A element, `t`
+//!   ascending, plain scalar `mul + add` for the `c mod 8` column tail —
+//!   the treatment of column `j` depends only on `(j, c)`, never on the
+//!   row panel that computes it.
+//!
+//! FMA *does* change bits versus the scalar tiles (one rounding per
+//! multiply-add instead of two), so cross-arm comparisons are ULP-bounded
+//! ([`crate::util::ulp`], `rust/tests/kernels.rs`), while every within-arm
+//! identity stays exact.  The integer kernel ([`dot_i32`]) has no such
+//! caveat: i32 addition is associative, so its result is bit-identical
+//! across arms, lane counts, and chunkings — which is what lets the
+//! integer-domain fused GEMM (`infer/kernels.rs`) promise bit-exactness
+//! instead of a tolerance.
+
+#![allow(clippy::too_many_arguments)]
+
+use super::micro;
+
+/// Instruction-set arm a kernel call should run on.
+///
+/// Construct via [`Isa::detect`] / [`Isa::active`]; the enum is `Copy` so a
+/// [`super::Dispatch`] carries it by value.  Hand-constructing `Isa::Avx2`
+/// on hardware without AVX2+FMA and passing it to a routing function is a
+/// programming error (the AVX2 arm would execute unsupported instructions);
+/// the routing shims `debug_assert` against it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// The scalar register-tile family in [`micro`] — always available,
+    /// and the oracle the SIMD arm is differentially tested against.
+    Scalar,
+    /// 256-bit AVX2 + FMA kernels (x86-64 only; compiled in everywhere but
+    /// only ever *selected* after a successful CPUID probe).
+    Avx2,
+}
+
+impl Isa {
+    /// Probe the CPU: [`Isa::Avx2`] iff the hardware reports both `avx2`
+    /// and `fma`.  Always [`Isa::Scalar`] off x86-64.
+    pub fn detect() -> Isa {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                return Isa::Avx2;
+            }
+        }
+        Isa::Scalar
+    }
+
+    /// The process-wide arm: [`Isa::detect`], unless the
+    /// `FLEXROUND_FORCE_SCALAR` environment variable is set to anything
+    /// other than empty or `0`.  Cached after the first call — every
+    /// `Tensor::matmul_*` asks, and the answer cannot change mid-process.
+    pub fn active() -> Isa {
+        static ACTIVE: std::sync::OnceLock<Isa> = std::sync::OnceLock::new();
+        *ACTIVE.get_or_init(|| match std::env::var("FLEXROUND_FORCE_SCALAR") {
+            Ok(v) if !v.is_empty() && v != "0" => Isa::Scalar,
+            _ => Isa::detect(),
+        })
+    }
+
+    /// Short name for bench rows and verify.sh failure messages.
+    pub fn label(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Routing layer: safe functions taking an explicit Isa.  The scalar arm is
+// `micro`; the AVX2 arm lives in the `avx2` module below, reached through
+// per-op shims so non-x86-64 builds compile the same call sites.
+// ---------------------------------------------------------------------------
+
+/// Sequential dot product on the chosen arm.
+#[inline]
+pub fn dot(isa: Isa, a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match isa {
+        Isa::Scalar => micro::dot(a, b),
+        Isa::Avx2 => dot_avx2(a, b),
+    }
+}
+
+/// Integer dot product `Σ a[t]·b[t]` in i32 on the chosen arm.  i32
+/// addition is associative, so both arms (and any chunking) produce
+/// identical bits.  The caller must bound `|a|·|b|·len` below `i32::MAX`
+/// (see `infer::kernels::int_safe_k`); within that bound no lane or the
+/// scalar tail can overflow.
+#[inline]
+pub fn dot_i32(isa: Isa, a: &[i32], b: &[i32]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    match isa {
+        Isa::Scalar => dot_i32_scalar(a, b),
+        Isa::Avx2 => dot_i32_avx2(a, b),
+    }
+}
+
+/// Single-row `y = x · Bᵀ` on the chosen arm (overwrite semantics).
+#[inline]
+pub fn gemv_nt(isa: Isa, x: &[f32], b: &[f32], k: usize, r: usize, out: &mut [f32]) {
+    debug_assert!(x.len() == k && b.len() == r * k && out.len() == r);
+    match isa {
+        Isa::Scalar => micro::gemv_nt(x, b, k, r, out),
+        Isa::Avx2 => gemv_nt_avx2(x, b, k, r, out),
+    }
+}
+
+/// Single-row `y = x · B` on the chosen arm.  `out` must be pre-zeroed:
+/// the scalar arm accumulates (saxpy), the AVX2 arm assigns — both leave
+/// `out = x · B` when it starts at zero.
+#[inline]
+pub fn gemv_nn(isa: Isa, x: &[f32], b: &[f32], k: usize, c: usize, out: &mut [f32]) {
+    debug_assert!(x.len() == k && b.len() == k * c && out.len() == c);
+    match isa {
+        Isa::Scalar => micro::gemv_nn(x, b, k, c, out),
+        Isa::Avx2 => gemv_nn_avx2(x, b, k, c, out),
+    }
+}
+
+/// Blocked NT kernel over output rows `[mlo, mhi)` on the chosen arm
+/// (overwrite semantics, same contract as [`micro::gemm_nt_panel`]).
+#[inline]
+pub fn gemm_nt_panel(
+    isa: Isa,
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    r: usize,
+    mlo: usize,
+    mhi: usize,
+    out: &mut [f32],
+) {
+    match isa {
+        Isa::Scalar => micro::gemm_nt_panel(a, b, k, r, mlo, mhi, out),
+        Isa::Avx2 => gemm_nt_panel_avx2(a, b, k, r, mlo, mhi, out),
+    }
+}
+
+/// Blocked NN kernel over output rows `[mlo, mhi)` on the chosen arm.
+#[inline]
+pub fn gemm_nn_panel(
+    isa: Isa,
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    c: usize,
+    mlo: usize,
+    mhi: usize,
+    out: &mut [f32],
+) {
+    match isa {
+        Isa::Scalar => micro::gemm_nn_panel(a, b, k, c, mlo, mhi, out),
+        Isa::Avx2 => gemm_nn_panel_avx2(a, b, k, c, mlo, mhi, out),
+    }
+}
+
+/// Blocked TN kernel over output rows `[mlo, mhi)` on the chosen arm.
+#[inline]
+pub fn gemm_tn_panel(
+    isa: Isa,
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    m: usize,
+    c: usize,
+    mlo: usize,
+    mhi: usize,
+    out: &mut [f32],
+) {
+    match isa {
+        Isa::Scalar => micro::gemm_tn_panel(a, b, n, m, c, mlo, mhi, out),
+        Isa::Avx2 => gemm_tn_panel_avx2(a, b, n, m, c, mlo, mhi, out),
+    }
+}
+
+/// Scalar i32 dot — the always-available arm of [`dot_i32`].  Wrapping ops
+/// make debug builds panic-free; within the caller's `int_safe_k` bound no
+/// wrap can actually occur.
+fn dot_i32_scalar(a: &[i32], b: &[i32]) -> i32 {
+    let mut acc = 0i32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc = acc.wrapping_add(x.wrapping_mul(y));
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------------
+// x86-64 shims.  Each `*_avx2` function is the single safety boundary for
+// its kernel: the unsafe AVX2 body may only be reached through a shim, and a
+// shim may only be reached with `Isa::Avx2`, which `detect()` hands out
+// after the CPUID probe.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod shims {
+    use super::{avx2, Isa};
+
+    #[inline]
+    fn checked() {
+        debug_assert!(Isa::detect() == Isa::Avx2, "Isa::Avx2 used on non-AVX2 hardware");
+    }
+
+    #[inline]
+    pub(super) fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+        checked();
+        // SAFETY: Isa::Avx2 implies the CPUID probe confirmed avx2+fma.
+        unsafe { avx2::dot(a, b) }
+    }
+
+    #[inline]
+    pub(super) fn dot_i32_avx2(a: &[i32], b: &[i32]) -> i32 {
+        checked();
+        // SAFETY: as above.
+        unsafe { avx2::dot_i32(a, b) }
+    }
+
+    #[inline]
+    pub(super) fn gemv_nt_avx2(x: &[f32], b: &[f32], k: usize, r: usize, out: &mut [f32]) {
+        checked();
+        // SAFETY: as above.
+        unsafe { avx2::gemv_nt(x, b, k, r, out) }
+    }
+
+    #[inline]
+    pub(super) fn gemv_nn_avx2(x: &[f32], b: &[f32], k: usize, c: usize, out: &mut [f32]) {
+        checked();
+        // SAFETY: as above.
+        unsafe { avx2::nn_row(x, b, c, out) }
+    }
+
+    #[inline]
+    pub(super) fn gemm_nt_panel_avx2(
+        a: &[f32],
+        b: &[f32],
+        k: usize,
+        r: usize,
+        mlo: usize,
+        mhi: usize,
+        out: &mut [f32],
+    ) {
+        checked();
+        // SAFETY: as above.
+        unsafe { avx2::gemm_nt_panel(a, b, k, r, mlo, mhi, out) }
+    }
+
+    #[inline]
+    pub(super) fn gemm_nn_panel_avx2(
+        a: &[f32],
+        b: &[f32],
+        k: usize,
+        c: usize,
+        mlo: usize,
+        mhi: usize,
+        out: &mut [f32],
+    ) {
+        checked();
+        // SAFETY: as above.
+        unsafe { avx2::gemm_nn_panel(a, b, k, c, mlo, mhi, out) }
+    }
+
+    #[inline]
+    pub(super) fn gemm_tn_panel_avx2(
+        a: &[f32],
+        b: &[f32],
+        n: usize,
+        m: usize,
+        c: usize,
+        mlo: usize,
+        mhi: usize,
+        out: &mut [f32],
+    ) {
+        checked();
+        // SAFETY: as above.
+        unsafe { avx2::gemm_tn_panel(a, b, n, m, c, mlo, mhi, out) }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+use shims::{
+    dot_avx2, dot_i32_avx2, gemm_nn_panel_avx2, gemm_nt_panel_avx2, gemm_tn_panel_avx2,
+    gemv_nn_avx2, gemv_nt_avx2,
+};
+
+// Off x86-64, Isa::detect() never returns Avx2; the shims only exist so the
+// routing match arms compile, and they defer to the scalar tiles.
+#[cfg(not(target_arch = "x86_64"))]
+mod shims_portable {
+    use super::micro;
+
+    #[inline]
+    pub(super) fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+        micro::dot(a, b)
+    }
+
+    #[inline]
+    pub(super) fn dot_i32_avx2(a: &[i32], b: &[i32]) -> i32 {
+        super::dot_i32_scalar(a, b)
+    }
+
+    #[inline]
+    pub(super) fn gemv_nt_avx2(x: &[f32], b: &[f32], k: usize, r: usize, out: &mut [f32]) {
+        micro::gemv_nt(x, b, k, r, out)
+    }
+
+    #[inline]
+    pub(super) fn gemv_nn_avx2(x: &[f32], b: &[f32], k: usize, c: usize, out: &mut [f32]) {
+        micro::gemv_nn(x, b, k, c, out)
+    }
+
+    #[inline]
+    pub(super) fn gemm_nt_panel_avx2(
+        a: &[f32],
+        b: &[f32],
+        k: usize,
+        r: usize,
+        mlo: usize,
+        mhi: usize,
+        out: &mut [f32],
+    ) {
+        micro::gemm_nt_panel(a, b, k, r, mlo, mhi, out)
+    }
+
+    #[inline]
+    pub(super) fn gemm_nn_panel_avx2(
+        a: &[f32],
+        b: &[f32],
+        k: usize,
+        c: usize,
+        mlo: usize,
+        mhi: usize,
+        out: &mut [f32],
+    ) {
+        micro::gemm_nn_panel(a, b, k, c, mlo, mhi, out)
+    }
+
+    #[inline]
+    pub(super) fn gemm_tn_panel_avx2(
+        a: &[f32],
+        b: &[f32],
+        n: usize,
+        m: usize,
+        c: usize,
+        mlo: usize,
+        mhi: usize,
+        out: &mut [f32],
+    ) {
+        micro::gemm_tn_panel(a, b, n, m, c, mlo, mhi, out)
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+use shims_portable::{
+    dot_avx2, dot_i32_avx2, gemm_nn_panel_avx2, gemm_nt_panel_avx2, gemm_tn_panel_avx2,
+    gemv_nn_avx2, gemv_nt_avx2,
+};
+
+// ---------------------------------------------------------------------------
+// AVX2 kernel bodies.  Private: only reachable through the shims above.
+// Every f32 kernel follows the per-element scheme in the module docs; the
+// comments mark the two pieces that define an element's reduction tree
+// (vector fmadd chain + fixed hsum, then the scalar tail).
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    const LANES: usize = 8;
+
+    /// Fixed horizontal-sum order for an 8-lane f32 accumulator:
+    /// `((v0+v4)+(v1+v5)) + ((v2+v6)+(v3+v7))`.  Every NT-orientation
+    /// element ends its vector chain with exactly this tree.
+    ///
+    /// # Safety
+    /// Requires AVX2 (callers are `target_feature(avx2)` functions).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let q = _mm_add_ps(lo, hi);
+        let dup = _mm_movehdup_ps(q);
+        let s = _mm_add_ps(q, dup);
+        let s = _mm_add_ss(s, _mm_movehl_ps(dup, s));
+        _mm_cvtss_f32(s)
+    }
+
+    /// Lane sum of an 8-lane i32 accumulator.  Order is irrelevant (i32
+    /// addition is associative) but kept fixed anyway.
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_epi32(v: __m256i) -> i32 {
+        let lo = _mm256_castsi256_si128(v);
+        let hi = _mm256_extracti128_si256::<1>(v);
+        let s = _mm_add_epi32(lo, hi);
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b0000_1110>(s));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b0000_0001>(s));
+        _mm_cvtsi128_si32(s)
+    }
+
+    /// Canonical NT-orientation contraction: one vector accumulator,
+    /// ascending k, `hsum`, scalar `mul + add` tail.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2+FMA are available.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let k = a.len().min(b.len());
+        let k8 = k - k % LANES;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc = _mm256_setzero_ps();
+        let mut t = 0usize;
+        while t < k8 {
+            acc = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(t)), _mm256_loadu_ps(pb.add(t)), acc);
+            t += LANES;
+        }
+        let mut s = hsum(acc);
+        while t < k {
+            s += *pa.add(t) * *pb.add(t);
+            t += 1;
+        }
+        s
+    }
+
+    /// `Σ a·b` in i32: `mullo + add` over ascending k-chunks, lane sum,
+    /// wrapping scalar tail (no overflow within the caller's safe-K bound).
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_i32(a: &[i32], b: &[i32]) -> i32 {
+        let k = a.len().min(b.len());
+        let k8 = k - k % LANES;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc = _mm256_setzero_si256();
+        let mut t = 0usize;
+        while t < k8 {
+            let av = _mm256_loadu_si256(pa.add(t).cast());
+            let bv = _mm256_loadu_si256(pb.add(t).cast());
+            acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(av, bv));
+            t += LANES;
+        }
+        let mut s = hsum_epi32(acc);
+        while t < k {
+            s = s.wrapping_add((*pa.add(t)).wrapping_mul(*pb.add(t)));
+            t += 1;
+        }
+        s
+    }
+
+    /// Four NT dots sharing one activation row: per-element chains are
+    /// exactly [`dot`]'s (same fmadd order, same hsum, same tail).
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2+FMA; all four b-rows must have `x.len()`
+    /// elements.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn dot4(x: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
+        let k = x.len();
+        let k8 = k - k % LANES;
+        let px = x.as_ptr();
+        let (p0, p1, p2, p3) = (b0.as_ptr(), b1.as_ptr(), b2.as_ptr(), b3.as_ptr());
+        let mut a0 = _mm256_setzero_ps();
+        let mut a1 = _mm256_setzero_ps();
+        let mut a2 = _mm256_setzero_ps();
+        let mut a3 = _mm256_setzero_ps();
+        let mut t = 0usize;
+        while t < k8 {
+            let xv = _mm256_loadu_ps(px.add(t));
+            a0 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(p0.add(t)), a0);
+            a1 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(p1.add(t)), a1);
+            a2 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(p2.add(t)), a2);
+            a3 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(p3.add(t)), a3);
+            t += LANES;
+        }
+        let mut s = [hsum(a0), hsum(a1), hsum(a2), hsum(a3)];
+        while t < k {
+            let xt = *px.add(t);
+            s[0] += xt * *p0.add(t);
+            s[1] += xt * *p1.add(t);
+            s[2] += xt * *p2.add(t);
+            s[3] += xt * *p3.add(t);
+            t += 1;
+        }
+        s
+    }
+
+    /// The 2×4 NT register tile: eight vector accumulators, the same
+    /// per-element chain as [`dot`]/[`dot4`].
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2+FMA; all six rows must have `x0.len()`
+    /// elements.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn dot2x4(
+        x0: &[f32],
+        x1: &[f32],
+        b0: &[f32],
+        b1: &[f32],
+        b2: &[f32],
+        b3: &[f32],
+    ) -> ([f32; 4], [f32; 4]) {
+        let k = x0.len();
+        let k8 = k - k % LANES;
+        let (px0, px1) = (x0.as_ptr(), x1.as_ptr());
+        let (p0, p1, p2, p3) = (b0.as_ptr(), b1.as_ptr(), b2.as_ptr(), b3.as_ptr());
+        let mut a00 = _mm256_setzero_ps();
+        let mut a01 = _mm256_setzero_ps();
+        let mut a02 = _mm256_setzero_ps();
+        let mut a03 = _mm256_setzero_ps();
+        let mut a10 = _mm256_setzero_ps();
+        let mut a11 = _mm256_setzero_ps();
+        let mut a12 = _mm256_setzero_ps();
+        let mut a13 = _mm256_setzero_ps();
+        let mut t = 0usize;
+        while t < k8 {
+            let xv0 = _mm256_loadu_ps(px0.add(t));
+            let xv1 = _mm256_loadu_ps(px1.add(t));
+            let bv0 = _mm256_loadu_ps(p0.add(t));
+            let bv1 = _mm256_loadu_ps(p1.add(t));
+            let bv2 = _mm256_loadu_ps(p2.add(t));
+            let bv3 = _mm256_loadu_ps(p3.add(t));
+            a00 = _mm256_fmadd_ps(xv0, bv0, a00);
+            a01 = _mm256_fmadd_ps(xv0, bv1, a01);
+            a02 = _mm256_fmadd_ps(xv0, bv2, a02);
+            a03 = _mm256_fmadd_ps(xv0, bv3, a03);
+            a10 = _mm256_fmadd_ps(xv1, bv0, a10);
+            a11 = _mm256_fmadd_ps(xv1, bv1, a11);
+            a12 = _mm256_fmadd_ps(xv1, bv2, a12);
+            a13 = _mm256_fmadd_ps(xv1, bv3, a13);
+            t += LANES;
+        }
+        let mut s0 = [hsum(a00), hsum(a01), hsum(a02), hsum(a03)];
+        let mut s1 = [hsum(a10), hsum(a11), hsum(a12), hsum(a13)];
+        while t < k {
+            let xt0 = *px0.add(t);
+            let xt1 = *px1.add(t);
+            let b0t = *p0.add(t);
+            let b1t = *p1.add(t);
+            let b2t = *p2.add(t);
+            let b3t = *p3.add(t);
+            s0[0] += xt0 * b0t;
+            s0[1] += xt0 * b1t;
+            s0[2] += xt0 * b2t;
+            s0[3] += xt0 * b3t;
+            s1[0] += xt1 * b0t;
+            s1[1] += xt1 * b1t;
+            s1[2] += xt1 * b2t;
+            s1[3] += xt1 * b3t;
+            t += 1;
+        }
+        (s0, s1)
+    }
+
+    /// Single-row `y = x · Bᵀ`: 1×4 strips of [`dot4`], [`dot`] for the
+    /// row tail.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2+FMA.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn gemv_nt(x: &[f32], b: &[f32], k: usize, r: usize, out: &mut [f32]) {
+        debug_assert!(x.len() == k && b.len() == r * k && out.len() == r);
+        let mut j = 0usize;
+        while j + 4 <= r {
+            let s = dot4(
+                x,
+                &b[j * k..(j + 1) * k],
+                &b[(j + 1) * k..(j + 2) * k],
+                &b[(j + 2) * k..(j + 3) * k],
+                &b[(j + 3) * k..(j + 4) * k],
+            );
+            out[j..j + 4].copy_from_slice(&s);
+            j += 4;
+        }
+        while j < r {
+            out[j] = dot(x, &b[j * k..(j + 1) * k]);
+            j += 1;
+        }
+    }
+
+    /// Blocked NT panel: 2×4 register tiles, odd-row remainder via the
+    /// gemv scheme — both give every element the canonical chain, so the
+    /// panel split never changes bits.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2+FMA.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn gemm_nt_panel(
+        a: &[f32],
+        b: &[f32],
+        k: usize,
+        r: usize,
+        mlo: usize,
+        mhi: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), (mhi - mlo) * r);
+        let mut i = mlo;
+        let mut oi = 0usize;
+        while i + 2 <= mhi {
+            let x0 = &a[i * k..(i + 1) * k];
+            let x1 = &a[(i + 1) * k..(i + 2) * k];
+            let (o0, rest) = out[oi * r..].split_at_mut(r);
+            let o1 = &mut rest[..r];
+            let mut j = 0usize;
+            while j + 4 <= r {
+                let (s0, s1) = dot2x4(
+                    x0,
+                    x1,
+                    &b[j * k..(j + 1) * k],
+                    &b[(j + 1) * k..(j + 2) * k],
+                    &b[(j + 2) * k..(j + 3) * k],
+                    &b[(j + 3) * k..(j + 4) * k],
+                );
+                o0[j..j + 4].copy_from_slice(&s0);
+                o1[j..j + 4].copy_from_slice(&s1);
+                j += 4;
+            }
+            while j < r {
+                let brow = &b[j * k..(j + 1) * k];
+                o0[j] = dot(x0, brow);
+                o1[j] = dot(x1, brow);
+                j += 1;
+            }
+            i += 2;
+            oi += 2;
+        }
+        if i < mhi {
+            gemv_nt(&a[i * k..(i + 1) * k], b, k, r, &mut out[oi * r..(oi + 1) * r]);
+        }
+    }
+
+    /// One NN output row `out = x · B` (overwrite): columns vectorized
+    /// 32-then-8 wide with broadcast `x[t]`, scalar `mul + add` column
+    /// tail.  Column `j`'s chain depends only on `(j, c)`.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2+FMA.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn nn_row(x: &[f32], b: &[f32], c: usize, out: &mut [f32]) {
+        debug_assert!(b.len() == x.len() * c && out.len() == c);
+        let pb = b.as_ptr();
+        let po = out.as_mut_ptr();
+        let c32 = c - c % 32;
+        let mut j = 0usize;
+        while j < c32 {
+            let mut a0 = _mm256_setzero_ps();
+            let mut a1 = _mm256_setzero_ps();
+            let mut a2 = _mm256_setzero_ps();
+            let mut a3 = _mm256_setzero_ps();
+            for (t, &xv) in x.iter().enumerate() {
+                let xb = _mm256_set1_ps(xv);
+                let base = pb.add(t * c + j);
+                a0 = _mm256_fmadd_ps(xb, _mm256_loadu_ps(base), a0);
+                a1 = _mm256_fmadd_ps(xb, _mm256_loadu_ps(base.add(8)), a1);
+                a2 = _mm256_fmadd_ps(xb, _mm256_loadu_ps(base.add(16)), a2);
+                a3 = _mm256_fmadd_ps(xb, _mm256_loadu_ps(base.add(24)), a3);
+            }
+            _mm256_storeu_ps(po.add(j), a0);
+            _mm256_storeu_ps(po.add(j + 8), a1);
+            _mm256_storeu_ps(po.add(j + 16), a2);
+            _mm256_storeu_ps(po.add(j + 24), a3);
+            j += 32;
+        }
+        while j + 8 <= c {
+            let mut acc = _mm256_setzero_ps();
+            for (t, &xv) in x.iter().enumerate() {
+                acc = _mm256_fmadd_ps(_mm256_set1_ps(xv), _mm256_loadu_ps(pb.add(t * c + j)), acc);
+            }
+            _mm256_storeu_ps(po.add(j), acc);
+            j += 8;
+        }
+        while j < c {
+            let mut s = 0.0f32;
+            for (t, &xv) in x.iter().enumerate() {
+                s += xv * *pb.add(t * c + j);
+            }
+            *po.add(j) = s;
+            j += 1;
+        }
+    }
+
+    /// Blocked NN panel: independent [`nn_row`] per output row.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2+FMA.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn gemm_nn_panel(
+        a: &[f32],
+        b: &[f32],
+        k: usize,
+        c: usize,
+        mlo: usize,
+        mhi: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), (mhi - mlo) * c);
+        for (oi, i) in (mlo..mhi).enumerate() {
+            nn_row(&a[i * k..(i + 1) * k], b, c, &mut out[oi * c..(oi + 1) * c]);
+        }
+    }
+
+    /// One TN output row (`out[j] = Σ_t a[t·m + i] · b[t·c + j]`): same
+    /// column scheme as [`nn_row`] with a strided broadcast operand.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2+FMA.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn tn_row(a: &[f32], b: &[f32], n: usize, m: usize, c: usize, i: usize, out: &mut [f32]) {
+        let pb = b.as_ptr();
+        let po = out.as_mut_ptr();
+        let c32 = c - c % 32;
+        let mut j = 0usize;
+        while j < c32 {
+            let mut a0 = _mm256_setzero_ps();
+            let mut a1 = _mm256_setzero_ps();
+            let mut a2 = _mm256_setzero_ps();
+            let mut a3 = _mm256_setzero_ps();
+            for t in 0..n {
+                let xb = _mm256_set1_ps(a[t * m + i]);
+                let base = pb.add(t * c + j);
+                a0 = _mm256_fmadd_ps(xb, _mm256_loadu_ps(base), a0);
+                a1 = _mm256_fmadd_ps(xb, _mm256_loadu_ps(base.add(8)), a1);
+                a2 = _mm256_fmadd_ps(xb, _mm256_loadu_ps(base.add(16)), a2);
+                a3 = _mm256_fmadd_ps(xb, _mm256_loadu_ps(base.add(24)), a3);
+            }
+            _mm256_storeu_ps(po.add(j), a0);
+            _mm256_storeu_ps(po.add(j + 8), a1);
+            _mm256_storeu_ps(po.add(j + 16), a2);
+            _mm256_storeu_ps(po.add(j + 24), a3);
+            j += 32;
+        }
+        while j + 8 <= c {
+            let mut acc = _mm256_setzero_ps();
+            for t in 0..n {
+                acc = _mm256_fmadd_ps(
+                    _mm256_set1_ps(a[t * m + i]),
+                    _mm256_loadu_ps(pb.add(t * c + j)),
+                    acc,
+                );
+            }
+            _mm256_storeu_ps(po.add(j), acc);
+            j += 8;
+        }
+        while j < c {
+            let mut s = 0.0f32;
+            for t in 0..n {
+                s += a[t * m + i] * *pb.add(t * c + j);
+            }
+            *po.add(j) = s;
+            j += 1;
+        }
+    }
+
+    /// Blocked TN panel: independent [`tn_row`] per output row (row `i` of
+    /// the output is column `i` of A).
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2+FMA.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn gemm_tn_panel(
+        a: &[f32],
+        b: &[f32],
+        n: usize,
+        m: usize,
+        c: usize,
+        mlo: usize,
+        mhi: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), (mhi - mlo) * c);
+        for (oi, i) in (mlo..mhi).enumerate() {
+            tn_row(a, b, n, m, c, i, &mut out[oi * c..(oi + 1) * c]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn randv(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_normal()).collect()
+    }
+
+    #[test]
+    fn detect_and_active_are_stable() {
+        assert_eq!(Isa::detect(), Isa::detect());
+        assert_eq!(Isa::active(), Isa::active());
+        assert_eq!(Isa::Scalar.label(), "scalar");
+        assert_eq!(Isa::Avx2.label(), "avx2");
+    }
+
+    #[test]
+    fn scalar_arm_is_micro_exactly() {
+        let mut rng = Pcg32::seeded(11);
+        let a = randv(&mut rng, 37);
+        let b = randv(&mut rng, 37);
+        assert_eq!(dot(Isa::Scalar, &a, &b), micro::dot(&a, &b));
+    }
+
+    #[test]
+    fn simd_dot_short_inputs_equal_scalar_bitwise() {
+        // k < 8 takes only the scalar tail on the AVX2 arm (the vector
+        // accumulator hsum-folds to +0.0), so short dots are bit-identical
+        // across arms — attention over short KV prefixes depends on this
+        // being at least *close*; it happens to be exact.
+        let mut rng = Pcg32::seeded(23);
+        let isa = Isa::detect();
+        for k in 0..8usize {
+            let a = randv(&mut rng, k);
+            let b = randv(&mut rng, k);
+            assert_eq!(dot(isa, &a, &b), micro::dot(&a, &b), "k={k}");
+        }
+    }
+
+    #[test]
+    fn integer_dot_bit_identical_across_arms() {
+        let mut rng = Pcg32::seeded(5);
+        for k in [0usize, 1, 7, 8, 9, 31, 64, 100] {
+            let a: Vec<i32> = (0..k).map(|_| rng.below(512) as i32 - 256).collect();
+            let b: Vec<i32> = (0..k).map(|_| rng.below(512) as i32 - 256).collect();
+            let want: i64 = a.iter().zip(&b).map(|(&x, &y)| x as i64 * y as i64).sum();
+            assert_eq!(dot_i32(Isa::Scalar, &a, &b) as i64, want, "scalar k={k}");
+            assert_eq!(dot_i32(Isa::detect(), &a, &b) as i64, want, "detected k={k}");
+        }
+    }
+}

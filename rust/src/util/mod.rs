@@ -1,8 +1,10 @@
 //! Coordinator utilities built from scratch (the vendored crate set has no
 //! rand / rayon / proptest): a PCG32 RNG, streaming statistics, a worker
-//! thread pool, and a randomized property-test harness.
+//! thread pool, a randomized property-test harness, and f32 ULP distance
+//! for the SIMD differential kernel harness.
 
 pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod ulp;

@@ -1,0 +1,84 @@
+//! ULP (units-in-the-last-place) distance between f32 values — the
+//! tolerance currency of the SIMD differential kernel harness
+//! (`rust/tests/kernels.rs`).
+//!
+//! The AVX2 kernels fuse each multiply-add into one rounding (FMA), so
+//! their results differ from the scalar oracles by a few last-place bits —
+//! a *relative* error measure.  Absolute tolerances either drown small
+//! outputs or reject large ones; ULP distance is scale-free.  The harness
+//! pairs a small ULP budget with an absolute escape hatch proportional to
+//! `Σ|aₜ·bₜ|` for catastrophically cancelled outputs, where relative error
+//! is unbounded for *any* summation order and ULP distance is meaningless.
+
+/// Map an f32 onto the integer line such that consecutive finite floats are
+/// consecutive integers and ordering is preserved across zero (−0.0 and
+/// +0.0 both land on 0).
+fn monotone(x: f32) -> i64 {
+    let b = x.to_bits();
+    if b & 0x8000_0000 == 0 {
+        b as i64
+    } else {
+        -((b & 0x7fff_ffff) as i64)
+    }
+}
+
+/// Bit-space distance between two f32 values in units of last place:
+/// 0 for equal values (including `-0.0` vs `+0.0`), 1 for adjacent floats,
+/// `u32::MAX` when either side is NaN.  Signs may differ — the distance
+/// then counts through zero, so tiny straddling values stay close.
+pub fn ulp_diff(a: f32, b: f32) -> u32 {
+    if a == b {
+        return 0;
+    }
+    if a.is_nan() || b.is_nan() {
+        return u32::MAX;
+    }
+    let d = (monotone(a) - monotone(b)).unsigned_abs();
+    d.min(u32::MAX as u64) as u32
+}
+
+/// Largest element-wise [`ulp_diff`] over two equal-length slices.
+pub fn max_ulp(a: &[f32], b: &[f32]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| ulp_diff(x, y)).max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adjacent_floats_are_one_ulp_apart() {
+        let x = 1.0f32;
+        let next = f32::from_bits(x.to_bits() + 1);
+        assert_eq!(ulp_diff(x, next), 1);
+        assert_eq!(ulp_diff(next, x), 1, "symmetric");
+        assert_eq!(ulp_diff(x, x), 0);
+    }
+
+    #[test]
+    fn signed_zero_and_sign_straddle() {
+        assert_eq!(ulp_diff(0.0, -0.0), 0, "±0.0 compare equal");
+        let tiny = f32::from_bits(1); // smallest positive subnormal
+        assert_eq!(ulp_diff(tiny, -tiny), 2, "distance counts through zero");
+        assert_eq!(ulp_diff(tiny, 0.0), 1);
+    }
+
+    #[test]
+    fn nan_and_infinity() {
+        assert_eq!(ulp_diff(f32::NAN, 1.0), u32::MAX);
+        assert_eq!(ulp_diff(1.0, f32::NAN), u32::MAX);
+        assert_eq!(ulp_diff(f32::INFINITY, f32::MAX), 1, "inf is one past MAX");
+        assert_eq!(ulp_diff(f32::INFINITY, f32::NEG_INFINITY), u32::MAX);
+    }
+
+    #[test]
+    fn slice_max() {
+        let a = [1.0f32, 2.0, 3.0];
+        let mut b = a;
+        assert_eq!(max_ulp(&a, &b), 0);
+        b[1] = f32::from_bits(b[1].to_bits() + 3);
+        assert_eq!(max_ulp(&a, &b), 3);
+        assert_eq!(max_ulp(&[], &[]), 0);
+    }
+}

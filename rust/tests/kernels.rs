@@ -1,19 +1,34 @@
-//! Kernel-parity suite: the blocked `linalg` core against the retained
-//! naive oracles, bit-for-bit, across every orientation the repo uses —
-//! plus the fused dequant path at all packed bit-widths and the batch-1
-//! gemv dispatch (DESIGN.md §Compute-Kernels).
+//! Differential kernel-parity harness (DESIGN.md §Compute-Kernels).
 //!
-//! These pins are exact (`==`, not tolerance): every kernel keeps one
-//! accumulator per output element with the contraction index ascending, so
-//! blocked ≡ naive, serial ≡ parallel, and gemv ≡ batched-row hold by
-//! construction.  `verify.sh` runs this file as its fast kernel smoke gate.
+//! Two tolerance regimes, deliberately distinct:
+//!
+//! * **bit-exact (`==`)** — within-arm identities (serial ≡ parallel,
+//!   gemv ≡ batched-row, fused panel ≡ rowwise), the blocked-vs-naive pin
+//!   on the *scalar* arm, and the integer-domain fused GEMM against the
+//!   f32 rowwise oracle (i32 accumulation is associative; inside the f32
+//!   exactness window both paths hold the same number);
+//! * **ULP-bounded** — the AVX2 arm against the scalar oracles: FMA fuses
+//!   each multiply-add into one rounding, so cross-arm f32 results differ
+//!   by a few last-place bits.  The budget is `≤ 16` ULP with an absolute
+//!   escape hatch `4·k·ε·(1 + Σ|aₜ·bₜ|)` for catastrophic cancellation.
+//!
+//! `verify.sh` runs this file **twice** as its kernel smoke gate: once with
+//! `FLEXROUND_FORCE_SCALAR=1` (scalar tiles only) and once auto-detected
+//! (AVX2 where the CPU has it).  The per-arm tests below additionally pin
+//! *both* arms inside a single process via `Dispatch::with_isa`, so even
+//! the forced-scalar run exercises the SIMD arm's identities when the
+//! hardware supports it — `Isa::detect()` ignores the env override.
 
-use flexround::infer::kernels::{gemm_fused, gemm_fused_rowwise, gemm_ref};
+use flexround::infer::kernels::{
+    gemm_fused, gemm_fused_int, gemm_fused_int_with, gemm_fused_rowwise, gemm_fused_rowwise_isa,
+    gemm_fused_with, gemm_ref, int_gemm_eligible, int_safe_k,
+};
 use flexround::infer::PackedMatrix;
-use flexround::linalg::{self, Dispatch, PAR_FLOPS_MIN};
+use flexround::linalg::{self, simd, Dispatch, Isa, PAR_FLOPS_MIN};
 use flexround::tensor::{qrange, Tensor};
 use flexround::util::prop::Prop;
 use flexround::util::rng::Pcg32;
+use flexround::util::ulp::ulp_diff;
 
 fn randt(rng: &mut Pcg32, rows: usize, cols: usize) -> Tensor {
     Tensor::from_f32((0..rows * cols).map(|_| rng.next_normal()).collect(), &[rows, cols])
@@ -30,17 +45,79 @@ fn random_packed(rng: &mut Pcg32, rows: usize, cols: usize, bits: u32) -> Packed
     PackedMatrix::pack(&codes, rows, cols, bits, qmin, scale, zp).expect("pack")
 }
 
+/// Packed matrix with explicit control over grid symmetry and zero-points:
+/// `zero_zp` pins every row's zero-point to 0; otherwise each row gets a
+/// nonzero (sometimes fractional) zero-point strictly inside the grid.
+fn random_packed_zp(
+    rng: &mut Pcg32,
+    rows: usize,
+    cols: usize,
+    bits: u32,
+    symmetric: bool,
+    zero_zp: bool,
+) -> PackedMatrix {
+    let (qmin, qmax) = qrange(bits, symmetric);
+    let (qmin, qmax) = (qmin as i32, qmax as i32);
+    let span = (qmax - qmin + 1) as u32;
+    let mut codes: Vec<i32> = (0..rows * cols).map(|_| qmin + rng.below(span) as i32).collect();
+    // grid edges in every matrix
+    codes[0] = qmin;
+    let n = codes.len();
+    codes[n - 1] = qmax;
+    let scale: Vec<f32> = (0..rows).map(|_| 0.02 + 0.3 * rng.next_f32()).collect();
+    let zp: Vec<f32> = (0..rows)
+        .map(|_| {
+            if zero_zp {
+                0.0
+            } else {
+                // nonzero, sometimes fractional — the epilogue is f32 on
+                // both paths, so bit-exactness must not depend on zp ∈ ℤ
+                1.0 + rng.below(span.saturating_sub(1).max(1)) as f32 + 0.5 * rng.next_f32()
+            }
+        })
+        .collect();
+    PackedMatrix::pack(&codes, rows, cols, bits, qmin, scale, zp).expect("pack")
+}
+
+/// The cross-arm tolerance criterion: equal bits, a small ULP distance, or
+/// the cancellation escape hatch scaled by the element's magnitude bound
+/// `mag = Σ_t |aₜ·bₜ|` (computed by running the naive oracle on |inputs|).
+fn check_close(
+    label: &str,
+    got: &[f32],
+    want: &[f32],
+    k: usize,
+    mags: &[f32],
+) -> Result<(), String> {
+    assert_eq!(got.len(), want.len());
+    for (i, ((&g, &w), &mag)) in got.iter().zip(want).zip(mags).enumerate() {
+        let ok = g == w
+            || ulp_diff(g, w) <= 16
+            || (g - w).abs() <= 4.0 * (k.max(1) as f32) * f32::EPSILON * (1.0 + mag);
+        if !ok {
+            return Err(format!(
+                "{label}: element {i} diverged: simd {g} vs scalar {w} ({} ulp, k={k})",
+                ulp_diff(g, w)
+            ));
+        }
+    }
+    Ok(())
+}
+
 #[test]
 fn blocked_gemms_match_naive_oracles_bitwise() {
     // random dims 1..=40 deliberately straddle the 4×8 tile in every way:
-    // full tiles, ragged row edges, ragged column edges, sub-tile problems
-    Prop::new("linalg::gemm_* ≡ naive oracles").cases(120).check(|rng| {
+    // full tiles, ragged row edges, ragged column edges, sub-tile problems.
+    // Exact `==` is a *scalar-arm* pin — the SIMD arm is held to the same
+    // oracles under the ULP budget in the sweep test below.
+    let scalar = Dispatch::serial().with_isa(Isa::Scalar);
+    Prop::new("linalg::gemm_* ≡ naive oracles (scalar arm)").cases(120).check(|rng| {
         let m = 1 + rng.below(40) as usize;
         let k = 1 + rng.below(40) as usize;
         let r = 1 + rng.below(40) as usize;
         let a = randt(rng, m, k);
         let bt = randt(rng, r, k);
-        let nt = a.matmul_nt_with(&bt, &Dispatch::serial()).map_err(|e| e.to_string())?;
+        let nt = a.matmul_nt_with(&bt, &scalar).map_err(|e| e.to_string())?;
         let nt_ref = linalg::gemm_nt_ref(
             a.as_f32().map_err(|e| e.to_string())?,
             bt.as_f32().map_err(|e| e.to_string())?,
@@ -52,7 +129,7 @@ fn blocked_gemms_match_naive_oracles_bitwise() {
             return Err(format!("NT {m}×{k}·({r}×{k})ᵀ drifted from the naive oracle"));
         }
         let bn = randt(rng, k, r);
-        let nn = a.matmul_nn_with(&bn, &Dispatch::serial()).map_err(|e| e.to_string())?;
+        let nn = a.matmul_nn_with(&bn, &scalar).map_err(|e| e.to_string())?;
         let nn_ref = linalg::gemm_nn_ref(
             a.as_f32().map_err(|e| e.to_string())?,
             bn.as_f32().map_err(|e| e.to_string())?,
@@ -64,7 +141,7 @@ fn blocked_gemms_match_naive_oracles_bitwise() {
             return Err(format!("NN {m}×{k}·{k}×{r} drifted from the naive oracle"));
         }
         let at = randt(rng, k, m);
-        let tn = at.matmul_tn_with(&bn, &Dispatch::serial()).map_err(|e| e.to_string())?;
+        let tn = at.matmul_tn_with(&bn, &scalar).map_err(|e| e.to_string())?;
         let tn_ref = linalg::gemm_tn_ref(
             at.as_f32().map_err(|e| e.to_string())?,
             bn.as_f32().map_err(|e| e.to_string())?,
@@ -80,8 +157,86 @@ fn blocked_gemms_match_naive_oracles_bitwise() {
 }
 
 #[test]
+fn simd_tiles_match_scalar_oracles_within_ulp_budget() {
+    // The tentpole's differential sweep: every SIMD kernel family against
+    // the scalar tiles over adversarial shapes — tile-edge dims, k = 0,
+    // single rows, K off the 8-lane width in both directions.  On hardware
+    // without AVX2 both arms are the scalar tiles and every comparison is
+    // trivially equal — the sweep still runs, it just cannot fail.
+    const EDGE: [usize; 14] = [1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33];
+    const KS: [usize; 9] = [0, 1, 7, 8, 9, 15, 16, 17, 33];
+    let vec_isa = Isa::detect();
+    let scalar = Dispatch::serial().with_isa(Isa::Scalar);
+    let vectored = Dispatch::serial().with_isa(vec_isa);
+    Prop::new("simd ≡ scalar under the ULP budget").cases(80).check(|rng| {
+        let m = EDGE[rng.below(EDGE.len() as u32) as usize];
+        let r = EDGE[rng.below(EDGE.len() as u32) as usize];
+        let k = if rng.below(2) == 0 {
+            KS[rng.below(KS.len() as u32) as usize]
+        } else {
+            1 + rng.below(48) as usize
+        };
+        let a: Vec<f32> = (0..m * k).map(|_| rng.next_normal()).collect();
+        let bt: Vec<f32> = (0..r * k).map(|_| rng.next_normal()).collect();
+        let bn: Vec<f32> = (0..k * r).map(|_| rng.next_normal()).collect();
+        let at: Vec<f32> = (0..k * m).map(|_| rng.next_normal()).collect();
+        let aa: Vec<f32> = a.iter().map(|v| v.abs()).collect();
+        let bta: Vec<f32> = bt.iter().map(|v| v.abs()).collect();
+        let bna: Vec<f32> = bn.iter().map(|v| v.abs()).collect();
+        let ata: Vec<f32> = at.iter().map(|v| v.abs()).collect();
+        // NT / NN / TN tile families
+        check_close(
+            "NT",
+            &linalg::gemm_nt(&a, &bt, m, k, r, &vectored),
+            &linalg::gemm_nt(&a, &bt, m, k, r, &scalar),
+            k,
+            &linalg::gemm_nt_ref(&aa, &bta, m, k, r),
+        )?;
+        check_close(
+            "NN",
+            &linalg::gemm_nn(&a, &bn, m, k, r, &vectored),
+            &linalg::gemm_nn(&a, &bn, m, k, r, &scalar),
+            k,
+            &linalg::gemm_nn_ref(&aa, &bna, m, k, r),
+        )?;
+        check_close(
+            "TN",
+            &linalg::gemm_tn(&at, &bn, k, m, r, &vectored),
+            &linalg::gemm_tn(&at, &bn, k, m, r, &scalar),
+            k,
+            &linalg::gemm_tn_ref(&ata, &bna, k, m, r),
+        )?;
+        // single-row fast paths and the shared dot core
+        let x: Vec<f32> = (0..k).map(|_| rng.next_normal()).collect();
+        let xa: Vec<f32> = x.iter().map(|v| v.abs()).collect();
+        let mut gs = vec![0.0f32; r];
+        let mut gv = vec![0.0f32; r];
+        simd::gemv_nt(Isa::Scalar, &x, &bt, k, r, &mut gs);
+        simd::gemv_nt(vec_isa, &x, &bt, k, r, &mut gv);
+        check_close("gemv_nt", &gv, &gs, k, &linalg::gemm_nt_ref(&xa, &bta, 1, k, r))?;
+        let mut gs = vec![0.0f32; r];
+        let mut gv = vec![0.0f32; r];
+        simd::gemv_nn(Isa::Scalar, &x, &bn, k, r, &mut gs);
+        simd::gemv_nn(vec_isa, &x, &bn, k, r, &mut gv);
+        check_close("gemv_nn", &gv, &gs, k, &linalg::gemm_nn_ref(&xa, &bna, 1, k, r))?;
+        let y: Vec<f32> = (0..k).map(|_| rng.next_normal()).collect();
+        let ya: Vec<f32> = y.iter().map(|v| v.abs()).collect();
+        check_close(
+            "dot",
+            &[simd::dot(vec_isa, &x, &y)],
+            &[simd::dot(Isa::Scalar, &x, &y)],
+            k,
+            &linalg::gemm_nt_ref(&xa, &ya, 1, k, 1),
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
 fn serial_and_parallel_dispatch_are_bit_identical() {
-    Prop::new("linalg serial ≡ parallel").cases(24).check(|rng| {
+    // parameterized over the forced-scalar AND detected-SIMD arms: the
+    // panel split must never change an element's reduction tree on either
+    Prop::new("linalg serial ≡ parallel, both arms").cases(12).check(|rng| {
         // dims chosen to clear the flops threshold so the pool actually
         // fans out, with ragged edges to cross panel boundaries mid-tile
         let m = 42 + rng.below(23) as usize;
@@ -90,22 +245,31 @@ fn serial_and_parallel_dispatch_are_bit_identical() {
         assert!(m * k * r >= PAR_FLOPS_MIN, "{m}·{k}·{r} must clear the dispatch threshold");
         let a = randt(rng, m, k);
         let bt = randt(rng, r, k);
-        let s = a.matmul_nt_with(&bt, &Dispatch::serial()).map_err(|e| e.to_string())?;
-        let p = a.matmul_nt_with(&bt, &Dispatch::new(4)).map_err(|e| e.to_string())?;
-        if s.as_f32().map_err(|e| e.to_string())? != p.as_f32().map_err(|e| e.to_string())? {
-            return Err(format!("NT serial vs parallel drift at {m}×{k}×{r}"));
-        }
         let bn = randt(rng, k, r);
-        let s = a.matmul_nn_with(&bn, &Dispatch::serial()).map_err(|e| e.to_string())?;
-        let p = a.matmul_nn_with(&bn, &Dispatch::new(3)).map_err(|e| e.to_string())?;
-        if s.as_f32().map_err(|e| e.to_string())? != p.as_f32().map_err(|e| e.to_string())? {
-            return Err(format!("NN serial vs parallel drift at {m}×{k}×{r}"));
-        }
         let at = randt(rng, k, m);
-        let s = at.matmul_tn_with(&bn, &Dispatch::serial()).map_err(|e| e.to_string())?;
-        let p = at.matmul_tn_with(&bn, &Dispatch::new(5)).map_err(|e| e.to_string())?;
-        if s.as_f32().map_err(|e| e.to_string())? != p.as_f32().map_err(|e| e.to_string())? {
-            return Err(format!("TN serial vs parallel drift at {m}×{k}×{r}"));
+        for isa in [Isa::Scalar, Isa::detect()] {
+            let serial = Dispatch::serial().with_isa(isa);
+            let s = a.matmul_nt_with(&bt, &serial).map_err(|e| e.to_string())?;
+            let p = a
+                .matmul_nt_with(&bt, &Dispatch::new(4).with_isa(isa))
+                .map_err(|e| e.to_string())?;
+            if s.as_f32().map_err(|e| e.to_string())? != p.as_f32().map_err(|e| e.to_string())? {
+                return Err(format!("NT serial vs parallel drift at {m}×{k}×{r} ({})", isa.label()));
+            }
+            let s = a.matmul_nn_with(&bn, &serial).map_err(|e| e.to_string())?;
+            let p = a
+                .matmul_nn_with(&bn, &Dispatch::new(3).with_isa(isa))
+                .map_err(|e| e.to_string())?;
+            if s.as_f32().map_err(|e| e.to_string())? != p.as_f32().map_err(|e| e.to_string())? {
+                return Err(format!("NN serial vs parallel drift at {m}×{k}×{r} ({})", isa.label()));
+            }
+            let s = at.matmul_tn_with(&bn, &serial).map_err(|e| e.to_string())?;
+            let p = at
+                .matmul_tn_with(&bn, &Dispatch::new(5).with_isa(isa))
+                .map_err(|e| e.to_string())?;
+            if s.as_f32().map_err(|e| e.to_string())? != p.as_f32().map_err(|e| e.to_string())? {
+                return Err(format!("TN serial vs parallel drift at {m}×{k}×{r} ({})", isa.label()));
+            }
         }
         Ok(())
     });
@@ -137,20 +301,28 @@ fn k_zero_contractions_are_well_defined_zeros() {
 
 #[test]
 fn batch1_rows_take_the_gemv_path_with_identical_bits() {
-    Prop::new("gemv dispatch ≡ batched rows").cases(40).check(|rng| {
+    // parameterized over both arms — this was the latent gap: the old test
+    // only ever pinned whatever arm happened to be active
+    Prop::new("gemv dispatch ≡ batched rows, both arms").cases(24).check(|rng| {
         let k = 1 + rng.below(50) as usize;
         let r = 1 + rng.below(30) as usize;
         let n = 2 + rng.below(5) as usize;
         let x = randt(rng, n, k);
         let b = randt(rng, r, k);
-        let full = x.matmul_nt_with(&b, &Dispatch::serial()).map_err(|e| e.to_string())?;
-        for i in 0..n {
-            let row = x.slice_rows(i, i + 1).map_err(|e| e.to_string())?;
-            // m == 1 dispatches to linalg::gemv_nt inside gemm_nt
-            let one = row.matmul_nt(&b).map_err(|e| e.to_string())?;
-            let fv = full.as_f32().map_err(|e| e.to_string())?;
-            if one.as_f32().map_err(|e| e.to_string())? != &fv[i * r..(i + 1) * r] {
-                return Err(format!("gemv row {i} ≠ batched row ({n}×{k}·{r}ᵀ)"));
+        for isa in [Isa::Scalar, Isa::detect()] {
+            let d = Dispatch::serial().with_isa(isa);
+            let full = x.matmul_nt_with(&b, &d).map_err(|e| e.to_string())?;
+            for i in 0..n {
+                let row = x.slice_rows(i, i + 1).map_err(|e| e.to_string())?;
+                // m == 1 dispatches to the gemv core inside gemm_nt
+                let one = row.matmul_nt_with(&b, &d).map_err(|e| e.to_string())?;
+                let fv = full.as_f32().map_err(|e| e.to_string())?;
+                if one.as_f32().map_err(|e| e.to_string())? != &fv[i * r..(i + 1) * r] {
+                    return Err(format!(
+                        "gemv row {i} ≠ batched row ({n}×{k}·{r}ᵀ, {})",
+                        isa.label()
+                    ));
+                }
             }
         }
         Ok(())
@@ -159,71 +331,265 @@ fn batch1_rows_take_the_gemv_path_with_identical_bits() {
 
 #[test]
 fn fused_panel_kernel_matches_oracles_at_all_packed_widths() {
-    Prop::new("fused panel ≡ rowwise ≡ scalar ref, 2/3/4/8-bit").cases(40).check(|rng| {
-        let bits = [2u32, 3, 4, 8][rng.below(4) as usize];
-        let rows = 1 + rng.below(24) as usize;
-        let cols = 1 + rng.below(40) as usize;
-        let n = 1 + rng.below(6) as usize;
-        let m = random_packed(rng, rows, cols, bits);
-        let x = randt(rng, n, cols);
-        let rowwise = gemm_fused_rowwise(&x, &m).map_err(|e| e.to_string())?;
-        let reference = gemm_ref(&x, &m).map_err(|e| e.to_string())?;
-        for workers in [1usize, 4] {
-            let fused = gemm_fused(&x, &m, workers).map_err(|e| e.to_string())?;
-            // bit-exact against the retained rowwise kernel
-            if fused.as_f32().map_err(|e| e.to_string())?
-                != rowwise.as_f32().map_err(|e| e.to_string())?
-            {
-                return Err(format!(
-                    "panel(workers={workers}) ≠ rowwise at {bits}-bit {rows}×{cols} batch {n}"
-                ));
+    Prop::new("fused panel ≡ rowwise ≡ scalar ref, 2/3/4/8-bit, both arms").cases(32).check(
+        |rng| {
+            let bits = [2u32, 3, 4, 8][rng.below(4) as usize];
+            let rows = 1 + rng.below(24) as usize;
+            let cols = 1 + rng.below(40) as usize;
+            let n = 1 + rng.below(6) as usize;
+            let m = random_packed(rng, rows, cols, bits);
+            let x = randt(rng, n, cols);
+            let reference = gemm_ref(&x, &m).map_err(|e| e.to_string())?;
+            for isa in [Isa::Scalar, Isa::detect()] {
+                let rowwise = gemm_fused_rowwise_isa(&x, &m, isa).map_err(|e| e.to_string())?;
+                for workers in [1usize, 4] {
+                    let d = Dispatch::new(workers).with_isa(isa);
+                    let fused = gemm_fused_with(&x, &m, &d).map_err(|e| e.to_string())?;
+                    // bit-exact against the rowwise kernel *on the same arm*
+                    if fused.as_f32().map_err(|e| e.to_string())?
+                        != rowwise.as_f32().map_err(|e| e.to_string())?
+                    {
+                        return Err(format!(
+                            "panel(workers={workers}, {}) ≠ rowwise at {bits}-bit \
+                             {rows}×{cols} batch {n}",
+                            isa.label()
+                        ));
+                    }
+                    // tolerance against the independent scalar reference
+                    // (different algebraic form, so only ≤1e-4-close)
+                    let d = fused.max_abs_diff(&reference).map_err(|e| e.to_string())?;
+                    let tol = 1e-4 * (1.0 + reference.abs_max());
+                    if d > tol {
+                        return Err(format!(
+                            "panel vs scalar ref: max|Δ| {d} > {tol} at {bits}-bit {rows}×{cols}"
+                        ));
+                    }
+                }
             }
-            // tolerance against the independent scalar reference (different
-            // algebraic form, so only ≤1e-4-close, as PR 2 pinned)
-            let d = fused.max_abs_diff(&reference).map_err(|e| e.to_string())?;
-            let tol = 1e-4 * (1.0 + reference.abs_max());
-            if d > tol {
-                return Err(format!(
-                    "panel vs scalar ref: max|Δ| {d} > {tol} at {bits}-bit {rows}×{cols}"
-                ));
-            }
-        }
-        Ok(())
-    });
+            Ok(())
+        },
+    );
 }
 
 #[test]
 fn fused_batch1_decode_path_is_bit_identical() {
     // the gemv fast path inside gemm_fused is what decode_step runs; its
-    // bits must equal both the batched kernel's row and the rowwise oracle
+    // bits must equal both the batched kernel's row and the rowwise oracle,
+    // on whichever arm is pinned
     let mut rng = Pcg32::seeded(97);
     for bits in [2u32, 3, 4, 8] {
         let m = random_packed(&mut rng, 48, 31, bits);
         let batch = randt(&mut rng, 4, 31);
-        let full = gemm_fused(&batch, &m, 1).unwrap();
-        for i in 0..4 {
-            let row = batch.slice_rows(i, i + 1).unwrap();
-            let one = gemm_fused(&row, &m, 1).unwrap();
-            let oracle = gemm_fused_rowwise(&row, &m).unwrap();
-            assert_eq!(one.as_f32().unwrap(), oracle.as_f32().unwrap(), "{bits}-bit vs oracle");
-            assert_eq!(
-                one.as_f32().unwrap(),
-                &full.as_f32().unwrap()[i * 48..(i + 1) * 48],
-                "{bits}-bit batch-1 row {i} vs batched"
-            );
+        for isa in [Isa::Scalar, Isa::detect()] {
+            let d = Dispatch::serial().with_isa(isa);
+            let full = gemm_fused_with(&batch, &m, &d).unwrap();
+            for i in 0..4 {
+                let row = batch.slice_rows(i, i + 1).unwrap();
+                let one = gemm_fused_with(&row, &m, &d).unwrap();
+                let oracle = gemm_fused_rowwise_isa(&row, &m, isa).unwrap();
+                assert_eq!(
+                    one.as_f32().unwrap(),
+                    oracle.as_f32().unwrap(),
+                    "{bits}-bit vs oracle ({})",
+                    isa.label()
+                );
+                assert_eq!(
+                    one.as_f32().unwrap(),
+                    &full.as_f32().unwrap()[i * 48..(i + 1) * 48],
+                    "{bits}-bit batch-1 row {i} vs batched ({})",
+                    isa.label()
+                );
+            }
         }
     }
 }
 
 #[test]
 fn fused_serial_parallel_bit_identity_holds() {
-    // kernels.rs pinned this for the old kernel; re-pin on the panel kernel
+    // kernels.rs pinned this for the old kernel; re-pin per arm on the
+    // panel kernel
     let mut rng = Pcg32::seeded(13);
     for bits in [4u32, 8] {
         let m = random_packed(&mut rng, 128, 96, bits);
         let x = randt(&mut rng, 16, 96);
+        for isa in [Isa::Scalar, Isa::detect()] {
+            let serial = gemm_fused_with(&x, &m, &Dispatch::serial().with_isa(isa)).unwrap();
+            let par = gemm_fused_with(&x, &m, &Dispatch::new(4).with_isa(isa)).unwrap();
+            assert_eq!(
+                serial.as_f32().unwrap(),
+                par.as_f32().unwrap(),
+                "{bits}-bit ({})",
+                isa.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn integer_fused_gemm_is_bit_exact_at_all_widths() {
+    // THE integer-domain acceptance pin: integral in-window activations at
+    // 2/3/4/8 bits, symmetric and asymmetric grids, zero and nonzero
+    // per-row zero-points, serial and parallel, both ISA arms — every
+    // combination must reproduce the f32 rowwise oracle bit-for-bit, and
+    // the integer result itself must be identical across arms.
+    Prop::new("integer fused gemm ≡ rowwise, bitwise").cases(48).check(|rng| {
+        let bits = [2u32, 3, 4, 8][rng.below(4) as usize];
+        let symmetric = rng.below(2) == 0;
+        let zero_zp = rng.below(2) == 0;
+        let rows = 1 + rng.below(20) as usize;
+        let cols = 1 + rng.below(32) as usize;
+        let n = 1 + rng.below(4) as usize;
+        let m = random_packed_zp(rng, rows, cols, bits, symmetric, zero_zp);
+        // activations: exact integers inside the f32 exactness window
+        // (2²⁴ − 1) / (k · max|code|) — small enough to stay in-window at
+        // every width, with sign coverage and zeros
+        let amax = 20u32;
+        let x = Tensor::from_f32(
+            (0..n * cols).map(|_| rng.below(2 * amax + 1) as f32 - amax as f32).collect(),
+            &[n, cols],
+        )
+        .map_err(|e| e.to_string())?;
+        if !int_gemm_eligible(&x, &m) {
+            return Err(format!("{bits}-bit integral batch should be int-eligible"));
+        }
+        let mut across_arms: Vec<Vec<f32>> = Vec::new();
+        for isa in [Isa::Scalar, Isa::detect()] {
+            let rowwise = gemm_fused_rowwise_isa(&x, &m, isa).map_err(|e| e.to_string())?;
+            for workers in [1usize, 4] {
+                let d = Dispatch::new(workers).with_isa(isa);
+                let auto = gemm_fused_with(&x, &m, &d).map_err(|e| e.to_string())?;
+                let explicit = gemm_fused_int_with(&x, &m, &d).map_err(|e| e.to_string())?;
+                if auto.as_f32().map_err(|e| e.to_string())?
+                    != rowwise.as_f32().map_err(|e| e.to_string())?
+                {
+                    return Err(format!(
+                        "integer auto-route ≠ rowwise ({bits}-bit, zp0={zero_zp}, \
+                         sym={symmetric}, workers={workers}, {})",
+                        isa.label()
+                    ));
+                }
+                if explicit.as_f32().map_err(|e| e.to_string())?
+                    != auto.as_f32().map_err(|e| e.to_string())?
+                {
+                    return Err(format!("gemm_fused_int ≠ auto route ({bits}-bit)"));
+                }
+                across_arms.push(auto.as_f32().map_err(|e| e.to_string())?.to_vec());
+            }
+        }
+        // i32 accumulation is associative: the integer result may not vary
+        // across arms or worker counts at all
+        if !across_arms.windows(2).all(|w| w[0] == w[1]) {
+            return Err(format!("integer result differs across arms/workers ({bits}-bit)"));
+        }
+        Ok(())
+    });
+    // a problem big enough that the parallel integer path genuinely fans
+    // out (flops ≥ PAR_FLOPS_MIN, rows ≥ 2·workers)
+    let mut rng = Pcg32::seeded(41);
+    for bits in [4u32, 8] {
+        let m = random_packed_zp(&mut rng, 128, 96, bits, false, false);
+        let x = Tensor::from_f32(
+            (0..16 * 96).map(|_| rng.below(41) as f32 - 20.0).collect(),
+            &[16, 96],
+        )
+        .unwrap();
+        assert!(16 * 128 * 96 >= PAR_FLOPS_MIN);
+        assert!(int_gemm_eligible(&x, &m), "{bits}-bit big batch should be int-eligible");
+        let rowwise = gemm_fused_rowwise(&x, &m).unwrap();
         let serial = gemm_fused(&x, &m, 1).unwrap();
         let par = gemm_fused(&x, &m, 4).unwrap();
-        assert_eq!(serial.as_f32().unwrap(), par.as_f32().unwrap(), "{bits}-bit");
+        assert_eq!(serial.as_f32().unwrap(), rowwise.as_f32().unwrap(), "{bits}-bit serial");
+        assert_eq!(serial.as_f32().unwrap(), par.as_f32().unwrap(), "{bits}-bit parallel");
     }
+}
+
+#[test]
+fn i32_accumulator_overflow_guard_pins_safe_k() {
+    // Pinned worst cases (the comment on int_safe_k documents both):
+    // W8 asymmetric grid × 8-bit-magnitude activations → every practical
+    // hidden width fits one i32 accumulator; adversarial 2²⁰ activations →
+    // the widening fallback engages after just 8 terms.
+    assert_eq!(int_safe_k(255, 127), 66_311);
+    assert_eq!(int_safe_k(255, 1 << 20), 8);
+    assert_eq!(int_safe_k(1, 1), i32::MAX as usize);
+    // division pin: safe_k is exactly the largest count of worst-case
+    // terms that cannot leave i32 range — one more term could
+    Prop::new("int_safe_k is tight").cases(64).check(|rng| {
+        let cm = 1 + rng.below(255) as i64;
+        let am = 1 + rng.below(1 << 20) as i64;
+        let per = cm * am;
+        let sk = int_safe_k(cm, am) as i64;
+        if sk * per > i32::MAX as i64 {
+            return Err(format!("safe_k {sk} × per-term {per} can overflow i32"));
+        }
+        if (sk + 1) * per <= i32::MAX as i64 {
+            return Err(format!("safe_k {sk} is not tight for per-term {per}"));
+        }
+        Ok(())
+    });
+    // end-to-end: adversarial codes at the bit-width range edges times
+    // worst-case huge activations, K far beyond safe_k — the chunked
+    // i64-widening path must reproduce an independent i64 reference
+    // exactly, on both arms.  (act_mag per width is the largest power of
+    // two under the explicit API's i32::MAX / code_mag input bound.)
+    let k = 64usize;
+    let rows = 6usize;
+    let n = 3usize;
+    for (bits, symmetric, act_pow) in
+        [(2u32, true, 28u32), (3, true, 27), (4, true, 27), (8, true, 23), (8, false, 23)]
+    {
+        let (qmin, qmax) = qrange(bits, symmetric);
+        let (qmin, qmax) = (qmin as i32, qmax as i32);
+        // rows alternate the two grid edges; row 0 is all-qmax so its
+        // products share a sign and the running sum grows monotonically —
+        // the classic i32 wraparound shape
+        let codes: Vec<i32> = (0..rows * k)
+            .map(|i| if i / k == 0 || i % 3 == 0 { qmax } else { qmin })
+            .collect();
+        let scale: Vec<f32> = (0..rows).map(|r| 0.25 + 0.125 * r as f32).collect();
+        let zp: Vec<f32> = (0..rows).map(|r| if r % 2 == 0 { 0.0 } else { 1.5 }).collect();
+        let m =
+            PackedMatrix::pack(&codes, rows, k, bits, qmin, scale.clone(), zp.clone()).unwrap();
+        let act = (1i64 << act_pow) as f32;
+        // batch row 0 all-positive (monotone growth), the rest alternating
+        let xv: Vec<f32> = (0..n * k)
+            .map(|i| if i / k == 0 || i % 2 == 0 { act } else { -act })
+            .collect();
+        let x = Tensor::from_f32(xv.clone(), &[n, k]).unwrap();
+        // these magnitudes are far outside the 2²⁴ exactness window: the
+        // auto route must refuse, only the explicit integer API runs
+        assert!(
+            !int_gemm_eligible(&x, &m),
+            "{bits}-bit ±2^{act_pow} batch must be outside the exact window"
+        );
+        // independent i64 reference, same single-rounding epilogue
+        let mut want = vec![0.0f32; n * rows];
+        for i in 0..n {
+            for j in 0..rows {
+                let mut acc = 0i64;
+                let mut sumx = 0i64;
+                for t in 0..k {
+                    let xt = xv[i * k + t] as i64;
+                    acc += codes[j * k + t] as i64 * xt;
+                    sumx += xt;
+                }
+                want[i * rows + j] = scale[j] * (acc as f32 - zp[j] * (sumx as f32));
+            }
+        }
+        for isa in [Isa::Scalar, Isa::detect()] {
+            let got = gemm_fused_int_with(&x, &m, &Dispatch::serial().with_isa(isa)).unwrap();
+            assert_eq!(
+                got.as_f32().unwrap(),
+                want.as_slice(),
+                "{bits}-bit (sym={symmetric}) ±2^{act_pow} widening path ({})",
+                isa.label()
+            );
+        }
+    }
+    // activations past the explicit API's input bound are rejected, not
+    // silently wrapped: 2³¹ exceeds i32::MAX / code_mag at any width
+    let m = PackedMatrix::pack(&vec![1i32; 8], 1, 8, 8, 0, vec![1.0], vec![0.0]).unwrap();
+    let huge = Tensor::from_f32(vec![(1i64 << 31) as f32; 8], &[1, 8]).unwrap();
+    assert!(gemm_fused_int(&huge, &m, 1).is_err());
+    assert!(!int_gemm_eligible(&huge, &m));
 }

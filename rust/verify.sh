@@ -5,9 +5,13 @@
 #
 # Steps:
 #   1. release build, default features (native + pjrt-stub scaffolding)
-#   1b. kernel-parity smoke: rust/tests/kernels.rs pins the blocked linalg
-#       core bit-exactly against the naive oracles (fast, fails early —
-#       a kernel regression should not wait for the full suite)
+#   1b. kernel-parity smoke, run TWICE: rust/tests/kernels.rs is the
+#       differential harness (scalar tiles vs the SIMD arm under a ULP
+#       budget, integer-domain fused GEMM bit-exact vs the rowwise oracle).
+#       First pass forces FLEXROUND_FORCE_SCALAR=1 so the scalar tiles are
+#       the *active* arm; second pass auto-detects (AVX2 where available).
+#       A failure names which ISA path diverged (fast, fails early — a
+#       kernel regression should not wait for the full suite)
 #   2. full test suite (artifact tests self-skip when artifacts/ is absent)
 #   3. native-only build (--no-default-features): the backend must build
 #      with zero xla surface
@@ -28,8 +32,16 @@ cd "$(dirname "$0")"
 echo "== cargo build --release =="
 cargo build --release
 
-echo "== kernel-parity smoke (blocked linalg vs naive oracles, bit-exact) =="
-cargo test -q --release --test kernels
+echo "== kernel-parity smoke, pass 1/2: forced-scalar arm =="
+if ! FLEXROUND_FORCE_SCALAR=1 cargo test -q --release --test kernels; then
+    echo "kernel parity FAILED on the forced-SCALAR path (src/linalg/micro.rs tiles)"
+    exit 1
+fi
+echo "== kernel-parity smoke, pass 2/2: auto-detected arm =="
+if ! cargo test -q --release --test kernels; then
+    echo "kernel parity FAILED on the auto/SIMD path (src/linalg/simd.rs AVX2 arm)"
+    exit 1
+fi
 
 echo "== cargo test -q =="
 cargo test -q
