@@ -7,7 +7,11 @@
 //!   baseline grows O(t) — measured as mean per-token latency over the
 //!   first 8 vs the last 8 emitted tokens;
 //! * the cached-vs-recompute speedup at depth, plus a stream-identity
-//!   check (both decoders must sample the exact same tokens).
+//!   check (both decoders must sample the exact same tokens);
+//! * the continuous-batching throughput curve: aggregate tokens/sec at
+//!   1/4/16/64 concurrent sessions through the scheduler
+//!   (DESIGN.md §Continuous-Batching) — batching the per-step GEMMs
+//!   across sessions must beat decoding them one at a time.
 //!
 //! Emits machine-readable results to `BENCH_generate.json` at the repo
 //! root, alongside the human-readable stdout table.
@@ -18,6 +22,7 @@
 
 use flexround::infer::generate;
 use flexround::infer::Engine;
+use flexround::sched::{SchedConfig, Scheduler};
 use flexround::ser::json::{self, Json};
 use flexround::tensor::Tensor;
 use flexround::util::pool;
@@ -151,6 +156,57 @@ fn main() {
         if streams_match { "IDENTICAL" } else { "MISMATCHED (bug!)" }
     );
 
+    // ---- continuous batching: aggregate tokens/sec vs concurrent sessions ----
+    let sess_new = 16usize;
+    let mut sched_rows: Vec<Json> = Vec::new();
+    println!("continuous batching (prompt 8, {sess_new} tokens per session):");
+    for sessions in [1usize, 4, 16, 64] {
+        let model = generate::synthetic_lm(BLOCKS, D, HEADS, MLP, 32, VOCAB, BITS, 7)
+            .expect("synthetic lm");
+        let cfg = SchedConfig {
+            pool_pages: 256,
+            page_tokens: 16,
+            max_active: sessions,
+            prefill_chunk: 32,
+            spill_dir: None,
+        };
+        let mut sched = Scheduler::new(Engine::new(model, workers), cfg).expect("scheduler");
+        let prompts: Vec<Tensor> = (0..sessions)
+            .map(|i| {
+                generate::random_prompt(sched.engine().model(), 8, 30 + i as u64)
+                    .expect("prompt")
+                    .1
+            })
+            .collect();
+        let t0 = Instant::now();
+        for (i, p) in prompts.iter().enumerate() {
+            let opts = generate::GenOpts {
+                max_new: sess_new,
+                temp: TEMP,
+                top_k: TOP_K,
+                seed: 7 + i as u64,
+            };
+            sched.submit(p.as_f32().expect("prompt rows").to_vec(), opts).expect("submit");
+        }
+        let fin = sched.run_all().expect("run_all");
+        let secs = t0.elapsed().as_secs_f64();
+        let toks: usize = fin.iter().map(|f| f.tokens.len()).sum();
+        let tps = toks as f64 / secs.max(1e-12);
+        println!(
+            "  sessions {sessions:>3}  {toks:>5} tokens in {secs:7.3} s → {tps:9.0} tok/s  \
+             ({} steps, peak {} pool pages)",
+            sched.steps(),
+            sched.occupancy_peaks().1
+        );
+        sched_rows.push(Json::object(vec![
+            ("sessions", Json::from_f64(sessions as f64)),
+            ("tokens", Json::from_f64(toks as f64)),
+            ("secs", Json::from_f64(secs)),
+            ("tokens_per_sec", Json::from_f64(tps)),
+            ("steps", Json::from_f64(sched.steps() as f64)),
+        ]));
+    }
+
     // ---- BENCH_generate.json at the repo root ----
     let doc = Json::object(vec![
         ("bench", Json::from_str_val("generate")),
@@ -184,6 +240,7 @@ fn main() {
                 ),
             ]),
         ),
+        ("continuous_batching", Json::Arr(sched_rows)),
         ("streams_match", Json::Bool(streams_match)),
     ]);
     let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_generate.json");

@@ -15,10 +15,13 @@
 //!   → +`), FP weights or any substituted weight set (fake-quantized Ŵ);
 //! * [`attn_forward`] / [`attn_backward`] — multi-head causal attention
 //!   with cached probabilities, shared with the packed inference engine;
-//! * [`attn_score_row`] — the single-query-row attention core both the
-//!   full-context forward and the KV-cached incremental decode path
-//!   ([`crate::infer::Engine::decode_step`]) are built from, so the two
-//!   stay bit-identical by construction;
+//! * [`attn_score_row`] / [`attn_score_segments`] — the single-query-row
+//!   attention core both the full-context forward and the KV-cached
+//!   incremental decode path ([`crate::infer::Engine::decode_step`]) are
+//!   built from; the segmented variant walks a paged KV pool's page list
+//!   ([`crate::sched`]) and `attn_score_row` delegates to it with one
+//!   segment, so the contiguous, paged, and full-context paths all stay
+//!   bit-identical by construction;
 //! * [`loss_and_grads`] — output-MSE loss plus the full backward pass:
 //!   activation cotangents through residuals / layernorm / GELU / softmax
 //!   (all smooth, finite-difference-checked in `tensor::ops` and here),
@@ -243,16 +246,54 @@ pub fn attn_score_row(
     probs: &mut [f32],
     out: &mut [f32],
 ) {
+    attn_score_segments(qi, &[(kbuf, vbuf, count)], stride, c0, count, scale, probs, out);
+}
+
+/// [`attn_score_row`] generalized to a *segmented* K/V walk: the cached
+/// rows live in `segs` — an ordered list of `(k_rows, v_rows, rows)`
+/// buffers, each row-major `(rows, stride)` with this head's channels at
+/// columns `c0..c0 + out.len()` — covering positions `0..count` in order
+/// (the final segment may hold more rows than `count` consumes).
+///
+/// This is the attention core of the paged KV pool
+/// ([`crate::sched::PagedKvPool`]): a session's K/V rows are scattered
+/// across fixed-size pages, so the scheduler's decode reads walk the page
+/// list instead of one contiguous slice.  [`attn_score_row`] delegates here
+/// with a single segment, which makes the contiguous and paged walks
+/// bit-identical *by construction*: the scores, the max-shifted softmax,
+/// and the value accumulation visit positions in the same order with the
+/// same operations regardless of how the rows are cut into segments.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_score_segments(
+    qi: &[f32],
+    segs: &[(&[f32], &[f32], usize)],
+    stride: usize,
+    c0: usize,
+    count: usize,
+    scale: f32,
+    probs: &mut [f32],
+    out: &mut [f32],
+) {
     let dh = out.len();
     debug_assert!(qi.len() == dh && probs.len() >= count && count >= 1);
+    debug_assert!(segs.iter().map(|s| s.2).sum::<usize>() >= count);
     let mut mx = f32::NEG_INFINITY;
-    for (j, rj) in probs.iter_mut().enumerate().take(count) {
-        let kj = &kbuf[j * stride + c0..j * stride + c0 + dh];
-        // the crate-wide sequential contraction core: the same bits as the
-        // gemv/GEMM kernels, so score rows never depend on the path taken
-        *rj = linalg::dot(qi, kj) * scale;
-        mx = mx.max(*rj);
+    let mut j = 0usize;
+    'k: for &(kseg, _, rows) in segs {
+        for r in 0..rows {
+            if j >= count {
+                break 'k;
+            }
+            let kj = &kseg[r * stride + c0..r * stride + c0 + dh];
+            // the crate-wide sequential contraction core: the same bits as
+            // the gemv/GEMM kernels, so score rows never depend on the path
+            let rj = linalg::dot(qi, kj) * scale;
+            probs[j] = rj;
+            mx = mx.max(rj);
+            j += 1;
+        }
     }
+    debug_assert_eq!(j, count, "segments cover fewer than count rows");
     let mut sum = 0.0f32;
     for rj in probs.iter_mut().take(count) {
         *rj = (*rj - mx).exp();
@@ -262,10 +303,18 @@ pub fn attn_score_row(
     for rj in probs.iter_mut().take(count) {
         *rj *= inv;
     }
-    for (j, &pij) in probs.iter().enumerate().take(count) {
-        let vj = &vbuf[j * stride + c0..j * stride + c0 + dh];
-        for (c, b) in out.iter_mut().zip(vj) {
-            *c += pij * b;
+    let mut j = 0usize;
+    'v: for &(_, vseg, rows) in segs {
+        for r in 0..rows {
+            if j >= count {
+                break 'v;
+            }
+            let vj = &vseg[r * stride + c0..r * stride + c0 + dh];
+            let pij = probs[j];
+            for (c, b) in out.iter_mut().zip(vj) {
+                *c += pij * b;
+            }
+            j += 1;
         }
     }
 }

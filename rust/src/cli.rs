@@ -112,11 +112,18 @@ COMMANDS:
              [--bits <b>]
              [--rows <n>] [--seed <n>] [--workers <n>] [--out <file.fxt>]
   serve      Micro-batched serving loadgen over a packed artifact: coalesce
-             single-row requests up to a deadline, one fused GEMM per batch
-             (the serving queue also carries KV-cached generation sessions)
+             single-row requests up to a deadline, one fused GEMM per batch;
+             generation sessions run through the continuous-batching
+             scheduler (paged KV pool), interleaved with row batches
              --packed <file.fxt> | --synthetic [--units/--width/--bits]
              [--requests <n>] [--clients <n>] [--max-batch <n>]
              [--deadline-ms <f>] [--workers <n>] [--compare]
+             [--sessions <n>]     mix in n generation sessions (needs a
+                                  generation-complete model; with --synthetic
+                                  a block+lm-head model is built, as generate)
+             [--pool-pages <n>] [--page-tokens <n>]  KV pool sizing
+             [--max-active <n>]   concurrent-session bound
+             [--prefill-chunk <n>] prompt rows prefilled per step
   generate   KV-cached autoregressive decode over a packed block model:
              prefill the prompt once, then one incremental step per token
              (greedy, or temperature/top-k sampling; token embeddings are
@@ -127,6 +134,12 @@ COMMANDS:
              [--seed <n>] [--workers <n>]
              [--compare]  also run the full-context recompute baseline and
                           verify the token streams match
+             [--sessions <n>]  decode n sessions concurrently through the
+                               continuous-batching scheduler (per-session
+                               seeds; with --compare, each stream is checked
+                               bit-identical to its solo decode)
+             [--pool-pages <n>] [--page-tokens <n>] [--max-active <n>]
+             [--prefill-chunk <n>]  scheduler sizing (as in serve)
   sweep      Run a whole experiment table from a config file
              --config configs/<exp>.toml [--set k=v …]
   figure     Emit grid-shift / histogram data for the paper's figures

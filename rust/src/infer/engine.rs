@@ -136,7 +136,7 @@ impl Engine {
     }
 
     /// An ordered contraction stack over activation rows.
-    fn stack_forward(&self, unit: &PackedUnit, h: &Tensor, fused: bool) -> Result<Tensor> {
+    pub(crate) fn stack_forward(&self, unit: &PackedUnit, h: &Tensor, fused: bool) -> Result<Tensor> {
         let mut out: Option<Tensor> = None;
         for layer in &unit.layers {
             let x = out.as_ref().unwrap_or(h);
@@ -152,7 +152,7 @@ impl Engine {
     }
 
     /// Fused (or baseline) GEMM plus bias for one packed projection.
-    fn gemm_bias(&self, x: &Tensor, l: &PackedLayer, fused: bool) -> Result<Tensor> {
+    pub(crate) fn gemm_bias(&self, x: &Tensor, l: &PackedLayer, fused: bool) -> Result<Tensor> {
         let mut y = if fused {
             kernels::gemm_fused(x, &l.mat, self.workers)?
         } else {
@@ -191,8 +191,15 @@ impl Engine {
     }
 
     /// Post-attention half of a block (`wo` projection, residual, MLP) —
-    /// shared by the full-context, prefill, and incremental decode paths.
-    fn block_tail(&self, p: &BlockParts, x: &Tensor, ctx: &Tensor, fused: bool) -> Result<Tensor> {
+    /// shared by the full-context, prefill, incremental decode, and
+    /// continuous-batching ([`crate::sched`]) paths.
+    pub(crate) fn block_tail(
+        &self,
+        p: &BlockParts,
+        x: &Tensor,
+        ctx: &Tensor,
+        fused: bool,
+    ) -> Result<Tensor> {
         let attn = self.gemm_bias(ctx, p.wo, fused)?;
         let x2 = x.zip(&attn, |a, b| a + b)?;
         let (h2, _, _) = layernorm_rows(&x2, p.g2, p.b2, LN_EPS)?;
@@ -348,20 +355,20 @@ impl Engine {
 
 /// Borrowed views of one packed transformer block's six projections and
 /// layernorm parameters (validated once per unit call).
-struct BlockParts<'a> {
-    wq: &'a PackedLayer,
-    wk: &'a PackedLayer,
-    wv: &'a PackedLayer,
-    wo: &'a PackedLayer,
-    up: &'a PackedLayer,
-    down: &'a PackedLayer,
-    g1: &'a [f32],
-    b1: &'a [f32],
-    g2: &'a [f32],
-    b2: &'a [f32],
+pub(crate) struct BlockParts<'a> {
+    pub(crate) wq: &'a PackedLayer,
+    pub(crate) wk: &'a PackedLayer,
+    pub(crate) wv: &'a PackedLayer,
+    pub(crate) wo: &'a PackedLayer,
+    pub(crate) up: &'a PackedLayer,
+    pub(crate) down: &'a PackedLayer,
+    pub(crate) g1: &'a [f32],
+    pub(crate) b1: &'a [f32],
+    pub(crate) g2: &'a [f32],
+    pub(crate) b2: &'a [f32],
 }
 
-fn block_parts(unit: &PackedUnit) -> Result<BlockParts<'_>> {
+pub(crate) fn block_parts(unit: &PackedUnit) -> Result<BlockParts<'_>> {
     let [wq, wk, wv, wo, up, down] = match unit.layers.as_slice() {
         [a, b, c, d, e, f] => [a, b, c, d, e, f],
         _ => bail!(

@@ -26,8 +26,9 @@
 //!   full-context recompute baseline (`flexround generate`);
 //! * [`serve`] — a micro-batched request queue ([`Server`]) that coalesces
 //!   single-row requests up to a batch deadline, runs one fused GEMM per
-//!   batch, and fans results back out — plus whole generation sessions
-//!   through the same queue (`flexround serve`).
+//!   batch, and fans results back out — with generation sessions enqueued
+//!   into the continuous-batching scheduler ([`crate::sched`]) and stepped
+//!   alongside row batches (`flexround serve`).
 
 pub mod engine;
 pub mod generate;
@@ -40,4 +41,4 @@ pub use engine::{synthetic_model, Engine};
 pub use generate::{GenOpts, Generated};
 pub use kv::{BlockKv, GenState, KvCache};
 pub use packed::{PackedLayer, PackedMatrix, PackedModel, PackedUnit};
-pub use serve::{drive, BatchPolicy, Client, Server, ServeStats, MAX_GEN_TOKENS};
+pub use serve::{drive, drive_mixed, BatchPolicy, Client, Server, ServeStats, MAX_GEN_TOKENS};

@@ -9,20 +9,33 @@
 //! and fans the result rows back to their callers.  Latency is bounded by
 //! the deadline; throughput approaches the batched-GEMM rate as load rises.
 //!
-//! Alongside row micro-batching the queue carries whole **generation
-//! sessions** ([`Client::generate`]): a prompt plus sampling options, run on
-//! the batcher thread through the KV-cached decode loop
-//! (`infer::generate`), answered with the sampled token ids.
+//! Generation sessions ([`Client::generate`]) do **not** run synchronously
+//! on the batcher thread (pre-continuous-batching they did, and one long
+//! session head-of-line blocked every row request behind it).  Instead the
+//! batcher owns a [`Scheduler`]: sessions are enqueued into it on arrival,
+//! and the main loop alternates one row batch with **one scheduler step**
+//! — every running session advances one token (or one prefill chunk) per
+//! step, so row latency stays bounded by the batch deadline plus a single
+//! step even while arbitrarily long generations are in flight, and
+//! concurrent sessions share each step's fused GEMMs.  The token streams
+//! are bit-identical to the solo [`generate::generate`] path (the
+//! scheduler's contract, pinned in `rust/tests/sched.rs`).  Models without
+//! an lm head fall back to the synchronous path — generation fails fast on
+//! them anyway.
 //!
 //! The pieces:
 //!
-//! * [`Server::start`] — spawns the batcher thread owning the [`Engine`];
+//! * [`Server::start`] / [`Server::start_with`] — spawn the batcher thread
+//!   owning the [`Engine`] (and its [`Scheduler`], sized by [`SchedConfig`]);
 //! * [`Client`] — cheap cloneable handle; [`Client::call`] blocks for the
 //!   result, [`Client::submit`] returns the response channel for pipelined
 //!   callers, [`Client::generate`] blocks for a whole token stream;
 //! * [`drive`] — a synchronous load generator (CLI `serve` subcommand and
 //!   `benches/infer.rs`): N client threads × M rows, returns wall time and
-//!   the server-side [`ServeStats`].
+//!   the server-side [`ServeStats`];
+//! * [`drive_mixed`] — the contention load generator: a seeded, reproducible
+//!   interleave of single-row requests and generation sessions of varying
+//!   prompt/decode lengths, exercising rows racing sessions for the batcher.
 //!
 //! ## Shutdown contract
 //!
@@ -30,17 +43,21 @@
 //! mutex-guarded sender, so the `Msg::Shutdown` marker is a true barrier in
 //! the queue: **a request whose submit returned `Ok` is guaranteed a real
 //! response** — including a batch still being collected when the marker
-//! lands — and any submit after the marker fails fast with "server is shut
-//! down".  (Without the gate, a request could race into the queue *behind*
-//! the marker and be silently dropped; the regression test below pins
-//! this.)  Shutdown never blocks on straggler [`Client`] clones.
+//! lands, and every generation session already inside the scheduler (the
+//! batcher keeps stepping until the scheduler drains before it exits) — and
+//! any submit after the marker fails fast with "server is shut down".
+//! (Without the gate, a request could race into the queue *behind* the
+//! marker and be silently dropped; the regression test below pins this.)
+//! Shutdown never blocks on straggler [`Client`] clones.
 
 use super::engine::Engine;
 use super::generate::{self, GenOpts};
+use crate::sched::{SchedConfig, Scheduler};
 use crate::tensor::Tensor;
+use crate::util::stats::percentile;
 use crate::Result;
 use anyhow::anyhow;
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -60,6 +77,12 @@ impl Default for BatchPolicy {
 }
 
 /// Server-side counters, returned by [`Server::shutdown`].
+///
+/// Latency percentiles are nearest-rank over every answered request:
+/// *wait* is submit → work start (row: its batch's GEMM launch; session:
+/// admission into the scheduler), *service* is work start → answer (row:
+/// its batch's GEMM; session: scheduler residency, concurrent sessions
+/// overlapping).  Occupancy counters come from the scheduler at shutdown.
 #[derive(Clone, Debug, Default)]
 pub struct ServeStats {
     /// rows answered
@@ -74,8 +97,29 @@ pub struct ServeStats {
     pub gen_sessions: u64,
     /// tokens emitted across all generation sessions
     pub gen_tokens: u64,
-    /// seconds spent inside generation (prefill + decode)
+    /// summed per-session residency seconds (sessions overlap, so this can
+    /// exceed wall time)
     pub gen_secs: f64,
+    /// row queue-wait percentiles, milliseconds
+    pub row_wait_p50_ms: f64,
+    pub row_wait_p99_ms: f64,
+    /// row service-time percentiles, milliseconds
+    pub row_service_p50_ms: f64,
+    pub row_service_p99_ms: f64,
+    /// session queue-wait percentiles, milliseconds
+    pub gen_wait_p50_ms: f64,
+    pub gen_wait_p99_ms: f64,
+    /// session service-time percentiles, milliseconds
+    pub gen_service_p50_ms: f64,
+    pub gen_service_p99_ms: f64,
+    /// scheduler steps executed (each one batched model forward)
+    pub sched_steps: u64,
+    /// most sessions simultaneously running in the scheduler
+    pub peak_sessions: usize,
+    /// most KV pool pages simultaneously in use
+    pub peak_pages: usize,
+    /// sessions evicted (spilled) under pool pressure
+    pub evictions: u64,
 }
 
 impl ServeStats {
@@ -92,12 +136,15 @@ impl ServeStats {
 struct Request {
     row: Vec<f32>,
     resp: Sender<Result<Vec<f32>>>,
+    /// client-side submit instant (queue-wait measurement)
+    t: Instant,
 }
 
 struct GenRequest {
     prompt: Vec<f32>,
     opts: GenOpts,
     resp: Sender<Result<Vec<usize>>>,
+    t: Instant,
 }
 
 /// Queue messages.  `Shutdown` exists because dropping the server's own
@@ -150,7 +197,7 @@ impl Client {
             ));
         }
         let (tx, rx) = channel();
-        self.gate.send(Msg::Req(Request { row, resp: tx }))?;
+        self.gate.send(Msg::Req(Request { row, resp: tx, t: Instant::now() }))?;
         Ok(rx)
     }
 
@@ -163,11 +210,13 @@ impl Client {
 
     /// Submit a whole generation session: `prompt` is `t ≥ 1` flattened
     /// token rows (`t · tok_width` values).  Blocks until the sampled token
-    /// ids come back; the session runs KV-cached on the batcher thread
-    /// *between* row batches (row traffic waits out the session, so the
-    /// deadline bound does not cover it), and the server caps `max_new` at
-    /// [`MAX_GEN_TOKENS`] so one session cannot pin the batcher — or stall
-    /// [`Server::shutdown`] — indefinitely.
+    /// ids come back.  The session runs inside the batcher's scheduler,
+    /// interleaved step-by-step with row batches and other sessions —
+    /// concurrent callers share each step's fused GEMMs, and the token
+    /// stream is bit-identical to running [`generate::generate`] alone.
+    /// The server caps `max_new` at [`MAX_GEN_TOKENS`] and rejects longer
+    /// prompts so one session cannot exhaust the pool or stall
+    /// [`Server::shutdown`] indefinitely.
     pub fn generate(&self, prompt: Vec<f32>, opts: GenOpts) -> Result<Vec<usize>> {
         if prompt.is_empty() || prompt.len() % self.tok_width != 0 {
             return Err(anyhow!(
@@ -184,7 +233,7 @@ impl Client {
             ));
         }
         let (tx, rx) = channel();
-        self.gate.send(Msg::Gen(GenRequest { prompt, opts, resp: tx }))?;
+        self.gate.send(Msg::Gen(GenRequest { prompt, opts, resp: tx, t: Instant::now() }))?;
         rx.recv()
             .map_err(|_| anyhow!("server dropped the generation session (shutting down?)"))?
     }
@@ -199,14 +248,21 @@ pub struct Server {
 }
 
 impl Server {
-    /// Spawn the batcher thread.  Fails on an empty model (no input width).
+    /// Spawn the batcher thread with default scheduler sizing.  Fails on an
+    /// empty model (no input width).
     pub fn start(engine: Engine, policy: BatchPolicy) -> Result<Server> {
+        Server::start_with(engine, policy, SchedConfig::default())
+    }
+
+    /// Spawn the batcher thread with explicit scheduler sizing (pool pages,
+    /// page size, active-session bound, prefill chunk, spill dir).
+    pub fn start_with(engine: Engine, policy: BatchPolicy, cfg: SchedConfig) -> Result<Server> {
         let width = engine.in_width()?;
         let tok_width = engine.model().in_width().unwrap_or(width).max(1);
         let max_batch = policy.max_batch.max(1);
         let (tx, rx) = channel::<Msg>();
         let handle =
-            std::thread::spawn(move || run_batcher(engine, rx, max_batch, policy.deadline));
+            std::thread::spawn(move || run_batcher(engine, rx, max_batch, policy.deadline, cfg));
         Ok(Server { gate: Arc::new(Gate { tx: Mutex::new(Some(tx)) }), width, tok_width, handle })
     }
 
@@ -217,9 +273,10 @@ impl Server {
     /// Stop the batcher and join it.  The gate closes and the stop marker is
     /// queued under one lock, so shutdown is a clean barrier: every request
     /// accepted before it gets a real response (a batch still being
-    /// collected when the marker lands is executed and answered), and every
-    /// submit after it fails with "server is shut down".  Never blocks on
-    /// straggler [`Client`] clones.
+    /// collected when the marker lands is executed and answered, and the
+    /// scheduler is stepped until every in-flight session completes), and
+    /// every submit after it fails with "server is shut down".  Never blocks
+    /// on straggler [`Client`] clones.
     pub fn shutdown(self) -> Result<ServeStats> {
         let Server { gate, width: _, tok_width: _, handle } = self;
         {
@@ -232,95 +289,266 @@ impl Server {
     }
 }
 
+/// The batcher's compute core: a scheduler when the model can generate
+/// (lm head present), the bare engine otherwise.
+enum Core {
+    Sched(Box<Scheduler>),
+    Plain(Engine),
+}
+
+impl Core {
+    fn engine(&self) -> &Engine {
+        match self {
+            Core::Sched(s) => s.engine(),
+            Core::Plain(e) => e,
+        }
+    }
+
+    fn busy(&self) -> bool {
+        matches!(self, Core::Sched(s) if s.has_work())
+    }
+}
+
+/// An in-flight generation session: scheduler handle → response channel,
+/// with its admission instant for the service-time sample.
+struct PendingGen {
+    handle: u64,
+    resp: Sender<Result<Vec<usize>>>,
+    admitted: Instant,
+}
+
+fn ms(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+/// Latency samples collected while the batcher runs, folded into
+/// [`ServeStats`] percentiles at exit.
+#[derive(Default)]
+struct LatSamples {
+    row_wait: Vec<f64>,
+    row_service: Vec<f64>,
+    gen_wait: Vec<f64>,
+    gen_service: Vec<f64>,
+}
+
+impl LatSamples {
+    fn fold_into(mut self, stats: &mut ServeStats) {
+        let pctl = |s: &mut [f64], p: f64| if s.is_empty() { 0.0 } else { percentile(s, p) };
+        stats.row_wait_p50_ms = pctl(&mut self.row_wait, 50.0);
+        stats.row_wait_p99_ms = pctl(&mut self.row_wait, 99.0);
+        stats.row_service_p50_ms = pctl(&mut self.row_service, 50.0);
+        stats.row_service_p99_ms = pctl(&mut self.row_service, 99.0);
+        stats.gen_wait_p50_ms = pctl(&mut self.gen_wait, 50.0);
+        stats.gen_wait_p99_ms = pctl(&mut self.gen_wait, 99.0);
+        stats.gen_service_p50_ms = pctl(&mut self.gen_service, 50.0);
+        stats.gen_service_p99_ms = pctl(&mut self.gen_service, 99.0);
+    }
+}
+
+/// Route one queue message: rows open/extend the current batch, sessions
+/// go straight into the scheduler (or run synchronously on the no-head
+/// fallback path), the shutdown marker closes intake.
+#[allow(clippy::too_many_arguments)]
+fn ingest(
+    msg: Msg,
+    batch: &mut Vec<Request>,
+    opened: &mut Option<Instant>,
+    core: &mut Core,
+    pending: &mut Vec<PendingGen>,
+    stats: &mut ServeStats,
+    lat: &mut LatSamples,
+    open: &mut bool,
+) {
+    match msg {
+        Msg::Req(r) => {
+            if batch.is_empty() {
+                *opened = Some(Instant::now());
+            }
+            batch.push(r);
+        }
+        Msg::Gen(g) => match core {
+            Core::Sched(s) => {
+                let GenRequest { prompt, mut opts, resp, t } = g;
+                opts.max_new = opts.max_new.min(MAX_GEN_TOKENS);
+                let rows = prompt.len() / s.engine().model().in_width().unwrap_or(1).max(1);
+                if rows > MAX_GEN_TOKENS {
+                    // belt-and-braces twin of the Client-side check, so the
+                    // invariant holds even if a future producer skips
+                    // Client::generate
+                    let _ = resp.send(Err(anyhow!(
+                        "generation prompt has {rows} rows, the server accepts at most \
+                         {MAX_GEN_TOKENS}"
+                    )));
+                    return;
+                }
+                match s.submit(prompt, opts) {
+                    Ok(handle) => {
+                        lat.gen_wait.push(ms(t.elapsed()));
+                        pending.push(PendingGen { handle, resp, admitted: Instant::now() });
+                    }
+                    Err(e) => {
+                        let _ = resp.send(Err(anyhow!("generation session rejected: {e:#}")));
+                    }
+                }
+            }
+            Core::Plain(e) => {
+                lat.gen_wait.push(ms(g.t.elapsed()));
+                run_gen(e, g, stats, &mut lat.gen_service);
+            }
+        },
+        Msg::Shutdown => *open = false,
+    }
+}
+
 fn run_batcher(
     engine: Engine,
     rx: Receiver<Msg>,
     max_batch: usize,
     deadline: Duration,
+    cfg: SchedConfig,
 ) -> ServeStats {
     let mut stats = ServeStats::default();
+    let mut lat = LatSamples::default();
+    let mut core = match Scheduler::supported(engine.model()) {
+        Ok(()) => Core::Sched(Box::new(
+            Scheduler::new(engine, cfg).expect("scheduler construction was pre-validated"),
+        )),
+        Err(_) => Core::Plain(engine),
+    };
+    let mut pending: Vec<PendingGen> = Vec::new();
     let mut open = true;
-    while open {
-        // block until a batch opens (generation sessions run immediately —
-        // they own the engine for many sequential steps anyway)
-        let first = match rx.recv() {
-            Ok(Msg::Req(r)) => r,
-            Ok(Msg::Gen(g)) => {
-                run_gen(&engine, g, &mut stats);
-                continue;
+    // after the shutdown marker the loop keeps running until the scheduler
+    // drains — every accepted session gets its real answer
+    while open || core.busy() || !pending.is_empty() {
+        let mut batch: Vec<Request> = Vec::new();
+        let mut opened: Option<Instant> = None;
+        // idle (no scheduler work): block until something arrives
+        if open && !core.busy() {
+            match rx.recv() {
+                Ok(m) => {
+                    ingest(m, &mut batch, &mut opened, &mut core, &mut pending, &mut stats, &mut lat, &mut open)
+                }
+                Err(_) => open = false,
             }
-            Ok(Msg::Shutdown) | Err(_) => break,
-        };
-        let opened = Instant::now();
-        let mut batch = vec![first];
-        // generation sessions arriving while the batch coalesces run after
-        // its GEMM, so row latency stays bounded by the deadline
-        let mut gens: Vec<GenRequest> = Vec::new();
-        while batch.len() < max_batch {
-            let Some(left) = deadline.checked_sub(opened.elapsed()) else { break };
-            match rx.recv_timeout(left) {
-                Ok(Msg::Req(r)) => batch.push(r),
-                Ok(Msg::Gen(g)) => gens.push(g),
-                Err(RecvTimeoutError::Timeout) => break,
-                Ok(Msg::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
-                    // the in-flight batch (and any collected generation
-                    // sessions) must still be executed and answered — the
-                    // shutdown barrier guarantees nothing accepted sits
-                    // behind the marker
-                    open = false;
-                    break;
+        }
+        // coalesce: wait out the deadline while idle, but only drain what is
+        // already queued while the scheduler has sessions to step — a full
+        // deadline sleep per token would serialize decode behind the clock
+        while open && batch.len() < max_batch {
+            if core.busy() {
+                match rx.try_recv() {
+                    Ok(m) => ingest(m, &mut batch, &mut opened, &mut core, &mut pending, &mut stats, &mut lat, &mut open),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => open = false,
+                }
+            } else {
+                let Some(t0) = opened else { break };
+                let Some(left) = deadline.checked_sub(t0.elapsed()) else { break };
+                match rx.recv_timeout(left) {
+                    Ok(m) => ingest(m, &mut batch, &mut opened, &mut core, &mut pending, &mut stats, &mut lat, &mut open),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => open = false,
                 }
             }
         }
-        let n = batch.len();
-        let width = batch[0].row.len();
-        let mut flat = Vec::with_capacity(n * width);
-        for r in &batch {
-            flat.extend_from_slice(&r.row);
-        }
-        let t0 = Instant::now();
-        let result = Tensor::from_f32(flat, &[n, width]).and_then(|x| engine.forward(&x));
-        stats.gemm_secs += t0.elapsed().as_secs_f64();
-        stats.batches += 1;
-        stats.requests += n as u64;
-        stats.max_batch = stats.max_batch.max(n);
-        match result {
-            Ok(y) => {
-                let out_w = y.shape()[1];
-                let yv = y.as_f32().expect("engine output is f32");
-                for (i, r) in batch.into_iter().enumerate() {
-                    let _ = r.resp.send(Ok(yv[i * out_w..(i + 1) * out_w].to_vec()));
+        // the collected row batch: one fused GEMM, fan the rows back out
+        if !batch.is_empty() {
+            let n = batch.len();
+            let width = batch[0].row.len();
+            let mut flat = Vec::with_capacity(n * width);
+            for r in &batch {
+                flat.extend_from_slice(&r.row);
+            }
+            let t0 = Instant::now();
+            for r in &batch {
+                lat.row_wait.push(ms(r.t.elapsed()));
+            }
+            let result =
+                Tensor::from_f32(flat, &[n, width]).and_then(|x| core.engine().forward(&x));
+            let dt = t0.elapsed();
+            stats.gemm_secs += dt.as_secs_f64();
+            stats.batches += 1;
+            stats.requests += n as u64;
+            stats.max_batch = stats.max_batch.max(n);
+            for _ in 0..n {
+                lat.row_service.push(ms(dt));
+            }
+            match result {
+                Ok(y) => {
+                    let out_w = y.shape()[1];
+                    let yv = y.as_f32().expect("engine output is f32");
+                    for (i, r) in batch.into_iter().enumerate() {
+                        let _ = r.resp.send(Ok(yv[i * out_w..(i + 1) * out_w].to_vec()));
+                    }
+                }
+                Err(e) => {
+                    for r in batch {
+                        let _ = r.resp.send(Err(anyhow!("batched forward failed: {e:#}")));
+                    }
                 }
             }
-            Err(e) => {
-                for r in batch {
-                    let _ = r.resp.send(Err(anyhow!("batched forward failed: {e:#}")));
+        }
+        // one scheduler step: every running session advances one chunk/token
+        if let Core::Sched(s) = &mut core {
+            if s.has_work() {
+                match s.step() {
+                    Ok(_) => {
+                        for fin in s.take_finished() {
+                            let Some(pos) = pending.iter().position(|p| p.handle == fin.handle)
+                            else {
+                                continue;
+                            };
+                            let p = pending.swap_remove(pos);
+                            let dt = p.admitted.elapsed();
+                            lat.gen_service.push(ms(dt));
+                            stats.gen_secs += dt.as_secs_f64();
+                            stats.gen_sessions += 1;
+                            stats.gen_tokens += fin.tokens.len() as u64;
+                            let _ = p.resp.send(Ok(fin.tokens));
+                        }
+                    }
+                    Err(e) => {
+                        // a failed step poisons every in-flight session: give
+                        // each its real error instead of a hang
+                        s.abort_all();
+                        for p in pending.drain(..) {
+                            let _ = p
+                                .resp
+                                .send(Err(anyhow!("scheduled generation failed: {e:#}")));
+                        }
+                    }
                 }
             }
-        }
-        for g in gens {
-            run_gen(&engine, g, &mut stats);
         }
     }
+    if let Core::Sched(s) = &core {
+        stats.sched_steps = s.steps();
+        let (peak_sessions, peak_pages) = s.occupancy_peaks();
+        stats.peak_sessions = peak_sessions;
+        stats.peak_pages = peak_pages;
+        stats.evictions = s.evictions();
+    }
+    lat.fold_into(&mut stats);
     stats
 }
 
 /// Server-side ceiling on tokens per generation session — applied to both
 /// `max_new` (clamped) and the prompt length (rejected): both are
-/// client-supplied, and the batcher runs sessions synchronously, so an
-/// uncapped request would head-of-line block every row request and keep
-/// [`Server::shutdown`] joining forever.
+/// client-supplied, and an uncapped request could exhaust the KV pool's
+/// admission bound (or, on the no-head fallback path, pin the batcher) and
+/// keep [`Server::shutdown`] joining forever.
 pub const MAX_GEN_TOKENS: usize = 4096;
 
-/// Run one generation session on the batcher thread and answer it.
-fn run_gen(engine: &Engine, g: GenRequest, stats: &mut ServeStats) {
-    let GenRequest { prompt, mut opts, resp } = g;
+/// Fallback for models the scheduler does not support (no lm head): run the
+/// session synchronously on the batcher thread and answer it.  Generation
+/// on such models fails fast inside [`generate::generate`], so this path
+/// never holds the thread for long.
+fn run_gen(engine: &Engine, g: GenRequest, stats: &mut ServeStats, service: &mut Vec<f64>) {
+    let GenRequest { prompt, mut opts, resp, t: _ } = g;
     opts.max_new = opts.max_new.min(MAX_GEN_TOKENS);
     let d = engine.model().in_width().unwrap_or(1).max(1);
     let rows = prompt.len() / d;
     if rows > MAX_GEN_TOKENS {
-        // belt-and-braces twin of the Client-side check, so the invariant
-        // holds even if a future producer skips Client::generate
         let _ = resp.send(Err(anyhow!(
             "generation prompt has {rows} rows, the server accepts at most {MAX_GEN_TOKENS}"
         )));
@@ -329,7 +557,9 @@ fn run_gen(engine: &Engine, g: GenRequest, stats: &mut ServeStats) {
     let t0 = Instant::now();
     let result = Tensor::from_f32(prompt, &[rows, d])
         .and_then(|x| generate::generate(engine, &x, &opts));
-    stats.gen_secs += t0.elapsed().as_secs_f64();
+    let dt = t0.elapsed();
+    stats.gen_secs += dt.as_secs_f64();
+    service.push(ms(dt));
     stats.gen_sessions += 1;
     match result {
         Ok(gen) => {
@@ -373,6 +603,98 @@ pub fn drive(
     let stats = server.shutdown()?;
     if failures > 0 {
         return Err(anyhow!("drive: {failures}/{n} requests failed"));
+    }
+    Ok((secs, stats))
+}
+
+/// One operation of the [`drive_mixed`] workload.
+enum MixedOp {
+    Row(Vec<f32>),
+    Gen { prompt: Vec<f32>, opts: GenOpts },
+}
+
+/// Seeded mixed load generator: `n_rows` single-row requests interleaved
+/// with `n_gens` generation sessions of varying prompt/decode lengths and
+/// sampling settings, shuffled deterministically via [`Pcg32`] and split
+/// across `clients` threads — the scheduler under realistic contention,
+/// reproducibly.  Requires a generation-complete model when `n_gens > 0`.
+/// Returns `(wall_seconds, stats)`; errors if any request failed.
+///
+/// [`Pcg32`]: crate::util::rng::Pcg32
+pub fn drive_mixed(
+    engine: Engine,
+    policy: BatchPolicy,
+    cfg: SchedConfig,
+    n_rows: usize,
+    n_gens: usize,
+    clients: usize,
+    seed: u64,
+) -> Result<(f64, ServeStats)> {
+    use crate::util::rng::Pcg32;
+    if n_rows + n_gens == 0 {
+        return Err(anyhow!("drive_mixed: no work (n_rows + n_gens == 0)"));
+    }
+    if n_gens > 0 {
+        Scheduler::supported(engine.model())
+            .map_err(|e| anyhow!("drive_mixed: model cannot serve generation sessions: {e:#}"))?;
+    }
+    let width = engine.in_width()?;
+    let mut rng = Pcg32::seeded(seed);
+    let mut ops: Vec<MixedOp> = Vec::with_capacity(n_rows + n_gens);
+    {
+        let mut row_rng = rng.fork(1);
+        for _ in 0..n_rows {
+            ops.push(MixedOp::Row((0..width).map(|_| row_rng.next_normal()).collect()));
+        }
+    }
+    for gi in 0..n_gens {
+        let prompt_len = 1 + rng.below(8) as usize;
+        let (_, prompt) = generate::random_prompt(engine.model(), prompt_len, seed ^ gi as u64)?;
+        let opts = GenOpts {
+            max_new: 1 + rng.below(24) as usize,
+            temp: [0.0, 0.7, 1.0][rng.below(3) as usize],
+            top_k: [0usize, 4, 8][rng.below(3) as usize],
+            seed: seed.wrapping_add(0x5851_F42D).wrapping_mul(1 + gi as u64),
+        };
+        ops.push(MixedOp::Gen { prompt: prompt.as_f32()?.to_vec(), opts });
+    }
+    // Fisher–Yates: the interleave (and thus the contention pattern) is a
+    // pure function of `seed`
+    for i in (1..ops.len()).rev() {
+        let j = rng.below(i as u32 + 1) as usize;
+        ops.swap(i, j);
+    }
+    let n = ops.len();
+    let server = Server::start_with(engine, policy, cfg)?;
+    let clients = clients.clamp(1, n);
+    let chunk = n.div_ceil(clients);
+    let t0 = Instant::now();
+    let chunks: Vec<Vec<MixedOp>> = {
+        let mut it = ops.into_iter();
+        (0..n.div_ceil(chunk)).map(|_| it.by_ref().take(chunk).collect()).collect()
+    };
+    let failures: usize = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for slice in chunks {
+            let client = server.client();
+            handles.push(s.spawn(move || {
+                slice
+                    .into_iter()
+                    .filter(|op| match op {
+                        MixedOp::Row(r) => client.call(r.clone()).is_err(),
+                        MixedOp::Gen { prompt, opts } => {
+                            client.generate(prompt.clone(), *opts).is_err()
+                        }
+                    })
+                    .count()
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("client thread panicked")).sum()
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown()?;
+    if failures > 0 {
+        return Err(anyhow!("drive_mixed: {failures}/{n} requests failed"));
     }
     Ok((secs, stats))
 }
@@ -454,6 +776,10 @@ mod tests {
         assert!(secs > 0.0);
         assert_eq!(stats.requests, 64);
         assert!(stats.mean_batch() >= 1.0);
+        // percentiles come back populated and ordered
+        assert!(stats.row_wait_p99_ms >= stats.row_wait_p50_ms);
+        assert!(stats.row_service_p99_ms >= stats.row_service_p50_ms);
+        assert!(stats.row_service_p50_ms > 0.0);
     }
 
     #[test]
@@ -522,12 +848,101 @@ mod tests {
         // bad prompts are rejected before queueing; bad sessions answer with
         // an error instead of hanging
         assert!(client.generate(vec![0.0; 3], opts).is_err());
-        // over-long prompts are refused (head-of-line/shutdown-stall guard)
+        // over-long prompts are refused (pool-exhaustion/shutdown-stall guard)
         assert!(client.generate(vec![0.0; (MAX_GEN_TOKENS + 1) * 8], opts).is_err());
         let stats = server.shutdown().unwrap();
         assert_eq!(stats.gen_sessions, 1);
         assert_eq!(stats.gen_tokens as usize, want.len());
         assert_eq!(stats.requests, 1);
         assert!(stats.gen_secs >= 0.0);
+        assert!(stats.sched_steps >= want.len() as u64, "one step per emitted token at least");
+        assert_eq!(stats.peak_sessions, 1);
+        assert!(stats.peak_pages >= 1);
+    }
+
+    #[test]
+    fn long_generation_does_not_head_of_line_block_rows() {
+        // Regression (PR 7): a generation session used to run to completion
+        // on the batcher thread, so a queued row request waited out the
+        // whole session instead of the batch deadline.  Now sessions advance
+        // one scheduler step at a time: a row submitted mid-generation must
+        // come back while the session is still in flight.
+        use crate::infer::generate::{self, GenOpts};
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let model = generate::synthetic_lm(2, 16, 4, 32, 4, 24, 4, 5).unwrap();
+        let (_, prompt) = generate::random_prompt(&model, 3, 7).unwrap();
+        let server = Server::start(
+            Engine::new(model, 1),
+            BatchPolicy { max_batch: 4, deadline: Duration::from_micros(200) },
+        )
+        .unwrap();
+        // thousands of decode steps: plenty of runway for the row below
+        let opts = GenOpts { max_new: MAX_GEN_TOKENS, temp: 0.9, top_k: 8, seed: 3 };
+        let done = Arc::new(AtomicBool::new(false));
+        let gen_client = server.client();
+        let gen_done = Arc::clone(&done);
+        let gen_prompt = prompt.as_f32().unwrap().to_vec();
+        let gen_thread = std::thread::spawn(move || {
+            let out = gen_client.generate(gen_prompt, opts);
+            gen_done.store(true, Ordering::SeqCst);
+            out
+        });
+        // give the session a moment to land in the scheduler
+        std::thread::sleep(Duration::from_micros(500));
+        let client = server.client();
+        let row_out = client.call(vec![0.25; 4 * 16]).unwrap();
+        assert_eq!(row_out.len(), 4 * 24);
+        assert!(
+            !done.load(Ordering::SeqCst),
+            "row request waited out the whole generation session (head-of-line blocking)"
+        );
+        let tokens = gen_thread.join().unwrap().unwrap();
+        assert_eq!(tokens.len(), MAX_GEN_TOKENS);
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.gen_sessions, 1);
+        assert!(stats.sched_steps as usize >= MAX_GEN_TOKENS);
+    }
+
+    #[test]
+    fn drive_mixed_reports_contention_stats() {
+        use crate::infer::generate;
+        let model = generate::synthetic_lm(2, 8, 2, 16, 4, 12, 4, 5).unwrap();
+        let policy = BatchPolicy { max_batch: 8, deadline: Duration::from_micros(500) };
+        let (secs, stats) = drive_mixed(
+            Engine::new(model, 1),
+            policy,
+            SchedConfig::default(),
+            24,
+            6,
+            4,
+            42,
+        )
+        .unwrap();
+        assert!(secs > 0.0);
+        assert_eq!(stats.requests, 24);
+        assert_eq!(stats.gen_sessions, 6);
+        assert!(stats.gen_tokens >= 6, "every session emits at least one token");
+        assert!(stats.sched_steps >= 1);
+        assert!(stats.peak_sessions >= 1);
+        assert!(stats.gen_service_p99_ms >= stats.gen_service_p50_ms);
+        // rows must not error against a generating scheduler
+        // (drive_mixed already failed the whole run if any did)
+    }
+
+    #[test]
+    fn drive_mixed_is_seed_reproducible_in_shape() {
+        use crate::infer::generate;
+        let mk = || Engine::new(generate::synthetic_lm(2, 8, 2, 16, 4, 12, 4, 5).unwrap(), 1);
+        let policy = BatchPolicy { max_batch: 4, deadline: Duration::from_micros(200) };
+        let (_, a) = drive_mixed(mk(), policy, SchedConfig::default(), 10, 4, 2, 7).unwrap();
+        let (_, b) = drive_mixed(mk(), policy, SchedConfig::default(), 10, 4, 2, 7).unwrap();
+        // same seed ⇒ same workload ⇒ same token volume (timing may differ)
+        assert_eq!(a.gen_tokens, b.gen_tokens, "seeded workload must be reproducible");
+        assert_eq!(a.requests, b.requests);
+        assert_eq!(a.gen_sessions, b.gen_sessions);
+        // rows-only workloads reject gens cleanly on headless models
+        let headless = Engine::new(synthetic_model(2, 16, 4, 3).unwrap(), 1);
+        assert!(drive_mixed(headless, policy, SchedConfig::default(), 0, 2, 1, 1).is_err());
     }
 }

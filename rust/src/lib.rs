@@ -46,6 +46,7 @@ pub mod quant;
 pub mod recon;
 pub mod report;
 pub mod runtime;
+pub mod sched;
 pub mod ser;
 pub mod sweep;
 pub mod tensor;

@@ -456,6 +456,10 @@ fn cmd_generate(args: &Args) -> Result<()> {
         seed: args.usize_flag("seed", 7) as u64,
     };
     let engine = Engine::new(model, workers);
+    let sessions = args.usize_flag("sessions", 1).max(1);
+    if sessions > 1 {
+        return generate_sessions(args, engine, &opts, sessions);
+    }
     let (prompt_toks, prompt) =
         generate::random_prompt(engine.model(), args.usize_flag("prompt-len", 4), opts.seed)?;
     let gen = generate::generate(&engine, &prompt, &opts)?;
@@ -484,6 +488,75 @@ fn cmd_generate(args: &Args) -> Result<()> {
                 " (STREAM MISMATCH — file a bug)"
             }
         );
+    }
+    Ok(())
+}
+
+/// Scheduler sizing from the CLI flags (`serve` and `generate --sessions`).
+fn sched_cfg_from(args: &Args) -> flexround::sched::SchedConfig {
+    let d = flexround::sched::SchedConfig::default();
+    flexround::sched::SchedConfig {
+        pool_pages: args.usize_flag("pool-pages", d.pool_pages),
+        page_tokens: args.usize_flag("page-tokens", d.page_tokens),
+        max_active: args.usize_flag("max-active", d.max_active),
+        prefill_chunk: args.usize_flag("prefill-chunk", d.prefill_chunk),
+        spill_dir: None,
+    }
+}
+
+/// `flexround generate --sessions n`: decode `n` concurrent sessions
+/// through the continuous-batching scheduler — each with its own prompt,
+/// sampling seed, and KV pages — and report aggregate throughput.  With
+/// `--compare`, every stream is checked bit-identical to its solo
+/// KV-cached decode.
+fn generate_sessions(
+    args: &Args,
+    engine: flexround::infer::Engine,
+    opts: &flexround::infer::GenOpts,
+    sessions: usize,
+) -> Result<()> {
+    use flexround::infer::generate;
+    use flexround::sched::Scheduler;
+    let prompt_len = args.usize_flag("prompt-len", 4);
+    let mut sched = Scheduler::new(engine, sched_cfg_from(args))?;
+    let mut prompts = Vec::with_capacity(sessions);
+    for i in 0..sessions {
+        let (_, prompt) =
+            generate::random_prompt(sched.engine().model(), prompt_len, opts.seed + i as u64)?;
+        prompts.push(prompt);
+    }
+    let mut session_opts = Vec::with_capacity(sessions);
+    let t0 = std::time::Instant::now();
+    for (i, prompt) in prompts.iter().enumerate() {
+        let o = flexround::infer::GenOpts { seed: opts.seed + i as u64, ..*opts };
+        sched.submit(prompt.as_f32()?.to_vec(), o)?;
+        session_opts.push(o);
+    }
+    let mut finished = sched.run_all()?;
+    let secs = t0.elapsed().as_secs_f64();
+    finished.sort_by_key(|f| f.handle);
+    let total: usize = finished.iter().map(|f| f.tokens.len()).sum();
+    println!(
+        "scheduler: {sessions} sessions × {} tokens in {secs:.3}s → {:.0} tok/s aggregate \
+         ({} steps, peak pages {}, evictions {})",
+        opts.max_new,
+        total as f64 / secs.max(1e-9),
+        sched.steps(),
+        sched.occupancy_peaks().1,
+        sched.evictions()
+    );
+    if args.has("compare") {
+        let mut mismatches = 0usize;
+        for (i, fin) in finished.iter().enumerate() {
+            let solo = generate::generate(sched.engine(), &prompts[i], &session_opts[i])?;
+            if solo.tokens != fin.tokens {
+                mismatches += 1;
+            }
+        }
+        if mismatches > 0 {
+            bail!("{mismatches}/{sessions} scheduled streams diverged from solo decode");
+        }
+        println!("compare: all {sessions} streams bit-identical to solo KV-cached decode");
     }
     Ok(())
 }
@@ -573,20 +646,90 @@ fn cmd_infer(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The serve summary's latency/occupancy lines (shared with `--sessions`
+/// runs so mixed and rows-only output stay comparable).
+fn print_serve_stats(stats: &flexround::infer::ServeStats) {
+    println!(
+        "latency: row wait p50 {:.3}ms / p99 {:.3}ms · service p50 {:.3}ms / p99 {:.3}ms",
+        stats.row_wait_p50_ms,
+        stats.row_wait_p99_ms,
+        stats.row_service_p50_ms,
+        stats.row_service_p99_ms
+    );
+    if stats.gen_sessions > 0 {
+        println!(
+            "sessions: {} answered, {} tokens · wait p50 {:.3}ms / p99 {:.3}ms · \
+             service p50 {:.3}ms / p99 {:.3}ms",
+            stats.gen_sessions,
+            stats.gen_tokens,
+            stats.gen_wait_p50_ms,
+            stats.gen_wait_p99_ms,
+            stats.gen_service_p50_ms,
+            stats.gen_service_p99_ms
+        );
+        println!(
+            "scheduler: {} steps · peak {} active sessions · peak {} pool pages · \
+             {} evictions",
+            stats.sched_steps,
+            stats.peak_sessions,
+            stats.peak_pages,
+            stats.evictions
+        );
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
-    use flexround::infer::{drive, BatchPolicy};
+    use flexround::infer::{drive, drive_mixed, BatchPolicy};
     let requests = args.usize_flag("requests", 256).max(1);
     let clients = args.usize_flag("clients", 4).max(1);
+    let sessions = args.usize_flag("sessions", 0);
+    let seed = args.usize_flag("seed", 7) as u64;
     let policy = BatchPolicy {
         max_batch: args.usize_flag("max-batch", 32).max(1),
         deadline: std::time::Duration::from_secs_f64(
             args.f64_flag("deadline-ms", 2.0).max(0.0) / 1e3,
         ),
     };
-    let engine = load_engine(args)?;
+    // mixed mode needs a generation-complete model (blocks + tied lm head);
+    // `--synthetic` therefore builds the same block LM `generate` does
+    // instead of load_engine's headless stack
+    let engine = if sessions > 0 && args.flag("packed").is_none() && args.has("synthetic") {
+        let workers =
+            args.usize_flag("workers", flexround::util::pool::default_workers());
+        let model = flexround::infer::generate::synthetic_lm(
+            args.usize_flag("blocks", 2),
+            args.usize_flag("width", 64),
+            args.usize_flag("heads", 4),
+            args.usize_flag("mlp", 128),
+            args.usize_flag("seq", 16),
+            args.usize_flag("vocab", 256),
+            args.usize_flag("bits", 4) as u32,
+            seed,
+        )?;
+        flexround::infer::Engine::new(model, workers)
+    } else {
+        load_engine(args)?
+    };
+    if sessions > 0 {
+        // mixed workload: rows racing generation sessions for the batcher,
+        // reproducible from the seed
+        let (secs, stats) =
+            drive_mixed(engine, policy, sched_cfg_from(args), requests, sessions, clients, seed)?;
+        let rps = stats.requests as f64 / secs.max(1e-9);
+        let tps = stats.gen_tokens as f64 / secs.max(1e-9);
+        println!(
+            "serve: {} rows + {} sessions / {clients} clients in {secs:.3}s → \
+             {rps:.0} rows/s + {tps:.0} tok/s ({} batches, mean {:.1} rows per batch)",
+            stats.requests,
+            stats.gen_sessions,
+            stats.batches,
+            stats.mean_batch(),
+        );
+        print_serve_stats(&stats);
+        return Ok(());
+    }
     let width = engine.in_width()?;
-    let mut rng =
-        flexround::util::rng::Pcg32::seeded(args.usize_flag("seed", 7) as u64);
+    let mut rng = flexround::util::rng::Pcg32::seeded(seed);
     let rows: Vec<Vec<f32>> = (0..requests)
         .map(|_| (0..width).map(|_| rng.next_normal()).collect())
         .collect();
@@ -601,6 +744,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.max_batch,
         100.0 * stats.gemm_secs / secs.max(1e-9)
     );
+    print_serve_stats(&stats);
     if args.has("compare") {
         let engine = load_engine(args)?;
         let unbatched =

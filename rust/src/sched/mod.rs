@@ -1,0 +1,627 @@
+//! Continuous-batching scheduler: many concurrent generation sessions, one
+//! batched GEMM per model step (DESIGN.md §Continuous-Batching).
+//!
+//! [`crate::infer::generate::generate`] decodes one session at a time —
+//! every projection runs as a batch-1 gemv, so the packed weight stream is
+//! re-read per token per user and nothing amortizes.  The scheduler
+//! interleaves **prefill and decode across sessions** instead: each
+//! [`Scheduler::step`] gathers the current token row of every running
+//! decode session plus a bounded *prefill chunk* of every admitting
+//! session into one `(n_active, d)` batch, runs each block's six
+//! projections as one fused GEMM ([`crate::infer::kernels`]), scatters the
+//! fresh K/V rows into the session's pages of a [`PagedKvPool`], walks
+//! each session's page list with [`crate::block::attn_score_segments`] for
+//! the attention reads, and finishes with the batched block tail and
+//! lm-head stack.  Sampling then advances every session that produced a
+//! fresh logits row.
+//!
+//! ## Bit-identity with the single-session path
+//!
+//! Batched multi-session decode is **bit-identical** to running each
+//! session alone through `generate` (pinned in `rust/tests/sched.rs` and
+//! verify.sh's scheduler differential gate, on both ISA arms):
+//!
+//! * every GEMM in the crate is bit-exact per *row* regardless of batch
+//!   composition — one accumulator per output element, contraction index
+//!   ascending (`crate::linalg`), with gemv ≡ batched-row and the
+//!   integer-domain fused path ≡ the rowwise oracle pinned since PR 5/6;
+//! * layernorm, GELU, residual adds, and bias are per-row/element-wise;
+//! * the attention reads are `linalg::dot` calls iterated in position
+//!   order — [`crate::block::attn_score_row`] *delegates to* the segmented
+//!   walk, so the paged read is the same code as the contiguous one;
+//! * sampling state is per-session: each session carries its own
+//!   [`Pcg32`] seeded exactly as `generate` seeds it, and draws in the
+//!   same order (once after prefill, once after every decode step).
+//!
+//! ## Admission, scheduling, and eviction
+//!
+//! `submit` rejects sessions that could never fit the pool
+//! (`prompt + max_new` pages vs the whole pool); everything else queues.
+//! Admission moves queued sessions into the running set while slots
+//! (`max_active`) are free — long prompts are prefilled in
+//! `prefill_chunk`-row pieces so they cannot starve running decoders.
+//! When a running session cannot reserve pages for its next rows, the
+//! least-recently-stepped *other* running session not in the current step
+//! is evicted: its K/V spill through the [`crate::block::ActivationCache`]
+//! FXT machinery, its pages return to the free list, and it re-queues for
+//! admission, restoring bit-identically once pages free up.  Progress is
+//! guaranteed: every running session's remaining work is bounded by
+//! `max_new`, and a session that fits the pool alone always fits once its
+//! peers retire.
+
+pub mod paged;
+
+pub use paged::PagedKvPool;
+
+use crate::block::{attn_score_segments, LN_EPS};
+use crate::infer::engine::{block_parts, Engine};
+use crate::infer::generate::{self, GenOpts};
+use crate::tensor::{layernorm_rows, Tensor};
+use crate::util::rng::Pcg32;
+use crate::Result;
+use anyhow::{anyhow, bail};
+use std::collections::VecDeque;
+use std::path::PathBuf;
+
+/// Scheduler sizing knobs.
+#[derive(Clone, Debug)]
+pub struct SchedConfig {
+    /// KV pages in the pool (shared by all sessions)
+    pub pool_pages: usize,
+    /// token rows per page
+    pub page_tokens: usize,
+    /// running-session bound (admission control on slots)
+    pub max_active: usize,
+    /// prompt rows prefilled per step per session (long prompts cannot
+    /// starve running decoders)
+    pub prefill_chunk: usize,
+    /// where evicted sessions' K/V spill as FXT files (in-memory if None)
+    pub spill_dir: Option<PathBuf>,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            pool_pages: 512,
+            page_tokens: 16,
+            max_active: 8,
+            prefill_chunk: 32,
+            spill_dir: None,
+        }
+    }
+}
+
+/// One completed generation session.
+#[derive(Clone, Debug)]
+pub struct FinishedGen {
+    /// the handle `submit` returned
+    pub handle: u64,
+    /// sampled token ids (identical to `generate` run alone)
+    pub tokens: Vec<usize>,
+}
+
+struct Session {
+    handle: u64,
+    pool_id: usize,
+    prompt: Vec<f32>,
+    prompt_len: usize,
+    opts: GenOpts,
+    rng: Pcg32,
+    /// prompt rows already prefilled
+    prefill_done: usize,
+    /// the next decode step's input row (embedding of the last sampled
+    /// token); `None` while prefilling
+    pending_row: Option<Vec<f32>>,
+    tokens: Vec<usize>,
+    /// LRU stamp: the step this session last ran in
+    last_step: u64,
+}
+
+struct PlanItem {
+    sess: usize,
+    pool_id: usize,
+    rows: usize,
+    start_pos: usize,
+}
+
+/// The continuous-batching scheduler: owns the [`Engine`] and the
+/// [`PagedKvPool`], advances every session one bounded piece per
+/// [`Scheduler::step`].
+pub struct Scheduler {
+    engine: Engine,
+    cfg: SchedConfig,
+    pool: PagedKvPool,
+    tok_w: usize,
+    vocab: usize,
+    running: Vec<Session>,
+    queued: VecDeque<Session>,
+    finished: Vec<FinishedGen>,
+    next_handle: u64,
+    steps: u64,
+    probs_scratch: Vec<f32>,
+    max_active_seen: usize,
+    max_pages_seen: usize,
+}
+
+impl Scheduler {
+    /// Whether a model can be scheduled at all: nonempty, a tied lm head,
+    /// well-formed block units.  After this passes, [`Scheduler::new`] on
+    /// the same model cannot fail (the config knobs are clamped) — which is
+    /// what lets the serve batcher pick its core without consuming the
+    /// engine speculatively.
+    pub fn supported(model: &crate::infer::PackedModel) -> Result<()> {
+        model.in_width().ok_or_else(|| anyhow!("scheduler: empty packed model"))?;
+        generate::vocab(model)?;
+        for u in model.units.iter().filter(|u| u.kind == "transformer_block") {
+            if u.layers.is_empty() {
+                bail!("block unit {:?} has no layers", u.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// Build a scheduler over a generation-complete packed model (blocks +
+    /// tied lm head).  Fails fast on a model `generate` could not serve.
+    /// Degenerate config values are clamped up to 1 rather than rejected.
+    pub fn new(engine: Engine, cfg: SchedConfig) -> Result<Scheduler> {
+        let cfg = SchedConfig {
+            pool_pages: cfg.pool_pages.max(1),
+            page_tokens: cfg.page_tokens.max(1),
+            max_active: cfg.max_active.max(1),
+            prefill_chunk: cfg.prefill_chunk.max(1),
+            ..cfg
+        };
+        let tok_w = engine
+            .model()
+            .in_width()
+            .ok_or_else(|| anyhow!("scheduler: empty packed model"))?;
+        let vocab = generate::vocab(engine.model())?;
+        let mut dims = Vec::new();
+        for u in engine.model().units.iter().filter(|u| u.kind == "transformer_block") {
+            let d = u
+                .layers
+                .first()
+                .map(|l| l.mat.cols())
+                .ok_or_else(|| anyhow!("block unit {:?} has no layers", u.name))?;
+            dims.push(d);
+        }
+        let pool =
+            PagedKvPool::new(&dims, cfg.pool_pages, cfg.page_tokens, cfg.spill_dir.as_deref())?;
+        Ok(Scheduler {
+            engine,
+            cfg,
+            pool,
+            tok_w,
+            vocab,
+            running: Vec::new(),
+            queued: VecDeque::new(),
+            finished: Vec::new(),
+            next_handle: 0,
+            steps: 0,
+            probs_scratch: Vec::new(),
+            max_active_seen: 0,
+            max_pages_seen: 0,
+        })
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Sessions currently admitted (running a prefill chunk or decode row
+    /// per step).
+    pub fn active_sessions(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Sessions waiting for admission (including evicted ones).
+    pub fn queued_sessions(&self) -> usize {
+        self.queued.len()
+    }
+
+    pub fn pages_in_use(&self) -> usize {
+        self.pool.pages_in_use()
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.pool.evictions()
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// High-water marks since construction: `(active sessions, pool pages)`.
+    pub fn occupancy_peaks(&self) -> (usize, usize) {
+        (self.max_active_seen, self.max_pages_seen)
+    }
+
+    /// Anything left to step?
+    pub fn has_work(&self) -> bool {
+        !self.running.is_empty() || !self.queued.is_empty()
+    }
+
+    /// Enqueue a generation session: `prompt` is `t ≥ 1` flattened token
+    /// rows, `opts` exactly as [`generate::generate`] takes them.  Returns
+    /// the session handle [`FinishedGen`] will carry.  Rejects sessions
+    /// whose `prompt + max_new` tokens could never fit the pool — the
+    /// admission-control bound tied to pool capacity.
+    pub fn submit(&mut self, prompt: Vec<f32>, opts: GenOpts) -> Result<u64> {
+        if prompt.is_empty() || prompt.len() % self.tok_w != 0 {
+            bail!(
+                "scheduler: prompt has {} values, need a nonzero multiple of the token \
+                 width {}",
+                prompt.len(),
+                self.tok_w
+            );
+        }
+        let t = prompt.len() / self.tok_w;
+        let total = t.saturating_add(opts.max_new);
+        if !self.pool.fits(total) {
+            bail!(
+                "scheduler: session needs {} tokens ({} pages) but the pool holds only \
+                 {} pages of {} tokens — raise --pool-pages or shorten the request",
+                total,
+                self.pool.pages_for(total),
+                self.pool.num_pages(),
+                self.pool.page_tokens()
+            );
+        }
+        let handle = self.next_handle;
+        self.next_handle += 1;
+        self.queued.push_back(Session {
+            handle,
+            pool_id: self.pool.open(),
+            prompt,
+            prompt_len: t,
+            opts,
+            rng: Pcg32::seeded(opts.seed),
+            prefill_done: 0,
+            pending_row: None,
+            tokens: Vec::new(),
+            last_step: 0,
+        });
+        Ok(handle)
+    }
+
+    /// Completed sessions since the last call (order of completion).
+    pub fn take_finished(&mut self) -> Vec<FinishedGen> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Abort every queued and running session, releasing their pages.
+    /// Returns the handles that will now never finish (the serve layer
+    /// answers them with an error).
+    pub fn abort_all(&mut self) -> Vec<u64> {
+        let mut handles = Vec::new();
+        for s in self.running.drain(..).chain(self.queued.drain(..)) {
+            let _ = self.pool.close(s.pool_id);
+            handles.push(s.handle);
+        }
+        handles
+    }
+
+    /// Step every session to completion and return the finished set —
+    /// the batch analogue of calling [`generate::generate`] per session.
+    pub fn run_all(&mut self) -> Result<Vec<FinishedGen>> {
+        while self.has_work() {
+            self.step()?;
+        }
+        Ok(self.take_finished())
+    }
+
+    /// Move queued sessions into the running set while slots are free.  An
+    /// evicted session at the head must restore first; if pages are short
+    /// it blocks the queue head (fair — it has been waiting longest) until
+    /// peers retire.
+    fn admit(&mut self) -> Result<()> {
+        while self.running.len() < self.cfg.max_active {
+            let Some(front) = self.queued.front() else { break };
+            if self.pool.is_evicted(front.pool_id) && !self.pool.restore(front.pool_id)? {
+                break;
+            }
+            let s = self.queued.pop_front().unwrap();
+            self.running.push(s);
+        }
+        Ok(())
+    }
+
+    /// One scheduler step: admit, plan, run one batched forward over every
+    /// planned row, scatter K/V, sample, retire.  Returns the number of
+    /// token rows processed (0 = the scheduler is idle).
+    pub fn step(&mut self) -> Result<usize> {
+        self.admit()?;
+        if self.running.is_empty() {
+            return Ok(0);
+        }
+
+        // -- plan: what does each running session process this step? --
+        let mut plan: Vec<PlanItem> = Vec::with_capacity(self.running.len());
+        let mut si = 0usize;
+        while si < self.running.len() {
+            let s = &self.running[si];
+            let rows = if s.prefill_done < s.prompt_len {
+                self.cfg.prefill_chunk.min(s.prompt_len - s.prefill_done)
+            } else if s.pending_row.is_some() {
+                1
+            } else {
+                si += 1;
+                continue;
+            };
+            let start_pos = self.pool.len(s.pool_id)?;
+            let pool_id = s.pool_id;
+            // reserve pages; evict LRU unplanned peers until it fits
+            while !self.pool.reserve(pool_id, start_pos + rows)? {
+                let victim = self
+                    .running
+                    .iter()
+                    .enumerate()
+                    .filter(|(vi, v)| {
+                        *vi != si
+                            && !plan.iter().any(|p| p.sess == *vi)
+                            && self.pool.len(v.pool_id).map(|l| l > 0).unwrap_or(false)
+                    })
+                    .min_by_key(|(_, v)| v.last_step)
+                    .map(|(vi, _)| vi);
+                let Some(vi) = victim else { break };
+                self.pool.evict(self.running[vi].pool_id)?;
+                let evicted = self.running.remove(vi);
+                self.queued.push_back(evicted);
+                // removal shifts indices: fix up si and the planned items
+                if vi < si {
+                    si -= 1;
+                }
+                for p in &mut plan {
+                    if p.sess > vi {
+                        p.sess -= 1;
+                    }
+                }
+            }
+            if self.pool.reserve(pool_id, start_pos + rows)? {
+                plan.push(PlanItem { sess: si, pool_id, rows, start_pos });
+            }
+            // else: no evictable peer — the session skips this step
+            si += 1;
+        }
+        if plan.is_empty() {
+            return Ok(0);
+        }
+        self.max_active_seen = self.max_active_seen.max(self.running.len());
+        self.max_pages_seen = self.max_pages_seen.max(self.pool.pages_in_use());
+
+        // -- gather the batch: plan order, token rows --
+        let n: usize = plan.iter().map(|p| p.rows).sum();
+        let mut flat = Vec::with_capacity(n * self.tok_w);
+        for p in &plan {
+            let s = &self.running[p.sess];
+            if s.prefill_done < s.prompt_len {
+                let a = s.prefill_done * self.tok_w;
+                flat.extend_from_slice(&s.prompt[a..a + p.rows * self.tok_w]);
+            } else {
+                flat.extend_from_slice(s.pending_row.as_ref().expect("planned decode row"));
+            }
+        }
+        let x = Tensor::from_f32(flat, &[n, self.tok_w])?;
+
+        // -- one batched forward over every unit --
+        let logits = forward_batch(
+            &self.engine,
+            &mut self.pool,
+            &plan,
+            &x,
+            &mut self.probs_scratch,
+        )?;
+        if logits.shape() != [n, self.vocab] {
+            bail!(
+                "scheduler: step emitted {:?}, expected [{n}, {}]",
+                logits.shape(),
+                self.vocab
+            );
+        }
+        let lv = logits.as_f32()?;
+
+        // -- commit, sample, retire --
+        self.steps += 1;
+        let mut row0 = 0usize;
+        let mut done: Vec<usize> = Vec::new();
+        for p in &plan {
+            self.pool.commit(p.pool_id, p.start_pos + p.rows)?;
+            let s = &mut self.running[p.sess];
+            s.last_step = self.steps;
+            let fresh = if s.prefill_done < s.prompt_len {
+                s.prefill_done += p.rows;
+                s.prefill_done == s.prompt_len // the final chunk's last row
+            } else {
+                s.pending_row = None;
+                true
+            };
+            if fresh {
+                // replicate generate()'s sample loop exactly: sample, push,
+                // stop at max_new *before* embedding the next input row
+                if s.tokens.len() < s.opts.max_new {
+                    let last = &lv[(row0 + p.rows - 1) * self.vocab..(row0 + p.rows) * self.vocab];
+                    let tok = generate::sample_token(last, s.opts.temp, s.opts.top_k, &mut s.rng);
+                    s.tokens.push(tok);
+                    if s.tokens.len() < s.opts.max_new {
+                        s.pending_row = Some(generate::embed_token(self.engine.model(), tok)?);
+                    }
+                }
+                if s.tokens.len() >= s.opts.max_new {
+                    done.push(p.sess);
+                }
+            }
+            row0 += p.rows;
+        }
+        // retire finished sessions (highest index first so removals do not
+        // shift the remaining ones)
+        done.sort_unstable_by(|a, b| b.cmp(a));
+        for di in done {
+            let s = self.running.remove(di);
+            self.pool.close(s.pool_id)?;
+            self.finished.push(FinishedGen { handle: s.handle, tokens: s.tokens });
+        }
+        Ok(n)
+    }
+}
+
+/// The batched model forward of one scheduler step: token rows of every
+/// planned session, K/V scattered into each session's pages, attention
+/// walking the page lists, block tail + lm-head stack batched.  Per-row
+/// bit-identical to [`Engine::prefill`]/[`Engine::decode_step`] on the
+/// same rows (see the module docs for why).
+fn forward_batch(
+    engine: &Engine,
+    pool: &mut PagedKvPool,
+    plan: &[PlanItem],
+    x: &Tensor,
+    probs: &mut Vec<f32>,
+) -> Result<Tensor> {
+    let n = x.shape()[0];
+    let mut h = x.clone();
+    let mut bi = 0usize;
+    for unit in &engine.model().units {
+        if unit.kind != "transformer_block" {
+            h = engine.stack_forward(unit, &h, true)?;
+            continue;
+        }
+        let p = block_parts(unit)?;
+        let (h1, _, _) = layernorm_rows(&h, p.g1, p.b1, LN_EPS)?;
+        let q = engine.gemm_bias(&h1, p.wq, true)?;
+        let k = engine.gemm_bias(&h1, p.wk, true)?;
+        let v = engine.gemm_bias(&h1, p.wv, true)?;
+        let d = k.shape()[1];
+        let heads = unit.heads.max(1);
+        if d % heads != 0 {
+            bail!("block unit {:?}: width {d} not divisible by {heads} heads", unit.name);
+        }
+        let dh = d / heads;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let (qv, kv, vv) = (q.as_f32()?, k.as_f32()?, v.as_f32()?);
+        // scatter each session's fresh K/V rows into its pages, then walk
+        // the page list for the attention reads (count = causal frontier)
+        let mut ctx = vec![0.0f32; n * d];
+        let mut row0 = 0usize;
+        for item in plan {
+            pool.append_rows(
+                item.pool_id,
+                bi,
+                &kv[row0 * d..(row0 + item.rows) * d],
+                &vv[row0 * d..(row0 + item.rows) * d],
+            )?;
+            let segs = pool.segments(item.pool_id, bi)?;
+            for i in 0..item.rows {
+                let count = item.start_pos + i + 1;
+                if probs.len() < count {
+                    probs.resize(count, 0.0);
+                }
+                for hd in 0..heads {
+                    let c0 = hd * dh;
+                    attn_score_segments(
+                        &qv[(row0 + i) * d + c0..(row0 + i) * d + c0 + dh],
+                        &segs,
+                        d,
+                        c0,
+                        count,
+                        scale,
+                        probs,
+                        &mut ctx[(row0 + i) * d + c0..(row0 + i) * d + c0 + dh],
+                    );
+                }
+            }
+            row0 += item.rows;
+        }
+        let ctx = Tensor::from_f32(ctx, &[n, d])?;
+        h = engine.block_tail(&p, &h, &ctx, true)?;
+        bi += 1;
+    }
+    Ok(h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::generate::{random_prompt, synthetic_lm};
+
+    fn lm_engine(bits: u32) -> Engine {
+        Engine::new(synthetic_lm(2, 16, 4, 32, 8, 24, bits, 13).unwrap(), 1)
+    }
+
+    #[test]
+    fn single_session_matches_generate() {
+        let engine = lm_engine(4);
+        let reference = lm_engine(4);
+        let opts = GenOpts { max_new: 9, temp: 0.8, top_k: 5, seed: 21 };
+        let (_, prompt) = random_prompt(reference.model(), 5, 3).unwrap();
+        let want = generate::generate(&reference, &prompt, &opts).unwrap().tokens;
+        let mut sched = Scheduler::new(engine, SchedConfig::default()).unwrap();
+        let h = sched.submit(prompt.as_f32().unwrap().to_vec(), opts).unwrap();
+        let fin = sched.run_all().unwrap();
+        assert_eq!(fin.len(), 1);
+        assert_eq!(fin[0].handle, h);
+        assert_eq!(fin[0].tokens, want, "scheduled decode must equal generate()");
+        assert!(!sched.has_work());
+        assert_eq!(sched.pages_in_use(), 0, "retired sessions must free their pages");
+    }
+
+    #[test]
+    fn chunked_prefill_matches_one_shot() {
+        // prompt longer than prefill_chunk: the chunked path must emit the
+        // same stream as generate()'s one-shot prefill
+        let engine = lm_engine(4);
+        let reference = lm_engine(4);
+        let opts = GenOpts { max_new: 6, temp: 0.0, top_k: 0, seed: 7 };
+        let (_, prompt) = random_prompt(reference.model(), 11, 5).unwrap();
+        let want = generate::generate(&reference, &prompt, &opts).unwrap().tokens;
+        let cfg = SchedConfig { prefill_chunk: 3, ..SchedConfig::default() };
+        let mut sched = Scheduler::new(engine, cfg).unwrap();
+        sched.submit(prompt.as_f32().unwrap().to_vec(), opts).unwrap();
+        let fin = sched.run_all().unwrap();
+        assert_eq!(fin[0].tokens, want, "chunked prefill diverged from one-shot");
+        assert!(sched.steps() >= 4, "11 prompt rows / chunk 3 needs ≥4 steps");
+    }
+
+    #[test]
+    fn zero_max_new_finishes_with_no_tokens() {
+        let engine = lm_engine(4);
+        let opts = GenOpts { max_new: 0, temp: 0.0, top_k: 0, seed: 1 };
+        let (_, prompt) = random_prompt(engine.model(), 3, 2).unwrap();
+        let mut sched = Scheduler::new(engine, SchedConfig::default()).unwrap();
+        sched.submit(prompt.as_f32().unwrap().to_vec(), opts).unwrap();
+        let fin = sched.run_all().unwrap();
+        assert!(fin[0].tokens.is_empty());
+    }
+
+    #[test]
+    fn oversized_sessions_are_rejected_at_submit() {
+        let engine = lm_engine(4);
+        let (_, prompt) = random_prompt(engine.model(), 4, 2).unwrap();
+        let cfg = SchedConfig { pool_pages: 2, page_tokens: 4, ..SchedConfig::default() };
+        let mut sched = Scheduler::new(engine, cfg).unwrap();
+        // 4 prompt + 8 new = 12 tokens > 2×4 pool
+        let opts = GenOpts { max_new: 8, temp: 0.0, top_k: 0, seed: 1 };
+        assert!(sched.submit(prompt.as_f32().unwrap().to_vec(), opts).is_err());
+        // 4 + 4 = 8 fits exactly
+        let opts = GenOpts { max_new: 4, temp: 0.0, top_k: 0, seed: 1 };
+        sched.submit(prompt.as_f32().unwrap().to_vec(), opts).unwrap();
+        assert_eq!(sched.run_all().unwrap()[0].tokens.len(), 4);
+        // malformed prompts
+        assert!(sched.submit(vec![], opts).is_err());
+        assert!(sched.submit(vec![0.0; 3], opts).is_err());
+    }
+
+    #[test]
+    fn abort_all_releases_everything() {
+        let engine = lm_engine(4);
+        let (_, prompt) = random_prompt(engine.model(), 4, 2).unwrap();
+        let mut sched = Scheduler::new(engine, SchedConfig::default()).unwrap();
+        let opts = GenOpts { max_new: 8, temp: 0.0, top_k: 0, seed: 1 };
+        let a = sched.submit(prompt.as_f32().unwrap().to_vec(), opts).unwrap();
+        let b = sched.submit(prompt.as_f32().unwrap().to_vec(), opts).unwrap();
+        sched.step().unwrap();
+        let mut aborted = sched.abort_all();
+        aborted.sort_unstable();
+        assert_eq!(aborted, vec![a, b]);
+        assert!(!sched.has_work());
+        assert_eq!(sched.pages_in_use(), 0);
+    }
+}

@@ -1,0 +1,605 @@
+//! Paged KV pool: fixed-size pages of K/V rows behind a free-list
+//! allocator (DESIGN.md §Continuous-Batching).
+//!
+//! The contiguous [`crate::infer::KvCache`] grows one `Vec` per block per
+//! session — fine for a single decode loop, hopeless for many concurrent
+//! sessions: memory fragments per-session and nothing bounds the total.
+//! The pool instead owns one slab per transformer block, carved into
+//! `num_pages` pages of `page_tokens` rows each.  A single **page id**
+//! reserves its row range in *every* block's slab (K/V lengths are always
+//! in lockstep across blocks, so per-block page tables would only buy
+//! bookkeeping), which leaves one free list for the whole pool and makes
+//! capacity accounting exact: a session holding `p` pages holds
+//! `p · page_tokens` token slots in each block.
+//!
+//! Per-session state is a page table (ordered page ids), the committed
+//! token count, and a per-block written-row count — committed in lockstep
+//! exactly like `KvCache::set_pos`, so a dropped or double-pushed row is
+//! caught at the commit, not three tokens later as garbage attention.
+//!
+//! Attention never copies rows out of the pool: [`PagedKvPool::segments`]
+//! returns the session's pages as an ordered `(k_slice, v_slice, rows)`
+//! list that [`crate::block::attn_score_segments`] walks in position
+//! order — bit-identical to the contiguous walk by construction.
+//!
+//! Eviction spills a session's gathered K/V tensors through the existing
+//! [`ActivationCache`] FXT-spill machinery (budget 0 + a spill dir ⇒ every
+//! chunk goes straight to disk; no dir ⇒ the chunks stay in memory), frees
+//! its pages, and [`PagedKvPool::restore`] scatters the rows back into
+//! freshly allocated pages **bit-identically** — f32 bits round-trip the
+//! FXT container exactly, and the page-table layout is invisible to the
+//! segmented attention walk.
+
+use crate::block::ActivationCache;
+use crate::tensor::Tensor;
+use crate::Result;
+use anyhow::{anyhow, bail};
+use std::path::{Path, PathBuf};
+
+/// One transformer block's slab: `num_pages · page_tokens` K and V rows of
+/// width `d`, row-addressed by `page_id · page_tokens + offset`.
+struct Slab {
+    d: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// One session's residency state.
+struct Entry {
+    /// ordered page table: logical token row `r` lives in
+    /// `pages[r / page_tokens]` at offset `r % page_tokens`
+    pages: Vec<usize>,
+    /// committed tokens (prompt + decoded), lockstep across blocks
+    len: usize,
+    /// rows written per block since the session opened — must all equal the
+    /// target at [`PagedKvPool::commit`]
+    written: Vec<usize>,
+    /// evicted K/V, two tensors per block (K then V), `(len, d)` each
+    spilled: Option<ActivationCache>,
+}
+
+/// A slab of fixed-size KV pages shared by every concurrent generation
+/// session, with block-granular alloc/free and spill-backed eviction.
+pub struct PagedKvPool {
+    dims: Vec<usize>,
+    page_tokens: usize,
+    num_pages: usize,
+    slabs: Vec<Slab>,
+    /// free page ids (LIFO — reuse hot pages first)
+    free: Vec<usize>,
+    sessions: Vec<Option<Entry>>,
+    spill_dir: Option<PathBuf>,
+    evictions: u64,
+}
+
+impl PagedKvPool {
+    /// A pool of `num_pages` pages of `page_tokens` token rows each, one
+    /// slab per block width in `dims`.  `spill_dir` is where evicted
+    /// sessions' K/V chunks go as FXT files (in-memory when `None`).
+    pub fn new(
+        dims: &[usize],
+        num_pages: usize,
+        page_tokens: usize,
+        spill_dir: Option<&Path>,
+    ) -> Result<PagedKvPool> {
+        if page_tokens == 0 {
+            bail!("paged kv pool: page_tokens must be ≥ 1");
+        }
+        if num_pages == 0 && !dims.is_empty() {
+            bail!("paged kv pool: num_pages must be ≥ 1 when the model has blocks");
+        }
+        let rows = num_pages * page_tokens;
+        let slabs = dims
+            .iter()
+            .map(|&d| Slab { d, k: vec![0.0; rows * d], v: vec![0.0; rows * d] })
+            .collect();
+        Ok(PagedKvPool {
+            dims: dims.to_vec(),
+            page_tokens,
+            num_pages,
+            slabs,
+            free: (0..num_pages).rev().collect(),
+            sessions: Vec::new(),
+            spill_dir: spill_dir.map(Path::to_path_buf),
+            evictions: 0,
+        })
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    pub fn num_pages(&self) -> usize {
+        self.num_pages
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn pages_in_use(&self) -> usize {
+        self.num_pages - self.free.len()
+    }
+
+    /// Sessions evicted so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Pages needed to hold `tokens` rows.
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_tokens)
+    }
+
+    /// Whether a session of `tokens` total rows can *ever* fit (admission
+    /// control: against the whole pool, not the current free list).
+    pub fn fits(&self, tokens: usize) -> bool {
+        self.dims.is_empty() || self.pages_for(tokens) <= self.num_pages
+    }
+
+    /// Open a session slot; returns its id.  Allocates no pages yet.
+    pub fn open(&mut self) -> usize {
+        let entry = Entry {
+            pages: Vec::new(),
+            len: 0,
+            written: vec![0; self.dims.len()],
+            spilled: None,
+        };
+        for (i, s) in self.sessions.iter_mut().enumerate() {
+            if s.is_none() {
+                *s = Some(entry);
+                return i;
+            }
+        }
+        self.sessions.push(Some(entry));
+        self.sessions.len() - 1
+    }
+
+    /// Close a session, returning its pages to the free list (spilled
+    /// chunks are purged via the `ActivationCache` drop).
+    pub fn close(&mut self, id: usize) -> Result<()> {
+        let entry = self
+            .sessions
+            .get_mut(id)
+            .and_then(Option::take)
+            .ok_or_else(|| anyhow!("paged kv pool: no session {id}"))?;
+        self.free.extend(entry.pages);
+        Ok(())
+    }
+
+    fn entry(&self, id: usize) -> Result<&Entry> {
+        self.sessions
+            .get(id)
+            .and_then(Option::as_ref)
+            .ok_or_else(|| anyhow!("paged kv pool: no session {id}"))
+    }
+
+    fn entry_mut(&mut self, id: usize) -> Result<&mut Entry> {
+        self.sessions
+            .get_mut(id)
+            .and_then(Option::as_mut)
+            .ok_or_else(|| anyhow!("paged kv pool: no session {id}"))
+    }
+
+    /// Committed tokens of a session.
+    pub fn len(&self, id: usize) -> Result<usize> {
+        Ok(self.entry(id)?.len)
+    }
+
+    /// Whether the session's K/V currently live in spill storage.
+    pub fn is_evicted(&self, id: usize) -> bool {
+        self.entry(id).map(|e| e.spilled.is_some()).unwrap_or(false)
+    }
+
+    /// Grow the session's page table until it holds `tokens` rows.  Returns
+    /// `false` (allocating nothing) when the free list cannot cover it —
+    /// the caller decides whether to evict someone or wait.
+    pub fn reserve(&mut self, id: usize, tokens: usize) -> Result<bool> {
+        let have = self.entry(id)?.pages.len();
+        if self.entry(id)?.spilled.is_some() {
+            bail!("paged kv pool: reserve on evicted session {id} (restore first)");
+        }
+        let need = self.pages_for(tokens);
+        if self.dims.is_empty() || need <= have {
+            return Ok(true);
+        }
+        if need - have > self.free.len() {
+            return Ok(false);
+        }
+        let grown: Vec<usize> = (0..need - have).map(|_| self.free.pop().unwrap()).collect();
+        self.entry_mut(id)?.pages.extend(grown);
+        Ok(true)
+    }
+
+    /// Scatter `(rows, d)` K/V row groups for `block` into the session's
+    /// pages, after the committed frontier.  Capacity must already be
+    /// reserved; the rows count toward the next [`PagedKvPool::commit`].
+    pub fn append_rows(
+        &mut self,
+        id: usize,
+        block: usize,
+        krows: &[f32],
+        vrows: &[f32],
+    ) -> Result<()> {
+        let page_tokens = self.page_tokens;
+        let d = *self
+            .dims
+            .get(block)
+            .ok_or_else(|| anyhow!("paged kv pool has {} blocks, asked for {block}", self.dims.len()))?;
+        if krows.is_empty() || krows.len() != vrows.len() || krows.len() % d != 0 {
+            bail!(
+                "paged kv append: {} k values vs {} v values (row width {d})",
+                krows.len(),
+                vrows.len()
+            );
+        }
+        let entry = self
+            .sessions
+            .get(id)
+            .and_then(Option::as_ref)
+            .ok_or_else(|| anyhow!("paged kv pool: no session {id}"))?;
+        if entry.spilled.is_some() {
+            bail!("paged kv pool: append to evicted session {id}");
+        }
+        let start = entry.written[block];
+        let n = krows.len() / d;
+        if (start + n) > entry.pages.len() * page_tokens {
+            bail!(
+                "paged kv pool: session {id} block {block} writes row {} past its {} reserved \
+                 rows (reserve before append)",
+                start + n,
+                entry.pages.len() * page_tokens
+            );
+        }
+        // borrow dance: copy the page table (small), then write the slab
+        let pages = entry.pages.clone();
+        let slab = &mut self.slabs[block];
+        for i in 0..n {
+            let r = start + i;
+            let row0 = (pages[r / page_tokens] * page_tokens + r % page_tokens) * d;
+            slab.k[row0..row0 + d].copy_from_slice(&krows[i * d..(i + 1) * d]);
+            slab.v[row0..row0 + d].copy_from_slice(&vrows[i * d..(i + 1) * d]);
+        }
+        self.entry_mut(id)?.written[block] += n;
+        Ok(())
+    }
+
+    /// Commit position `t`: every block must have written exactly `t` rows
+    /// (the same lockstep contract as `KvCache::set_pos`).
+    pub fn commit(&mut self, id: usize, t: usize) -> Result<()> {
+        let entry = self.entry(id)?;
+        for (b, &w) in entry.written.iter().enumerate() {
+            if w != t {
+                bail!("paged kv pool: session {id} block {b} wrote {w} rows, expected {t}");
+            }
+        }
+        self.entry_mut(id)?.len = t;
+        Ok(())
+    }
+
+    /// The session's written K/V rows for `block`, as an ordered
+    /// `(k_slice, v_slice, rows)` page-segment list for
+    /// [`crate::block::attn_score_segments`].  Covers every *written* row —
+    /// during a step the current chunk's rows are appended before they are
+    /// attended, so the walk sees them ahead of the commit.
+    pub fn segments(&self, id: usize, block: usize) -> Result<Vec<(&[f32], &[f32], usize)>> {
+        let entry = self.entry(id)?;
+        if entry.spilled.is_some() {
+            bail!("paged kv pool: segments of evicted session {id}");
+        }
+        let d = *self
+            .dims
+            .get(block)
+            .ok_or_else(|| anyhow!("paged kv pool has {} blocks, asked for {block}", self.dims.len()))?;
+        let slab = &self.slabs[block];
+        let mut left = entry.written[block];
+        let mut out = Vec::with_capacity(entry.pages.len());
+        for &p in &entry.pages {
+            if left == 0 {
+                break;
+            }
+            let rows = left.min(self.page_tokens);
+            let a = p * self.page_tokens * d;
+            let b = a + rows * d;
+            out.push((&slab.k[a..b], &slab.v[a..b], rows));
+            left -= rows;
+        }
+        Ok(out)
+    }
+
+    /// Evict a session: gather its committed K/V rows per block into
+    /// contiguous tensors, push them through an [`ActivationCache`] (budget
+    /// 0 + the pool's spill dir ⇒ straight to FXT files on disk), and free
+    /// its pages.  Refuses while uncommitted rows exist — eviction is only
+    /// legal between steps, when every block is in lockstep.
+    pub fn evict(&mut self, id: usize) -> Result<()> {
+        let entry = self.entry(id)?;
+        if entry.spilled.is_some() {
+            bail!("paged kv pool: session {id} is already evicted");
+        }
+        if entry.len == 0 {
+            bail!("paged kv pool: session {id} has no committed rows to evict");
+        }
+        for (b, &w) in entry.written.iter().enumerate() {
+            if w != entry.len {
+                bail!(
+                    "paged kv pool: evicting session {id} with uncommitted rows \
+                     (block {b}: {w} written vs {} committed)",
+                    entry.len
+                );
+            }
+        }
+        let len = entry.len;
+        let mut cache = match &self.spill_dir {
+            Some(dir) => ActivationCache::with_budget(0, Some(dir.as_path())),
+            None => ActivationCache::unbounded(),
+        };
+        for b in 0..self.dims.len() {
+            let d = self.dims[b];
+            let segs = self.segments(id, b)?;
+            let mut k = Vec::with_capacity(len * d);
+            let mut v = Vec::with_capacity(len * d);
+            for (ks, vs, _) in segs {
+                k.extend_from_slice(ks);
+                v.extend_from_slice(vs);
+            }
+            cache.push(Tensor::from_f32(k, &[len, d])?)?;
+            cache.push(Tensor::from_f32(v, &[len, d])?)?;
+        }
+        let entry = self.entry_mut(id)?;
+        let pages = std::mem::take(&mut entry.pages);
+        entry.spilled = Some(cache);
+        self.free.extend(pages);
+        self.evictions += 1;
+        Ok(())
+    }
+
+    /// Bring an evicted session back: allocate pages for its committed
+    /// length and scatter the spilled rows back in.  Returns `false`
+    /// (leaving the session evicted) when the free list cannot cover it.
+    /// The restored rows are bit-identical to what was evicted — the FXT
+    /// round trip preserves f32 bits and the segment walk hides the layout.
+    pub fn restore(&mut self, id: usize) -> Result<bool> {
+        let entry = self.entry(id)?;
+        let Some(cache) = &entry.spilled else {
+            bail!("paged kv pool: session {id} is not evicted");
+        };
+        let len = entry.len;
+        if cache.len() != 2 * self.dims.len() {
+            bail!(
+                "paged kv pool: session {id} spill holds {} chunks, expected {}",
+                cache.len(),
+                2 * self.dims.len()
+            );
+        }
+        let need = self.pages_for(len);
+        if need > self.free.len() {
+            return Ok(false);
+        }
+        let pages: Vec<usize> = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        let page_tokens = self.page_tokens;
+        for b in 0..self.dims.len() {
+            let d = self.dims[b];
+            // take() below drops the cache, so read through a fresh borrow
+            let cache = self.sessions[id].as_ref().unwrap().spilled.as_ref().unwrap();
+            let k = cache.get(2 * b)?.into_owned();
+            let v = cache.get(2 * b + 1)?.into_owned();
+            if k.shape() != [len, d] || v.shape() != [len, d] {
+                bail!("paged kv pool: session {id} spill chunk {b} has the wrong shape");
+            }
+            let (kv, vv) = (k.as_f32()?, v.as_f32()?);
+            let slab = &mut self.slabs[b];
+            for r in 0..len {
+                let row0 = (pages[r / page_tokens] * page_tokens + r % page_tokens) * d;
+                slab.k[row0..row0 + d].copy_from_slice(&kv[r * d..(r + 1) * d]);
+                slab.v[row0..row0 + d].copy_from_slice(&vv[r * d..(r + 1) * d]);
+            }
+        }
+        let entry = self.entry_mut(id)?;
+        entry.pages = pages;
+        entry.spilled = None; // drop purges the spill files
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn rows(n: usize, d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n * d).map(|_| rng.next_normal()).collect()
+    }
+
+    /// Gather a session's rows back out through the segment walk.
+    fn gather(pool: &PagedKvPool, id: usize, block: usize) -> (Vec<f32>, Vec<f32>) {
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        for (ks, vs, _) in pool.segments(id, block).unwrap() {
+            k.extend_from_slice(ks);
+            v.extend_from_slice(vs);
+        }
+        (k, v)
+    }
+
+    #[test]
+    fn alloc_append_commit_roundtrip_across_page_boundaries() {
+        let d = 4usize;
+        let mut pool = PagedKvPool::new(&[d, d], 8, 3, None).unwrap();
+        let id = pool.open();
+        // 7 rows straddle three 3-row pages
+        let (k, v) = (rows(7, d, 1), rows(7, d, 2));
+        assert!(pool.reserve(id, 7).unwrap());
+        assert_eq!(pool.pages_in_use(), 3);
+        for b in 0..2 {
+            // append in uneven chunks: 2 + 4 + 1 rows
+            pool.append_rows(id, b, &k[..2 * d], &v[..2 * d]).unwrap();
+            pool.append_rows(id, b, &k[2 * d..6 * d], &v[2 * d..6 * d]).unwrap();
+            pool.append_rows(id, b, &k[6 * d..], &v[6 * d..]).unwrap();
+        }
+        pool.commit(id, 7).unwrap();
+        assert_eq!(pool.len(id).unwrap(), 7);
+        for b in 0..2 {
+            let (gk, gv) = gather(&pool, id, b);
+            assert_eq!(gk, k, "block {b} K rows must round-trip the page layout");
+            assert_eq!(gv, v, "block {b} V rows must round-trip the page layout");
+        }
+        // segments are cut at page boundaries: 3 + 3 + 1 rows
+        let segs = pool.segments(id, 0).unwrap();
+        assert_eq!(segs.iter().map(|s| s.2).collect::<Vec<_>>(), vec![3, 3, 1]);
+        pool.close(id).unwrap();
+        assert_eq!(pool.free_pages(), 8);
+    }
+
+    #[test]
+    fn lockstep_commit_is_enforced() {
+        let d = 4usize;
+        let mut pool = PagedKvPool::new(&[d, d], 4, 2, None).unwrap();
+        let id = pool.open();
+        assert!(pool.reserve(id, 2).unwrap());
+        let (k, v) = (rows(1, d, 3), rows(1, d, 4));
+        pool.append_rows(id, 0, &k, &v).unwrap();
+        // block 1 never wrote → commit must fail and len must not move
+        assert!(pool.commit(id, 1).is_err());
+        assert_eq!(pool.len(id).unwrap(), 0);
+        pool.append_rows(id, 1, &k, &v).unwrap();
+        pool.commit(id, 1).unwrap();
+        // shape mismatches and unreserved writes are rejected
+        assert!(pool.append_rows(id, 0, &k[..3], &v[..3]).is_err());
+        assert!(pool.append_rows(id, 9, &k, &v).is_err());
+        let big = rows(9, d, 5);
+        assert!(pool.append_rows(id, 0, &big, &big).is_err(), "write past reservation");
+    }
+
+    #[test]
+    fn churn_reuses_pages_without_cross_talk() {
+        let d = 2usize;
+        let mut pool = PagedKvPool::new(&[d], 4, 2, None).unwrap();
+        // session A takes all four pages, then frees them
+        let a = pool.open();
+        assert!(pool.reserve(a, 8).unwrap());
+        let (ka, va) = (rows(8, d, 10), rows(8, d, 11));
+        pool.append_rows(a, 0, &ka, &va).unwrap();
+        pool.commit(a, 8).unwrap();
+        assert_eq!(pool.free_pages(), 0);
+        pool.close(a).unwrap();
+        assert_eq!(pool.free_pages(), 4);
+        // two new sessions split the recycled pages; their data stays theirs
+        let b = pool.open();
+        let c = pool.open();
+        let (kb, vb) = (rows(3, d, 20), rows(3, d, 21));
+        let (kc, vc) = (rows(4, d, 30), rows(4, d, 31));
+        assert!(pool.reserve(b, 3).unwrap());
+        assert!(pool.reserve(c, 4).unwrap());
+        pool.append_rows(b, 0, &kb, &vb).unwrap();
+        pool.append_rows(c, 0, &kc, &vc).unwrap();
+        pool.commit(b, 3).unwrap();
+        pool.commit(c, 4).unwrap();
+        assert_eq!(gather(&pool, b, 0), (kb, vb));
+        assert_eq!(gather(&pool, c, 0), (kc, vc));
+        // incremental growth onto a fresh page
+        let (k1, v1) = (rows(1, d, 40), rows(1, d, 41));
+        assert!(pool.reserve(b, 4).unwrap());
+        pool.append_rows(b, 0, &k1, &v1).unwrap();
+        pool.commit(b, 4).unwrap();
+        let (gk, _) = gather(&pool, b, 0);
+        assert_eq!(&gk[3 * d..], &k1[..]);
+    }
+
+    #[test]
+    fn exhaustion_reports_false_and_allocates_nothing() {
+        let d = 2usize;
+        let mut pool = PagedKvPool::new(&[d], 2, 2, None).unwrap();
+        let a = pool.open();
+        assert!(pool.reserve(a, 4).unwrap());
+        let b = pool.open();
+        assert!(!pool.reserve(b, 1).unwrap(), "no pages left");
+        assert_eq!(pool.free_pages(), 0);
+        assert!(pool.fits(4));
+        assert!(!pool.fits(5), "a 5-token session can never fit 2×2 pages");
+        pool.close(a).unwrap();
+        assert!(pool.reserve(b, 1).unwrap(), "freed pages become allocatable");
+    }
+
+    #[test]
+    fn evict_spill_restore_is_bit_identical_and_cleans_up() {
+        let d = 4usize;
+        let dir = std::env::temp_dir()
+            .join(format!("flexround_paged_spill_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let spill_files = |dir: &Path| {
+            std::fs::read_dir(dir)
+                .unwrap()
+                .filter(|e| {
+                    e.as_ref().unwrap().file_name().to_string_lossy().starts_with("actcache_")
+                })
+                .count()
+        };
+        let mut pool = PagedKvPool::new(&[d, d], 4, 2, Some(&dir)).unwrap();
+        let id = pool.open();
+        assert!(pool.reserve(id, 5).unwrap());
+        let (k, v) = (rows(5, d, 50), rows(5, d, 51));
+        for b in 0..2 {
+            pool.append_rows(id, b, &k, &v).unwrap();
+        }
+        pool.commit(id, 5).unwrap();
+        let before: Vec<_> = (0..2).map(|b| gather(&pool, id, b)).collect();
+
+        pool.evict(id).unwrap();
+        assert!(pool.is_evicted(id));
+        assert_eq!(pool.free_pages(), 4, "eviction must return every page");
+        assert_eq!(pool.evictions(), 1);
+        assert_eq!(spill_files(&dir), 4, "2 blocks × (K,V) spilled to disk");
+        assert!(pool.segments(id, 0).is_err(), "no reads while evicted");
+        assert!(pool.evict(id).is_err(), "double evict");
+
+        // another session may use the freed pages meanwhile
+        let other = pool.open();
+        assert!(pool.reserve(other, 2).unwrap());
+        let (ko, vo) = (rows(2, d, 60), rows(2, d, 61));
+        for b in 0..2 {
+            pool.append_rows(other, b, &ko, &vo).unwrap();
+        }
+        pool.commit(other, 2).unwrap();
+
+        assert!(pool.restore(id).unwrap());
+        assert!(!pool.is_evicted(id));
+        assert_eq!(spill_files(&dir), 0, "restore must purge the spill files");
+        assert_eq!(pool.len(id).unwrap(), 5);
+        for (b, want) in before.iter().enumerate() {
+            assert_eq!(&gather(&pool, id, b), want, "block {b} K/V must restore bit-identically");
+        }
+        // the bystander's rows survived the shuffle
+        assert_eq!(gather(&pool, other, 0), (ko.clone(), vo.clone()));
+
+        // restore with zero free pages reports false and changes nothing
+        pool.evict(id).unwrap();
+        let filler = pool.open();
+        assert!(pool.reserve(filler, 6).unwrap());
+        assert!(!pool.restore(id).unwrap());
+        assert!(pool.is_evicted(id));
+        pool.close(filler).unwrap();
+        assert!(pool.restore(id).unwrap());
+        for (b, want) in before.iter().enumerate() {
+            assert_eq!(&gather(&pool, id, b), want, "second restore round trip (block {b})");
+        }
+        // dropping the pool with an evicted session leaks no spill files
+        pool.evict(id).unwrap();
+        assert!(spill_files(&dir) > 0);
+        drop(pool);
+        assert_eq!(spill_files(&dir), 0, "pool drop must clean spill files");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn blockless_models_degrade_gracefully() {
+        let mut pool = PagedKvPool::new(&[], 0, 4, None).unwrap();
+        let id = pool.open();
+        assert!(pool.reserve(id, 100).unwrap(), "no blocks ⇒ nothing to reserve");
+        pool.commit(id, 0).unwrap();
+        assert!(pool.fits(usize::MAX / 8));
+        pool.close(id).unwrap();
+        assert!(PagedKvPool::new(&[4], 0, 4, None).is_err());
+        assert!(PagedKvPool::new(&[4], 4, 0, None).is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! Continuous-batching scheduler acceptance gate (DESIGN.md
+//! §Continuous-Batching) — the tentpole contract is **bit-identity**:
+//!
+//! * batched multi-session decode emits exactly the token streams that
+//!   per-session [`generate::generate`] emits, at several concurrency
+//!   levels, at 4 and 8 bits, across greedy and temperature/top-k
+//!   sampling;
+//! * pool pressure that forces evict → FXT-spill → restore cycles
+//!   mid-generation does not perturb a single token;
+//! * the page layout (page size, segment count) is invisible to the
+//!   streams — paged attention reads are the contiguous walk;
+//! * the admission bound (`max_active`) queues and drains without
+//!   reordering or losing sessions.
+//!
+//! verify.sh runs this differential on both ISA arms
+//! (`FLEXROUND_FORCE_SCALAR=1` and auto-dispatch).
+
+use flexround::infer::generate::{self, GenOpts};
+use flexround::infer::Engine;
+use flexround::sched::{SchedConfig, Scheduler};
+use flexround::tensor::Tensor;
+
+fn lm_engine(bits: u32) -> Engine {
+    Engine::new(generate::synthetic_lm(2, 16, 4, 32, 8, 24, bits, 13).unwrap(), 2)
+}
+
+/// A varied batch of sessions: prompt lengths 2–9, max_new 4–12, greedy and
+/// temperature/top-k sampling, distinct seeds — so concurrency-dependent
+/// bugs cannot hide behind uniform shapes.
+fn session_mix(model: &flexround::infer::PackedModel, n: usize) -> Vec<(Tensor, GenOpts)> {
+    let temps = [0.0f32, 0.8, 1.0, 0.7, 0.9];
+    let top_ks = [0usize, 5, 8, 3, 4];
+    (0..n)
+        .map(|i| {
+            let plen = 1 + (3 * i + 1) % 9;
+            let (_, prompt) = generate::random_prompt(model, plen, 90 + i as u64).unwrap();
+            let opts = GenOpts {
+                max_new: 4 + (5 * i) % 9,
+                temp: temps[i % temps.len()],
+                top_k: top_ks[i % top_ks.len()],
+                seed: 1000 + 37 * i as u64,
+            };
+            (prompt, opts)
+        })
+        .collect()
+}
+
+/// Submit every session, run the scheduler dry, and return the token
+/// streams in submit order (handles are assigned in submit order).
+fn run_batched(
+    engine: Engine,
+    cfg: SchedConfig,
+    mix: &[(Tensor, GenOpts)],
+) -> (Scheduler, Vec<Vec<usize>>) {
+    let mut sched = Scheduler::new(engine, cfg).unwrap();
+    for (prompt, opts) in mix {
+        sched.submit(prompt.as_f32().unwrap().to_vec(), *opts).unwrap();
+    }
+    let mut fin = sched.run_all().unwrap();
+    assert_eq!(fin.len(), mix.len(), "every submitted session must finish");
+    fin.sort_by_key(|f| f.handle);
+    let streams = fin.into_iter().map(|f| f.tokens).collect();
+    (sched, streams)
+}
+
+#[test]
+fn batched_decode_is_bit_identical_to_solo_generate() {
+    for bits in [4u32, 8] {
+        for n in [2usize, 4, 5] {
+            let engine = lm_engine(bits);
+            let mix = session_mix(engine.model(), n);
+            let (sched, streams) = run_batched(engine, SchedConfig::default(), &mix);
+            for (i, ((prompt, opts), got)) in mix.iter().zip(&streams).enumerate() {
+                let want = generate::generate(sched.engine(), prompt, opts).unwrap().tokens;
+                assert_eq!(
+                    got, &want,
+                    "{bits}-bit, {n} concurrent sessions: session {i} diverged from its \
+                     solo decode"
+                );
+            }
+            assert_eq!(sched.pages_in_use(), 0, "retired sessions must free their pages");
+            assert!(!sched.has_work());
+        }
+    }
+}
+
+#[test]
+fn eviction_spill_restore_midstream_is_bit_identical() {
+    // 4 pages × 4 tokens = 16 slots; each session needs 6 + 8 = 14, so two
+    // concurrent sessions cannot coexist at depth — one must be evicted
+    // mid-generation, spill to FXT files, and restore later.
+    for bits in [4u32, 8] {
+        let dir = std::env::temp_dir()
+            .join(format!("flexround_sched_spill_{bits}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let engine = lm_engine(bits);
+        let mix: Vec<(Tensor, GenOpts)> = (0..2)
+            .map(|i| {
+                let (_, prompt) =
+                    generate::random_prompt(engine.model(), 6, 400 + i as u64).unwrap();
+                let opts = GenOpts {
+                    max_new: 8,
+                    temp: if i == 0 { 0.0 } else { 0.9 },
+                    top_k: if i == 0 { 0 } else { 6 },
+                    seed: 500 + 11 * i as u64,
+                };
+                (prompt, opts)
+            })
+            .collect();
+        let cfg = SchedConfig {
+            pool_pages: 4,
+            page_tokens: 4,
+            max_active: 4,
+            prefill_chunk: 32,
+            spill_dir: Some(dir.clone()),
+        };
+        let (sched, streams) = run_batched(engine, cfg, &mix);
+        assert!(
+            sched.evictions() >= 1,
+            "{bits}-bit: pool pressure must force at least one eviction"
+        );
+        for (i, ((prompt, opts), got)) in mix.iter().zip(&streams).enumerate() {
+            let want = generate::generate(sched.engine(), prompt, opts).unwrap().tokens;
+            assert_eq!(
+                got, &want,
+                "{bits}-bit: session {i} diverged across its evict/spill/restore cycle"
+            );
+        }
+        assert_eq!(sched.pages_in_use(), 0);
+        let leftovers = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter(|e| {
+                e.as_ref().unwrap().file_name().to_string_lossy().starts_with("actcache_")
+            })
+            .count();
+        assert_eq!(leftovers, 0, "finished sessions must leave no spill files behind");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn page_layout_is_invisible_to_the_token_streams() {
+    // 3-token pages (every session straddles many segments) vs 64-token
+    // pages (every session fits one segment): identical streams, because
+    // the segmented attention walk is the contiguous walk.
+    let engine = lm_engine(4);
+    let mix = session_mix(engine.model(), 3);
+    let fine = SchedConfig { pool_pages: 64, page_tokens: 3, ..SchedConfig::default() };
+    let coarse = SchedConfig { pool_pages: 4, page_tokens: 64, ..SchedConfig::default() };
+    let (_, fine_streams) = run_batched(engine, fine, &mix);
+    let (_, coarse_streams) = run_batched(lm_engine(4), coarse, &mix);
+    assert_eq!(
+        fine_streams, coarse_streams,
+        "page size must not leak into the sampled tokens"
+    );
+}
+
+#[test]
+fn admission_bound_queues_and_drains_every_session() {
+    let engine = lm_engine(8);
+    let mix = session_mix(engine.model(), 6);
+    let cfg = SchedConfig { max_active: 2, ..SchedConfig::default() };
+    let (sched, streams) = run_batched(engine, cfg, &mix);
+    let (peak_sessions, peak_pages) = sched.occupancy_peaks();
+    assert!(peak_sessions <= 2, "admission control must cap concurrency at max_active");
+    assert!(peak_pages >= 1);
+    assert_eq!(sched.active_sessions(), 0);
+    assert_eq!(sched.queued_sessions(), 0);
+    for (i, ((prompt, opts), got)) in mix.iter().zip(&streams).enumerate() {
+        let want = generate::generate(sched.engine(), prompt, opts).unwrap().tokens;
+        assert_eq!(got, &want, "queued session {i} diverged from its solo decode");
+    }
+}

@@ -12,6 +12,11 @@
 #       the *active* arm; second pass auto-detects (AVX2 where available).
 #       A failure names which ISA path diverged (fast, fails early — a
 #       kernel regression should not wait for the full suite)
+#   1c. scheduler differential smoke, same two-arm pattern:
+#       rust/tests/sched.rs pins batched multi-session decode (paged KV
+#       pool, evict/spill/restore) bit-identical to per-session generate —
+#       on the forced-scalar arm and the auto-detected arm, so an ISA-
+#       specific kernel change cannot silently split the two decode paths
 #   2. full test suite (artifact tests self-skip when artifacts/ is absent)
 #   3. native-only build (--no-default-features): the backend must build
 #      with zero xla surface
@@ -40,6 +45,17 @@ fi
 echo "== kernel-parity smoke, pass 2/2: auto-detected arm =="
 if ! cargo test -q --release --test kernels; then
     echo "kernel parity FAILED on the auto/SIMD path (src/linalg/simd.rs AVX2 arm)"
+    exit 1
+fi
+
+echo "== scheduler differential smoke, pass 1/2: forced-scalar arm =="
+if ! FLEXROUND_FORCE_SCALAR=1 cargo test -q --release --test sched; then
+    echo "scheduler differential FAILED on the forced-SCALAR path (batched decode vs generate)"
+    exit 1
+fi
+echo "== scheduler differential smoke, pass 2/2: auto-detected arm =="
+if ! cargo test -q --release --test sched; then
+    echo "scheduler differential FAILED on the auto/SIMD path (batched decode vs generate)"
     exit 1
 fi
 
