@@ -1,0 +1,111 @@
+//! `cargo bench --bench obs` — overhead microbench for the observability
+//! layer, and the kill-switch acceptance gate (DESIGN.md §Observability):
+//!
+//! * the cost of a span with `FLEXROUND_OBS=off` — must stay in the
+//!   nanosecond range (the gate **fails the run** above [`OFF_NS_MAX`]
+//!   ns/op: a disabled span is one relaxed atomic load and must never read
+//!   the clock);
+//! * the enabled span (two clock reads + one seqlock ring write);
+//! * the per-op cost of a cached counter inc and a histogram record — the
+//!   primitives the scheduler and serve loops pay per step/batch.
+//!
+//! Emits machine-readable results to `BENCH_obs.json` at the repo root.
+//!
+//! Environment knobs:
+//!   FLEXROUND_BENCH_MS  per-measurement budget in ms (default 300)
+
+use flexround::obs;
+use flexround::ser::json::{self, Json};
+use flexround::util::stats::{bench, BenchResult};
+use std::time::Duration;
+
+/// Span calls per timed iteration (amortizes the harness clock reads).
+const INNER: usize = 1000;
+
+/// Acceptance ceiling for the disabled span, ns/op.  The real cost is a
+/// relaxed load plus an `Option` construction — single-digit ns — so 100
+/// leaves a wide margin for noisy CI machines while still catching any
+/// accidental clock read or allocation on the off path.
+const OFF_NS_MAX: f64 = 100.0;
+
+fn per_op_ns(r: &BenchResult) -> f64 {
+    r.min / INNER as f64 * 1e9
+}
+
+fn ns_json(r: &BenchResult) -> Json {
+    Json::object(vec![
+        ("iters", Json::from_f64(r.iters as f64)),
+        ("ns_per_op_min", Json::from_f64(per_op_ns(r))),
+        ("ns_per_op_p50", Json::from_f64(r.p50 / INNER as f64 * 1e9)),
+    ])
+}
+
+fn main() {
+    let budget = Duration::from_millis(
+        std::env::var("FLEXROUND_BENCH_MS").ok().and_then(|s| s.parse().ok()).unwrap_or(300),
+    );
+
+    // ---- disabled path: the kill-switch gate ----
+    println!("== span overhead, FLEXROUND_OBS=off ({INNER} spans/iter) ==");
+    obs::set_enabled(false);
+    let off = bench("span_disabled", budget, 20_000, || {
+        for _ in 0..INNER {
+            std::hint::black_box(obs::span("bench/span"));
+        }
+    });
+    println!("{}", off.report());
+    let off_ns = per_op_ns(&off);
+    println!("  → disabled span costs {off_ns:.1} ns/op (gate: < {OFF_NS_MAX} ns)");
+
+    // ---- enabled paths ----
+    println!("== enabled primitives ({INNER} ops/iter) ==");
+    obs::set_enabled(true);
+    let on = bench("span_enabled", budget, 20_000, || {
+        for _ in 0..INNER {
+            std::hint::black_box(obs::span("bench/span"));
+        }
+    });
+    println!("{}", on.report());
+    println!("  → enabled span costs {:.1} ns/op", per_op_ns(&on));
+
+    let c = obs::counter("flexround_bench_obs_counter_total");
+    let ctr = bench("counter_inc_cached", budget, 20_000, || {
+        for _ in 0..INNER {
+            c.inc();
+        }
+    });
+    println!("{}", ctr.report());
+
+    let h = obs::histogram("flexround_bench_obs_hist");
+    let hist = bench("hist_record", budget, 20_000, || {
+        for i in 0..INNER {
+            h.record(0.001 + i as f64 * 1e-5);
+        }
+    });
+    println!("{}", hist.report());
+
+    // ---- BENCH_obs.json at the repo root ----
+    let doc = Json::object(vec![
+        ("bench", Json::from_str_val("obs")),
+        ("inner_ops_per_iter", Json::from_f64(INNER as f64)),
+        ("span_disabled", ns_json(&off)),
+        ("span_enabled", ns_json(&on)),
+        ("counter_inc", ns_json(&ctr)),
+        ("hist_record", ns_json(&hist)),
+        ("off_gate_ns", Json::from_f64(OFF_NS_MAX)),
+        ("off_gate_pass", Json::Bool(off_ns < OFF_NS_MAX)),
+    ]);
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_obs.json");
+    match std::fs::write(out, json::to_string(&doc, 2) + "\n") {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+
+    if off_ns >= OFF_NS_MAX {
+        eprintln!(
+            "FAIL: disabled span costs {off_ns:.1} ns/op (≥ {OFF_NS_MAX}); the kill switch \
+             must keep the off path free of clock reads"
+        );
+        std::process::exit(1);
+    }
+}

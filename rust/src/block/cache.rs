@@ -118,6 +118,7 @@ impl ActivationCache {
                 let i = self.frontier;
                 self.frontier += 1;
                 let Slot::Mem(tensor) = &self.slots[i] else { continue };
+                let _span = crate::obs::span("cache/spill");
                 let path = self.spill_path(i);
                 let mut m = BTreeMap::new();
                 m.insert(SPILL_KEY.to_string(), tensor.clone());
@@ -130,6 +131,7 @@ impl ActivationCache {
                 }
                 self.mem_bytes -= tensor.len() * 4;
                 self.spilled += 1;
+                crate::obs_counter!("flexround_cache_spills_total").inc();
                 self.slots[i] = Slot::Disk(path);
             }
         }
@@ -160,6 +162,8 @@ impl ActivationCache {
             None => bail!("activation cache has {} chunks, asked for {i}", self.slots.len()),
             Some(Slot::Mem(t)) => Ok(Cow::Borrowed(t)),
             Some(Slot::Disk(path)) => {
+                let _span = crate::obs::span("cache/restore");
+                crate::obs_counter!("flexround_cache_restores_total").inc();
                 let mut m = fxt::read(path)?;
                 let t = m
                     .remove(SPILL_KEY)

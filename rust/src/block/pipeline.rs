@@ -162,12 +162,15 @@ pub fn run_pipeline(sess: &Session, opts: &PipelineOpts) -> Result<PipelineOutco
         // materialization on the quantized chain below — amortizes without
         // unbounding memory)
         let mut y_fp = ActivationCache::with_budget(budget, dir);
-        for start in (0..fp.len()).step_by(ADVANCE_GROUP) {
-            let end = (start + ADVANCE_GROUP).min(fp.len());
-            let xs: Vec<Tensor> =
-                (start..end).map(|i| Ok(fp.get(i)?.into_owned())).collect::<Result<_>>()?;
-            for y in sess.backend.unit_forward_fp(&cx, &xs)? {
-                y_fp.push(y)?;
+        {
+            let _span = crate::obs::span("pipeline/fp_targets");
+            for start in (0..fp.len()).step_by(ADVANCE_GROUP) {
+                let end = (start + ADVANCE_GROUP).min(fp.len());
+                let xs: Vec<Tensor> =
+                    (start..end).map(|i| Ok(fp.get(i)?.into_owned())).collect::<Result<_>>()?;
+                for y in sess.backend.unit_forward_fp(&cx, &xs)? {
+                    y_fp.push(y)?;
+                }
             }
         }
 
@@ -185,6 +188,7 @@ pub fn run_pipeline(sess: &Session, opts: &PipelineOpts) -> Result<PipelineOutco
         };
 
         if learns {
+            let _span = crate::obs::span("pipeline/reconstruct");
             let x_src = xq.as_ref().unwrap_or(&fp);
             let t0 = Instant::now();
             let r = reconstruct_streamed(
@@ -219,6 +223,7 @@ pub fn run_pipeline(sess: &Session, opts: &PipelineOpts) -> Result<PipelineOutco
         // the backend fake-quantizes each layer's Ŵ once per group, not
         // once per chunk
         if let Some(xq_cache) = xq.as_mut() {
+            let _span = crate::obs::span("pipeline/advance_q");
             let mut next = ActivationCache::with_budget(budget, dir);
             for start in (0..xq_cache.len()).step_by(ADVANCE_GROUP) {
                 let end = (start + ADVANCE_GROUP).min(xq_cache.len());
@@ -236,6 +241,7 @@ pub fn run_pipeline(sess: &Session, opts: &PipelineOpts) -> Result<PipelineOutco
         spilled += fp.spilled_chunks();
         fp = y_fp;
         states.push(st);
+        crate::obs_counter!("flexround_pipeline_blocks_total").inc();
     }
     spilled += fp.spilled_chunks();
     if let Some(c) = &xq {

@@ -103,6 +103,8 @@ COMMANDS:
              [--cache-dir <dir>] [--cache-mb <n>]  spill activation chains
                                        over the byte budget to FXT files
              [--pack-out <file.fxt>] [--seed <n>]
+             [--trace-out <file.json>] export per-phase span timings as
+                                       Chrome trace_event JSON
   pack       Quantize, then export a bit-packed low-bit artifact (codes +
              per-row grids + biases; no FP weights inside)
              --model <name> --method <m> --bits <b> [--out <file.fxt>]
@@ -124,6 +126,13 @@ COMMANDS:
              [--pool-pages <n>] [--page-tokens <n>]  KV pool sizing
              [--max-active <n>]   concurrent-session bound
              [--prefill-chunk <n>] prompt rows prefilled per step
+             [--metrics-addr <h:p>] serve /metrics (Prometheus text) and
+                                  /healthz (JSON) on a sidecar thread for
+                                  the run's lifetime; port 0 = ephemeral
+             [--stats-json <file>] dump the final metrics-registry snapshot
+                                  as JSON alongside the stderr stats
+             [--trace-out <file.json>] export span timings as Chrome
+                                  trace_event JSON (as pipeline/generate)
   generate   KV-cached autoregressive decode over a packed block model:
              prefill the prompt once, then one incremental step per token
              (greedy, or temperature/top-k sampling; token embeddings are
@@ -140,6 +149,8 @@ COMMANDS:
                                bit-identical to its solo decode)
              [--pool-pages <n>] [--page-tokens <n>] [--max-active <n>]
              [--prefill-chunk <n>]  scheduler sizing (as in serve)
+             [--trace-out <file.json>] export span timings (sched steps,
+                                  kernel batches) as Chrome trace_event JSON
   sweep      Run a whole experiment table from a config file
              --config configs/<exp>.toml [--set k=v …]
   figure     Emit grid-shift / histogram data for the paper's figures
@@ -157,6 +168,11 @@ GLOBAL FLAGS:
                       stderr — see DESIGN.md §Backends)
   --set k=v           config override (repeatable)
   --quiet             suppress progress logging
+
+ENVIRONMENT:
+  FLEXROUND_OBS=off   disable span tracing and hot-path kernel counters
+                      (near-zero overhead; numerics are identical either way)
+  FLEXROUND_FORCE_SCALAR=1  pin kernel dispatch to the scalar ISA arm
 ";
 
 #[cfg(test)]

@@ -392,6 +392,9 @@ pub fn gemm_fused_int_with(x: &Tensor, m: &PackedMatrix, d: &Dispatch) -> Result
             m.bits()
         ),
     };
+    if crate::obs::enabled() {
+        crate::obs_counter!("flexround_fused_gemm_int_total").inc();
+    }
     Tensor::from_f32(gemm_int(&acts, n, k, m, d), &[n, m.rows()])
 }
 
@@ -412,7 +415,16 @@ pub fn gemm_fused_with(x: &Tensor, m: &PackedMatrix, d: &Dispatch) -> Result<Ten
     let (n, k) = check_shapes(x, m)?;
     let rows = m.rows();
     let xv = x.as_f32()?;
+    // per-call route counters (integer-domain vs f32 panels) — innermost
+    // serving hot path, so the kill switch gates them
+    let counted = crate::obs::enabled();
+    if counted {
+        crate::obs_counter!("flexround_fused_gemm_total").inc();
+    }
     if let Some(acts) = IntActs::capture(xv, n, k, exact_amax(k, code_mag(m))) {
+        if counted {
+            crate::obs_counter!("flexround_fused_gemm_int_total").inc();
+        }
         return Tensor::from_f32(gemm_int(&acts, n, k, m, d), &[n, rows]);
     }
     let sumx = row_sums(xv, n, k);

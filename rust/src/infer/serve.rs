@@ -52,9 +52,10 @@
 
 use super::engine::Engine;
 use super::generate::{self, GenOpts};
+use crate::obs::{self, Hist, HistSnapshot};
+use crate::obs_counter;
 use crate::sched::{SchedConfig, Scheduler};
 use crate::tensor::Tensor;
-use crate::util::stats::percentile;
 use crate::Result;
 use anyhow::anyhow;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
@@ -78,11 +79,16 @@ impl Default for BatchPolicy {
 
 /// Server-side counters, returned by [`Server::shutdown`].
 ///
-/// Latency percentiles are nearest-rank over every answered request:
-/// *wait* is submit → work start (row: its batch's GEMM launch; session:
-/// admission into the scheduler), *service* is work start → answer (row:
-/// its batch's GEMM; session: scheduler residency, concurrent sessions
-/// overlapping).  Occupancy counters come from the scheduler at shutdown.
+/// Latency percentiles are nearest-rank estimates off the shared
+/// [`obs`] log-bucketed histograms (within one bucket width, ~1.33×, of
+/// the exact sorted answer) over every answered request: *wait* is
+/// submit → work start (row: its batch's GEMM launch; session: admission
+/// into the scheduler), *service* is work start → answer (row: its
+/// batch's GEMM; session: scheduler residency, concurrent sessions
+/// overlapping).  The same histograms back the live `/metrics` endpoint
+/// (`flexround_serve_*_ms`), so scrape-time and shutdown percentiles come
+/// from one source of truth.  Occupancy counters come from the scheduler
+/// at shutdown.
 #[derive(Clone, Debug, Default)]
 pub struct ServeStats {
     /// rows answered
@@ -321,27 +327,46 @@ fn ms(d: Duration) -> f64 {
     d.as_secs_f64() * 1e3
 }
 
-/// Latency samples collected while the batcher runs, folded into
-/// [`ServeStats`] percentiles at exit.
-#[derive(Default)]
-struct LatSamples {
-    row_wait: Vec<f64>,
-    row_service: Vec<f64>,
-    gen_wait: Vec<f64>,
-    gen_service: Vec<f64>,
+/// The batcher's latency histograms: handles into the process-wide
+/// [`obs`] registry (`flexround_serve_*_ms`), so a scraper on the
+/// `/metrics` endpoint sees wait/service distributions live, plus a
+/// baseline snapshot of each taken at batcher start.  [`ServeStats`]
+/// percentiles are computed over the snapshot *delta*, so sequential
+/// runs in one process (`serve --compare`, parallel tests) report their
+/// own window rather than everything since process start.
+struct LatHists {
+    row_wait: Arc<Hist>,
+    row_service: Arc<Hist>,
+    gen_wait: Arc<Hist>,
+    gen_service: Arc<Hist>,
+    base: [HistSnapshot; 4],
 }
 
-impl LatSamples {
-    fn fold_into(mut self, stats: &mut ServeStats) {
-        let pctl = |s: &mut [f64], p: f64| if s.is_empty() { 0.0 } else { percentile(s, p) };
-        stats.row_wait_p50_ms = pctl(&mut self.row_wait, 50.0);
-        stats.row_wait_p99_ms = pctl(&mut self.row_wait, 99.0);
-        stats.row_service_p50_ms = pctl(&mut self.row_service, 50.0);
-        stats.row_service_p99_ms = pctl(&mut self.row_service, 99.0);
-        stats.gen_wait_p50_ms = pctl(&mut self.gen_wait, 50.0);
-        stats.gen_wait_p99_ms = pctl(&mut self.gen_wait, 99.0);
-        stats.gen_service_p50_ms = pctl(&mut self.gen_service, 50.0);
-        stats.gen_service_p99_ms = pctl(&mut self.gen_service, 99.0);
+impl LatHists {
+    fn new() -> LatHists {
+        let row_wait = obs::histogram("flexround_serve_row_wait_ms");
+        let row_service = obs::histogram("flexround_serve_row_service_ms");
+        let gen_wait = obs::histogram("flexround_serve_gen_wait_ms");
+        let gen_service = obs::histogram("flexround_serve_gen_service_ms");
+        let base = [
+            row_wait.snapshot(),
+            row_service.snapshot(),
+            gen_wait.snapshot(),
+            gen_service.snapshot(),
+        ];
+        LatHists { row_wait, row_service, gen_wait, gen_service, base }
+    }
+
+    fn fold_into(self, stats: &mut ServeStats) {
+        let q = |h: &Hist, base: &HistSnapshot, p: f64| h.snapshot().delta(base).quantile(p);
+        stats.row_wait_p50_ms = q(&self.row_wait, &self.base[0], 50.0);
+        stats.row_wait_p99_ms = q(&self.row_wait, &self.base[0], 99.0);
+        stats.row_service_p50_ms = q(&self.row_service, &self.base[1], 50.0);
+        stats.row_service_p99_ms = q(&self.row_service, &self.base[1], 99.0);
+        stats.gen_wait_p50_ms = q(&self.gen_wait, &self.base[2], 50.0);
+        stats.gen_wait_p99_ms = q(&self.gen_wait, &self.base[2], 99.0);
+        stats.gen_service_p50_ms = q(&self.gen_service, &self.base[3], 50.0);
+        stats.gen_service_p99_ms = q(&self.gen_service, &self.base[3], 99.0);
     }
 }
 
@@ -356,7 +381,7 @@ fn ingest(
     core: &mut Core,
     pending: &mut Vec<PendingGen>,
     stats: &mut ServeStats,
-    lat: &mut LatSamples,
+    lat: &LatHists,
     open: &mut bool,
 ) {
     match msg {
@@ -383,7 +408,7 @@ fn ingest(
                 }
                 match s.submit(prompt, opts) {
                     Ok(handle) => {
-                        lat.gen_wait.push(ms(t.elapsed()));
+                        lat.gen_wait.record(ms(t.elapsed()));
                         pending.push(PendingGen { handle, resp, admitted: Instant::now() });
                     }
                     Err(e) => {
@@ -392,8 +417,8 @@ fn ingest(
                 }
             }
             Core::Plain(e) => {
-                lat.gen_wait.push(ms(g.t.elapsed()));
-                run_gen(e, g, stats, &mut lat.gen_service);
+                lat.gen_wait.record(ms(g.t.elapsed()));
+                run_gen(e, g, stats, &lat.gen_service);
             }
         },
         Msg::Shutdown => *open = false,
@@ -408,7 +433,9 @@ fn run_batcher(
     cfg: SchedConfig,
 ) -> ServeStats {
     let mut stats = ServeStats::default();
-    let mut lat = LatSamples::default();
+    let lat = LatHists::new();
+    let queue_depth = obs::gauge("flexround_serve_queue_depth");
+    let batch_rows = obs::histogram("flexround_serve_batch_rows");
     let mut core = match Scheduler::supported(engine.model()) {
         Ok(()) => Core::Sched(Box::new(
             Scheduler::new(engine, cfg).expect("scheduler construction was pre-validated"),
@@ -426,7 +453,7 @@ fn run_batcher(
         if open && !core.busy() {
             match rx.recv() {
                 Ok(m) => {
-                    ingest(m, &mut batch, &mut opened, &mut core, &mut pending, &mut stats, &mut lat, &mut open)
+                    ingest(m, &mut batch, &mut opened, &mut core, &mut pending, &mut stats, &lat, &mut open)
                 }
                 Err(_) => open = false,
             }
@@ -437,7 +464,7 @@ fn run_batcher(
         while open && batch.len() < max_batch {
             if core.busy() {
                 match rx.try_recv() {
-                    Ok(m) => ingest(m, &mut batch, &mut opened, &mut core, &mut pending, &mut stats, &mut lat, &mut open),
+                    Ok(m) => ingest(m, &mut batch, &mut opened, &mut core, &mut pending, &mut stats, &lat, &mut open),
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => open = false,
                 }
@@ -445,7 +472,7 @@ fn run_batcher(
                 let Some(t0) = opened else { break };
                 let Some(left) = deadline.checked_sub(t0.elapsed()) else { break };
                 match rx.recv_timeout(left) {
-                    Ok(m) => ingest(m, &mut batch, &mut opened, &mut core, &mut pending, &mut stats, &mut lat, &mut open),
+                    Ok(m) => ingest(m, &mut batch, &mut opened, &mut core, &mut pending, &mut stats, &lat, &mut open),
                     Err(RecvTimeoutError::Timeout) => break,
                     Err(RecvTimeoutError::Disconnected) => open = false,
                 }
@@ -453,7 +480,9 @@ fn run_batcher(
         }
         // the collected row batch: one fused GEMM, fan the rows back out
         if !batch.is_empty() {
+            let _span = obs::span("serve/batch");
             let n = batch.len();
+            queue_depth.set(n as i64);
             let width = batch[0].row.len();
             let mut flat = Vec::with_capacity(n * width);
             for r in &batch {
@@ -461,7 +490,7 @@ fn run_batcher(
             }
             let t0 = Instant::now();
             for r in &batch {
-                lat.row_wait.push(ms(r.t.elapsed()));
+                lat.row_wait.record(ms(r.t.elapsed()));
             }
             let result =
                 Tensor::from_f32(flat, &[n, width]).and_then(|x| core.engine().forward(&x));
@@ -470,9 +499,13 @@ fn run_batcher(
             stats.batches += 1;
             stats.requests += n as u64;
             stats.max_batch = stats.max_batch.max(n);
+            obs_counter!("flexround_serve_batches_total").inc();
+            obs_counter!("flexround_serve_requests_total").add(n as u64);
+            batch_rows.record(n as f64);
             for _ in 0..n {
-                lat.row_service.push(ms(dt));
+                lat.row_service.record(ms(dt));
             }
+            queue_depth.set(0);
             match result {
                 Ok(y) => {
                     let out_w = y.shape()[1];
@@ -500,10 +533,13 @@ fn run_batcher(
                             };
                             let p = pending.swap_remove(pos);
                             let dt = p.admitted.elapsed();
-                            lat.gen_service.push(ms(dt));
+                            lat.gen_service.record(ms(dt));
                             stats.gen_secs += dt.as_secs_f64();
                             stats.gen_sessions += 1;
                             stats.gen_tokens += fin.tokens.len() as u64;
+                            obs_counter!("flexround_serve_gen_sessions_total").inc();
+                            obs_counter!("flexround_serve_gen_tokens_total")
+                                .add(fin.tokens.len() as u64);
                             let _ = p.resp.send(Ok(fin.tokens));
                         }
                     }
@@ -543,7 +579,7 @@ pub const MAX_GEN_TOKENS: usize = 4096;
 /// session synchronously on the batcher thread and answer it.  Generation
 /// on such models fails fast inside [`generate::generate`], so this path
 /// never holds the thread for long.
-fn run_gen(engine: &Engine, g: GenRequest, stats: &mut ServeStats, service: &mut Vec<f64>) {
+fn run_gen(engine: &Engine, g: GenRequest, stats: &mut ServeStats, service: &Hist) {
     let GenRequest { prompt, mut opts, resp, t: _ } = g;
     opts.max_new = opts.max_new.min(MAX_GEN_TOKENS);
     let d = engine.model().in_width().unwrap_or(1).max(1);
@@ -559,11 +595,13 @@ fn run_gen(engine: &Engine, g: GenRequest, stats: &mut ServeStats, service: &mut
         .and_then(|x| generate::generate(engine, &x, &opts));
     let dt = t0.elapsed();
     stats.gen_secs += dt.as_secs_f64();
-    service.push(ms(dt));
+    service.record(ms(dt));
     stats.gen_sessions += 1;
+    obs_counter!("flexround_serve_gen_sessions_total").inc();
     match result {
         Ok(gen) => {
             stats.gen_tokens += gen.tokens.len() as u64;
+            obs_counter!("flexround_serve_gen_tokens_total").add(gen.tokens.len() as u64);
             let _ = resp.send(Ok(gen.tokens));
         }
         Err(e) => {

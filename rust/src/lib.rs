@@ -42,6 +42,7 @@ pub mod eval;
 pub mod infer;
 pub mod linalg;
 pub mod manifest;
+pub mod obs;
 pub mod quant;
 pub mod recon;
 pub mod report;

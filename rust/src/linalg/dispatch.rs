@@ -105,7 +105,21 @@ impl Dispatch {
         kernel: impl Fn(usize, usize, &mut [f32]) + Sync,
     ) {
         debug_assert_eq!(out.len(), rows * cols);
-        match self.panels(rows, flops) {
+        let panels = self.panels(rows, flops);
+        // per-GEMM dispatch-decision counters (serial vs parallel, ISA arm);
+        // this is an innermost hot path, so the kill switch gates them
+        if crate::obs::enabled() {
+            if panels.is_some() {
+                crate::obs_counter!("flexround_dispatch_parallel_total").inc();
+            } else {
+                crate::obs_counter!("flexround_dispatch_serial_total").inc();
+            }
+            match self.isa {
+                Isa::Scalar => crate::obs_counter!("flexround_dispatch_scalar_total").inc(),
+                Isa::Avx2 => crate::obs_counter!("flexround_dispatch_avx2_total").inc(),
+            }
+        }
+        match panels {
             None => kernel(0, rows, out),
             Some(ranges) => pool::par_panels(out, cols, &ranges, |(lo, hi), panel| {
                 kernel(lo, hi, panel)

@@ -421,7 +421,7 @@ fn run_pipeline_cmd(
             1e3 * t0.elapsed().as_secs_f64()
         );
     }
-    Ok(())
+    maybe_write_trace(args)
 }
 
 /// `flexround generate` — KV-cached autoregressive decode over a packed
@@ -458,7 +458,8 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let engine = Engine::new(model, workers);
     let sessions = args.usize_flag("sessions", 1).max(1);
     if sessions > 1 {
-        return generate_sessions(args, engine, &opts, sessions);
+        generate_sessions(args, engine, &opts, sessions)?;
+        return maybe_write_trace(args);
     }
     let (prompt_toks, prompt) =
         generate::random_prompt(engine.model(), args.usize_flag("prompt-len", 4), opts.seed)?;
@@ -489,7 +490,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
             }
         );
     }
-    Ok(())
+    maybe_write_trace(args)
 }
 
 /// Scheduler sizing from the CLI flags (`serve` and `generate --sessions`).
@@ -612,6 +613,42 @@ fn load_engine(args: &Args) -> Result<flexround::infer::Engine> {
     Ok(Engine::new(model, workers))
 }
 
+/// `--trace-out <path>`: export the span ring as Chrome `trace_event` JSON
+/// (open via chrome://tracing or ui.perfetto.dev).
+fn maybe_write_trace(args: &Args) -> Result<()> {
+    if let Some(path) = args.flag("trace-out") {
+        let n = flexround::obs::write_chrome_trace(Path::new(path))?;
+        eprintln!("trace: {n} spans → {path} (Chrome trace_event format)");
+    }
+    Ok(())
+}
+
+/// The `/healthz` model block for `serve --metrics-addr`.
+fn model_info_json(engine: &flexround::infer::Engine) -> flexround::ser::json::Json {
+    use flexround::ser::json::Json;
+    let m = engine.model();
+    Json::object(vec![
+        ("units", Json::from_f64(m.units.len() as f64)),
+        ("in_width", Json::from_f64(engine.in_width().unwrap_or(0) as f64)),
+        ("packed_bytes", Json::from_f64(m.packed_bytes() as f64)),
+    ])
+}
+
+/// Shared tail of every `serve` path: stop the metrics endpoint, dump the
+/// final registry snapshot (`--stats-json`), export spans (`--trace-out`).
+fn finish_serve(args: &Args, metrics: Option<flexround::obs::MetricsServer>) -> Result<()> {
+    if let Some(ms) = metrics {
+        ms.shutdown()?;
+    }
+    if let Some(path) = args.flag("stats-json") {
+        let doc = flexround::obs::snapshot_json();
+        std::fs::write(path, flexround::ser::json::to_string(&doc, 2) + "\n")
+            .map_err(|e| anyhow!("writing --stats-json {path}: {e}"))?;
+        eprintln!("stats: metrics snapshot → {path}");
+    }
+    maybe_write_trace(args)
+}
+
 fn cmd_infer(args: &Args) -> Result<()> {
     let engine = load_engine(args)?;
     let rows = args.usize_flag("rows", 8).max(1);
@@ -710,6 +747,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         load_engine(args)?
     };
+    // `--metrics-addr <host:port>` (port 0 = ephemeral): serve /metrics and
+    // /healthz from a sidecar thread for the lifetime of the workload
+    let metrics = match args.flag("metrics-addr") {
+        Some(addr) => {
+            let ms = flexround::obs::MetricsServer::start(addr, model_info_json(&engine))?;
+            println!("metrics endpoint: http://{}/metrics (and /healthz)", ms.addr());
+            Some(ms)
+        }
+        None => None,
+    };
     if sessions > 0 {
         // mixed workload: rows racing generation sessions for the batcher,
         // reproducible from the seed
@@ -726,7 +773,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             stats.mean_batch(),
         );
         print_serve_stats(&stats);
-        return Ok(());
+        return finish_serve(args, metrics);
     }
     let width = engine.in_width()?;
     let mut rng = flexround::util::rng::Pcg32::seeded(seed);
@@ -758,7 +805,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             rps / rps_u.max(1e-9)
         );
     }
-    Ok(())
+    finish_serve(args, metrics)
 }
 
 fn cmd_figure(args: &Args, art: &PathBuf, rep: &PathBuf, quiet: bool) -> Result<()> {

@@ -1,0 +1,316 @@
+//! Fixed-bucket log-spaced latency histogram with atomic recording.
+//!
+//! Buckets are geometric: [`BUCKETS_PER_DECADE`] per power of ten spanning
+//! [`LO`]..[`HI`], plus an underflow bucket (samples `< LO`, including zero
+//! and negatives) and an overflow bucket (`>= HI`).  With 8 buckets per
+//! decade adjacent bucket bounds differ by a ratio of `10^(1/8) ≈ 1.334`,
+//! so a nearest-rank quantile read off the bucket counts lands within one
+//! bucket width of the exact sorted-sample answer — tight enough for
+//! p50/p90/p99 latency reporting at any time scale from nanoseconds to
+//! minutes without per-histogram configuration.
+//!
+//! Recording is one `fetch_add` on the bucket plus a CAS loop folding the
+//! sample into a bit-cast f64 running sum; there are no locks anywhere, so
+//! histograms are safe to hammer from the batcher, scheduler, and worker
+//! pool concurrently.  Readers take a [`HistSnapshot`] (a plain copy of the
+//! counts) and do all quantile math on that, so in-flight recording never
+//! skews a percentile mid-computation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log-spaced buckets per power of ten.
+pub const BUCKETS_PER_DECADE: usize = 8;
+/// Lower bound of the first finite bucket.
+pub const LO: f64 = 1e-9;
+/// Number of decades covered by the finite buckets.
+pub const DECADES: usize = 12;
+/// Finite bucket count (underflow/overflow slots come on top).
+pub const NBUCKETS: usize = BUCKETS_PER_DECADE * DECADES;
+/// Upper bound of the last finite bucket: `LO * 10^DECADES` = 1e3.
+pub const HI: f64 = 1e3;
+
+/// Total slots: underflow + finite buckets + overflow.
+const SLOTS: usize = NBUCKETS + 2;
+
+/// Lock-free log-bucketed histogram.  Construct via [`Hist::new`] or, for
+/// registry-managed instances, [`crate::obs::histogram`].
+pub struct Hist {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist {
+            buckets: (0..SLOTS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0),
+        }
+    }
+
+    /// Slot index for a sample: 0 = underflow, 1..=NBUCKETS finite,
+    /// NBUCKETS+1 = overflow.  NaN is treated as underflow (it must land
+    /// somewhere; a poisoned timer should not panic the server).
+    fn slot(v: f64) -> usize {
+        if !(v >= LO) {
+            return 0;
+        }
+        if v >= HI {
+            return NBUCKETS + 1;
+        }
+        let pos = (v.log10() - LO.log10()) * BUCKETS_PER_DECADE as f64;
+        // log10 rounding at exact bucket bounds can land a hair outside
+        // [0, NBUCKETS); clamp rather than trust float edges.
+        1 + (pos.floor() as usize).min(NBUCKETS - 1)
+    }
+
+    /// Upper bound of slot `i` (finite slots only; `i` in 1..=NBUCKETS).
+    fn upper(i: usize) -> f64 {
+        LO * 10f64.powf(i as f64 / BUCKETS_PER_DECADE as f64)
+    }
+
+    /// Record one sample.  Always live — histograms back `ServeStats`
+    /// percentiles, so the `FLEXROUND_OBS` kill switch does not gate them.
+    pub fn record(&self, v: f64) {
+        self.buckets[Self::slot(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Copy the current counts out for quantile math and rendering.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: f64::from_bits(self.sum_bits.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// Immutable copy of a histogram's state at one instant.
+#[derive(Clone, Debug)]
+pub struct HistSnapshot {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl HistSnapshot {
+    /// Samples recorded between `earlier` and `self` (`self` must be the
+    /// later snapshot of the same histogram).  Lets several sequential
+    /// workloads share one process-wide histogram and still report
+    /// per-run percentiles.
+    pub fn delta(&self, earlier: &HistSnapshot) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self
+                .buckets
+                .iter()
+                .zip(&earlier.buckets)
+                .map(|(a, b)| a.saturating_sub(*b))
+                .collect(),
+            count: self.count.saturating_sub(earlier.count),
+            sum: self.sum - earlier.sum,
+        }
+    }
+
+    /// Nearest-rank quantile estimate, `p` in [0, 100].  Returns the
+    /// geometric midpoint of the bucket holding the target rank, which is
+    /// within one bucket-width ratio (`10^(1/8)`) of the exact sorted
+    /// answer.  Empty histograms report 0.0, matching the legacy
+    /// `ServeStats` convention for idle servers.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::representative(i);
+            }
+        }
+        Self::representative(self.buckets.len() - 1)
+    }
+
+    /// Arithmetic mean of the recorded samples (exact: tracked sum/count).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Representative value for a slot: LO for underflow, HI for overflow,
+    /// geometric midpoint of the bounds for finite buckets.
+    fn representative(slot: usize) -> f64 {
+        if slot == 0 {
+            return LO;
+        }
+        if slot > NBUCKETS {
+            return HI;
+        }
+        let hi = Hist::upper(slot);
+        let lo = Hist::upper(slot - 1);
+        (lo * hi).sqrt()
+    }
+
+    /// Iterate `(upper_bound, cumulative_count)` pairs over the finite
+    /// buckets for Prometheus exposition; the caller appends the `+Inf`
+    /// bucket from `count`.  Empty buckets are skipped except the final
+    /// finite one, to keep `/metrics` output bounded.
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate().take(NBUCKETS + 1) {
+            cum += c;
+            if c > 0 && i >= 1 {
+                out.push((Hist::upper(i), cum));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use std::sync::Arc;
+
+    /// One-bucket-width ratio: adjacent bounds differ by 10^(1/8).
+    const BUCKET_RATIO: f64 = 1.3335214321633242;
+
+    fn exact_percentile(samples: &mut [f64], p: f64) -> f64 {
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * samples.len() as f64).ceil().max(1.0) as usize;
+        samples[rank - 1]
+    }
+
+    fn assert_within_bucket(est: f64, exact: f64, what: &str) {
+        assert!(
+            est >= exact / BUCKET_RATIO - 1e-12 && est <= exact * BUCKET_RATIO + 1e-12,
+            "{what}: estimate {est} vs exact {exact} outside one bucket width"
+        );
+    }
+
+    #[test]
+    fn quantiles_match_sorted_reference_within_one_bucket() {
+        // Three seeded shapes: uniform, log-uniform (heavy dynamic range),
+        // and a bimodal latency-like mix.
+        let mut rng = Pcg32::seeded(42);
+        let mut uf = move || rng.next_f32() as f64;
+        let shapes: Vec<(&str, Vec<f64>)> = vec![
+            ("uniform", (0..5000).map(|_| 0.1 + 9.9 * uf()).collect()),
+            ("loguniform", (0..5000).map(|_| 10f64.powf(-6.0 + 8.0 * uf())).collect()),
+            (
+                "bimodal",
+                (0..5000)
+                    .map(|_| if uf() < 0.9 { 0.002 + 0.001 * uf() } else { 0.5 + 0.2 * uf() })
+                    .collect(),
+            ),
+        ];
+        for (name, samples) in shapes {
+            let h = Hist::new();
+            for &s in &samples {
+                h.record(s);
+            }
+            let snap = h.snapshot();
+            assert_eq!(snap.count, samples.len() as u64);
+            let mut sorted = samples.clone();
+            for p in [50.0, 90.0, 99.0] {
+                let exact = exact_percentile(&mut sorted, p);
+                assert_within_bucket(snap.quantile(p), exact, &format!("{name} p{p}"));
+            }
+            let mean_exact: f64 = samples.iter().sum::<f64>() / samples.len() as f64;
+            assert!((snap.mean() - mean_exact).abs() < 1e-9 * mean_exact.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn empty_and_single_sample_edges() {
+        let h = Hist::new();
+        let empty = h.snapshot();
+        assert_eq!(empty.count, 0);
+        assert_eq!(empty.quantile(50.0), 0.0);
+        assert_eq!(empty.mean(), 0.0);
+
+        h.record(0.0375);
+        let one = h.snapshot();
+        assert_eq!(one.count, 1);
+        for p in [0.0, 50.0, 100.0] {
+            assert_within_bucket(one.quantile(p), 0.0375, "single-sample");
+        }
+
+        // Out-of-range samples land in the sentinel buckets, not panics.
+        h.record(0.0);
+        h.record(-3.0);
+        h.record(f64::NAN);
+        h.record(1e12);
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 5);
+        assert_eq!(snap.buckets[0], 3);
+        assert_eq!(snap.buckets[NBUCKETS + 1], 1);
+        assert_eq!(snap.quantile(100.0), HI);
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        let h = Arc::new(Hist::new());
+        let threads = 8u64;
+        let per = 20_000u64;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    let mut rng = Pcg32::seeded(100 + t);
+                    for _ in 0..per {
+                        h.record(10f64.powf(-4.0 + 6.0 * rng.next_f32() as f64));
+                    }
+                })
+            })
+            .collect();
+        for j in handles {
+            j.join().unwrap();
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count, threads * per);
+        assert_eq!(snap.buckets.iter().sum::<u64>(), threads * per);
+        assert!(snap.sum > 0.0 && snap.sum.is_finite());
+    }
+
+    #[test]
+    fn delta_isolates_a_window() {
+        let h = Hist::new();
+        for _ in 0..100 {
+            h.record(1.0);
+        }
+        let base = h.snapshot();
+        for _ in 0..50 {
+            h.record(100.0);
+        }
+        let d = h.snapshot().delta(&base);
+        assert_eq!(d.count, 50);
+        assert_within_bucket(d.quantile(50.0), 100.0, "delta p50");
+        assert!((d.mean() - 100.0).abs() < 1e-6);
+    }
+}

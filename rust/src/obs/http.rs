@@ -1,0 +1,158 @@
+//! Minimal blocking HTTP endpoint for `/metrics` and `/healthz`.
+//!
+//! One `std::net::TcpListener` accept loop on one background thread, one
+//! connection handled at a time, `Connection: close` on every response —
+//! deliberately the smallest thing that a Prometheus scraper and a `curl`
+//! health probe can talk to.  This is a metrics sidecar, not the inference
+//! front end; the async HTTP server the ROADMAP asks for plugs into the
+//! same registry later.
+//!
+//! `/metrics` renders [`super::render_prometheus`].  `/healthz` returns a
+//! JSON document with status, uptime, the model info the caller passed to
+//! [`MetricsServer::start`], and scheduler liveness read from the registry
+//! (steps, active/queued sessions, pages in use, evictions).
+//!
+//! Shutdown is deterministic: [`MetricsServer::shutdown`] flips a flag and
+//! self-connects to unblock `accept`, then joins the thread, so tests can
+//! assert no listener lingers.
+
+use crate::ser::json::{self, Json};
+use crate::Result;
+use anyhow::anyhow;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Handle to the background metrics endpoint.  Dropping it also shuts the
+/// listener down (shutdown-by-hand is preferred so errors surface).
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9100`, or port 0 for an ephemeral
+    /// port) and start serving.  `model_info` is echoed inside `/healthz`.
+    pub fn start(addr: &str, model_info: Json) -> Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow!("binding metrics endpoint {addr}: {e}"))?;
+        let local =
+            listener.local_addr().map_err(|e| anyhow!("metrics endpoint local_addr: {e}"))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let t0 = Instant::now();
+        let handle = std::thread::Builder::new()
+            .name("obs-metrics".to_string())
+            .spawn(move || serve_loop(listener, stop2, model_info, t0))
+            .map_err(|e| anyhow!("spawning metrics endpoint thread: {e}"))?;
+        Ok(MetricsServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0 to the real ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, close the listener, and join the thread.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.stop_and_join().map_err(|e| anyhow!("metrics endpoint shutdown: {e}"))
+    }
+
+    fn stop_and_join(&mut self) -> std::result::Result<(), String> {
+        let Some(handle) = self.handle.take() else { return Ok(()) };
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock accept(); an error just means the listener already died.
+        let _ = TcpStream::connect(self.addr);
+        handle.join().map_err(|_| "endpoint thread panicked".to_string())
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        let _ = self.stop_and_join();
+    }
+}
+
+fn serve_loop(listener: TcpListener, stop: Arc<AtomicBool>, model_info: Json, t0: Instant) {
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        if let Ok(stream) = stream {
+            // Per-connection errors (bad request, client hangup) are the
+            // client's problem; the endpoint itself must keep serving.
+            let _ = handle_conn(stream, &model_info, t0);
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, model_info: &Json, t0: Instant) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    let mut buf = [0u8; 4096];
+    let mut n = 0usize;
+    // Read until the end of the request head (we ignore bodies).
+    while n < buf.len() {
+        let got = stream.read(&mut buf[n..])?;
+        if got == 0 {
+            break;
+        }
+        n += got;
+        if buf[..n].windows(4).any(|w| w == b"\r\n\r\n") {
+            break;
+        }
+    }
+    let head = String::from_utf8_lossy(&buf[..n]);
+    let mut parts = head.lines().next().unwrap_or("").split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let path = path.split('?').next().unwrap_or(path);
+
+    let (status, ctype, body) = if method != "GET" {
+        ("405 Method Not Allowed", "text/plain", "only GET is supported\n".to_string())
+    } else {
+        match path {
+            "/metrics" => (
+                "200 OK",
+                "text/plain; version=0.0.4; charset=utf-8",
+                super::render_prometheus(),
+            ),
+            "/healthz" => (
+                "200 OK",
+                "application/json",
+                json::to_string(&healthz_json(model_info, t0), 2) + "\n",
+            ),
+            _ => ("404 Not Found", "text/plain", format!("no route for {path}\n")),
+        }
+    };
+    let resp = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(resp.as_bytes())
+}
+
+/// Build the `/healthz` body: status, uptime, model info, and scheduler
+/// liveness read from whatever the scheduler has published so far.
+fn healthz_json(model_info: &Json, t0: Instant) -> Json {
+    let sched_val = |name: &str| Json::from_f64(super::value(name).unwrap_or(0.0));
+    Json::object(vec![
+        ("status", Json::from_str_val("ok")),
+        ("uptime_secs", Json::from_f64(t0.elapsed().as_secs_f64())),
+        ("model", model_info.clone()),
+        (
+            "scheduler",
+            Json::object(vec![
+                ("steps", sched_val("flexround_sched_steps_total")),
+                ("active_sessions", sched_val("flexround_sched_active_sessions")),
+                ("queued_sessions", sched_val("flexround_sched_queued_sessions")),
+                ("pages_in_use", sched_val("flexround_sched_pages_in_use")),
+                ("evictions", sched_val("flexround_sched_evictions_total")),
+            ]),
+        ),
+    ])
+}

@@ -1,0 +1,366 @@
+//! Zero-dependency observability: metrics registry, RAII span tracing, and
+//! the `/metrics` + `/healthz` HTTP endpoint.
+//!
+//! Everything here is std-only (the offline vendored build allows nothing
+//! else) and built for hot paths measured in nanoseconds:
+//!
+//! * **Metrics** — process-wide named [`Counter`]s, [`Gauge`]s, and
+//!   log-bucketed latency [`Hist`]ograms, registered once by name and
+//!   updated with single relaxed atomics.  Call sites cache their handle
+//!   in a `OnceLock` via [`obs_counter!`]/[`obs_gauge!`]/[`obs_hist!`] so
+//!   the registry mutex is touched exactly once per site per process.
+//!   [`snapshot`] copies everything out; [`render_prometheus`] emits the
+//!   text exposition format and [`snapshot_json`] a JSON document.
+//! * **Spans** — [`span`] returns an RAII guard that stamps wall-time into
+//!   a bounded lock-free ring ([`trace`]), exportable as Chrome
+//!   `trace_event` JSON via `--trace-out`.
+//! * **Endpoint** — [`http::MetricsServer`] serves the registry over a
+//!   minimal blocking `TcpListener` (`serve --metrics-addr`).
+//!
+//! ## Kill switch and overhead policy
+//!
+//! `FLEXROUND_OBS=off` (or `0`/`false`) disables spans and the per-call
+//! counters on the innermost kernel paths; [`span`] then returns an inert
+//! guard without reading the clock (`benches/obs.rs` asserts that path
+//! stays in the nanosecond range, recorded in `BENCH_obs.json`).
+//! Histogram recording and the per-step scheduler/serve metrics stay live
+//! regardless — `ServeStats` percentiles are computed from them, and one
+//! atomic per scheduler step is noise next to a batched forward.
+//! Instrumentation never touches numerics: verify.sh re-runs the kernel
+//! and scheduler differential parity gates under `FLEXROUND_OBS=off` to
+//! prove bit-identity.
+
+pub mod hist;
+pub mod http;
+pub mod trace;
+
+pub use hist::{Hist, HistSnapshot};
+pub use http::MetricsServer;
+pub use trace::{span, write_chrome_trace, SpanGuard};
+
+use crate::ser::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+// ---------------------------------------------------------------------------
+// Kill switch
+
+/// 0 = uninitialised, 1 = on, 2 = off.
+static STATE: AtomicU8 = AtomicU8::new(0);
+
+/// Whether observability is live.  First call reads `FLEXROUND_OBS` once;
+/// after that it is a single relaxed atomic load.
+#[inline]
+pub fn enabled() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => init_enabled(),
+    }
+}
+
+#[cold]
+fn init_enabled() -> bool {
+    let on = !matches!(
+        std::env::var("FLEXROUND_OBS").as_deref(),
+        Ok("off") | Ok("0") | Ok("false")
+    );
+    STATE.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+    on
+}
+
+/// Force the switch, overriding the environment.  For benches and tests
+/// that need to measure both modes inside one process.
+pub fn set_enabled(on: bool) {
+    STATE.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Metric primitives
+
+/// Monotonic counter (relaxed `fetch_add`).
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed value (queue depth, pages in use, …).
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Hist(Arc<Hist>),
+}
+
+static REGISTRY: OnceLock<Mutex<BTreeMap<String, Metric>>> = OnceLock::new();
+
+fn registry() -> &'static Mutex<BTreeMap<String, Metric>> {
+    REGISTRY.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+fn with_registry<R>(f: impl FnOnce(&mut BTreeMap<String, Metric>) -> R) -> R {
+    let mut guard = registry().lock().unwrap_or_else(|p| p.into_inner());
+    f(&mut guard)
+}
+
+/// Look up (registering on first use) the counter named `name`.  A name
+/// already registered as a different metric kind is a programmer error.
+pub fn counter(name: &str) -> Arc<Counter> {
+    with_registry(|m| match m
+        .entry(name.to_string())
+        .or_insert_with(|| Metric::Counter(Arc::new(Counter::default())))
+    {
+        Metric::Counter(c) => Arc::clone(c),
+        _ => panic!("metric {name} already registered with a different kind"),
+    })
+}
+
+/// Look up (registering on first use) the gauge named `name`.
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    with_registry(|m| match m
+        .entry(name.to_string())
+        .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::default())))
+    {
+        Metric::Gauge(g) => Arc::clone(g),
+        _ => panic!("metric {name} already registered with a different kind"),
+    })
+}
+
+/// Look up (registering on first use) the histogram named `name`.
+pub fn histogram(name: &str) -> Arc<Hist> {
+    with_registry(|m| match m
+        .entry(name.to_string())
+        .or_insert_with(|| Metric::Hist(Arc::new(Hist::new())))
+    {
+        Metric::Hist(h) => Arc::clone(h),
+        _ => panic!("metric {name} already registered with a different kind"),
+    })
+}
+
+/// Cache a registry [`Counter`] handle in a per-call-site `OnceLock`.
+#[macro_export]
+macro_rules! obs_counter {
+    ($name:expr) => {{
+        static H: std::sync::OnceLock<std::sync::Arc<$crate::obs::Counter>> =
+            std::sync::OnceLock::new();
+        &**H.get_or_init(|| $crate::obs::counter($name))
+    }};
+}
+
+/// Cache a registry [`Gauge`] handle in a per-call-site `OnceLock`.
+#[macro_export]
+macro_rules! obs_gauge {
+    ($name:expr) => {{
+        static H: std::sync::OnceLock<std::sync::Arc<$crate::obs::Gauge>> =
+            std::sync::OnceLock::new();
+        &**H.get_or_init(|| $crate::obs::gauge($name))
+    }};
+}
+
+/// Cache a registry [`Hist`] handle in a per-call-site `OnceLock`.
+#[macro_export]
+macro_rules! obs_hist {
+    ($name:expr) => {{
+        static H: std::sync::OnceLock<std::sync::Arc<$crate::obs::Hist>> =
+            std::sync::OnceLock::new();
+        &**H.get_or_init(|| $crate::obs::histogram($name))
+    }};
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot + rendering
+
+/// Point-in-time value of one registered metric.
+#[derive(Clone, Debug)]
+pub enum SnapValue {
+    Counter(u64),
+    Gauge(i64),
+    Hist(HistSnapshot),
+}
+
+/// Copy every registered metric's current value.
+pub fn snapshot() -> BTreeMap<String, SnapValue> {
+    with_registry(|m| {
+        m.iter()
+            .map(|(name, metric)| {
+                let v = match metric {
+                    Metric::Counter(c) => SnapValue::Counter(c.get()),
+                    Metric::Gauge(g) => SnapValue::Gauge(g.get()),
+                    Metric::Hist(h) => SnapValue::Hist(h.snapshot()),
+                };
+                (name.clone(), v)
+            })
+            .collect()
+    })
+}
+
+/// Scalar read of one metric by name (counters and gauges as-is,
+/// histograms as their count).  `None` if never registered.
+pub fn value(name: &str) -> Option<f64> {
+    with_registry(|m| {
+        m.get(name).map(|metric| match metric {
+            Metric::Counter(c) => c.get() as f64,
+            Metric::Gauge(g) => g.get() as f64,
+            Metric::Hist(h) => h.count() as f64,
+        })
+    })
+}
+
+/// Render the whole registry in the Prometheus text exposition format
+/// (version 0.0.4).  Histograms emit cumulative `_bucket{le=…}` lines for
+/// every occupied bucket plus `+Inf`, `_sum`, `_count`, and convenience
+/// `_p50`/`_p90`/`_p99` gauges so quantiles are readable without a query
+/// engine.
+pub fn render_prometheus() -> String {
+    let mut out = String::new();
+    for (name, v) in snapshot() {
+        match v {
+            SnapValue::Counter(c) => {
+                out.push_str(&format!("# TYPE {name} counter\n{name} {c}\n"));
+            }
+            SnapValue::Gauge(g) => {
+                out.push_str(&format!("# TYPE {name} gauge\n{name} {g}\n"));
+            }
+            SnapValue::Hist(h) => {
+                out.push_str(&format!("# TYPE {name} histogram\n"));
+                for (le, cum) in h.cumulative() {
+                    out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+                }
+                out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+                out.push_str(&format!("{name}_sum {}\n", h.sum));
+                out.push_str(&format!("{name}_count {}\n", h.count));
+                for (suffix, p) in [("p50", 50.0), ("p90", 90.0), ("p99", 99.0)] {
+                    out.push_str(&format!(
+                        "# TYPE {name}_{suffix} gauge\n{name}_{suffix} {}\n",
+                        h.quantile(p)
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The whole registry as one JSON object (the `serve --stats-json` body).
+/// Histograms carry count/sum/mean plus the three headline quantiles.
+pub fn snapshot_json() -> Json {
+    let mut obj = BTreeMap::new();
+    for (name, v) in snapshot() {
+        let jv = match v {
+            SnapValue::Counter(c) => Json::from_f64(c as f64),
+            SnapValue::Gauge(g) => Json::from_f64(g as f64),
+            SnapValue::Hist(h) => Json::object(vec![
+                ("count", Json::from_f64(h.count as f64)),
+                ("sum", Json::from_f64(h.sum)),
+                ("mean", Json::from_f64(h.mean())),
+                ("p50", Json::from_f64(h.quantile(50.0))),
+                ("p90", Json::from_f64(h.quantile(90.0))),
+                ("p99", Json::from_f64(h.quantile(99.0))),
+            ]),
+        };
+        obj.insert(name, jv);
+    }
+    Json::Obj(obj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_hands_back_the_same_instance() {
+        let a = counter("obs_test_requests_total");
+        let b = counter("obs_test_requests_total");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        assert_eq!(value("obs_test_requests_total"), Some(3.0));
+        assert_eq!(value("obs_test_never_registered"), None);
+
+        let g = gauge("obs_test_depth");
+        g.set(5);
+        g.add(-2);
+        assert_eq!(g.get(), 3);
+    }
+
+    #[test]
+    fn macros_cache_handles() {
+        let c = obs_counter!("obs_test_macro_total");
+        c.inc();
+        obs_counter!("obs_test_macro_total");
+        assert_eq!(counter("obs_test_macro_total").get(), 1);
+        obs_gauge!("obs_test_macro_gauge").set(7);
+        assert_eq!(gauge("obs_test_macro_gauge").get(), 7);
+        obs_hist!("obs_test_macro_hist").record(1.0);
+        assert_eq!(histogram("obs_test_macro_hist").count(), 1);
+    }
+
+    #[test]
+    fn prometheus_exposition_well_formed() {
+        counter("obs_test_expo_total").add(4);
+        gauge("obs_test_expo_gauge").set(-2);
+        let h = histogram("obs_test_expo_ms");
+        for i in 0..100 {
+            h.record(0.5 + i as f64 * 0.01);
+        }
+        let text = render_prometheus();
+        assert!(text.contains("# TYPE obs_test_expo_total counter"));
+        assert!(text.contains("obs_test_expo_total 4"));
+        assert!(text.contains("obs_test_expo_gauge -2"));
+        assert!(text.contains("# TYPE obs_test_expo_ms histogram"));
+        assert!(text.contains("obs_test_expo_ms_count 100"));
+        assert!(text.contains("obs_test_expo_ms_bucket{le=\"+Inf\"} 100"));
+        // Every non-comment line is `name[{labels}] value` with a numeric value.
+        for line in text.lines() {
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (_, val) = line.rsplit_once(' ').expect("line has a value field");
+            val.parse::<f64>().expect("value parses as a number");
+        }
+    }
+
+    #[test]
+    fn json_snapshot_carries_quantiles() {
+        let h = histogram("obs_test_json_ms");
+        h.record(2.0);
+        let doc = snapshot_json();
+        match &doc {
+            Json::Obj(m) => match m.get("obs_test_json_ms") {
+                Some(Json::Obj(hm)) => {
+                    assert!(hm.contains_key("p50") && hm.contains_key("count"));
+                }
+                other => panic!("histogram rendered as {other:?}"),
+            },
+            _ => panic!("snapshot_json is not an object"),
+        }
+    }
+}

@@ -608,12 +608,14 @@ pub fn run_adam(
     let mut first_loss = f64::NAN;
     let mut final_loss = f64::NAN;
     for t in 1..=cfg.iters {
+        let _span = crate::obs::span("recon/adam_step");
         let (loss, grads) = step(rng, &params)?;
         if t == 1 {
             first_loss = loss;
         }
         final_loss = loss;
         opt.step(t, cfg.lr, entries, &mut params, &grads)?;
+        crate::obs_counter!("flexround_recon_steps_total").inc();
         if cfg.verbose && (t == 1 || t % 100 == 0 || t == cfg.iters) {
             eprintln!("    [{}] iter {t}/{} loss {loss:.6}", cfg.tag, cfg.iters);
         }

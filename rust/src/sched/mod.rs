@@ -330,6 +330,7 @@ impl Scheduler {
     /// planned row, scatter K/V, sample, retire.  Returns the number of
     /// token rows processed (0 = the scheduler is idle).
     pub fn step(&mut self) -> Result<usize> {
+        let _span = crate::obs::span("sched/step");
         self.admit()?;
         if self.running.is_empty() {
             return Ok(0);
@@ -392,11 +393,15 @@ impl Scheduler {
         // -- gather the batch: plan order, token rows --
         let n: usize = plan.iter().map(|p| p.rows).sum();
         let mut flat = Vec::with_capacity(n * self.tok_w);
+        let mut prefill_rows = 0usize;
+        let mut prefill_chunks = 0u64;
         for p in &plan {
             let s = &self.running[p.sess];
             if s.prefill_done < s.prompt_len {
                 let a = s.prefill_done * self.tok_w;
                 flat.extend_from_slice(&s.prompt[a..a + p.rows * self.tok_w]);
+                prefill_rows += p.rows;
+                prefill_chunks += 1;
             } else {
                 flat.extend_from_slice(s.pending_row.as_ref().expect("planned decode row"));
             }
@@ -460,6 +465,17 @@ impl Scheduler {
             self.pool.close(s.pool_id)?;
             self.finished.push(FinishedGen { handle: s.handle, tokens: s.tokens });
         }
+        // publish scheduler liveness for /metrics and /healthz: one counter
+        // bump, one histogram sample, and four gauge stores per step — noise
+        // next to the batched forward above, so not gated by the kill switch
+        crate::obs_counter!("flexround_sched_steps_total").inc();
+        crate::obs_counter!("flexround_sched_prefill_rows_total").add(prefill_rows as u64);
+        crate::obs_counter!("flexround_sched_prefill_chunks_total").add(prefill_chunks);
+        crate::obs_counter!("flexround_sched_decode_rows_total").add((n - prefill_rows) as u64);
+        crate::obs_hist!("flexround_sched_step_rows").record(n as f64);
+        crate::obs_gauge!("flexround_sched_active_sessions").set(self.running.len() as i64);
+        crate::obs_gauge!("flexround_sched_queued_sessions").set(self.queued.len() as i64);
+        crate::obs_gauge!("flexround_sched_pages_in_use").set(self.pool.pages_in_use() as i64);
         Ok(n)
     }
 }

@@ -313,6 +313,7 @@ impl PagedKvPool {
     /// its pages.  Refuses while uncommitted rows exist — eviction is only
     /// legal between steps, when every block is in lockstep.
     pub fn evict(&mut self, id: usize) -> Result<()> {
+        let _span = crate::obs::span("sched/evict");
         let entry = self.entry(id)?;
         if entry.spilled.is_some() {
             bail!("paged kv pool: session {id} is already evicted");
@@ -351,6 +352,7 @@ impl PagedKvPool {
         entry.spilled = Some(cache);
         self.free.extend(pages);
         self.evictions += 1;
+        crate::obs_counter!("flexround_sched_evictions_total").inc();
         Ok(())
     }
 
@@ -360,6 +362,7 @@ impl PagedKvPool {
     /// The restored rows are bit-identical to what was evicted — the FXT
     /// round trip preserves f32 bits and the segment walk hides the layout.
     pub fn restore(&mut self, id: usize) -> Result<bool> {
+        let _span = crate::obs::span("sched/restore");
         let entry = self.entry(id)?;
         let Some(cache) = &entry.spilled else {
             bail!("paged kv pool: session {id} is not evicted");
@@ -398,6 +401,7 @@ impl PagedKvPool {
         let entry = self.entry_mut(id)?;
         entry.pages = pages;
         entry.spilled = None; // drop purges the spill files
+        crate::obs_counter!("flexround_sched_restores_total").inc();
         Ok(true)
     }
 }

@@ -1,0 +1,165 @@
+//! Integration tests for the observability endpoint: `/metrics` exposition
+//! well-formedness, `/healthz` during an active multi-session scheduler
+//! run, and clean listener shutdown (no lingering thread / socket).
+
+use flexround::infer::generate::{self, GenOpts};
+use flexround::infer::{BatchPolicy, Engine, Server};
+use flexround::obs::MetricsServer;
+use flexround::ser::json::{self, Json};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+fn http_get(addr: SocketAddr, path: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect to metrics endpoint");
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).expect("read response");
+    let status: u16 = buf
+        .split_whitespace()
+        .nth(1)
+        .and_then(|t| t.parse().ok())
+        .expect("status line");
+    let body = match buf.split_once("\r\n\r\n") {
+        Some((_, b)) => b.to_string(),
+        None => String::new(),
+    };
+    (status, body)
+}
+
+/// Every non-comment line must be `name[{labels}] value` with a numeric
+/// value; every `# TYPE` line must name a known metric kind.
+fn assert_exposition_well_formed(body: &str) {
+    for line in body.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().expect("typed metric name");
+            let kind = it.next().expect("metric kind");
+            assert!(!name.is_empty());
+            assert!(
+                matches!(kind, "counter" | "gauge" | "histogram"),
+                "unknown metric kind {kind:?} in {line:?}"
+            );
+            continue;
+        }
+        assert!(!line.starts_with('#'), "only # TYPE comments are emitted, got {line:?}");
+        let (name, val) = line.rsplit_once(' ').unwrap_or_else(|| panic!("no value in {line:?}"));
+        assert!(!name.is_empty(), "empty metric name in {line:?}");
+        val.parse::<f64>().unwrap_or_else(|_| panic!("non-numeric value in {line:?}"));
+    }
+}
+
+#[test]
+fn metrics_and_healthz_serve_during_active_scheduler_run() {
+    let model = generate::synthetic_lm(2, 16, 4, 32, 8, 24, 4, 5).unwrap();
+    let server = Server::start(
+        Engine::new(model, 1),
+        BatchPolicy { max_batch: 4, deadline: Duration::from_micros(200) },
+    )
+    .unwrap();
+    let ms = MetricsServer::start(
+        "127.0.0.1:0",
+        Json::object(vec![("name", Json::from_str_val("synthetic_lm"))]),
+    )
+    .unwrap();
+    let addr = ms.addr();
+    assert_ne!(addr.port(), 0, "port 0 must resolve to a real ephemeral port");
+
+    // a mixed workload: three long-decode sessions racing a row client
+    let gen_threads: Vec<_> = (0..3)
+        .map(|i| {
+            let client = server.client();
+            let prompt = {
+                // prompts come off the server's own model shape
+                let m = generate::synthetic_lm(2, 16, 4, 32, 8, 24, 4, 5).unwrap();
+                let (_, p) = generate::random_prompt(&m, 3, 11 + i).unwrap();
+                p.as_f32().unwrap().to_vec()
+            };
+            let opts = GenOpts { max_new: 300, temp: 0.8, top_k: 4, seed: 13 + i };
+            std::thread::spawn(move || client.generate(prompt, opts).unwrap().len())
+        })
+        .collect();
+    let row_client = server.client();
+    for _ in 0..4 {
+        assert_eq!(row_client.call(vec![0.5; 4 * 16]).unwrap().len(), 4 * 24);
+    }
+
+    // probe while the sessions are (almost certainly) still decoding —
+    // the endpoint must answer concurrently with the batcher + scheduler
+    let (status, health) = http_get(addr, "/healthz");
+    assert_eq!(status, 200);
+    let doc = json::parse(health.trim()).expect("healthz is valid JSON");
+    assert_eq!(doc.get("status").unwrap().str().unwrap(), "ok");
+    assert!(doc.get("uptime_secs").unwrap().num().unwrap() >= 0.0);
+    assert_eq!(doc.get("model").unwrap().get("name").unwrap().str().unwrap(), "synthetic_lm");
+    let sched = doc.get("scheduler").expect("healthz carries scheduler liveness");
+    assert!(sched.get("steps").unwrap().num().unwrap() >= 0.0);
+    assert!(sched.get("pages_in_use").is_ok() && sched.get("evictions").is_ok());
+
+    let (status, metrics_live) = http_get(addr, "/metrics");
+    assert_eq!(status, 200);
+    assert_exposition_well_formed(&metrics_live);
+
+    for t in gen_threads {
+        assert_eq!(t.join().unwrap(), 300);
+    }
+
+    // after the workload: the serve/sched families must all be present
+    let (_, metrics) = http_get(addr, "/metrics");
+    assert_exposition_well_formed(&metrics);
+    for family in [
+        "flexround_serve_queue_depth",
+        "flexround_serve_batch_rows",
+        "flexround_serve_row_wait_ms",
+        "flexround_serve_row_service_ms",
+        "flexround_serve_gen_wait_ms",
+        "flexround_serve_gen_service_ms",
+        "flexround_serve_requests_total",
+        "flexround_serve_gen_sessions_total",
+        "flexround_sched_steps_total",
+        "flexround_sched_active_sessions",
+        "flexround_sched_pages_in_use",
+    ] {
+        assert!(metrics.contains(family), "/metrics is missing {family}");
+    }
+    // histogram families render the full exposition shape
+    assert!(metrics.contains("flexround_serve_row_wait_ms_bucket{le=\"+Inf\"}"));
+    assert!(metrics.contains("flexround_serve_row_wait_ms_count"));
+    assert!(metrics.contains("flexround_serve_row_wait_ms_p99"));
+
+    let (status, _) = http_get(addr, "/nope");
+    assert_eq!(status, 404);
+
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.gen_sessions, 3);
+    ms.shutdown().expect("endpoint joins cleanly");
+    // no lingering listener: the port must refuse connections now
+    assert!(
+        TcpStream::connect_timeout(&addr, Duration::from_millis(500)).is_err(),
+        "listener socket survived shutdown"
+    );
+}
+
+#[test]
+fn endpoint_shuts_down_cleanly_with_no_traffic() {
+    let ms = MetricsServer::start("127.0.0.1:0", Json::Null).unwrap();
+    let addr = ms.addr();
+    ms.shutdown().expect("idle endpoint joins cleanly");
+    assert!(TcpStream::connect_timeout(&addr, Duration::from_millis(500)).is_err());
+}
+
+#[test]
+fn endpoint_drop_joins_the_listener_thread() {
+    let addr = {
+        let ms = MetricsServer::start("127.0.0.1:0", Json::Null).unwrap();
+        let (status, _) = http_get(ms.addr(), "/metrics");
+        assert_eq!(status, 200);
+        ms.addr()
+        // ms drops here: Drop must stop + join, not leak the thread
+    };
+    assert!(TcpStream::connect_timeout(&addr, Duration::from_millis(500)).is_err());
+}

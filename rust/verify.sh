@@ -17,6 +17,12 @@
 #       pool, evict/spill/restore) bit-identical to per-session generate —
 #       on the forced-scalar arm and the auto-detected arm, so an ISA-
 #       specific kernel change cannot silently split the two decode paths
+#   1d. observability kill-switch gate: the kernel and scheduler
+#       differential smokes re-run with FLEXROUND_OBS=off (spans and
+#       hot-path counters disabled) — instrumentation must never touch
+#       numerics, so parity has to hold bit-identically in both modes —
+#       and the obs microbench (benches/obs.rs) fails the gate if a
+#       disabled span costs more than nanoseconds (writes BENCH_obs.json)
 #   2. full test suite (artifact tests self-skip when artifacts/ is absent)
 #   3. native-only build (--no-default-features): the backend must build
 #      with zero xla surface
@@ -56,6 +62,21 @@ fi
 echo "== scheduler differential smoke, pass 2/2: auto-detected arm =="
 if ! cargo test -q --release --test sched; then
     echo "scheduler differential FAILED on the auto/SIMD path (batched decode vs generate)"
+    exit 1
+fi
+
+echo "== observability kill-switch gate: FLEXROUND_OBS=off parity smokes =="
+if ! FLEXROUND_OBS=off cargo test -q --release --test kernels; then
+    echo "kernel parity FAILED with observability disabled (FLEXROUND_OBS=off)"
+    exit 1
+fi
+if ! FLEXROUND_OBS=off cargo test -q --release --test sched; then
+    echo "scheduler differential FAILED with observability disabled (FLEXROUND_OBS=off)"
+    exit 1
+fi
+echo "== observability disabled-overhead microbench (benches/obs.rs) =="
+if ! cargo bench --bench obs; then
+    echo "obs overhead gate FAILED: a disabled span must cost nanoseconds"
     exit 1
 fi
 
