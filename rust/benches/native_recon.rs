@@ -1,16 +1,23 @@
 //! `cargo bench --bench native_recon` — the native reconstruction engine's
 //! perf harness (EXPERIMENTS.md §Perf: native vs PJRT per-unit
-//! reconstruction time).
+//! reconstruction time), plus a per-scheme reconstruction-time comparison
+//! (FlexRound vs AdaRound through the `Rounding` trait — DESIGN.md
+//! §Rounding-Schemes).
 //!
 //! Needs no artifacts: synthetic units are generated in-process.  When real
 //! artifacts *are* present and the build carries working PJRT bindings, a
 //! comparison row times the AOT reconstruction step on the same hardware.
 //!
+//! Emits machine-readable results to `BENCH_native_recon.json` at the repo
+//! root, alongside the human-readable stdout lines.
+//!
 //! Environment knobs:
 //!   FLEXROUND_BENCH_MS      per-measurement budget in ms (default 1500)
 //!   FLEXROUND_BENCH_WORKERS worker threads for the pool rows (default all)
 
+use flexround::recon::rounding::{beta_schedule, scheme_for};
 use flexround::recon::{self, LayerDef};
+use flexround::ser::json::{self, Json};
 use flexround::util::pool;
 use flexround::util::rng::Pcg32;
 use flexround::util::stats::bench;
@@ -29,6 +36,7 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or_else(pool::default_workers);
+    let scheme = scheme_for("flexround").expect("flexround scheme");
 
     println!("== native reconstruction (workers={workers}) ==");
     for &(r, c, n, b) in &SIZES {
@@ -50,8 +58,9 @@ fn main() {
                 let idx = rng.sample_indices(n, b);
                 let xb = p.x.gather_rows(&idx).expect("gather");
                 let yb = p.y.gather_rows(&idx).expect("gather");
+                let beta = beta_schedule(t, 10_000);
                 let (_, grads) = recon::loss_and_grads(
-                    &layers, &slots, &params, &xb, &yb, p.qmin, p.qmax, workers,
+                    scheme, &layers, &slots, &params, &xb, &yb, p.qmin, p.qmax, beta, workers,
                 ).expect("step");
                 opt.step(t, 3e-3, &p.entries, &mut params, &grads).expect("adam");
             },
@@ -64,7 +73,7 @@ fn main() {
             10_000,
             || {
                 let _ = recon::unit_forward_q(
-                    &layers, &slots, &p.params, p.qmin, p.qmax, &p.x, workers,
+                    scheme, &layers, &slots, &p.params, p.qmin, p.qmax, &p.x, workers,
                 ).expect("fwd");
             },
         ).report());
@@ -83,33 +92,85 @@ fn main() {
         ).report());
     }
 
-    // end-to-end: the selftest problem, timed once per worker count
+    // end-to-end: the selftest problem per rounding scheme, timed once per
+    // worker count.  Same size and iteration budget for every scheme, so
+    // the seconds column is a direct per-step cost comparison; each scheme
+    // trains its own parameter pack (FlexRound: s1/s2/s3/s4; AdaRound: V).
+    let mut rows: Vec<(String, &'static str, usize, f64, f64, f64)> = Vec::new();
     for w in [1, workers] {
-        let t0 = std::time::Instant::now();
-        let p = recon::synthetic_problem(64, 128, 256, 3, 7);
-        let slots = recon::synthetic_slots();
-        let layers = [LayerDef { name: "fc", w: &p.w, bias: None, relu_after: false }];
-        let cfg = recon::ReconSettings {
-            iters: 100,
-            lr: 4e-3,
-            batch: 32,
-            qmin: p.qmin,
-            qmax: p.qmax,
-            workers: w,
-            verbose: false,
-            tag: "bench".to_string(),
-        };
-        let mut rng = Pcg32::seeded(7);
-        let res = recon::reconstruct_unit(
-            &layers, &slots, &p.entries, &p.params, &p.x, &p.y, &cfg, &mut rng,
-        ).expect("recon");
-        println!(
-            "native reconstruct_unit[64x128, 100 iters, workers={w}]  {:>8.1}ms  \
-             (loss {:.5} → {:.5})",
-            1e3 * t0.elapsed().as_secs_f64(),
-            res.first_loss,
-            res.final_loss,
-        );
+        for method in ["flexround", "adaround"] {
+            let (p, slots, lr) = if method == "adaround" {
+                (
+                    recon::synthetic_problem_adaround(64, 128, 256, 3, 7),
+                    recon::synthetic_slots_adaround(),
+                    1e-2,
+                )
+            } else {
+                (recon::synthetic_problem(64, 128, 256, 3, 7), recon::synthetic_slots(), 4e-3)
+            };
+            let layers = [LayerDef { name: "fc", w: &p.w, bias: None, relu_after: false }];
+            let cfg = recon::ReconSettings {
+                iters: 100,
+                lr,
+                batch: 32,
+                qmin: p.qmin,
+                qmax: p.qmax,
+                workers: w,
+                verbose: false,
+                tag: format!("bench/{method}"),
+                scheme: scheme_for(method).expect("scheme"),
+            };
+            let mut rng = Pcg32::seeded(7);
+            let t0 = std::time::Instant::now();
+            let res = recon::reconstruct_unit(
+                &layers, &slots, &p.entries, &p.params, &p.x, &p.y, &cfg, &mut rng,
+            ).expect("recon");
+            let secs = t0.elapsed().as_secs_f64();
+            println!(
+                "native reconstruct_unit[64x128, 100 iters, workers={w}, {method:<9}]  \
+                 {:>8.1}ms  (loss {:.5} → {:.5})",
+                1e3 * secs,
+                res.first_loss,
+                res.final_loss,
+            );
+            rows.push((
+                format!("reconstruct_unit_{method}_w{w}"),
+                method,
+                w,
+                secs,
+                res.first_loss,
+                res.final_loss,
+            ));
+        }
+    }
+
+    let doc = Json::object(vec![
+        ("bench", Json::from_str_val("native_recon")),
+        ("rows_cols", Json::from_str_val("64x128")),
+        ("calib_rows", Json::from_f64(256.0)),
+        ("iters", Json::from_f64(100.0)),
+        (
+            "runs",
+            Json::Arr(
+                rows.iter()
+                    .map(|(name, method, w, secs, first, last)| {
+                        Json::object(vec![
+                            ("name", Json::from_str_val(name)),
+                            ("scheme", Json::from_str_val(method)),
+                            ("workers", Json::from_f64(*w as f64)),
+                            ("seconds", Json::from_f64(*secs)),
+                            ("first_loss", Json::from_f64(*first)),
+                            ("final_loss", Json::from_f64(*last)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_native_recon.json");
+    match std::fs::write(out, json::to_string(&doc, 2) + "\n") {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
     }
 
     pjrt_comparison(budget);

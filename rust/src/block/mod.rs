@@ -46,7 +46,7 @@ pub use pipeline::{
 
 use crate::linalg;
 use crate::manifest::PackEntry;
-use crate::recon::{self, LayerSlots, ReconResult, ReconSettings};
+use crate::recon::{self, LayerSlots, ReconResult, ReconSettings, Rounding};
 use crate::runtime::UnitCtx;
 use crate::tensor::{
     gelu_bwd, layernorm_rows, layernorm_rows_bwd, minmax_scale, softmax_rows_bwd, Tensor,
@@ -519,8 +519,9 @@ fn forward_cached(
             def.seq
         );
     }
+    let disp = linalg::Dispatch::new(workers);
     let proj = |xin: &Tensor, i: usize| -> Result<Tensor> {
-        let mut y = recon::matmul_nt_par(xin, w[i], workers)?;
+        let mut y = xin.matmul_nt_with(w[i], &disp)?;
         let bias = def.b[i].map(|t| t.as_f32()).transpose()?;
         y.bias_relu_inplace(bias, false)?;
         Ok(y)
@@ -555,6 +556,7 @@ pub fn forward_fp(def: &BlockDef, x: &Tensor, workers: usize) -> Result<Tensor> 
 
 /// Materialize the six fake-quantized Ŵ from the current parameter pack.
 pub fn block_whats(
+    scheme: &dyn Rounding,
     def: &BlockDef,
     slots: &[LayerSlots],
     params: &[Tensor],
@@ -567,23 +569,14 @@ pub fn block_whats(
     def.w
         .iter()
         .zip(slots)
-        .map(|(w, s)| {
-            recon::fq_forward(
-                w,
-                &params[s.s1],
-                s.s2.map(|i| &params[i]),
-                s.s3.map(|i| &params[i]),
-                s.s4.map(|i| &params[i]),
-                &params[s.zp],
-                qmin,
-                qmax,
-            )
-        })
+        .map(|(w, s)| scheme.forward(w, &s.resolve(params), qmin, qmax))
         .collect()
 }
 
 /// Quantized block forward with the current parameter pack.
+#[allow(clippy::too_many_arguments)]
 pub fn forward_q(
+    scheme: &dyn Rounding,
     def: &BlockDef,
     slots: &[LayerSlots],
     params: &[Tensor],
@@ -592,7 +585,7 @@ pub fn forward_q(
     x: &Tensor,
     workers: usize,
 ) -> Result<Tensor> {
-    let whats = block_whats(def, slots, params, qmin, qmax)?;
+    let whats = block_whats(scheme, def, slots, params, qmin, qmax)?;
     let refs: Vec<&Tensor> = whats.iter().collect();
     forward_with(def, &refs, x, workers)
 }
@@ -603,10 +596,13 @@ pub fn forward_q(
 
 /// Forward the minibatch through the fake-quantized block, compute
 /// `L = mean((ŷ − y)²)`, and backpropagate — through the residual adds,
-/// layernorm, GELU, the attention softmax, and finally
-/// [`recon::fq_backward`]'s STE — into per-entry parameter gradients.
+/// layernorm, GELU, the attention softmax, and finally the scheme's STE
+/// backward (FlexRound's Proposition 3.1 closed form, or AdaRound's
+/// rectified-sigmoid derivative with the β-annealed regularizer) — into
+/// per-entry parameter gradients.
 #[allow(clippy::too_many_arguments)]
 pub fn loss_and_grads(
+    scheme: &dyn Rounding,
     def: &BlockDef,
     slots: &[LayerSlots],
     params: &[Tensor],
@@ -614,9 +610,10 @@ pub fn loss_and_grads(
     yb: &Tensor,
     qmin: f32,
     qmax: f32,
+    beta: f64,
     workers: usize,
 ) -> Result<(f64, Vec<Option<Tensor>>)> {
-    let whats = block_whats(def, slots, params, qmin, qmax)?;
+    let whats = block_whats(scheme, def, slots, params, qmin, qmax)?;
     let refs: Vec<&Tensor> = whats.iter().collect();
     let cache = forward_cached(def, &refs, xb, workers, true)?;
     let yhat = &cache.y;
@@ -655,32 +652,13 @@ pub fn loss_and_grads(
     let d_wk = dk.matmul_tn_with(&cache.h1, &disp)?;
     let d_wv = dv.matmul_tn_with(&cache.h1, &disp)?;
 
-    // ---- STE into the FlexRound parameters, per layer ----
+    // ---- STE into the scheme's rounding parameters, per layer ----
     let mut grads: Vec<Option<Tensor>> = params.iter().map(|_| None).collect();
     let dwhats = [d_wq, d_wk, d_wv, d_wo, d_up, d_down];
     for (i, dwhat) in dwhats.iter().enumerate() {
         let s = &slots[i];
-        let fg = recon::fq_backward(
-            def.w[i],
-            &params[s.s1],
-            s.s2.map(|j| &params[j]),
-            s.s3.map(|j| &params[j]),
-            s.s4.map(|j| &params[j]),
-            &params[s.zp],
-            dwhat,
-            qmin,
-            qmax,
-        )?;
-        grads[s.s1] = Some(fg.ds1);
-        if let (Some(j), Some(d)) = (s.s2, fg.ds2) {
-            grads[j] = Some(d);
-        }
-        if let (Some(j), Some(d)) = (s.s3, fg.ds3) {
-            grads[j] = Some(d);
-        }
-        if let (Some(j), Some(d)) = (s.s4, fg.ds4) {
-            grads[j] = Some(d);
-        }
+        let fg = scheme.backward(def.w[i], &s.resolve(params), dwhat, qmin, qmax, beta)?;
+        recon::scatter_grads(&mut grads, s, fg);
     }
     Ok((loss, grads))
 }
@@ -724,11 +702,14 @@ pub fn reconstruct_block(
     }
     let nseq = n / def.seq;
     let batch_seqs = (cfg.batch / def.seq).clamp(1, nseq);
-    recon::run_adam(entries, params0, cfg, rng, |rng, params| {
+    recon::run_adam(entries, params0, cfg, rng, |rng, params, t| {
         let rows = seq_rows(&rng.sample_indices(nseq, batch_seqs), def.seq);
         let xb = x.gather_rows(&rows)?;
         let yb = y.gather_rows(&rows)?;
-        loss_and_grads(def, slots, params, &xb, &yb, cfg.qmin, cfg.qmax, cfg.workers)
+        let beta = recon::rounding::beta_schedule(t, cfg.iters);
+        loss_and_grads(
+            cfg.scheme, def, slots, params, &xb, &yb, cfg.qmin, cfg.qmax, beta, cfg.workers,
+        )
     })
 }
 
@@ -849,6 +830,48 @@ impl BlockTensors {
                 s2: Some(base + 1),
                 s3: Some(base + 2),
                 s4: Some(base + 3),
+                v: None,
+            });
+        }
+        (entries, params, slots)
+    }
+
+    /// AdaRound pack for every layer: frozen per-row RTN `s1`/`zp` plus the
+    /// learnable rounding variable `V` at the RTN-fraction init
+    /// (`(entries, params, slots)` in [`CANON_LAYERS`] order).
+    pub fn adaround_pack(&self, bits: u32) -> (Vec<PackEntry>, Vec<Tensor>, Vec<LayerSlots>) {
+        let mut entries = Vec::new();
+        let mut params = Vec::new();
+        let mut slots = Vec::new();
+        for (li, name) in CANON_LAYERS.iter().enumerate() {
+            let w = &self.w[li];
+            let (rows, cols) = (w.shape()[0], w.shape()[1]);
+            let wv = w.as_f32().expect("block weights are f32");
+            let s1: Vec<f32> = (0..rows)
+                .map(|r| minmax_scale(&wv[r * cols..(r + 1) * cols], bits, true).0)
+                .collect();
+            let s1 = Tensor::from_f32(s1, &[rows, 1]).expect("s1");
+            let v = crate::recon::rounding::adaround::init_v(w, &s1).expect("init v");
+            let base = params.len();
+            let entry = |k: &str, shape: &[usize], learn: bool| PackEntry {
+                name: format!("{name}.{k}"),
+                shape: shape.to_vec(),
+                learnable: learn,
+            };
+            entries.extend([
+                entry("s1", &[rows, 1], false),
+                entry("v", &[rows, cols], true),
+                entry("zp", &[rows, 1], false),
+            ]);
+            params.extend([s1, v, Tensor::zeros(&[rows, 1])]);
+            slots.push(LayerSlots {
+                layer: li,
+                s1: base,
+                zp: base + 2,
+                s2: None,
+                s3: None,
+                s4: None,
+                v: Some(base + 1),
             });
         }
         (entries, params, slots)
@@ -955,7 +978,8 @@ mod tests {
         let x = random_x(16 * 4, 8, 23);
         let y = forward_fp(&def, &x, 1).unwrap();
         let (qmin, qmax) = crate::tensor::qrange(3, true);
-        let before = forward_q(&def, &slots, &params, qmin, qmax, &x, 1)
+        let scheme = recon::scheme_for("flexround").unwrap();
+        let before = forward_q(scheme, &def, &slots, &params, qmin, qmax, &x, 1)
             .unwrap()
             .mse(&y)
             .unwrap();
@@ -968,12 +992,13 @@ mod tests {
             workers: 1,
             verbose: false,
             tag: "block".into(),
+            scheme,
         };
         let mut rng = Pcg32::seeded(3);
         let r = reconstruct_block(&def, &slots, &entries, &params, &x, &y, &cfg, &mut rng)
             .unwrap();
         assert!(r.first_loss.is_finite() && r.final_loss.is_finite());
-        let after = forward_q(&def, &slots, &r.params, qmin, qmax, &x, 1)
+        let after = forward_q(scheme, &def, &slots, &r.params, qmin, qmax, &x, 1)
             .unwrap()
             .mse(&y)
             .unwrap();
@@ -1000,6 +1025,7 @@ mod tests {
             workers: 2,
             verbose: false,
             tag: "det".into(),
+            scheme: recon::scheme_for("flexround").unwrap(),
         };
         let run = || {
             let mut rng = Pcg32::seeded(9);
@@ -1009,6 +1035,46 @@ mod tests {
         assert_eq!(a.final_loss, b.final_loss);
         for (pa, pb) in a.params.iter().zip(&b.params) {
             assert_eq!(pa.as_f32().unwrap(), pb.as_f32().unwrap());
+        }
+    }
+
+    #[test]
+    fn block_adaround_reconstruction_runs_and_stays_on_grid() {
+        // AdaRound through the block path: V learns under the annealed
+        // regularizer and the hard export stays within the grid.
+        let bt = BlockTensors::random(8, 2, 16, 4, 41);
+        let def = bt.def();
+        let (entries, params, slots) = bt.adaround_pack(3);
+        let x = random_x(8 * 4, 8, 43);
+        let y = forward_fp(&def, &x, 1).unwrap();
+        let (qmin, qmax) = crate::tensor::qrange(3, true);
+        let scheme = recon::scheme_for("adaround").unwrap();
+        let cfg = ReconSettings {
+            iters: 40,
+            lr: 1e-2,
+            batch: 16,
+            qmin,
+            qmax,
+            workers: 1,
+            verbose: false,
+            tag: "ada-block".into(),
+            scheme,
+        };
+        let mut rng = Pcg32::seeded(5);
+        let r = reconstruct_block(&def, &slots, &entries, &params, &x, &y, &cfg, &mut rng)
+            .unwrap();
+        assert!(r.first_loss.is_finite() && r.final_loss.is_finite());
+        // V moved (it is the only learnable slot)
+        let v0 = params[slots[0].v.unwrap()].as_f32().unwrap();
+        let v1 = r.params[slots[0].v.unwrap()].as_f32().unwrap();
+        assert!(v0.iter().zip(v1).any(|(a, b)| a != b), "V never updated");
+        for s in &slots {
+            let codes = scheme
+                .codes(def.w[s.layer], &s.resolve(&r.params), qmin, qmax)
+                .unwrap();
+            for c in codes.to_f32_vec() {
+                assert!((qmin..=qmax).contains(&c), "code {c} off-grid");
+            }
         }
     }
 }

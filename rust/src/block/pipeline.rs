@@ -309,8 +309,9 @@ fn reconstruct_streamed(
         workers: pool::default_workers(),
         verbose,
         tag: format!("{}/{}", sess.model.name, cx.unit.name),
+        scheme: recon::scheme_for(&st.method)?,
     };
-    recon::run_adam(&st.entries, &st.params, &cfg, &mut rng, |rng, params| {
+    recon::run_adam(&st.entries, &st.params, &cfg, &mut rng, |rng, params, t| {
         let ci = rng.below(xs.len() as u32) as usize;
         let xc = xs.get(ci)?;
         let yc = ys.get(ci)?;
@@ -334,13 +335,14 @@ fn reconstruct_streamed(
                 (xc.gather_rows(&ridx)?, yc.gather_rows(&ridx)?)
             }
         };
+        let beta = recon::rounding::beta_schedule(t, cfg.iters);
         match &defs {
-            Defs::Stack(layers) => {
-                recon::loss_and_grads(layers, &slots, params, &xb, &yb, qmin, qmax, cfg.workers)
-            }
-            Defs::Block(def) => {
-                super::loss_and_grads(def, &slots, params, &xb, &yb, qmin, qmax, cfg.workers)
-            }
+            Defs::Stack(layers) => recon::loss_and_grads(
+                cfg.scheme, layers, &slots, params, &xb, &yb, qmin, qmax, beta, cfg.workers,
+            ),
+            Defs::Block(def) => super::loss_and_grads(
+                cfg.scheme, def, &slots, params, &xb, &yb, qmin, qmax, beta, cfg.workers,
+            ),
         }
     })
 }
@@ -453,7 +455,7 @@ pub fn synthetic_block_model(spec: &SyntheticBlockSpec) -> Result<SyntheticBlock
         weights.insert(format!("p/{uname}/ln1.b"), bt.ln1_b.clone());
         weights.insert(format!("p/{uname}/ln2.g"), bt.ln2_g.clone());
         weights.insert(format!("p/{uname}/ln2.b"), bt.ln2_b.clone());
-        // init packs for both native methods
+        // init packs for every native method
         for (e, p) in entries.iter().zip(&params) {
             inits.insert(
                 format!("init/{uname}/flexround/b{}/{}", spec.bits, e.name),
@@ -466,6 +468,13 @@ pub fn synthetic_block_model(spec: &SyntheticBlockSpec) -> Result<SyntheticBlock
                     p.clone(),
                 );
             }
+        }
+        let (ada_entries, ada_params, _) = bt.adaround_pack(spec.bits);
+        for (e, p) in ada_entries.iter().zip(&ada_params) {
+            inits.insert(
+                format!("init/{uname}/adaround/b{}/{}", spec.bits, e.name),
+                p.clone(),
+            );
         }
         units.push(block_unit_info(&uname, spec));
         towers.push(bt);
@@ -508,6 +517,7 @@ pub fn synthetic_block_model(spec: &SyntheticBlockSpec) -> Result<SyntheticBlock
     let calib_batch = spec.chunk_seqs * spec.seq;
     let mut lr_default = BTreeMap::new();
     lr_default.insert("flexround".to_string(), 3e-3);
+    lr_default.insert("adaround".to_string(), 1e-2);
     let model = ModelInfo {
         name: "block_lm".to_string(),
         kind: "block_lm".to_string(),
@@ -517,7 +527,7 @@ pub fn synthetic_block_model(spec: &SyntheticBlockSpec) -> Result<SyntheticBlock
         per_channel: true,
         bits_w: vec![spec.bits],
         abits: vec![8],
-        methods_w: vec!["rtn".to_string(), "flexround".to_string()],
+        methods_w: vec!["rtn".to_string(), "flexround".to_string(), "adaround".to_string()],
         methods_wa: vec![],
         calib_n: n_calib,
         calib_batch,
@@ -555,6 +565,7 @@ fn block_unit_info(name: &str, spec: &SyntheticBlockSpec) -> UnitInfo {
     };
     let mut flex = Vec::new();
     let mut rtn = Vec::new();
+    let mut ada = Vec::new();
     let mut layers = Vec::new();
     for (li, lname) in CANON_LAYERS.iter().enumerate() {
         let (rows, cols) = dims[li];
@@ -569,6 +580,11 @@ fn block_unit_info(name: &str, spec: &SyntheticBlockSpec) -> UnitInfo {
             entry(format!("{lname}.s1"), vec![rows, 1], false),
             entry(format!("{lname}.zp"), vec![rows, 1], false),
         ]);
+        ada.extend([
+            entry(format!("{lname}.s1"), vec![rows, 1], false),
+            entry(format!("{lname}.v"), vec![rows, cols], true),
+            entry(format!("{lname}.zp"), vec![rows, 1], false),
+        ]);
         layers.push(LayerInfo {
             name: lname.to_string(),
             kind: "linear".to_string(),
@@ -581,6 +597,7 @@ fn block_unit_info(name: &str, spec: &SyntheticBlockSpec) -> UnitInfo {
     let mut packs = BTreeMap::new();
     packs.insert("flexround.w".to_string(), flex);
     packs.insert("rtn.w".to_string(), rtn);
+    packs.insert("adaround.w".to_string(), ada);
     UnitInfo {
         name: name.to_string(),
         kind: "transformer_block".to_string(),

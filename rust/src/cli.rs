@@ -82,6 +82,9 @@ USAGE:
 COMMANDS:
   quantize   Run PTQ reconstruction on one model
              --model <name> --method <m> --bits <b> [--mode w|wa]
+             [--rounding flexround|adaround]  rounding scheme (alias of
+                                  --method; schemes live behind one trait —
+                                  DESIGN.md §Rounding-Schemes)
              [--abits <b>] [--iters <n>] [--lr <f>] [--drop-p <f>]
              [--setting brecq|qdrop] [--calib-n <n>] [--seed <n>] [--eval]
              [--parallel-units]   reconstruct units against FP inputs,
@@ -96,6 +99,11 @@ COMMANDS:
              [--heads <h>] [--mlp <f>] [--seq <s>] [--calib-seqs <n>]
              [--eval-seqs <n>] [--chunk-seqs <n>] [--vocab <v>]
              --method <m> --bits <b> [--iters <n>] [--lr <f>] [--calib-n <n>]
+             [--rounding flexround|adaround]  rounding scheme (alias of
+                                       --method)
+             [--act-bits <b>]  serve with W{bits}A{b}: static per-layer
+                               activation grids calibrated from the recon
+                               batches, integer-domain fused GEMM
              [--recon-input fp|quant]  propagate calibration activations at
                                        full precision or through the
                                        quantized chain (the paper's LLM
@@ -108,6 +116,11 @@ COMMANDS:
   pack       Quantize, then export a bit-packed low-bit artifact (codes +
              per-row grids + biases; no FP weights inside)
              --model <name> --method <m> --bits <b> [--out <file.fxt>]
+             [--rounding flexround|adaround]  rounding scheme (alias of
+                                  --method)
+             [--act-bits <b>]  also calibrate static activation grids →
+                               a W{bits}A{b} artifact (stack layers carry
+                               an `actq` record; served integer-domain)
              [other quantize flags]
   infer      Run the fused dequant-GEMM forward over a packed artifact
              --packed <file.fxt> | --synthetic [--units <n>] [--width <w>]

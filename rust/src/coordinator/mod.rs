@@ -102,17 +102,13 @@ impl UnitState {
     }
 }
 
-/// AdaRound β annealing (matches `python/compile/graphs.py::_beta`).
+/// AdaRound β annealing (matches `python/compile/graphs.py::_beta`).  The
+/// canonical copy lives with the rounding schemes —
+/// [`crate::recon::rounding::beta_schedule`] — because the native loop feeds
+/// it into [`crate::recon::Rounding::backward`] per step; this alias keeps
+/// the coordinator-facing name.
 pub fn beta_schedule(t: usize, iters: usize) -> f64 {
-    let (beta_hi, beta_lo, warmup) = (20.0f64, 2.0f64, 0.2f64);
-    let tf = t as f64;
-    let nf = iters as f64;
-    if tf < warmup * nf {
-        beta_hi
-    } else {
-        let frac = ((tf - warmup * nf) / ((1.0 - warmup) * nf).max(1.0)).min(1.0);
-        beta_lo + 0.5 * (beta_hi - beta_lo) * (1.0 + (std::f64::consts::PI * frac).cos())
-    }
+    crate::recon::rounding::beta_schedule(t, iters)
 }
 
 #[cfg(test)]

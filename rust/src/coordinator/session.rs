@@ -175,14 +175,75 @@ impl<'rt> Session<'rt> {
                 out.push(Tensor::from_f32(vec![v], &[1, 1])?);
             } else {
                 let key = format!("init/{}/{}/b{}/{}", unit.name, method, bits_w, e.name);
-                let t = self
-                    .inits
-                    .get(&key)
-                    .ok_or_else(|| anyhow!("missing init tensor {key:?}"))?;
-                out.push(t.clone());
+                match self.inits.get(&key) {
+                    Some(t) => out.push(t.clone()),
+                    // exports written before the scheme zoo have no adaround
+                    // init pack — derive one from the grids they do have
+                    None if method == "adaround" => {
+                        out.push(self.adaround_fallback_init(unit, e, bits_w)?)
+                    }
+                    None => bail!("missing init tensor {key:?}"),
+                }
             }
         }
         Ok((out, entries))
+    }
+
+    /// AdaRound init values when the export has no `init/…/adaround/…` keys:
+    /// `s1`/`zp` reuse the FlexRound (or RTN) grid for the same bit-width —
+    /// AdaRound freezes them anyway — and `V` is derived from the host-side
+    /// weights at the RTN-fraction init
+    /// ([`crate::recon::rounding::adaround::init_v`]).
+    fn adaround_fallback_init(
+        &self,
+        unit: &UnitInfo,
+        e: &PackEntry,
+        bits_w: u32,
+    ) -> Result<Tensor> {
+        let (layer, key) = e
+            .name
+            .split_once('.')
+            .ok_or_else(|| anyhow!("bad pack entry name {:?}", e.name))?;
+        let lookup = |k: &str| -> Option<&Tensor> {
+            ["flexround", "rtn"].iter().find_map(|m| {
+                self.inits
+                    .get(&format!("init/{}/{m}/b{bits_w}/{layer}.{k}", unit.name))
+            })
+        };
+        match key {
+            "s1" | "zp" => lookup(key).cloned().ok_or_else(|| {
+                anyhow!(
+                    "missing init tensor init/{}/adaround/b{bits_w}/{} and no \
+                     flexround/rtn grid to fall back on",
+                    unit.name,
+                    e.name
+                )
+            }),
+            "v" => {
+                let w = self
+                    .weights
+                    .get(&format!("w/{}/{layer}", unit.name))
+                    .ok_or_else(|| {
+                        anyhow!(
+                            "adaround init for {}/{layer}.v needs the host weights \
+                             w/{}/{layer}",
+                            unit.name,
+                            unit.name
+                        )
+                    })?;
+                let s1 = lookup("s1").ok_or_else(|| {
+                    anyhow!(
+                        "adaround init for {}/{layer}.v needs a flexround/rtn s1 grid",
+                        unit.name
+                    )
+                })?;
+                crate::recon::rounding::adaround::init_v(w, s1)
+            }
+            other => bail!(
+                "no adaround fallback init for pack entry {:?} (key {other:?})",
+                e.name
+            ),
+        }
     }
 
     // ------------------------------------------------------------------
@@ -411,8 +472,8 @@ impl<'rt> Session<'rt> {
             let (qmin, _) = qrange(st.bits_w, self.model.symmetric);
             let slots = crate::recon::map_pack(unit, &st.method, &st.entries).map_err(|e| {
                 anyhow!(
-                    "packed export supports the native method family \
-                     (rtn, flexround*); unit {:?}: {e:#}",
+                    "packed export supports the native rounding schemes \
+                     (rtn, flexround*, adaround); unit {:?}: {e:#}",
                     unit.name
                 )
             })?;
@@ -446,6 +507,7 @@ impl<'rt> Session<'rt> {
                     mat,
                     bias,
                     relu_after: unit.kind == "mlp_relu" && li + 1 < n,
+                    act: None,
                 });
             }
             let pu = if unit.kind == "transformer_block" {
@@ -473,6 +535,66 @@ impl<'rt> Session<'rt> {
     /// [`Session::packed_model`] wrapped in a ready-to-run [`Engine`].
     pub fn packed_engine(&self, result: &QuantResult) -> Result<Engine> {
         Ok(Engine::new(self.packed_model(result)?, crate::util::pool::default_workers()))
+    }
+
+    /// [`Session::packed_model`] plus a **static activation grid** per
+    /// stack-unit layer — the W4A8 artifact (DESIGN.md §Rounding-Schemes).
+    /// Grids are calibrated by replaying the reconstruction batches through
+    /// the weight-quantized model with activations still f32 (the grid must
+    /// cover exactly what serving feeds each GEMM), recording every layer's
+    /// input min/max, and fitting an `abits` asymmetric
+    /// [`crate::recon::rounding::ActQuant`] to it.  Transformer-block
+    /// layers stay weight-only: layernorm / attention / GELU keep the
+    /// inter-projection activations f32 anyway, so a static grid there buys
+    /// no integer-domain GEMM without a much larger rework.
+    pub fn packed_model_with_acts(&self, result: &QuantResult, abits: u32) -> Result<PackedModel> {
+        if !(1..=16).contains(&abits) {
+            bail!("activation bit-width {abits} out of range (1..=16)");
+        }
+        let pm = self.packed_model(result)?;
+        let _span = crate::obs::span("pack/act_calibrate");
+        let chunks = self.first_unit_inputs(self.dataset("calib_x")?)?;
+        let mut ranges: Vec<Vec<(f32, f32)>> = pm
+            .units
+            .iter()
+            .map(|u| vec![(f32::INFINITY, f32::NEG_INFINITY); u.layers.len()])
+            .collect();
+        let engine = Engine::new(pm, crate::util::pool::default_workers());
+        for chunk in &chunks {
+            let mut h = chunk.clone();
+            for (ui, unit) in engine.model().units.iter().enumerate() {
+                if unit.kind == "transformer_block" {
+                    h = engine.unit_forward(unit, &h)?;
+                    continue;
+                }
+                // stack unit: record each layer's observed input range, then
+                // advance through that layer (weight-quantized, f32 acts)
+                for (li, layer) in unit.layers.iter().enumerate() {
+                    let (lo, hi) = &mut ranges[ui][li];
+                    for &v in h.as_f32()? {
+                        *lo = lo.min(v);
+                        *hi = hi.max(v);
+                    }
+                    let mut y =
+                        crate::infer::kernels::gemm_fused(&h, &layer.mat, engine.workers)?;
+                    y.bias_relu_inplace(layer.bias.as_deref(), layer.relu_after)?;
+                    h = y;
+                }
+            }
+        }
+        let mut pm = engine.into_model();
+        for (unit, ur) in pm.units.iter_mut().zip(&ranges) {
+            if unit.kind == "transformer_block" {
+                continue;
+            }
+            for (layer, &(lo, hi)) in unit.layers.iter_mut().zip(ur) {
+                if lo <= hi {
+                    layer.act =
+                        Some(crate::recon::rounding::ActQuant::calibrate(lo, hi, abits));
+                }
+            }
+        }
+        Ok(pm)
     }
 
     /// [`Session::packed_model`] plus a trailing `head` stack unit packed
@@ -520,7 +642,7 @@ impl<'rt> Session<'rt> {
         let mat = PackedMatrix::pack(&codes, rows, cols, bits, qmin as i32, s1, zp)?;
         Ok(PackedUnit::stack(
             "head",
-            vec![PackedLayer { name: "lm".into(), mat, bias: None, relu_after: false }],
+            vec![PackedLayer { name: "lm".into(), mat, bias: None, relu_after: false, act: None }],
         ))
     }
 

@@ -50,6 +50,23 @@ impl Engine {
         &self.model
     }
 
+    /// Take the packed model back out (calibration builds an engine to walk
+    /// units, then mutates the model it walked).
+    pub fn into_model(self) -> PackedModel {
+        self.model
+    }
+
+    /// Forward `h` through one unit on the fused path — the body of one
+    /// [`Engine::forward`] step, exposed so calibration walks can observe
+    /// the activations *between* units.
+    pub(crate) fn unit_forward(&self, unit: &PackedUnit, h: &Tensor) -> Result<Tensor> {
+        if unit.kind == "transformer_block" {
+            self.block_forward(unit, h, true, unit.seq)
+        } else {
+            self.stack_forward(unit, h, true)
+        }
+    }
+
     /// Width of one *request row*: the first layer's columns, times the
     /// model's rows-per-sequence for transformer-block models (a request is
     /// one flattened sequence).
@@ -135,16 +152,27 @@ impl Engine {
         Ok(h)
     }
 
+    /// One layer's GEMM on the right kernel: layers carrying a calibrated
+    /// activation grid (W4A8 artifacts) run the integer-domain
+    /// [`kernels::gemm_fused_act_int`]; everything else takes the f32 fused
+    /// path (or the dequantize-then-matmul baseline when `fused` is off —
+    /// which also serves as the act-layers' f32 reference path, activations
+    /// fake-quantized first so both kernels see the same grid).
+    fn layer_gemm(&self, x: &Tensor, l: &PackedLayer, fused: bool) -> Result<Tensor> {
+        match (&l.act, fused) {
+            (Some(aq), true) => kernels::gemm_fused_act_int(x, aq, &l.mat, self.workers),
+            (Some(aq), false) => kernels::dequant_matmul(&aq.fake_quant(x)?, &l.mat),
+            (None, true) => kernels::gemm_fused(x, &l.mat, self.workers),
+            (None, false) => kernels::dequant_matmul(x, &l.mat),
+        }
+    }
+
     /// An ordered contraction stack over activation rows.
     pub(crate) fn stack_forward(&self, unit: &PackedUnit, h: &Tensor, fused: bool) -> Result<Tensor> {
         let mut out: Option<Tensor> = None;
         for layer in &unit.layers {
             let x = out.as_ref().unwrap_or(h);
-            let mut y = if fused {
-                kernels::gemm_fused(x, &layer.mat, self.workers)?
-            } else {
-                kernels::dequant_matmul(x, &layer.mat)?
-            };
+            let mut y = self.layer_gemm(x, layer, fused)?;
             y.bias_relu_inplace(layer.bias.as_deref(), layer.relu_after)?;
             out = Some(y);
         }
@@ -153,11 +181,7 @@ impl Engine {
 
     /// Fused (or baseline) GEMM plus bias for one packed projection.
     pub(crate) fn gemm_bias(&self, x: &Tensor, l: &PackedLayer, fused: bool) -> Result<Tensor> {
-        let mut y = if fused {
-            kernels::gemm_fused(x, &l.mat, self.workers)?
-        } else {
-            kernels::dequant_matmul(x, &l.mat)?
-        };
+        let mut y = self.layer_gemm(x, l, fused)?;
         y.bias_relu_inplace(l.bias.as_deref(), false)?;
         Ok(y)
     }
@@ -410,7 +434,7 @@ pub fn synthetic_model(units: usize, width: usize, bits: u32, seed: u64) -> Resu
         let mat = PackedMatrix::pack(&codes, width, width, bits, qmin, scale, zp)?;
         out.push(PackedUnit::stack(
             &format!("u{ui}"),
-            vec![PackedLayer { name: "fc".into(), mat, bias: None, relu_after: false }],
+            vec![PackedLayer { name: "fc".into(), mat, bias: None, relu_after: false, act: None }],
         ));
     }
     Ok(PackedModel { units: out })
@@ -454,6 +478,7 @@ mod tests {
                     mat,
                     bias: Some(vec![-5.0]),
                     relu_after: true,
+                    act: None,
                 }],
             )],
         };
@@ -486,6 +511,7 @@ mod tests {
             mat,
             bias: None,
             relu_after: false,
+            act: None,
         };
         let unit = PackedUnit {
             name: "blk".into(),

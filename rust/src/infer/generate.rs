@@ -298,6 +298,7 @@ pub fn synthetic_lm(
         mat,
         bias: None,
         relu_after: false,
+        act: None,
     };
     // residual-friendly scales: uniform grid codes have rms ≈ qmax/√3, so
     // s0·qmax/√3·√cols ≈ 0.3 keeps each branch small next to the residual

@@ -59,7 +59,7 @@
 //! serial, parallel, rowwise, panel, and gemv paths are all bit-identical
 //! *per arm*; the integer path is bit-identical across arms too.
 
-use super::packed::PackedMatrix;
+use super::packed::{ActQuant, PackedMatrix};
 use crate::linalg::{self, simd, Dispatch, Isa};
 use crate::tensor::Tensor;
 use crate::util::pool;
@@ -398,6 +398,50 @@ pub fn gemm_fused_int_with(x: &Tensor, m: &PackedMatrix, d: &Dispatch) -> Result
     Tensor::from_f32(gemm_int(&acts, n, k, m, d), &[n, m.rows()])
 }
 
+/// W4A8 serving kernel: quantize the f32 activation batch onto the layer's
+/// calibrated static grid and contract **entirely in the integer domain** —
+/// see [`gemm_fused_act_int_with`].
+pub fn gemm_fused_act_int(
+    x: &Tensor,
+    aq: &ActQuant,
+    m: &PackedMatrix,
+    workers: usize,
+) -> Result<Tensor> {
+    gemm_fused_act_int_with(x, aq, m, &Dispatch::new(workers))
+}
+
+/// Statically-quantized-activation fused GEMM.  With `x̂ = step·(c − zp_a)`
+/// and `Ŵ = s·(n − z)`, the contraction factors as
+///
+/// ```text
+///   y[i][j] = step · s_j · ( Σ_t c'[i][t]·n[j][t]  −  z_j · Σ_t c'[i][t] )
+///             with  c' = c − zp_a  ∈ ℤ
+/// ```
+///
+/// so the shifted activation codes `c'` (exact integers: `zp_a` is rounded
+/// at calibration) feed straight into [`gemm_fused_int_with`] — i32 dots,
+/// `int_safe_k` overflow guard, per-row weight epilogue — and the single
+/// per-tensor `step` lands once per output element.  The f32 reference is
+/// [`ActQuant::fake_quant`] followed by any f32 kernel; parity is pinned
+/// ≤ 1e-4 in `rust/tests/rounding.rs`.
+pub fn gemm_fused_act_int_with(
+    x: &Tensor,
+    aq: &ActQuant,
+    m: &PackedMatrix,
+    d: &Dispatch,
+) -> Result<Tensor> {
+    check_shapes(x, m)?;
+    let shifted: Vec<f32> =
+        aq.codes(x.as_f32()?).iter().map(|&c| c as f32 - aq.zp).collect();
+    let xq = Tensor::from_f32(shifted, x.shape())?;
+    if crate::obs::enabled() {
+        crate::obs_counter!("flexround_fused_gemm_act_int_total").inc();
+    }
+    let y = gemm_fused_int_with(&xq, m, d)?;
+    let scaled: Vec<f32> = y.as_f32()?.iter().map(|v| v * aq.step).collect();
+    Tensor::from_f32(scaled, y.shape())
+}
+
 /// Fused dequant-GEMM `Y = X · Ŵᵀ` without materializing `Ŵ` — see
 /// [`gemm_fused_with`].
 pub fn gemm_fused(x: &Tensor, m: &PackedMatrix, workers: usize) -> Result<Tensor> {
@@ -554,6 +598,32 @@ mod tests {
         let x = Tensor::from_f32(vec![0.5; 12], &[2, 6]).unwrap();
         assert!(!int_gemm_eligible(&x, &m));
         assert!(gemm_fused_int(&x, &m, 1).is_err());
+    }
+
+    #[test]
+    fn act_int_kernel_matches_fake_quant_reference() {
+        // the W4A8 contract: integer-domain serving with statically
+        // quantized activations ≡ fake-quant f32 reference within 1e-4
+        let mut rng = Pcg32::seeded(31);
+        for bits in [2u32, 4, 8] {
+            let m = random_packed(&mut rng, 12, 23, bits);
+            let x = Tensor::from_f32(
+                (0..3 * 23).map(|_| 2.0 * rng.next_normal()).collect(),
+                &[3, 23],
+            )
+            .unwrap();
+            let aq = ActQuant::calibrate(-4.5, 4.5, 8);
+            for workers in [1usize, 4] {
+                let got = gemm_fused_act_int(&x, &aq, &m, workers).unwrap();
+                let reference = gemm_ref(&aq.fake_quant(&x).unwrap(), &m).unwrap();
+                let d = got.max_abs_diff(&reference).unwrap();
+                let tol = 1e-4 * (1.0 + reference.abs_max());
+                assert!(
+                    d <= tol,
+                    "act-int kernel drift {d} > {tol} ({bits}-bit weights, workers {workers})"
+                );
+            }
+        }
     }
 
     #[test]

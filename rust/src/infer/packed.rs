@@ -30,13 +30,16 @@ use anyhow::{anyhow, bail};
 use std::collections::BTreeMap;
 use std::path::Path;
 
+pub use crate::recon::rounding::ActQuant;
+
 /// Bit-widths the packer supports (the paper's low-bit operating points).
 pub const SUPPORTED_BITS: [u32; 4] = [2, 3, 4, 8];
 
 /// Artifact format version (bumped on any key-grammar change).  Version 2
-/// added the `qu/…` unit-meta group for `transformer_block` units; version-1
-/// artifacts (stack units only) still load.
-pub const FORMAT_VERSION: i32 = 2;
+/// added the `qu/…` unit-meta group for `transformer_block` units; version 3
+/// added the optional per-layer `…/actq` activation grid (W4A8 artifacts).
+/// Version-1 and -2 artifacts still load.
+pub const FORMAT_VERSION: i32 = 3;
 
 /// Codes stored per `u32` word at a bit-width.
 pub fn codes_per_word(bits: u32) -> usize {
@@ -256,13 +259,18 @@ impl PackedMatrix {
 // ---------------------------------------------------------------------------
 
 /// One packed layer: matrix + optional bias + whether ReLU follows it
-/// (`mlp_relu` units apply ReLU between layers).
+/// (`mlp_relu` units apply ReLU between layers).  `act` carries the
+/// calibrated static activation grid when the artifact was packed with
+/// `--act-bits` (W4A8): the engine then quantizes this layer's input onto
+/// it and runs the GEMM in the integer domain
+/// ([`crate::infer::kernels::gemm_fused_act_int`]).
 #[derive(Clone, Debug, PartialEq)]
 pub struct PackedLayer {
     pub name: String,
     pub mat: PackedMatrix,
     pub bias: Option<Vec<f32>>,
     pub relu_after: bool,
+    pub act: Option<ActQuant>,
 }
 
 /// One packed unit: an ordered contraction stack (`kind == "stack"`), or a
@@ -354,6 +362,7 @@ impl PackedModel {
     ///   q/{uuuu}/{unit}/{ll}/{layer}/scale    f32 [rows]
     ///   q/{uuuu}/{unit}/{ll}/{layer}/zp       f32 [rows]
     ///   q/{uuuu}/{unit}/{ll}/{layer}/bias     f32 [rows]  (only when has_bias)
+    ///   q/{uuuu}/{unit}/{ll}/{layer}/actq     f32 [3] = abits step zp  (W4A8 only)
     ///   qu/{uuuu}/{unit}/meta                 i32 [3] = kind(1=block) heads seq
     ///   qu/{uuuu}/{unit}/ln1_g|ln1_b|ln2_g|ln2_b  f32 [d]   (block units)
     /// ```
@@ -442,6 +451,12 @@ impl PackedModel {
                 if let Some(b) = &layer.bias {
                     out.insert(format!("{pfx}/bias"), Tensor::from_f32(b.clone(), &[b.len()])?);
                 }
+                if let Some(a) = &layer.act {
+                    out.insert(
+                        format!("{pfx}/actq"),
+                        Tensor::from_f32(vec![a.abits as f32, a.step, a.zp], &[3])?,
+                    );
+                }
             }
         }
         Ok(out)
@@ -453,8 +468,8 @@ impl PackedModel {
             .get("packed/version")
             .ok_or_else(|| anyhow!("not a packed-model artifact (no packed/version entry)"))?
             .as_i32()?[0];
-        // v1 (stack units only, no qu/ group) still loads
-        if version != 1 && version != FORMAT_VERSION {
+        // v1 (stack units only) and v2 (no actq grids) still load
+        if !(1..=FORMAT_VERSION).contains(&version) {
             bail!("packed artifact version {version}, this build reads 1..={FORMAT_VERSION}");
         }
         // Group field tensors by their layer prefix; BTreeMap order (zero-
@@ -533,11 +548,26 @@ impl PackedModel {
                     None
                 }
             };
+            let act = match fields.get("actq") {
+                Some(t) => {
+                    let v = t.as_f32()?;
+                    if v.len() != 3 {
+                        bail!("q/{prefix}/actq has {} values, expected 3", v.len());
+                    }
+                    let abits = v[0].round() as u32;
+                    if !(1..=16).contains(&abits) {
+                        bail!("q/{prefix}/actq: activation bit-width {abits} out of range");
+                    }
+                    Some(ActQuant { abits, step: v[1], zp: v[2] })
+                }
+                None => None,
+            };
             let layer = PackedLayer {
                 name: lname.to_string(),
                 mat,
                 bias,
                 relu_after: meta[4] != 0,
+                act,
             };
             // group by the unit *index* (not the name): units sharing a name
             // must stay distinct so save→load is structurally exact
@@ -693,6 +723,7 @@ mod tests {
                         mat: m.clone(),
                         bias: None,
                         relu_after: false,
+                        act: None,
                     }],
                 );
                 let model = PackedModel { units: vec![unit] };
@@ -788,12 +819,14 @@ mod tests {
                             mat: mk(1, 6, 5, 4, -8),
                             bias: Some(vec![0.5; 6]),
                             relu_after: true,
+                            act: Some(ActQuant { abits: 8, step: 0.0125, zp: 96.0 }),
                         },
                         PackedLayer {
                             name: "down".into(),
                             mat: mk(2, 4, 6, 3, -4),
                             bias: None,
                             relu_after: false,
+                            act: None,
                         },
                     ],
                 ),
@@ -804,6 +837,7 @@ mod tests {
                         mat: mk(3, 3, 4, 8, 0),
                         bias: None,
                         relu_after: false,
+                        act: None,
                     }],
                 ),
             ],
@@ -844,6 +878,7 @@ mod tests {
             mat: mk(seed, rows, cols),
             bias: Some(vec![0.01; rows]),
             relu_after: false,
+            act: None,
         };
         let block = PackedUnit {
             name: "blk0".into(),
@@ -892,6 +927,7 @@ mod tests {
                     .unwrap(),
                     bias: None,
                     relu_after: false,
+                    act: None,
                 }],
             )
         };

@@ -113,12 +113,19 @@ fn make_backend(args: &Args, art: &Path) -> Result<Box<dyn Backend>> {
     }
 }
 
+/// `--method` / `--rounding` are aliases: both select the rounding scheme
+/// (`rtn | flexround | flexround_* | adaround`); `--method` wins when both
+/// are given (it is the historical spelling).
+fn method_from_args(args: &Args) -> &str {
+    args.flag("method").or_else(|| args.flag("rounding")).unwrap_or("flexround")
+}
+
 fn plan_from_args(args: &Args, man: &Manifest) -> Result<Plan> {
     let model = args
         .flag("model")
         .ok_or_else(|| anyhow!("--model is required"))?;
     let mi = man.model(model)?;
-    let mut plan = Plan::new(model, args.flag("method").unwrap_or("flexround"));
+    let mut plan = Plan::new(model, method_from_args(args));
     plan.mode = args
         .flag("mode")
         .map(str::to_string)
@@ -240,7 +247,7 @@ fn cmd_pipeline(args: &Args, art: &PathBuf, rep: &PathBuf, quiet: bool) -> Resul
     use flexround::block::{self, PipelineOpts, ReconInput, SyntheticBlockSpec};
 
     let mut opts =
-        PipelineOpts::new(args.flag("method").unwrap_or("flexround"), args.usize_flag("bits", 4) as u32);
+        PipelineOpts::new(method_from_args(args), args.usize_flag("bits", 4) as u32);
     // the synthetic manifest's iters_default is 0 (its tests want RTN-at-init
     // baselines), so an unflagged `pipeline --synthetic` would silently skip
     // reconstruction — give it a real default instead
@@ -333,9 +340,25 @@ fn run_pipeline_cmd(
 
     // one packed engine serves every consumer below (calib MSE, quantized
     // perplexity, --pack-out) — Session::forward_q would rebuild the
-    // export/pack per call otherwise
-    let engine = match sess.packed_engine(&outcome.result) {
-        Ok(e) => Some(e),
+    // export/pack per call otherwise.  `--act-bits <b>` makes it a W·A{b}
+    // engine: static activation grids calibrated from the recon batches.
+    let act_bits = args.usize_flag("act-bits", 0) as u32;
+    let engine = match if act_bits > 0 {
+        sess.packed_model_with_acts(&outcome.result, act_bits).map(|pm| {
+            flexround::infer::Engine::new(pm, flexround::util::pool::default_workers())
+        })
+    } else {
+        sess.packed_engine(&outcome.result)
+    } {
+        Ok(e) => {
+            if act_bits > 0 && !quiet {
+                println!(
+                    "  serving W{}A{act_bits}: stack layers run the integer-domain fused GEMM",
+                    opts.bits_w
+                );
+            }
+            Some(e)
+        }
         Err(err) => {
             if !quiet {
                 eprintln!("  (packed fast path unavailable, using the f32 chain: {err:#})");
@@ -577,9 +600,18 @@ fn cmd_pack(args: &Args, art: &PathBuf, quiet: bool) -> Result<()> {
         );
     }
     let result = sess.quantize(&plan)?;
-    let pm = sess.packed_model(&result)?;
+    // `--act-bits <b>` upgrades the weight-only pack to W{bits}A{b}: static
+    // activation grids calibrated from the reconstruction batches, served by
+    // the integer-domain fused kernels (DESIGN.md §Rounding-Schemes)
+    let act_bits = args.usize_flag("act-bits", 0) as u32;
+    let pm = if act_bits > 0 {
+        sess.packed_model_with_acts(&result, act_bits)?
+    } else {
+        sess.packed_model(&result)?
+    };
     let out = args.flag("out").map(PathBuf::from).unwrap_or_else(|| {
-        PathBuf::from(format!("packed_{}_{}_w{}.fxt", plan.model, plan.method, plan.bits_w))
+        let a = if act_bits > 0 { format!("a{act_bits}") } else { String::new() };
+        PathBuf::from(format!("packed_{}_{}_w{}{a}.fxt", plan.model, plan.method, plan.bits_w))
     });
     pm.save(&out)?;
     let (pb, fb) = (pm.packed_bytes(), pm.fp32_bytes());
@@ -590,6 +622,13 @@ fn cmd_pack(args: &Args, art: &PathBuf, quiet: bool) -> Result<()> {
         out.display(),
         fb as f64 / pb.max(1) as f64
     );
+    if act_bits > 0 {
+        println!(
+            "  W{}A{act_bits}: stack layers carry static activation grids → \
+             integer-domain fused GEMM at serve time",
+            plan.bits_w
+        );
+    }
     Ok(())
 }
 

@@ -1,30 +1,22 @@
-//! Native FlexRound reconstruction — learnable rounding with **no PJRT/XLA
-//! dependency** (DESIGN.md §Native-Backend).
+//! Native reconstruction — learnable rounding with **no PJRT/XLA
+//! dependency** (DESIGN.md §Native-Backend, §Rounding-Schemes).
 //!
 //! This module is the pure-Rust twin of the AOT reconstruction executables:
-//! it learns the FlexRound parameters `(s1, S2, s3, s4)` of Eq. 2,
-//!
-//! ```text
-//!   Ŵ = s1 · ( clip( ⌊ W / (s1 ⊙ S2 ⊙ s3 ⊙ s4) ⌉ + z, qmin, qmax ) − z )
-//! ```
-//!
-//! by minimizing the per-unit output MSE `‖X·Ŵᵀ − X·Wᵀ‖²/N` over calibration
+//! it minimizes the per-unit output MSE `‖X·Ŵᵀ − X·Wᵀ‖²/N` over calibration
 //! minibatches with Adam ([`adam`]), exactly as AdaRound (Nagel et al.,
-//! 2020) and EPTQ frame per-block reconstruction.  The backward pass is the
-//! closed-form straight-through estimator of Proposition 3.1 — mirrored
-//! line-for-line from `python/compile/kernels/ref.py::flexround_bwd`,
-//! including the reciprocal-rule gradient `∂Ŵ/∂S2 ∝ −W/(S2²·…)` that lets
-//! FlexRound exploit weight magnitudes:
+//! 2020) and EPTQ frame per-block reconstruction.  *How* `Ŵ` rounds onto
+//! the integer grid — and how that rounding differentiates — is pluggable:
+//! every scheme lives behind the [`rounding::Rounding`] trait
+//! ([`rounding::FlexRound`] for the paper's Eq. 2 element-wise division and
+//! its `rtn`/ablation variants, [`rounding::AdaRound`] for the additive
+//! sigmoid-relaxed baseline), resolved once per run from the method string
+//! by [`rounding::scheme_for`] and threaded through [`ReconSettings`].
 //!
-//! ```text
-//!   r        = W / (s1 ⊙ S2 ⊙ s3 ⊙ s4)
-//!   inside   = 1[qmin ≤ ⌊r⌉ + z ≤ qmax]
-//!   ∂Ŵ/∂s1   = (n_c − z) − inside · r          (grid-size chain rule)
-//!   common   = s1 · inside · (−r)
-//!   ∂Ŵ/∂S2   = common / S2                      (reciprocal rule)
-//!   ∂Ŵ/∂s3   = Σ_cols common / s3
-//!   ∂Ŵ/∂s4   = Σ_rows common / s4
-//! ```
+//! The FlexRound kernels (forward, i32 code export, and the closed-form STE
+//! backward of Proposition 3.1 with the reciprocal-rule `S2` gradient) moved
+//! verbatim into [`rounding::flexround`]; [`fq_forward`], [`fq_codes`], and
+//! [`fq_backward`] re-export them under their historical names and the
+//! golden-fixture test pins bit-identity through the trait.
 //!
 //! Rounding uses round-half-to-even to match `jnp.round` (the PJRT path and
 //! the Python reference both round ties to even; `f32::round` in the rest of
@@ -33,16 +25,20 @@
 //!
 //! Supported natively: weight-only mode on units whose layers are plain
 //! contractions (`y = x · Ŵᵀ [+ b]`), optionally ReLU-separated
-//! (`mlp_relu`), for methods `rtn`, `flexround`, `flexround_fixed_s1`, and
-//! `flexround_no_s34`; `transformer_block` units build on these kernels in
-//! [`crate::block`] (fq forward/backward per projection, attention and
-//! layernorm cotangents around them).  Anything needing convolutions,
-//! activation quantization, or AdaRound's soft rounding still runs through
-//! the PJRT backend — see `runtime::Backend`.
+//! (`mlp_relu`), for methods `rtn`, `flexround`, `flexround_fixed_s1`,
+//! `flexround_no_s34`, and `adaround`; `transformer_block` units build on
+//! these kernels in [`crate::block`] (scheme forward/backward per
+//! projection, attention and layernorm cotangents around them).  Anything
+//! needing convolutions or learned (LSQ) activation quantization still runs
+//! through the PJRT backend — see `runtime::Backend`; *static* activation
+//! quantization is a pack-time concern ([`rounding::ActQuant`]).
 
 pub mod adam;
+pub mod rounding;
 
 pub use adam::Adam;
+pub use rounding::flexround::{fq_backward, fq_codes, fq_forward};
+pub use rounding::{scheme_for, FqGrads, Rounding, SlotParams};
 
 use crate::linalg;
 use crate::manifest::{PackEntry, UnitInfo};
@@ -50,7 +46,7 @@ use crate::tensor::Tensor;
 use crate::util::pool;
 use crate::util::rng::Pcg32;
 use crate::Result;
-use anyhow::{anyhow, bail};
+use anyhow::bail;
 
 /// Round half to even (banker's rounding), matching `jnp.round` and the XLA
 /// `round-nearest-even` op bit-for-bit.  Delegates to
@@ -67,9 +63,11 @@ pub fn round_ties_even(x: f32) -> f32 {
 // Parameter pack layout
 // ---------------------------------------------------------------------------
 
-/// Where one layer's FlexRound factors live inside a flat parameter pack.
-/// `None` slots mean "constant one" (e.g. `rtn` has no S2 at all, the
-/// `flexround_no_s34` ablation freezes s3/s4 to ones).
+/// Where one layer's rounding parameters live inside a flat parameter pack.
+/// `None` slots mean "constant one" for FlexRound's divisor factors (e.g.
+/// `rtn` has no S2 at all, the `flexround_no_s34` ablation freezes s3/s4 to
+/// ones) and "absent" for scheme-specific extras (`v` exists only for
+/// AdaRound).
 #[derive(Clone, Debug)]
 pub struct LayerSlots {
     /// index into `UnitInfo::layers`
@@ -79,254 +77,32 @@ pub struct LayerSlots {
     pub s2: Option<usize>,
     pub s3: Option<usize>,
     pub s4: Option<usize>,
+    /// AdaRound's continuous rounding variable (shape of `W`)
+    pub v: Option<usize>,
 }
 
-/// Map a pack-entry list onto per-layer slots for `method`.
+impl LayerSlots {
+    /// Borrow this layer's parameters out of the flat pack.
+    pub fn resolve<'a>(&self, params: &'a [Tensor]) -> SlotParams<'a> {
+        SlotParams {
+            s1: &params[self.s1],
+            zp: &params[self.zp],
+            s2: self.s2.map(|i| &params[i]),
+            s3: self.s3.map(|i| &params[i]),
+            s4: self.s4.map(|i| &params[i]),
+            v: self.v.map(|i| &params[i]),
+        }
+    }
+}
+
+/// Map a pack-entry list onto per-layer slots for `method`, dispatching to
+/// the scheme that owns the method string ([`rounding::scheme_for`]).
 ///
 /// Entry names follow the build-path convention `"{layer}.{key}"`; `act*`
 /// entries (LSQ activation steps) mean the pack was built for "wa" mode,
 /// which the native backend does not execute.
 pub fn map_pack(unit: &UnitInfo, method: &str, entries: &[PackEntry]) -> Result<Vec<LayerSlots>> {
-    match method {
-        "rtn" | "flexround" | "flexround_fixed_s1" | "flexround_no_s34" => {}
-        other => bail!(
-            "native backend does not implement method {other:?} \
-             (supported: rtn, flexround, flexround_fixed_s1, flexround_no_s34); \
-             use --backend pjrt"
-        ),
-    }
-    let drop_s34 = method == "flexround_no_s34";
-    let mut out = Vec::with_capacity(unit.layers.len());
-    for (li, layer) in unit.layers.iter().enumerate() {
-        let find = |key: &str| -> Option<usize> {
-            let want = format!("{}.{key}", layer.name);
-            entries.iter().position(|e| e.name == want)
-        };
-        let s1 = find("s1")
-            .ok_or_else(|| anyhow!("pack has no {}.s1 entry", layer.name))?;
-        let zp = find("zp")
-            .ok_or_else(|| anyhow!("pack has no {}.zp entry", layer.name))?;
-        out.push(LayerSlots {
-            layer: li,
-            s1,
-            zp,
-            s2: find("s2"),
-            s3: if drop_s34 { None } else { find("s3") },
-            s4: if drop_s34 { None } else { find("s4") },
-        });
-    }
-    for e in entries {
-        if e.name.starts_with("act") {
-            bail!(
-                "pack entry {:?}: activation quantization (\"wa\" mode) is not \
-                 supported by the native backend; use --backend pjrt",
-                e.name
-            );
-        }
-    }
-    Ok(out)
-}
-
-// ---------------------------------------------------------------------------
-// Fake-quant forward / codes / backward
-// ---------------------------------------------------------------------------
-
-fn row_scale<'a>(t: &'a Tensor, rows: usize, what: &str) -> Result<RowView<'a>> {
-    let v = t.as_f32()?;
-    if v.len() != 1 && v.len() != rows {
-        bail!("{what}: expected 1 or {rows} values, got {}", v.len());
-    }
-    Ok(RowView { v, broadcast: v.len() == 1 })
-}
-
-struct RowView<'a> {
-    v: &'a [f32],
-    broadcast: bool,
-}
-
-impl RowView<'_> {
-    #[inline]
-    fn at(&self, row: usize) -> f32 {
-        if self.broadcast {
-            self.v[0]
-        } else {
-            self.v[row]
-        }
-    }
-}
-
-fn opt_full<'a>(t: Option<&'a Tensor>, n: usize, what: &str) -> Result<Option<&'a [f32]>> {
-    match t {
-        None => Ok(None),
-        Some(t) => {
-            let v = t.as_f32()?;
-            if v.len() != n {
-                bail!("{what}: expected {n} values, got {}", v.len());
-            }
-            Ok(Some(v))
-        }
-    }
-}
-
-/// FlexRound fake-quant forward: `Ŵ` with `w: (r, c)`, `s1`/`zp`: per-tensor
-/// or per-row, `s2: (r, c)`, `s3: (r, 1)`, `s4: (1, c)`; `None` factors are
-/// ones (so all-None reproduces RTN).
-pub fn fq_forward(
-    w: &Tensor,
-    s1: &Tensor,
-    s2: Option<&Tensor>,
-    s3: Option<&Tensor>,
-    s4: Option<&Tensor>,
-    zp: &Tensor,
-    qmin: f32,
-    qmax: f32,
-) -> Result<Tensor> {
-    fq_kernel(w, s1, s2, s3, s4, zp, qmin, qmax, false)
-}
-
-/// Integer grid codes after learning, as an **i32 tensor** — the packed
-/// export path (`infer::packed` bit-packs these directly) and the
-/// grid-shift analysis input (which reads them via `to_f32_vec`).
-pub fn fq_codes(
-    w: &Tensor,
-    s1: &Tensor,
-    s2: Option<&Tensor>,
-    s3: Option<&Tensor>,
-    s4: Option<&Tensor>,
-    zp: &Tensor,
-    qmin: f32,
-    qmax: f32,
-) -> Result<Tensor> {
-    let t = fq_kernel(w, s1, s2, s3, s4, zp, qmin, qmax, true)?;
-    let v: Vec<i32> = t.as_f32()?.iter().map(|&x| x.round() as i32).collect();
-    Tensor::from_i32(v, t.shape())
-}
-
-fn fq_kernel(
-    w: &Tensor,
-    s1: &Tensor,
-    s2: Option<&Tensor>,
-    s3: Option<&Tensor>,
-    s4: Option<&Tensor>,
-    zp: &Tensor,
-    qmin: f32,
-    qmax: f32,
-    codes: bool,
-) -> Result<Tensor> {
-    if w.ndim() != 2 {
-        bail!("fq: weights must be 2-D, got {:?}", w.shape());
-    }
-    let (r, c) = (w.shape()[0], w.shape()[1]);
-    let wv = w.as_f32()?;
-    let s1v = row_scale(s1, r, "s1")?;
-    let zpv = row_scale(zp, r, "zp")?;
-    let s2v = opt_full(s2, r * c, "s2")?;
-    let s3t = s3.map(|t| row_scale(t, r, "s3")).transpose()?;
-    let s4v = opt_full(s4, c, "s4")?;
-    let mut out = vec![0.0f32; r * c];
-    for i in 0..r {
-        let s1i = s1v.at(i);
-        let zpi = zpv.at(i);
-        let s3i = s3t.as_ref().map(|t| t.at(i)).unwrap_or(1.0);
-        for j in 0..c {
-            let k = i * c + j;
-            let div = s1i
-                * s2v.map(|v| v[k]).unwrap_or(1.0)
-                * s3i
-                * s4v.map(|v| v[j]).unwrap_or(1.0);
-            let n = round_ties_even(wv[k] / div) + zpi;
-            let n_c = n.clamp(qmin, qmax);
-            out[k] = if codes { n_c } else { s1i * (n_c - zpi) };
-        }
-    }
-    Tensor::from_f32(out, &[r, c])
-}
-
-/// STE cotangents for the learnable factors, given the output cotangent `g`
-/// (shape of `w`).  Shapes mirror the parameters; `ds1` collapses to the
-/// parameter's own shape (per-tensor `(1,1)` or per-row `(r,1)`).
-pub struct FqGrads {
-    pub ds1: Tensor,
-    pub ds2: Option<Tensor>,
-    pub ds3: Option<Tensor>,
-    pub ds4: Option<Tensor>,
-}
-
-pub fn fq_backward(
-    w: &Tensor,
-    s1: &Tensor,
-    s2: Option<&Tensor>,
-    s3: Option<&Tensor>,
-    s4: Option<&Tensor>,
-    zp: &Tensor,
-    g: &Tensor,
-    qmin: f32,
-    qmax: f32,
-) -> Result<FqGrads> {
-    if w.shape() != g.shape() || w.ndim() != 2 {
-        bail!("fq_backward: w {:?} vs g {:?}", w.shape(), g.shape());
-    }
-    let (r, c) = (w.shape()[0], w.shape()[1]);
-    let wv = w.as_f32()?;
-    let gv = g.as_f32()?;
-    let s1v = row_scale(s1, r, "s1")?;
-    let zpv = row_scale(zp, r, "zp")?;
-    let s2v = opt_full(s2, r * c, "s2")?;
-    let s3t = s3.map(|t| row_scale(t, r, "s3")).transpose()?;
-    let s4v = opt_full(s4, c, "s4")?;
-
-    let mut ds1_rows = vec![0.0f32; r];
-    let mut ds2 = s2v.map(|_| vec![0.0f32; r * c]);
-    let mut ds3_rows = s3t.as_ref().map(|_| vec![0.0f32; r]);
-    let mut ds4_cols = s4v.map(|_| vec![0.0f32; c]);
-
-    for i in 0..r {
-        let s1i = s1v.at(i);
-        let zpi = zpv.at(i);
-        let s3i = s3t.as_ref().map(|t| t.at(i)).unwrap_or(1.0);
-        for j in 0..c {
-            let k = i * c + j;
-            let s2k = s2v.map(|v| v[k]).unwrap_or(1.0);
-            let s4j = s4v.map(|v| v[j]).unwrap_or(1.0);
-            let div = s1i * s2k * s3i * s4j;
-            let ratio = wv[k] / div;
-            let n = round_ties_even(ratio) + zpi;
-            let inside = if n >= qmin && n <= qmax { 1.0f32 } else { 0.0 };
-            let n_c = n.clamp(qmin, qmax);
-            ds1_rows[i] += gv[k] * ((n_c - zpi) - inside * ratio);
-            let common = gv[k] * s1i * inside * (-ratio);
-            if let Some(d) = ds2.as_mut() {
-                d[k] = common / s2k;
-            }
-            if let Some(d) = ds3_rows.as_mut() {
-                d[i] += common / s3i;
-            }
-            if let Some(d) = ds4_cols.as_mut() {
-                d[j] += common / s4j;
-            }
-        }
-    }
-
-    let ds1 = if s1.len() == 1 {
-        Tensor::from_f32(vec![ds1_rows.iter().sum()], s1.shape())?
-    } else {
-        Tensor::from_f32(ds1_rows, s1.shape())?
-    };
-    Ok(FqGrads {
-        ds1,
-        ds2: match (ds2, s2) {
-            (Some(d), Some(t)) => Some(Tensor::from_f32(d, t.shape())?),
-            _ => None,
-        },
-        ds3: match (ds3_rows, s3) {
-            (Some(d), Some(t)) => Some(Tensor::from_f32(d, t.shape())?),
-            _ => None,
-        },
-        ds4: match (ds4_cols, s4) {
-            (Some(d), Some(t)) => Some(Tensor::from_f32(d, t.shape())?),
-            _ => None,
-        },
-    })
+    rounding::scheme_for(method)?.map_pack(unit, method, entries)
 }
 
 // ---------------------------------------------------------------------------
@@ -349,27 +125,24 @@ fn add_bias_relu(mut y: Tensor, bias: Option<&Tensor>, relu: bool) -> Result<Ten
     Ok(y)
 }
 
-/// `A · Bᵀ` under an explicit worker budget — the crate-wide
-/// [`crate::linalg::Dispatch`] policy decides serial vs output-row-panel
-/// fan-out (exact same result either way; the old per-call-site row/element
-/// heuristic is gone).
-pub fn matmul_nt_par(a: &Tensor, b: &Tensor, workers: usize) -> Result<Tensor> {
-    a.matmul_nt_with(b, &linalg::Dispatch::new(workers))
-}
-
 /// Full-precision unit forward: `x` through every layer's raw weights.
+/// Matmuls go straight through the crate-wide [`crate::linalg::Dispatch`]
+/// policy (serial vs output-row-panel fan-out, exact same result either
+/// way).
 pub fn unit_forward_fp(layers: &[LayerDef], x: &Tensor, workers: usize) -> Result<Tensor> {
+    let disp = linalg::Dispatch::new(workers);
     let mut h = x.clone();
     for l in layers {
-        h = add_bias_relu(matmul_nt_par(&h, l.w, workers)?, l.bias, l.relu_after)?;
+        h = add_bias_relu(h.matmul_nt_with(l.w, &disp)?, l.bias, l.relu_after)?;
     }
     Ok(h)
 }
 
 /// Materialize every layer's fake-quantized Ŵ once (callers forwarding many
-/// activation chunks reuse these instead of re-running the fq kernel per
-/// chunk).
+/// activation chunks reuse these instead of re-running the scheme's forward
+/// per chunk).
 pub fn unit_whats(
+    scheme: &dyn Rounding,
     layers: &[LayerDef],
     slots: &[LayerSlots],
     params: &[Tensor],
@@ -382,18 +155,7 @@ pub fn unit_whats(
     layers
         .iter()
         .zip(slots)
-        .map(|(l, s)| {
-            fq_forward(
-                l.w,
-                &params[s.s1],
-                s.s2.map(|i| &params[i]),
-                s.s3.map(|i| &params[i]),
-                s.s4.map(|i| &params[i]),
-                &params[s.zp],
-                qmin,
-                qmax,
-            )
-        })
+        .map(|(l, s)| scheme.forward(l.w, &s.resolve(params), qmin, qmax))
         .collect()
 }
 
@@ -404,15 +166,17 @@ pub fn unit_forward_what(
     x: &Tensor,
     workers: usize,
 ) -> Result<Tensor> {
+    let disp = linalg::Dispatch::new(workers);
     let mut h = x.clone();
     for (l, what) in layers.iter().zip(whats) {
-        h = add_bias_relu(matmul_nt_par(&h, what, workers)?, l.bias, l.relu_after)?;
+        h = add_bias_relu(h.matmul_nt_with(what, &disp)?, l.bias, l.relu_after)?;
     }
     Ok(h)
 }
 
 /// Quantized unit forward with the current parameter pack.
 pub fn unit_forward_q(
+    scheme: &dyn Rounding,
     layers: &[LayerDef],
     slots: &[LayerSlots],
     params: &[Tensor],
@@ -421,13 +185,14 @@ pub fn unit_forward_q(
     x: &Tensor,
     workers: usize,
 ) -> Result<Tensor> {
-    let whats = unit_whats(layers, slots, params, qmin, qmax)?;
+    let whats = unit_whats(scheme, layers, slots, params, qmin, qmax)?;
     unit_forward_what(layers, &whats, x, workers)
 }
 
 /// Integer codes (i32) only, per layer — the packed-export hot path
 /// (`Session::packed_model`): skips materializing Ŵ entirely.
 pub fn export_codes(
+    scheme: &dyn Rounding,
     layers: &[LayerDef],
     slots: &[LayerSlots],
     params: &[Tensor],
@@ -437,25 +202,17 @@ pub fn export_codes(
     layers
         .iter()
         .zip(slots)
-        .map(|(l, s)| {
-            fq_codes(
-                l.w,
-                &params[s.s1],
-                s.s2.map(|i| &params[i]),
-                s.s3.map(|i| &params[i]),
-                s.s4.map(|i| &params[i]),
-                &params[s.zp],
-                qmin,
-                qmax,
-            )
-        })
+        .map(|(l, s)| scheme.codes(l.w, &s.resolve(params), qmin, qmax))
         .collect()
 }
 
 /// Fake-quantized weights + integer codes (i32) for every layer — native
 /// analog of the `qw.*` export artifacts, feeding `quant::grid_shifts` and
-/// the packed-weight export (`Session::packed_model`).
+/// the packed-weight export (`Session::packed_model`).  The grid is computed
+/// **once** per layer inside [`Rounding::export`] (codes first, `Ŵ` derived
+/// from those same codes), so a scheme cannot desync the two.
 pub fn export_qw(
+    scheme: &dyn Rounding,
     layers: &[LayerDef],
     slots: &[LayerSlots],
     params: &[Tensor],
@@ -465,16 +222,7 @@ pub fn export_qw(
     layers
         .iter()
         .zip(slots)
-        .map(|(l, s)| {
-            let args = (
-                s.s2.map(|i| &params[i]),
-                s.s3.map(|i| &params[i]),
-                s.s4.map(|i| &params[i]),
-            );
-            let what = fq_forward(l.w, &params[s.s1], args.0, args.1, args.2, &params[s.zp], qmin, qmax)?;
-            let codes = fq_codes(l.w, &params[s.s1], args.0, args.1, args.2, &params[s.zp], qmin, qmax)?;
-            Ok((what, codes))
-        })
+        .map(|(l, s)| scheme.export(l.w, &s.resolve(params), qmin, qmax))
         .collect()
 }
 
@@ -484,7 +232,11 @@ pub fn export_qw(
 
 /// Forward the minibatch, compute `L = mean((ŷ − y)²)`, and backpropagate
 /// through the contraction stack into per-entry parameter gradients.
+/// `beta` is the rounding-regularizer temperature for schemes that anneal
+/// one ([`rounding::beta_schedule`]); FlexRound ignores it.
+#[allow(clippy::too_many_arguments)]
 pub fn loss_and_grads(
+    scheme: &dyn Rounding,
     layers: &[LayerDef],
     slots: &[LayerSlots],
     params: &[Tensor],
@@ -492,25 +244,19 @@ pub fn loss_and_grads(
     yb: &Tensor,
     qmin: f32,
     qmax: f32,
+    beta: f64,
     workers: usize,
 ) -> Result<(f64, Vec<Option<Tensor>>)> {
-    // Forward, caching per-layer inputs, pre-activations, and Ŵ.
+    // Forward, caching per-layer inputs, pre-activations, and Ŵ.  Matmuls
+    // (forward and backward) share one crate-wide dispatch policy.
+    let disp = linalg::Dispatch::new(workers);
     let mut acts: Vec<Tensor> = vec![xb.clone()]; // acts[i] = input to layer i
     let mut pres: Vec<Tensor> = Vec::with_capacity(layers.len());
     let mut whats: Vec<Tensor> = Vec::with_capacity(layers.len());
     for (l, s) in layers.iter().zip(slots) {
-        let what = fq_forward(
-            l.w,
-            &params[s.s1],
-            s.s2.map(|i| &params[i]),
-            s.s3.map(|i| &params[i]),
-            s.s4.map(|i| &params[i]),
-            &params[s.zp],
-            qmin,
-            qmax,
-        )?;
+        let what = scheme.forward(l.w, &s.resolve(params), qmin, qmax)?;
         let pre = add_bias_relu(
-            matmul_nt_par(acts.last().unwrap(), &what, workers)?,
+            acts.last().unwrap().matmul_nt_with(&what, &disp)?,
             l.bias,
             false,
         )?;
@@ -526,9 +272,6 @@ pub fn loss_and_grads(
     let n_inv = 2.0 / yhat.len() as f32;
     let mut g = yhat.zip(yb, move |a, b| n_inv * (a - b))?;
 
-    // backward matmuls share the forward's worker budget (the same
-    // crate-wide dispatch policy — they used to be unconditionally serial)
-    let disp = linalg::Dispatch::new(workers);
     let mut grads: Vec<Option<Tensor>> = params.iter().map(|_| None).collect();
     for li in (0..layers.len()).rev() {
         let l = &layers[li];
@@ -538,33 +281,33 @@ pub fn loss_and_grads(
         }
         // ∂L/∂Ŵ = Gᵀ · X  (r, c)
         let dwhat = g.matmul_tn_with(&acts[li], &disp)?;
-        let fg = fq_backward(
-            l.w,
-            &params[s.s1],
-            s.s2.map(|i| &params[i]),
-            s.s3.map(|i| &params[i]),
-            s.s4.map(|i| &params[i]),
-            &params[s.zp],
-            &dwhat,
-            qmin,
-            qmax,
-        )?;
-        grads[s.s1] = Some(fg.ds1);
-        if let (Some(i), Some(d)) = (s.s2, fg.ds2) {
-            grads[i] = Some(d);
-        }
-        if let (Some(i), Some(d)) = (s.s3, fg.ds3) {
-            grads[i] = Some(d);
-        }
-        if let (Some(i), Some(d)) = (s.s4, fg.ds4) {
-            grads[i] = Some(d);
-        }
+        let fg = scheme.backward(l.w, &s.resolve(params), &dwhat, qmin, qmax, beta)?;
+        scatter_grads(&mut grads, s, fg);
         if li > 0 {
             // ∂L/∂X = G · Ŵ  (n, c) feeds the next layer down.
             g = g.matmul_nn_with(&whats[li], &disp)?;
         }
     }
     Ok((loss, grads))
+}
+
+/// Place one layer's [`FqGrads`] into the flat per-entry gradient vector.
+/// Shared by the stack backward above and the block backward
+/// (`block::loss_and_grads`).
+pub fn scatter_grads(grads: &mut [Option<Tensor>], s: &LayerSlots, fg: FqGrads) {
+    grads[s.s1] = Some(fg.ds1);
+    if let (Some(i), Some(d)) = (s.s2, fg.ds2) {
+        grads[i] = Some(d);
+    }
+    if let (Some(i), Some(d)) = (s.s3, fg.ds3) {
+        grads[i] = Some(d);
+    }
+    if let (Some(i), Some(d)) = (s.s4, fg.ds4) {
+        grads[i] = Some(d);
+    }
+    if let (Some(i), Some(d)) = (s.v, fg.dv) {
+        grads[i] = Some(d);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -581,6 +324,9 @@ pub struct ReconSettings {
     pub verbose: bool,
     /// label for progress lines, e.g. "model/unit"
     pub tag: String,
+    /// the rounding scheme under reconstruction (resolved once from the
+    /// method string by [`rounding::scheme_for`])
+    pub scheme: &'static dyn Rounding,
 }
 
 pub struct ReconResult {
@@ -591,31 +337,37 @@ pub struct ReconResult {
 }
 
 /// The shared Adam reconstruction driver: `cfg.iters` steps of
-/// `step(rng, params) → (loss, grads)` with first/final-loss bookkeeping,
+/// `step(rng, params, t) → (loss, grads)` with first/final-loss bookkeeping,
 /// the positivity-clamped [`Adam`] update, and throttled progress logging.
 /// Every minibatch-sampling strategy (row sampling here, sequence sampling
 /// in `block::reconstruct_block`, chunk-streamed sampling in the pipeline)
 /// is one closure over this loop — the bookkeeping exists exactly once.
+/// The 1-based step index `t` feeds the regularizer annealing
+/// ([`rounding::beta_schedule`]) of schemes that need it.
 pub fn run_adam(
     entries: &[PackEntry],
     params0: &[Tensor],
     cfg: &ReconSettings,
     rng: &mut Pcg32,
-    mut step: impl FnMut(&mut Pcg32, &[Tensor]) -> Result<(f64, Vec<Option<Tensor>>)>,
+    mut step: impl FnMut(&mut Pcg32, &[Tensor], usize) -> Result<(f64, Vec<Option<Tensor>>)>,
 ) -> Result<ReconResult> {
     let mut params: Vec<Tensor> = params0.to_vec();
     let mut opt = Adam::new(&params);
     let mut first_loss = f64::NAN;
     let mut final_loss = f64::NAN;
+    // per-scheme step counter, resolved once per reconstruction run
+    let scheme_steps =
+        crate::obs::counter(&format!("flexround_recon_steps_{}_total", cfg.scheme.name()));
     for t in 1..=cfg.iters {
         let _span = crate::obs::span("recon/adam_step");
-        let (loss, grads) = step(rng, &params)?;
+        let (loss, grads) = step(rng, &params, t)?;
         if t == 1 {
             first_loss = loss;
         }
         final_loss = loss;
         opt.step(t, cfg.lr, entries, &mut params, &grads)?;
         crate::obs_counter!("flexround_recon_steps_total").inc();
+        scheme_steps.inc();
         if cfg.verbose && (t == 1 || t % 100 == 0 || t == cfg.iters) {
             eprintln!("    [{}] iter {t}/{} loss {loss:.6}", cfg.tag, cfg.iters);
         }
@@ -640,11 +392,14 @@ pub fn reconstruct_unit(
     }
     let n = x.shape()[0];
     let batch = cfg.batch.clamp(1, n);
-    run_adam(entries, params0, cfg, rng, |rng, params| {
+    run_adam(entries, params0, cfg, rng, |rng, params, t| {
         let idx = rng.sample_indices(n, batch);
         let xb = x.gather_rows(&idx)?;
         let yb = y.gather_rows(&idx)?;
-        loss_and_grads(layers, slots, params, &xb, &yb, cfg.qmin, cfg.qmax, cfg.workers)
+        let beta = rounding::beta_schedule(t, cfg.iters);
+        loss_and_grads(
+            cfg.scheme, layers, slots, params, &xb, &yb, cfg.qmin, cfg.qmax, beta, cfg.workers,
+        )
     })
 }
 
@@ -703,7 +458,38 @@ pub fn synthetic_problem(rows: usize, cols: usize, batch: usize, bits: u32, seed
 
 /// Slot layout matching [`synthetic_problem`]'s pack order.
 pub fn synthetic_slots() -> Vec<LayerSlots> {
-    vec![LayerSlots { layer: 0, s1: 0, zp: 4, s2: Some(1), s3: Some(2), s4: Some(3) }]
+    vec![LayerSlots { layer: 0, s1: 0, zp: 4, s2: Some(1), s3: Some(2), s4: Some(3), v: None }]
+}
+
+/// [`synthetic_problem`] re-packed for AdaRound: same weights, calibration
+/// set, targets, and grid, but the pack is `(s1 frozen, V learnable, zp)`
+/// with `V` at the RTN-fraction init ([`rounding::adaround::init_v`]).
+pub fn synthetic_problem_adaround(
+    rows: usize,
+    cols: usize,
+    batch: usize,
+    bits: u32,
+    seed: u64,
+) -> Synthetic {
+    let p = synthetic_problem(rows, cols, batch, bits, seed);
+    let entry = |name: &str, shape: &[usize], learnable: bool| PackEntry {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        learnable,
+    };
+    let v = rounding::adaround::init_v(&p.w, &p.params[0]).expect("init v");
+    let entries = vec![
+        entry("fc.s1", &[rows, 1], false),
+        entry("fc.v", &[rows, cols], true),
+        entry("fc.zp", &[rows, 1], false),
+    ];
+    let params = vec![p.params[0].clone(), v, p.params[4].clone()];
+    Synthetic { entries, params, ..p }
+}
+
+/// Slot layout matching [`synthetic_problem_adaround`]'s pack order.
+pub fn synthetic_slots_adaround() -> Vec<LayerSlots> {
+    vec![LayerSlots { layer: 0, s1: 0, zp: 2, s2: None, s3: None, s4: None, v: Some(1) }]
 }
 
 /// Artifact-free smoke test of the native engine: reconstruct one synthetic
@@ -715,7 +501,8 @@ pub fn native_selftest(verbose: bool) -> Result<(f64, f64)> {
     let layers =
         [LayerDef { name: "fc", w: &p.w, bias: None, relu_after: false }];
     let workers = pool::default_workers();
-    let before = unit_forward_q(&layers, &slots, &p.params, p.qmin, p.qmax, &p.x, workers)?
+    let scheme = rounding::scheme_for("flexround")?;
+    let before = unit_forward_q(scheme, &layers, &slots, &p.params, p.qmin, p.qmax, &p.x, workers)?
         .mse(&p.y)? as f64;
     let cfg = ReconSettings {
         iters: 300,
@@ -726,10 +513,11 @@ pub fn native_selftest(verbose: bool) -> Result<(f64, f64)> {
         workers,
         verbose,
         tag: "selftest/fc".to_string(),
+        scheme,
     };
     let mut rng = Pcg32::seeded(7);
     let r = reconstruct_unit(&layers, &slots, &p.entries, &p.params, &p.x, &p.y, &cfg, &mut rng)?;
-    let after = unit_forward_q(&layers, &slots, &r.params, p.qmin, p.qmax, &p.x, workers)?
+    let after = unit_forward_q(scheme, &layers, &slots, &r.params, p.qmin, p.qmax, &p.x, workers)?
         .mse(&p.y)? as f64;
     if !(after < before) {
         bail!("native selftest: reconstruction did not improve MSE ({before:.6} → {after:.6})");
@@ -1077,6 +865,7 @@ mod tests {
         assert_eq!(s[0].s2, Some(1));
         assert_eq!(s[0].s4, Some(3));
         assert_eq!(s[0].zp, 4);
+        assert_eq!(s[0].v, None);
         // the no-s34 ablation freezes those factors to ones
         let s = map_pack(&unit, "flexround_no_s34", &entries).unwrap();
         assert_eq!(s[0].s3, None);
@@ -1085,21 +874,40 @@ mod tests {
         let entries_rtn = vec![e("fc.s1"), e("fc.zp")];
         let s = map_pack(&unit, "rtn", &entries_rtn).unwrap();
         assert_eq!(s[0].s2, None);
+        // adaround requires a V entry: fails on a FlexRound pack, resolves
+        // its (s1, v, zp) layout on its own
         assert!(map_pack(&unit, "adaround", &entries).is_err());
+        let entries_ada = vec![e("fc.s1"), e("fc.v"), e("fc.zp")];
+        let s = map_pack(&unit, "adaround", &entries_ada).unwrap();
+        assert_eq!(s[0].s1, 0);
+        assert_eq!(s[0].v, Some(1));
+        assert_eq!(s[0].zp, 2);
+        assert_eq!(s[0].s2, None);
+        // unknown methods name the scheme table
+        assert!(map_pack(&unit, "lsq", &entries).is_err());
         let mut with_act = entries.clone();
         with_act.push(e("act0.step"));
         assert!(map_pack(&unit, "flexround", &with_act).is_err());
+        assert!(map_pack(&unit, "adaround", &{
+            let mut v = entries_ada.clone();
+            v.push(e("act0.step"));
+            v
+        })
+        .is_err());
     }
 
     #[test]
-    fn parallel_matmul_matches_serial() {
+    fn dispatched_matmul_matches_serial() {
+        // linalg::Dispatch fan-out is bit-identical to the serial kernel —
+        // the invariant every recon matmul call site leans on now that they
+        // go straight through `matmul_nt_with`.
         let mut rng = Pcg32::seeded(3);
         let a = Tensor::from_f32((0..64 * 48).map(|_| rng.next_normal()).collect(), &[64, 48])
             .unwrap();
         let b = Tensor::from_f32((0..96 * 48).map(|_| rng.next_normal()).collect(), &[96, 48])
             .unwrap();
         let serial = a.matmul_nt(&b).unwrap();
-        let par = matmul_nt_par(&a, &b, 4).unwrap();
+        let par = a.matmul_nt_with(&b, &linalg::Dispatch::new(4)).unwrap();
         assert_eq!(serial.shape(), par.shape());
         for (x, y) in serial.as_f32().unwrap().iter().zip(par.as_f32().unwrap()) {
             assert_eq!(x, y, "row-sliced parallel matmul must be bit-identical");
@@ -1126,6 +934,75 @@ mod tests {
             workers: 4,
             verbose: false,
             tag: "det".into(),
+            scheme: scheme_for("flexround").unwrap(),
+        };
+        let run = || {
+            let mut rng = Pcg32::seeded(5);
+            reconstruct_unit(&layers, &slots, &p.entries, &p.params, &p.x, &p.y, &cfg, &mut rng)
+                .unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.final_loss, b.final_loss);
+        for (pa, pb) in a.params.iter().zip(&b.params) {
+            assert_eq!(pa.as_f32().unwrap(), pb.as_f32().unwrap());
+        }
+    }
+
+    #[test]
+    fn adaround_reconstruction_improves_hard_rounding() {
+        // AdaRound starts at the RTN-fraction init (soft forward ≈ FP) and
+        // must land hard-rounded decisions that beat plain RTN on the
+        // full-batch MSE.
+        let p = synthetic_problem_adaround(16, 32, 256, 3, 7);
+        let slots = synthetic_slots_adaround();
+        let layers = [LayerDef { name: "fc", w: &p.w, bias: None, relu_after: false }];
+        let scheme = scheme_for("adaround").unwrap();
+        // RTN baseline: the same grid with all rounding decisions at ⌊·⌉
+        let rtn = synthetic_problem(16, 32, 256, 3, 7);
+        let rtn_what =
+            fq_forward(&rtn.w, &rtn.params[0], None, None, None, &rtn.params[4], p.qmin, p.qmax)
+                .unwrap();
+        let mse_rtn = p.x.matmul_nt(&rtn_what).unwrap().mse(&p.y).unwrap() as f64;
+
+        let cfg = ReconSettings {
+            iters: 400,
+            lr: 1e-2,
+            batch: 32,
+            qmin: p.qmin,
+            qmax: p.qmax,
+            workers: 1,
+            verbose: false,
+            tag: "ada".into(),
+            scheme,
+        };
+        let mut rng = Pcg32::seeded(7);
+        let r = reconstruct_unit(&layers, &slots, &p.entries, &p.params, &p.x, &p.y, &cfg, &mut rng)
+            .unwrap();
+        // evaluate at the HARD export (what actually ships)
+        let sp = slots[0].resolve(&r.params);
+        let (what, _) = scheme.export(&p.w, &sp, p.qmin, p.qmax).unwrap();
+        let mse_hard = p.x.matmul_nt(&what).unwrap().mse(&p.y).unwrap() as f64;
+        assert!(
+            mse_hard <= mse_rtn * 1.02,
+            "adaround hard export should not lose to RTN: {mse_hard} vs {mse_rtn}"
+        );
+    }
+
+    #[test]
+    fn adaround_reconstruction_is_deterministic() {
+        let p = synthetic_problem_adaround(8, 12, 64, 4, 11);
+        let slots = synthetic_slots_adaround();
+        let layers = [LayerDef { name: "fc", w: &p.w, bias: None, relu_after: false }];
+        let cfg = ReconSettings {
+            iters: 25,
+            lr: 1e-2,
+            batch: 16,
+            qmin: p.qmin,
+            qmax: p.qmax,
+            workers: 4,
+            verbose: false,
+            tag: "ada-det".into(),
+            scheme: scheme_for("adaround").unwrap(),
         };
         let run = || {
             let mut rng = Pcg32::seeded(5);
@@ -1162,7 +1039,7 @@ mod tests {
         let mut params = p1.1;
         params.extend(p2.1);
         let slots = vec![
-            LayerSlots { layer: 0, s1: 0, zp: 4, s2: Some(1), s3: Some(2), s4: Some(3) },
+            LayerSlots { layer: 0, s1: 0, zp: 4, s2: Some(1), s3: Some(2), s4: Some(3), v: None },
             LayerSlots {
                 layer: 1,
                 s1: base,
@@ -1170,8 +1047,10 @@ mod tests {
                 s2: Some(base + 1),
                 s3: Some(base + 2),
                 s4: Some(base + 3),
+                v: None,
             },
         ];
+        let scheme = scheme_for("flexround").unwrap();
         let cfg = ReconSettings {
             iters: 200,
             lr: 4e-3,
@@ -1181,15 +1060,16 @@ mod tests {
             workers: 1,
             verbose: false,
             tag: "mlp".into(),
+            scheme,
         };
-        let before = unit_forward_q(&layers, &slots, &params, -4.0, 3.0, &x, 1)
+        let before = unit_forward_q(scheme, &layers, &slots, &params, -4.0, 3.0, &x, 1)
             .unwrap()
             .mse(&y)
             .unwrap();
         let mut r = Pcg32::seeded(2);
         let res =
             reconstruct_unit(&layers, &slots, &entries, &params, &x, &y, &cfg, &mut r).unwrap();
-        let after = unit_forward_q(&layers, &slots, &res.params, -4.0, 3.0, &x, 1)
+        let after = unit_forward_q(scheme, &layers, &slots, &res.params, -4.0, 3.0, &x, 1)
             .unwrap()
             .mse(&y)
             .unwrap();

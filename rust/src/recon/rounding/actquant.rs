@@ -1,0 +1,131 @@
+//! Per-tensor **static** activation quantization — the piece that turns a
+//! low-bit weight pack into a W4A8 artifact (DESIGN.md §Rounding-Schemes,
+//! "W4A8 data flow").
+//!
+//! Nothing is learned: the range is calibrated once from reconstruction
+//! activations (asymmetric min/max over every calibration chunk, zero always
+//! representable), then frozen into the packed artifact next to the weight
+//! codes.  At serve time the engine quantizes each layer input onto this
+//! grid and the fused GEMM runs **entirely in the integer domain**
+//! (`infer::kernels::gemm_fused_act_int`): `Σ code_x · code_w` in i32, one
+//! dequant per output element.  The fake-quant view ([`ActQuant::fake_quant`])
+//! is the f32 reference the integer path is pinned against (≤ 1e-4).
+
+use crate::tensor::{qrange, Tensor};
+use crate::Result;
+use anyhow::bail;
+
+/// A calibrated per-tensor activation grid: `x̂ = step · (code − zp)` with
+/// `code = clip(⌊x/step⌉ + zp, 0, 2^abits − 1)` (asymmetric, unsigned).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ActQuant {
+    pub abits: u32,
+    pub step: f32,
+    pub zp: f32,
+}
+
+impl ActQuant {
+    /// Build the grid from an observed activation range.  Mirrors the
+    /// init-pack math of the LSQ step seed (`Session::init_params`): the
+    /// range is widened to include zero, `step` floors at 1e-6, and the zero
+    /// point lands on the grid.
+    pub fn calibrate(lo: f32, hi: f32, abits: u32) -> ActQuant {
+        let (qmin, qmax) = qrange(abits, false);
+        let lo = lo.min(0.0);
+        let hi = hi.max(0.0);
+        let step = ((hi - lo) / (qmax - qmin)).max(1e-6);
+        let zp = (-lo / step).round().clamp(qmin, qmax);
+        ActQuant { abits, step, zp }
+    }
+
+    /// Calibrate from activation chunks (the reconstruction batches): one
+    /// global min/max over every element of every chunk.
+    pub fn from_chunks<'a>(
+        chunks: impl IntoIterator<Item = &'a Tensor>,
+        abits: u32,
+    ) -> Result<ActQuant> {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        let mut seen = false;
+        for t in chunks {
+            for &x in t.as_f32()? {
+                lo = lo.min(x);
+                hi = hi.max(x);
+                seen = true;
+            }
+        }
+        if !seen {
+            bail!("act-quant calibration over an empty activation set");
+        }
+        Ok(ActQuant::calibrate(lo, hi, abits))
+    }
+
+    /// The unsigned integer code range `[0, 2^abits − 1]`.
+    pub fn code_range(&self) -> (f32, f32) {
+        qrange(self.abits, false)
+    }
+
+    /// Quantize a slice of activations to integer codes.
+    pub fn codes(&self, x: &[f32]) -> Vec<i32> {
+        let (qmin, qmax) = self.code_range();
+        x.iter()
+            .map(|&v| (v / self.step).round().clamp(qmin - self.zp, qmax - self.zp) + self.zp)
+            .map(|c| c as i32)
+            .collect()
+    }
+
+    /// The f32 fake-quant view `x̂ = step · (code − zp)` — the reference the
+    /// integer-domain GEMM is pinned against.
+    pub fn fake_quant(&self, x: &Tensor) -> Result<Tensor> {
+        let xv = x.as_f32()?;
+        let codes = self.codes(xv);
+        let out: Vec<f32> = codes.iter().map(|&c| self.step * (c as f32 - self.zp)).collect();
+        Tensor::from_f32(out, x.shape())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibrated_grid_represents_zero_and_range() {
+        let q = ActQuant::calibrate(-1.5, 3.0, 8);
+        // zero is exactly on the grid
+        assert_eq!(q.step * (q.zp - q.zp), 0.0);
+        let codes = q.codes(&[0.0]);
+        assert_eq!(q.step * (codes[0] as f32 - q.zp), 0.0);
+        // endpoints round-trip within one step
+        for &x in &[-1.5f32, 0.0, 1.0, 3.0] {
+            let c = q.codes(&[x])[0] as f32;
+            let xhat = q.step * (c - q.zp);
+            assert!((xhat - x).abs() <= q.step * 0.5 + 1e-6, "{x} → {xhat} (step {})", q.step);
+        }
+    }
+
+    #[test]
+    fn codes_stay_in_unsigned_range() {
+        let q = ActQuant::calibrate(-0.2, 0.9, 8);
+        let xs: Vec<f32> = (-100..100).map(|i| i as f32 * 0.05).collect();
+        for c in q.codes(&xs) {
+            assert!((0..=255).contains(&c), "code {c} outside u8 range");
+        }
+    }
+
+    #[test]
+    fn all_positive_range_still_includes_zero() {
+        let q = ActQuant::calibrate(0.5, 2.0, 8);
+        assert_eq!(q.zp, 0.0, "lo widened to 0 → zp at 0, got {}", q.zp);
+        assert_eq!(q.codes(&[0.0])[0], 0);
+    }
+
+    #[test]
+    fn from_chunks_spans_all_chunks() {
+        let a = Tensor::from_f32(vec![-1.0, 0.5], &[1, 2]).unwrap();
+        let b = Tensor::from_f32(vec![2.0, 0.1], &[1, 2]).unwrap();
+        let q = ActQuant::from_chunks([&a, &b], 8).unwrap();
+        let full = ActQuant::calibrate(-1.0, 2.0, 8);
+        assert_eq!(q, full);
+        assert!(ActQuant::from_chunks(std::iter::empty::<&Tensor>(), 8).is_err());
+    }
+}

@@ -1,0 +1,240 @@
+//! AdaRound ("Up or Down? Adaptive Rounding for Post-Training
+//! Quantization", Nagel et al., 2020) as a [`Rounding`] impl — the additive
+//! soft-rounding baseline FlexRound was designed to beat.
+//!
+//! Training-time forward (grid scale `s1` and zero point `z` frozen at their
+//! RTN values; only the continuous rounding variable `V` learns):
+//!
+//! ```text
+//!   h(V) = clip(1.2·σ(V) − 0.1, 0, 1)            (rectified sigmoid)
+//!   Ŵ    = s1 · ( clip( ⌊W/s1⌋ + h(V) + z, qmin, qmax ) − z )
+//! ```
+//!
+//! The backward is the straight-through estimator through the clip plus the
+//! exact derivative of the rectified sigmoid, with the paper's annealed
+//! rounding regularizer `f_reg(V) = Σ 1 − |2·h(V) − 1|^β` added directly to
+//! the `V` cotangent (`β` from [`super::beta_schedule`]: high β early leaves
+//! `h` free, low β late forces every `h` to commit to 0 or 1):
+//!
+//! ```text
+//!   ∂Ŵ/∂V    = s1 · 1[inside] · h′(V)
+//!   h′(V)    = 1.2·σ(V)·(1 − σ(V))   gated to 0 where h is rectified
+//!   ∂f_reg/∂V = −2β·|2h − 1|^{β−1}·sign(2h − 1) · h′(V)
+//! ```
+//!
+//! Export hard-rounds the learned decision: `⌊W/s1⌋ + 1[h(V) ≥ ½] + z`,
+//! clipped — at convergence (V saturated by the regularizer) this equals the
+//! soft forward, which is what the trait-conformance suite pins.
+
+use super::{row_scale, FqGrads, Rounding, SlotParams};
+use crate::manifest::{PackEntry, UnitInfo};
+use crate::recon::LayerSlots;
+use crate::tensor::Tensor;
+use crate::Result;
+use anyhow::{anyhow, bail};
+
+/// Weight of the rounding regularizer relative to the reconstruction MSE
+/// (the paper's λ; fixed — the annealing lives in β, not λ).
+pub const REG_WEIGHT: f32 = 0.01;
+
+/// The AdaRound scheme.
+pub struct AdaRound;
+
+/// Rectified sigmoid `h(V)` (Eq. 23 of the paper): stretches σ by 1.2 and
+/// shifts by −0.1 so `h` actually *reaches* 0 and 1 at finite V.
+#[inline]
+pub fn rectified_sigmoid(v: f32) -> f32 {
+    let sig = 1.0 / (1.0 + (-v).exp());
+    (1.2 * sig - 0.1).clamp(0.0, 1.0)
+}
+
+impl Rounding for AdaRound {
+    fn name(&self) -> &'static str {
+        "adaround"
+    }
+
+    /// Per layer: `{layer}.s1` (frozen grid), `{layer}.v` (learnable, shape
+    /// of `W`), `{layer}.zp` (frozen).  No divisor factors.
+    fn map_pack(
+        &self,
+        unit: &UnitInfo,
+        _method: &str,
+        entries: &[PackEntry],
+    ) -> Result<Vec<LayerSlots>> {
+        let mut out = Vec::with_capacity(unit.layers.len());
+        for (li, layer) in unit.layers.iter().enumerate() {
+            let find = |key: &str| -> Option<usize> {
+                let want = format!("{}.{key}", layer.name);
+                entries.iter().position(|e| e.name == want)
+            };
+            let s1 = find("s1")
+                .ok_or_else(|| anyhow!("pack has no {}.s1 entry", layer.name))?;
+            let zp = find("zp")
+                .ok_or_else(|| anyhow!("pack has no {}.zp entry", layer.name))?;
+            let v = find("v")
+                .ok_or_else(|| anyhow!("pack has no {}.v entry (adaround)", layer.name))?;
+            out.push(LayerSlots { layer: li, s1, zp, s2: None, s3: None, s4: None, v: Some(v) });
+        }
+        super::reject_act_entries(entries)?;
+        Ok(out)
+    }
+
+    fn forward(&self, w: &Tensor, p: &SlotParams, qmin: f32, qmax: f32) -> Result<Tensor> {
+        let (r, c, wv, vv, s1v, zpv) = unpack(w, p)?;
+        let mut out = vec![0.0f32; r * c];
+        for i in 0..r {
+            let (s1i, zpi) = (s1v.at(i), zpv.at(i));
+            for j in 0..c {
+                let k = i * c + j;
+                let n = (wv[k] / s1i).floor() + rectified_sigmoid(vv[k]) + zpi;
+                out[k] = s1i * (n.clamp(qmin, qmax) - zpi);
+            }
+        }
+        Tensor::from_f32(out, &[r, c])
+    }
+
+    fn codes(&self, w: &Tensor, p: &SlotParams, qmin: f32, qmax: f32) -> Result<Tensor> {
+        let (r, c, wv, vv, s1v, zpv) = unpack(w, p)?;
+        let mut out = vec![0i32; r * c];
+        for i in 0..r {
+            let (s1i, zpi) = (s1v.at(i), zpv.at(i));
+            for j in 0..c {
+                let k = i * c + j;
+                let up = if rectified_sigmoid(vv[k]) >= 0.5 { 1.0 } else { 0.0 };
+                let n = (wv[k] / s1i).floor() + up + zpi;
+                out[k] = n.clamp(qmin, qmax).round() as i32;
+            }
+        }
+        Tensor::from_i32(out, &[r, c])
+    }
+
+    fn backward(
+        &self,
+        w: &Tensor,
+        p: &SlotParams,
+        g: &Tensor,
+        qmin: f32,
+        qmax: f32,
+        beta: f64,
+    ) -> Result<FqGrads> {
+        if w.shape() != g.shape() {
+            bail!("adaround backward: w {:?} vs g {:?}", w.shape(), g.shape());
+        }
+        let (r, c, wv, vv, s1v, zpv) = unpack(w, p)?;
+        let gv = g.as_f32()?;
+        let beta = beta as f32;
+        let mut dv = vec![0.0f32; r * c];
+        for i in 0..r {
+            let (s1i, zpi) = (s1v.at(i), zpv.at(i));
+            for j in 0..c {
+                let k = i * c + j;
+                let sig = 1.0 / (1.0 + (-vv[k]).exp());
+                let hraw = 1.2 * sig - 0.1;
+                // h′ gates to zero where the rectifier is active — both the
+                // task gradient and the regularizer flow through h(V)
+                if hraw <= 0.0 || hraw >= 1.0 {
+                    continue;
+                }
+                let hprime = 1.2 * sig * (1.0 - sig);
+                let n = (wv[k] / s1i).floor() + hraw + zpi;
+                let inside = n >= qmin && n <= qmax;
+                let mut d = if inside { gv[k] * s1i * hprime } else { 0.0 };
+                // ∂/∂V [ λ·(1 − |2h−1|^β) ] = −λ·2β·|2h−1|^{β−1}·sign(2h−1)·h′
+                let t = 2.0 * hraw - 1.0;
+                if t != 0.0 {
+                    d -= REG_WEIGHT * 2.0 * beta * t.abs().powf(beta - 1.0) * t.signum() * hprime;
+                }
+                dv[k] = d;
+            }
+        }
+        Ok(FqGrads {
+            ds1: Tensor::zeros(p.s1.shape()),
+            ds2: None,
+            ds3: None,
+            ds4: None,
+            dv: Some(Tensor::from_f32(dv, &[r, c])?),
+        })
+    }
+}
+
+/// Validate shapes and borrow the f32 views every AdaRound kernel needs.
+type Unpacked<'a> = (
+    usize,
+    usize,
+    &'a [f32],
+    &'a [f32],
+    super::RowView<'a>,
+    super::RowView<'a>,
+);
+
+fn unpack<'a>(w: &'a Tensor, p: &SlotParams<'a>) -> Result<Unpacked<'a>> {
+    if w.ndim() != 2 {
+        bail!("adaround: weights must be 2-D, got {:?}", w.shape());
+    }
+    let (r, c) = (w.shape()[0], w.shape()[1]);
+    let v = p
+        .v
+        .ok_or_else(|| anyhow!("adaround: pack has no V slot"))?;
+    if v.shape() != w.shape() {
+        bail!("adaround: V shape {:?} vs W shape {:?}", v.shape(), w.shape());
+    }
+    Ok((r, c, w.as_f32()?, v.as_f32()?, row_scale(p.s1, r, "s1")?, row_scale(p.zp, r, "zp")?))
+}
+
+/// RTN-equivalent init for `V`: `h(v0) = w/s1 − ⌊w/s1⌋` (the fractional
+/// remainder), inverted through the rectified sigmoid — so at init AdaRound
+/// rounds exactly like RTN-with-floor+fraction and learning starts from the
+/// same place the other schemes do.  Clamped so `h` starts strictly inside
+/// (0, 1) and gradients flow everywhere.
+pub fn init_v(w: &Tensor, s1: &Tensor) -> Result<Tensor> {
+    if w.ndim() != 2 {
+        bail!("adaround init_v: weights must be 2-D, got {:?}", w.shape());
+    }
+    let (r, c) = (w.shape()[0], w.shape()[1]);
+    let wv = w.as_f32()?;
+    let s1v = row_scale(s1, r, "s1")?;
+    let mut out = vec![0.0f32; r * c];
+    for i in 0..r {
+        let s1i = s1v.at(i);
+        for j in 0..c {
+            let k = i * c + j;
+            let ratio = wv[k] / s1i;
+            let h = (ratio - ratio.floor()).clamp(0.01, 0.99);
+            // invert h = 1.2σ(v) − 0.1  →  v = logit((h + 0.1)/1.2)
+            let p = (h + 0.1) / 1.2;
+            out[k] = (p / (1.0 - p)).ln();
+        }
+    }
+    Tensor::from_f32(out, &[r, c])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rectified_sigmoid_saturates() {
+        assert_eq!(rectified_sigmoid(-20.0), 0.0);
+        assert_eq!(rectified_sigmoid(20.0), 1.0);
+        let mid = rectified_sigmoid(0.0);
+        assert!((mid - 0.5).abs() < 1e-6, "h(0) = {mid}");
+    }
+
+    #[test]
+    fn init_v_reproduces_rtn_fraction() {
+        let w = Tensor::from_f32(vec![0.31, -0.62, 0.08, 1.27], &[2, 2]).unwrap();
+        let s1 = Tensor::from_f32(vec![0.1, 0.2], &[2, 1]).unwrap();
+        let v = init_v(&w, &s1).unwrap();
+        let wv = w.as_f32().unwrap();
+        let s1v = [0.1f32, 0.2];
+        for i in 0..2 {
+            for j in 0..2 {
+                let k = i * 2 + j;
+                let ratio = wv[k] / s1v[i];
+                let want = (ratio - ratio.floor()).clamp(0.01, 0.99);
+                let got = rectified_sigmoid(v.as_f32().unwrap()[k]);
+                assert!((got - want).abs() < 1e-5, "h(v0) {got} vs fraction {want}");
+            }
+        }
+    }
+}

@@ -1,0 +1,258 @@
+//! FlexRound (Lee et al., ICML 2023) as a [`Rounding`] impl — learnable
+//! rounding by **element-wise division** (Eq. 2):
+//!
+//! ```text
+//!   Ŵ = s1 · ( clip( ⌊ W / (s1 ⊙ S2 ⊙ s3 ⊙ s4) ⌉ + z, qmin, qmax ) − z )
+//! ```
+//!
+//! The backward pass is the closed-form straight-through estimator of
+//! Proposition 3.1, mirrored line-for-line from
+//! `python/compile/kernels/ref.py::flexround_bwd`, including the
+//! reciprocal-rule gradient `∂Ŵ/∂S2 ∝ −W/(S2²·…)` that lets FlexRound
+//! exploit weight magnitudes:
+//!
+//! ```text
+//!   r        = W / (s1 ⊙ S2 ⊙ s3 ⊙ s4)
+//!   inside   = 1[qmin ≤ ⌊r⌉ + z ≤ qmax]
+//!   ∂Ŵ/∂s1   = (n_c − z) − inside · r          (grid-size chain rule)
+//!   common   = s1 · inside · (−r)
+//!   ∂Ŵ/∂S2   = common / S2                      (reciprocal rule)
+//!   ∂Ŵ/∂s3   = Σ_cols common / s3
+//!   ∂Ŵ/∂s4   = Σ_rows common / s4
+//! ```
+//!
+//! One impl serves four method strings: `flexround` (everything learns),
+//! `flexround_fixed_s1` (s1 frozen by the manifest pack), `flexround_no_s34`
+//! (s3/s4 slots dropped → constant one), and `rtn` (no divisor factors at
+//! all — the kernel with every factor absent *is* round-to-nearest).
+//!
+//! These kernels moved here verbatim from `recon/mod.rs` in the trait
+//! refactor; `recon::{fq_forward, fq_codes, fq_backward}` re-export them and
+//! the golden-fixture test (`tests/native_recon.rs`) pins bit-identity.
+
+use super::{opt_full, row_scale, FqGrads, Rounding, SlotParams};
+use crate::manifest::{PackEntry, UnitInfo};
+use crate::recon::{round_ties_even, LayerSlots};
+use crate::tensor::Tensor;
+use crate::Result;
+use anyhow::{anyhow, bail};
+
+/// The FlexRound scheme (also serving `rtn` and the ablations).
+pub struct FlexRound;
+
+impl Rounding for FlexRound {
+    fn name(&self) -> &'static str {
+        "flexround"
+    }
+
+    /// Entry names follow the build-path convention `"{layer}.{key}"`.
+    /// `None` slots mean "constant one" (`rtn` has no S2 at all, the
+    /// `flexround_no_s34` ablation freezes s3/s4 to ones).
+    fn map_pack(
+        &self,
+        unit: &UnitInfo,
+        method: &str,
+        entries: &[PackEntry],
+    ) -> Result<Vec<LayerSlots>> {
+        let drop_s34 = method == "flexround_no_s34";
+        let mut out = Vec::with_capacity(unit.layers.len());
+        for (li, layer) in unit.layers.iter().enumerate() {
+            let find = |key: &str| -> Option<usize> {
+                let want = format!("{}.{key}", layer.name);
+                entries.iter().position(|e| e.name == want)
+            };
+            let s1 = find("s1")
+                .ok_or_else(|| anyhow!("pack has no {}.s1 entry", layer.name))?;
+            let zp = find("zp")
+                .ok_or_else(|| anyhow!("pack has no {}.zp entry", layer.name))?;
+            out.push(LayerSlots {
+                layer: li,
+                s1,
+                zp,
+                s2: find("s2"),
+                s3: if drop_s34 { None } else { find("s3") },
+                s4: if drop_s34 { None } else { find("s4") },
+                v: None,
+            });
+        }
+        super::reject_act_entries(entries)?;
+        Ok(out)
+    }
+
+    fn forward(&self, w: &Tensor, p: &SlotParams, qmin: f32, qmax: f32) -> Result<Tensor> {
+        fq_forward(w, p.s1, p.s2, p.s3, p.s4, p.zp, qmin, qmax)
+    }
+
+    fn codes(&self, w: &Tensor, p: &SlotParams, qmin: f32, qmax: f32) -> Result<Tensor> {
+        fq_codes(w, p.s1, p.s2, p.s3, p.s4, p.zp, qmin, qmax)
+    }
+
+    fn backward(
+        &self,
+        w: &Tensor,
+        p: &SlotParams,
+        g: &Tensor,
+        qmin: f32,
+        qmax: f32,
+        _beta: f64,
+    ) -> Result<FqGrads> {
+        fq_backward(w, p.s1, p.s2, p.s3, p.s4, p.zp, g, qmin, qmax)
+    }
+}
+
+/// FlexRound fake-quant forward: `Ŵ` with `w: (r, c)`, `s1`/`zp`: per-tensor
+/// or per-row, `s2: (r, c)`, `s3: (r, 1)`, `s4: (1, c)`; `None` factors are
+/// ones (so all-None reproduces RTN).
+pub fn fq_forward(
+    w: &Tensor,
+    s1: &Tensor,
+    s2: Option<&Tensor>,
+    s3: Option<&Tensor>,
+    s4: Option<&Tensor>,
+    zp: &Tensor,
+    qmin: f32,
+    qmax: f32,
+) -> Result<Tensor> {
+    fq_kernel(w, s1, s2, s3, s4, zp, qmin, qmax, false)
+}
+
+/// Integer grid codes after learning, as an **i32 tensor** — the packed
+/// export path (`infer::packed` bit-packs these directly) and the
+/// grid-shift analysis input (which reads them via `to_f32_vec`).
+pub fn fq_codes(
+    w: &Tensor,
+    s1: &Tensor,
+    s2: Option<&Tensor>,
+    s3: Option<&Tensor>,
+    s4: Option<&Tensor>,
+    zp: &Tensor,
+    qmin: f32,
+    qmax: f32,
+) -> Result<Tensor> {
+    let t = fq_kernel(w, s1, s2, s3, s4, zp, qmin, qmax, true)?;
+    let v: Vec<i32> = t.as_f32()?.iter().map(|&x| x.round() as i32).collect();
+    Tensor::from_i32(v, t.shape())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn fq_kernel(
+    w: &Tensor,
+    s1: &Tensor,
+    s2: Option<&Tensor>,
+    s3: Option<&Tensor>,
+    s4: Option<&Tensor>,
+    zp: &Tensor,
+    qmin: f32,
+    qmax: f32,
+    codes: bool,
+) -> Result<Tensor> {
+    if w.ndim() != 2 {
+        bail!("fq: weights must be 2-D, got {:?}", w.shape());
+    }
+    let (r, c) = (w.shape()[0], w.shape()[1]);
+    let wv = w.as_f32()?;
+    let s1v = row_scale(s1, r, "s1")?;
+    let zpv = row_scale(zp, r, "zp")?;
+    let s2v = opt_full(s2, r * c, "s2")?;
+    let s3t = s3.map(|t| row_scale(t, r, "s3")).transpose()?;
+    let s4v = opt_full(s4, c, "s4")?;
+    let mut out = vec![0.0f32; r * c];
+    for i in 0..r {
+        let s1i = s1v.at(i);
+        let zpi = zpv.at(i);
+        let s3i = s3t.as_ref().map(|t| t.at(i)).unwrap_or(1.0);
+        for j in 0..c {
+            let k = i * c + j;
+            let div = s1i
+                * s2v.map(|v| v[k]).unwrap_or(1.0)
+                * s3i
+                * s4v.map(|v| v[j]).unwrap_or(1.0);
+            let n = round_ties_even(wv[k] / div) + zpi;
+            let n_c = n.clamp(qmin, qmax);
+            out[k] = if codes { n_c } else { s1i * (n_c - zpi) };
+        }
+    }
+    Tensor::from_f32(out, &[r, c])
+}
+
+/// Closed-form STE backward (Proposition 3.1).  See the module doc for the
+/// gradient table; `ds1` collapses to the parameter's own shape (per-tensor
+/// `(1,1)` or per-row `(r,1)`).
+#[allow(clippy::too_many_arguments)]
+pub fn fq_backward(
+    w: &Tensor,
+    s1: &Tensor,
+    s2: Option<&Tensor>,
+    s3: Option<&Tensor>,
+    s4: Option<&Tensor>,
+    zp: &Tensor,
+    g: &Tensor,
+    qmin: f32,
+    qmax: f32,
+) -> Result<FqGrads> {
+    if w.shape() != g.shape() || w.ndim() != 2 {
+        bail!("fq_backward: w {:?} vs g {:?}", w.shape(), g.shape());
+    }
+    let (r, c) = (w.shape()[0], w.shape()[1]);
+    let wv = w.as_f32()?;
+    let gv = g.as_f32()?;
+    let s1v = row_scale(s1, r, "s1")?;
+    let zpv = row_scale(zp, r, "zp")?;
+    let s2v = opt_full(s2, r * c, "s2")?;
+    let s3t = s3.map(|t| row_scale(t, r, "s3")).transpose()?;
+    let s4v = opt_full(s4, c, "s4")?;
+
+    let mut ds1_rows = vec![0.0f32; r];
+    let mut ds2 = s2v.map(|_| vec![0.0f32; r * c]);
+    let mut ds3_rows = s3t.as_ref().map(|_| vec![0.0f32; r]);
+    let mut ds4_cols = s4v.map(|_| vec![0.0f32; c]);
+
+    for i in 0..r {
+        let s1i = s1v.at(i);
+        let zpi = zpv.at(i);
+        let s3i = s3t.as_ref().map(|t| t.at(i)).unwrap_or(1.0);
+        for j in 0..c {
+            let k = i * c + j;
+            let s2k = s2v.map(|v| v[k]).unwrap_or(1.0);
+            let s4j = s4v.map(|v| v[j]).unwrap_or(1.0);
+            let div = s1i * s2k * s3i * s4j;
+            let ratio = wv[k] / div;
+            let n = round_ties_even(ratio) + zpi;
+            let inside = if n >= qmin && n <= qmax { 1.0f32 } else { 0.0 };
+            let n_c = n.clamp(qmin, qmax);
+            ds1_rows[i] += gv[k] * ((n_c - zpi) - inside * ratio);
+            let common = gv[k] * s1i * inside * (-ratio);
+            if let Some(d) = ds2.as_mut() {
+                d[k] = common / s2k;
+            }
+            if let Some(d) = ds3_rows.as_mut() {
+                d[i] += common / s3i;
+            }
+            if let Some(d) = ds4_cols.as_mut() {
+                d[j] += common / s4j;
+            }
+        }
+    }
+
+    let ds1 = if s1.len() == 1 {
+        Tensor::from_f32(vec![ds1_rows.iter().sum()], s1.shape())?
+    } else {
+        Tensor::from_f32(ds1_rows, s1.shape())?
+    };
+    Ok(FqGrads {
+        ds1,
+        ds2: match (ds2, s2) {
+            (Some(d), Some(t)) => Some(Tensor::from_f32(d, t.shape())?),
+            _ => None,
+        },
+        ds3: match (ds3_rows, s3) {
+            (Some(d), Some(t)) => Some(Tensor::from_f32(d, t.shape())?),
+            _ => None,
+        },
+        ds4: match (ds4_cols, s4) {
+            (Some(d), Some(t)) => Some(Tensor::from_f32(d, t.shape())?),
+            _ => None,
+        },
+        dv: None,
+    })
+}

@@ -1,0 +1,291 @@
+//! Pluggable rounding schemes behind one [`Rounding`] trait
+//! (DESIGN.md §Rounding-Schemes).
+//!
+//! PR 1–8 grew the reconstruction stack around exactly one learner —
+//! FlexRound's element-wise division (Eq. 2) — with its forward/backward
+//! hard-wired through `recon`, `block`, and the coordinator.  This module is
+//! the seam that lets the same Adam loop, block pipeline, packed export, and
+//! sweep harness drive *any* learnable rounding scheme:
+//!
+//! * [`flexround::FlexRound`] — the paper's scheme (and the `rtn` /
+//!   `flexround_fixed_s1` / `flexround_no_s34` ablations, which are the same
+//!   kernel with factors frozen or absent).  Routing FlexRound through the
+//!   trait is **bit-identical** to the pre-trait code: the kernels moved
+//!   here verbatim and the golden-fixture test pins them.
+//! * [`adaround::AdaRound`] — the additive-perturbation baseline
+//!   ("Up or Down? Adaptive Rounding for Post-Training Quantization",
+//!   Nagel et al., 2020): a sigmoid-relaxed soft rounding `h(V)` learned
+//!   under the annealed rounding regularizer, hard-rounded at export.
+//! * [`actquant::ActQuant`] — per-tensor *static* activation quantization
+//!   calibrated from reconstruction batches; not a `Rounding` impl (nothing
+//!   is learned) but the piece that turns a 4-bit weight pack into a W4A8
+//!   artifact served by the integer-domain fused kernels.
+//!
+//! The scheme travels as `&'static dyn Rounding` (resolved once from the
+//! method string by [`scheme_for`]), so threading it through
+//! [`super::ReconSettings`], the block pipeline, and the backends costs one
+//! pointer — no per-element dispatch: every trait method works on whole
+//! weight tensors.
+
+pub mod actquant;
+pub mod adaround;
+pub mod flexround;
+
+pub use actquant::ActQuant;
+pub use adaround::AdaRound;
+pub use flexround::FlexRound;
+
+use super::LayerSlots;
+use crate::manifest::{PackEntry, UnitInfo};
+use crate::tensor::Tensor;
+use crate::Result;
+use anyhow::bail;
+
+/// One layer's rounding parameters, resolved from a flat parameter pack via
+/// [`LayerSlots::resolve`].  `None` factors mean "constant one" (FlexRound
+/// ablations) or "not used by this scheme" (AdaRound has no `S2`/`s3`/`s4`;
+/// FlexRound has no `V`).
+pub struct SlotParams<'a> {
+    /// per-row (or per-tensor) grid scale — every scheme has one
+    pub s1: &'a Tensor,
+    /// zero point, same broadcast as `s1`
+    pub zp: &'a Tensor,
+    /// FlexRound's full-shape divisor factor
+    pub s2: Option<&'a Tensor>,
+    /// FlexRound's per-row divisor factor
+    pub s3: Option<&'a Tensor>,
+    /// FlexRound's per-column divisor factor
+    pub s4: Option<&'a Tensor>,
+    /// AdaRound's continuous rounding variable (shape of `W`)
+    pub v: Option<&'a Tensor>,
+}
+
+/// STE cotangents for the learnable factors, given the output cotangent `g`
+/// (shape of `w`).  Shapes mirror the parameters; `ds1` collapses to the
+/// parameter's own shape (per-tensor `(1,1)` or per-row `(r,1)`).  Schemes
+/// fill only the slots they own: FlexRound sets `ds1`/`ds2`/`ds3`/`ds4`,
+/// AdaRound sets `dv` (its `s1` is frozen, `ds1` is zeros).
+pub struct FqGrads {
+    pub ds1: Tensor,
+    pub ds2: Option<Tensor>,
+    pub ds3: Option<Tensor>,
+    pub ds4: Option<Tensor>,
+    pub dv: Option<Tensor>,
+}
+
+/// A learnable rounding scheme: how weights round onto the integer grid
+/// during reconstruction, how the learned rounding differentiates, and how
+/// it exports to packed integer codes.
+///
+/// Contract every implementation must honor (pinned by the conformance
+/// suite in `tests/rounding.rs`):
+///
+/// * `codes` lie on the integer grid `[qmin, qmax]` at every bit-width;
+/// * `export` computes the grid **once**: `Ŵ = s1 · (codes − zp)` is derived
+///   from the same codes the packer writes, so a scheme cannot desync its
+///   exported weights from its exported codes;
+/// * at convergence (rounding decisions saturated), the training-time
+///   `forward` equals the exported `Ŵ` — soft rounding must collapse to the
+///   hard export it claims to be learning.
+pub trait Rounding: Sync + Send {
+    /// Scheme label for metrics, logs, and bench rows.
+    fn name(&self) -> &'static str;
+
+    /// Map a pack-entry list onto per-layer slots for `method` (a scheme
+    /// may serve several method strings — FlexRound also handles `rtn` and
+    /// the ablations, which differ only in which slots exist / learn).
+    fn map_pack(
+        &self,
+        unit: &UnitInfo,
+        method: &str,
+        entries: &[PackEntry],
+    ) -> Result<Vec<LayerSlots>>;
+
+    /// Training-time fake-quant forward: `Ŵ` with the scheme's current
+    /// (possibly soft) rounding decisions.
+    fn forward(&self, w: &Tensor, p: &SlotParams, qmin: f32, qmax: f32) -> Result<Tensor>;
+
+    /// Integer grid codes as an **i32 tensor** — hard rounding decisions
+    /// (the packed export bit-packs these directly).
+    fn codes(&self, w: &Tensor, p: &SlotParams, qmin: f32, qmax: f32) -> Result<Tensor>;
+
+    /// Cotangents of the learnable factors given the output cotangent `g`.
+    /// `beta` is the annealed rounding-regularizer temperature
+    /// ([`beta_schedule`]); FlexRound's closed-form STE ignores it.
+    fn backward(
+        &self,
+        w: &Tensor,
+        p: &SlotParams,
+        g: &Tensor,
+        qmin: f32,
+        qmax: f32,
+        beta: f64,
+    ) -> Result<FqGrads>;
+
+    /// Export `(Ŵ, codes)` for packing and the figure pipeline.  The grid is
+    /// computed exactly once: `codes` via [`Rounding::codes`], then
+    /// `Ŵ = s1 · (codes − zp)` derived from those same codes.
+    fn export(&self, w: &Tensor, p: &SlotParams, qmin: f32, qmax: f32) -> Result<(Tensor, Tensor)> {
+        let codes = self.codes(w, p, qmin, qmax)?;
+        let what = scale_codes(&codes, p.s1, p.zp)?;
+        Ok((what, codes))
+    }
+}
+
+/// Resolve the scheme implementation for a method string.  Static objects —
+/// the scheme travels as a plain reference.
+pub fn scheme_for(method: &str) -> Result<&'static dyn Rounding> {
+    match method {
+        "rtn" | "flexround" | "flexround_fixed_s1" | "flexround_no_s34" => Ok(&FlexRound),
+        "adaround" => Ok(&AdaRound),
+        other => bail!(
+            "native backend has no rounding scheme for method {other:?} \
+             (supported: rtn, flexround, flexround_fixed_s1, flexround_no_s34, adaround); \
+             use --backend pjrt"
+        ),
+    }
+}
+
+/// Annealing schedule for the rounding-regularizer temperature β ("Up or
+/// Down?", §4): hold `BETA_HI` through the warmup fraction, then cosine-decay
+/// to `BETA_LO`.  High β leaves `h(V)` free to move; low β forces the
+/// rounding decisions to commit to 0/1 so the soft forward collapses onto
+/// the hard export.  This is the canonical copy; `coordinator::beta_schedule`
+/// delegates here.
+pub fn beta_schedule(t: usize, iters: usize) -> f64 {
+    const BETA_HI: f64 = 20.0;
+    const BETA_LO: f64 = 2.0;
+    const WARMUP: f64 = 0.2;
+    if iters == 0 {
+        return BETA_LO;
+    }
+    let warm = (iters as f64 * WARMUP).floor() as usize;
+    if t < warm {
+        return BETA_HI;
+    }
+    let span = (iters - warm).max(1) as f64;
+    let frac = ((t - warm) as f64 / span).clamp(0.0, 1.0);
+    BETA_LO + 0.5 * (BETA_HI - BETA_LO) * (1.0 + (std::f64::consts::PI * frac).cos())
+}
+
+/// `Ŵ = s1 · (codes − zp)` with `s1`/`zp` per-tensor or per-row — the single
+/// codes→weights scaling every scheme's export shares.
+pub fn scale_codes(codes: &Tensor, s1: &Tensor, zp: &Tensor) -> Result<Tensor> {
+    if codes.ndim() != 2 {
+        bail!("scale_codes: codes must be 2-D, got {:?}", codes.shape());
+    }
+    let (r, c) = (codes.shape()[0], codes.shape()[1]);
+    let cv = codes.to_f32_vec();
+    let s1v = row_scale(s1, r, "s1")?;
+    let zpv = row_scale(zp, r, "zp")?;
+    let mut out = vec![0.0f32; r * c];
+    for i in 0..r {
+        let (s1i, zpi) = (s1v.at(i), zpv.at(i));
+        for j in 0..c {
+            let k = i * c + j;
+            out[k] = s1i * (cv[k] - zpi);
+        }
+    }
+    Tensor::from_f32(out, &[r, c])
+}
+
+// ---------------------------------------------------------------------------
+// Shared parameter views (per-row broadcast, full-shape factors)
+// ---------------------------------------------------------------------------
+
+/// A per-row (or broadcast per-tensor) factor view.
+pub(crate) struct RowView<'a> {
+    v: &'a [f32],
+    broadcast: bool,
+}
+
+impl RowView<'_> {
+    #[inline]
+    pub(crate) fn at(&self, row: usize) -> f32 {
+        if self.broadcast {
+            self.v[0]
+        } else {
+            self.v[row]
+        }
+    }
+}
+
+pub(crate) fn row_scale<'a>(t: &'a Tensor, rows: usize, what: &str) -> Result<RowView<'a>> {
+    let v = t.as_f32()?;
+    if v.len() != 1 && v.len() != rows {
+        bail!("{what}: expected 1 or {rows} values, got {}", v.len());
+    }
+    Ok(RowView { v, broadcast: v.len() == 1 })
+}
+
+pub(crate) fn opt_full<'a>(t: Option<&'a Tensor>, n: usize, what: &str) -> Result<Option<&'a [f32]>> {
+    match t {
+        None => Ok(None),
+        Some(t) => {
+            let v = t.as_f32()?;
+            if v.len() != n {
+                bail!("{what}: expected {n} values, got {}", v.len());
+            }
+            Ok(Some(v))
+        }
+    }
+}
+
+/// Reject "wa"-mode packs: LSQ activation-step entries mean the pack was
+/// built for the PJRT path's learned activation quantization, which no
+/// native scheme executes.  (Static activation quantization — [`ActQuant`] —
+/// is attached at pack time, not carried as pack entries.)
+pub(crate) fn reject_act_entries(entries: &[PackEntry]) -> Result<()> {
+    for e in entries {
+        if e.name.starts_with("act") {
+            bail!(
+                "pack entry {:?}: activation quantization (\"wa\" mode) is not \
+                 supported by the native backend; use --backend pjrt",
+                e.name
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_lookup() {
+        assert_eq!(scheme_for("flexround").unwrap().name(), "flexround");
+        assert_eq!(scheme_for("rtn").unwrap().name(), "flexround");
+        assert_eq!(scheme_for("flexround_no_s34").unwrap().name(), "flexround");
+        assert_eq!(scheme_for("adaround").unwrap().name(), "adaround");
+        assert!(scheme_for("lsq").is_err());
+    }
+
+    #[test]
+    fn beta_anneals_and_is_monotone_after_warmup() {
+        let iters = 100;
+        assert_eq!(beta_schedule(1, iters), 20.0);
+        assert_eq!(beta_schedule(19, iters), 20.0);
+        let end = beta_schedule(iters, iters);
+        assert!((end - 2.0).abs() < 1e-9, "β must land at BETA_LO, got {end}");
+        let mut prev = beta_schedule(20, iters);
+        for t in 21..=iters {
+            let b = beta_schedule(t, iters);
+            assert!(b <= prev + 1e-12, "β must not increase: t={t} {b} > {prev}");
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn scale_codes_per_row_and_broadcast() {
+        let codes = Tensor::from_i32(vec![1, 2, -3, 4], &[2, 2]).unwrap();
+        let s1 = Tensor::from_f32(vec![0.5, 2.0], &[2, 1]).unwrap();
+        let zp = Tensor::from_f32(vec![1.0, 0.0], &[2, 1]).unwrap();
+        let w = scale_codes(&codes, &s1, &zp).unwrap();
+        assert_eq!(w.as_f32().unwrap(), &[0.0, 0.5, -6.0, 8.0]);
+        let s1b = Tensor::from_f32(vec![2.0], &[1, 1]).unwrap();
+        let zpb = Tensor::zeros(&[1, 1]);
+        let w = scale_codes(&codes, &s1b, &zpb).unwrap();
+        assert_eq!(w.as_f32().unwrap(), &[2.0, 4.0, -6.0, 8.0]);
+    }
+}

@@ -1,5 +1,7 @@
-//! Native engine: pure-Rust FlexRound reconstruction (no artifacts, no
-//! PJRT).  A thin [`Backend`] shell over [`crate::recon`]; see DESIGN.md
+//! Native engine: pure-Rust learnable-rounding reconstruction (no
+//! artifacts, no PJRT).  A thin [`Backend`] shell over [`crate::recon`] —
+//! the rounding scheme (FlexRound, AdaRound, …) is resolved per task from
+//! the method string via [`recon::scheme_for`]; see DESIGN.md
 //! §Native-Backend for the execution model and its limits (weight-only
 //! mode, contraction-shaped units).
 
@@ -150,6 +152,7 @@ impl Native {
             workers,
             verbose: task.verbose,
             tag: format!("{}/{}", cx.model.name, cx.unit.name),
+            scheme: recon::scheme_for(&task.method)?,
         };
         let mut rng = task.rng.clone();
         let t0 = Instant::now();
@@ -212,13 +215,14 @@ impl Backend for Native {
         if q.mode != "w" {
             bail!("native backend supports weight-only mode; use --backend pjrt for \"wa\"");
         }
+        let scheme = recon::scheme_for(q.method)?;
         let slots = recon::map_pack(cx.unit, q.method, q.entries)?;
         let (qmin, qmax) = qrange(q.bits_w, cx.model.symmetric);
         self.stats.lock().expect("stats lock").forwards += chunks.len() as u64;
         if cx.unit.kind == "transformer_block" {
             let def = self.block_def(cx)?;
             // Ŵ once per layer; only attention + contractions repeat per chunk.
-            let whats = block::block_whats(&def, &slots, q.params, qmin, qmax)?;
+            let whats = block::block_whats(scheme, &def, &slots, q.params, qmin, qmax)?;
             let refs: Vec<&Tensor> = whats.iter().collect();
             return chunks
                 .iter()
@@ -227,7 +231,7 @@ impl Backend for Native {
         }
         let layers = stack_layer_defs(cx)?;
         // Ŵ once per layer; only the contractions repeat per chunk.
-        let whats = recon::unit_whats(&layers, &slots, q.params, qmin, qmax)?;
+        let whats = recon::unit_whats(scheme, &layers, &slots, q.params, qmin, qmax)?;
         chunks
             .iter()
             .map(|c| recon::unit_forward_what(&layers, &whats, c, self.workers))
@@ -252,16 +256,18 @@ impl Backend for Native {
 
     fn export_qw(&self, cx: &UnitCtx, q: &QView) -> Result<Vec<(Tensor, Tensor)>> {
         let layers = layer_weight_defs(cx)?;
+        let scheme = recon::scheme_for(q.method)?;
         let slots = recon::map_pack(cx.unit, q.method, q.entries)?;
         let (qmin, qmax) = qrange(q.bits_w, cx.model.symmetric);
-        recon::export_qw(&layers, &slots, q.params, qmin, qmax)
+        recon::export_qw(scheme, &layers, &slots, q.params, qmin, qmax)
     }
 
     /// Codes without the Ŵ materialization (half the export work).
     fn export_codes(&self, cx: &UnitCtx, q: &QView) -> Result<Vec<Tensor>> {
         let layers = layer_weight_defs(cx)?;
+        let scheme = recon::scheme_for(q.method)?;
         let slots = recon::map_pack(cx.unit, q.method, q.entries)?;
         let (qmin, qmax) = qrange(q.bits_w, cx.model.symmetric);
-        recon::export_codes(&layers, &slots, q.params, qmin, qmax)
+        recon::export_codes(scheme, &layers, &slots, q.params, qmin, qmax)
     }
 }

@@ -54,6 +54,10 @@ pub fn run_sweep(cfg: &Config, man: &Manifest, rt: &dyn Backend, rep: &Reporter)
         sessions.insert(m.clone(), Session::open(rt, man, m)?);
     }
 
+    // per-unit reconstruction losses, keyed (model, unit-with-bits) →
+    // method → final loss; fuels the scheme-comparison companion table
+    let mut unit_losses: BTreeMap<(String, String), BTreeMap<String, f64>> = BTreeMap::new();
+
     // full-precision row
     {
         let mut cells = vec!["Full-precision".to_string(), "32/32".to_string()];
@@ -96,6 +100,12 @@ pub fn run_sweep(cfg: &Config, man: &Manifest, rt: &dyn Backend, rep: &Reporter)
                         plan.verbose = verbose;
                         plan.parallel_units = parallel_units;
                         let r = sess.quantize(&plan)?;
+                        for u in &r.units {
+                            unit_losses
+                                .entry((m.clone(), format!("{} W{b}", u.unit)))
+                                .or_default()
+                                .insert(method.clone(), u.final_loss);
+                        }
                         let met = eval_for(sess, Some(&r))?;
                         if verbose {
                             eprintln!("  [{id}] {m} {setting}+{method} W{b}: {met:?}");
@@ -110,6 +120,31 @@ pub fn run_sweep(cfg: &Config, man: &Manifest, rt: &dyn Backend, rep: &Reporter)
 
     rep.table(&id, &table)?;
     println!("sweep {id}: {} rows → reports/{id}.md", table.rows.len());
+
+    // companion table: one row per (model, unit), one column per rounding
+    // scheme — the FlexRound-vs-AdaRound comparison at reconstruction-loss
+    // granularity, from the same run (no re-quantization)
+    if methods.len() > 1 && !unit_losses.is_empty() {
+        let uid = format!("{id}-units");
+        let mut cols = vec!["Model".to_string(), "Unit".to_string()];
+        cols.extend(methods.iter().map(|m| pretty_method(m).to_string()));
+        let mut ut = Table::new(
+            &format!("{title} — per-unit reconstruction loss by scheme"),
+            &cols.iter().map(String::as_str).collect::<Vec<_>>(),
+        );
+        for ((model, unit), per_method) in &unit_losses {
+            let mut cells = vec![model.clone(), unit.clone()];
+            for method in &methods {
+                cells.push(match per_method.get(method) {
+                    Some(l) => format!("{l:.4e}"),
+                    None => "-".to_string(),
+                });
+            }
+            ut.row(cells);
+        }
+        rep.table(&uid, &ut)?;
+        println!("sweep {uid}: {} units → reports/{uid}.md", ut.rows.len());
+    }
     Ok(())
 }
 

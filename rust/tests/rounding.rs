@@ -1,0 +1,568 @@
+//! Rounding-scheme integration tests (DESIGN.md §Rounding-Schemes):
+//!
+//! * trait conformance — every [`Rounding`] impl must emit codes on the
+//!   integer grid at 2/3/4/8 bits, export `Ŵ` derived from those same
+//!   codes, and collapse its training-time forward onto the hard export at
+//!   convergence;
+//! * AdaRound backward vs finite differences — the same frozen-offset
+//!   surrogate discipline the FlexRound STE check uses, extended with the
+//!   annealed rounding regularizer;
+//! * AdaRound end-to-end — reconstruction through the shared Adam loop must
+//!   not leave the hard export worse than RTN, and a [`Session::quantize`]
+//!   run resolves its init pack through the flexround-grid fallback;
+//! * the W4A8 deployment round trip — `packed_model_with_acts` → `.fxt` on
+//!   disk → reload → `Engine::forward` runs the integer-domain fused kernel
+//!   within 1e-4 of the f32 fake-quant reference.
+
+use flexround::coordinator::{Plan, Session};
+use flexround::infer::{Engine, PackedModel};
+use flexround::manifest::{LayerInfo, Manifest, ModelInfo, PackEntry, UnitInfo};
+use flexround::recon::rounding::adaround::REG_WEIGHT;
+use flexround::recon::rounding::{beta_schedule, scale_codes, scheme_for, Rounding, SlotParams};
+use flexround::recon::{self, LayerDef, LayerSlots, ReconSettings};
+use flexround::runtime::Native;
+use flexround::tensor::{minmax_scale, qrange, Tensor};
+use flexround::util::prop::Prop;
+use flexround::util::rng::Pcg32;
+use std::collections::BTreeMap;
+
+// ---------------------------------------------------------------------------
+// Trait conformance: codes on grid, export ≡ scale_codes, forward → export
+// ---------------------------------------------------------------------------
+
+/// The contract pinned for every scheme: codes integral and inside
+/// `[qmin, qmax]`; `export` returns exactly (`scale_codes(codes)`, `codes`);
+/// and — when `converged` — the training-time forward equals the export.
+fn check_conformance(
+    scheme: &dyn Rounding,
+    w: &Tensor,
+    p: &SlotParams,
+    qmin: f32,
+    qmax: f32,
+    converged: bool,
+) {
+    let name = scheme.name();
+    let codes = scheme.codes(w, p, qmin, qmax).unwrap();
+    for &c in &codes.to_f32_vec() {
+        assert!(
+            (qmin..=qmax).contains(&c) && (c - c.round()).abs() < 1e-6,
+            "{name}: code {c} off the [{qmin}, {qmax}] grid"
+        );
+    }
+    let (what, codes2) = scheme.export(w, p, qmin, qmax).unwrap();
+    assert_eq!(
+        codes.to_f32_vec(),
+        codes2.to_f32_vec(),
+        "{name}: export codes desync from Rounding::codes"
+    );
+    let derived = scale_codes(&codes, p.s1, p.zp).unwrap();
+    let d = what.max_abs_diff(&derived).unwrap();
+    assert!(d <= 1e-6, "{name}: export Ŵ drifts {d} from s1·(codes − zp)");
+    if converged {
+        let fwd = scheme.forward(w, p, qmin, qmax).unwrap();
+        let d = fwd.max_abs_diff(&what).unwrap();
+        assert!(
+            d <= 1e-5,
+            "{name}: converged forward drifts {d} from the hard export"
+        );
+    }
+}
+
+#[test]
+fn flexround_conformance_across_bit_widths() {
+    let scheme = scheme_for("flexround").unwrap();
+    let mut rng = Pcg32::seeded(31);
+    for bits in [2u32, 3, 4, 8] {
+        let (r, c) = (6usize, 10usize);
+        let wv: Vec<f32> = (0..r * c).map(|_| rng.next_normal() * 0.5).collect();
+        let w = Tensor::from_f32(wv.clone(), &[r, c]).unwrap();
+        let s1: Vec<f32> = (0..r)
+            .map(|i| minmax_scale(&wv[i * c..(i + 1) * c], bits, true).0)
+            .collect();
+        let s1 = Tensor::from_f32(s1, &[r, 1]).unwrap();
+        let s2 = Tensor::from_f32(
+            (0..r * c).map(|_| 0.85 + 0.3 * rng.next_f32()).collect(),
+            &[r, c],
+        )
+        .unwrap();
+        let s3 = Tensor::from_f32(
+            (0..r).map(|_| 0.9 + 0.2 * rng.next_f32()).collect(),
+            &[r, 1],
+        )
+        .unwrap();
+        let s4 = Tensor::from_f32(
+            (0..c).map(|_| 0.9 + 0.2 * rng.next_f32()).collect(),
+            &[1, c],
+        )
+        .unwrap();
+        let zp = Tensor::zeros(&[r, 1]);
+        let (qmin, qmax) = qrange(bits, true);
+        let p = SlotParams {
+            s1: &s1,
+            zp: &zp,
+            s2: Some(&s2),
+            s3: Some(&s3),
+            s4: Some(&s4),
+            v: None,
+        };
+        // FlexRound's forward is hard-rounded at every step, so the
+        // forward ≡ export leg of the contract holds unconditionally
+        check_conformance(scheme, &w, &p, qmin, qmax, true);
+    }
+}
+
+#[test]
+fn adaround_conformance_across_bit_widths() {
+    let scheme = scheme_for("adaround").unwrap();
+    let mut rng = Pcg32::seeded(67);
+    for bits in [2u32, 3, 4, 8] {
+        let (r, c) = (6usize, 10usize);
+        let wv: Vec<f32> = (0..r * c).map(|_| rng.next_normal() * 0.5).collect();
+        let w = Tensor::from_f32(wv.clone(), &[r, c]).unwrap();
+        let s1: Vec<f32> = (0..r)
+            .map(|i| minmax_scale(&wv[i * c..(i + 1) * c], bits, true).0)
+            .collect();
+        let s1 = Tensor::from_f32(s1, &[r, 1]).unwrap();
+        let zp = Tensor::zeros(&[r, 1]);
+        // saturated V: every h(V) pinned at 0 or 1 — the converged state the
+        // regularizer drives training toward
+        let v = Tensor::from_f32(
+            (0..r * c).map(|_| if rng.below(2) == 0 { -20.0 } else { 20.0 }).collect(),
+            &[r, c],
+        )
+        .unwrap();
+        let (qmin, qmax) = qrange(bits, true);
+        let p = SlotParams { s1: &s1, zp: &zp, s2: None, s3: None, s4: None, v: Some(&v) };
+        check_conformance(scheme, &w, &p, qmin, qmax, true);
+
+        // mid-training V (h in the open interval): codes/export must still
+        // honor the grid contract even though the forward is soft
+        let v_soft = Tensor::from_f32(
+            (0..r * c).map(|_| (rng.next_f32() - 0.5) * 4.0).collect(),
+            &[r, c],
+        )
+        .unwrap();
+        let p = SlotParams { s1: &s1, zp: &zp, s2: None, s3: None, s4: None, v: Some(&v_soft) };
+        check_conformance(scheme, &w, &p, qmin, qmax, false);
+    }
+}
+
+#[test]
+fn adaround_conformance_on_asymmetric_grid() {
+    // nonzero zero-point: the export scaling and code clamp must both carry
+    // it (8-bit asymmetric is the activation-grid convention)
+    let scheme = scheme_for("adaround").unwrap();
+    let mut rng = Pcg32::seeded(5);
+    let (r, c) = (4usize, 7usize);
+    let w = Tensor::from_f32(
+        (0..r * c).map(|_| rng.next_normal() * 0.3 + 0.4).collect(),
+        &[r, c],
+    )
+    .unwrap();
+    let s1 = Tensor::from_f32(vec![0.01, 0.02, 0.015, 0.03], &[r, 1]).unwrap();
+    let zp = Tensor::from_f32(vec![100.0, 90.0, 120.0, 80.0], &[r, 1]).unwrap();
+    let v = Tensor::from_f32(
+        (0..r * c).map(|_| if rng.below(2) == 0 { -20.0 } else { 20.0 }).collect(),
+        &[r, c],
+    )
+    .unwrap();
+    let (qmin, qmax) = qrange(8, false);
+    let p = SlotParams { s1: &s1, zp: &zp, s2: None, s3: None, s4: None, v: Some(&v) };
+    check_conformance(scheme, &w, &p, qmin, qmax, true);
+}
+
+// ---------------------------------------------------------------------------
+// AdaRound backward vs finite differences
+// ---------------------------------------------------------------------------
+
+/// f64 surrogate of the AdaRound objective contribution:
+/// `Σ g·Ŵ(V) + λ·Σ (1 − |2h(V) − 1|^β)`.  Smooth in `V` everywhere off the
+/// rectifier and clip boundaries (the floor term is frozen — it does not
+/// depend on `V`), so central differences of this must match
+/// `AdaRound::backward`'s `dv`, which folds the regularizer in.
+#[allow(clippy::too_many_arguments)]
+fn ada_surrogate(
+    w: &[f64],
+    r: usize,
+    c: usize,
+    s1: &[f64],
+    zp: &[f64],
+    v: &[f64],
+    g: &[f64],
+    qmin: f64,
+    qmax: f64,
+    beta: f64,
+) -> f64 {
+    let mut acc = 0.0;
+    for i in 0..r {
+        for j in 0..c {
+            let k = i * c + j;
+            let sig = 1.0 / (1.0 + (-v[k]).exp());
+            let h = (1.2 * sig - 0.1).clamp(0.0, 1.0);
+            let n = (w[k] / s1[i]).floor() + h + zp[i];
+            let n_c = n.clamp(qmin, qmax);
+            acc += g[k] * s1[i] * (n_c - zp[i]);
+            let t = 2.0 * h - 1.0;
+            acc += (REG_WEIGHT as f64) * (1.0 - t.abs().powf(beta));
+        }
+    }
+    acc
+}
+
+#[test]
+fn adaround_backward_matches_finite_differences() {
+    Prop::new("adaround dv vs finite differences").cases(25).check(|rng| {
+        let (r, c) = (2 + rng.below(3) as usize, 2 + rng.below(4) as usize);
+        let wv: Vec<f32> = (0..r * c).map(|_| rng.next_normal() * 0.5).collect();
+        let s1v: Vec<f32> = (0..r).map(|_| 0.05 + 0.2 * rng.next_f32()).collect();
+        let zpv: Vec<f32> = vec![0.0; r];
+        let vv: Vec<f32> = (0..r * c).map(|_| (rng.next_f32() - 0.5) * 6.0).collect();
+        let gv: Vec<f32> = (0..r * c).map(|_| rng.next_normal()).collect();
+        let (qmin, qmax) = (-16.0f32, 15.0f32);
+        // β from the live schedule — mid-training values exercise the
+        // regularizer's |2h−1|^{β−1} factor at realistic exponents
+        let beta = beta_schedule(40 + rng.below(50) as usize, 100);
+
+        let f64v = |v: &[f32]| v.iter().map(|&x| x as f64).collect::<Vec<f64>>();
+        let (wd, s1d, zpd, vd, gd) = (f64v(&wv), f64v(&s1v), f64v(&zpv), f64v(&vv), f64v(&gv));
+
+        // skip draws where any element sits on a kink of the surrogate: the
+        // rectifier boundary (h hits 0/1), the clip boundary, or the
+        // regularizer's |2h−1| = 0 crease
+        for i in 0..r {
+            for j in 0..c {
+                let k = i * c + j;
+                let sig = 1.0 / (1.0 + (-vd[k]).exp());
+                let hraw = 1.2 * sig - 0.1;
+                if hraw < 3e-2 || hraw > 1.0 - 3e-2 {
+                    return Ok(());
+                }
+                if (2.0 * hraw - 1.0).abs() < 5e-2 {
+                    return Ok(());
+                }
+                let n = (wd[k] / s1d[i]).floor() + hraw + zpd[i];
+                if (n - qmin as f64).abs() < 2e-2 || (n - qmax as f64).abs() < 2e-2 {
+                    return Ok(());
+                }
+            }
+        }
+
+        let w = Tensor::from_f32(wv, &[r, c]).unwrap();
+        let s1 = Tensor::from_f32(s1v, &[r, 1]).unwrap();
+        let zp = Tensor::from_f32(zpv, &[r, 1]).unwrap();
+        let v = Tensor::from_f32(vv, &[r, c]).unwrap();
+        let g = Tensor::from_f32(gv, &[r, c]).unwrap();
+        let p = SlotParams { s1: &s1, zp: &zp, s2: None, s3: None, s4: None, v: Some(&v) };
+        let scheme = scheme_for("adaround").map_err(|e| e.to_string())?;
+        let fg = scheme
+            .backward(&w, &p, &g, qmin, qmax, beta)
+            .map_err(|e| e.to_string())?;
+        let dv = fg.dv.as_ref().expect("adaround fills dv");
+        let dvv = dv.as_f32().unwrap();
+        // frozen slots stay frozen
+        assert!(fg.ds1.as_f32().unwrap().iter().all(|&x| x == 0.0));
+        assert!(fg.ds2.is_none() && fg.ds3.is_none() && fg.ds4.is_none());
+
+        for k in 0..r * c {
+            let mut hi = vd.clone();
+            let mut lo = vd.clone();
+            let eps = 1e-5;
+            hi[k] += eps;
+            lo[k] -= eps;
+            let num = (ada_surrogate(&wd, r, c, &s1d, &zpd, &hi, &gd, qmin as f64, qmax as f64, beta)
+                - ada_surrogate(&wd, r, c, &s1d, &zpd, &lo, &gd, qmin as f64, qmax as f64, beta))
+                / (2.0 * eps);
+            let tol = 2e-3 * num.abs().max(dvv[k].abs() as f64).max(1.0);
+            if ((dvv[k] as f64) - num).abs() > tol {
+                return Err(format!("dv[{k}]: analytic {} vs numeric {num} (β {beta})", dvv[k]));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// AdaRound end-to-end through the shared Adam loop
+// ---------------------------------------------------------------------------
+
+#[test]
+fn adaround_reconstruction_export_not_worse_than_rtn() {
+    let p = recon::synthetic_problem_adaround(12, 24, 192, 3, 7);
+    let slots: Vec<LayerSlots> = recon::synthetic_slots_adaround();
+    let layers = [LayerDef { name: "fc", w: &p.w, bias: None, relu_after: false }];
+    let scheme = scheme_for("adaround").unwrap();
+    let cfg = ReconSettings {
+        iters: 400,
+        lr: 1e-2,
+        batch: 32,
+        qmin: p.qmin,
+        qmax: p.qmax,
+        workers: 2,
+        verbose: false,
+        tag: "test/adaround".to_string(),
+        scheme,
+    };
+    let mut rng = Pcg32::seeded(7);
+    let r = recon::reconstruct_unit(
+        &layers, &slots, &p.entries, &p.params, &p.x, &p.y, &cfg, &mut rng,
+    )
+    .unwrap();
+    assert!(r.final_loss.is_finite() && r.first_loss.is_finite());
+    assert!(
+        r.final_loss <= r.first_loss,
+        "soft loss must not regress: {} → {}",
+        r.first_loss,
+        r.final_loss
+    );
+
+    // hard-export MSE vs the RTN baseline on the same grid (init_v starts
+    // AdaRound exactly at RTN, so learning may only hold or improve it —
+    // 2% slack absorbs the rounding regularizer's pull)
+    let sp = slots[0].resolve(&r.params);
+    let (what, _) = scheme.export(&p.w, &sp, p.qmin, p.qmax).unwrap();
+    let mse_ada = p.x.matmul_nt(&what).unwrap().mse(&p.y).unwrap() as f64;
+    let what_rtn =
+        recon::fq_forward(&p.w, &p.params[0], None, None, None, &p.params[2], p.qmin, p.qmax)
+            .unwrap();
+    let mse_rtn = p.x.matmul_nt(&what_rtn).unwrap().mse(&p.y).unwrap() as f64;
+    assert!(
+        mse_ada <= mse_rtn * 1.02,
+        "adaround export MSE {mse_ada} worse than RTN {mse_rtn}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Session-level fixture (adaround fallback init + the W4A8 round trip)
+// ---------------------------------------------------------------------------
+
+const BITS: u32 = 4;
+
+fn entry(name: &str, shape: &[usize], learnable: bool) -> PackEntry {
+    PackEntry { name: name.to_string(), shape: shape.to_vec(), learnable }
+}
+
+fn linear_unit(name: &str, layer: &str, rows: usize, cols: usize) -> UnitInfo {
+    let mut packs = BTreeMap::new();
+    packs.insert(
+        "flexround.w".to_string(),
+        vec![
+            entry(&format!("{layer}.s1"), &[rows, 1], true),
+            entry(&format!("{layer}.s2"), &[rows, cols], true),
+            entry(&format!("{layer}.s3"), &[rows, 1], true),
+            entry(&format!("{layer}.s4"), &[1, cols], true),
+            entry(&format!("{layer}.zp"), &[rows, 1], false),
+        ],
+    );
+    packs.insert(
+        "adaround.w".to_string(),
+        vec![
+            entry(&format!("{layer}.s1"), &[rows, 1], false),
+            entry(&format!("{layer}.v"), &[rows, cols], true),
+            entry(&format!("{layer}.zp"), &[rows, 1], false),
+        ],
+    );
+    UnitInfo {
+        name: name.to_string(),
+        kind: "linear".to_string(),
+        bits_override: None,
+        in_shape: vec![cols],
+        out_shape: vec![rows],
+        act_sites: 0,
+        heads: 1,
+        layers: vec![LayerInfo {
+            name: layer.to_string(),
+            kind: "linear".to_string(),
+            rows,
+            cols,
+            conv_shape: None,
+            stride: 1,
+        }],
+        artifacts: BTreeMap::new(),
+        packs,
+    }
+}
+
+struct Fixture {
+    man: Manifest,
+    weights: BTreeMap<String, Tensor>,
+    inits: BTreeMap<String, Tensor>,
+    data: BTreeMap<String, Tensor>,
+}
+
+/// Two chained linear units (12 → 8 → 6), biases included, built in memory.
+/// Only FlexRound init packs are exported — the adaround runs below resolve
+/// through `Session`'s flexround-grid fallback, like real pre-zoo exports.
+fn synthetic_fixture() -> Fixture {
+    let mut rng = Pcg32::seeded(4321);
+    let dims = [(8usize, 12usize), (6usize, 8usize)];
+    let mut weights = BTreeMap::new();
+    let mut inits = BTreeMap::new();
+    let mut units = Vec::new();
+    for (ui, &(rows, cols)) in dims.iter().enumerate() {
+        let uname = format!("u{ui}");
+        let wv: Vec<f32> = (0..rows * cols).map(|_| rng.next_normal() * 0.5).collect();
+        let w = Tensor::from_f32(wv.clone(), &[rows, cols]).unwrap();
+        weights.insert(format!("w/{uname}/fc"), w);
+        let bias: Vec<f32> = (0..rows).map(|_| rng.next_normal() * 0.1).collect();
+        weights.insert(format!("b/{uname}/fc"), Tensor::from_f32(bias, &[rows]).unwrap());
+        let s1: Vec<f32> = (0..rows)
+            .map(|r| minmax_scale(&wv[r * cols..(r + 1) * cols], BITS, true).0)
+            .collect();
+        let pfx = format!("init/{uname}/flexround/b{BITS}");
+        inits.insert(format!("{pfx}/fc.s1"), Tensor::from_f32(s1, &[rows, 1]).unwrap());
+        inits.insert(format!("{pfx}/fc.zp"), Tensor::zeros(&[rows, 1]));
+        inits.insert(format!("{pfx}/fc.s2"), Tensor::full(&[rows, cols], 1.0));
+        inits.insert(format!("{pfx}/fc.s3"), Tensor::full(&[rows, 1], 1.0));
+        inits.insert(format!("{pfx}/fc.s4"), Tensor::full(&[1, cols], 1.0));
+        units.push(linear_unit(&uname, "fc", rows, cols));
+    }
+
+    let calib_n = 64;
+    let calib = Tensor::from_f32(
+        (0..calib_n * dims[0].1).map(|_| rng.next_normal()).collect(),
+        &[calib_n, dims[0].1],
+    )
+    .unwrap();
+    let mut data = BTreeMap::new();
+    let mut datasets = BTreeMap::new();
+    datasets.insert("calib_x".to_string(), vec![calib_n, dims[0].1]);
+    data.insert("calib_x".to_string(), calib);
+
+    let mut lr_default = BTreeMap::new();
+    lr_default.insert("flexround".to_string(), 4e-3);
+    lr_default.insert("adaround".to_string(), 1e-2);
+    let model = ModelInfo {
+        name: "m".to_string(),
+        kind: "cnn".to_string(),
+        task: "synthetic".to_string(),
+        fp_metric: BTreeMap::new(),
+        symmetric: true,
+        per_channel: true,
+        bits_w: vec![BITS],
+        abits: vec![8],
+        methods_w: vec!["flexround".to_string(), "adaround".to_string()],
+        methods_wa: vec![],
+        calib_n,
+        calib_batch: 16,
+        seq: None,
+        units,
+        embed_artifact: None,
+        head_artifacts: BTreeMap::new(),
+        weights_file: "unused.fxt".to_string(),
+        init_file: "unused.fxt".to_string(),
+        data_file: "unused.fxt".to_string(),
+        datasets,
+        iters_default: 0,
+        lr_default,
+        drop_p_default: 0.0,
+    };
+    let mut models = BTreeMap::new();
+    models.insert("m".to_string(), model);
+    let man = Manifest { dir: std::env::temp_dir(), calib_batch: 16, models };
+    Fixture { man, weights, inits, data }
+}
+
+fn open<'a>(fx: &'a Fixture, backend: &'a Native) -> Session<'a> {
+    Session {
+        backend,
+        man: &fx.man,
+        model: fx.man.model("m").unwrap(),
+        weights: fx.weights.clone(),
+        inits: fx.inits.clone(),
+        data: fx.data.clone(),
+    }
+}
+
+#[test]
+fn adaround_session_quantize_with_fallback_init_packs() {
+    let fx = synthetic_fixture();
+    let backend = Native::with_workers(2);
+    let sess = open(&fx, &backend);
+    let mut plan = Plan::new("m", "adaround");
+    plan.iters = 40;
+    let result = sess.quantize(&plan).unwrap();
+    for u in &result.units {
+        assert!(u.final_loss.is_finite(), "unit {} loss NaN", u.unit);
+        assert!(
+            u.final_loss <= u.first_loss * 1.05,
+            "unit {}: adaround loss regressed {} → {}",
+            u.unit,
+            u.first_loss,
+            u.final_loss
+        );
+    }
+    // the learned decisions export and pack like any other scheme, and the
+    // packed engine agrees with the generic quantized chain
+    let pm = sess.packed_model(&result).unwrap();
+    let engine = Engine::new(pm, 2);
+    let calib = sess.dataset("calib_x").unwrap();
+    let chunks = sess.first_unit_inputs(calib).unwrap();
+    let mut want = chunks.clone();
+    for (unit, st) in sess.model.units.iter().zip(&result.units) {
+        want = sess.advance_q(unit, st, "w", &want).unwrap();
+    }
+    for (chunk, want) in chunks.iter().zip(&want) {
+        let got = engine.forward(chunk).unwrap();
+        let d = got.max_abs_diff(want).unwrap();
+        let tol = 1e-4 * (1.0 + want.abs_max());
+        assert!(d <= tol, "adaround packed engine drift {d} > {tol}");
+    }
+}
+
+#[test]
+fn w4a8_pack_roundtrip_serves_integer_domain_with_parity() {
+    let fx = synthetic_fixture();
+    let backend = Native::with_workers(2);
+    let sess = open(&fx, &backend);
+    let mut plan = Plan::new("m", "flexround");
+    plan.iters = 30;
+    let result = sess.quantize(&plan).unwrap();
+
+    let pm = sess.packed_model_with_acts(&result, 8).unwrap();
+    for u in &pm.units {
+        for l in &u.layers {
+            let aq = l.act.expect("every stack layer must carry a calibrated act grid");
+            assert_eq!(aq.abits, 8);
+            assert!(aq.step > 0.0 && aq.zp >= 0.0);
+        }
+    }
+
+    // the actq records survive the artifact round trip
+    let path = std::env::temp_dir()
+        .join(format!("flexround_w4a8_roundtrip_{}.fxt", std::process::id()));
+    pm.save(&path).unwrap();
+    let loaded = PackedModel::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(pm, loaded);
+
+    // fused forward (integer-domain act kernel) vs the f32 fake-quant
+    // reference path — the W4A8 parity acceptance gate
+    let engine = Engine::new(loaded, 2);
+    let chunks = sess.first_unit_inputs(sess.dataset("calib_x").unwrap()).unwrap();
+    let before = flexround::obs::value("flexround_fused_gemm_act_int_total").unwrap_or(0.0);
+    for chunk in &chunks {
+        let got = engine.forward(chunk).unwrap();
+        let want = engine.forward_unfused(chunk).unwrap();
+        let d = got.max_abs_diff(&want).unwrap();
+        let tol = 1e-4 * (1.0 + want.abs_max());
+        assert!(d <= tol, "W4A8 integer-domain vs fake-quant reference: {d} > {tol}");
+    }
+    if flexround::obs::enabled() {
+        let after = flexround::obs::value("flexround_fused_gemm_act_int_total").unwrap_or(0.0);
+        // 2 units × 1 act layer per chunk, at minimum
+        assert!(
+            after >= before + 2.0 * chunks.len() as f64,
+            "act-int kernel counter did not advance: {before} → {after}"
+        );
+    }
+
+    // and the quantized activations genuinely bite: a W4A8 forward must
+    // differ from the weight-only engine (else the grid is a no-op)
+    let engine_w = sess.packed_engine(&result).unwrap();
+    let a = engine.forward(&chunks[0]).unwrap();
+    let b = engine_w.forward(&chunks[0]).unwrap();
+    assert!(
+        a.max_abs_diff(&b).unwrap() > 0.0,
+        "activation quantization had no effect on the forward"
+    );
+}

@@ -5,6 +5,9 @@
 #
 # Steps:
 #   1. release build, default features (native + pjrt-stub scaffolding)
+#   1a. FlexRound-through-trait golden parity gate: the rounding-scheme
+#       trait refactor must keep FlexRound bit-identical to the Python
+#       reference (tests/native_recon.rs + tests/infer.rs golden fixtures)
 #   1b. kernel-parity smoke, run TWICE: rust/tests/kernels.rs is the
 #       differential harness (scalar tiles vs the SIMD arm under a ULP
 #       budget, integer-domain fused GEMM bit-exact vs the rowwise oracle).
@@ -42,6 +45,19 @@ cd "$(dirname "$0")"
 
 echo "== cargo build --release =="
 cargo build --release
+
+echo "== FlexRound-through-trait golden parity gate =="
+# The Rounding-trait refactor (DESIGN.md §Rounding-Schemes) must leave the
+# FlexRound math bit-identical: the Python-pinned golden fixtures and the
+# packed-GEMM parity fixture fail first if the trait plumbing drifted.
+if ! cargo test -q --release --test native_recon golden; then
+    echo "golden parity FAILED: FlexRound through the Rounding trait diverged from the Python reference"
+    exit 1
+fi
+if ! cargo test -q --release --test infer golden; then
+    echo "golden parity FAILED: packed export through the Rounding trait diverged from the fixture"
+    exit 1
+fi
 
 echo "== kernel-parity smoke, pass 1/2: forced-scalar arm =="
 if ! FLEXROUND_FORCE_SCALAR=1 cargo test -q --release --test kernels; then
