@@ -13,7 +13,12 @@
 //! * the f32 panel kernel vs the integer-domain fused GEMM
 //!   (`gemm_fused_int`) at W4/W8, batch 1 and 8;
 //! * the batch-1 gemv decode path (what `Engine::decode_step` pays per
-//!   projection) at 1024×1024, W4/W8.
+//!   projection) at 1024×1024, W4/W8;
+//! * the in-register weight decode (`simd::unpack_codes_*`) vs the scalar
+//!   word walk, whole-matrix decode throughput at W4/W8;
+//! * the i16-madd fused route vs the i32 integer route vs the f32 panel
+//!   kernel (`gemm_fused_int_route`), W4/W8 × batch {1, 8} — the batch-1
+//!   W4A8 row is the acceptance number for the madd PR.
 //!
 //! Emits machine-readable results to `BENCH_kernels.json` at the repo root,
 //! alongside the human-readable stdout table.
@@ -24,6 +29,9 @@
 //!   FLEXROUND_FORCE_SCALAR   nonempty (≠"0") pins the *active* arm to the
 //!                            scalar tiles; the ISA section still pits both
 //!                            arms against each other via explicit pins
+//!   FLEXROUND_FORCE_NO_MADD  nonempty (≠"0") disables the i16-madd auto
+//!                            route; the madd section still pins it
+//!                            explicitly via `IntRoute::Madd`
 
 use flexround::infer::{kernels, synthetic_model, PackedMatrix};
 use flexround::linalg::{self, simd, Dispatch, Isa};
@@ -242,6 +250,91 @@ fn main() {
         ]));
     }
 
+    // ---- in-register weight decode vs the scalar word walk ----
+    println!("== in-register unpack vs scalar word walk (whole {DIM}×{DIM} matrix) ==");
+    let mut unpack_rows: Vec<Json> = Vec::new();
+    for bits in [4u32, 8] {
+        let m = bench_matrix(bits, 7);
+        let (qmin, k) = (m.qmin(), DIM);
+        let mut out_f = vec![0.0f32; k];
+        let scalar_u = bench(&format!("unpack_scalar_w{bits}"), budget, 2_000, || {
+            for r in 0..DIM {
+                simd::unpack_codes_f32(Isa::Scalar, m.row_words(r), k, bits, qmin, &mut out_f);
+            }
+        });
+        println!("{}", scalar_u.report());
+        let simd_u = bench(&format!("unpack_{}_w{bits}", vec_isa.label()), budget, 2_000, || {
+            for r in 0..DIM {
+                simd::unpack_codes_f32(vec_isa, m.row_words(r), k, bits, qmin, &mut out_f);
+            }
+        });
+        println!("{}", simd_u.report());
+        let mut out_w = vec![0i16; k];
+        let simd_u16 = bench(&format!("unpack_i16_{}_w{bits}", vec_isa.label()), budget, 2_000, || {
+            for r in 0..DIM {
+                simd::unpack_codes_i16(vec_isa, m.row_words(r), k, bits, qmin, &mut out_w);
+            }
+        });
+        println!("{}", simd_u16.report());
+        let s = scalar_u.p50 / simd_u.p50.max(1e-12);
+        println!("  → in-register f32 decode is {s:.2}× the scalar walk (W{bits})");
+        unpack_rows.push(Json::object(vec![
+            ("bits", Json::from_f64(bits as f64)),
+            ("scalar_f32", ms(&scalar_u)),
+            ("simd_f32", ms(&simd_u)),
+            ("simd_i16", ms(&simd_u16)),
+            ("speedup_simd_vs_scalar", Json::from_f64(s)),
+        ]));
+    }
+
+    // ---- i16-madd route vs i32 route vs f32 panel, W4/W8 × batch {1, 8} ----
+    println!("== i16-madd fused route vs i32 route vs f32 panel ({DIM}×{DIM}) ==");
+    let d_serial = Dispatch::serial();
+    let mut madd_rows: Vec<Json> = Vec::new();
+    for bits in [4u32, 8] {
+        let m = bench_matrix(bits, 7);
+        for batch in [1usize, 8] {
+            // non-integral activations keep the f32 row on the panel kernel;
+            // the integer rows get A8-shaped codes so both routes are legal
+            let xf = Tensor::from_f32(
+                (0..batch * DIM).map(|_| rng.next_normal()).collect(),
+                &[batch, DIM],
+            )
+            .expect("f32 activations");
+            let xi = Tensor::from_f32(
+                (0..batch * DIM).map(|_| rng.below(255) as f32 - 127.0).collect(),
+                &[batch, DIM],
+            )
+            .expect("integer activations");
+            let f32_side = bench(&format!("fused_madd_f32_w{bits}_b{batch}"), budget, 2_000, || {
+                let _ = kernels::gemm_fused_with(&xf, &m, &d_serial).expect("f32 fused");
+            });
+            println!("{}", f32_side.report());
+            let dot32 = bench(&format!("fused_madd_dot32_w{bits}_b{batch}"), budget, 2_000, || {
+                let _ = kernels::gemm_fused_int_route(&xi, &m, &d_serial, kernels::IntRoute::Dot32)
+                    .expect("dot32 route");
+            });
+            println!("{}", dot32.report());
+            let madd = bench(&format!("fused_madd_madd_w{bits}_b{batch}"), budget, 2_000, || {
+                let _ = kernels::gemm_fused_int_route(&xi, &m, &d_serial, kernels::IntRoute::Madd)
+                    .expect("madd route");
+            });
+            println!("{}", madd.report());
+            let s_f32 = f32_side.p50 / madd.p50.max(1e-12);
+            let s_dot = dot32.p50 / madd.p50.max(1e-12);
+            println!("  → madd is {s_f32:.2}× the f32 panel, {s_dot:.2}× the i32 route (W{bits}A8, batch {batch})");
+            madd_rows.push(Json::object(vec![
+                ("bits", Json::from_f64(bits as f64)),
+                ("batch", Json::from_f64(batch as f64)),
+                ("f32_panel", ms(&f32_side)),
+                ("int_dot32", ms(&dot32)),
+                ("int_madd", ms(&madd)),
+                ("speedup_madd_vs_f32", Json::from_f64(s_f32)),
+                ("speedup_madd_vs_dot32", Json::from_f64(s_dot)),
+            ]));
+        }
+    }
+
     // ---- BENCH_kernels.json at the repo root ----
     let doc = Json::object(vec![
         ("bench", Json::from_str_val("kernels")),
@@ -252,6 +345,8 @@ fn main() {
         ("fused_1024", Json::Arr(fused_rows)),
         ("fused_int_1024", Json::Arr(int_rows)),
         ("gemv_decode_1024", Json::Arr(gemv_rows)),
+        ("unpack_1024", Json::Arr(unpack_rows)),
+        ("fused_madd_1024", Json::Arr(madd_rows)),
     ]);
     let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json");
     match std::fs::write(out, json::to_string(&doc, 2) + "\n") {

@@ -23,6 +23,7 @@
 use super::engine::Engine;
 use super::packed::{PackedLayer, PackedMatrix, PackedModel, PackedUnit};
 use crate::eval::log_sum_exp;
+use crate::linalg::{simd, Isa};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
 use crate::Result;
@@ -104,17 +105,29 @@ pub fn vocab(model: &PackedModel) -> Result<usize> {
 
 /// Tied token embedding: the head matrix's dequantized row `tok`.
 pub fn embed_token(model: &PackedModel, tok: usize) -> Result<Vec<f32>> {
+    let mut row = Vec::new();
+    embed_token_into(model, tok, &mut row)?;
+    Ok(row)
+}
+
+/// [`embed_token`] into caller-owned scratch — the decode loop's per-step
+/// path, which reuses `GenState`'s embedding buffer instead of allocating
+/// one row per token.  The row decodes through the ISA-routed in-register
+/// unpack; both arms produce identical bits (integer decode + exact int→f32
+/// conversion), so the generate parity pins are arm-independent here.
+pub fn embed_token_into(model: &PackedModel, tok: usize, row: &mut Vec<f32>) -> Result<()> {
     let m = lm_head(model)?;
     if tok >= m.rows() {
         bail!("token {tok} outside the {}-token head", m.rows());
     }
-    let mut row = vec![0.0f32; m.cols()];
-    m.unpack_row(tok, &mut row);
+    row.clear();
+    row.resize(m.cols(), 0.0);
+    simd::unpack_codes_f32(Isa::active(), m.row_words(tok), m.cols(), m.bits(), m.qmin(), row);
     let (s, z) = (m.scale()[tok], m.zp()[tok]);
-    for x in &mut row {
+    for x in row.iter_mut() {
         *x = s * (*x - z);
     }
-    Ok(row)
+    Ok(())
 }
 
 /// Sample one token id from a logit row.  `temp == 0` is greedy argmax
@@ -200,15 +213,20 @@ pub fn generate(engine: &Engine, prompt: &Tensor, opts: &GenOpts) -> Result<Gene
     let mut last: Vec<f32> = logits.as_f32()?[(rows - 1) * width..rows * width].to_vec();
     let mut tokens = Vec::with_capacity(opts.max_new);
     let t1 = Instant::now();
+    // the embedding-row scratch lives in GenState: taken out for the loop
+    // (decode_step needs &mut state alongside &row) and put back after, so
+    // long decodes allocate one row total instead of one per token
+    let mut row = std::mem::take(&mut state.embed_scratch);
     for _ in 0..opts.max_new {
         let tok = sample_token(&last, opts.temp, opts.top_k, &mut rng);
         tokens.push(tok);
         if tokens.len() == opts.max_new {
             break;
         }
-        let row = embed_token(engine.model(), tok)?;
+        embed_token_into(engine.model(), tok, &mut row)?;
         last = engine.decode_step(&mut state, &row)?;
     }
+    state.embed_scratch = row;
     Ok(Generated { tokens, prefill_secs, decode_secs: t1.elapsed().as_secs_f64() })
 }
 

@@ -51,13 +51,33 @@
 //! loop *is* the integer gemv decode fast path: one `dot_i32` per weight
 //! row, no tile bookkeeping to skip.
 //!
+//! # The i16-madd route
+//!
+//! When every weight code *and* every activation code fits i16 (W≤8 grids
+//! against A8-and-smaller activations — the whole practical serving
+//! envelope), the integer kernel drops from 32-bit to 16-bit lanes:
+//! weight rows decode straight to i16 via the in-register unpack
+//! ([`crate::linalg::simd::unpack_codes_i16`], 16 codes per store) and the
+//! contraction runs `_mm256_madd_epi16`
+//! ([`crate::linalg::simd::dot_i16_madd`]) — 16 products per instruction
+//! with adjacent pairs hardware-summed into i32 lanes, twice [`simd::dot_i32`]'s
+//! width.  The pair-sum provably fits i32 (see [`int_safe_k`]'s bound) and
+//! the chunk totals follow the same `int_safe_k` guard as the i32 path, so
+//! the route is **bit-identical** to `dot_i32` on every arm — which is what
+//! makes it safely auto-selectable: [`Dispatch::use_madd`] turns it on
+//! wherever AVX2 is active, `FLEXROUND_FORCE_NO_MADD=1` pins it off, and
+//! [`IntRoute`] lets the differential harness force either kernel.  At
+//! `n == 1` the madd rowwise loop *is* the batch-1 gemv decode fast path:
+//! one in-register row decode + one madd dot per weight row.
+//!
 //! Weight-row ranges fan out under the crate-wide [`Dispatch`] policy —
 //! the same flops threshold and pool fan-out as every other matmul (the
 //! old one-off `n·rows·k < 2¹⁶` cutoff lives on *as* that policy's
 //! [`crate::linalg::PAR_FLOPS_MIN`]).  Because every kernel gives each
 //! output element one fixed per-element reduction tree within an ISA arm,
 //! serial, parallel, rowwise, panel, and gemv paths are all bit-identical
-//! *per arm*; the integer path is bit-identical across arms too.
+//! *per arm*; the integer paths (i32 and i16-madd) are bit-identical
+//! across arms too.
 
 use super::packed::{ActQuant, PackedMatrix};
 use crate::linalg::{self, simd, Dispatch, Isa};
@@ -162,13 +182,23 @@ fn fused_block(
 ) -> Vec<f32> {
     let width = jhi - jlo;
     let mut out = vec![0.0f32; n * width];
+    // panel + tmp are the decoded-panel cache: allocated once per block and
+    // reused across the whole j-loop, refilled in-register per panel
     let mut panel = vec![0.0f32; linalg::NR * k];
     let mut tmp = vec![0.0f32; n * linalg::NR];
+    let (bits, qmin) = (m.bits(), m.qmin());
     let mut j = jlo;
     while j < jhi {
         let nr = linalg::NR.min(jhi - j);
         for p in 0..nr {
-            m.unpack_row(j + p, &mut panel[p * k..(p + 1) * k]);
+            simd::unpack_codes_f32(
+                isa,
+                m.row_words(j + p),
+                k,
+                bits,
+                qmin,
+                &mut panel[p * k..(p + 1) * k],
+            );
         }
         // no re-zeroing: both contraction paths below assign every element
         // of tmp's active region exactly once (overwrite semantics)
@@ -246,6 +276,16 @@ fn exact_amax(k: usize, nmax: i64) -> i64 {
 ///
 /// Result clamps ≥ 1 so a single term (which by the explicit-API input
 /// bound `|x| ≤ i32::MAX / code_mag` cannot overflow) always passes.
+///
+/// The same bound covers the i16-madd route's extra intermediate: the
+/// `_mm256_madd_epi16` pair-sum.  Madd multiplies 16 i16 pairs and sums
+/// *adjacent pairs* into i32 lanes before any accumulation the guard sees;
+/// with both operands i16-bounded a pair-sum is at most
+/// `2 · 32767² = 2_147_352_578 < i32::MAX = 2_147_483_647`, so the
+/// instruction itself can never overflow — the worst case
+/// `int_safe_k(32767, 32767) = 2` (not 1) is exactly this headroom, and
+/// every lane partial within a `safe_k` chunk stays `≤ safe_k · code_mag ·
+/// act_mag ≤ i32::MAX` like the i32 path's.
 pub fn int_safe_k(code_mag: i64, act_mag: i64) -> usize {
     let per = code_mag.max(1) * act_mag.max(1);
     (((i32::MAX as i64) / per).max(1)) as usize
@@ -324,8 +364,9 @@ fn int_block(
     let width = jhi - jlo;
     let mut out = vec![0.0f32; n * width];
     let mut codes = vec![0i32; k];
+    let (bits, qmin) = (m.bits(), m.qmin());
     for j in jlo..jhi {
-        m.unpack_row_i32(j, &mut codes);
+        simd::unpack_codes_i32(isa, m.row_words(j), k, bits, qmin, &mut codes);
         let (s, z) = (m.scale()[j], m.zp()[j]);
         for i in 0..n {
             let xrow = &acts.q[i * k..(i + 1) * k];
@@ -339,17 +380,119 @@ fn int_block(
     out
 }
 
+/// Which kernel the integer-domain fused GEMM contracts with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IntRoute {
+    /// The production policy: i16-madd when [`Dispatch::use_madd`] allows
+    /// it *and* every weight code and activation fits i16; the i32 kernel
+    /// otherwise.  Both outcomes are bit-identical, so the choice is pure
+    /// throughput.
+    Auto,
+    /// Always the i32 `mullo` kernel (the pre-madd behavior) — the middle
+    /// arm of verify.sh's three-arm differential.
+    Dot32,
+    /// Always the i16-madd kernel.  [`gemm_fused_int_route`] errors when
+    /// codes or activations exceed i16 range (the operands would truncate);
+    /// on the scalar arm this runs the bit-identical scalar emulation, so
+    /// tests can pin the route on any machine.
+    Madd,
+}
+
+/// Whether this matrix/activation pair can feed the i16-madd kernel: every
+/// decodable code and every captured activation must fit i16.
+fn madd_fits(m: &PackedMatrix, amax: i64) -> bool {
+    code_mag(m) <= i16::MAX as i64 && amax <= i16::MAX as i64
+}
+
+/// i16 panel dot with the same overflow guard as [`dot_i32_widening`]: one
+/// [`simd::dot_i16_madd`] when the contraction fits [`int_safe_k`],
+/// otherwise K chunked at `safe_k` with each i32 partial widened into the
+/// i64 total.  Identical chunk boundaries and associative i32 addition keep
+/// it bit-identical to the i32 path on every arm.
+fn dot_i16_widening(isa: Isa, a: &[i16], b: &[i16], safe_k: usize) -> i64 {
+    if a.len() <= safe_k {
+        return simd::dot_i16_madd(isa, a, b) as i64;
+    }
+    a.chunks(safe_k)
+        .zip(b.chunks(safe_k))
+        .map(|(ca, cb)| simd::dot_i16_madd(isa, ca, cb) as i64)
+        .sum()
+}
+
+/// i16-madd fused kernel over weight rows `[jlo, jhi)`: in-register decode
+/// of each weight row straight to i16 codes, one [`dot_i16_widening`] per
+/// activation row, the same `s·(acc − z·Σx)` epilogue expression tree as
+/// [`int_block`] — so the two integer kernels are bit-identical.  At
+/// `n == 1` this loop *is* the batch-1 madd gemv decode fast path.
+#[allow(clippy::too_many_arguments)]
+fn madd_block(
+    q16: &[i16],
+    sumq: &[i64],
+    n: usize,
+    k: usize,
+    m: &PackedMatrix,
+    jlo: usize,
+    jhi: usize,
+    isa: Isa,
+    safe_k: usize,
+) -> Vec<f32> {
+    let width = jhi - jlo;
+    let mut out = vec![0.0f32; n * width];
+    let mut codes = vec![0i16; k];
+    let (bits, qmin) = (m.bits(), m.qmin());
+    for j in jlo..jhi {
+        simd::unpack_codes_i16(isa, m.row_words(j), k, bits, qmin, &mut codes);
+        let (s, z) = (m.scale()[j], m.zp()[j]);
+        for i in 0..n {
+            let xrow = &q16[i * k..(i + 1) * k];
+            let acc = dot_i16_widening(isa, &codes, xrow, safe_k);
+            out[i * width + (j - jlo)] = s * (acc as f32 - z * (sumq[i] as f32));
+        }
+    }
+    out
+}
+
 /// Shared integer-domain driver: weight rows fan out under `d` exactly like
-/// the f32 path, each worker running [`int_block`] over its range.
-fn gemm_int(acts: &IntActs, n: usize, k: usize, m: &PackedMatrix, d: &Dispatch) -> Vec<f32> {
+/// the f32 path, each worker running [`int_block`] — or [`madd_block`] when
+/// `route` resolves to the i16-madd kernel — over its range.
+fn gemm_int(
+    acts: &IntActs,
+    n: usize,
+    k: usize,
+    m: &PackedMatrix,
+    d: &Dispatch,
+    route: IntRoute,
+) -> Vec<f32> {
     let rows = m.rows();
     let isa = d.isa();
     let safe_k = int_safe_k(code_mag(m), acts.amax);
+    let madd = match route {
+        IntRoute::Dot32 => false,
+        IntRoute::Madd => true,
+        IntRoute::Auto => d.use_madd() && madd_fits(m, acts.amax),
+    };
+    if !madd {
+        return match d.panels(rows, n * rows * k) {
+            None => int_block(acts, n, k, m, 0, rows, isa, safe_k),
+            Some(ranges) => {
+                let blocks = pool::par_map(ranges.len(), &ranges, |_, &(lo, hi)| {
+                    int_block(acts, n, k, m, lo, hi, isa, safe_k)
+                });
+                gather_blocks(n, rows, &ranges, &blocks)
+            }
+        };
+    }
+    if crate::obs::enabled() {
+        crate::obs_counter!("flexround_fused_gemm_madd_total").inc();
+    }
+    // One i16 view of the activation batch, shared read-only across
+    // workers (madd_fits guarantees the narrowing is lossless).
+    let q16: Vec<i16> = acts.q.iter().map(|&c| c as i16).collect();
     match d.panels(rows, n * rows * k) {
-        None => int_block(acts, n, k, m, 0, rows, isa, safe_k),
+        None => madd_block(&q16, &acts.sumq, n, k, m, 0, rows, isa, safe_k),
         Some(ranges) => {
             let blocks = pool::par_map(ranges.len(), &ranges, |_, &(lo, hi)| {
-                int_block(acts, n, k, m, lo, hi, isa, safe_k)
+                madd_block(&q16, &acts.sumq, n, k, m, lo, hi, isa, safe_k)
             });
             gather_blocks(n, rows, &ranges, &blocks)
         }
@@ -382,6 +525,21 @@ pub fn gemm_fused_int(x: &Tensor, m: &PackedMatrix, workers: usize) -> Result<Te
 /// on non-integer or out-of-range activations instead of silently falling
 /// back.
 pub fn gemm_fused_int_with(x: &Tensor, m: &PackedMatrix, d: &Dispatch) -> Result<Tensor> {
+    gemm_fused_int_route(x, m, d, IntRoute::Auto)
+}
+
+/// [`gemm_fused_int_with`] with an explicit integer-kernel route.  The
+/// differential harness (`rust/tests/kernels.rs`, verify.sh's three arms)
+/// pins [`IntRoute::Dot32`] against [`IntRoute::Madd`] bit-for-bit;
+/// production callers want [`IntRoute::Auto`].  Errors when the madd route
+/// is *forced* on inputs whose codes or activations exceed i16 range
+/// (narrowing would truncate) — Auto falls back to i32 for those instead.
+pub fn gemm_fused_int_route(
+    x: &Tensor,
+    m: &PackedMatrix,
+    d: &Dispatch,
+    route: IntRoute,
+) -> Result<Tensor> {
     let (n, k) = check_shapes(x, m)?;
     let limit = (i32::MAX as i64) / code_mag(m);
     let acts = match IntActs::capture(x.as_f32()?, n, k, limit) {
@@ -392,10 +550,19 @@ pub fn gemm_fused_int_with(x: &Tensor, m: &PackedMatrix, d: &Dispatch) -> Result
             m.bits()
         ),
     };
+    if route == IntRoute::Madd && !madd_fits(m, acts.amax) {
+        bail!(
+            "i16-madd route forced but the operands exceed i16 range \
+             (max|code| {}, act magnitude {}; both must be ≤ {})",
+            code_mag(m),
+            acts.amax,
+            i16::MAX
+        );
+    }
     if crate::obs::enabled() {
         crate::obs_counter!("flexround_fused_gemm_int_total").inc();
     }
-    Tensor::from_f32(gemm_int(&acts, n, k, m, d), &[n, m.rows()])
+    Tensor::from_f32(gemm_int(&acts, n, k, m, d, route), &[n, m.rows()])
 }
 
 /// W4A8 serving kernel: quantize the f32 activation batch onto the layer's
@@ -419,7 +586,8 @@ pub fn gemm_fused_act_int(
 /// ```
 ///
 /// so the shifted activation codes `c'` (exact integers: `zp_a` is rounded
-/// at calibration) feed straight into [`gemm_fused_int_with`] — i32 dots,
+/// at calibration) feed straight into [`gemm_fused_int_with`] — integer
+/// dots (the i16-madd route auto-fires here: A8 codes always fit i16),
 /// `int_safe_k` overflow guard, per-row weight epilogue — and the single
 /// per-tensor `step` lands once per output element.  The f32 reference is
 /// [`ActQuant::fake_quant`] followed by any f32 kernel; parity is pinned
@@ -469,7 +637,7 @@ pub fn gemm_fused_with(x: &Tensor, m: &PackedMatrix, d: &Dispatch) -> Result<Ten
         if counted {
             crate::obs_counter!("flexround_fused_gemm_int_total").inc();
         }
-        return Tensor::from_f32(gemm_int(&acts, n, k, m, d), &[n, rows]);
+        return Tensor::from_f32(gemm_int(&acts, n, k, m, d, IntRoute::Auto), &[n, rows]);
     }
     let sumx = row_sums(xv, n, k);
     let isa = d.isa();

@@ -141,17 +141,21 @@ impl KvCache {
 }
 
 /// One generation session's mutable state: the KV cache plus reusable
-/// attention-probability scratch.  Produced by
+/// attention-probability and embedding-row scratch.  Produced by
 /// [`crate::infer::Engine::prefill`], advanced by
 /// [`crate::infer::Engine::decode_step`].
 pub struct GenState {
     pub(crate) kv: KvCache,
     pub(crate) probs_scratch: Vec<f32>,
+    /// Token-embedding row reused across the decode loop
+    /// (`generate::embed_token_into`): one allocation per session instead
+    /// of one per emitted token.
+    pub(crate) embed_scratch: Vec<f32>,
 }
 
 impl GenState {
     pub fn new(kv: KvCache) -> GenState {
-        GenState { kv, probs_scratch: Vec::new() }
+        GenState { kv, probs_scratch: Vec::new(), embed_scratch: Vec::new() }
     }
 
     /// Tokens currently committed (prompt + generated so far).

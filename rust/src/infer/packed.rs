@@ -165,6 +165,14 @@ impl PackedMatrix {
         &self.zp
     }
 
+    /// The packed words backing row `r` — the in-register SIMD decode
+    /// (`linalg::simd::unpack_codes_*`) reads a row's words directly
+    /// instead of going through the scalar word walk below.
+    #[inline]
+    pub fn row_words(&self, r: usize) -> &[u32] {
+        &self.words[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+
     /// Decode a single code (test/reference-kernel path).
     #[inline]
     pub fn code_at(&self, r: usize, c: usize) -> i32 {

@@ -74,6 +74,16 @@ impl Dispatch {
         self.isa
     }
 
+    /// Whether the integer-domain fused GEMM may auto-select the i16-madd
+    /// route under this policy: only on the AVX2 arm (the madd kernel's
+    /// scalar emulation is bit-identical but slower than the i32 path
+    /// there), and only while the `FLEXROUND_FORCE_NO_MADD` kill switch is
+    /// not set — verify.sh's three-arm kernel differential uses that knob
+    /// to pin the AVX2-f32/i32 routes as the middle arm.
+    pub fn use_madd(&self) -> bool {
+        self.isa == Isa::Avx2 && super::simd::madd_allowed()
+    }
+
     /// The serial/parallel decision: split `rows` output rows into
     /// per-worker panels, or `None` when the problem should run serial —
     /// a single worker, too few rows to split (`rows < 2·workers`), or too

@@ -31,11 +31,37 @@
 //! FMA *does* change bits versus the scalar tiles (one rounding per
 //! multiply-add instead of two), so cross-arm comparisons are ULP-bounded
 //! ([`crate::util::ulp`], `rust/tests/kernels.rs`), while every within-arm
-//! identity stays exact.  The integer kernel ([`dot_i32`]) has no such
-//! caveat: i32 addition is associative, so its result is bit-identical
-//! across arms, lane counts, and chunkings — which is what lets the
-//! integer-domain fused GEMM (`infer/kernels.rs`) promise bit-exactness
-//! instead of a tolerance.
+//! identity stays exact.  The integer kernels ([`dot_i32`],
+//! [`dot_i16_madd`]) have no such caveat: integer addition is associative,
+//! so their results are bit-identical across arms, lane counts, and
+//! chunkings — which is what lets the integer-domain fused GEMM
+//! (`infer/kernels.rs`) promise bit-exactness instead of a tolerance.
+//!
+//! ## In-register weight decode
+//!
+//! The fused serving kernels used to decode packed weight codes through a
+//! scalar per-row word walk (`PackedMatrix::unpack_row{,_i32}`), leaving
+//! the hot path decode-bound.  [`unpack_codes_i32`] / [`unpack_codes_f32`]
+//! / [`unpack_codes_i16`] move that decode into registers on the AVX2 arm:
+//! a packed `u32` word is broadcast to all lanes, each lane right-shifts by
+//! its own code offset (`_mm256_srlv_epi32`), masks to `bits`, and adds
+//! `qmin` — 2/3/4/8-bit codes expand straight to i32/f32/i16 lanes with no
+//! scratch f32 panel in between.  Per-word lane layouts:
+//!
+//! ```text
+//!   bits=4 (8 codes/word):  shifts [0,4,…,28]            → one 8×i32 vector
+//!   bits=2 (16 codes/word): shifts [0,2,…,14]/[16,…,30]  → two 8×i32 vectors
+//!   bits=3 (10 codes/word): shifts [0,3,…,21]            → one vector + 2 scalar codes
+//!   bits=8 (4 codes/word):  the byte stream IS the code stream (LSB-first
+//!                           words, little-endian) → _mm256_cvtepu8_epi32/16
+//! ```
+//!
+//! The scalar word walk is retained as the selectable oracle (and the
+//! `Isa::Scalar` arm); both arms produce **identical** values — decode is
+//! pure integer bit manipulation, and the f32 variant converts exact small
+//! integers (`|code| < 2²⁴`), so even the f32 panels are bit-identical
+//! across arms.  Partial trailing words always fall back to the scalar walk
+//! so vector stores never touch out-of-bounds columns.
 
 #![allow(clippy::too_many_arguments)]
 
@@ -119,6 +145,83 @@ pub fn dot_i32(isa: Isa, a: &[i32], b: &[i32]) -> i32 {
     match isa {
         Isa::Scalar => dot_i32_scalar(a, b),
         Isa::Avx2 => dot_i32_avx2(a, b),
+    }
+}
+
+/// Integer dot product `Σ a[t]·b[t]` over i16 operands, accumulated in
+/// i32, on the chosen arm.  The AVX2 arm runs `_mm256_madd_epi16`: 16
+/// products per instruction, adjacent pairs summed into 8 i32 lanes — with
+/// both operands bounded by `i16::MAX` in magnitude a pair-sum is
+/// `≤ 2·32767² = 2_147_352_578 < i32::MAX`, so the instruction itself can
+/// never overflow.  The caller must bound `|a|·|b|·len` below `i32::MAX`
+/// exactly as for [`dot_i32`] (see `infer::kernels::int_safe_k`); within
+/// that bound every lane partial and the scalar tail stay in range, and —
+/// integer addition being associative — both arms and every chunking
+/// produce identical bits.
+#[inline]
+pub fn dot_i16_madd(isa: Isa, a: &[i16], b: &[i16]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    match isa {
+        Isa::Scalar => dot_i16_scalar(a, b),
+        Isa::Avx2 => dot_i16_madd_avx2(a, b),
+    }
+}
+
+/// Whether the i16-madd fused route may be auto-selected: `true` unless
+/// the `FLEXROUND_FORCE_NO_MADD` environment variable is set to anything
+/// other than empty or `0`.  Cached after the first call, mirroring
+/// [`Isa::active`] — the kill switch pins the integer fused GEMM to the
+/// i32 `mullo` kernel so `verify.sh` can differentially test the madd
+/// route against it (forced-scalar / AVX2-no-madd / auto, three arms).
+pub fn madd_allowed() -> bool {
+    static ALLOWED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *ALLOWED.get_or_init(|| match std::env::var("FLEXROUND_FORCE_NO_MADD") {
+        Ok(v) if !v.is_empty() && v != "0" => false,
+        _ => true,
+    })
+}
+
+/// Decode `cols` packed codes (LSB-first in `words`, `⌊32/bits⌋` codes per
+/// word) into i32 values `qmin + u` on the chosen arm.  Both arms produce
+/// identical values — see the module docs' in-register decode section.
+/// `words` is one row of a `PackedMatrix` (`PackedMatrix::row_words`);
+/// `out` must hold exactly `cols` elements.
+#[inline]
+pub fn unpack_codes_i32(isa: Isa, words: &[u32], cols: usize, bits: u32, qmin: i32, out: &mut [i32]) {
+    debug_assert_eq!(out.len(), cols);
+    debug_assert!(words.len() * (32 / bits) as usize >= cols);
+    match isa {
+        Isa::Scalar => unpack_codes_i32_scalar(words, cols, bits, qmin, out),
+        Isa::Avx2 => unpack_i32_avx2(words, cols, bits, qmin, out),
+    }
+}
+
+/// [`unpack_codes_i32`] with an f32 destination — the fused f32 panel
+/// kernel's decode.  The int→f32 conversion is exact for every supported
+/// grid (`|code| < 2²⁴`), so the decoded panel is bit-identical across
+/// arms even though the downstream f32 contraction is not.
+#[inline]
+pub fn unpack_codes_f32(isa: Isa, words: &[u32], cols: usize, bits: u32, qmin: i32, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), cols);
+    debug_assert!(words.len() * (32 / bits) as usize >= cols);
+    match isa {
+        Isa::Scalar => unpack_codes_f32_scalar(words, cols, bits, qmin, out),
+        Isa::Avx2 => unpack_f32_avx2(words, cols, bits, qmin, out),
+    }
+}
+
+/// [`unpack_codes_i32`] with an i16 destination — the madd kernel's
+/// decode, 16 codes per store.  The **caller** must guarantee every
+/// decoded code fits i16 (`infer::kernels` gates the madd route on
+/// `max|code| ≤ i16::MAX`); out-of-range grids would saturate on the AVX2
+/// arm and wrap on the scalar arm.
+#[inline]
+pub fn unpack_codes_i16(isa: Isa, words: &[u32], cols: usize, bits: u32, qmin: i32, out: &mut [i16]) {
+    debug_assert_eq!(out.len(), cols);
+    debug_assert!(words.len() * (32 / bits) as usize >= cols);
+    match isa {
+        Isa::Scalar => unpack_codes_i16_scalar(words, cols, bits, qmin, out),
+        Isa::Avx2 => unpack_i16_avx2(words, cols, bits, qmin, out),
     }
 }
 
@@ -211,6 +314,77 @@ fn dot_i32_scalar(a: &[i32], b: &[i32]) -> i32 {
     acc
 }
 
+/// Scalar i16 dot (i32 accumulation) — the always-available arm of
+/// [`dot_i16_madd`].  Sequential wrapping adds are bit-identical to the
+/// madd lane-sum because i32 addition is associative and both arms wrap.
+fn dot_i16_scalar(a: &[i16], b: &[i16]) -> i32 {
+    let mut acc = 0i32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc = acc.wrapping_add((x as i32).wrapping_mul(y as i32));
+    }
+    acc
+}
+
+/// Scalar word walk — the always-available arm of [`unpack_codes_i32`] and
+/// the oracle the in-register decode is differentially tested against.
+/// Identical loop structure to `PackedMatrix::unpack_row_i32`.
+fn unpack_codes_i32_scalar(words: &[u32], cols: usize, bits: u32, qmin: i32, out: &mut [i32]) {
+    let cpw = (32 / bits) as usize;
+    let mask = (1u32 << bits) - 1;
+    let mut t = 0usize;
+    for &w in words {
+        if t >= cols {
+            break;
+        }
+        let mut v = w;
+        let lim = cpw.min(cols - t);
+        for _ in 0..lim {
+            out[t] = qmin + (v & mask) as i32;
+            v >>= bits;
+            t += 1;
+        }
+    }
+}
+
+/// Scalar word walk with an f32 destination (exact int→f32 conversion).
+fn unpack_codes_f32_scalar(words: &[u32], cols: usize, bits: u32, qmin: i32, out: &mut [f32]) {
+    let cpw = (32 / bits) as usize;
+    let mask = (1u32 << bits) - 1;
+    let mut t = 0usize;
+    for &w in words {
+        if t >= cols {
+            break;
+        }
+        let mut v = w;
+        let lim = cpw.min(cols - t);
+        for _ in 0..lim {
+            out[t] = (qmin + (v & mask) as i32) as f32;
+            v >>= bits;
+            t += 1;
+        }
+    }
+}
+
+/// Scalar word walk with an i16 destination (codes must fit i16 — see
+/// [`unpack_codes_i16`]).
+fn unpack_codes_i16_scalar(words: &[u32], cols: usize, bits: u32, qmin: i32, out: &mut [i16]) {
+    let cpw = (32 / bits) as usize;
+    let mask = (1u32 << bits) - 1;
+    let mut t = 0usize;
+    for &w in words {
+        if t >= cols {
+            break;
+        }
+        let mut v = w;
+        let lim = cpw.min(cols - t);
+        for _ in 0..lim {
+            out[t] = (qmin + (v & mask) as i32) as i16;
+            v >>= bits;
+            t += 1;
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // x86-64 shims.  Each `*_avx2` function is the single safety boundary for
 // its kernel: the unsafe AVX2 body may only be reached through a shim, and a
@@ -239,6 +413,34 @@ mod shims {
         checked();
         // SAFETY: as above.
         unsafe { avx2::dot_i32(a, b) }
+    }
+
+    #[inline]
+    pub(super) fn dot_i16_madd_avx2(a: &[i16], b: &[i16]) -> i32 {
+        checked();
+        // SAFETY: as above.
+        unsafe { avx2::dot_i16_madd(a, b) }
+    }
+
+    #[inline]
+    pub(super) fn unpack_i32_avx2(words: &[u32], cols: usize, bits: u32, qmin: i32, out: &mut [i32]) {
+        checked();
+        // SAFETY: as above.
+        unsafe { avx2::unpack_i32(words, cols, bits, qmin, out) }
+    }
+
+    #[inline]
+    pub(super) fn unpack_f32_avx2(words: &[u32], cols: usize, bits: u32, qmin: i32, out: &mut [f32]) {
+        checked();
+        // SAFETY: as above.
+        unsafe { avx2::unpack_f32(words, cols, bits, qmin, out) }
+    }
+
+    #[inline]
+    pub(super) fn unpack_i16_avx2(words: &[u32], cols: usize, bits: u32, qmin: i32, out: &mut [i16]) {
+        checked();
+        // SAFETY: as above.
+        unsafe { avx2::unpack_i16(words, cols, bits, qmin, out) }
     }
 
     #[inline]
@@ -304,8 +506,9 @@ mod shims {
 
 #[cfg(target_arch = "x86_64")]
 use shims::{
-    dot_avx2, dot_i32_avx2, gemm_nn_panel_avx2, gemm_nt_panel_avx2, gemm_tn_panel_avx2,
-    gemv_nn_avx2, gemv_nt_avx2,
+    dot_avx2, dot_i16_madd_avx2, dot_i32_avx2, gemm_nn_panel_avx2, gemm_nt_panel_avx2,
+    gemm_tn_panel_avx2, gemv_nn_avx2, gemv_nt_avx2, unpack_f32_avx2, unpack_i16_avx2,
+    unpack_i32_avx2,
 };
 
 // Off x86-64, Isa::detect() never returns Avx2; the shims only exist so the
@@ -322,6 +525,26 @@ mod shims_portable {
     #[inline]
     pub(super) fn dot_i32_avx2(a: &[i32], b: &[i32]) -> i32 {
         super::dot_i32_scalar(a, b)
+    }
+
+    #[inline]
+    pub(super) fn dot_i16_madd_avx2(a: &[i16], b: &[i16]) -> i32 {
+        super::dot_i16_scalar(a, b)
+    }
+
+    #[inline]
+    pub(super) fn unpack_i32_avx2(words: &[u32], cols: usize, bits: u32, qmin: i32, out: &mut [i32]) {
+        super::unpack_codes_i32_scalar(words, cols, bits, qmin, out)
+    }
+
+    #[inline]
+    pub(super) fn unpack_f32_avx2(words: &[u32], cols: usize, bits: u32, qmin: i32, out: &mut [f32]) {
+        super::unpack_codes_f32_scalar(words, cols, bits, qmin, out)
+    }
+
+    #[inline]
+    pub(super) fn unpack_i16_avx2(words: &[u32], cols: usize, bits: u32, qmin: i32, out: &mut [i16]) {
+        super::unpack_codes_i16_scalar(words, cols, bits, qmin, out)
     }
 
     #[inline]
@@ -377,8 +600,9 @@ mod shims_portable {
 
 #[cfg(not(target_arch = "x86_64"))]
 use shims_portable::{
-    dot_avx2, dot_i32_avx2, gemm_nn_panel_avx2, gemm_nt_panel_avx2, gemm_tn_panel_avx2,
-    gemv_nn_avx2, gemv_nt_avx2,
+    dot_avx2, dot_i16_madd_avx2, dot_i32_avx2, gemm_nn_panel_avx2, gemm_nt_panel_avx2,
+    gemm_tn_panel_avx2, gemv_nn_avx2, gemv_nt_avx2, unpack_f32_avx2, unpack_i16_avx2,
+    unpack_i32_avx2,
 };
 
 // ---------------------------------------------------------------------------
@@ -476,6 +700,277 @@ mod avx2 {
             t += 1;
         }
         s
+    }
+
+    /// `Σ a·b` over i16 operands via `_mm256_madd_epi16`: 16 products per
+    /// instruction, adjacent pairs summed into 8 i32 lanes (a pair-sum is
+    /// `≤ 2·32767² < i32::MAX`, so the instruction cannot overflow), lane
+    /// sum, wrapping scalar tail.  Bit-identical to the scalar i16 dot by
+    /// i32 associativity.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_i16_madd(a: &[i16], b: &[i16]) -> i32 {
+        let k = a.len().min(b.len());
+        let k16 = k - k % 16;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc = _mm256_setzero_si256();
+        let mut t = 0usize;
+        while t < k16 {
+            let av = _mm256_loadu_si256(pa.add(t).cast());
+            let bv = _mm256_loadu_si256(pb.add(t).cast());
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(av, bv));
+            t += 16;
+        }
+        let mut s = hsum_epi32(acc);
+        while t < k {
+            s = s.wrapping_add((*pa.add(t) as i32).wrapping_mul(*pb.add(t) as i32));
+            t += 1;
+        }
+        s
+    }
+
+    /// Decode (up to) 8 codes of one packed word into 8 i32 lanes: the
+    /// word is broadcast, each lane right-shifts by its own code offset
+    /// (`srlv`), masks to the code width, and adds `qmin`.  This is the
+    /// in-register replacement for 8 iterations of the scalar word walk.
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn codes8(w: u32, shifts: __m256i, mask: __m256i, qv: __m256i) -> __m256i {
+        _mm256_add_epi32(
+            _mm256_and_si256(_mm256_srlv_epi32(_mm256_set1_epi32(w as i32), shifts), mask),
+            qv,
+        )
+    }
+
+    /// Narrow two 8×i32 vectors to one 16×i16 vector *in code order*:
+    /// `packs_epi32` interleaves 64-bit blocks as `[v0.lo, v1.lo, v0.hi,
+    /// v1.hi]`, so a `permute4x64` with block order `[0, 2, 1, 3]`
+    /// restores `[v0, v1]`.  Saturating — callers guarantee every code
+    /// fits i16, so saturation never fires.
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn narrow16(v0: __m256i, v1: __m256i) -> __m256i {
+        _mm256_permute4x64_epi64::<0b1101_1000>(_mm256_packs_epi32(v0, v1))
+    }
+
+    /// In-register decode of packed codes to i32 (the AVX2 arm of
+    /// `unpack_codes_i32`).  Per-word lane layouts are in the module docs;
+    /// after every vector loop `t` sits on a word boundary, so the shared
+    /// scalar word-walk tail handles the remainder (including partial
+    /// trailing words) without any out-of-bounds vector store.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2; `out.len() == cols` and `words` must hold
+    /// at least `ceil(cols / (32/bits))` words.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn unpack_i32(words: &[u32], cols: usize, bits: u32, qmin: i32, out: &mut [i32]) {
+        debug_assert_eq!(out.len(), cols);
+        let qv = _mm256_set1_epi32(qmin);
+        let po = out.as_mut_ptr();
+        let mut t = 0usize;
+        match bits {
+            4 => {
+                let shifts = _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+                let mask = _mm256_set1_epi32(0xF);
+                while t + 8 <= cols {
+                    _mm256_storeu_si256(po.add(t).cast(), codes8(words[t / 8], shifts, mask, qv));
+                    t += 8;
+                }
+            }
+            2 => {
+                let lo = _mm256_setr_epi32(0, 2, 4, 6, 8, 10, 12, 14);
+                let hi = _mm256_setr_epi32(16, 18, 20, 22, 24, 26, 28, 30);
+                let mask = _mm256_set1_epi32(0x3);
+                while t + 16 <= cols {
+                    let w = words[t / 16];
+                    _mm256_storeu_si256(po.add(t).cast(), codes8(w, lo, mask, qv));
+                    _mm256_storeu_si256(po.add(t + 8).cast(), codes8(w, hi, mask, qv));
+                    t += 16;
+                }
+            }
+            3 => {
+                let shifts = _mm256_setr_epi32(0, 3, 6, 9, 12, 15, 18, 21);
+                let mask = _mm256_set1_epi32(0x7);
+                while t + 10 <= cols {
+                    let w = words[t / 10];
+                    _mm256_storeu_si256(po.add(t).cast(), codes8(w, shifts, mask, qv));
+                    *po.add(t + 8) = qmin + ((w >> 24) & 0x7) as i32;
+                    *po.add(t + 9) = qmin + ((w >> 27) & 0x7) as i32;
+                    t += 10;
+                }
+            }
+            8 => {
+                // LSB-first packing into little-endian words means the byte
+                // stream IS the code stream: widen 8 bytes per iteration.
+                let pw = words.as_ptr().cast::<u8>();
+                while t + 8 <= cols {
+                    let bytes = _mm_loadl_epi64(pw.add(t).cast());
+                    let v = _mm256_add_epi32(_mm256_cvtepu8_epi32(bytes), qv);
+                    _mm256_storeu_si256(po.add(t).cast(), v);
+                    t += 8;
+                }
+            }
+            _ => {}
+        }
+        let cpw = (32 / bits) as usize;
+        let mask = (1u32 << bits) - 1;
+        while t < cols {
+            let mut v = words[t / cpw];
+            let lim = cpw.min(cols - t);
+            for _ in 0..lim {
+                *po.add(t) = qmin + (v & mask) as i32;
+                v >>= bits;
+                t += 1;
+            }
+        }
+    }
+
+    /// [`unpack_i32`] with an f32 destination: identical lane decode, one
+    /// exact `cvtepi32_ps` before the store (every code has `|v| < 2²⁴`).
+    ///
+    /// # Safety
+    /// Same contract as [`unpack_i32`].
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn unpack_f32(words: &[u32], cols: usize, bits: u32, qmin: i32, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), cols);
+        let qv = _mm256_set1_epi32(qmin);
+        let po = out.as_mut_ptr();
+        let mut t = 0usize;
+        match bits {
+            4 => {
+                let shifts = _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+                let mask = _mm256_set1_epi32(0xF);
+                while t + 8 <= cols {
+                    let v = codes8(words[t / 8], shifts, mask, qv);
+                    _mm256_storeu_ps(po.add(t), _mm256_cvtepi32_ps(v));
+                    t += 8;
+                }
+            }
+            2 => {
+                let lo = _mm256_setr_epi32(0, 2, 4, 6, 8, 10, 12, 14);
+                let hi = _mm256_setr_epi32(16, 18, 20, 22, 24, 26, 28, 30);
+                let mask = _mm256_set1_epi32(0x3);
+                while t + 16 <= cols {
+                    let w = words[t / 16];
+                    _mm256_storeu_ps(po.add(t), _mm256_cvtepi32_ps(codes8(w, lo, mask, qv)));
+                    _mm256_storeu_ps(po.add(t + 8), _mm256_cvtepi32_ps(codes8(w, hi, mask, qv)));
+                    t += 16;
+                }
+            }
+            3 => {
+                let shifts = _mm256_setr_epi32(0, 3, 6, 9, 12, 15, 18, 21);
+                let mask = _mm256_set1_epi32(0x7);
+                while t + 10 <= cols {
+                    let w = words[t / 10];
+                    let v = codes8(w, shifts, mask, qv);
+                    _mm256_storeu_ps(po.add(t), _mm256_cvtepi32_ps(v));
+                    *po.add(t + 8) = (qmin + ((w >> 24) & 0x7) as i32) as f32;
+                    *po.add(t + 9) = (qmin + ((w >> 27) & 0x7) as i32) as f32;
+                    t += 10;
+                }
+            }
+            8 => {
+                let pw = words.as_ptr().cast::<u8>();
+                while t + 8 <= cols {
+                    let bytes = _mm_loadl_epi64(pw.add(t).cast());
+                    let v = _mm256_add_epi32(_mm256_cvtepu8_epi32(bytes), qv);
+                    _mm256_storeu_ps(po.add(t), _mm256_cvtepi32_ps(v));
+                    t += 8;
+                }
+            }
+            _ => {}
+        }
+        let cpw = (32 / bits) as usize;
+        let mask = (1u32 << bits) - 1;
+        while t < cols {
+            let mut v = words[t / cpw];
+            let lim = cpw.min(cols - t);
+            for _ in 0..lim {
+                *po.add(t) = (qmin + (v & mask) as i32) as f32;
+                v >>= bits;
+                t += 1;
+            }
+        }
+    }
+
+    /// In-register decode straight to i16 lanes — the madd kernel's feed,
+    /// 16 codes per 256-bit store (two decoded i32 vectors narrowed via
+    /// [`narrow16`]; one vector + a 128-bit store for 3-bit words).
+    ///
+    /// # Safety
+    /// Same contract as [`unpack_i32`]; additionally every decoded code
+    /// must fit i16 (callers gate on `max|code| ≤ i16::MAX`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn unpack_i16(words: &[u32], cols: usize, bits: u32, qmin: i32, out: &mut [i16]) {
+        debug_assert_eq!(out.len(), cols);
+        let qv = _mm256_set1_epi32(qmin);
+        let po = out.as_mut_ptr();
+        let mut t = 0usize;
+        match bits {
+            4 => {
+                let shifts = _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+                let mask = _mm256_set1_epi32(0xF);
+                while t + 16 <= cols {
+                    let v0 = codes8(words[t / 8], shifts, mask, qv);
+                    let v1 = codes8(words[t / 8 + 1], shifts, mask, qv);
+                    _mm256_storeu_si256(po.add(t).cast(), narrow16(v0, v1));
+                    t += 16;
+                }
+            }
+            2 => {
+                let lo = _mm256_setr_epi32(0, 2, 4, 6, 8, 10, 12, 14);
+                let hi = _mm256_setr_epi32(16, 18, 20, 22, 24, 26, 28, 30);
+                let mask = _mm256_set1_epi32(0x3);
+                while t + 16 <= cols {
+                    let w = words[t / 16];
+                    let v = narrow16(codes8(w, lo, mask, qv), codes8(w, hi, mask, qv));
+                    _mm256_storeu_si256(po.add(t).cast(), v);
+                    t += 16;
+                }
+            }
+            3 => {
+                let shifts = _mm256_setr_epi32(0, 3, 6, 9, 12, 15, 18, 21);
+                let mask = _mm256_set1_epi32(0x7);
+                while t + 10 <= cols {
+                    let w = words[t / 10];
+                    let v = narrow16(codes8(w, shifts, mask, qv), _mm256_setzero_si256());
+                    _mm_storeu_si128(po.add(t).cast(), _mm256_castsi256_si128(v));
+                    *po.add(t + 8) = (qmin + ((w >> 24) & 0x7) as i32) as i16;
+                    *po.add(t + 9) = (qmin + ((w >> 27) & 0x7) as i32) as i16;
+                    t += 10;
+                }
+            }
+            8 => {
+                let qv16 = _mm256_set1_epi16(qmin as i16);
+                let pw = words.as_ptr().cast::<u8>();
+                while t + 16 <= cols {
+                    let bytes = _mm_loadu_si128(pw.add(t).cast());
+                    let v = _mm256_add_epi16(_mm256_cvtepu8_epi16(bytes), qv16);
+                    _mm256_storeu_si256(po.add(t).cast(), v);
+                    t += 16;
+                }
+            }
+            _ => {}
+        }
+        let cpw = (32 / bits) as usize;
+        let mask = (1u32 << bits) - 1;
+        while t < cols {
+            let mut v = words[t / cpw];
+            let lim = cpw.min(cols - t);
+            for _ in 0..lim {
+                *po.add(t) = (qmin + (v & mask) as i32) as i16;
+                v >>= bits;
+                t += 1;
+            }
+        }
     }
 
     /// Four NT dots sharing one activation row: per-element chains are
@@ -854,6 +1349,52 @@ mod tests {
             let want: i64 = a.iter().zip(&b).map(|(&x, &y)| x as i64 * y as i64).sum();
             assert_eq!(dot_i32(Isa::Scalar, &a, &b) as i64, want, "scalar k={k}");
             assert_eq!(dot_i32(Isa::detect(), &a, &b) as i64, want, "detected k={k}");
+        }
+    }
+
+    #[test]
+    fn i16_madd_dot_bit_identical_across_arms() {
+        let mut rng = Pcg32::seeded(17);
+        for k in [0usize, 1, 15, 16, 17, 31, 32, 33, 100] {
+            let a: Vec<i16> = (0..k).map(|_| rng.below(256) as i16 - 128).collect();
+            let b: Vec<i16> = (0..k).map(|_| rng.below(256) as i16 - 128).collect();
+            let want: i64 = a.iter().zip(&b).map(|(&x, &y)| x as i64 * y as i64).sum();
+            assert_eq!(dot_i16_madd(Isa::Scalar, &a, &b) as i64, want, "scalar k={k}");
+            assert_eq!(dot_i16_madd(Isa::detect(), &a, &b) as i64, want, "detected k={k}");
+        }
+    }
+
+    #[test]
+    fn in_register_unpack_matches_scalar_walk_all_widths() {
+        // One packed row per (bits, cols): random codes, decode on both
+        // arms through all three destinations — the values must be
+        // bit-identical (decode is pure integer bit manipulation).
+        let mut rng = Pcg32::seeded(29);
+        for bits in [2u32, 3, 4, 8] {
+            let cpw = (32 / bits) as usize;
+            let qmin = -(1i32 << (bits - 1));
+            for cols in [0usize, 1, cpw - 1, cpw, cpw + 1, 3 * cpw + 3, 61, 64] {
+                let words: Vec<u32> = (0..cols.div_ceil(cpw)).map(|_| rng.next_u32()).collect();
+                let mut si = vec![0i32; cols];
+                let mut vi = vec![0i32; cols];
+                unpack_codes_i32(Isa::Scalar, &words, cols, bits, qmin, &mut si);
+                unpack_codes_i32(Isa::detect(), &words, cols, bits, qmin, &mut vi);
+                assert_eq!(si, vi, "i32 bits={bits} cols={cols}");
+                let mut sf = vec![0f32; cols];
+                let mut vf = vec![0f32; cols];
+                unpack_codes_f32(Isa::Scalar, &words, cols, bits, qmin, &mut sf);
+                unpack_codes_f32(Isa::detect(), &words, cols, bits, qmin, &mut vf);
+                assert_eq!(sf, vf, "f32 bits={bits} cols={cols}");
+                let mut sh = vec![0i16; cols];
+                let mut vh = vec![0i16; cols];
+                unpack_codes_i16(Isa::Scalar, &words, cols, bits, qmin, &mut sh);
+                unpack_codes_i16(Isa::detect(), &words, cols, bits, qmin, &mut vh);
+                assert_eq!(sh, vh, "i16 bits={bits} cols={cols}");
+                for t in 0..cols {
+                    assert_eq!(si[t], sf[t] as i32, "f32 exactness bits={bits} t={t}");
+                    assert_eq!(si[t], sh[t] as i32, "i16 range bits={bits} t={t}");
+                }
+            }
         }
     }
 }

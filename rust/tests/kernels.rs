@@ -12,16 +12,19 @@
 //!   by a few last-place bits.  The budget is `≤ 16` ULP with an absolute
 //!   escape hatch `4·k·ε·(1 + Σ|aₜ·bₜ|)` for catastrophic cancellation.
 //!
-//! `verify.sh` runs this file **twice** as its kernel smoke gate: once with
-//! `FLEXROUND_FORCE_SCALAR=1` (scalar tiles only) and once auto-detected
-//! (AVX2 where the CPU has it).  The per-arm tests below additionally pin
-//! *both* arms inside a single process via `Dispatch::with_isa`, so even
-//! the forced-scalar run exercises the SIMD arm's identities when the
-//! hardware supports it — `Isa::detect()` ignores the env override.
+//! `verify.sh` runs this file **three times** as its kernel smoke gate:
+//! once with `FLEXROUND_FORCE_SCALAR=1` (scalar tiles only), once with
+//! `FLEXROUND_FORCE_NO_MADD=1` (AVX2 f32/i32 kernels, i16-madd pinned
+//! off), and once fully auto-detected (madd enabled where eligible).  The
+//! per-arm tests below additionally pin *both* arms inside a single
+//! process via `Dispatch::with_isa`, and the madd tests force the route
+//! through `IntRoute` regardless of the env knobs — so even the
+//! forced-scalar run exercises the SIMD arm's identities when the
+//! hardware supports it (`Isa::detect()` ignores the env override).
 
 use flexround::infer::kernels::{
-    gemm_fused, gemm_fused_int, gemm_fused_int_with, gemm_fused_rowwise, gemm_fused_rowwise_isa,
-    gemm_fused_with, gemm_ref, int_gemm_eligible, int_safe_k,
+    gemm_fused, gemm_fused_int, gemm_fused_int_route, gemm_fused_int_with, gemm_fused_rowwise,
+    gemm_fused_rowwise_isa, gemm_fused_with, gemm_ref, int_gemm_eligible, int_safe_k, IntRoute,
 };
 use flexround::infer::PackedMatrix;
 use flexround::linalg::{self, simd, Dispatch, Isa, PAR_FLOPS_MIN};
@@ -592,4 +595,232 @@ fn i32_accumulator_overflow_guard_pins_safe_k() {
     let huge = Tensor::from_f32(vec![(1i64 << 31) as f32; 8], &[1, 8]).unwrap();
     assert!(gemm_fused_int(&huge, &m, 1).is_err());
     assert!(!int_gemm_eligible(&huge, &m));
+}
+
+#[test]
+fn in_register_unpack_is_bit_identical_to_the_scalar_walk() {
+    // The in-register decode's acceptance pin: every bit width, widths that
+    // straddle the packed-word boundary in both directions (cpw = ⌊32/bits⌋
+    // is 16/10/8/4 — the 3-bit width is the nasty one: 10 codes + 2 wasted
+    // bits per word), non-lane-multiple widths, and grid-edge codes pinned
+    // at both ends by random_packed_zp.  All three destinations must equal
+    // the scalar word walk bitwise on both arms.
+    let mut rng = Pcg32::seeded(101);
+    for bits in [2u32, 3, 4, 8] {
+        let cpw = (32 / bits) as usize;
+        for cols in [1, cpw - 1, cpw, cpw + 1, 2 * cpw, 2 * cpw + 3, 3 * cpw + 1, 33, 64] {
+            let m = random_packed_zp(&mut rng, 3, cols, bits, false, false);
+            let mut walk_i = vec![0i32; cols];
+            let mut walk_f = vec![0.0f32; cols];
+            let mut got_i = vec![0i32; cols];
+            let mut got_f = vec![0.0f32; cols];
+            let mut got_h = vec![0i16; cols];
+            for r in 0..3 {
+                m.unpack_row_i32(r, &mut walk_i);
+                m.unpack_row(r, &mut walk_f);
+                for isa in [Isa::Scalar, Isa::detect()] {
+                    simd::unpack_codes_i32(isa, m.row_words(r), cols, bits, m.qmin(), &mut got_i);
+                    assert_eq!(
+                        got_i,
+                        walk_i,
+                        "i32 decode {bits}-bit cols={cols} row={r} ({})",
+                        isa.label()
+                    );
+                    simd::unpack_codes_f32(isa, m.row_words(r), cols, bits, m.qmin(), &mut got_f);
+                    assert_eq!(
+                        got_f,
+                        walk_f,
+                        "f32 decode {bits}-bit cols={cols} row={r} ({})",
+                        isa.label()
+                    );
+                    simd::unpack_codes_i16(isa, m.row_words(r), cols, bits, m.qmin(), &mut got_h);
+                    let widened: Vec<i32> = got_h.iter().map(|&c| c as i32).collect();
+                    assert_eq!(
+                        widened,
+                        walk_i,
+                        "i16 decode {bits}-bit cols={cols} row={r} ({})",
+                        isa.label()
+                    );
+                }
+            }
+        }
+    }
+    // k = 0: no words, no stores, no panic — on either arm
+    let mut empty_i: Vec<i32> = Vec::new();
+    let mut empty_f: Vec<f32> = Vec::new();
+    let mut empty_h: Vec<i16> = Vec::new();
+    for isa in [Isa::Scalar, Isa::detect()] {
+        simd::unpack_codes_i32(isa, &[], 0, 4, -8, &mut empty_i);
+        simd::unpack_codes_f32(isa, &[], 0, 3, -4, &mut empty_f);
+        simd::unpack_codes_i16(isa, &[], 0, 2, -2, &mut empty_h);
+    }
+}
+
+#[test]
+fn i16_madd_route_is_bit_exact_against_the_rowwise_oracle() {
+    // The madd acceptance pin: with in-window integral activations the
+    // forced madd route, the forced i32 route, the auto route, and the f32
+    // rowwise oracle must all agree bit-for-bit — per arm, serial and
+    // parallel.  (IntRoute::Madd on the scalar arm runs the bit-identical
+    // scalar emulation, so this pins the route even on non-AVX2 hardware
+    // and under FLEXROUND_FORCE_NO_MADD.)
+    Prop::new("madd route ≡ dot32 route ≡ rowwise, bitwise").cases(48).check(|rng| {
+        let bits = [2u32, 3, 4, 8][rng.below(4) as usize];
+        let symmetric = rng.below(2) == 0;
+        let zero_zp = rng.below(2) == 0;
+        let rows = 1 + rng.below(20) as usize;
+        let cols = 1 + rng.below(48) as usize;
+        let n = 1 + rng.below(4) as usize;
+        let m = random_packed_zp(rng, rows, cols, bits, symmetric, zero_zp);
+        let amax = 20u32;
+        let x = Tensor::from_f32(
+            (0..n * cols).map(|_| rng.below(2 * amax + 1) as f32 - amax as f32).collect(),
+            &[n, cols],
+        )
+        .map_err(|e| e.to_string())?;
+        for isa in [Isa::Scalar, Isa::detect()] {
+            let rowwise = gemm_fused_rowwise_isa(&x, &m, isa).map_err(|e| e.to_string())?;
+            let want = rowwise.as_f32().map_err(|e| e.to_string())?;
+            for workers in [1usize, 4] {
+                let d = Dispatch::new(workers).with_isa(isa);
+                for route in [IntRoute::Madd, IntRoute::Dot32, IntRoute::Auto] {
+                    let got = gemm_fused_int_route(&x, &m, &d, route)
+                        .map_err(|e| e.to_string())?;
+                    if got.as_f32().map_err(|e| e.to_string())? != want {
+                        return Err(format!(
+                            "{route:?} ≠ rowwise ({bits}-bit {rows}×{cols} batch {n}, \
+                             sym={symmetric}, zp0={zero_zp}, workers={workers}, {})",
+                            isa.label()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+    // batch-1 madd gemv decode fast path: a single activation row through
+    // the forced madd route must reproduce its batched row bitwise
+    let mut rng = Pcg32::seeded(57);
+    for bits in [2u32, 3, 4, 8] {
+        let m = random_packed_zp(&mut rng, 33, 29, bits, false, false);
+        let batch = Tensor::from_f32(
+            (0..4 * 29).map(|_| rng.below(41) as f32 - 20.0).collect(),
+            &[4, 29],
+        )
+        .unwrap();
+        for isa in [Isa::Scalar, Isa::detect()] {
+            let d = Dispatch::serial().with_isa(isa);
+            let full = gemm_fused_int_route(&batch, &m, &d, IntRoute::Madd).unwrap();
+            for i in 0..4 {
+                let row = batch.slice_rows(i, i + 1).unwrap();
+                let one = gemm_fused_int_route(&row, &m, &d, IntRoute::Madd).unwrap();
+                assert_eq!(
+                    one.as_f32().unwrap(),
+                    &full.as_f32().unwrap()[i * 33..(i + 1) * 33],
+                    "{bits}-bit madd batch-1 row {i} ({})",
+                    isa.label()
+                );
+            }
+        }
+    }
+    // forcing madd on operands that cannot narrow to i16 is an error, not
+    // a silent truncation — while Auto quietly falls back to the i32 path
+    let m = random_packed_zp(&mut rng, 4, 8, 4, true, true);
+    let x = Tensor::from_f32(vec![40_000.0; 8], &[1, 8]).unwrap();
+    let d = Dispatch::serial();
+    assert!(gemm_fused_int_route(&x, &m, &d, IntRoute::Madd).is_err());
+    assert!(gemm_fused_int_route(&x, &m, &d, IntRoute::Auto).is_ok());
+    assert!(gemm_fused_int_route(&x, &m, &d, IntRoute::Dot32).is_ok());
+}
+
+#[test]
+fn i16_madd_pair_sum_overflow_bound_holds() {
+    // The documented madd worst cases: both operands at i16::MAX leave
+    // exactly one pair-sum of headroom (safe_k = 2, not 1), and the W8A16
+    // extreme still allows 257 terms per i32 chunk.
+    assert_eq!(int_safe_k(32_767, 32_767), 2);
+    assert_eq!(int_safe_k(255, 32_767), 257);
+    // int_safe_k-style bound prop: for any i16-bounded operand magnitudes
+    // the _mm256_madd_epi16 pair-sum (2·cm·am) fits i32, safe_k keeps at
+    // least one full pair per chunk, and no lane partial within a chunk
+    // can leave i32 range
+    Prop::new("madd pair-sum and lane partials fit i32").cases(64).check(|rng| {
+        let cm = 1 + rng.below(32_767) as i64;
+        let am = 1 + rng.below(32_767) as i64;
+        if 2 * cm * am > i32::MAX as i64 {
+            return Err(format!("pair-sum bound violated: 2·{cm}·{am} > i32::MAX"));
+        }
+        let sk = int_safe_k(cm, am) as i64;
+        if sk < 2 {
+            return Err(format!("safe_k {sk} < 2 for i16-bounded magnitudes {cm}·{am}"));
+        }
+        if sk * cm * am > i32::MAX as i64 {
+            return Err(format!("lane partial can overflow: {sk}·{cm}·{am} > i32::MAX"));
+        }
+        Ok(())
+    });
+    // raw kernel at the absolute extremes: a single madd pair at maximum
+    // magnitude must match the i64 reference on both arms
+    for (a, b) in [
+        (vec![i16::MAX; 2], vec![i16::MAX; 2]),
+        (vec![i16::MIN + 1; 2], vec![i16::MAX; 2]),
+        (vec![i16::MAX, i16::MIN + 1], vec![i16::MAX; 2]),
+    ] {
+        let want: i64 = a.iter().zip(&b).map(|(&x, &y)| x as i64 * y as i64).sum();
+        for isa in [Isa::Scalar, Isa::detect()] {
+            assert_eq!(
+                simd::dot_i16_madd(isa, &a, &b) as i64,
+                want,
+                "extreme madd pair ({})",
+                isa.label()
+            );
+        }
+    }
+    // end-to-end through the forced madd route: symmetric W8 grid-edge
+    // codes against ±32767 activations over K = 600 ≫ safe_k(127, 32767)
+    // = 516, so the chunked i64-widening path engages — monotone same-sign
+    // row 0 is the classic i32-wraparound shape; the result must equal an
+    // independent i64 reference exactly, on both arms, madd and dot32
+    let k = 600usize;
+    let rows = 4usize;
+    let n = 2usize;
+    let (qmin, qmax) = qrange(8, true);
+    let (qmin, qmax) = (qmin as i32, qmax as i32);
+    assert!(int_safe_k(qmax.unsigned_abs() as i64, 32_767) < k);
+    let codes: Vec<i32> = (0..rows * k)
+        .map(|i| if i / k == 0 || i % 3 == 0 { qmax } else { qmin })
+        .collect();
+    let scale: Vec<f32> = (0..rows).map(|r| 0.25 + 0.125 * r as f32).collect();
+    let zp: Vec<f32> = (0..rows).map(|r| if r % 2 == 0 { 0.0 } else { 1.5 }).collect();
+    let m = PackedMatrix::pack(&codes, rows, k, 8, qmin, scale.clone(), zp.clone()).unwrap();
+    let act = 32_767.0f32;
+    let xv: Vec<f32> = (0..n * k)
+        .map(|i| if i / k == 0 || i % 2 == 0 { act } else { -act })
+        .collect();
+    let x = Tensor::from_f32(xv.clone(), &[n, k]).unwrap();
+    let mut want = vec![0.0f32; n * rows];
+    for i in 0..n {
+        for j in 0..rows {
+            let mut acc = 0i64;
+            let mut sumx = 0i64;
+            for t in 0..k {
+                let xt = xv[i * k + t] as i64;
+                acc += codes[j * k + t] as i64 * xt;
+                sumx += xt;
+            }
+            want[i * rows + j] = scale[j] * (acc as f32 - zp[j] * (sumx as f32));
+        }
+    }
+    for isa in [Isa::Scalar, Isa::detect()] {
+        let d = Dispatch::serial().with_isa(isa);
+        for route in [IntRoute::Madd, IntRoute::Dot32] {
+            let got = gemm_fused_int_route(&x, &m, &d, route).unwrap();
+            assert_eq!(
+                got.as_f32().unwrap(),
+                want.as_slice(),
+                "±32767 widening path, {route:?} ({})",
+                isa.label()
+            );
+        }
+    }
 }

@@ -8,13 +8,16 @@
 #   1a. FlexRound-through-trait golden parity gate: the rounding-scheme
 #       trait refactor must keep FlexRound bit-identical to the Python
 #       reference (tests/native_recon.rs + tests/infer.rs golden fixtures)
-#   1b. kernel-parity smoke, run TWICE: rust/tests/kernels.rs is the
+#   1b. kernel-parity smoke, run THREE times: rust/tests/kernels.rs is the
 #       differential harness (scalar tiles vs the SIMD arm under a ULP
-#       budget, integer-domain fused GEMM bit-exact vs the rowwise oracle).
-#       First pass forces FLEXROUND_FORCE_SCALAR=1 so the scalar tiles are
-#       the *active* arm; second pass auto-detects (AVX2 where available).
-#       A failure names which ISA path diverged (fast, fails early — a
-#       kernel regression should not wait for the full suite)
+#       budget, integer-domain fused GEMM — i32 and i16-madd routes —
+#       bit-exact vs the rowwise oracle).  Pass 1 forces
+#       FLEXROUND_FORCE_SCALAR=1 so the scalar tiles are the *active* arm;
+#       pass 2 runs the AVX2 arm with FLEXROUND_FORCE_NO_MADD=1 (the
+#       f32/i32 SIMD routes, madd auto-selection killed); pass 3
+#       auto-detects everything, i16-madd included.  A failure names which
+#       route diverged (fast, fails early — a kernel regression should not
+#       wait for the full suite)
 #   1c. scheduler differential smoke, same two-arm pattern:
 #       rust/tests/sched.rs pins batched multi-session decode (paged KV
 #       pool, evict/spill/restore) bit-identical to per-session generate —
@@ -26,6 +29,9 @@
 #       numerics, so parity has to hold bit-identically in both modes —
 #       and the obs microbench (benches/obs.rs) fails the gate if a
 #       disabled span costs more than nanoseconds (writes BENCH_obs.json)
+#   1e. kernel bench build gate: benches/kernels.rs (the BENCH_kernels.json
+#       producer, including the unpack and i16-madd sections) must compile
+#       in release before the full suite runs
 #   2. full test suite (artifact tests self-skip when artifacts/ is absent)
 #   3. native-only build (--no-default-features): the backend must build
 #      with zero xla surface
@@ -59,14 +65,19 @@ if ! cargo test -q --release --test infer golden; then
     exit 1
 fi
 
-echo "== kernel-parity smoke, pass 1/2: forced-scalar arm =="
+echo "== kernel-parity smoke, pass 1/3: forced-scalar arm =="
 if ! FLEXROUND_FORCE_SCALAR=1 cargo test -q --release --test kernels; then
-    echo "kernel parity FAILED on the forced-SCALAR path (src/linalg/micro.rs tiles)"
+    echo "kernel parity FAILED on the forced-SCALAR route (src/linalg/micro.rs tiles + scalar word-walk decode)"
     exit 1
 fi
-echo "== kernel-parity smoke, pass 2/2: auto-detected arm =="
+echo "== kernel-parity smoke, pass 2/3: AVX2 arm, i16-madd auto-route disabled =="
+if ! FLEXROUND_FORCE_NO_MADD=1 cargo test -q --release --test kernels; then
+    echo "kernel parity FAILED on the AVX2-f32/i32 route (src/linalg/simd.rs, FLEXROUND_FORCE_NO_MADD=1 — madd auto-selection off)"
+    exit 1
+fi
+echo "== kernel-parity smoke, pass 3/3: auto arm, i16-madd enabled =="
 if ! cargo test -q --release --test kernels; then
-    echo "kernel parity FAILED on the auto/SIMD path (src/linalg/simd.rs AVX2 arm)"
+    echo "kernel parity FAILED on the auto/i16-madd route (src/linalg/simd.rs dot_i16_madd + in-register unpack)"
     exit 1
 fi
 
@@ -93,6 +104,12 @@ fi
 echo "== observability disabled-overhead microbench (benches/obs.rs) =="
 if ! cargo bench --bench obs; then
     echo "obs overhead gate FAILED: a disabled span must cost nanoseconds"
+    exit 1
+fi
+
+echo "== kernel bench builds (benches/kernels.rs — BENCH_kernels.json producer) =="
+if ! cargo build --release --bench kernels; then
+    echo "bench build FAILED: benches/kernels.rs must compile (it produces BENCH_kernels.json)"
     exit 1
 fi
 
